@@ -1,0 +1,124 @@
+//! Appendix D/E ablation — the PV-pipeline ordering study: monotonic order
+//! enforcement (SnapMLA) vs the two rejected dual-warp-group strategies
+//! (Problem 1: requantize P0; Problem 2: accumulator rollback), on benign
+//! and adversarial scale streams.
+//!
+//! Also verifies the App. D exactness claim: the online scale-fusion
+//! pipeline equals the reference attention up to FP8 quantization error.
+//!
+//!     cargo bench --bench ablation_pipeline [-- --quick]
+
+use snapmla::bench::write_report;
+use snapmla::mla::pipeline::{snapmla_decode, PvOrder, BLOCK_N};
+use snapmla::mla::ref_attn;
+use snapmla::mla::{Cache, Query, Shape};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::rng::Rng;
+use snapmla::util::stats::{rel_l2, Summary};
+use snapmla::util::table::{sci, Table};
+
+struct Case {
+    name: &'static str,
+    q: Query,
+    k_c: Vec<f32>,
+    k_r: Vec<f32>,
+    n: usize,
+}
+
+fn benign(seed: u64, n: usize, shape: &Shape) -> Case {
+    let mut rng = Rng::new(seed);
+    Case {
+        name: "benign (homogeneous scales)",
+        q: Query {
+            q_c: rng.normal_vec(shape.heads * shape.d_c, 1.0),
+            q_r: rng.normal_vec(shape.heads * shape.d_r, 0.3),
+        },
+        k_c: rng.normal_vec(n * shape.d_c, 2.0),
+        k_r: rng.normal_vec(n * shape.d_r, 5.0),
+        n,
+    }
+}
+
+fn sink_blocks(seed: u64, n: usize, shape: &Shape) -> Case {
+    // alternating sink/weak blocks: sigma_P domains diverge by ~1e6
+    let mut rng = Rng::new(seed);
+    let mut k_c = rng.normal_vec(n * shape.d_c, 1e-2);
+    for b in (0..(n / BLOCK_N)).step_by(2) {
+        let sink = b * BLOCK_N;
+        for i in 0..shape.d_c {
+            k_c[sink * shape.d_c + i] *= 1e6;
+        }
+    }
+    Case {
+        name: "adversarial (sink-token scale domains)",
+        q: Query {
+            q_c: rng.normal_vec(shape.heads * shape.d_c, 1e-3),
+            q_r: rng.normal_vec(shape.heads * shape.d_r, 0.6),
+        },
+        k_c,
+        k_r: rng.normal_vec(n * shape.d_r, 1.0),
+        n,
+    }
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let n = if args.has("quick") { 512 } else { 2048 };
+    let shape = Shape { heads: 4, d_c: 64, d_r: 16 };
+    let sm = shape.sm_scale();
+    let seeds: Vec<u64> = if args.has("quick") { vec![1, 2] } else { (1..=8).collect() };
+
+    let mut report = Vec::new();
+    for make in [benign as fn(u64, usize, &Shape) -> Case, sink_blocks] {
+        let mut errs: [Summary; 3] = Default::default();
+        let mut name = "";
+        for &seed in &seeds {
+            let case = make(seed, n, &shape);
+            name = case.name;
+            let cache = Cache { k_c: case.k_c.clone(), k_r: case.k_r.clone(), n: case.n };
+            let exact = ref_attn::attention(&shape, &case.q, &cache, case.n, sm);
+            for (i, order) in [
+                PvOrder::Monotonic,
+                PvOrder::InvertedRescaleP,
+                PvOrder::InvertedRollback,
+            ]
+            .iter()
+            .enumerate()
+            {
+                let got =
+                    snapmla_decode(&shape, &case.q, &case.k_c, &case.k_r, case.n, sm, *order);
+                errs[i].push(rel_l2(&got.o, &exact.o));
+            }
+        }
+        let mut t = Table::new(
+            &format!("App. E ordering study — {name} (n={n}, {} seeds)", seeds.len()),
+            &["PV order", "mean rel-l2 vs exact", "max rel-l2"],
+        );
+        for (i, label) in [
+            "Monotonic (SnapMLA, order-enforced)",
+            "Inverted + requantize P0 (Problem 1)",
+            "Inverted + accumulator rollback (Problem 2)",
+        ]
+        .iter()
+        .enumerate()
+        {
+            t.row(vec![label.to_string(), sci(errs[i].mean()), sci(errs[i].max())]);
+            report.push(Json::obj(vec![
+                ("case", Json::str(name)),
+                ("order", Json::str(label)),
+                ("mean_rel", Json::num(errs[i].mean())),
+                ("max_rel", Json::num(errs[i].max())),
+            ]));
+        }
+        t.print();
+    }
+    println!(
+        "expected: all ≈ equal on benign data except Problem 1's requantization\n\
+         noise; on adversarial scale streams Problem 1 collapses (saturation /\n\
+         underflow of requantized FP8 codes) while order enforcement stays at\n\
+         the FP8 quantization floor — the paper's 'lossless pipeline\n\
+         reconstruction' claim."
+    );
+    write_report("ablation_pipeline", Json::arr(report));
+}

@@ -1,0 +1,122 @@
+//! Figure 3 — numerical-value distribution + quantization-error analysis of
+//! the MLA KV cache's content vs RoPE components: (a) value ranges, (b)
+//! per-token FP8 quantization MSE. Run on the paper-matched synthetic
+//! generator AND on the real small model's cache captured from the engine.
+//!
+//!     cargo bench --bench fig3_distribution [-- --quick]
+
+use snapmla::fp8::{bf16_round, quant_per_token};
+use snapmla::kvcache::{CacheMode, PagedKvCache};
+use snapmla::mla::synth;
+use snapmla::runtime::ModelEngine;
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::rng::Rng;
+use snapmla::util::stats::Summary;
+use snapmla::util::table::{sci, Table};
+use std::path::Path;
+
+fn abs_stats(xs: &[f32]) -> (f64, f64, f64) {
+    let abs: Vec<f64> = xs.iter().map(|&x| x.abs() as f64).collect();
+    let s = Summary::from(&abs);
+    (s.max(), s.percentile(99.0), s.median())
+}
+
+fn fp8_mse(xs: &[f32], d: usize) -> f64 {
+    let mut err = 0.0f64;
+    for row in xs.chunks(d) {
+        let q = quant_per_token(row);
+        for (a, b) in row.iter().zip(&q.dequant()) {
+            err += ((a - b) as f64).powi(2);
+        }
+    }
+    err / xs.len() as f64
+}
+
+fn bf16_mse(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| ((x - bf16_round(x)) as f64).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let n = if args.has("quick") { 2048 } else { 8192 };
+    let mut rng = Rng::new(3);
+    let k_c = synth::content(&mut rng, n, 128);
+    let k_r = synth::rope(&mut rng, n, 32);
+    let mut report = Vec::new();
+
+    let mut t = Table::new(
+        "Fig. 3a — |value| ranges (synthetic, matched to LongCat-Flash stats)",
+        &["component", "max", "p99", "median"],
+    );
+    for (name, xs) in [("content (c_KV)", &k_c), ("RoPE (k^R)", &k_r)] {
+        let (mx, p99, med) = abs_stats(xs);
+        t.row(vec![name.into(), sci(mx), sci(p99), sci(med)]);
+        report.push(Json::obj(vec![
+            ("component", Json::str(name)),
+            ("max", Json::num(mx)),
+            ("p99", Json::num(p99)),
+            ("median", Json::num(med)),
+        ]));
+    }
+    t.print();
+    println!("(paper: RoPE reaches ±10³ with outlier tails; content within ±10¹)\n");
+
+    let mse_c = fp8_mse(&k_c, 128);
+    let mse_r = fp8_mse(&k_r, 32);
+    let mut t = Table::new(
+        "Fig. 3b — quantization MSE per component",
+        &["component", "FP8 per-token MSE", "bf16 MSE"],
+    );
+    t.row(vec!["content".into(), sci(mse_c), sci(bf16_mse(&k_c))]);
+    t.row(vec!["RoPE".into(), sci(mse_r), sci(bf16_mse(&k_r))]);
+    t.print();
+    println!(
+        "FP8 RoPE/content MSE ratio: {:.0}x (paper: order-of-magnitude increase);\n\
+         bf16 keeps RoPE error ~2^-8-relative — the RoPE-aware rationale\n",
+        mse_r / mse_c
+    );
+    report.push(Json::obj(vec![
+        ("fp8_mse_content", Json::num(mse_c)),
+        ("fp8_mse_rope", Json::num(mse_r)),
+    ]));
+
+    // real-model capture
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut engine = ModelEngine::load(dir, CacheMode::Fp8).expect("engine");
+        let (layers, d_c, d_r) = (
+            engine.manifest.model.n_layers,
+            engine.manifest.model.d_c,
+            engine.manifest.model.d_r,
+        );
+        let mut cache = PagedKvCache::new(engine.cache_config(64));
+        cache.register(1);
+        let prompt: Vec<i32> =
+            std::iter::once(1).chain((0..119).map(|i| 64 + (i * 13) % 256)).collect();
+        engine.prefill(&mut cache, &[(1, prompt)]).unwrap();
+        for _ in 0..32 {
+            engine.decode(&mut cache, &[(1, 70)]).unwrap();
+        }
+        let tokens = cache.tokens_of(1);
+        let mut t = Table::new(
+            "real small-model cache (dequantized) |value| ranges",
+            &["component", "max", "p99", "median"],
+        );
+        let mut all_c = Vec::new();
+        let mut all_r = Vec::new();
+        for layer in 0..layers {
+            let mut c = vec![0.0f32; tokens * d_c];
+            let mut r = vec![0.0f32; tokens * d_r];
+            cache.fetch_dequant_range(1, layer, 0, tokens, &mut c, &mut r);
+            all_c.extend(c);
+            all_r.extend(r);
+        }
+        for (name, xs) in [("content (all layers)", &all_c), ("RoPE (all layers)", &all_r)] {
+            let (mx, p99, med) = abs_stats(xs);
+            t.row(vec![name.into(), sci(mx), sci(p99), sci(med)]);
+        }
+        t.print();
+    }
+    snapmla::bench::write_report("fig3_distribution", Json::arr(report));
+}

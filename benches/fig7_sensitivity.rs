@@ -1,0 +1,94 @@
+//! Figure 7 / Appendix I — kernel performance across input configurations:
+//! heads H ∈ {16, 32, 64, 128} × MTP ∈ {1, 2} at fixed batch 32.
+//!
+//! Expected shape (paper): TFLOPS rises with head count, saturates at
+//! H ≥ 64 around ~85% of the effective peak; MTP=2 gives a moderate boost
+//! (biggest at low head counts where the GEMM M-dimension is underfed);
+//! SnapMLA beats the baseline everywhere.
+//!
+//!     cargo bench --bench fig7_sensitivity [-- --quick --skip-real]
+
+use snapmla::bench::{bench_from_args, write_report};
+use snapmla::kvcache::CacheMode;
+use snapmla::perfmodel::{kernel::kernel_tflops, GpuSpec, KernelKind, KernelShape};
+use snapmla::runtime::engine::KernelArgs;
+use snapmla::runtime::ModelEngine;
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, Table};
+use std::path::Path;
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick", "skip-real"]);
+    let gpu = GpuSpec::h20();
+    let peak = gpu.snapmla_effective_peak_tflops();
+    let mut report = Vec::new();
+
+    let mut t = Table::new(
+        "Fig. 7 — modeled TFLOPS across configs (B=32, seq 8k)",
+        &["heads", "MTP", "FlashMLA BF16", "SnapMLA FP8", "FP8 % of peak"],
+    );
+    for mtp in [1usize, 2] {
+        for h in [16usize, 32, 64, 128] {
+            let shape = KernelShape::paper(32, h, mtp, 8192);
+            let bf = kernel_tflops(&gpu, &shape, KernelKind::FlashMlaBf16);
+            let fp = kernel_tflops(&gpu, &shape, KernelKind::SnapMlaFp8);
+            t.row(vec![
+                h.to_string(),
+                mtp.to_string(),
+                f1(bf),
+                f1(fp),
+                f1(fp / peak * 100.0),
+            ]);
+            report.push(Json::obj(vec![
+                ("heads", Json::num(h as f64)),
+                ("mtp", Json::num(mtp as f64)),
+                ("bf16_tflops", Json::num(bf)),
+                ("fp8_tflops", Json::num(fp)),
+            ]));
+        }
+    }
+    t.print();
+    println!("(saturation at H >= 64 near 85% of 279.6 TFLOPS, per App. I)\n");
+
+    if !args.has("skip-real") {
+        let dir = Path::new("artifacts");
+        if dir.join("manifest.json").exists() {
+            let bench = bench_from_args(&args);
+            let mut eng = ModelEngine::load(dir, CacheMode::Fp8).expect("engine");
+            let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
+            let mut t = Table::new(
+                "real kernel artifacts, CPU wallclock (structure only, B=1)",
+                &["heads", "MTP", "snapmla ms", "flashmla ms"],
+            );
+            let heads: &[usize] = if args.has("quick") { &[16, 64] } else { &[16, 32, 64, 128] };
+            let mtps: &[usize] = if args.has("quick") { &[1] } else { &[1, 2] };
+            for &mtp in mtps {
+                for &h in heads {
+                    let sname = format!("kernel_snapmla_h{h}_t{mtp}_n{n}");
+                    let fname = format!("kernel_flashmla_h{h}_t{mtp}_n{n}");
+                    let sargs =
+                        KernelArgs::snapmla(&eng.rt, mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
+                    let fargs =
+                        KernelArgs::flashmla(&eng.rt, mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
+                    eng.execute_kernel(&sname, &sargs.refs()).unwrap();
+                    eng.execute_kernel(&fname, &fargs.refs()).unwrap();
+                    let ms = bench.measure(&sname, || {
+                        eng.execute_kernel(&sname, &sargs.refs()).unwrap();
+                    });
+                    let mf = bench.measure(&fname, || {
+                        eng.execute_kernel(&fname, &fargs.refs()).unwrap();
+                    });
+                    t.row(vec![
+                        h.to_string(),
+                        mtp.to_string(),
+                        f1(ms.mean_s * 1e3),
+                        f1(mf.mean_s * 1e3),
+                    ]);
+                }
+            }
+            t.print();
+        }
+    }
+    write_report("fig7_sensitivity", Json::arr(report));
+}

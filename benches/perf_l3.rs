@@ -1,0 +1,140 @@
+//! L3 hot-path microbenchmarks (the §Perf before/after log in EXPERIMENTS.md
+//! tracks these): E4M3 codec, per-token quantization, paged append, kernel-
+//! view gather, scheduler decisions, JSON parsing.
+//!
+//!     cargo bench --bench perf_l3 [-- --quick]
+
+use snapmla::bench::{bench_from_args, write_report};
+use snapmla::coordinator::scheduler::{RunningSeq, Scheduler, SchedulerConfig, WaitingSeq};
+use snapmla::fp8::{e4m3_decode, e4m3_encode, quant_per_token};
+use snapmla::kvcache::{CacheConfig, CacheMode, PagedKvCache};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::rng::Rng;
+use snapmla::util::table::{f1, Table};
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let bench = bench_from_args(&args);
+    let mut rows = Vec::new();
+    let mut report = Vec::new();
+    let mut push = |name: &str, unit_count: f64, unit: &str, m: snapmla::bench::Measurement,
+                    rows: &mut Vec<Vec<String>>,
+                    report: &mut Vec<Json>| {
+        let per_unit_ns = m.mean_s * 1e9 / unit_count;
+        let throughput = unit_count / m.mean_s / 1e6;
+        rows.push(vec![
+            name.to_string(),
+            f1(m.mean_s * 1e3),
+            f1(per_unit_ns),
+            format!("{:.1} M{unit}/s", throughput),
+        ]);
+        report.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("mean_ms", Json::num(m.mean_s * 1e3)),
+            ("per_unit_ns", Json::num(per_unit_ns)),
+        ]));
+    };
+
+    let mut rng = Rng::new(1);
+
+    // e4m3 encode/decode
+    let xs = rng.normal_vec(1 << 20, 5.0);
+    let m = bench.measure("e4m3 encode 1M", || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(e4m3_encode(x) as u64);
+        }
+        std::hint::black_box(acc);
+    });
+    push("e4m3 encode", (1 << 20) as f64, "elem", m, &mut rows, &mut report);
+
+    let codes: Vec<u8> = xs.iter().map(|&x| e4m3_encode(x)).collect();
+    let m = bench.measure("e4m3 decode 1M", || {
+        let mut acc = 0.0f32;
+        for &b in &codes {
+            acc += e4m3_decode(b);
+        }
+        std::hint::black_box(acc);
+    });
+    push("e4m3 decode", (1 << 20) as f64, "elem", m, &mut rows, &mut report);
+
+    // per-token quantization (128-dim tokens)
+    let toks: Vec<Vec<f32>> = (0..4096).map(|_| rng.normal_vec(128, 2.0)).collect();
+    let m = bench.measure("quant_per_token 4096x128", || {
+        for t in &toks {
+            std::hint::black_box(quant_per_token(t));
+        }
+    });
+    push("per-token quant (128d)", 4096.0 * 128.0, "elem", m, &mut rows, &mut report);
+
+    // paged cache append (8 layers)
+    let cfg = CacheConfig {
+        n_layers: 8, d_c: 128, d_r: 32, mode: CacheMode::Fp8, capacity_pages: 40,
+    };
+    let c_kv = rng.normal_vec(8 * 128, 2.0);
+    let k_r = rng.normal_vec(8 * 32, 30.0);
+    let m = bench.measure("paged append 2048 tokens", || {
+        let mut cache = PagedKvCache::new(cfg);
+        cache.register(1);
+        for _ in 0..2048 {
+            cache.append_token(1, &c_kv, &k_r).unwrap();
+        }
+        std::hint::black_box(cache.used_pages());
+    });
+    push("fused K-append (8 layers)", 2048.0, "tok", m, &mut rows, &mut report);
+
+    // kernel-view gather (engine hot path)
+    let mut cache = PagedKvCache::new(CacheConfig { capacity_pages: 40, ..cfg });
+    cache.register(1);
+    for _ in 0..2048 {
+        cache.append_token(1, &c_kv, &k_r).unwrap();
+    }
+    let mut content = vec![0.0f32; 2048 * 128];
+    let mut rope = vec![0.0f32; 2048 * 32];
+    let mut sigma = vec![0.0f32; 2048];
+    let m = bench.measure("gather_kernel_view 2048 tokens", || {
+        cache.gather_kernel_view(1, 3, 2048, &mut content, &mut rope, &mut sigma);
+        std::hint::black_box(sigma[0]);
+    });
+    push("gather kernel view (1 layer)", 2048.0, "tok", m, &mut rows, &mut report);
+
+    // scheduler decision at scale
+    let sched = Scheduler::new(SchedulerConfig {
+        max_decode_batch: 64,
+        max_prefill_batch: 8,
+        max_prefill_tokens: 128,
+        max_context: 2048,
+        page_tokens: 64,
+    });
+    let waiting: Vec<WaitingSeq> =
+        (0..128).map(|i| WaitingSeq { idx: i, tokens: 64 + i }).collect();
+    let running: Vec<RunningSeq> =
+        (0..64).map(|i| RunningSeq { idx: i, context: 100 + 7 * i }).collect();
+    let m = bench.measure("scheduler decide x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(sched.decide(&waiting, &running, 37));
+        }
+    });
+    push("scheduler decide", 1000.0, "decision", m, &mut rows, &mut report);
+
+    // json parse (manifest-sized)
+    let manifest_path = std::path::Path::new("artifacts/manifest.json");
+    if manifest_path.exists() {
+        let text = std::fs::read_to_string(manifest_path).unwrap();
+        let m = bench.measure("manifest parse", || {
+            std::hint::black_box(snapmla::util::json::Json::parse(&text).unwrap());
+        });
+        push("manifest.json parse", text.len() as f64, "byte", m, &mut rows, &mut report);
+    }
+
+    let mut t = Table::new(
+        "L3 hot-path microbenchmarks",
+        &["op", "mean ms", "ns/unit", "throughput"],
+    );
+    for r in rows {
+        t.row(r);
+    }
+    t.print();
+    write_report("perf_l3", Json::arr(report));
+}

@@ -1,0 +1,126 @@
+//! Numerical analysis companion (Figs. 3 & 5): value-distribution statistics
+//! of the content vs RoPE components, per-component quantization MSE, and
+//! the layer-compounded fidelity comparison across Table-3 configs — run on
+//! (a) the synthetic paper-matched generator and (b) the REAL small model's
+//! own KV cache captured from the serving engine.
+//!
+//!     cargo run --release --example fidelity_analysis -- [--quick]
+
+use snapmla::fp8::quant_per_token;
+use snapmla::kvcache::{CacheMode, PagedKvCache};
+use snapmla::mla::fidelity::{build_stimuli, layerwise_errors};
+use snapmla::mla::quant_configs::QuantConfig;
+use snapmla::mla::{synth, Shape};
+use snapmla::runtime::ModelEngine;
+use snapmla::util::cli::Args;
+use snapmla::util::rng::Rng;
+use snapmla::util::stats::Summary;
+use snapmla::util::table::{f4, sci, Table};
+use std::path::Path;
+
+fn component_stats(name: &str, xs: &[f32], table: &mut Table) {
+    let abs: Vec<f64> = xs.iter().map(|&x| x.abs() as f64).collect();
+    let s = Summary::from(&abs);
+    table.row(vec![
+        name.into(),
+        sci(s.max()),
+        sci(s.percentile(99.0)),
+        sci(s.median()),
+    ]);
+}
+
+fn quant_mse(xs: &[f32], d: usize) -> f64 {
+    let mut err = 0.0f64;
+    for row in xs.chunks(d) {
+        let q = quant_per_token(row);
+        let dq = q.dequant();
+        for (a, b) in row.iter().zip(&dq) {
+            err += ((a - b) as f64).powi(2);
+        }
+    }
+    err / xs.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_with_flags(&["quick"]);
+    let quick = args.has("quick");
+    let n = if quick { 1024 } else { 4096 };
+
+    // ---- Fig. 3a analogue: value ranges ------------------------------------
+    let mut rng = Rng::new(11);
+    let k_c = synth::content(&mut rng, n, 128);
+    let k_r = synth::rope(&mut rng, n, 32);
+    let mut t = Table::new(
+        "Fig. 3a — |value| distribution of MLA KV components (synthetic, paper-matched)",
+        &["component", "max", "p99", "median"],
+    );
+    component_stats("content (c_KV)", &k_c, &mut t);
+    component_stats("RoPE (k^R)", &k_r, &mut t);
+    t.print();
+
+    // ---- Fig. 3b analogue: per-component FP8 MSE ---------------------------
+    let mut t = Table::new(
+        "Fig. 3b — per-token FP8 quantization MSE",
+        &["component", "MSE"],
+    );
+    t.row(vec!["content".into(), sci(quant_mse(&k_c, 128))]);
+    t.row(vec!["RoPE".into(), sci(quant_mse(&k_r, 32))]);
+    t.print();
+
+    // ---- the same analysis on the REAL model's cache -----------------------
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let mut engine = ModelEngine::load(dir, CacheMode::Fp8)?;
+        let (n_layers, d_c, d_r) = (
+            engine.manifest.model.n_layers,
+            engine.manifest.model.d_c,
+            engine.manifest.model.d_r,
+        );
+        let mut cache = PagedKvCache::new(engine.cache_config(64));
+        cache.register(1);
+        let prompt: Vec<i32> =
+            std::iter::once(1).chain((0..119).map(|i| 64 + (i * 13) % 256)).collect();
+        engine.prefill(&mut cache, &[(1, prompt)])?;
+        for _ in 0..if quick { 16 } else { 64 } {
+            engine.decode(&mut cache, &[(1, 70)])?;
+        }
+        // fetch the dequantized cache of layer 0 and of the last layer
+        let tokens = cache.tokens_of(1);
+        let mut t = Table::new(
+            "real-model KV cache |value| stats (captured from the engine)",
+            &["component", "max", "p99", "median"],
+        );
+        for layer in [0, n_layers - 1] {
+            let mut c = vec![0.0f32; tokens * d_c];
+            let mut r = vec![0.0f32; tokens * d_r];
+            cache.fetch_dequant_range(1, layer, 0, tokens, &mut c, &mut r);
+            component_stats(&format!("layer {layer} content"), &c, &mut t);
+            component_stats(&format!("layer {layer} RoPE"), &r, &mut t);
+        }
+        t.print();
+    } else {
+        println!("(artifacts missing — skipping real-model capture)");
+    }
+
+    // ---- Fig. 5 analogue: layer-compounded fidelity ------------------------
+    let shape = Shape { heads: 8, d_c: 128, d_r: 32 };
+    let ctx = if quick { 1024 } else { 8192 };
+    let layers = 8;
+    let stimuli = build_stimuli(7, layers, ctx, &shape);
+    let mut t = Table::new(
+        &format!("Fig. 5 — layer-wise fidelity across quant configs (ctx {ctx})"),
+        &["config", "L0 rel", "mid rel", "final rel", "final cos"],
+    );
+    for cfg in QuantConfig::ALL {
+        let r = layerwise_errors(cfg, &stimuli, &shape, 13);
+        t.row(vec![
+            cfg.name().into(),
+            f4(r.per_layer[0].rel_l2),
+            f4(r.per_layer[layers / 2].rel_l2),
+            f4(r.final_rel()),
+            f4(r.per_layer.last().unwrap().cosine),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Long-context decode sweep on the REAL engine: step latency and KV memory
+//! vs context length for both pipelines, plus the calibrated extrapolation
+//! to the paper's Hopper testbed (the Fig. 1 companion at laptop scale).
+//!
+//!     cargo run --release --example longcontext_sweep -- [--quick]
+
+use snapmla::kvcache::{CacheMode, PagedKvCache};
+use snapmla::perfmodel::{self, GpuSpec, KernelKind, KernelShape, ModelSpec};
+use snapmla::runtime::ModelEngine;
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, f2, Table};
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_with_flags(&["quick"]);
+    let dir = Path::new("artifacts");
+    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
+    let quick = args.has("quick");
+    let steps = args.usize_or("steps", if quick { 4 } else { 12 });
+
+    let mut table = Table::new(
+        "real-engine decode step vs context (batch 4)",
+        &["pipeline", "ctx bucket", "filled ctx", "ms/step", "KV bytes/token"],
+    );
+    let mut report = Vec::new();
+
+    for mode in [CacheMode::Bf16, CacheMode::Fp8] {
+        let label = match mode {
+            CacheMode::Fp8 => "SnapMLA FP8",
+            CacheMode::Bf16 => "FlashMLA BF16",
+        };
+        let mut engine = ModelEngine::load(dir, mode)?;
+        for &(fill, bucket) in &[(384usize, 512usize), (1536, 2048)] {
+            let mut cache = PagedKvCache::new(engine.cache_config(256));
+            let batch = 4usize;
+            // fill caches to the target context with prefill + forced decodes
+            let mut items = Vec::new();
+            for s in 0..batch as u64 {
+                cache.register(s);
+                let prompt: Vec<i32> =
+                    std::iter::once(1).chain((0..119).map(|i| 64 + (i * 7) % 256)).collect();
+                items.push((s, prompt));
+            }
+            engine.prefill(&mut cache, &items)?;
+            // grow context cheaply: decode until `fill`
+            while cache.tokens_of(0) < fill {
+                let items: Vec<(u64, i32)> = (0..batch as u64).map(|s| (s, 70)).collect();
+                engine.decode(&mut cache, &items)?;
+            }
+            // measure steady-state decode
+            let items: Vec<(u64, i32)> = (0..batch as u64).map(|s| (s, 71)).collect();
+            let t0 = Instant::now();
+            for _ in 0..steps {
+                engine.decode(&mut cache, &items)?;
+            }
+            let ms = t0.elapsed().as_secs_f64() / steps as f64 * 1e3;
+            let bpt = cache.cfg.page_bytes() / snapmla::kvcache::PAGE_TOKENS;
+            table.row(vec![
+                label.into(),
+                bucket.to_string(),
+                cache.tokens_of(0).to_string(),
+                f1(ms),
+                bpt.to_string(),
+            ]);
+            report.push(Json::obj(vec![
+                ("pipeline", Json::str(label)),
+                ("bucket", Json::num(bucket as f64)),
+                ("ms_per_step", Json::num(ms)),
+                ("kv_bytes_per_token", Json::num(bpt as f64)),
+            ]));
+        }
+    }
+    table.print();
+
+    // calibrated extrapolation to the paper's testbed (kernel-level)
+    let gpu = GpuSpec::h20();
+    let model = ModelSpec::deepseek_v31();
+    let mut t2 = Table::new(
+        "modeled Hopper kernel time at paper scale (B=8, H=128)",
+        &["ctx", "bf16 µs", "fp8 µs", "kernel speedup"],
+    );
+    for ctx in [16_384usize, 32_768, 65_536, 131_072] {
+        let shape = KernelShape::paper(8, model.heads, 1, ctx);
+        let b = perfmodel::kernel::kernel_time_s(&gpu, &shape, KernelKind::FlashMlaBf16);
+        let f = perfmodel::kernel::kernel_time_s(&gpu, &shape, KernelKind::SnapMlaFp8);
+        t2.row(vec![
+            format!("{}k", ctx / 1024),
+            f1(b * 1e6),
+            f1(f * 1e6),
+            format!("{}x", f2(b / f)),
+        ]);
+    }
+    t2.print();
+    snapmla::bench::write_report("longcontext_sweep", Json::arr(report));
+    Ok(())
+}

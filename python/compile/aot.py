@@ -1,0 +1,264 @@
+"""AOT pipeline: lower L2/L1 to HLO *text* artifacts + weight bundle.
+
+Run once via `make artifacts` (no-op when up to date). Python never runs on
+the request path — the rust runtime loads these artifacts via the `xla` crate.
+
+Interchange is HLO text, NOT serialized protos: jax >= 0.5 emits HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  weights.bin        — custom binary weight bundle (see write_weights)
+  manifest.json      — model config, artifact index, flattened param order
+  model_<mode>_decode_b<B>_s<S>.hlo.txt
+  model_<mode>_prefill_b<B>_p<P>.hlo.txt
+  kernel_<name>_h<H>_t<T>_n<N>.hlo.txt   (paper-shape kernel benches)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--train-steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, model
+from .kernels.flashmla import flashmla_decode
+from .kernels.snapmla import snapmla_decode
+from .model import ModelConfig, SMALL
+
+SEED = 42
+
+# Serving buckets (mirrored by the rust engine). Small-context decode buckets
+# matter on this substrate: the interpret-mode kernel's while-loop trip count
+# is seq/64, so a 128-token bucket runs 4x fewer block iterations than 512
+# (§Perf in EXPERIMENTS.md).
+DECODE_BUCKETS = [
+    (1, 128), (4, 128), (8, 128),
+    (1, 512), (4, 512), (8, 512),
+    (4, 2048), (8, 2048),
+]
+PREFILL_BUCKETS = [(1, 32), (4, 32), (8, 32), (1, 128), (4, 128), (8, 128)]
+
+# Paper-shape kernel artifacts (d_c=512, d_r=64). fig7: head/MTP sweep at
+# fixed N; fig6: seqlen sweep at H=64. B=1 per artifact — batch scaling is
+# modeled (perfmodel) and measured by repeated execution.
+KERNEL_SWEEP = sorted(
+    {(h, t, 1024) for h in (16, 32, 64, 128) for t in (1, 2)}
+    | {(64, 1, n) for n in (1024, 2048, 4096, 8192)}
+)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_weights(path: str, params: dict):
+    """Custom binary bundle: magic, count, then per tensor
+    (u16 name_len, name, u8 dtype(0=f32), u8 ndim, u32 dims…, f32 LE data)."""
+    with open(path, "wb") as f:
+        f.write(b"SNAPW001")
+        names = list(params.keys())
+        f.write(struct.pack("<I", len(names)))
+        for name in names:
+            arr = np.asarray(params[name], np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def train(params, cfg: ModelConfig, steps: int, batch_size=8, seq_len=64):
+    """Tiny build-time Adam run on the synthetic corpus (CPU, minutes)."""
+    if steps <= 0:
+        return params, []
+    lr_max, b1, b2, eps, warmup = 1e-3, 0.9, 0.999, 1e-8, 10.0
+    loss_and_grad = jax.value_and_grad(functools.partial(model.lm_loss, cfg=cfg))
+
+    @jax.jit
+    def train_step(params, m, v, tokens, t):
+        loss, grads = loss_and_grad(params, tokens)
+        lr = lr_max * jnp.minimum(1.0, t / warmup)
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+
+        def upd(p, mi, vi):
+            mh = mi / (1 - b1**t)
+            vh = vi / (1 - b2**t)
+            return p - lr * mh / (jnp.sqrt(vh) + eps)
+
+        return jax.tree.map(upd, params, m, v), m, v, loss
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(SEED)
+    log = []
+    for step in range(1, steps + 1):
+        tokens = jnp.asarray(corpus.batch(rng, cfg.vocab, batch_size, seq_len))
+        params, m, v, loss = train_step(
+            params, m, v, tokens, jnp.asarray(step, jnp.float32)
+        )
+        if step == 1 or step % 25 == 0 or step == steps:
+            l = float(loss)
+            log.append({"step": step, "loss": round(l, 4)})
+            print(f"  train step {step:4d} loss {l:.4f}", flush=True)
+    return params, log
+
+
+def lower_model_artifacts(params, cfg: ModelConfig, out_dir: str, manifest: dict):
+    spec = lambda s, dt=jnp.float32: jax.ShapeDtypeStruct(s, dt)
+    param_specs = {k: spec(v.shape) for k, v in params.items()}
+
+    for mode in ("fp8", "bf16"):
+        for b, s in DECODE_BUCKETS:
+            name = f"model_{mode}_decode_b{b}_s{s}"
+            fn = model.make_decode_fn(cfg, mode)
+            caches = [spec(sh) for _, sh in model.cache_shapes(cfg, b, s, mode)]
+            lowered = jax.jit(fn).lower(
+                param_specs, spec((b, 1), jnp.int32), spec((b,), jnp.int32), *caches
+            )
+            _write_hlo(out_dir, name, lowered)
+            manifest["artifacts"][name] = {
+                "kind": "decode", "mode": mode, "batch": b, "seq": s, "t_q": 1,
+                "cache_shapes": [
+                    [n, list(sh)] for n, sh in model.cache_shapes(cfg, b, s, mode)
+                ],
+            }
+        for b, p in PREFILL_BUCKETS:
+            name = f"model_{mode}_prefill_b{b}_p{p}"
+            fn = model.make_prefill_fn(cfg, mode)
+            lowered = jax.jit(fn).lower(
+                param_specs, spec((b, p), jnp.int32), spec((b,), jnp.int32)
+            )
+            _write_hlo(out_dir, name, lowered)
+            manifest["artifacts"][name] = {
+                "kind": "prefill", "mode": mode, "batch": b, "prompt": p,
+            }
+
+    # record the flattened param order the jitted fns expect (dict pytrees
+    # flatten in sorted-key order; recorded explicitly so rust need not know)
+    leaves = jax.tree_util.tree_leaves_with_path(params)
+    manifest["param_order"] = [
+        jax.tree_util.keystr(path).strip("[']") for path, _ in leaves
+    ]
+
+
+def lower_kernel_artifacts(out_dir: str, manifest: dict):
+    d_c, d_r = model.PAPER_D_C, model.PAPER_D_R
+    sm = 1.0 / float(np.sqrt(d_c + d_r))
+    spec = lambda s, dt=jnp.float32: jax.ShapeDtypeStruct(s, dt)
+    for h, t, n in KERNEL_SWEEP:
+        snap = functools.partial(snapmla_decode, sm_scale=sm)
+        lowered = jax.jit(snap).lower(
+            spec((t, h, d_c)), spec((t, h, d_r)), spec((t, h, 1)),
+            spec((n, d_c)), spec((n, d_r)), spec((n, 1)),
+            spec((1,), jnp.int32),
+        )
+        name = f"kernel_snapmla_h{h}_t{t}_n{n}"
+        _write_hlo(out_dir, name, lowered)
+        manifest["artifacts"][name] = {
+            "kind": "kernel", "kernel": "snapmla", "heads": h, "t_q": t,
+            "seq": n, "d_c": d_c, "d_r": d_r,
+        }
+
+        flash = functools.partial(flashmla_decode, sm_scale=sm)
+        lowered = jax.jit(flash).lower(
+            spec((t, h, d_c)), spec((t, h, d_r)),
+            spec((n, d_c)), spec((n, d_r)),
+            spec((1,), jnp.int32),
+        )
+        name = f"kernel_flashmla_h{h}_t{t}_n{n}"
+        _write_hlo(out_dir, name, lowered)
+        manifest["artifacts"][name] = {
+            "kind": "kernel", "kernel": "flashmla", "heads": h, "t_q": t,
+            "seq": n, "d_c": d_c, "d_r": d_r,
+        }
+
+
+def _write_hlo(out_dir: str, name: str, lowered):
+    t0 = time.time()
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name}.hlo.txt ({len(text)//1024} KiB, {time.time()-t0:.1f}s)",
+          flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=120)
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="model artifacts only (faster iteration)")
+    ap.add_argument("--weights-only", action="store_true",
+                    help="retrain + rewrite weights.bin; keep existing HLO "
+                         "artifacts (lowering is weight-independent)")
+    ap.add_argument("--keep-weights", action="store_true",
+                    help="relower HLO artifacts only; keep the existing "
+                         "weights.bin (lowering needs shapes, not values)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = SMALL
+    print(f"model: {cfg} ({cfg.param_count()/1e6:.1f}M params)")
+    params = model.init_params(jax.random.PRNGKey(SEED), cfg)
+    if args.keep_weights and os.path.exists(os.path.join(args.out_dir, "weights.bin")):
+        train_log = []
+        print("keeping existing weights.bin (relowering artifacts only)")
+    else:
+        t0 = time.time()
+        params, train_log = train(params, cfg, args.train_steps)
+        print(f"training done in {time.time()-t0:.0f}s")
+        write_weights(os.path.join(args.out_dir, "weights.bin"), params)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if args.weights_only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest["train_log"] = train_log
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        print("weights.bin + manifest train_log updated (HLO artifacts kept)")
+        return
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_c": cfg.d_c, "d_r": cfg.d_r,
+            "d_ffn": cfg.d_ffn, "rope_base": cfg.rope_base,
+            "sm_scale": cfg.sm_scale, "params": cfg.param_count(),
+        },
+        "tokens": {"eos": corpus.EOS, "bos": corpus.BOS,
+                   "content_base": corpus.CONTENT_BASE},
+        "train_log": train_log,  # refreshed by --weights-only runs
+        "artifacts": {},
+    }
+    lower_model_artifacts(params, cfg, args.out_dir, manifest)
+    if not args.skip_kernels:
+        lower_kernel_artifacts(args.out_dir, manifest)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest with {len(manifest['artifacts'])} artifacts written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Synthetic token corpus ("structured token language") for build-time training.
+
+We have no downloadable corpus in this offline environment (DESIGN.md
+§Substitutions), so the small MLA model is trained on a synthetic language
+with enough structure that (a) training visibly reduces loss, (b) greedy /
+sampled generations are non-degenerate, and (c) sequences terminate with EOS
+after family-dependent lengths — which the Table-2 generated-length study
+relies on.
+
+Token space (vocab 4096):
+  0 = EOS, 1 = BOS, 2..63 = "operator" tokens, 64.. = content tokens.
+
+Families (mirrored in rust/src/workload/benchsuite.rs):
+  * repeat   — a short motif repeated with occasional mutation
+  * arith    — arithmetic progressions mod the content range
+  * copy     — a prefix span, a separator, then the span copied
+  * nested   — matched open/close operator pairs around content runs
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+EOS, BOS = 0, 1
+OP_BASE, OP_COUNT = 2, 62
+CONTENT_BASE = 64
+# Content tokens are drawn from a restricted range so the language has
+# learnable statistics at build-time training scale (the full 4k vocab stays
+# available for ids/embeddings).
+CONTENT_RANGE = 256
+
+FAMILIES = ("repeat", "arith", "copy", "nested")
+
+
+def _content(rng, n, vocab):
+    hi = min(CONTENT_BASE + CONTENT_RANGE, vocab)
+    return CONTENT_BASE + rng.integers(0, hi - CONTENT_BASE, size=n)
+
+
+def gen_sequence(rng: np.random.Generator, vocab: int, max_len: int) -> np.ndarray:
+    fam = FAMILIES[rng.integers(0, len(FAMILIES))]
+    body_len = int(rng.integers(max_len // 2, max_len - 2))
+    if fam == "repeat":
+        motif = _content(rng, int(rng.integers(2, 8)), vocab)
+        reps = int(np.ceil(body_len / len(motif)))
+        body = np.tile(motif, reps)[:body_len]
+        flips = rng.random(body_len) < 0.02
+        body[flips] = _content(rng, int(flips.sum()), vocab)
+    elif fam == "arith":
+        rng_hi = min(CONTENT_RANGE, vocab - CONTENT_BASE)
+        start = int(rng.integers(0, rng_hi))
+        step = int(rng.integers(1, 17))
+        body = CONTENT_BASE + (start + step * np.arange(body_len)) % rng_hi
+    elif fam == "copy":
+        span = _content(rng, body_len // 2, vocab)
+        sep = OP_BASE + rng.integers(0, OP_COUNT)
+        body = np.concatenate([span, [sep], span])[:body_len]
+    else:  # nested
+        depth = int(rng.integers(1, 5))
+        opens = OP_BASE + rng.integers(0, OP_COUNT // 2, size=depth)
+        closes = opens + OP_COUNT // 2
+        inner = _content(rng, max(body_len - 2 * depth, 1), vocab)
+        body = np.concatenate([opens, inner, closes[::-1]])[:body_len]
+    return np.concatenate([[BOS], body, [EOS]]).astype(np.int32)
+
+
+def batch(rng: np.random.Generator, vocab: int, batch_size: int, seq_len: int):
+    """[B, seq_len] training batch: sequences packed/truncated to seq_len."""
+    out = np.zeros((batch_size, seq_len), np.int32)
+    for b in range(batch_size):
+        row = []
+        while len(row) < seq_len:
+            row.extend(gen_sequence(rng, vocab, max_len=seq_len))
+        out[b] = np.asarray(row[:seq_len], np.int32)
+    return out
+
+
+def prompt(rng: np.random.Generator, vocab: int, length: int) -> np.ndarray:
+    """A prompt = BOS + the first `length-1` tokens of a fresh sequence."""
+    seq = gen_sequence(rng, vocab, max_len=max(length * 2, 8))
+    out = seq[: length]
+    if len(out) < length:
+        out = np.concatenate([out, _content(rng, length - len(out), vocab)])
+    return out.astype(np.int32)

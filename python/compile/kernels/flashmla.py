@@ -1,0 +1,132 @@
+"""BF16 FlashMLA-style decode-attention Pallas kernel — the paper's baseline.
+
+Same blockwise single-pass structure as the SnapMLA kernel (online softmax over
+BLOCK_N=64 KV tiles, shared latent cache as V), but operating on the bf16 grid
+with f32 accumulation and *no* quantization machinery: no per-token scales, no
+scale fusion, no P quantization. This is the semantic twin of FlashMLA [16]
+used as the accuracy and efficiency reference throughout the paper (Table 1,
+Figs. 1/6/7).
+
+Shapes (one sequence; vmap over batch in the L2 model):
+  q_c [T, H, d_c] f32 (rounded to bf16 grid inside), q_r [T, H, d_r]
+  k_c [N, d_c], k_r [N, d_r], length [1] i32
+Returns (o [T, H, d_c], lse [T, H]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .quant import BLOCK_N
+
+NEG_INF = -1e30
+
+
+def _flashmla_kernel(
+    length_ref,
+    q_c_ref,
+    q_r_ref,
+    k_c_ref,
+    k_r_ref,
+    o_ref,
+    lse_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    sm_scale: float,
+    num_blocks: int,
+):
+    blk = pl.program_id(0)
+    t_q, n_heads, d_c = q_c_ref.shape
+
+    @pl.when(blk == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    length = length_ref[0]
+
+    # bf16 operands, f32 accumulation (Hopper BF16 WGMMA semantics).
+    bf = lambda x: x.astype(jnp.bfloat16)
+    q_c = bf(q_c_ref[...].reshape(t_q * n_heads, d_c))
+    q_r = bf(q_r_ref[...].reshape(t_q * n_heads, -1))
+    k_c = bf(k_c_ref[...])
+    k_r = bf(k_r_ref[...])
+
+    s = jnp.dot(q_c, k_c.T, preferred_element_type=jnp.float32)
+    s = s + jnp.dot(q_r, k_r.T, preferred_element_type=jnp.float32)
+    s = s * sm_scale
+
+    j = blk * BLOCK_N + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK_N), 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, (t_q, 1), 0)
+    valid_th = j <= (length - t_q + t)
+    valid = jnp.repeat(valid_th, n_heads, axis=0)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1, keepdims=True))
+    e = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    l_cur = jnp.sum(e, axis=-1, keepdims=True)
+
+    alpha = jnp.where(m_old > NEG_INF / 2, jnp.exp(m_old - m_new), 0.0)
+    l_scr[...] = l_scr[...] * alpha + l_cur
+    # PV on the bf16 grid: P is rounded to bf16 (as the WGMMA operand would be).
+    pv = jnp.dot(bf(e), k_c, preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+
+    @pl.when(blk == num_blocks - 1)
+    def _done():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[...] = (acc_scr[...] / safe_l).reshape(t_q, n_heads, d_c)
+        lse = m_scr[...] + jnp.log(jnp.maximum(l, 1e-37))
+        lse_ref[...] = lse.reshape(t_q, n_heads)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale",))
+def flashmla_decode(q_c, q_r, k_c, k_r, length, sm_scale):
+    """Run the BF16 baseline decode kernel (see module docstring for shapes)."""
+    t_q, n_heads, d_c = q_c.shape
+    d_r = q_r.shape[-1]
+    n = k_c.shape[0]
+    assert n % BLOCK_N == 0, f"cache length {n} must be a multiple of {BLOCK_N}"
+    num_blocks = n // BLOCK_N
+
+    kernel = functools.partial(
+        _flashmla_kernel, sm_scale=float(sm_scale), num_blocks=num_blocks
+    )
+    th = t_q * n_heads
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((t_q, n_heads, d_c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t_q, n_heads, d_r), lambda i: (0, 0, 0)),
+            pl.BlockSpec((BLOCK_N, d_c), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_N, d_r), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t_q, n_heads, d_c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t_q, n_heads), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_q, n_heads, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((t_q, n_heads), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((th, 1), jnp.float32),
+            pltpu.VMEM((th, 1), jnp.float32),
+            pltpu.VMEM((th, d_c), jnp.float32),
+        ],
+        interpret=True,
+    )(length, q_c, q_r, k_c, k_r)
+    return o, lse

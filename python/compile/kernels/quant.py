@@ -1,0 +1,157 @@
+"""FP8 E4M3 fake-quantization primitives shared by the kernels and the model.
+
+SnapMLA stores the MLA latent content cache in FP8 E4M3 with per-token scales
+(paper §3.1).  On this repo's execution substrate (CPU PJRT / Pallas interpret)
+we represent a quantized tensor *on the E4M3 grid in f32* — i.e. every value is
+exactly representable in E4M3 — so that the emitted HLO contains only f32 ops
+that the rust-side xla_extension 0.5.1 can parse, while the numerics are
+bit-identical to a real FP8 cast (tested against ml_dtypes.float8_e4m3fn in
+python/tests/test_quant.py).  The rust KV cache stores true u8 encodings; both
+sides share this grid definition.
+
+Conventions (DESIGN.md §Numerics):
+  * E4M3: max normal 448, min normal 2^-6, subnormal step 2^-9, 3 mantissa bits.
+  * per-token scale sigma = max|x| / 448, lower-bounded by EPS (App. D).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# E4M3 format constants (OCP FP8 E4M3, finite-only variant "fn").
+E4M3_MAX = 448.0          # largest finite magnitude
+E4M3_MIN_NORMAL = 2.0 ** -6
+E4M3_MANT_BITS = 3
+E4M3_SUBNORMAL_STEP = 2.0 ** -9   # spacing in the subnormal range
+SCALE_EPS = 1e-8          # lower bound for dynamic scales (App. D)
+
+# Block size of the PV GEMM tiling — also the block-wise P-quantization block
+# (paper §3.2.2: "BlockN=64") and the KV-cache page size on the rust side.
+BLOCK_N = 64
+
+
+def e4m3_round(x):
+    """Round ``x`` (f32) to the nearest E4M3-representable value, in f32.
+
+    Pure-arithmetic implementation (no bitcasts) so it lowers to portable HLO:
+      * clamp to +-448 (saturating, like float8_e4m3fn casts in ml_dtypes)
+      * normals: keep 3 mantissa bits, round-half-to-even via jnp.round
+      * subnormals (|x| < 2^-6): fixed step 2^-9
+    """
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.abs(x)
+    sign = jnp.sign(x)
+    a = jnp.minimum(a, E4M3_MAX)
+    # Exponent of the leading bit; clamp into the normal range. Guard zero to
+    # keep log2 finite (result is masked below anyway).
+    safe = jnp.maximum(a, 1e-30)
+    e = jnp.floor(jnp.log2(safe))
+    e = jnp.clip(e, -6.0, 8.0)
+    # Quantum: normals have 2^(e-3) spacing, subnormals fixed 2^-9.
+    step = jnp.where(a < E4M3_MIN_NORMAL, E4M3_SUBNORMAL_STEP, jnp.exp2(e - E4M3_MANT_BITS))
+    q = jnp.round(a / step) * step
+    # Rounding can push a subnormal up to the first normal — that is fine, the
+    # value 2^-6 is representable. Clamp the top back to 448.
+    q = jnp.minimum(q, E4M3_MAX)
+    return jnp.where(a == 0.0, 0.0, sign * q).astype(jnp.float32)
+
+
+def per_token_scale(x, axis=-1):
+    """Dynamic per-token scale sigma = max|x|/448 along ``axis`` (kept)."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax / E4M3_MAX, SCALE_EPS).astype(jnp.float32)
+
+
+def quant_per_token(x, axis=-1):
+    """Per-token E4M3 quantization (paper Fig. 4(2)).
+
+    Returns ``(x_q, sigma)`` with ``x ~= x_q * sigma`` and ``x_q`` on the E4M3
+    grid (stored f32). ``sigma`` keeps the reduced axis with size 1.
+    """
+    sigma = per_token_scale(x, axis=axis)
+    return e4m3_round(x / sigma), sigma
+
+
+def quant_per_tensor(x, scale=None):
+    """Per-tensor quantization (paper Fig. 4(1)); ``scale=None`` → dynamic."""
+    if scale is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.maximum(amax / E4M3_MAX, SCALE_EPS)
+    scale = jnp.asarray(scale, jnp.float32)
+    return e4m3_round(x / scale), scale
+
+
+def quant_per_channel(x, axis=0):
+    """Per-channel quantization (paper Fig. 4(3)): one scale per column."""
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    sigma = jnp.maximum(amax / E4M3_MAX, SCALE_EPS).astype(jnp.float32)
+    return e4m3_round(x / sigma), sigma
+
+
+def quant_per_block(x, block_m, block_n):
+    """Per-block quantization (paper Fig. 4(4)) over the last two dims.
+
+    ``x``: [..., M, N] with M % block_m == 0 and N % block_n == 0.
+    Returns ``(x_q, sigma)`` where sigma has shape [..., M//bm, N//bn].
+    """
+    *lead, m, n = x.shape
+    assert m % block_m == 0 and n % block_n == 0, (x.shape, block_m, block_n)
+    xb = x.reshape(*lead, m // block_m, block_m, n // block_n, block_n)
+    amax = jnp.max(jnp.abs(xb), axis=(-3, -1), keepdims=True)
+    sigma = jnp.maximum(amax / E4M3_MAX, SCALE_EPS).astype(jnp.float32)
+    xq = e4m3_round(xb / sigma).reshape(*lead, m, n)
+    return xq, sigma.reshape(*lead, m // block_m, n // block_n)
+
+
+def dequant_per_block(x_q, sigma, block_m, block_n):
+    """Inverse of :func:`quant_per_block`."""
+    *lead, m, n = x_q.shape
+    xb = x_q.reshape(*lead, m // block_m, block_m, n // block_n, block_n)
+    s = sigma.reshape(*lead, m // block_m, 1, n // block_n, 1)
+    return (xb * s).reshape(*lead, m, n)
+
+
+def bf16_round(x):
+    """Round f32 to the bf16 grid (RoPE parts are kept in bf16, §3.1.1)."""
+    return jnp.asarray(x, jnp.bfloat16).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SnapMLA-specific fused preparation ops (§3.3.1 "Fused Compute-Memory
+# Operators"). These are the jnp forms used inside the L2 graph; the Pallas
+# kernel consumes their outputs. Both fuse quantization with scale-domain
+# alignment (Key Step 1, Eq. 6): the BF16 RoPE part is pre-scaled by 1/sigma of
+# the content part so the QK kernel can accumulate one uniform dot product.
+# ---------------------------------------------------------------------------
+
+def fused_q_quant(q_c, q_r):
+    """Fused-Q-Quant: per-token quantize q content + align RoPE domain.
+
+    q_c: [..., d_c] f32 content queries (absorbed space)
+    q_r: [..., d_r] f32 RoPE queries
+    Returns (q_c_q, q_r_aligned, sigma_q) with q_r_aligned = bf16(q_r)/sigma_q.
+    """
+    q_c_q, sigma_q = quant_per_token(q_c, axis=-1)
+    q_r_aligned = bf16_round(q_r) / sigma_q
+    return q_c_q, q_r_aligned, sigma_q
+
+
+def fused_k_append(c_kv, k_r):
+    """Fused-K-Append (quantization half): quantize new latent KV + align RoPE.
+
+    c_kv: [..., d_c] new latent content token(s)
+    k_r:  [..., d_r] new RoPE key token(s)
+    Returns (k_c_q, k_r_aligned, sigma_k). The paged non-contiguous write half
+    of the paper's kernel lives in the rust cache manager (kvcache::append).
+    """
+    k_c_q, sigma_k = quant_per_token(c_kv, axis=-1)
+    k_r_aligned = bf16_round(k_r) / sigma_k
+    return k_c_q, k_r_aligned, sigma_k
+
+
+def fused_fetch_dequant(k_c_q, k_r_aligned, sigma_k):
+    """Fused-Fetch-Dequant: restore high-precision K/V from the quantized cache
+    (used by chunked prefill / prefix reuse, §3.3.1)."""
+    k_c = k_c_q * sigma_k
+    k_r = k_r_aligned * sigma_k
+    return k_c, k_r

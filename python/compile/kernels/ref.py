@@ -1,0 +1,186 @@
+"""Pure-jnp correctness oracles for the SnapMLA kernels.
+
+Two reference levels:
+  * :func:`mla_attention_ref`      — full-precision absorbed-mode MLA decode
+    attention (the BF16 FlashMLA baseline semantics).
+  * :func:`snapmla_ref`            — the SnapMLA quantized pipeline written as
+    straight-line vectorized jnp (global softmax + block-wise P quantization).
+    Algebraically this equals the online blockwise kernel: the running-max
+    formulation rescales both the fused probabilities and their block scale by
+    the same factor, so the quantized mantissas are identical (App. D).
+
+Plus the KV-cache quantization *configurations* of Table 3 (SnapMLA / A / B /
+C / D) used by the layer-wise fidelity study (Fig. 5), shared with
+python/tests/test_fidelity.py and mirrored in rust/src/mla/quant_configs.rs.
+
+Shape conventions (single sequence; the model vmaps over batch):
+  q_c : [T, H, d_c]   absorbed-space content queries (T = MTP query tokens)
+  q_r : [T, H, d_r]   RoPE queries
+  k_c : [N, d_c]      latent content cache (shared K/V, paper Eq. 5)
+  k_r : [N, d_r]      RoPE key cache (shared across heads)
+  length : scalar i32 — number of valid cache tokens INCLUDING the T current
+    query tokens; query token t attends to positions j <= length - T + t
+    (causal within the MTP window).
+Returns (o [T, H, d_c], lse [T, H]).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import quant
+from .quant import BLOCK_N, E4M3_MAX, SCALE_EPS
+
+NEG_INF = -1e30
+
+
+def _mask(length, n, t_q):
+    """[T, N] validity mask for MTP-causal decode attention."""
+    j = jnp.arange(n)[None, :]
+    t = jnp.arange(t_q)[:, None]
+    return j <= (length - t_q + t)
+
+
+def _masked_softmax(s, valid):
+    """Softmax over the last axis with an explicit validity mask.
+
+    s: [T, H, N]; valid: [T, N] broadcast over heads.
+    Returns (p, lse) where lse is the masked log-sum-exp of s.
+    """
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.where(valid[:, None, :], jnp.exp(s - m), 0.0)
+    l = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / l
+    lse = (m + jnp.log(l))[..., 0]
+    return p, lse
+
+
+def mla_attention_ref(q_c, q_r, k_c, k_r, length, sm_scale):
+    """Full-precision absorbed-mode MLA decode attention (V = latent content)."""
+    t_q, _, _ = q_c.shape
+    n = k_c.shape[0]
+    s = jnp.einsum("thc,nc->thn", q_c, k_c) + jnp.einsum("thr,nr->thn", q_r, k_r)
+    s = s * sm_scale
+    p, lse = _masked_softmax(s, _mask(length, n, t_q))
+    o = jnp.einsum("thn,nc->thc", p, k_c)
+    return o, lse
+
+
+def mla_attention_bf16_ref(q_c, q_r, k_c, k_r, length, sm_scale):
+    """BF16 FlashMLA baseline: inputs on the bf16 grid, f32 accumulation."""
+    br = quant.bf16_round
+    return mla_attention_ref(br(q_c), br(q_r), br(k_c), br(k_r), length, sm_scale)
+
+
+def snapmla_ref(q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k, length, sm_scale):
+    """SnapMLA pipeline oracle on pre-quantized operands.
+
+    Inputs follow Key Step 1 (pre-scaled domain alignment):
+      q_c_q [T,H,d_c] on the E4M3 grid, q_r_al = bf16(q_r)/sigma_q,
+      sigma_q [T,H,1]; k_c_q [N,d_c] on the E4M3 grid, k_r_al = bf16(k_r)/sigma_k,
+      sigma_k [N,1]. V_q = k_c_q with S_V = sigma_k (shared latent cache).
+    """
+    t_q, _, _ = q_c_q.shape
+    n = k_c_q.shape[0]
+    assert n % BLOCK_N == 0, f"cache length {n} must be padded to {BLOCK_N}"
+    sk = sigma_k[:, 0]
+
+    # Uniform-domain QK accumulation, then logit restoration (Eq. 6):
+    # [q_c_q ; q_r_al] . [k_c_q ; k_r_al] * sigma_q * sigma_k == q . k exactly
+    # on the quantized grid.
+    s = jnp.einsum("thc,nc->thn", q_c_q, k_c_q) + jnp.einsum(
+        "thr,nr->thn", q_r_al, k_r_al
+    )
+    s = s * sigma_q * sk[None, None, :] * sm_scale
+
+    valid = _mask(length, n, t_q)
+    p, lse = _masked_softmax(s, valid)
+
+    # Key Step 2: fuse the per-token V scale into P, then block-wise dynamic
+    # quantization of P' with sigma_P = max/448 per (T, H, block).
+    pt = p * sk[None, None, :]
+    ptb = pt.reshape(t_q, pt.shape[1], n // BLOCK_N, BLOCK_N)
+    sigma_p = jnp.maximum(
+        jnp.max(jnp.abs(ptb), axis=-1, keepdims=True) / E4M3_MAX, SCALE_EPS
+    )
+    pq = quant.e4m3_round(ptb / sigma_p)
+
+    # Tiled FP8 PV GEMM with implicit dequantization: the per-block scale is
+    # folded back while accumulating (the online form of Eq. 12/13).
+    vq = k_c_q.reshape(n // BLOCK_N, BLOCK_N, -1)
+    o = jnp.einsum("thbk,bkc->thc", pq * sigma_p, vq)
+    return o, lse
+
+
+def snapmla_from_fp32(q_c, q_r, k_c, k_r, length, sm_scale):
+    """Convenience: full SnapMLA path starting from f32 operands
+    (Fused-Q-Quant + Fused-K-Append + snapmla_ref)."""
+    q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+    k_c_q, k_r_al, sigma_k = quant.fused_k_append(k_c, k_r)
+    return snapmla_ref(q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k, length, sm_scale)
+
+
+# ---------------------------------------------------------------------------
+# Table 3 quantization configurations for the fidelity study (Fig. 5).
+# Each returns dequantized-equivalent (k_c', k_r') caches; attention is then
+# evaluated in full precision so the error isolates the cache quantization.
+# ---------------------------------------------------------------------------
+
+def config_snapmla(k_c, k_r):
+    """Per-Token RoPE-Aware: content per-token FP8, RoPE kept bf16."""
+    k_c_q, s = quant.quant_per_token(k_c, axis=-1)
+    return k_c_q * s, quant.bf16_round(k_r)
+
+
+def config_a_rope_unaware(k_c, k_r):
+    """Config A: Per-Token RoPE-Unaware — uniform FP8 over the WHOLE KV vector.
+
+    "Unaware" means the quantizer does not know about the content/RoPE split:
+    one shared per-token scale covers [k_c ; k_r]. Because the RoPE part spans
+    a far wider dynamic range (±10³ vs ±10¹, Fig. 3a), the shared scale is set
+    by RoPE outliers and the content resolution collapses — the mechanism
+    behind the error explosion in Fig. 5 (and the RoPE part itself also loses
+    precision). This matches the paper's framing that "the application of
+    uniform quantization does not effectively address this disparity".
+    """
+    kv = jnp.concatenate([k_c, k_r], axis=-1)
+    kv_q, s = quant.quant_per_token(kv, axis=-1)
+    kv_d = kv_q * s
+    return kv_d[..., : k_c.shape[-1]], kv_d[..., k_c.shape[-1] :]
+
+
+def config_b_per_tensor_static(k_c, k_r):
+    """Config B: Per-Tensor Static (fixed scale 1.0) RoPE-Aware."""
+    k_c_q, _ = quant.quant_per_tensor(k_c, scale=1.0)
+    return k_c_q * 1.0, quant.bf16_round(k_r)
+
+
+def config_c_per_tensor_dynamic(k_c, k_r):
+    """Config C: Per-Tensor Dynamic RoPE-Aware."""
+    k_c_q, s = quant.quant_per_tensor(k_c)
+    return k_c_q * s, quant.bf16_round(k_r)
+
+
+def config_d_per_block(k_c, k_r, block=BLOCK_N):
+    """Config D: Per-Block RoPE-Aware (block x block tiles over [N, d_c])."""
+    n, d_c = k_c.shape
+    bm = block if n % block == 0 else n  # degrade gracefully on short caches
+    bn = block if d_c % block == 0 else d_c
+    k_c_q, s = quant.quant_per_block(k_c, bm, bn)
+    return quant.dequant_per_block(k_c_q, s, bm, bn), quant.bf16_round(k_r)
+
+
+QUANT_CONFIGS = {
+    "snapmla": config_snapmla,
+    "config_a": config_a_rope_unaware,
+    "config_b": config_b_per_tensor_static,
+    "config_c": config_c_per_tensor_dynamic,
+    "config_d": config_d_per_block,
+}
+
+
+def attention_with_config(name, q_c, q_r, k_c, k_r, length, sm_scale):
+    """Attention output under a Table-3 KV-cache quantization config."""
+    k_c_d, k_r_d = QUANT_CONFIGS[name](k_c, k_r)
+    return mla_attention_ref(q_c, q_r, k_c_d, k_r_d, length, sm_scale)

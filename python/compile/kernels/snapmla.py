@@ -1,0 +1,180 @@
+"""SnapMLA FP8 decode-attention Pallas kernel (paper Algorithm 1).
+
+Single-pass blockwise decode attention over a quantized MLA latent cache:
+
+  * **Key Step 1 — pre-scaled domain alignment** (§3.1.2): the caller supplies
+    q_r, k_r already divided by the content scales, so the QK dot product is a
+    single uniform accumulation over [q_c_q ; q_r_al] . [k_c_q ; k_r_al]; the
+    logits are restored with sigma_q * sigma_k afterwards. No mixed-precision
+    accumulation barrier inside the loop.
+  * **Online softmax with scale fusion** (§3.2.2 / App. D): per KV block of
+    BLOCK_N=64 the fused probability block P' = exp(s - m) * sigma_k is
+    block-quantized to the E4M3 grid with a dynamic scale sigma_P = max/448,
+    and the running (O, L) states live in the *current* probability-scale
+    domain — rescaled by exp(m_old - m_new) * sigma_P_old / sigma_P_new
+    exactly as Eqs. (12)/(13). Final o = O / L; lse = m + log(sigma_P * l).
+  * **Order enforcement** (App. E): the grid iterates KV blocks monotonically,
+    which is precisely the "lossless pipeline reconstruction" — the scale
+    domain only ever moves forward, so no bidirectional rescale hazard exists.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): BLOCK_N=64 tiles stream
+through VMEM via BlockSpec while Q and the accumulators stay resident; the
+per-block work is two MXU-shaped contractions ([T*H, 576] x [576, 64] and
+[T*H, 64] x [64, d_c]). interpret=True everywhere (CPU substrate).
+
+Shapes (one sequence; vmap over batch in the L2 model):
+  q_c_q [T, H, d_c] (E4M3 grid), q_r_al [T, H, d_r], sigma_q [T, H, 1]
+  k_c_q [N, d_c]    (E4M3 grid), k_r_al [N, d_r],    sigma_k [N, 1]
+  length [1] i32 — valid tokens incl. the T query tokens (MTP-causal mask)
+Returns (o [T, H, d_c], lse [T, H]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .quant import BLOCK_N, E4M3_MAX, SCALE_EPS, e4m3_round
+
+NEG_INF = -1e30
+
+
+def _snapmla_kernel(
+    length_ref,
+    q_c_ref,
+    q_r_ref,
+    sigma_q_ref,
+    k_c_ref,
+    k_r_ref,
+    sigma_k_ref,
+    o_ref,
+    lse_ref,
+    m_scr,
+    l_scr,
+    sp_scr,
+    acc_scr,
+    *,
+    sm_scale: float,
+    num_blocks: int,
+):
+    blk = pl.program_id(0)
+    t_q, n_heads, d_c = q_c_ref.shape
+
+    # --- init running state at the first block (Algorithm 1 line 1-2) ------
+    @pl.when(blk == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        sp_scr[...] = jnp.ones(sp_scr.shape, jnp.float32)  # sigma_p = 1.0
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    length = length_ref[0]
+
+    q_c = q_c_ref[...].reshape(t_q * n_heads, d_c)
+    q_r = q_r_ref[...].reshape(t_q * n_heads, -1)
+    sigma_q = sigma_q_ref[...].reshape(t_q * n_heads, 1)
+
+    k_c = k_c_ref[...]  # [BLOCK_N, d_c] — the quantized latent tile (also V_q)
+    k_r = k_r_ref[...]  # [BLOCK_N, d_r] — pre-scaled RoPE tile
+    sigma_k = sigma_k_ref[...].reshape(BLOCK_N)
+
+    # --- uniform-domain QK GEMM + logit restoration (Key Step 1) -----------
+    s = jnp.dot(q_c, k_c.T, preferred_element_type=jnp.float32)
+    s = s + jnp.dot(q_r, k_r.T, preferred_element_type=jnp.float32)
+    s = s * (sigma_q * sigma_k[None, :]) * sm_scale  # restored logits [TH, B]
+
+    # --- MTP-causal / length mask -------------------------------------------
+    j = blk * BLOCK_N + jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK_N), 1)
+    t = jax.lax.broadcasted_iota(jnp.int32, (t_q, 1), 0)
+    valid_th = j <= (length - t_q + t)  # [T, BLOCK_N]
+    valid = jnp.repeat(valid_th, n_heads, axis=0)  # [T*H, BLOCK_N]
+    s = jnp.where(valid, s, NEG_INF)
+
+    # --- online softmax (block stage 1) -------------------------------------
+    m_old = m_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_old, m_cur)
+    e = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # unnormalized probs
+    l_cur = jnp.sum(e, axis=-1, keepdims=True)
+
+    # --- scale fusion (block stage 2, Key Step 2): P' = P ⊙ S_V -------------
+    et = e * sigma_k[None, :]
+
+    # --- block-wise dynamic P quantization (block stage 3) ------------------
+    has_valid = jnp.any(valid, axis=-1, keepdims=True)
+    sp_old = sp_scr[...]
+    sp_cur = jnp.maximum(jnp.max(et, axis=-1, keepdims=True) / E4M3_MAX, SCALE_EPS)
+    # An all-masked block must not disturb the running scale domain.
+    sp_new = jnp.where(has_valid, sp_cur, sp_old)
+    p_q = e4m3_round(et / sp_new)  # quantized probability block (E4M3 grid)
+
+    # --- scale-aware accumulation (block stage 4, Eqs. 12/13) ---------------
+    # gamma rescales (O, L) from the old (m, sigma_p) domain to the new one.
+    alpha = jnp.where(m_old > NEG_INF / 2, jnp.exp(m_old - m_new), 0.0)
+    gamma = alpha * sp_old / sp_new
+    l_scr[...] = l_scr[...] * gamma + l_cur / sp_new
+    # FP8 PV GEMM on quantized operands; implicit dequantization is carried by
+    # the sigma_p domain of the accumulator.
+    pv = jnp.dot(p_q, k_c, preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * gamma + pv
+    m_scr[...] = m_new
+    sp_scr[...] = sp_new
+
+    # --- epilogue: normalize and write out ----------------------------------
+    @pl.when(blk == num_blocks - 1)
+    def _done():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o = acc_scr[...] / safe_l  # sigma_p cancels between O and L
+        o_ref[...] = o.reshape(t_q, n_heads, d_c)
+        lse = m_scr[...] + jnp.log(jnp.maximum(sp_scr[...] * l, 1e-37))
+        lse_ref[...] = lse.reshape(t_q, n_heads)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale",))
+def snapmla_decode(q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k, length, sm_scale):
+    """Run the SnapMLA FP8 decode kernel (see module docstring for shapes)."""
+    t_q, n_heads, d_c = q_c_q.shape
+    d_r = q_r_al.shape[-1]
+    n = k_c_q.shape[0]
+    assert n % BLOCK_N == 0, f"cache length {n} must be a multiple of {BLOCK_N}"
+    num_blocks = n // BLOCK_N
+
+    kernel = functools.partial(
+        _snapmla_kernel, sm_scale=float(sm_scale), num_blocks=num_blocks
+    )
+    grid = (num_blocks,)
+    th = t_q * n_heads
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),                    # length
+            pl.BlockSpec((t_q, n_heads, d_c), lambda i: (0, 0, 0)),  # q_c_q
+            pl.BlockSpec((t_q, n_heads, d_r), lambda i: (0, 0, 0)),  # q_r_al
+            pl.BlockSpec((t_q, n_heads, 1), lambda i: (0, 0, 0)),    # sigma_q
+            pl.BlockSpec((BLOCK_N, d_c), lambda i: (i, 0)),          # k_c_q tile
+            pl.BlockSpec((BLOCK_N, d_r), lambda i: (i, 0)),          # k_r_al tile
+            pl.BlockSpec((BLOCK_N, 1), lambda i: (i, 0)),            # sigma_k tile
+        ],
+        out_specs=[
+            pl.BlockSpec((t_q, n_heads, d_c), lambda i: (0, 0, 0)),
+            pl.BlockSpec((t_q, n_heads), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t_q, n_heads, d_c), jnp.float32),
+            jax.ShapeDtypeStruct((t_q, n_heads), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((th, 1), jnp.float32),    # m (running max)
+            pltpu.VMEM((th, 1), jnp.float32),    # l (scaled norm stat)
+            pltpu.VMEM((th, 1), jnp.float32),    # sigma_p (scale domain)
+            pltpu.VMEM((th, d_c), jnp.float32),  # O accumulator
+        ],
+        interpret=True,
+    )(length, q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k)
+    return o, lse

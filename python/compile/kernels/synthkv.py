@@ -1,0 +1,107 @@
+"""Synthetic MLA KV-cache generator matched to the paper's Fig. 3a statistics.
+
+The fidelity study (Table 3 / Fig. 5) needs cache data that reproduces the
+*mechanisms* behind the paper's findings, not just the marginal histograms:
+
+  * **Content part** (latent c_KV): bulk concentrated within ±10¹, but with a
+    wide per-token magnitude spread (lognormal) plus rare "sink" tokens of
+    30-100× magnitude (attention-sink / massive-token phenomenon, refs [35,36]
+    of the paper). The spread is what separates per-token from per-tensor and
+    per-block granularities under FP8: coarse scales push weak tokens toward
+    the E4M3 subnormal range where relative precision collapses.
+  * **RoPE part** (decoupled k_R): a few *massive channels* (known massive-
+    activation phenomenon) carrying position as phase-coherent cos/sin pairs
+    with amplitudes up to ~10³, plus moderate-scale channels. Because the
+    positional signal lives in phase relationships with heavy cancellation
+    across the sequence, the 2⁻⁴-relative FP8 noise on massive channels is
+    *incoherent* and does not cancel — it perturbs logits by an amount
+    comparable to the positional signal itself, while bf16 (2⁻⁹) keeps it
+    negligible. This is the RoPE quantization-sensitivity mechanism.
+
+Mirrored in rust/src/mla/synth.rs for the rust-side fidelity benches.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Massive-channel amplitude for the leading RoPE pair (paper: range ±10³).
+ROPE_MASSIVE_AMP = 800.0
+# Secondary massive pair amplitude.
+ROPE_MASSIVE_AMP2 = 250.0
+# Moderate rope channel scale.
+ROPE_BULK_SCALE = 20.0
+# Content bulk scale (±10¹ concentration) and per-token lognormal spread.
+CONTENT_SCALE = 2.5
+CONTENT_TOKEN_SPREAD = 1.0
+# Fraction and magnitude of sink tokens in the content part.
+SINK_FRACTION = 0.01
+SINK_MAGNIFICATION = 40.0
+
+
+def synth_content(rng: np.random.Generator, n: int, d_c: int) -> np.ndarray:
+    """Latent content cache [n, d_c]: Gaussian bulk x lognormal token spread
+    plus sparse sink tokens."""
+    tok_scale = np.exp(rng.normal(0.0, CONTENT_TOKEN_SPREAD, size=(n, 1)))
+    x = rng.normal(0.0, CONTENT_SCALE, size=(n, d_c)) * tok_scale
+    n_sink = max(1, int(n * SINK_FRACTION))
+    sinks = rng.choice(n, size=n_sink, replace=False)
+    x[sinks] *= SINK_MAGNIFICATION
+    return x.astype(np.float32)
+
+
+def synth_rope(rng: np.random.Generator, n: int, d_r: int) -> np.ndarray:
+    """Decoupled RoPE cache [n, d_r] with phase-coherent massive channels.
+
+    Channels (0,1) and (2,3) are cos/sin pairs rotating with position at
+    massive amplitude; remaining channels are moderate Gaussians. Small
+    phase noise keeps the signal realistic.
+    """
+    assert d_r >= 4
+    pos = np.arange(n)
+    out = rng.normal(0.0, ROPE_BULK_SCALE, size=(n, d_r))
+    for (c0, amp, omega) in ((0, ROPE_MASSIVE_AMP, 0.013), (2, ROPE_MASSIVE_AMP2, 0.11)):
+        phase = pos * omega + rng.normal(0.0, 0.05, size=n) + rng.uniform(0, 2 * np.pi)
+        out[:, c0] = amp * np.cos(phase) * (1 + rng.normal(0, 0.02, size=n))
+        out[:, c0 + 1] = amp * np.sin(phase) * (1 + rng.normal(0, 0.02, size=n))
+    return out.astype(np.float32)
+
+
+def synth_queries(
+    rng: np.random.Generator,
+    t_q: int,
+    n_heads: int,
+    d_c: int,
+    d_r: int,
+    sm_scale: float,
+    rope_logit_amp: float = 8.0,
+    content_logit_std: float = 3.0,
+):
+    """Queries giving realistic logit composition: positional (RoPE) swings of
+    ~±rope_logit_amp plus a content term of std ~content_logit_std."""
+    # content: logit std = qs * CONTENT_SCALE * sqrt(d_c) * sm
+    qs = content_logit_std / (CONTENT_SCALE * np.sqrt(d_c) * sm_scale)
+    q_c = rng.normal(0.0, qs / np.sqrt(d_c) * np.sqrt(d_c), size=(t_q, n_heads, d_c))
+    q_c = q_c * (1.0 / np.sqrt(d_c))  # keep row norms ~qs
+    q_c = q_c / np.sqrt(np.mean(q_c**2)) * (qs / np.sqrt(d_c))
+    # rope: phase-matched amplitude on the massive pair
+    b = rope_logit_amp / (ROPE_MASSIVE_AMP * sm_scale)
+    q_r = rng.normal(0.0, 0.02, size=(t_q, n_heads, d_r))
+    psi = rng.uniform(0, 2 * np.pi, size=(t_q, n_heads))
+    q_r[..., 0] = b * np.cos(psi)
+    q_r[..., 1] = b * np.sin(psi)
+    b2 = 0.4 * rope_logit_amp / (ROPE_MASSIVE_AMP2 * sm_scale)
+    psi2 = rng.uniform(0, 2 * np.pi, size=(t_q, n_heads))
+    q_r[..., 2] = b2 * np.cos(psi2)
+    q_r[..., 3] = b2 * np.sin(psi2)
+    return q_c.astype(np.float32), q_r.astype(np.float32)
+
+
+def synth_case(seed: int, n: int, d_c: int, d_r: int, t_q: int = 1, n_heads: int = 8):
+    """Full synthetic decode-attention case; returns (q_c, q_r, k_c, k_r, sm)."""
+    rng = np.random.default_rng(seed)
+    sm = 1.0 / np.sqrt(d_c + d_r)
+    k_c = synth_content(rng, n, d_c)
+    k_r = synth_rope(rng, n, d_r)
+    q_c, q_r = synth_queries(rng, t_q, n_heads, d_c, d_r, sm)
+    return q_c, q_r, k_c, k_r, sm

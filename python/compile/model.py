@@ -1,0 +1,352 @@
+"""L2: absorbed-mode MLA transformer (DeepSeek-V2-style, scaled down).
+
+This is the build-time JAX definition of the model the rust coordinator
+serves. The decode step calls the L1 Pallas kernels (snapmla/flashmla); both
+the FP8 (SnapMLA) and BF16 (FlashMLA baseline) pipelines are built from the
+same weights so Table-1-style parity comparisons isolate the decoding path.
+
+Parametrization: we train/initialize directly in the *absorbed* space
+(DESIGN.md): per layer
+  w_q_c : [d, H*d_c]   query → latent space (W^Q with W^UK pre-absorbed)
+  w_q_r : [d, H*d_r]   query RoPE heads
+  w_dkv : [d, d_c]     latent KV down-projection (c_KV = h @ w_dkv)
+  w_kr  : [d, d_r]     decoupled RoPE key (shared across heads)
+  w_o   : [H*d_c, d]   output projection (W^O with W^UV pre-absorbed)
+plus RMSNorm scales and a SwiGLU MLP. Embeddings are tied with the unembed.
+
+Cache layout (per precision):
+  FP8 (SnapMLA): k_c_q [L,B,S,d_c] on the E4M3 grid, k_r_al [L,B,S,d_r]
+      pre-scaled RoPE (Key Step 1), sigma_k [L,B,S,1].
+  BF16 (baseline): k_c [L,B,S,d_c], k_r [L,B,S,d_r] on the bf16 grid.
+
+`positions` holds the number of *already cached* tokens per sequence; the
+decode step writes the T new tokens at positions[b] .. positions[b]+T-1 and
+attends with length = positions[b] + T.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import quant
+from .kernels.flashmla import flashmla_decode
+from .kernels.snapmla import snapmla_decode
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 4096
+    d_model: int = 512
+    n_layers: int = 8
+    n_heads: int = 8
+    d_c: int = 128          # latent (content) dimension, shared K/V cache
+    d_r: int = 32           # decoupled RoPE dimension
+    d_ffn: int = 1536
+    rope_base: float = 10000.0
+
+    @property
+    def sm_scale(self) -> float:
+        return 1.0 / float(np.sqrt(self.d_c + self.d_r))
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_shapes(self))
+
+
+SMALL = ModelConfig()
+
+# Paper-shaped kernel dims (DeepSeek-V3: d_c=512, d_r=64 → nine 64-wide QK
+# reduction groups exactly as FlashMLA partitions them).
+PAPER_D_C = 512
+PAPER_D_R = 64
+
+
+def param_shapes(cfg: ModelConfig):
+    """Deterministic (name, shape) list — single source of truth for init,
+    the weights.bin writer and the rust-side loader (manifest order)."""
+    shapes = [("embed", (cfg.vocab, cfg.d_model))]
+    for l in range(cfg.n_layers):
+        p = f"layer{l:02d}."
+        shapes += [
+            (p + "ln1", (cfg.d_model,)),
+            (p + "w_q_c", (cfg.d_model, cfg.n_heads * cfg.d_c)),
+            (p + "w_q_r", (cfg.d_model, cfg.n_heads * cfg.d_r)),
+            (p + "w_dkv", (cfg.d_model, cfg.d_c)),
+            (p + "w_kr", (cfg.d_model, cfg.d_r)),
+            (p + "w_o", (cfg.n_heads * cfg.d_c, cfg.d_model)),
+            (p + "ln2", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_up", (cfg.d_model, cfg.d_ffn)),
+            (p + "w_down", (cfg.d_ffn, cfg.d_model)),
+        ]
+    shapes.append(("ln_f", (cfg.d_model,)))
+    return shapes
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    """Scaled-normal init; ln scales at 1. Deterministic given `key`."""
+    params = {}
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) / np.sqrt(fan_in)
+    return params
+
+
+def rmsnorm(x, scale):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def rope(x, positions, base: float):
+    """Rotary embedding over the last dim (half-split convention).
+
+    x: [..., P, d_r]; positions: broadcastable to [..., P] absolute indices.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., P, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _project_qkv(pl_params, h, positions, cfg: ModelConfig):
+    """Shared Q/KV projections for one layer.
+
+    h: [B, T, d]; positions: [B, T] absolute token positions.
+    Returns q_c [B,T,H,d_c], q_r [B,T,H,d_r] (roped), c_kv [B,T,d_c],
+    k_r [B,T,d_r] (roped).
+    """
+    b, t, _ = h.shape
+    q_c = (h @ pl_params["w_q_c"]).reshape(b, t, cfg.n_heads, cfg.d_c)
+    q_r = (h @ pl_params["w_q_r"]).reshape(b, t, cfg.n_heads, cfg.d_r)
+    # rope over heads: positions broadcast [B,T] -> [B,H,T]
+    q_r = rope(
+        q_r.transpose(0, 2, 1, 3), positions[:, None, :], cfg.rope_base
+    ).transpose(0, 2, 1, 3)
+    c_kv = h @ pl_params["w_dkv"]
+    k_r = rope(h @ pl_params["w_kr"], positions, cfg.rope_base)
+    return q_c, q_r, c_kv, k_r
+
+
+def _layer_params(params, l: int):
+    p = f"layer{l:02d}."
+    return {k[len(p):]: v for k, v in params.items() if k.startswith(p)}
+
+
+def mlp(pl_params, h):
+    g = jax.nn.silu(h @ pl_params["w_gate"])
+    return (g * (h @ pl_params["w_up"])) @ pl_params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token per sequence; T>1 = MTP)
+# ---------------------------------------------------------------------------
+
+def _attn_decode(pl_params, h, positions, cache_l, cfg: ModelConfig, mode: str):
+    """One layer of decode attention over the running cache.
+
+    h: [B, T, d]; positions: [B] (#cached tokens before this step).
+    cache_l: (k_c_q, k_r_al, sigma_k) for fp8 / (k_c, k_r) for bf16, each
+    [B, S, *]. Returns (attn_out [B,T,d], new_entries).
+    """
+    b, t, _ = h.shape
+    pos_bt = positions[:, None] + jnp.arange(t)[None, :]  # [B, T] absolute
+    q_c, q_r, c_kv, k_r = _project_qkv(pl_params, h, pos_bt, cfg)
+    lengths = (positions + t).astype(jnp.int32)  # valid tokens incl. new ones
+
+    def write(cache, new):
+        def upd(c, n, p):
+            return jax.lax.dynamic_update_slice(c, n, (p,) + (0,) * (c.ndim - 1))
+        return jax.vmap(upd)(cache, new, positions)
+
+    if mode == "fp8":
+        k_cache, r_cache, s_cache = cache_l
+        # Fused-Q-Quant / Fused-K-Append (quantization + Key Step 1 alignment)
+        q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+        new_kc, new_kr, new_sk = quant.fused_k_append(c_kv, k_r)
+
+        k_cache = write(k_cache, new_kc)
+        r_cache = write(r_cache, new_kr)
+        s_cache = write(s_cache, new_sk)
+
+        def one(qc, qr, sq, kc, kr, sk, ln):
+            return snapmla_decode(qc, qr, sq, kc, kr, sk, ln[None], cfg.sm_scale)
+
+        o, _ = jax.vmap(one)(q_c_q, q_r_al, sigma_q, k_cache, r_cache, s_cache, lengths)
+        new_entries = (new_kc, new_kr, new_sk)
+    else:
+        k_cache, r_cache = cache_l
+        new_kc, new_kr = quant.bf16_round(c_kv), quant.bf16_round(k_r)
+        k_cache = write(k_cache, new_kc)
+        r_cache = write(r_cache, new_kr)
+
+        def one(qc, qr, kc, kr, ln):
+            return flashmla_decode(qc, qr, kc, kr, ln[None], cfg.sm_scale)
+
+        o, _ = jax.vmap(one)(q_c, q_r, k_cache, r_cache, lengths)
+        new_entries = (new_kc, new_kr)
+
+    attn_out = o.reshape(b, t, cfg.n_heads * cfg.d_c) @ pl_params["w_o"]
+    return attn_out, new_entries
+
+
+def decode_step(params, token_ids, positions, caches, cfg: ModelConfig, mode: str):
+    """Full decode step.
+
+    token_ids: [B, T] i32; positions: [B] i32 (#cached tokens per sequence).
+    caches: fp8 → (k_c_q [L,B,S,d_c], k_r_al [L,B,S,d_r], sigma_k [L,B,S,1]);
+            bf16 → (k_c [L,B,S,d_c], k_r [L,B,S,d_r]).
+    Returns (logits [B,T,V], new_entries stacked [L,B,T,*]).
+
+    The updated caches are internal only — the rust cache manager owns the
+    canonical (paged, u8) cache and appends the returned entries itself.
+    """
+    h = params["embed"][token_ids]
+    new_per_layer = []
+    for l in range(cfg.n_layers):
+        pl_params = _layer_params(params, l)
+        cache_l = tuple(c[l] for c in caches)
+        a, new_entries = _attn_decode(
+            pl_params, rmsnorm(h, pl_params["ln1"]), positions, cache_l, cfg, mode
+        )
+        h = h + a
+        h = h + mlp(pl_params, rmsnorm(h, pl_params["ln2"]))
+        new_per_layer.append(new_entries)
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["embed"].T
+    stacked = tuple(
+        jnp.stack([layer[i] for layer in new_per_layer])
+        for i in range(len(new_per_layer[0]))
+    )
+    return (logits,) + stacked
+
+
+# ---------------------------------------------------------------------------
+# Prefill (prompt processing; produces cache entries + last-token logits)
+# ---------------------------------------------------------------------------
+
+def prefill(params, token_ids, prompt_lens, cfg: ModelConfig, mode: str):
+    """Process a padded prompt batch in full precision.
+
+    token_ids: [B, P] i32 (right-padded); prompt_lens: [B] i32.
+    Returns (last_logits [B, V], cache entries for all P positions
+    [L,B,P,*] in the target precision) — the rust side appends the first
+    prompt_lens[b] entries to the cache.
+    """
+    b, p = token_ids.shape
+    h = params["embed"][token_ids]
+    positions = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p))
+    # causal mask + padding mask
+    causal = jnp.tril(jnp.ones((p, p), bool))
+    pad = positions < prompt_lens[:, None]  # [B, P] key validity
+    mask = causal[None, :, :] & pad[:, None, :]  # [B, Pq, Pk]
+
+    new_per_layer = []
+    for l in range(cfg.n_layers):
+        pl_params = _layer_params(params, l)
+        x = rmsnorm(h, pl_params["ln1"])
+        q_c, q_r, c_kv, k_r = _project_qkv(pl_params, x, positions, cfg)
+        if mode == "fp8":
+            # store the quantized entries (what the decode path will read);
+            # prefill attention itself runs in full precision ("fused fetch-
+            # dequant" semantics: chunked prefill reads dequantized values).
+            new_kc, new_kr, new_sk = quant.fused_k_append(c_kv, k_r)
+            k_c_d, k_r_d = quant.fused_fetch_dequant(new_kc, new_kr, new_sk)
+            new_entries = (new_kc, new_kr, new_sk)
+        else:
+            k_c_d, k_r_d = quant.bf16_round(c_kv), quant.bf16_round(k_r)
+            new_entries = (k_c_d, k_r_d)
+
+        s = jnp.einsum("bihc,bjc->bhij", q_c, k_c_d) + jnp.einsum(
+            "bihr,bjr->bhij", q_r, k_r_d
+        )
+        s = s * cfg.sm_scale
+        s = jnp.where(mask[:, None, :, :], s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjc->bihc", pr, k_c_d)
+        a = o.reshape(b, p, cfg.n_heads * cfg.d_c) @ pl_params["w_o"]
+        h = h + a
+        h = h + mlp(pl_params, rmsnorm(h, pl_params["ln2"]))
+        new_per_layer.append(new_entries)
+
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["embed"].T  # [B, P, V]
+    last_idx = jnp.maximum(prompt_lens - 1, 0)
+    last_logits = jnp.take_along_axis(
+        logits, last_idx[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    stacked = tuple(
+        jnp.stack([layer[i] for layer in new_per_layer])
+        for i in range(len(new_per_layer[0]))
+    )
+    return (last_logits,) + stacked
+
+
+# ---------------------------------------------------------------------------
+# Loss (build-time training that makes generations non-degenerate)
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, token_ids, cfg: ModelConfig):
+    """Next-token cross-entropy over a [B, P] batch (full-precision fwd)."""
+    b, p = token_ids.shape
+    h = params["embed"][token_ids]
+    positions = jnp.broadcast_to(jnp.arange(p)[None, :], (b, p))
+    causal = jnp.tril(jnp.ones((p, p), bool))
+    for l in range(cfg.n_layers):
+        pl_params = _layer_params(params, l)
+        x = rmsnorm(h, pl_params["ln1"])
+        q_c, q_r, c_kv, k_r = _project_qkv(pl_params, x, positions, cfg)
+        s = jnp.einsum("bihc,bjc->bhij", q_c, c_kv) + jnp.einsum(
+            "bihr,bjr->bhij", q_r, k_r
+        )
+        s = jnp.where(causal[None, None], s * cfg.sm_scale, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhij,bjc->bihc", pr, c_kv)
+        h = h + o.reshape(b, p, cfg.n_heads * cfg.d_c) @ pl_params["w_o"]
+        h = h + mlp(pl_params, rmsnorm(h, pl_params["ln2"]))
+    h = rmsnorm(h, params["ln_f"])
+    logits = h @ params["embed"].T
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = token_ids[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_decode_fn(cfg: ModelConfig, mode: str):
+    """Return a jit-able decode_step closed over cfg/mode."""
+    def fn(params, token_ids, positions, *caches):
+        return decode_step(params, token_ids, positions, caches, cfg, mode)
+    return fn
+
+
+def make_prefill_fn(cfg: ModelConfig, mode: str):
+    def fn(params, token_ids, prompt_lens):
+        return prefill(params, token_ids, prompt_lens, cfg, mode)
+    return fn
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, seq: int, mode: str):
+    """Cache input shapes for a (batch, seq) bucket."""
+    l = cfg.n_layers
+    if mode == "fp8":
+        return [
+            ("k_c_q", (l, batch, seq, cfg.d_c)),
+            ("k_r_al", (l, batch, seq, cfg.d_r)),
+            ("sigma_k", (l, batch, seq, 1)),
+        ]
+    return [
+        ("k_c", (l, batch, seq, cfg.d_c)),
+        ("k_r", (l, batch, seq, cfg.d_r)),
+    ]

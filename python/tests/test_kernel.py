@@ -1,0 +1,220 @@
+"""Kernel-vs-oracle correctness — the CORE correctness signal of L1.
+
+Sweeps shapes (heads, dims, cache length, MTP) with hypothesis and asserts the
+Pallas kernels match the pure-jnp references:
+  * snapmla_decode  vs  ref.snapmla_ref      (tight — same quantized math)
+  * snapmla_decode  vs  ref.mla_attention_ref (loose — bounded quant error)
+  * flashmla_decode vs  ref.mla_attention_bf16_ref
+plus structural properties: masking, MTP causality, lse, vmap over batch.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import quant, ref
+from compile.kernels.flashmla import flashmla_decode
+from compile.kernels.quant import BLOCK_N
+from compile.kernels.snapmla import snapmla_decode
+
+
+def make_inputs(seed, t_q, n_heads, d_c, d_r, n, rope_scale=30.0, content_scale=2.0):
+    """Paper-like operand statistics: the *cache* RoPE part spans a wide range
+    (Fig. 3a) while query scales are chosen so restored logits stay O(1-10) —
+    real attention logits are moderate; blowing them up makes softmax one-hot
+    and argmax-flip noise dominates any quantization comparison."""
+    rng = np.random.default_rng(seed)
+    q_rope_scale = 8.0 / np.sqrt(d_r) / np.sqrt(rope_scale)
+    q_c = jnp.asarray(rng.normal(size=(t_q, n_heads, d_c)) * 1.0, jnp.float32)
+    q_r = jnp.asarray(rng.normal(size=(t_q, n_heads, d_r)) * q_rope_scale, jnp.float32)
+    k_c = jnp.asarray(rng.normal(size=(n, d_c)) * content_scale, jnp.float32)
+    k_r = jnp.asarray(rng.normal(size=(n, d_r)) * rope_scale, jnp.float32)
+    return q_c, q_r, k_c, k_r
+
+
+def run_snapmla(q_c, q_r, k_c, k_r, length, sm_scale):
+    q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+    k_c_q, k_r_al, sigma_k = quant.fused_k_append(k_c, k_r)
+    o, lse = snapmla_decode(
+        q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k,
+        jnp.asarray([length], jnp.int32), sm_scale,
+    )
+    o_ref, lse_ref = ref.snapmla_ref(
+        q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k,
+        jnp.asarray(length, jnp.int32), sm_scale,
+    )
+    return (o, lse), (o_ref, lse_ref)
+
+
+class TestSnapMLAKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        t_q=st.sampled_from([1, 2]),
+        n_heads=st.sampled_from([1, 4, 8]),
+        d_c=st.sampled_from([64, 128]),
+        d_r=st.sampled_from([16, 32, 64]),
+        blocks=st.integers(1, 4),
+        tail=st.integers(0, BLOCK_N - 1),
+    )
+    def test_matches_pipeline_oracle(self, seed, t_q, n_heads, d_c, d_r, blocks, tail):
+        n = blocks * BLOCK_N
+        length = max(n - tail, t_q)
+        q_c, q_r, k_c, k_r = make_inputs(seed, t_q, n_heads, d_c, d_r, n)
+        sm = 1.0 / np.sqrt(d_c + d_r)
+        (o, lse), (o_ref, lse_ref) = run_snapmla(q_c, q_r, k_c, k_r, length, sm)
+        # online (running-max) vs global-max formulations agree up to f32
+        # re-association noise in the exp/rescale chain
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), blocks=st.integers(1, 3))
+    def test_bounded_quant_error_vs_fp32(self, seed, blocks):
+        t_q, n_heads, d_c, d_r = 1, 8, 128, 32
+        n = blocks * BLOCK_N
+        length = n
+        q_c, q_r, k_c, k_r = make_inputs(seed, t_q, n_heads, d_c, d_r, n)
+        sm = 1.0 / np.sqrt(d_c + d_r)
+        (o, _), _ = run_snapmla(q_c, q_r, k_c, k_r, length, sm)
+        o_fp, _ = ref.mla_attention_ref(q_c, q_r, k_c, k_r, jnp.asarray(length), sm)
+        rel = float(jnp.linalg.norm(o - o_fp) / jnp.linalg.norm(o_fp))
+        assert rel < 0.08, f"quantization error too large: {rel}"
+
+    def test_mask_ignores_padding(self):
+        # Garbage beyond `length` must not change the output.
+        q_c, q_r, k_c, k_r = make_inputs(7, 1, 4, 64, 32, 2 * BLOCK_N)
+        length = BLOCK_N + 7
+        sm = 0.1
+        (o1, lse1), _ = run_snapmla(q_c, q_r, k_c, k_r, length, sm)
+        k_c2 = k_c.at[length:].set(1e4)
+        k_r2 = k_r.at[length:].set(-1e4)
+        (o2, lse2), _ = run_snapmla(q_c, q_r, k_c2, k_r2, length, sm)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-3, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(lse1), np.asarray(lse2), rtol=2e-3)
+
+    def test_mtp_causality(self):
+        # With T=2 queries at positions L-2, L-1: token 0's output must equal
+        # the T=1 output computed at length L-1 (it cannot see token 1).
+        t_q, n_heads, d_c, d_r, n = 2, 4, 64, 32, 2 * BLOCK_N
+        q_c, q_r, k_c, k_r = make_inputs(11, t_q, n_heads, d_c, d_r, n)
+        length = BLOCK_N + 20
+        sm = 0.1
+        (o2, _), _ = run_snapmla(q_c, q_r, k_c, k_r, length, sm)
+        (o1, _), _ = run_snapmla(
+            q_c[:1], q_r[:1], k_c, k_r, length - 1, sm
+        )
+        np.testing.assert_allclose(
+            np.asarray(o2[0]), np.asarray(o1[0]), rtol=2e-4, atol=2e-5
+        )
+
+    def test_single_token_attends_to_itself(self):
+        # length == t_q == 1: softmax over exactly one key → o = that V token.
+        q_c, q_r, k_c, k_r = make_inputs(13, 1, 2, 64, 16, BLOCK_N)
+        (o, _), _ = run_snapmla(q_c, q_r, k_c, k_r, 1, 0.1)
+        k_c_q, _, sigma_k = quant.fused_k_append(k_c, k_r)
+        v0 = np.asarray(k_c_q[0] * sigma_k[0, 0])
+        for h in range(2):
+            np.testing.assert_allclose(np.asarray(o[0, h]), v0, rtol=2e-3, atol=1e-4)
+
+    def test_uniform_keys_give_mean_value(self):
+        # Identical keys → uniform attention → o = mean of V rows.
+        n = 2 * BLOCK_N
+        k_c = jnp.ones((n, 64), jnp.float32) * 2.0
+        k_r = jnp.ones((n, 16), jnp.float32)
+        q_c = jnp.asarray(np.random.default_rng(5).normal(size=(1, 2, 64)), jnp.float32)
+        q_r = jnp.zeros((1, 2, 16), jnp.float32)
+        (o, _), _ = run_snapmla(q_c, q_r, k_c, k_r, n, 0.05)
+        np.testing.assert_allclose(np.asarray(o), 2.0, rtol=2e-3)
+
+    def test_lse_matches_direct_logsumexp(self):
+        q_c, q_r, k_c, k_r = make_inputs(17, 1, 4, 64, 32, BLOCK_N)
+        length, sm = BLOCK_N - 5, 0.11
+        q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+        k_c_q, k_r_al, sigma_k = quant.fused_k_append(k_c, k_r)
+        _, lse = snapmla_decode(
+            q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k,
+            jnp.asarray([length], jnp.int32), sm,
+        )
+        s = jnp.einsum("thc,nc->thn", q_c_q, k_c_q) + jnp.einsum(
+            "thr,nr->thn", q_r_al, k_r_al
+        )
+        s = s * sigma_q * sigma_k[:, 0][None, None, :] * sm
+        s = s[..., :length]
+        want = jax.scipy.special.logsumexp(s, axis=-1)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_vmap_over_batch(self):
+        # The L2 model vmaps the kernel over the batch axis.
+        b, t_q, n_heads, d_c, d_r, n = 3, 1, 4, 64, 32, BLOCK_N * 2
+        rng = np.random.default_rng(23)
+        q_c = jnp.asarray(rng.normal(size=(b, t_q, n_heads, d_c)), jnp.float32)
+        q_r = jnp.asarray(rng.normal(size=(b, t_q, n_heads, d_r)) * 20, jnp.float32)
+        k_c = jnp.asarray(rng.normal(size=(b, n, d_c)), jnp.float32)
+        k_r = jnp.asarray(rng.normal(size=(b, n, d_r)) * 20, jnp.float32)
+        lengths = jnp.asarray([[70], [128], [1]], jnp.int32)
+        sm = 0.1
+
+        q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+        k_c_q, k_r_al, sigma_k = quant.fused_k_append(k_c, k_r)
+        fn = lambda a, b_, c, d, e, f, g: snapmla_decode(a, b_, c, d, e, f, g, sm)
+        o_b, lse_b = jax.vmap(fn)(q_c_q, q_r_al, sigma_q, k_c_q, k_r_al, sigma_k, lengths)
+        for i in range(b):
+            o_i, lse_i = snapmla_decode(
+                q_c_q[i], q_r_al[i], sigma_q[i], k_c_q[i], k_r_al[i], sigma_k[i],
+                lengths[i], sm,
+            )
+            np.testing.assert_allclose(np.asarray(o_b[i]), np.asarray(o_i), rtol=1e-5)
+            np.testing.assert_allclose(np.asarray(lse_b[i]), np.asarray(lse_i), rtol=1e-5)
+
+
+class TestFlashMLABaseline:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        t_q=st.sampled_from([1, 2]),
+        n_heads=st.sampled_from([1, 4]),
+        blocks=st.integers(1, 3),
+        tail=st.integers(0, BLOCK_N - 1),
+    )
+    def test_matches_bf16_oracle(self, seed, t_q, n_heads, blocks, tail):
+        d_c, d_r = 64, 32
+        n = blocks * BLOCK_N
+        length = max(n - tail, t_q)
+        q_c, q_r, k_c, k_r = make_inputs(seed, t_q, n_heads, d_c, d_r, n)
+        sm = 1.0 / np.sqrt(d_c + d_r)
+        o, lse = flashmla_decode(
+            q_c, q_r, k_c, k_r, jnp.asarray([length], jnp.int32), sm
+        )
+        o_ref, lse_ref = ref.mla_attention_bf16_ref(
+            q_c, q_r, k_c, k_r, jnp.asarray(length), sm
+        )
+        # bf16 operand rounding inside the blockwise kernel vs the global
+        # oracle: small accumulated differences are expected.
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=3e-2, atol=6e-3)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref), rtol=1e-2, atol=2e-2)
+
+    def test_baseline_close_to_fp32(self):
+        q_c, q_r, k_c, k_r = make_inputs(3, 1, 8, 128, 32, 2 * BLOCK_N)
+        sm = 1.0 / np.sqrt(160)
+        length = 2 * BLOCK_N
+        o, _ = flashmla_decode(q_c, q_r, k_c, k_r, jnp.asarray([length], jnp.int32), sm)
+        o_fp, _ = ref.mla_attention_ref(q_c, q_r, k_c, k_r, jnp.asarray(length), sm)
+        rel = float(jnp.linalg.norm(o - o_fp) / jnp.linalg.norm(o_fp))
+        assert rel < 0.02, rel
+
+    def test_snapmla_error_comparable_to_bf16_on_content(self):
+        # The paper's Table 1 claim in kernel form: SnapMLA's output error vs
+        # fp32 is the same order of magnitude as the BF16 baseline's.
+        q_c, q_r, k_c, k_r = make_inputs(29, 1, 8, 128, 64, 4 * BLOCK_N)
+        sm = 1.0 / np.sqrt(192)
+        length = 4 * BLOCK_N
+        o_fp, _ = ref.mla_attention_ref(q_c, q_r, k_c, k_r, jnp.asarray(length), sm)
+        o_bf, _ = flashmla_decode(q_c, q_r, k_c, k_r, jnp.asarray([length], jnp.int32), sm)
+        (o_q, _), _ = run_snapmla(q_c, q_r, k_c, k_r, length, sm)
+        err_bf = float(jnp.linalg.norm(o_bf - o_fp) / jnp.linalg.norm(o_fp))
+        err_q = float(jnp.linalg.norm(o_q - o_fp) / jnp.linalg.norm(o_fp))
+        assert err_q < 20 * err_bf and err_q < 0.08, (err_bf, err_q)

@@ -1,0 +1,181 @@
+"""L2 model tests: shapes, decode/prefill consistency, FP8-vs-BF16 parity.
+
+Uses a tiny config so the interpret-mode kernels stay fast; the full SMALL
+config is exercised once for shape/param accounting.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import corpus, model
+from compile.model import SMALL, ModelConfig
+
+TINY = ModelConfig(vocab=256, d_model=64, n_layers=2, n_heads=2, d_c=64, d_r=16,
+                   d_ffn=128)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return model.init_params(jax.random.PRNGKey(0), TINY)
+
+
+def make_prompt_batch(b, p, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(2, vocab, size=(b, p)), jnp.int32)
+
+
+class TestShapes:
+    def test_param_count_small_config(self):
+        # the serving model is ~28-35M params (DESIGN.md "small")
+        n = SMALL.param_count()
+        assert 20e6 < n < 60e6, n
+
+    def test_param_shapes_match_init(self, tiny_params):
+        shapes = dict(model.param_shapes(TINY))
+        assert set(shapes) == set(tiny_params)
+        for k, v in tiny_params.items():
+            assert tuple(v.shape) == tuple(shapes[k]), k
+
+    @pytest.mark.parametrize("mode", ["fp8", "bf16"])
+    def test_decode_shapes(self, tiny_params, mode):
+        b, s = 2, 128
+        caches = [jnp.zeros(sh) for _, sh in model.cache_shapes(TINY, b, s, mode)]
+        toks = make_prompt_batch(b, 1, TINY.vocab)
+        out = model.make_decode_fn(TINY, mode)(
+            tiny_params, toks, jnp.asarray([3, 64], jnp.int32), *caches
+        )
+        logits = out[0]
+        assert logits.shape == (b, 1, TINY.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        # new cache entries: [L, B, T, *]
+        assert out[1].shape == (TINY.n_layers, b, 1, TINY.d_c)
+        assert out[2].shape == (TINY.n_layers, b, 1, TINY.d_r)
+        if mode == "fp8":
+            assert out[3].shape == (TINY.n_layers, b, 1, 1)
+
+    @pytest.mark.parametrize("mode", ["fp8", "bf16"])
+    def test_prefill_shapes(self, tiny_params, mode):
+        b, p = 2, 16
+        toks = make_prompt_batch(b, p, TINY.vocab)
+        out = model.make_prefill_fn(TINY, mode)(
+            tiny_params, toks, jnp.asarray([16, 9], jnp.int32)
+        )
+        assert out[0].shape == (b, TINY.vocab)
+        assert out[1].shape == (TINY.n_layers, b, p, TINY.d_c)
+
+
+class TestConsistency:
+    """Decode over a prefilled cache must equal one-shot prefill logits."""
+
+    @pytest.mark.parametrize("mode", ["bf16", "fp8"])
+    def test_teacher_forced_continuation(self, tiny_params, mode):
+        b, p_bucket, s = 2, 24, 128
+        plens = jnp.asarray([16, 10], jnp.int32)
+        toks = make_prompt_batch(b, p_bucket, TINY.vocab, seed=3)
+        pf = model.make_prefill_fn(TINY, mode)
+        df = model.make_decode_fn(TINY, mode)
+
+        full = pf(tiny_params, toks, plens + 1)  # prompt extended by 1 token
+        part = pf(tiny_params, toks, plens)
+        caches = []
+        for (name, shape), ent in zip(
+            model.cache_shapes(TINY, b, s, mode), part[1:]
+        ):
+            caches.append(jnp.zeros(shape, jnp.float32).at[:, :, :p_bucket].set(ent))
+        nxt = jnp.stack([toks[i, plens[i]] for i in range(b)])[:, None]
+        got = df(tiny_params, nxt.astype(jnp.int32), plens, *caches)[0][:, 0]
+        want = full[0]
+        # fp8 tolerates quantized-cache noise; bf16 is tight
+        tol = 5e-2 if mode == "fp8" else 5e-3
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=tol,
+                                   rtol=tol)
+
+    def test_cache_entries_quantized_grid(self, tiny_params):
+        # fp8 prefill entries must sit exactly on the E4M3 grid
+        from compile.kernels import quant
+        toks = make_prompt_batch(2, 8, TINY.vocab, seed=5)
+        out = model.make_prefill_fn(TINY, "fp8")(
+            tiny_params, toks, jnp.asarray([8, 8], jnp.int32)
+        )
+        k_c_q = out[1]
+        np.testing.assert_array_equal(
+            np.asarray(quant.e4m3_round(k_c_q)), np.asarray(k_c_q)
+        )
+
+    def test_positions_isolated_between_sequences(self, tiny_params):
+        # Changing sequence 1's cache contents must not affect sequence 0.
+        b, s, mode = 2, 128, "bf16"
+        caches = [jnp.zeros(sh) for _, sh in model.cache_shapes(TINY, b, s, mode)]
+        toks = make_prompt_batch(b, 1, TINY.vocab, seed=7)
+        pos = jnp.asarray([5, 40], jnp.int32)
+        df = model.make_decode_fn(TINY, mode)
+        out1 = df(tiny_params, toks, pos, *caches)[0][0]
+        caches2 = [c.at[:, 1].set(3.3) for c in caches]
+        out2 = df(tiny_params, toks, pos, *caches2)[0][0]
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+class TestParity:
+    """Table-1 flavour: FP8 and BF16 pipelines agree closely on the same
+    weights (the quality-parity claim at logit level)."""
+
+    def test_decode_logit_parity(self, tiny_params):
+        b, p_bucket, s = 2, 16, 128
+        plens = jnp.asarray([16, 12], jnp.int32)
+        toks = make_prompt_batch(b, p_bucket, TINY.vocab, seed=11)
+        outs = {}
+        for mode in ("fp8", "bf16"):
+            part = model.make_prefill_fn(TINY, mode)(tiny_params, toks, plens)
+            caches = []
+            for (name, shape), ent in zip(
+                model.cache_shapes(TINY, b, s, mode), part[1:]
+            ):
+                caches.append(
+                    jnp.zeros(shape, jnp.float32).at[:, :, :p_bucket].set(ent)
+                )
+            nxt = jnp.argmax(part[0], -1)[:, None].astype(jnp.int32)
+            outs[mode] = model.make_decode_fn(TINY, mode)(
+                tiny_params, nxt, plens, *caches
+            )[0][:, 0]
+        a, b_ = np.asarray(outs["fp8"]), np.asarray(outs["bf16"])
+        # logits correlate near-perfectly; top-1 agrees
+        corr = np.corrcoef(a.ravel(), b_.ravel())[0, 1]
+        assert corr > 0.99, corr
+        assert (a.argmax(-1) == b_.argmax(-1)).all()
+
+
+class TestCorpus:
+    def test_sequences_have_bos_eos(self):
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            seq = corpus.gen_sequence(rng, 4096, 64)
+            assert seq[0] == corpus.BOS and seq[-1] == corpus.EOS
+            assert len(seq) <= 66
+
+    def test_batch_shape_and_range(self):
+        rng = np.random.default_rng(1)
+        b = corpus.batch(rng, 4096, 4, 64)
+        assert b.shape == (4, 64)
+        assert b.min() >= 0 and b.max() < 4096
+
+    def test_prompt_length(self):
+        rng = np.random.default_rng(2)
+        for ln in (4, 16, 60):
+            p = corpus.prompt(rng, 4096, ln)
+            assert len(p) == ln
+
+    def test_loss_decreases_with_training_signal(self):
+        # single gradient step on structured data lowers loss on that batch
+        import functools
+        params = model.init_params(jax.random.PRNGKey(1), TINY)
+        rng = np.random.default_rng(3)
+        toks = jnp.asarray(corpus.batch(rng, TINY.vocab, 4, 32))
+        loss = functools.partial(model.lm_loss, cfg=TINY)
+        l0 = float(loss(params, toks))
+        g = jax.grad(loss)(params, toks)
+        params2 = jax.tree.map(lambda p, gi: p - 0.5 * gi, params, g)
+        l1 = float(loss(params2, toks))
+        assert l1 < l0, (l0, l1)

@@ -1,0 +1,198 @@
+"""Tests for the E4M3 fake-quantization library (python/compile/kernels/quant.py).
+
+The load-bearing property: `e4m3_round` (pure-arithmetic, HLO-portable) must be
+bit-identical to a real `ml_dtypes.float8_e4m3fn` round-trip, because the rust
+KV cache stores true u8 E4M3 encodings produced by the same grid definition.
+"""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import quant
+
+
+def ml_dtypes_oracle(x: np.ndarray) -> np.ndarray:
+    return x.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+
+
+def assert_matches_oracle(x: np.ndarray):
+    got = np.asarray(quant.e4m3_round(jnp.asarray(x, jnp.float32)))
+    want = ml_dtypes_oracle(np.asarray(x, np.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+class TestE4M3Round:
+    def test_exact_grid_points(self):
+        # Every representable E4M3 value must be a fixed point.
+        all_bytes = np.arange(256, dtype=np.uint8)
+        vals = all_bytes.view(ml_dtypes.float8_e4m3fn).astype(np.float32)
+        finite = vals[np.isfinite(vals)]
+        assert_matches_oracle(finite)
+
+    def test_midpoints_round_to_even(self):
+        # 1.0 has step 1/8: midpoint 1.0625 between 1.0 and 1.125 → 1.0 (even).
+        assert_matches_oracle(np.array([1.0625, 1.1875, 17.0, 19.0]))
+
+    def test_saturation(self):
+        # Deliberate divergence from ml_dtypes: e4m3fn has no inf, so casts of
+        # out-of-range values become NaN there; our quantizers always divide by
+        # sigma = max|x|/448 first, so inputs stay in range by construction and
+        # we choose saturating semantics for safety at the boundary.
+        got = np.asarray(quant.e4m3_round(jnp.asarray([1e9, -1e9, 448.0, 460.0])))
+        np.testing.assert_array_equal(got, [448.0, -448.0, 448.0, 448.0])
+
+    def test_subnormals(self):
+        # Subnormal step is 2^-9; the smallest nonzero magnitude is 2^-9.
+        xs = np.array([2.0**-9, 2.0**-10, 1.4 * 2.0**-9, 2.0**-6 - 2.0**-10])
+        assert_matches_oracle(xs)
+
+    def test_zero_and_sign(self):
+        got = np.asarray(quant.e4m3_round(jnp.asarray([0.0, -0.0, -1.0, 1.0])))
+        np.testing.assert_array_equal(got, [0.0, 0.0, -1.0, 1.0])
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.lists(
+            st.floats(
+                min_value=-448.0, max_value=448.0, allow_nan=False, width=32
+            ),
+            min_size=1,
+            max_size=64,
+        )
+    )
+    def test_matches_ml_dtypes_uniform(self, xs):
+        assert_matches_oracle(np.array(xs, np.float32))
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        st.lists(
+            st.floats(min_value=-20.0, max_value=8.75, allow_nan=False, width=32).map(
+                lambda e: float(np.exp2(e))
+            ),
+            min_size=1,
+            max_size=32,
+        ),
+        st.booleans(),
+    )
+    def test_matches_ml_dtypes_log_uniform(self, xs, neg):
+        x = np.array(xs, np.float32)
+        assert_matches_oracle(-x if neg else x)
+
+    def test_relative_error_bound_normals(self):
+        # E4M3 has 3 mantissa bits → max relative error 2^-4 in the normal range.
+        rng = np.random.default_rng(0)
+        x = np.exp(rng.uniform(np.log(2.0**-6), np.log(448.0), size=4096)).astype(
+            np.float32
+        )
+        q = np.asarray(quant.e4m3_round(jnp.asarray(x)))
+        rel = np.abs(q - x) / x
+        assert rel.max() <= 2.0**-4 + 1e-7
+
+
+class TestQuantizers:
+    def test_per_token_roundtrip_error(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(32, 128)) * 10, jnp.float32)
+        xq, s = quant.quant_per_token(x)
+        assert s.shape == (32, 1)
+        rel = jnp.abs(xq * s - x) / (jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+        assert float(jnp.max(rel)) <= 2.0**-4 + 1e-6
+
+    def test_per_token_scale_is_max_over_448(self):
+        x = jnp.asarray([[1.0, -448.0, 4.0]], jnp.float32)
+        _, s = quant.quant_per_token(x)
+        np.testing.assert_allclose(np.asarray(s), [[1.0]])
+
+    def test_zero_rows_get_eps_scale(self):
+        x = jnp.zeros((4, 16), jnp.float32)
+        xq, s = quant.quant_per_token(x)
+        assert float(jnp.min(s)) == pytest.approx(quant.SCALE_EPS)
+        np.testing.assert_array_equal(np.asarray(xq), 0.0)
+
+    def test_per_tensor_static_and_dynamic(self):
+        x = jnp.asarray(np.linspace(-5, 5, 64, dtype=np.float32).reshape(8, 8))
+        xq_s, s_s = quant.quant_per_tensor(x, scale=1.0)
+        assert float(s_s) == 1.0
+        xq_d, s_d = quant.quant_per_tensor(x)
+        assert float(s_d) == pytest.approx(5.0 / 448.0)
+        # dynamic uses the range better than static on small-magnitude data
+        err_s = float(jnp.mean((xq_s * s_s - x) ** 2))
+        err_d = float(jnp.mean((xq_d * s_d - x) ** 2))
+        assert err_d <= err_s
+
+    def test_per_channel_shapes(self):
+        x = jnp.asarray(np.random.default_rng(2).normal(size=(16, 8)), jnp.float32)
+        xq, s = quant.quant_per_channel(x, axis=0)
+        assert s.shape == (1, 8)
+
+    def test_per_block_roundtrip(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        xq, s = quant.quant_per_block(x, 64, 64)
+        assert s.shape == (2, 2)
+        xd = quant.dequant_per_block(xq, s, 64, 64)
+        # blockwise max rel error bound
+        assert float(jnp.max(jnp.abs(xd - x))) <= float(jnp.max(jnp.abs(x))) * 2.0**-4
+
+    def test_per_block_outlier_containment(self):
+        # an outlier in one block must not degrade other blocks
+        x = np.ones((128, 128), np.float32)
+        x[0, 0] = 400.0
+        xq, s = quant.quant_per_block(jnp.asarray(x), 64, 64)
+        xd = np.asarray(quant.dequant_per_block(xq, s, 64, 64))
+        clean = xd[64:, 64:]
+        np.testing.assert_allclose(clean, 1.0, rtol=2.0**-4)
+
+
+class TestFusedOps:
+    """Fused token-preparation ops (§3.3.1) and Key Step 1 domain alignment."""
+
+    def _rand(self, shape, scale=1.0, seed=0):
+        return jnp.asarray(
+            np.random.default_rng(seed).normal(size=shape) * scale, jnp.float32
+        )
+
+    def test_q_quant_alignment_identity(self):
+        # Restoring the aligned RoPE with sigma_q must give back bf16(q_r):
+        # (bf16(q_r)/sigma) * sigma == bf16(q_r) up to f32 rounding.
+        q_c = self._rand((2, 8, 128), 2.0, 1)
+        q_r = self._rand((2, 8, 32), 100.0, 2)
+        q_c_q, q_r_al, sigma_q = quant.fused_q_quant(q_c, q_r)
+        np.testing.assert_allclose(
+            np.asarray(q_r_al * sigma_q),
+            np.asarray(quant.bf16_round(q_r)),
+            rtol=1e-6,
+        )
+        # content is on the E4M3 grid
+        np.testing.assert_array_equal(
+            np.asarray(quant.e4m3_round(q_c_q)), np.asarray(q_c_q)
+        )
+
+    def test_k_append_then_fetch_dequant(self):
+        c_kv = self._rand((64, 128), 3.0, 3)
+        k_r = self._rand((64, 32), 50.0, 4)
+        k_c_q, k_r_al, sigma_k = quant.fused_k_append(c_kv, k_r)
+        k_c, k_r_back = quant.fused_fetch_dequant(k_c_q, k_r_al, sigma_k)
+        # content restores within per-token quantization error
+        amax = np.asarray(jnp.max(jnp.abs(c_kv), axis=-1, keepdims=True))
+        assert np.max(np.abs(np.asarray(k_c - c_kv)) / amax) <= 2.0**-4 + 1e-6
+        # RoPE restores exactly to its bf16 rounding (high precision preserved)
+        np.testing.assert_allclose(
+            np.asarray(k_r_back), np.asarray(quant.bf16_round(k_r)), rtol=1e-6
+        )
+
+    def test_rope_wide_range_survives_alignment(self):
+        # RoPE spans +-1e3 (paper Fig. 3a); with RoPE-aware handling the
+        # restored values keep bf16 relative accuracy even though the content
+        # scale is tiny.
+        k_r = jnp.asarray([[1000.0, -950.0, 0.5, 2.0]], jnp.float32)
+        c_kv = jnp.asarray([[0.01] * 8], jnp.float32)  # tiny content → tiny scale
+        _, k_r_al, sigma_k = quant.fused_k_append(c_kv, k_r)
+        restored = np.asarray(k_r_al * sigma_k)
+        np.testing.assert_allclose(
+            restored, np.asarray(quant.bf16_round(k_r)), rtol=1e-6
+        )

@@ -1,0 +1,106 @@
+//! Criterion-style micro/macro benchmark harness (criterion itself is not in
+//! the offline crate set). Used by all `cargo bench` targets (`harness =
+//! false` binaries under benches/).
+//!
+//! Provides warmup + repeated sampling with summary statistics, and a tiny
+//! report-file helper so every bench drops machine-readable JSON next to the
+//! human-readable table (EXPERIMENTS.md links both).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 7 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench { warmup: 1, samples: 3 }
+    }
+
+    /// Time `f` (one sample = one call).
+    pub fn measure<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut s = Summary::new();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            s.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement {
+            name: name.to_string(),
+            samples: self.samples,
+            mean_s: s.mean(),
+            median_s: s.median(),
+            std_s: s.std(),
+            min_s: s.min(),
+        }
+    }
+}
+
+/// Write a bench report JSON under target/bench-reports/.
+pub fn write_report(bench_name: &str, payload: Json) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("target/bench-reports");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{bench_name}.json"));
+    if let Err(e) = std::fs::write(&path, payload.to_string_pretty()) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    } else {
+        println!("[report] {}", path.display());
+    }
+}
+
+/// Standard bench CLI: `--quick` (fewer samples) is honored everywhere.
+pub fn bench_from_args(args: &crate::util::cli::Args) -> Bench {
+    if args.has("quick") {
+        Bench::quick()
+    } else {
+        Bench::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_monotonic_work() {
+        let b = Bench { warmup: 1, samples: 3 };
+        let m = b.measure("spin", || {
+            let mut x = 0u64;
+            for i in 0..100_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s);
+        assert_eq!(m.samples, 3);
+    }
+}

@@ -1,0 +1,52 @@
+//! Collective cost model (ring all-reduce over NVLink) for TP layouts.
+
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveSpec {
+    /// per-GPU link bandwidth, bytes/s
+    pub link_bw: f64,
+    /// per-collective launch/sync latency, seconds
+    pub latency_s: f64,
+}
+
+impl CollectiveSpec {
+    pub fn nvlink() -> CollectiveSpec {
+        CollectiveSpec { link_bw: 450.0e9, latency_s: 5.0e-6 }
+    }
+}
+
+/// Ring all-reduce time: 2·(n-1)/n · bytes / bw + latency.
+pub fn allreduce_time_s(spec: &CollectiveSpec, bytes: f64, ranks: usize) -> f64 {
+    if ranks <= 1 {
+        return 0.0;
+    }
+    let n = ranks as f64;
+    2.0 * (n - 1.0) / n * bytes / spec.link_bw + spec.latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(allreduce_time_s(&CollectiveSpec::nvlink(), 1e9, 1), 0.0);
+    }
+
+    #[test]
+    fn scales_with_bytes_and_saturates_with_ranks() {
+        let s = CollectiveSpec::nvlink();
+        let t2 = allreduce_time_s(&s, 1e6, 2);
+        let t8 = allreduce_time_s(&s, 1e6, 8);
+        assert!(t8 > t2);
+        // ring factor approaches 2x as n → ∞: t8/t2 < 2
+        assert!(t8 / t2 < 2.0);
+        let tbig = allreduce_time_s(&s, 2e6, 8);
+        assert!(tbig > t8 && tbig < 2.0 * t8);
+    }
+
+    #[test]
+    fn latency_floor() {
+        let s = CollectiveSpec::nvlink();
+        assert!(allreduce_time_s(&s, 8.0, 8) >= s.latency_s);
+    }
+}

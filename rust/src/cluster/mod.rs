@@ -1,0 +1,13 @@
+//! Cluster topology + collective cost model for the DP/TP study (Fig. 1).
+//!
+//! The real 8-GPU node is simulated (DESIGN.md §Substitutions): `topology`
+//! enumerates and validates (DP, TP) layouts and accounts per-rank memory;
+//! `collective` prices the TP all-reduce. The Fig. 1 bench combines these
+//! with `perfmodel` to regenerate the paper's throughput comparison; the
+//! serving examples use real multi-`Server` DP via `coordinator::Router`.
+
+pub mod collective;
+pub mod topology;
+
+pub use collective::{allreduce_time_s, CollectiveSpec};
+pub use topology::{NodeTopology, RankMemory};

@@ -1,0 +1,107 @@
+//! Node topology: (DP, TP) layouts over an 8-GPU node and per-rank memory
+//! accounting (weights + KV budget), feeding the Fig. 1 batch-capacity model.
+
+use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+
+#[derive(Clone, Copy, Debug)]
+pub struct NodeTopology {
+    pub gpus: usize,
+    pub config: DeploymentConfig,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RankMemory {
+    pub weight_bytes: f64,
+    pub kv_budget_bytes: f64,
+    pub reserve_bytes: f64,
+}
+
+impl NodeTopology {
+    pub fn new(gpus: usize, dp: usize, tp: usize) -> anyhow::Result<NodeTopology> {
+        anyhow::ensure!(dp * tp == gpus, "DP{dp} x TP{tp} != {gpus} GPUs");
+        anyhow::ensure!(dp >= 1 && tp >= 1);
+        Ok(NodeTopology { gpus, config: DeploymentConfig { dp, tp } })
+    }
+
+    /// All valid layouts of an 8-GPU node.
+    pub fn enumerate(gpus: usize) -> Vec<NodeTopology> {
+        (1..=gpus)
+            .filter(|dp| gpus % dp == 0)
+            .map(|dp| NodeTopology::new(gpus, dp, gpus / dp).unwrap())
+            .collect()
+    }
+
+    /// Per-GPU memory budget under this layout.
+    pub fn rank_memory(&self, gpu: &GpuSpec, model: &ModelSpec) -> RankMemory {
+        let reserve = 8e9;
+        let weight = model.total_params / self.gpus as f64;
+        RankMemory {
+            weight_bytes: weight,
+            kv_budget_bytes: (gpu.hbm_bytes - weight - reserve).max(0.0),
+            reserve_bytes: reserve,
+        }
+    }
+
+    /// Max concurrent sequences at `context` under a cache `kind`.
+    /// The MLA latent cache is replicated across TP ranks (shared by all
+    /// heads), so capacity scales with DP only.
+    pub fn max_sequences(
+        &self,
+        gpu: &GpuSpec,
+        model: &ModelSpec,
+        context: usize,
+        kind: KernelKind,
+    ) -> usize {
+        let mem = self.rank_memory(gpu, model);
+        let per_seq = model.kv_bytes_per_token(kind) * context as f64;
+        let per_rank = (mem.kv_budget_bytes / per_seq).floor() as usize;
+        per_rank * self.config.dp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_layouts() {
+        assert!(NodeTopology::new(8, 4, 2).is_ok());
+        assert!(NodeTopology::new(8, 3, 2).is_err());
+        assert_eq!(NodeTopology::enumerate(8).len(), 4); // 1,2,4,8 DP
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let g = GpuSpec::h20();
+        let m = ModelSpec::deepseek_v31();
+        let t = NodeTopology::new(8, 1, 8).unwrap();
+        let mem = t.rank_memory(&g, &m);
+        // 671e9 / 8 ≈ 84 GB weights per GPU, leaving ~49 GB of KV on a 141 GB part
+        assert!((mem.weight_bytes - 83.9e9).abs() < 1e9);
+        assert!(mem.kv_budget_bytes > 40e9 && mem.kv_budget_bytes < 60e9);
+    }
+
+    #[test]
+    fn fp8_cache_doubles_capacity() {
+        let g = GpuSpec::h20();
+        let m = ModelSpec::deepseek_v31();
+        for t in NodeTopology::enumerate(8) {
+            let c8 = t.max_sequences(&g, &m, 65_536, KernelKind::SnapMlaFp8);
+            let c16 = t.max_sequences(&g, &m, 65_536, KernelKind::FlashMlaBf16);
+            assert!(c8 as f64 >= 1.6 * c16.max(1) as f64, "{:?}", t.config);
+        }
+    }
+
+    #[test]
+    fn dp_scales_total_capacity() {
+        let g = GpuSpec::h20();
+        let m = ModelSpec::deepseek_v31();
+        let dp8 = NodeTopology::new(8, 8, 1).unwrap();
+        let tp8 = NodeTopology::new(8, 1, 8).unwrap();
+        // DP8 holds 8 independent KV pools; TP8 replicates the cache
+        assert!(
+            dp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8)
+                > 4 * tp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8)
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Serving metrics: per-request latency breakdown and server aggregates.
+
+use crate::util::stats::Summary;
+use crate::util::table::{f1, f2, Table};
+use std::time::Instant;
+
+/// Per-request latency metrics (wall clock).
+#[derive(Clone, Debug, Default)]
+pub struct RequestMetrics {
+    /// time to first token, seconds
+    pub ttft_s: f64,
+    /// mean time per output token after the first, seconds
+    pub tpot_s: f64,
+    /// end-to-end latency, seconds
+    pub e2e_s: f64,
+    /// times the request was preempted and recomputed
+    pub preemptions: u32,
+}
+
+/// Wall-clock tracker attached to a live sequence.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    pub submitted: Instant,
+    pub first_token: Option<Instant>,
+    pub last_token: Option<Instant>,
+    pub tokens: usize,
+    pub preemptions: u32,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch {
+            submitted: Instant::now(),
+            first_token: None,
+            last_token: None,
+            tokens: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn on_token(&mut self) {
+        let now = Instant::now();
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        }
+        self.last_token = Some(now);
+        self.tokens += 1;
+    }
+
+    pub fn finish(&self) -> RequestMetrics {
+        let first = self.first_token.unwrap_or(self.submitted);
+        let last = self.last_token.unwrap_or(first);
+        let ttft = (first - self.submitted).as_secs_f64();
+        let decode_span = (last - first).as_secs_f64();
+        let tpot = if self.tokens > 1 {
+            decode_span / (self.tokens - 1) as f64
+        } else {
+            0.0
+        };
+        RequestMetrics {
+            ttft_s: ttft,
+            tpot_s: tpot,
+            e2e_s: (last - self.submitted).as_secs_f64(),
+            preemptions: self.preemptions,
+        }
+    }
+}
+
+/// Server-level aggregates.
+#[derive(Debug, Default)]
+pub struct ServerMetrics {
+    pub ttft: Summary,
+    pub tpot: Summary,
+    pub e2e: Summary,
+    pub total_prompt_tokens: u64,
+    pub total_generated_tokens: u64,
+    pub total_preemptions: u64,
+    pub wall_s: f64,
+    pub decode_steps: u64,
+    pub decode_batch: Summary,
+}
+
+impl ServerMetrics {
+    pub fn record(&mut self, m: &RequestMetrics, prompt_tokens: usize, gen_tokens: usize) {
+        self.ttft.push(m.ttft_s);
+        self.tpot.push(m.tpot_s);
+        self.e2e.push(m.e2e_s);
+        self.total_prompt_tokens += prompt_tokens as u64;
+        self.total_generated_tokens += gen_tokens as u64;
+        self.total_preemptions += m.preemptions as u64;
+    }
+
+    /// Decode throughput over the run (generated tokens / wall time).
+    pub fn gen_tokens_per_s(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_generated_tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(title, &["metric", "value"]);
+        t.row(vec!["requests".into(), format!("{}", self.e2e.len())]);
+        t.row(vec!["generated tokens".into(), format!("{}", self.total_generated_tokens)]);
+        t.row(vec!["wall time (s)".into(), f2(self.wall_s)]);
+        t.row(vec!["gen throughput (tok/s)".into(), f1(self.gen_tokens_per_s())]);
+        t.row(vec!["mean decode batch".into(), f2(self.decode_batch.mean())]);
+        t.row(vec!["TTFT p50/p95 (ms)".into(),
+            format!("{} / {}", f1(self.ttft.median() * 1e3), f1(self.ttft.percentile(95.0) * 1e3))]);
+        t.row(vec!["TPOT p50/p95 (ms)".into(),
+            format!("{} / {}", f1(self.tpot.median() * 1e3), f1(self.tpot.percentile(95.0) * 1e3))]);
+        t.row(vec!["preemptions".into(), format!("{}", self.total_preemptions)]);
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_counts_tokens() {
+        let mut sw = Stopwatch::start();
+        for _ in 0..5 {
+            sw.on_token();
+        }
+        let m = sw.finish();
+        assert_eq!(sw.tokens, 5);
+        assert!(m.ttft_s >= 0.0 && m.e2e_s >= m.ttft_s);
+    }
+
+    #[test]
+    fn aggregates_and_render() {
+        let mut sm = ServerMetrics::default();
+        sm.wall_s = 2.0;
+        sm.record(
+            &RequestMetrics { ttft_s: 0.1, tpot_s: 0.02, e2e_s: 0.5, preemptions: 1 },
+            10,
+            20,
+        );
+        sm.record(
+            &RequestMetrics { ttft_s: 0.2, tpot_s: 0.03, e2e_s: 0.8, preemptions: 0 },
+            5,
+            10,
+        );
+        assert_eq!(sm.total_generated_tokens, 30);
+        assert_eq!(sm.gen_tokens_per_s(), 15.0);
+        assert_eq!(sm.total_preemptions, 1);
+        let r = sm.render("test");
+        assert!(r.contains("gen throughput"));
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 serving coordinator: requests, sequences, scheduling, the serving
+//! loop, DP routing and metrics — the vLLM/SGLang-shaped layer the paper's
+//! system-level contributions (§3.3, per-token instant quantization,
+//! framework compatibility) plug into.
+
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod sequence;
+pub mod server;
+
+pub use metrics::{RequestMetrics, ServerMetrics};
+pub use request::{FinishReason, RequestOutcome, ServeRequest};
+pub use router::Router;
+pub use scheduler::{Action, Scheduler, SchedulerConfig};
+pub use sequence::{SeqPhase, Sequence};
+pub use server::Server;

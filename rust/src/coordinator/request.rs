@@ -1,0 +1,52 @@
+//! Serving request/response types.
+
+/// An inference request submitted to the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServeRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// 0.0 → greedy
+    pub temperature: f32,
+    /// sampling seed (deterministic parity runs share seeds across pipelines)
+    pub seed: u64,
+    /// benchmark mode: never stop on EOS (length controlled by max_new_tokens)
+    pub ignore_eos: bool,
+}
+
+impl ServeRequest {
+    pub fn greedy(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> ServeRequest {
+        ServeRequest { id, prompt, max_new_tokens, temperature: 0.0, seed: id,
+            ignore_eos: false }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    Eos,
+    MaxTokens,
+    Preempted, // terminal only if the server is draining
+}
+
+/// A completed request.
+#[derive(Clone, Debug)]
+pub struct RequestOutcome {
+    pub id: u64,
+    pub prompt_tokens: usize,
+    pub generated: Vec<i32>,
+    pub finish: FinishReason,
+    pub metrics: super::metrics::RequestMetrics,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_constructor() {
+        let r = ServeRequest::greedy(7, vec![1, 2, 3], 10);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.max_new_tokens, 10);
+    }
+}

@@ -1,0 +1,132 @@
+//! DP request router: spread requests over data-parallel ranks by
+//! outstanding-token load with KV-capacity awareness (vllm-router-style
+//! shortest-queue policy).
+//!
+//! The routing *policy* is a pure function (`pick_rank`) so it can be tested
+//! and reused by the Fig. 1 simulator; `Router` wires it to real `Server`
+//! ranks for the multi-rank serving examples.
+
+use super::request::{RequestOutcome, ServeRequest};
+use super::server::Server;
+
+/// Snapshot of one rank's load.
+#[derive(Clone, Copy, Debug)]
+pub struct RankLoad {
+    /// outstanding tokens (queued + remaining generation)
+    pub tokens: usize,
+    /// free KV pages
+    pub free_pages: usize,
+    /// pages the incoming request would need
+    pub pages_needed: usize,
+}
+
+/// Shortest-queue with capacity awareness: prefer ranks that can hold the
+/// request's KV immediately; among those, least outstanding tokens.
+pub fn pick_rank(loads: &[RankLoad]) -> usize {
+    let feasible = loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| l.free_pages >= l.pages_needed)
+        .min_by_key(|(_, l)| l.tokens)
+        .map(|(i, _)| i);
+    feasible.unwrap_or_else(|| {
+        // all ranks saturated: fall back to global shortest queue
+        loads
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, l)| l.tokens)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    })
+}
+
+pub struct Router {
+    pub ranks: Vec<Server>,
+}
+
+impl Router {
+    pub fn new(ranks: Vec<Server>) -> Router {
+        assert!(!ranks.is_empty());
+        Router { ranks }
+    }
+
+    pub fn dp(&self) -> usize {
+        self.ranks.len()
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) -> usize {
+        let pages_needed =
+            (req.prompt.len() + req.max_new_tokens).div_ceil(crate::kvcache::PAGE_TOKENS);
+        let loads: Vec<RankLoad> = self
+            .ranks
+            .iter()
+            .map(|r| RankLoad {
+                tokens: r.load_tokens(),
+                free_pages: r.cache.free_pages(),
+                pages_needed,
+            })
+            .collect();
+        let rank = pick_rank(&loads);
+        self.ranks[rank].submit(req);
+        rank
+    }
+
+    /// Step every rank once (round-robin fairness); true if any progressed.
+    pub fn step_all(&mut self) -> anyhow::Result<bool> {
+        let mut any = false;
+        for r in &mut self.ranks {
+            any |= r.step()?;
+        }
+        Ok(any)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.ranks.iter().map(|r| r.pending()).sum()
+    }
+
+    /// Drive all ranks to completion; returns all outcomes.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestOutcome>> {
+        let t0 = std::time::Instant::now();
+        while self.pending() > 0 {
+            if !self.step_all()? && self.pending() > 0 {
+                anyhow::bail!("router deadlock");
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let mut outcomes = Vec::new();
+        for r in &mut self.ranks {
+            r.metrics.wall_s += wall;
+            outcomes.extend(r.finished.drain(..));
+        }
+        outcomes.sort_by_key(|o| o.id);
+        Ok(outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(tokens: usize, free: usize, need: usize) -> RankLoad {
+        RankLoad { tokens: tokens, free_pages: free, pages_needed: need }
+    }
+
+    #[test]
+    fn picks_least_loaded_feasible() {
+        let loads = [load(100, 10, 2), load(50, 10, 2), load(10, 1, 2)];
+        // rank 2 is least loaded but lacks pages → rank 1
+        assert_eq!(pick_rank(&loads), 1);
+    }
+
+    #[test]
+    fn falls_back_when_all_saturated() {
+        let loads = [load(100, 0, 2), load(50, 1, 2), load(70, 0, 2)];
+        assert_eq!(pick_rank(&loads), 1);
+    }
+
+    #[test]
+    fn ties_break_deterministically() {
+        let loads = [load(10, 5, 1), load(10, 5, 1)];
+        assert_eq!(pick_rank(&loads), 0);
+    }
+}

@@ -1,0 +1,230 @@
+//! Continuous-batching scheduler: each iteration decides whether to prefill
+//! admitted requests or run a decode step over the running set, with
+//! KV-capacity admission control and recompute-preemption backpressure.
+//!
+//! Pure decision logic over a snapshot — fully unit-testable without the
+//! engine. The paper-relevant property: per-token instant quantization means
+//! admission only needs PAGE accounting (no tail-buffer reservations), which
+//! is exactly the "framework compatibility" argument of §3.1.1.
+
+/// Scheduler view of one waiting sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitingSeq {
+    pub idx: usize,
+    /// tokens to prefill (prompt, or prompt+generated after preemption)
+    pub tokens: usize,
+}
+
+/// Scheduler view of one running sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct RunningSeq {
+    pub idx: usize,
+    /// current context length (cache tokens)
+    pub context: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    /// max sequences per decode step (largest decode bucket batch)
+    pub max_decode_batch: usize,
+    /// max sequences per prefill call (largest prefill bucket batch)
+    pub max_prefill_batch: usize,
+    /// max prompt tokens per prefill call (prefill bucket length)
+    pub max_prefill_tokens: usize,
+    /// max context the decode buckets support
+    pub max_context: usize,
+    /// tokens per KV page
+    pub page_tokens: usize,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// admit + prefill these waiting indices
+    Prefill(Vec<usize>),
+    /// run one decode step over these running indices
+    Decode(Vec<usize>),
+    /// release this running sequence's pages and move it back to waiting
+    Preempt(usize),
+    Idle,
+}
+
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg }
+    }
+
+    fn pages_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.cfg.page_tokens)
+    }
+
+    /// Decide the next action.
+    ///
+    /// Policy (vLLM-flavoured):
+    /// 1. prefill-priority admission while capacity and bucket space allow
+    ///    (FCFS; a waiting request is admitted only if its prefill fits the
+    ///    bucket and its pages fit the free pool),
+    /// 2. otherwise decode the running set (capped at the decode bucket);
+    ///    if the step would exceed free pages, preempt the YOUNGEST running
+    ///    sequence (recompute policy) and retry.
+    pub fn decide(
+        &self,
+        waiting: &[WaitingSeq],
+        running: &[RunningSeq],
+        free_pages: usize,
+    ) -> Action {
+        // 1) admission
+        if !waiting.is_empty() && running.len() < self.cfg.max_decode_batch {
+            let mut admitted = Vec::new();
+            let mut pages_needed = 0;
+            let slots = self.cfg.max_decode_batch - running.len();
+            for w in waiting.iter().take(self.cfg.max_prefill_batch.min(slots)) {
+                if w.tokens > self.cfg.max_prefill_tokens {
+                    break; // FCFS: an oversized head blocks (rejected upstream)
+                }
+                let need = self.pages_for(w.tokens + 1); // +1 headroom token
+                if pages_needed + need > free_pages {
+                    break;
+                }
+                pages_needed += need;
+                admitted.push(w.idx);
+            }
+            if !admitted.is_empty() {
+                return Action::Prefill(admitted);
+            }
+        }
+
+        // 2) decode
+        if !running.is_empty() {
+            // growth check: a decode step appends one token per sequence
+            let growth: usize = running
+                .iter()
+                .take(self.cfg.max_decode_batch)
+                .filter(|r| r.context % self.cfg.page_tokens == 0)
+                .count();
+            if growth > free_pages {
+                // preempt the youngest (largest idx = most recently admitted)
+                let victim = running.iter().map(|r| r.idx).max().unwrap();
+                return Action::Preempt(victim);
+            }
+            let batch: Vec<usize> = running
+                .iter()
+                .take(self.cfg.max_decode_batch)
+                .filter(|r| r.context < self.cfg.max_context)
+                .map(|r| r.idx)
+                .collect();
+            if !batch.is_empty() {
+                return Action::Decode(batch);
+            }
+        }
+        Action::Idle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sched() -> Scheduler {
+        Scheduler::new(SchedulerConfig {
+            max_decode_batch: 4,
+            max_prefill_batch: 2,
+            max_prefill_tokens: 128,
+            max_context: 512,
+            page_tokens: 64,
+        })
+    }
+
+    fn w(idx: usize, tokens: usize) -> WaitingSeq {
+        WaitingSeq { idx, tokens }
+    }
+
+    fn r(idx: usize, context: usize) -> RunningSeq {
+        RunningSeq { idx, context }
+    }
+
+    #[test]
+    fn admits_waiting_first() {
+        let s = sched();
+        let a = s.decide(&[w(0, 30), w(1, 50), w(2, 10)], &[], 100);
+        assert_eq!(a, Action::Prefill(vec![0, 1])); // capped at prefill batch
+    }
+
+    #[test]
+    fn admission_respects_capacity() {
+        let s = sched();
+        // each 30-token prompt needs 1 page (+1 headroom still 1 page)
+        let a = s.decide(&[w(0, 30), w(1, 200)], &[], 1);
+        assert_eq!(a, Action::Prefill(vec![0]));
+        // no pages at all → fall through to idle (nothing running)
+        let a = s.decide(&[w(0, 30)], &[], 0);
+        assert_eq!(a, Action::Idle);
+    }
+
+    #[test]
+    fn oversized_prompt_blocks_fcfs() {
+        let s = sched();
+        let a = s.decide(&[w(0, 4000), w(1, 10)], &[], 100);
+        // head of queue can never fit a prefill bucket → do not bypass FCFS
+        assert_eq!(a, Action::Idle);
+    }
+
+    #[test]
+    fn decodes_when_no_waiting() {
+        let s = sched();
+        let a = s.decide(&[], &[r(0, 70), r(1, 130)], 10);
+        assert_eq!(a, Action::Decode(vec![0, 1]));
+    }
+
+    #[test]
+    fn decode_batch_capped() {
+        let s = sched();
+        let running: Vec<RunningSeq> = (0..6).map(|i| r(i, 100 + i)).collect();
+        if let Action::Decode(batch) = s.decide(&[], &running, 100) {
+            assert_eq!(batch.len(), 4);
+        } else {
+            panic!("expected decode");
+        }
+    }
+
+    #[test]
+    fn preempts_youngest_under_pressure() {
+        let s = sched();
+        // both sequences sit exactly at page boundaries → each needs a new
+        // page to decode, but only 1 page is free
+        let a = s.decide(&[], &[r(0, 64), r(1, 128)], 1);
+        assert_eq!(a, Action::Preempt(1));
+    }
+
+    #[test]
+    fn no_preemption_when_pages_suffice() {
+        let s = sched();
+        let a = s.decide(&[], &[r(0, 64), r(1, 128)], 2);
+        assert_eq!(a, Action::Decode(vec![0, 1]));
+    }
+
+    #[test]
+    fn context_cap_excludes_full_sequences() {
+        let s = sched();
+        let a = s.decide(&[], &[r(0, 512)], 100);
+        assert_eq!(a, Action::Idle); // at max context: cannot decode further
+    }
+
+    #[test]
+    fn running_full_blocks_admission() {
+        let s = sched();
+        let running: Vec<RunningSeq> = (0..4).map(|i| r(i, 100)).collect();
+        let a = s.decide(&[w(9, 10)], &running, 100);
+        assert!(matches!(a, Action::Decode(_)));
+    }
+
+    #[test]
+    fn mid_page_decode_needs_no_new_page() {
+        let s = sched();
+        let a = s.decide(&[], &[r(0, 65), r(1, 70)], 0);
+        assert_eq!(a, Action::Decode(vec![0, 1]));
+    }
+}

@@ -1,0 +1,164 @@
+//! A live sequence: request + generation state + sampling RNG + stopwatch.
+
+use super::metrics::Stopwatch;
+use super::request::{FinishReason, RequestOutcome, ServeRequest};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    Waiting,
+    Running,
+    Finished(FinishReason),
+}
+
+pub struct Sequence {
+    pub request: ServeRequest,
+    pub phase: SeqPhase,
+    pub generated: Vec<i32>,
+    /// the token to feed into the next decode step
+    pub next_input: i32,
+    pub rng: Rng,
+    pub watch: Stopwatch,
+    pub eos: i32,
+}
+
+impl Sequence {
+    pub fn new(request: ServeRequest, eos: i32) -> Sequence {
+        let rng = Rng::new(request.seed ^ 0x5EED);
+        let next_input = *request.prompt.last().unwrap_or(&1);
+        Sequence {
+            request,
+            phase: SeqPhase::Waiting,
+            generated: Vec::new(),
+            next_input,
+            rng,
+            watch: Stopwatch::start(),
+            eos,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.request.id
+    }
+
+    /// Tokens currently in the KV cache once running (prompt + generated).
+    pub fn context_len(&self) -> usize {
+        self.request.prompt.len() + self.generated.len()
+    }
+
+    /// Sample the next token from logits; updates state and returns whether
+    /// the sequence finished.
+    pub fn accept_logits(&mut self, logits: &[f32]) -> bool {
+        let tok = self.rng.sample_logits(logits, self.request.temperature) as i32;
+        self.generated.push(tok);
+        self.watch.on_token();
+        if tok == self.eos && !self.request.ignore_eos {
+            self.phase = SeqPhase::Finished(FinishReason::Eos);
+            return true;
+        }
+        if self.generated.len() >= self.request.max_new_tokens {
+            self.phase = SeqPhase::Finished(FinishReason::MaxTokens);
+            return true;
+        }
+        self.next_input = tok;
+        false
+    }
+
+    /// Reset to Waiting after a preemption (KV pages were released; the
+    /// prompt + generated tokens will be re-prefilled).
+    pub fn preempt(&mut self) {
+        self.phase = SeqPhase::Waiting;
+        self.watch.preemptions += 1;
+    }
+
+    /// The token sequence to prefill when (re)admitted: prompt + generated.
+    pub fn prefill_tokens(&self) -> Vec<i32> {
+        let mut t = self.request.prompt.clone();
+        t.extend(&self.generated);
+        t
+    }
+
+    pub fn into_outcome(self) -> RequestOutcome {
+        let finish = match self.phase {
+            SeqPhase::Finished(f) => f,
+            _ => FinishReason::Preempted,
+        };
+        RequestOutcome {
+            id: self.request.id,
+            prompt_tokens: self.request.prompt.len(),
+            generated: self.generated,
+            finish,
+            metrics: self.watch.finish(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(max_new: usize, temperature: f32) -> Sequence {
+        Sequence::new(
+            ServeRequest { id: 1, prompt: vec![1, 70, 71], max_new_tokens: max_new,
+                temperature, seed: 9, ignore_eos: false },
+            0,
+        )
+    }
+
+    #[test]
+    fn greedy_takes_argmax_and_respects_max_tokens() {
+        let mut s = seq(2, 0.0);
+        let mut logits = vec![0.0f32; 8];
+        logits[5] = 3.0;
+        assert!(!s.accept_logits(&logits));
+        assert_eq!(s.generated, vec![5]);
+        assert_eq!(s.next_input, 5);
+        assert!(s.accept_logits(&logits)); // hits max_new_tokens
+        assert_eq!(s.phase, SeqPhase::Finished(FinishReason::MaxTokens));
+    }
+
+    #[test]
+    fn eos_finishes() {
+        let mut s = seq(10, 0.0);
+        let mut logits = vec![0.0f32; 8];
+        logits[0] = 5.0; // EOS
+        assert!(s.accept_logits(&logits));
+        assert_eq!(s.phase, SeqPhase::Finished(FinishReason::Eos));
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let mut a = seq(5, 1.0);
+        let mut b = seq(5, 1.0);
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        for _ in 0..5 {
+            let fa = a.accept_logits(&logits);
+            let fb = b.accept_logits(&logits);
+            assert_eq!(fa, fb);
+        }
+        assert_eq!(a.generated, b.generated);
+    }
+
+    #[test]
+    fn preemption_resets_and_replays() {
+        let mut s = seq(10, 0.0);
+        let mut logits = vec![0.0f32; 8];
+        logits[3] = 1.0;
+        s.accept_logits(&logits);
+        s.phase = SeqPhase::Running;
+        s.preempt();
+        assert_eq!(s.phase, SeqPhase::Waiting);
+        assert_eq!(s.prefill_tokens(), vec![1, 70, 71, 3]);
+        assert_eq!(s.watch.preemptions, 1);
+    }
+
+    #[test]
+    fn context_len_tracks_cache() {
+        let mut s = seq(10, 0.0);
+        assert_eq!(s.context_len(), 3);
+        let mut logits = vec![0.0f32; 8];
+        logits[3] = 1.0;
+        s.accept_logits(&logits);
+        assert_eq!(s.context_len(), 4);
+    }
+}

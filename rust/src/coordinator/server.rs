@@ -1,0 +1,205 @@
+//! The serving loop: one DP rank = one engine + one paged cache + the
+//! continuous-batching scheduler.
+
+use super::metrics::ServerMetrics;
+use super::request::{RequestOutcome, ServeRequest};
+use super::scheduler::{Action, RunningSeq, Scheduler, SchedulerConfig, WaitingSeq};
+use super::sequence::{SeqPhase, Sequence};
+use crate::kvcache::{PagedKvCache, PAGE_TOKENS};
+use crate::runtime::ModelEngine;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+pub struct Server {
+    pub engine: ModelEngine,
+    pub cache: PagedKvCache,
+    pub scheduler: Scheduler,
+    waiting: VecDeque<Sequence>,
+    running: Vec<Sequence>,
+    pub finished: Vec<RequestOutcome>,
+    pub metrics: ServerMetrics,
+    eos: i32,
+}
+
+impl Server {
+    /// Build a server around a loaded engine with `capacity_pages` of KV.
+    pub fn new(engine: ModelEngine, capacity_pages: usize) -> Server {
+        let cache = PagedKvCache::new(engine.cache_config(capacity_pages));
+        let mode = engine.mode_str();
+        let max_decode_batch = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.kind == crate::runtime::ArtifactKind::Decode && a.mode == mode)
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(1);
+        let max_prefill_batch = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.kind == crate::runtime::ArtifactKind::Prefill && a.mode == mode)
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(1);
+        let max_prefill_tokens = engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.kind == crate::runtime::ArtifactKind::Prefill && a.mode == mode)
+            .map(|a| a.seq)
+            .max()
+            .unwrap_or(0);
+        let cfg = SchedulerConfig {
+            max_decode_batch,
+            max_prefill_batch,
+            max_prefill_tokens,
+            max_context: engine.max_context(),
+            page_tokens: PAGE_TOKENS,
+        };
+        let eos = engine.manifest.model.eos;
+        Server {
+            engine,
+            cache,
+            scheduler: Scheduler::new(cfg),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            finished: Vec::new(),
+            metrics: ServerMetrics::default(),
+            eos,
+        }
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) {
+        assert!(
+            req.prompt.len() <= self.scheduler.cfg.max_prefill_tokens,
+            "prompt {} exceeds prefill bucket {}",
+            req.prompt.len(),
+            self.scheduler.cfg.max_prefill_tokens
+        );
+        self.waiting.push_back(Sequence::new(req, self.eos));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    /// Queue-depth signal for the DP router (tokens outstanding).
+    pub fn load_tokens(&self) -> usize {
+        self.waiting.iter().map(|s| s.request.prompt.len() + s.request.max_new_tokens).sum::<usize>()
+            + self
+                .running
+                .iter()
+                .map(|s| s.request.max_new_tokens - s.generated.len())
+                .sum::<usize>()
+    }
+
+    /// One scheduling iteration. Returns false when fully idle.
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        let waiting_view: Vec<WaitingSeq> = self
+            .waiting
+            .iter()
+            .enumerate()
+            .map(|(i, s)| WaitingSeq { idx: i, tokens: s.prefill_tokens().len() })
+            .collect();
+        let running_view: Vec<RunningSeq> = self
+            .running
+            .iter()
+            .enumerate()
+            .map(|(i, s)| RunningSeq { idx: i, context: s.context_len() })
+            .collect();
+        let action = self
+            .scheduler
+            .decide(&waiting_view, &running_view, self.cache.free_pages());
+
+        match action {
+            Action::Prefill(idxs) => {
+                // idxs are FCFS-prefix indices into `waiting`
+                let mut batch = Vec::new();
+                for _ in 0..idxs.len() {
+                    let mut seq = self.waiting.pop_front().unwrap();
+                    seq.phase = SeqPhase::Running;
+                    batch.push(seq);
+                }
+                let items: Vec<(u64, Vec<i32>)> = batch
+                    .iter()
+                    .map(|s| {
+                        self.cache.register(s.id());
+                        (s.id(), s.prefill_tokens())
+                    })
+                    .collect();
+                let out = self.engine.prefill(&mut self.cache, &items)?;
+                for (mut seq, logits) in batch.into_iter().zip(out.logits) {
+                    let done = seq.accept_logits(&logits);
+                    if done {
+                        self.finish(seq);
+                    } else {
+                        self.running.push(seq);
+                    }
+                }
+            }
+            Action::Decode(idxs) => {
+                let items: Vec<(u64, i32)> = idxs
+                    .iter()
+                    .map(|&i| (self.running[i].id(), self.running[i].next_input))
+                    .collect();
+                self.metrics.decode_steps += 1;
+                self.metrics.decode_batch.push(items.len() as f64);
+                let out = self.engine.decode(&mut self.cache, &items)?;
+                // accept logits; collect finished (iterate in reverse index
+                // order so removals do not shift pending indices)
+                let mut done: Vec<usize> = Vec::new();
+                for (k, &i) in idxs.iter().enumerate() {
+                    if self.running[i].accept_logits(&out.logits[k]) {
+                        done.push(i);
+                    }
+                }
+                done.sort_unstable_by(|a, b| b.cmp(a));
+                for i in done {
+                    let seq = self.running.remove(i);
+                    self.cache.release(seq.id());
+                    self.finish(seq);
+                }
+            }
+            Action::Preempt(idx) => {
+                let mut seq = self.running.remove(idx);
+                self.cache.release(seq.id());
+                seq.preempt();
+                // re-queue at the FRONT: preempted work ages first
+                self.waiting.push_front(seq);
+            }
+            Action::Idle => return Ok(false),
+        }
+        Ok(true)
+    }
+
+    fn finish(&mut self, seq: Sequence) {
+        let outcome = {
+            let prompt = seq.request.prompt.len();
+            let gen = seq.generated.len();
+            let o = seq.into_outcome();
+            self.metrics.record(&o.metrics, prompt, gen);
+            o
+        };
+        self.finished.push(outcome);
+    }
+
+    /// Run until all submitted requests complete; returns wall seconds.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        while self.pending() > 0 {
+            let progressed = self.step()?;
+            if !progressed && self.pending() > 0 {
+                anyhow::bail!(
+                    "scheduler deadlock: {} waiting, {} running, {} free pages",
+                    self.waiting.len(),
+                    self.running.len(),
+                    self.cache.free_pages()
+                );
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        self.metrics.wall_s += wall;
+        Ok(wall)
+    }
+}

@@ -1,0 +1,96 @@
+//! BF16 codec (the RoPE cache precision; `half` crate unavailable offline).
+//!
+//! bf16 = top 16 bits of f32 with round-to-nearest-even on the truncated bits.
+
+/// Encode f32 → bf16 bits (round-half-to-even).
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return 0x7FC0; // canonical NaN
+    }
+    // canonical round-to-nearest-even: add 0x7FFF + lsb, then truncate
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7FFF + lsb)) >> 16) as u16
+}
+
+/// Decode bf16 bits → f32 (exact).
+pub fn bf16_decode(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an f32 to the bf16 grid.
+pub fn bf16_round(x: f32) -> f32 {
+    bf16_decode(bf16_encode(x))
+}
+
+pub fn encode_slice(xs: &[f32], out: &mut Vec<u16>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| bf16_encode(x)));
+}
+
+pub fn decode_slice(bs: &[u16], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(bs.iter().map(|&b| bf16_decode(b)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for x in [0.0f32, 1.0, -2.5, 448.0, 1024.0, 3.140625] {
+            assert_eq!(bf16_round(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // bf16 has 7 mantissa bits → grid spacing 2^-7 at 1.0, so the
+        // round-to-nearest error is bounded by 2^-8 relative.
+        let x = 1.0 + 2.0f32.powi(-9);
+        let r = bf16_round(x);
+        assert!(r == 1.0 || r == 1.0 + 2.0f32.powi(-7));
+        assert!(((r - x) / x).abs() <= 2.0f32.powi(-8) + 1e-9);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut x = 1e-3f32;
+        while x < 1e3 {
+            let r = bf16_round(x * 1.017);
+            let rel = ((r - x * 1.017) / (x * 1.017)).abs();
+            assert!(rel <= 2.0f32.powi(-8) + 1e-9, "x={x} rel={rel}");
+            x *= 2.31;
+        }
+    }
+
+    #[test]
+    fn nan_and_signs() {
+        assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+        assert_eq!(bf16_round(-0.0), 0.0);
+        assert!(bf16_round(-3.3) < 0.0);
+    }
+
+    #[test]
+    fn wide_rope_range_preserved() {
+        // RoPE values up to ±10³ keep ~2^-8 relative accuracy (the paper's
+        // reason for keeping RoPE in bf16: 2^-8 << the FP8 2^-4).
+        for x in [999.5f32, -1000.0, 512.25, -717.0] {
+            let r = bf16_round(x);
+            assert!(((r - x) / x).abs() <= 2.0f32.powi(-8) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32) * 17.3 - 500.0).collect();
+        let mut enc = Vec::new();
+        let mut dec = Vec::new();
+        encode_slice(&xs, &mut enc);
+        decode_slice(&enc, &mut dec);
+        for (x, d) in xs.iter().zip(&dec) {
+            assert_eq!(*d, bf16_round(*x));
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Bit-exact E4M3 (OCP FP8, finite-only) codec.
+//!
+//! Layout: 1 sign | 4 exponent (bias 7) | 3 mantissa. Max finite 448
+//! (0b0_1111_110); 0b0_1111_111 is NaN (no infinities). Subnormal step 2^-9.
+//!
+//! `e4m3_encode` rounds to nearest-even and SATURATES out-of-range values to
+//! ±448 (matching the python `quant.e4m3_round` convention — our quantizers
+//! divide by sigma = amax/448 first, so saturation only guards the boundary).
+
+pub const E4M3_MAX: f32 = 448.0;
+const EXP_BIAS: i32 = 7;
+const MANT_BITS: u32 = 3;
+
+/// Encode an f32 to the nearest E4M3 byte (round-half-to-even, saturating).
+pub fn e4m3_encode(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F; // canonical NaN
+    }
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    let a = x.abs();
+    if a == 0.0 {
+        return sign; // +-0 → signed zero encoding (decodes to +0/-0)
+    }
+    if a >= E4M3_MAX {
+        return sign | 0x7E; // saturate to ±448
+    }
+    // Decompose a = m * 2^e with m in [1, 2).
+    let bits = a.to_bits();
+    let e_unb = ((bits >> 23) & 0xFF) as i32 - 127;
+    // Normal E4M3 range: exponent in [-6, 8].
+    if e_unb >= -6 {
+        // quantum is 2^(e-3); use f32 arithmetic rounding via scaled round.
+        let step = e_unb - MANT_BITS as i32;
+        let q = round_half_even(a / exp2i(step));
+        // q in [8, 16]; q==16 means carry into the next exponent.
+        let (mant, e_final) = if q >= 16.0 { (0u32, e_unb + 1) } else { (q as u32 - 8, e_unb) };
+        if e_final > 8 {
+            return sign | 0x7E; // carried past the max exponent → saturate
+        }
+        let exp_field = (e_final + EXP_BIAS) as u8;
+        sign | (exp_field << 3) | mant as u8
+    } else {
+        // Subnormal: value = mant * 2^-9, mant in [0, 7].
+        let q = round_half_even(a / exp2i(-9));
+        if q == 0.0 {
+            return sign;
+        }
+        if q >= 8.0 {
+            // rounds up into the first normal (2^-6)
+            return sign | (1 << 3);
+        }
+        sign | q as u8
+    }
+}
+
+/// Decode an E4M3 byte to f32 (NaN for 0x7F/0xFF).
+pub fn e4m3_decode(b: u8) -> f32 {
+    let sign = if b & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let exp_field = ((b >> 3) & 0x0F) as i32;
+    let mant = (b & 0x07) as i32;
+    if exp_field == 0x0F && mant == 0x07 {
+        return f32::NAN;
+    }
+    if exp_field == 0 {
+        return sign * mant as f32 * exp2i(-9);
+    }
+    let e = exp_field - EXP_BIAS;
+    sign * (1.0 + mant as f32 / 8.0) * exp2i(e)
+}
+
+/// Round an f32 to the E4M3 grid (encode+decode).
+pub fn e4m3_round(x: f32) -> f32 {
+    e4m3_decode(e4m3_encode(x))
+}
+
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits((((e + 127) as u32) & 0xFF) << 23)
+}
+
+fn round_half_even(x: f32) -> f32 {
+    // f32 has exact integers in this range; emulate round-half-to-even.
+    let floor = x.floor();
+    let frac = x - floor;
+    if frac > 0.5 {
+        floor + 1.0
+    } else if frac < 0.5 {
+        floor
+    } else if (floor as i64) % 2 == 0 {
+        floor
+    } else {
+        floor + 1.0
+    }
+}
+
+/// Encode a slice (e.g. one token's content vector) into bytes.
+pub fn encode_slice(xs: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.extend(xs.iter().map(|&x| e4m3_encode(x)));
+}
+
+/// Decode bytes into f32s.
+pub fn decode_slice(bs: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.extend(bs.iter().map(|&b| e4m3_decode(b)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Enumerate all finite E4M3 values.
+    fn all_finite() -> Vec<(u8, f32)> {
+        (0u16..256)
+            .map(|b| (b as u8, e4m3_decode(b as u8)))
+            .filter(|(_, v)| v.is_finite())
+            .collect()
+    }
+
+    #[test]
+    fn decode_known_values() {
+        assert_eq!(e4m3_decode(0x00), 0.0);
+        assert_eq!(e4m3_decode(0x38), 1.0); // exp=7 → 2^0, mant 0
+        assert_eq!(e4m3_decode(0x39), 1.125);
+        assert_eq!(e4m3_decode(0x7E), 448.0);
+        assert_eq!(e4m3_decode(0xFE), -448.0);
+        assert_eq!(e4m3_decode(0x01), 2.0f32.powi(-9)); // smallest subnormal
+        assert_eq!(e4m3_decode(0x08), 2.0f32.powi(-6)); // smallest normal
+        assert!(e4m3_decode(0x7F).is_nan());
+    }
+
+    #[test]
+    fn grid_points_are_fixed_points() {
+        for (b, v) in all_finite() {
+            let enc = e4m3_encode(v);
+            // sign of zero: 0x00 and 0x80 both decode to 0.0/-0.0
+            assert_eq!(
+                e4m3_decode(enc),
+                v,
+                "byte {b:#04x} value {v} re-encoded to {enc:#04x}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounds_to_nearest() {
+        // 1.0 + small eps stays at 1.0; above midpoint goes to 1.125
+        assert_eq!(e4m3_round(1.01), 1.0);
+        assert_eq!(e4m3_round(1.12), 1.125);
+        // midpoint 1.0625 → even mantissa (1.0)
+        assert_eq!(e4m3_round(1.0625), 1.0);
+        // midpoint 1.1875 between 1.125 and 1.25 → 1.25 (even mantissa 2)
+        assert_eq!(e4m3_round(1.1875), 1.25);
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(e4m3_round(1e9), 448.0);
+        assert_eq!(e4m3_round(-1e9), -448.0);
+        assert_eq!(e4m3_round(460.0), 448.0);
+    }
+
+    #[test]
+    fn subnormals() {
+        let step = 2.0f32.powi(-9);
+        assert_eq!(e4m3_round(step), step);
+        assert_eq!(e4m3_round(step * 0.4), 0.0);
+        assert_eq!(e4m3_round(step * 2.6), step * 3.0);
+        // just below the first normal: 7.6 steps rounds UP into 2^-6 …
+        assert_eq!(e4m3_round(2.0f32.powi(-6) - step * 0.4), 2.0f32.powi(-6));
+        // … while 7.4 steps rounds down to the top subnormal
+        assert_eq!(e4m3_round(2.0f32.powi(-6) - step * 0.6), 2.0f32.powi(-6) - step);
+    }
+
+    #[test]
+    fn relative_error_bound_normals() {
+        let mut x = 2.0f32.powi(-6);
+        while x < 448.0 {
+            let q = e4m3_round(x * 1.03);
+            let rel = ((q - x * 1.03) / (x * 1.03)).abs();
+            assert!(rel <= 0.0625 + 1e-6, "x={x} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn matches_python_grid_definition() {
+        // spot-check values against python quant.e4m3_round outputs
+        // (generated once with ml_dtypes; keep in sync with test_quant.py)
+        let cases: [(f32, f32); 8] = [
+            (3.3, 3.25),
+            (-3.3, -3.25),
+            (0.07, 0.0703125),
+            (447.0, 448.0),
+            (0.001, 0.001953125), // subnormal: nearest multiple of 2^-9
+            (100.0, 96.0),
+            (0.0196, 0.01953125),
+            (5.7, 5.5),
+        ];
+        for (x, want) in cases {
+            let got = e4m3_round(x);
+            assert_eq!(got, want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn slice_roundtrip() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 3.7).collect();
+        let mut enc = Vec::new();
+        let mut dec = Vec::new();
+        encode_slice(&xs, &mut enc);
+        decode_slice(&enc, &mut dec);
+        assert_eq!(enc.len(), 100);
+        for (x, d) in xs.iter().zip(&dec) {
+            assert_eq!(*d, e4m3_round(*x));
+        }
+    }
+}

@@ -1,0 +1,17 @@
+//! FP8 (E4M3) and BF16 codecs plus the paper's quantizer family.
+//!
+//! The rust KV cache stores *true* u8 E4M3 encodings (real 4x memory
+//! reduction vs f32 staging, 2x vs bf16) and u16 bf16 for the RoPE part; the
+//! grid definition is shared bit-for-bit with the python side
+//! (`python/compile/kernels/quant.py`, tested against `ml_dtypes`).
+
+pub mod bf16;
+pub mod e4m3;
+pub mod quantize;
+
+pub use bf16::{bf16_decode, bf16_encode, bf16_round};
+pub use e4m3::{e4m3_decode, e4m3_encode, e4m3_round, E4M3_MAX};
+pub use quantize::{
+    dequant_per_block, per_token_scale, quant_per_block, quant_per_tensor,
+    quant_per_token, QuantizedBlock, QuantizedToken, SCALE_EPS,
+};

@@ -1,0 +1,221 @@
+//! The paper's quantizer family (Appendix C granularities) over E4M3.
+//!
+//! Per-token is SnapMLA's decode-centric choice (§3.1.1): instant
+//! quantization of each new token, no tail buffers. Per-tensor and per-block
+//! exist for the Table-3 fidelity configs and the granularity ablation.
+
+use super::e4m3::{e4m3_decode, e4m3_encode, E4M3_MAX};
+
+/// Dynamic-scale lower bound (App. D: "dynamic scales are lower-bounded by a
+/// small epsilon before division").
+pub const SCALE_EPS: f32 = 1e-8;
+
+/// One quantized token row: u8 codes + its scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedToken {
+    pub codes: Vec<u8>,
+    pub scale: f32,
+}
+
+/// A block-quantized matrix: codes in row-major order + per-block scales.
+#[derive(Clone, Debug)]
+pub struct QuantizedBlock {
+    pub codes: Vec<u8>,
+    pub rows: usize,
+    pub cols: usize,
+    pub block_rows: usize,
+    pub block_cols: usize,
+    pub scales: Vec<f32>, // [rows/block_rows * cols/block_cols], row-major
+}
+
+/// sigma = max|x| / 448, lower-bounded by SCALE_EPS.
+pub fn per_token_scale(xs: &[f32]) -> f32 {
+    let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    (amax / E4M3_MAX).max(SCALE_EPS)
+}
+
+/// Per-token quantization of one row (paper Fig. 4(2)).
+pub fn quant_per_token(xs: &[f32]) -> QuantizedToken {
+    let scale = per_token_scale(xs);
+    let codes = xs.iter().map(|&x| e4m3_encode(x / scale)).collect();
+    QuantizedToken { codes, scale }
+}
+
+impl QuantizedToken {
+    pub fn dequant(&self) -> Vec<f32> {
+        self.codes.iter().map(|&b| e4m3_decode(b) * self.scale).collect()
+    }
+
+    /// Dequantize into a caller buffer (hot path: no allocation).
+    pub fn dequant_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.codes.len());
+        for (o, &b) in out.iter_mut().zip(&self.codes) {
+            *o = e4m3_decode(b) * self.scale;
+        }
+    }
+}
+
+/// Per-tensor quantization (paper Fig. 4(1)); `scale=None` → dynamic.
+pub fn quant_per_tensor(xs: &[f32], scale: Option<f32>) -> (Vec<u8>, f32) {
+    let s = scale.unwrap_or_else(|| per_token_scale(xs));
+    (xs.iter().map(|&x| e4m3_encode(x / s)).collect(), s)
+}
+
+/// Per-block quantization (paper Fig. 4(4)) of a row-major [rows, cols]
+/// matrix with block_rows x block_cols tiles (must divide evenly).
+pub fn quant_per_block(
+    xs: &[f32],
+    rows: usize,
+    cols: usize,
+    block_rows: usize,
+    block_cols: usize,
+) -> QuantizedBlock {
+    assert_eq!(xs.len(), rows * cols);
+    assert!(rows % block_rows == 0 && cols % block_cols == 0);
+    let brs = rows / block_rows;
+    let bcs = cols / block_cols;
+    let mut scales = vec![0.0f32; brs * bcs];
+    for br in 0..brs {
+        for bc in 0..bcs {
+            let mut amax = 0.0f32;
+            for r in 0..block_rows {
+                let row = br * block_rows + r;
+                for c in 0..block_cols {
+                    amax = amax.max(xs[row * cols + bc * block_cols + c].abs());
+                }
+            }
+            scales[br * bcs + bc] = (amax / E4M3_MAX).max(SCALE_EPS);
+        }
+    }
+    let mut codes = vec![0u8; xs.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            let s = scales[(r / block_rows) * bcs + c / block_cols];
+            codes[r * cols + c] = e4m3_encode(xs[r * cols + c] / s);
+        }
+    }
+    QuantizedBlock { codes, rows, cols, block_rows, block_cols, scales }
+}
+
+/// Inverse of `quant_per_block`.
+pub fn dequant_per_block(q: &QuantizedBlock) -> Vec<f32> {
+    let bcs = q.cols / q.block_cols;
+    let mut out = vec![0.0f32; q.rows * q.cols];
+    for r in 0..q.rows {
+        for c in 0..q.cols {
+            let s = q.scales[(r / q.block_rows) * bcs + c / q.block_cols];
+            out[r * q.cols + c] = e4m3_decode(q.codes[r * q.cols + c]) * s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, VecF32};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn per_token_roundtrip_error_bound() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let xs = rng.normal_vec(128, 5.0);
+            let q = quant_per_token(&xs);
+            let d = q.dequant();
+            let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            for (x, y) in xs.iter().zip(&d) {
+                assert!((x - y).abs() <= amax * 0.0625 / 448.0 * 448.0 * 0.0625 + amax * 2.0_f32.powi(-4) ,
+                    "x={x} y={y} amax={amax}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_token_relative_error_property() {
+        // property: every element within 2^-4 relative of the grid OR below
+        // the subnormal resolution sigma * 2^-9.
+        let gen = VecF32 { min_len: 1, max_len: 256, std: 10.0 };
+        check(7, 100, &gen, |xs| {
+            let q = quant_per_token(xs);
+            let d = q.dequant();
+            for (i, (&x, &y)) in xs.iter().zip(&d).enumerate() {
+                let tol = (x.abs() * 0.0625).max(q.scale * 2.0f32.powi(-9) * 0.5 + 1e-12);
+                if (x - y).abs() > tol + 1e-9 {
+                    return Err(format!("elem {i}: x={x} dequant={y} tol={tol}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_rows() {
+        let q = quant_per_token(&[0.0; 16]);
+        assert_eq!(q.scale, SCALE_EPS);
+        assert!(q.dequant().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn scale_is_amax_over_448() {
+        let q = quant_per_token(&[1.0, -448.0, 3.0]);
+        assert_eq!(q.scale, 1.0);
+        // the max element encodes exactly
+        assert_eq!(q.dequant()[1], -448.0);
+    }
+
+    #[test]
+    fn dequant_into_matches_dequant() {
+        let mut rng = Rng::new(2);
+        let xs = rng.normal_vec(64, 2.0);
+        let q = quant_per_token(&xs);
+        let mut buf = vec![0.0f32; 64];
+        q.dequant_into(&mut buf);
+        assert_eq!(buf, q.dequant());
+    }
+
+    #[test]
+    fn per_tensor_static_vs_dynamic() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) / 10.0).collect();
+        let (qs, ss) = quant_per_tensor(&xs, Some(1.0));
+        assert_eq!(ss, 1.0);
+        let (qd, sd) = quant_per_tensor(&xs, None);
+        assert!((sd - 3.2 / 448.0).abs() < 1e-6);
+        // dynamic scale gives lower error on small-magnitude data
+        let err = |codes: &[u8], s: f32| -> f64 {
+            xs.iter()
+                .zip(codes)
+                .map(|(&x, &c)| ((x - e4m3_decode(c) * s) as f64).powi(2))
+                .sum()
+        };
+        assert!(err(&qd, sd) <= err(&qs, ss));
+    }
+
+    #[test]
+    fn per_block_shapes_and_outlier_containment() {
+        let rows = 128;
+        let cols = 128;
+        let mut xs = vec![1.0f32; rows * cols];
+        xs[0] = 400.0; // outlier in block (0,0)
+        let q = quant_per_block(&xs, rows, cols, 64, 64);
+        assert_eq!(q.scales.len(), 4);
+        let d = dequant_per_block(&q);
+        // far block unaffected by the outlier
+        let far = d[(64 + 1) * cols + 64 + 1];
+        assert!((far - 1.0).abs() <= 1.0 * 0.0625 + 1e-6, "{far}");
+        // outlier block sees coarse steps for the 1.0 entries
+        let near = d[1];
+        assert!((near - 1.0).abs() <= 400.0 / 448.0 * 0.5 + 0.2, "{near}");
+    }
+
+    #[test]
+    fn per_block_roundtrip_grid() {
+        let mut rng = Rng::new(3);
+        let xs = rng.normal_vec(64 * 64, 3.0);
+        let q = quant_per_block(&xs, 64, 64, 64, 64);
+        let d = dequant_per_block(&q);
+        let q2 = quant_per_block(&d, 64, 64, 64, 64);
+        // double quantization is idempotent on the values
+        assert_eq!(dequant_per_block(&q2), d);
+    }
+}

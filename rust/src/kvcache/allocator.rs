@@ -1,0 +1,154 @@
+//! Page allocator: fixed page pool with a free list, per-sequence page maps,
+//! and capacity accounting (the KV-memory budget drives Fig. 1's max batch
+//! size per context length).
+
+use std::collections::BTreeMap;
+
+/// Allocates page slots from a bounded pool.
+#[derive(Debug)]
+pub struct PageAllocator {
+    capacity: usize,
+    free: Vec<usize>,
+    /// seq id → allocated page indices, in sequence order
+    maps: BTreeMap<u64, Vec<usize>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum AllocError {
+    OutOfPages,
+    UnknownSequence,
+}
+
+impl PageAllocator {
+    pub fn new(capacity: usize) -> Self {
+        PageAllocator {
+            capacity,
+            free: (0..capacity).rev().collect(),
+            maps: BTreeMap::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.capacity - self.free.len()
+    }
+
+    /// Register a sequence (idempotent).
+    pub fn register(&mut self, seq: u64) {
+        self.maps.entry(seq).or_default();
+    }
+
+    /// The page table of a sequence.
+    pub fn pages_of(&self, seq: u64) -> Option<&[usize]> {
+        self.maps.get(&seq).map(|v| v.as_slice())
+    }
+
+    /// Grow a sequence by one page; returns the new page index.
+    pub fn grow(&mut self, seq: u64) -> Result<usize, AllocError> {
+        let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        let page = self.free.pop().ok_or(AllocError::OutOfPages)?;
+        map.push(page);
+        Ok(page)
+    }
+
+    /// Pages needed to hold `tokens` tokens.
+    pub fn pages_for(tokens: usize) -> usize {
+        tokens.div_ceil(super::PAGE_TOKENS)
+    }
+
+    /// Can `tokens` more tokens be appended to `seq` without exhausting the
+    /// pool? (admission control / backpressure input)
+    pub fn can_grow(&self, seq: u64, current_tokens: usize, extra: usize) -> bool {
+        let have = self.maps.get(&seq).map(|m| m.len()).unwrap_or(0);
+        let need = Self::pages_for(current_tokens + extra);
+        need.saturating_sub(have) <= self.free.len()
+    }
+
+    /// Release a sequence's pages back to the pool.
+    pub fn release(&mut self, seq: u64) -> usize {
+        if let Some(pages) = self.maps.remove(&seq) {
+            let n = pages.len();
+            self.free.extend(pages);
+            n
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grow_and_release() {
+        let mut a = PageAllocator::new(4);
+        a.register(1);
+        a.register(2);
+        assert_eq!(a.grow(1).unwrap(), 0); // free list hands out 0,1,2,…
+        assert_eq!(a.grow(1).unwrap(), 1);
+        assert_eq!(a.grow(2).unwrap(), 2);
+        assert_eq!(a.used_pages(), 3);
+        assert_eq!(a.pages_of(1).unwrap(), &[0, 1]);
+        assert_eq!(a.release(1), 2);
+        assert_eq!(a.free_pages(), 3);
+        assert_eq!(a.pages_of(1), None);
+    }
+
+    #[test]
+    fn exhaustion() {
+        let mut a = PageAllocator::new(2);
+        a.register(1);
+        a.grow(1).unwrap();
+        a.grow(1).unwrap();
+        assert_eq!(a.grow(1), Err(AllocError::OutOfPages));
+    }
+
+    #[test]
+    fn unknown_sequence() {
+        let mut a = PageAllocator::new(2);
+        assert_eq!(a.grow(42), Err(AllocError::UnknownSequence));
+    }
+
+    #[test]
+    fn can_grow_accounting() {
+        let mut a = PageAllocator::new(3);
+        a.register(1);
+        // 64 tokens → 1 page
+        assert!(a.can_grow(1, 0, 64));
+        // 200 tokens → 4 pages > capacity
+        assert!(!a.can_grow(1, 0, 200));
+        a.grow(1).unwrap();
+        // with 1 page held and 60 tokens used, +4 tokens fits the same page
+        assert!(a.can_grow(1, 60, 4));
+        // +5 tokens needs a second page; 2 free → ok
+        assert!(a.can_grow(1, 60, 5));
+    }
+
+    #[test]
+    fn pages_for_boundaries() {
+        assert_eq!(PageAllocator::pages_for(0), 0);
+        assert_eq!(PageAllocator::pages_for(1), 1);
+        assert_eq!(PageAllocator::pages_for(64), 1);
+        assert_eq!(PageAllocator::pages_for(65), 2);
+    }
+
+    #[test]
+    fn release_returns_pages_for_reuse() {
+        let mut a = PageAllocator::new(2);
+        a.register(1);
+        a.grow(1).unwrap();
+        a.grow(1).unwrap();
+        a.release(1);
+        a.register(2);
+        assert!(a.grow(2).is_ok());
+        assert!(a.grow(2).is_ok());
+    }
+}

@@ -1,0 +1,189 @@
+//! Block-granularity KV quantization with page-tail buffering — the
+//! *rejected* alternative of §3.1.1, implemented for the granularity
+//! ablation (`benches/ablation_granularity.rs`).
+//!
+//! FA3-style block-wise quantization needs a full 64-token block before it
+//! can quantize. During decoding, the newest tokens therefore sit in a raw
+//! f32 "tail buffer" until the block fills; every decode step over those
+//! tokens either (a) reads mixed-precision inputs (complex kernels) or
+//! (b) requantizes the partial block each step (wasted work). We model (b)
+//! and count the overheads the paper's per-token design eliminates.
+
+use super::page::PAGE_TOKENS;
+use crate::fp8::{e4m3_encode, per_token_scale, E4M3_MAX, SCALE_EPS};
+
+/// One sequence's block-granular content cache with a raw tail buffer.
+pub struct BlockwiseSeqCache {
+    d_c: usize,
+    /// completed blocks: codes + one scale per block
+    blocks: Vec<(Vec<u8>, f32)>,
+    /// raw f32 tail (< PAGE_TOKENS tokens)
+    tail: Vec<f32>,
+    tail_tokens: usize,
+    // ---- ablation counters -------------------------------------------------
+    /// tokens requantized due to partial-block re-processing
+    pub requant_tokens: u64,
+    /// peak bytes held in raw f32 tail buffers
+    pub peak_tail_bytes: usize,
+    /// quantization kernel launches (per-block flushes + per-step re-quants)
+    pub quant_launches: u64,
+}
+
+impl BlockwiseSeqCache {
+    pub fn new(d_c: usize) -> Self {
+        BlockwiseSeqCache {
+            d_c,
+            blocks: Vec::new(),
+            tail: Vec::with_capacity(PAGE_TOKENS * d_c),
+            tail_tokens: 0,
+            requant_tokens: 0,
+            peak_tail_bytes: 0,
+            quant_launches: 0,
+        }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.blocks.len() * PAGE_TOKENS + self.tail_tokens
+    }
+
+    /// Append one token; flush the tail into a quantized block when full.
+    pub fn append(&mut self, c_kv: &[f32]) {
+        assert_eq!(c_kv.len(), self.d_c);
+        self.tail.extend_from_slice(c_kv);
+        self.tail_tokens += 1;
+        self.peak_tail_bytes = self.peak_tail_bytes.max(self.tail.len() * 4);
+        if self.tail_tokens == PAGE_TOKENS {
+            // block-wise quantization: one scale for the whole 64-token block
+            let scale = per_token_scale(&self.tail); // max/448 over the block
+            let codes = self.tail.iter().map(|&x| e4m3_encode(x / scale)).collect();
+            self.blocks.push((codes, scale));
+            self.quant_launches += 1;
+            self.tail.clear();
+            self.tail_tokens = 0;
+        }
+    }
+
+    /// Produce the decode-step view: quantized blocks as-is plus an on-the-fly
+    /// requantization of the partial tail (the per-step overhead per-token
+    /// granularity avoids). Returns (values, per-block scales incl. tail).
+    pub fn decode_view(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let mut values = Vec::with_capacity(self.tokens() * self.d_c);
+        let mut scales = Vec::new();
+        for (codes, scale) in &self.blocks {
+            values.extend(codes.iter().map(|&b| crate::fp8::e4m3_decode(b)));
+            scales.push(*scale);
+        }
+        if self.tail_tokens > 0 {
+            // requantize the partial block THIS step (and again next step…)
+            let amax = self.tail.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = (amax / E4M3_MAX).max(SCALE_EPS);
+            values.extend(self.tail.iter().map(|&x| {
+                crate::fp8::e4m3_decode(e4m3_encode(x / scale))
+            }));
+            scales.push(scale);
+            self.requant_tokens += self.tail_tokens as u64;
+            self.quant_launches += 1;
+        }
+        (values, scales)
+    }
+}
+
+/// Per-token comparator with the same interface (the SnapMLA design): appends
+/// quantize instantly; decode views are free.
+pub struct PerTokenSeqCache {
+    d_c: usize,
+    codes: Vec<u8>,
+    scales: Vec<f32>,
+    pub quant_launches: u64,
+}
+
+impl PerTokenSeqCache {
+    pub fn new(d_c: usize) -> Self {
+        PerTokenSeqCache { d_c, codes: Vec::new(), scales: Vec::new(), quant_launches: 0 }
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn append(&mut self, c_kv: &[f32]) {
+        assert_eq!(c_kv.len(), self.d_c);
+        let scale = per_token_scale(c_kv);
+        self.codes.extend(c_kv.iter().map(|&x| e4m3_encode(x / scale)));
+        self.scales.push(scale);
+        self.quant_launches += 1; // fused into K-append: one launch per step
+    }
+
+    pub fn decode_view(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.codes.iter().map(|&b| crate::fp8::e4m3_decode(b)).collect(),
+            self.scales.clone(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn blockwise_buffers_tail_then_flushes() {
+        let mut c = BlockwiseSeqCache::new(8);
+        let mut rng = Rng::new(1);
+        for _ in 0..63 {
+            c.append(&rng.normal_vec(8, 1.0));
+        }
+        assert_eq!(c.blocks.len(), 0);
+        assert_eq!(c.tail_tokens, 63);
+        c.append(&rng.normal_vec(8, 1.0));
+        assert_eq!(c.blocks.len(), 1);
+        assert_eq!(c.tail_tokens, 0);
+        assert_eq!(c.tokens(), 64);
+    }
+
+    #[test]
+    fn decode_view_requantizes_tail_every_step() {
+        let mut c = BlockwiseSeqCache::new(8);
+        let mut rng = Rng::new(2);
+        let mut total_requant = 0;
+        // simulate 100 decode steps
+        for _ in 0..100 {
+            c.append(&rng.normal_vec(8, 1.0));
+            let (v, s) = c.decode_view();
+            assert_eq!(v.len(), c.tokens() * 8);
+            assert!(!s.is_empty());
+            total_requant = c.requant_tokens;
+        }
+        // tail requant work is quadratic-ish within each block: for 100 steps
+        // (one full block + 36 tail) the wasted tokens are large
+        assert!(total_requant > 1000, "{total_requant}");
+        assert!(c.peak_tail_bytes > 0);
+    }
+
+    #[test]
+    fn per_token_has_no_requant_overhead() {
+        let mut c = PerTokenSeqCache::new(8);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            c.append(&rng.normal_vec(8, 1.0));
+            let (v, s) = c.decode_view();
+            assert_eq!(v.len(), c.tokens() * 8);
+            assert_eq!(s.len(), c.tokens());
+        }
+        assert_eq!(c.quant_launches, 100); // exactly one per append, none extra
+    }
+
+    #[test]
+    fn blockwise_scale_is_shared_per_block() {
+        let mut c = BlockwiseSeqCache::new(4);
+        // one outlier token dominates the whole block's scale
+        for i in 0..64 {
+            let v = if i == 0 { vec![400.0; 4] } else { vec![0.5; 4] };
+            c.append(&v);
+        }
+        let (_, scales) = c.decode_view();
+        assert_eq!(scales.len(), 1);
+        assert!((scales[0] - 400.0 / 448.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,505 @@
+//! The multi-layer, multi-sequence paged KV cache.
+//!
+//! One *logical page* spans all model layers for 64 consecutive tokens of one
+//! sequence (so the page table is shared across layers, as in vLLM). Storage
+//! is per (logical page, layer): FP8 mode holds u8 E4M3 content + f32 scales
+//! + bf16 aligned RoPE; BF16 mode (FlashMLA baseline) holds bf16 content +
+//! bf16 RoPE.
+
+use super::allocator::{AllocError, PageAllocator};
+use super::page::{Page, PAGE_TOKENS};
+use crate::fp8::{bf16_decode, bf16_encode};
+use std::collections::BTreeMap;
+
+/// Cache precision mode (SnapMLA FP8 vs FlashMLA BF16 baseline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheMode {
+    Fp8,
+    Bf16,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    pub n_layers: usize,
+    pub d_c: usize,
+    pub d_r: usize,
+    pub mode: CacheMode,
+    /// pool capacity in logical pages (each backs all layers)
+    pub capacity_pages: usize,
+}
+
+impl CacheConfig {
+    /// Bytes of one logical page (all layers).
+    pub fn page_bytes(&self) -> usize {
+        let per_layer = match self.mode {
+            CacheMode::Fp8 => Page::nbytes(self.d_c, self.d_r),
+            CacheMode::Bf16 => PAGE_TOKENS * 2 * (self.d_c + self.d_r),
+        };
+        per_layer * self.n_layers
+    }
+
+    /// Bytes an f32 cache would need for the same tokens (for the memory-
+    /// reduction stat the paper's batch-size gains derive from).
+    pub fn page_bytes_f32(&self) -> usize {
+        PAGE_TOKENS * 4 * (self.d_c + self.d_r) * self.n_layers
+    }
+}
+
+/// BF16 page (baseline mode).
+#[derive(Clone)]
+struct Bf16Page {
+    content: Vec<u16>,
+    rope: Vec<u16>,
+}
+
+enum PageData {
+    Fp8(Vec<Page>),      // [n_layers]
+    Bf16(Vec<Bf16Page>), // [n_layers]
+}
+
+/// Sequence handle.
+pub type SeqHandle = u64;
+
+struct SeqState {
+    tokens: usize,
+}
+
+/// The paged KV cache.
+pub struct PagedKvCache {
+    pub cfg: CacheConfig,
+    alloc: PageAllocator,
+    pages: Vec<Option<PageData>>, // indexed by physical page id
+    seqs: BTreeMap<SeqHandle, SeqState>,
+    appends: u64, // stats: token-append operations
+}
+
+impl PagedKvCache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let mut pages = Vec::with_capacity(cfg.capacity_pages);
+        pages.resize_with(cfg.capacity_pages, || None);
+        PagedKvCache {
+            cfg,
+            alloc: PageAllocator::new(cfg.capacity_pages),
+            pages,
+            seqs: BTreeMap::new(),
+            appends: 0,
+        }
+    }
+
+    pub fn register(&mut self, seq: SeqHandle) {
+        self.alloc.register(seq);
+        self.seqs.entry(seq).or_insert(SeqState { tokens: 0 });
+    }
+
+    pub fn release(&mut self, seq: SeqHandle) {
+        if let Some(pages) = self.alloc.pages_of(seq).map(|p| p.to_vec()) {
+            for p in pages {
+                self.pages[p] = None;
+            }
+        }
+        self.alloc.release(seq);
+        self.seqs.remove(&seq);
+    }
+
+    pub fn tokens_of(&self, seq: SeqHandle) -> usize {
+        self.seqs.get(&seq).map(|s| s.tokens).unwrap_or(0)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.alloc.free_pages()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.alloc.used_pages()
+    }
+
+    pub fn can_append(&self, seq: SeqHandle, extra_tokens: usize) -> bool {
+        self.alloc.can_grow(seq, self.tokens_of(seq), extra_tokens)
+    }
+
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Real bytes held by allocated pages vs the f32 baseline.
+    pub fn memory_stats(&self) -> (usize, usize) {
+        let used = self.alloc.used_pages();
+        (used * self.cfg.page_bytes(), used * self.cfg.page_bytes_f32())
+    }
+
+    fn new_page_data(&self) -> PageData {
+        match self.cfg.mode {
+            CacheMode::Fp8 => PageData::Fp8(
+                (0..self.cfg.n_layers).map(|_| Page::new(self.cfg.d_c, self.cfg.d_r)).collect(),
+            ),
+            CacheMode::Bf16 => PageData::Bf16(
+                (0..self.cfg.n_layers)
+                    .map(|_| Bf16Page {
+                        content: vec![0; PAGE_TOKENS * self.cfg.d_c],
+                        rope: vec![0; PAGE_TOKENS * self.cfg.d_r],
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Fused-K-Append: quantize (mode-dependent) + paged write of ONE token
+    /// across all layers. `c_kv` and `k_r` are [n_layers * d_c] / [n_layers *
+    /// d_r] raw f32 values for this token.
+    pub fn append_token(
+        &mut self,
+        seq: SeqHandle,
+        c_kv: &[f32],
+        k_r: &[f32],
+    ) -> Result<(), AllocError> {
+        let (d_c, d_r, layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
+        assert_eq!(c_kv.len(), layers * d_c);
+        assert_eq!(k_r.len(), layers * d_r);
+        let state = self.seqs.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        let pos = state.tokens;
+        let slot = pos % PAGE_TOKENS;
+        let page_idx = pos / PAGE_TOKENS;
+        let table_len = self.alloc.pages_of(seq).map(|p| p.len()).unwrap_or(0);
+        let phys = if page_idx >= table_len {
+            let p = self.alloc.grow(seq)?;
+            self.pages[p] = Some(self.new_page_data());
+            p
+        } else {
+            self.alloc.pages_of(seq).unwrap()[page_idx]
+        };
+        let data = self.pages[phys].as_mut().expect("allocated page must exist");
+        match data {
+            PageData::Fp8(layers_pages) => {
+                for (l, page) in layers_pages.iter_mut().enumerate() {
+                    page.append_raw(
+                        slot,
+                        d_c,
+                        d_r,
+                        &c_kv[l * d_c..(l + 1) * d_c],
+                        &k_r[l * d_r..(l + 1) * d_r],
+                    );
+                }
+            }
+            PageData::Bf16(layers_pages) => {
+                for (l, page) in layers_pages.iter_mut().enumerate() {
+                    for i in 0..d_c {
+                        page.content[slot * d_c + i] = bf16_encode(c_kv[l * d_c + i]);
+                    }
+                    for i in 0..d_r {
+                        page.rope[slot * d_r + i] = bf16_encode(k_r[l * d_r + i]);
+                    }
+                }
+            }
+        }
+        let state = self.seqs.get_mut(&seq).unwrap();
+        state.tokens = pos + 1;
+        self.appends += 1;
+        Ok(())
+    }
+
+    /// Append a token whose FP8 quantization was already done by the XLA
+    /// graph (the decode step returns E4M3-grid values + scales): store the
+    /// codes directly, bit-exact with the in-graph quantization.
+    pub fn append_prequantized(
+        &mut self,
+        seq: SeqHandle,
+        k_c_grid: &[f32], // [layers * d_c] values on the E4M3 grid
+        k_r_aligned: &[f32],
+        sigma: &[f32], // [layers]
+    ) -> Result<(), AllocError> {
+        assert_eq!(self.cfg.mode, CacheMode::Fp8);
+        let (d_c, d_r, _layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
+        let state = self.seqs.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        let pos = state.tokens;
+        let slot = pos % PAGE_TOKENS;
+        let page_idx = pos / PAGE_TOKENS;
+        let table_len = self.alloc.pages_of(seq).map(|p| p.len()).unwrap_or(0);
+        let phys = if page_idx >= table_len {
+            let p = self.alloc.grow(seq)?;
+            self.pages[p] = Some(self.new_page_data());
+            p
+        } else {
+            self.alloc.pages_of(seq).unwrap()[page_idx]
+        };
+        let data = self.pages[phys].as_mut().unwrap();
+        if let PageData::Fp8(layers_pages) = data {
+            for (l, page) in layers_pages.iter_mut().enumerate() {
+                let codes: Vec<u8> = k_c_grid[l * d_c..(l + 1) * d_c]
+                    .iter()
+                    .map(|&x| crate::fp8::e4m3_encode(x))
+                    .collect();
+                page.write_token(
+                    slot,
+                    d_c,
+                    d_r,
+                    &codes,
+                    &k_r_aligned[l * d_r..(l + 1) * d_r],
+                    sigma[l],
+                );
+            }
+        }
+        let state = self.seqs.get_mut(&seq).unwrap();
+        state.tokens = pos + 1;
+        self.appends += 1;
+        Ok(())
+    }
+
+    /// Gather the kernel view of one (sequence, layer) into contiguous
+    /// buffers of `max_tokens` rows (padded with zeros): content values on
+    /// the E4M3 grid (or bf16 values in BF16 mode), aligned rope, and
+    /// per-token sigma (1.0 in BF16 mode).
+    pub fn gather_kernel_view(
+        &self,
+        seq: SeqHandle,
+        layer: usize,
+        max_tokens: usize,
+        content_out: &mut [f32],
+        rope_out: &mut [f32],
+        sigma_out: &mut [f32],
+    ) {
+        let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
+        assert!(content_out.len() >= max_tokens * d_c);
+        assert!(rope_out.len() >= max_tokens * d_r);
+        assert!(sigma_out.len() >= max_tokens);
+        content_out[..max_tokens * d_c].fill(0.0);
+        rope_out[..max_tokens * d_r].fill(0.0);
+        sigma_out[..max_tokens].fill(1.0);
+        let tokens = self.tokens_of(seq).min(max_tokens);
+        let Some(table) = self.alloc.pages_of(seq) else { return };
+        for t in 0..tokens {
+            let phys = table[t / PAGE_TOKENS];
+            let slot = t % PAGE_TOKENS;
+            match self.pages[phys].as_ref().unwrap() {
+                PageData::Fp8(layers_pages) => {
+                    let page = &layers_pages[layer];
+                    sigma_out[t] = page.kernel_view(
+                        slot,
+                        d_c,
+                        d_r,
+                        &mut content_out[t * d_c..(t + 1) * d_c],
+                        &mut rope_out[t * d_r..(t + 1) * d_r],
+                    );
+                }
+                PageData::Bf16(layers_pages) => {
+                    let page = &layers_pages[layer];
+                    for i in 0..d_c {
+                        content_out[t * d_c + i] = bf16_decode(page.content[slot * d_c + i]);
+                    }
+                    for i in 0..d_r {
+                        rope_out[t * d_r + i] = bf16_decode(page.rope[slot * d_r + i]);
+                    }
+                    sigma_out[t] = 1.0;
+                }
+            }
+        }
+    }
+
+    /// Fused-Fetch-Dequant of a token range into f32 (chunked prefill /
+    /// prefix-cache reuse path).
+    pub fn fetch_dequant_range(
+        &self,
+        seq: SeqHandle,
+        layer: usize,
+        start: usize,
+        count: usize,
+        content_out: &mut [f32],
+        rope_out: &mut [f32],
+    ) {
+        let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
+        let table = self.alloc.pages_of(seq).expect("sequence registered");
+        for k in 0..count {
+            let t = start + k;
+            let phys = table[t / PAGE_TOKENS];
+            let slot = t % PAGE_TOKENS;
+            match self.pages[phys].as_ref().unwrap() {
+                PageData::Fp8(layers_pages) => {
+                    layers_pages[layer].fetch_dequant(
+                        slot,
+                        d_c,
+                        d_r,
+                        &mut content_out[k * d_c..(k + 1) * d_c],
+                        &mut rope_out[k * d_r..(k + 1) * d_r],
+                    );
+                }
+                PageData::Bf16(layers_pages) => {
+                    let page = &layers_pages[layer];
+                    for i in 0..d_c {
+                        content_out[k * d_c + i] = bf16_decode(page.content[slot * d_c + i]);
+                    }
+                    for i in 0..d_r {
+                        rope_out[k * d_r + i] = bf16_decode(page.rope[slot * d_r + i]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn cfg(mode: CacheMode) -> CacheConfig {
+        CacheConfig { n_layers: 2, d_c: 16, d_r: 8, mode, capacity_pages: 8 }
+    }
+
+    fn rand_token(rng: &mut Rng, cfg: &CacheConfig) -> (Vec<f32>, Vec<f32>) {
+        (
+            rng.normal_vec(cfg.n_layers * cfg.d_c, 2.0),
+            rng.normal_vec(cfg.n_layers * cfg.d_r, 30.0),
+        )
+    }
+
+    #[test]
+    fn append_and_gather_fp8() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        let mut rng = Rng::new(1);
+        let mut raw = Vec::new();
+        for _ in 0..70 {
+            let (ck, kr) = rand_token(&mut rng, &c);
+            cache.append_token(1, &ck, &kr).unwrap();
+            raw.push((ck, kr));
+        }
+        assert_eq!(cache.tokens_of(1), 70);
+        assert_eq!(cache.used_pages(), 2); // 70 tokens → 2 pages
+
+        let mut content = vec![0.0f32; 128 * c.d_c];
+        let mut rope = vec![0.0f32; 128 * c.d_r];
+        let mut sigma = vec![0.0f32; 128];
+        for layer in 0..2 {
+            cache.gather_kernel_view(1, layer, 128, &mut content, &mut rope, &mut sigma);
+            for (t, (ck, kr)) in raw.iter().enumerate() {
+                let row = &ck[layer * c.d_c..(layer + 1) * c.d_c];
+                let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for i in 0..c.d_c {
+                    let got = content[t * c.d_c + i] * sigma[t];
+                    assert!((got - row[i]).abs() <= amax * 0.0625 + 1e-6);
+                }
+                for i in 0..c.d_r {
+                    let got = rope[t * c.d_r + i] * sigma[t];
+                    let want = kr[layer * c.d_r + i];
+                    assert!(((got - want) / want).abs() < 0.02, "{got} {want}");
+                }
+            }
+            // padding rows zeroed with sigma 1
+            assert_eq!(content[70 * c.d_c], 0.0);
+            assert_eq!(sigma[127], 1.0);
+        }
+    }
+
+    #[test]
+    fn bf16_mode_roundtrip() {
+        let c = cfg(CacheMode::Bf16);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(9);
+        let mut rng = Rng::new(2);
+        let (ck, kr) = rand_token(&mut rng, &c);
+        cache.append_token(9, &ck, &kr).unwrap();
+        let mut content = vec![0.0f32; 64 * c.d_c];
+        let mut rope = vec![0.0f32; 64 * c.d_r];
+        let mut sigma = vec![0.0f32; 64];
+        cache.gather_kernel_view(9, 1, 64, &mut content, &mut rope, &mut sigma);
+        for i in 0..c.d_c {
+            let want = ck[c.d_c + i];
+            assert!(((content[i] - want) / want).abs() < 0.01);
+        }
+        assert_eq!(sigma[0], 1.0);
+    }
+
+    #[test]
+    fn prequantized_append_is_bit_exact() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(5);
+        // values already on the E4M3 grid
+        let grid: Vec<f32> = (0..c.n_layers * c.d_c)
+            .map(|i| crate::fp8::e4m3_round((i as f32 - 16.0) * 0.25))
+            .collect();
+        let rope: Vec<f32> = (0..c.n_layers * c.d_r).map(|i| i as f32 * 0.5).collect();
+        let sigma = vec![0.013f32, 2.5];
+        cache.append_prequantized(5, &grid, &rope, &sigma).unwrap();
+        let mut content = vec![0.0f32; 64 * c.d_c];
+        let mut r = vec![0.0f32; 64 * c.d_r];
+        let mut s = vec![0.0f32; 64];
+        for layer in 0..2 {
+            cache.gather_kernel_view(5, layer, 64, &mut content, &mut r, &mut s);
+            assert_eq!(s[0], sigma[layer]);
+            for i in 0..c.d_c {
+                assert_eq!(content[i], grid[layer * c.d_c + i], "layer {layer} i {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn release_frees_pages_and_data() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        let mut rng = Rng::new(3);
+        for _ in 0..65 {
+            let (ck, kr) = rand_token(&mut rng, &c);
+            cache.append_token(1, &ck, &kr).unwrap();
+        }
+        assert_eq!(cache.used_pages(), 2);
+        cache.release(1);
+        assert_eq!(cache.used_pages(), 0);
+        assert_eq!(cache.tokens_of(1), 0);
+    }
+
+    #[test]
+    fn capacity_exhaustion_and_can_append() {
+        let mut c = cfg(CacheMode::Fp8);
+        c.capacity_pages = 1;
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        let mut rng = Rng::new(4);
+        for _ in 0..64 {
+            let (ck, kr) = rand_token(&mut rng, &c);
+            cache.append_token(1, &ck, &kr).unwrap();
+        }
+        assert!(!cache.can_append(1, 1));
+        let (ck, kr) = rand_token(&mut rng, &c);
+        assert!(cache.append_token(1, &ck, &kr).is_err());
+    }
+
+    #[test]
+    fn memory_stats_show_reduction() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        let mut rng = Rng::new(5);
+        let (ck, kr) = rand_token(&mut rng, &c);
+        cache.append_token(1, &ck, &kr).unwrap();
+        let (used, f32_equiv) = cache.memory_stats();
+        assert!(used * 2 < f32_equiv, "{used} vs {f32_equiv}");
+    }
+
+    #[test]
+    fn interleaved_sequences_stay_isolated() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        cache.register(2);
+        let mut rng = Rng::new(6);
+        let (ck1, kr1) = rand_token(&mut rng, &c);
+        let (ck2, kr2) = rand_token(&mut rng, &c);
+        cache.append_token(1, &ck1, &kr1).unwrap();
+        cache.append_token(2, &ck2, &kr2).unwrap();
+        cache.append_token(1, &ck1, &kr1).unwrap();
+        assert_eq!(cache.tokens_of(1), 2);
+        assert_eq!(cache.tokens_of(2), 1);
+        let mut c1 = vec![0.0f32; 64 * c.d_c];
+        let mut c2 = vec![0.0f32; 64 * c.d_c];
+        let mut r = vec![0.0f32; 64 * c.d_r];
+        let mut s = vec![0.0f32; 64];
+        cache.gather_kernel_view(1, 0, 64, &mut c1, &mut r, &mut s);
+        cache.gather_kernel_view(2, 0, 64, &mut c2, &mut r, &mut s);
+        // token 0 of each sequence must reflect its own data
+        assert_ne!(&c1[..c.d_c], &c2[..c.d_c]);
+        // seq 1 token 1 equals token 0 (same input appended twice)
+        assert_eq!(&c1[..c.d_c], &c1[c.d_c..2 * c.d_c]);
+    }
+}

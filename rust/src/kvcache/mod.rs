@@ -1,0 +1,25 @@
+//! Paged FP8 KV cache — the serving-grade cache manager (paper §3.1.1/§3.3.1).
+//!
+//! Stores the MLA latent cache exactly as SnapMLA's kernels consume it:
+//! * content: **u8 E4M3 codes** (true FP8 storage, 4x smaller than f32)
+//! * per-token scales: f32
+//! * decoupled RoPE: **u16 bf16**, pre-scaled by 1/sigma (Key Step 1)
+//!
+//! Page size = 64 tokens = BLOCK_N, so a page maps 1:1 onto a kernel tile and
+//! an L2-cache-aligned TMA descriptor in the paper's layer-2 optimization.
+//!
+//! `append` implements the Fused-K-Append semantics: per-token quantization,
+//! scale-domain alignment and the paged non-contiguous write happen in one
+//! call — no tail buffers, any token count, instant quantization (the
+//! decoding-centric granularity argument of §3.1.1). The per-block
+//! alternative with page-tail rebuffering lives in `blockwise.rs` for the
+//! granularity ablation.
+
+pub mod allocator;
+pub mod blockwise;
+pub mod cache;
+pub mod page;
+
+pub use allocator::PageAllocator;
+pub use cache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
+pub use page::{Page, PAGE_TOKENS};

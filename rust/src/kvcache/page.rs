@@ -1,0 +1,172 @@
+//! A single KV-cache page: 64 tokens of quantized latent content + aligned
+//! RoPE + per-token scales.
+
+use crate::fp8::{bf16_decode, bf16_encode, e4m3_decode, e4m3_encode};
+
+/// Tokens per page — equals the kernel's BLOCK_N tile (paper §3.3.2: the
+/// 64-token page keeps each atomic load 128-byte aligned on the content dim).
+pub const PAGE_TOKENS: usize = 64;
+
+/// One page of cache storage for a single layer.
+#[derive(Clone)]
+pub struct Page {
+    /// u8 E4M3 codes, row-major [PAGE_TOKENS, d_c]
+    pub content: Vec<u8>,
+    /// u16 bf16 of (rope / sigma), row-major [PAGE_TOKENS, d_r]
+    pub rope: Vec<u16>,
+    /// f32 per-token content scales [PAGE_TOKENS]
+    pub scales: Vec<f32>,
+    /// valid tokens in this page (≤ PAGE_TOKENS)
+    pub used: usize,
+}
+
+impl Page {
+    pub fn new(d_c: usize, d_r: usize) -> Page {
+        Page {
+            content: vec![0; PAGE_TOKENS * d_c],
+            rope: vec![0; PAGE_TOKENS * d_r],
+            scales: vec![0.0; PAGE_TOKENS],
+            used: 0,
+        }
+    }
+
+    /// Bytes of real storage this page holds.
+    pub fn nbytes(d_c: usize, d_r: usize) -> usize {
+        PAGE_TOKENS * (d_c + 2 * d_r + 4)
+    }
+
+    /// Write one already-quantized token at `slot`.
+    pub fn write_token(
+        &mut self,
+        slot: usize,
+        d_c: usize,
+        d_r: usize,
+        content_codes: &[u8],
+        rope_aligned: &[f32],
+        scale: f32,
+    ) {
+        debug_assert!(slot < PAGE_TOKENS);
+        debug_assert_eq!(content_codes.len(), d_c);
+        debug_assert_eq!(rope_aligned.len(), d_r);
+        self.content[slot * d_c..(slot + 1) * d_c].copy_from_slice(content_codes);
+        for (o, &x) in self.rope[slot * d_r..(slot + 1) * d_r].iter_mut().zip(rope_aligned) {
+            *o = bf16_encode(x);
+        }
+        self.scales[slot] = scale;
+        self.used = self.used.max(slot + 1);
+    }
+
+    /// Quantize + write one raw token (the in-page half of Fused-K-Append).
+    pub fn append_raw(&mut self, slot: usize, d_c: usize, d_r: usize, c_kv: &[f32], k_r: &[f32]) {
+        let scale = crate::fp8::per_token_scale(c_kv);
+        let codes: Vec<u8> = c_kv.iter().map(|&x| e4m3_encode(x / scale)).collect();
+        // Key Step 1: align RoPE into the content-scale domain at bf16
+        let aligned: Vec<f32> =
+            k_r.iter().map(|&x| bf16_decode(bf16_encode(x)) / scale).collect();
+        self.write_token(slot, d_c, d_r, &codes, &aligned, scale);
+    }
+
+    /// Dequantize token `slot` into caller buffers (Fused-Fetch-Dequant).
+    pub fn fetch_dequant(
+        &self,
+        slot: usize,
+        d_c: usize,
+        d_r: usize,
+        content_out: &mut [f32],
+        rope_out: &mut [f32],
+    ) {
+        let s = self.scales[slot];
+        for (o, &b) in content_out.iter_mut().zip(&self.content[slot * d_c..(slot + 1) * d_c]) {
+            *o = e4m3_decode(b) * s;
+        }
+        for (o, &b) in rope_out.iter_mut().zip(&self.rope[slot * d_r..(slot + 1) * d_r]) {
+            *o = bf16_decode(b) * s;
+        }
+    }
+
+    /// Read the *kernel view* of token `slot`: (content on E4M3 grid,
+    /// rope/sigma, sigma) — what the SnapMLA kernel consumes directly.
+    pub fn kernel_view(
+        &self,
+        slot: usize,
+        d_c: usize,
+        d_r: usize,
+        content_out: &mut [f32],
+        rope_out: &mut [f32],
+    ) -> f32 {
+        for (o, &b) in content_out.iter_mut().zip(&self.content[slot * d_c..(slot + 1) * d_c]) {
+            *o = e4m3_decode(b);
+        }
+        for (o, &b) in rope_out.iter_mut().zip(&self.rope[slot * d_r..(slot + 1) * d_r]) {
+            *o = bf16_decode(b);
+        }
+        self.scales[slot]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn append_and_fetch_roundtrip() {
+        let (d_c, d_r) = (32, 8);
+        let mut page = Page::new(d_c, d_r);
+        let mut rng = Rng::new(1);
+        let c: Vec<f32> = rng.normal_vec(d_c, 3.0);
+        let r: Vec<f32> = rng.normal_vec(d_r, 100.0);
+        page.append_raw(5, d_c, d_r, &c, &r);
+        assert_eq!(page.used, 6);
+
+        let mut c_out = vec![0.0; d_c];
+        let mut r_out = vec![0.0; d_r];
+        page.fetch_dequant(5, d_c, d_r, &mut c_out, &mut r_out);
+        let amax = c.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for (x, y) in c.iter().zip(&c_out) {
+            assert!((x - y).abs() <= amax * 0.0625 + 1e-6);
+        }
+        // rope restores to bf16 accuracy (sigma cancels exactly)
+        for (x, y) in r.iter().zip(&r_out) {
+            assert!(((x - y) / x).abs() <= 0.01, "{x} {y}");
+        }
+    }
+
+    #[test]
+    fn kernel_view_matches_grid() {
+        let (d_c, d_r) = (16, 4);
+        let mut page = Page::new(d_c, d_r);
+        let c: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        let r = vec![7.0f32; 4];
+        page.append_raw(0, d_c, d_r, &c, &r);
+        let mut cq = vec![0.0; d_c];
+        let mut rq = vec![0.0; d_r];
+        let sigma = page.kernel_view(0, d_c, d_r, &mut cq, &mut rq);
+        // reconstruct: cq * sigma ≈ c
+        for (x, y) in c.iter().zip(&cq) {
+            assert!((x - y * sigma).abs() <= 8.0 * 0.0625 + 1e-6);
+        }
+        // rq * sigma ≈ bf16(r)
+        for y in &rq {
+            assert!((y * sigma - 7.0).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn memory_footprint() {
+        // d_c=128 content + d_r=32 rope: u8+scales vs f32 baseline
+        let nbytes = Page::nbytes(128, 32);
+        let f32_bytes = PAGE_TOKENS * (128 + 32) * 4;
+        assert!(nbytes * 2 < f32_bytes, "paged FP8 must halve f32 storage");
+        assert_eq!(nbytes, 64 * (128 + 64 + 4));
+    }
+
+    #[test]
+    fn partial_page_tracks_used() {
+        let mut page = Page::new(8, 4);
+        assert_eq!(page.used, 0);
+        page.append_raw(0, 8, 4, &[1.0; 8], &[1.0; 4]);
+        page.append_raw(1, 8, 4, &[1.0; 8], &[1.0; 4]);
+        assert_eq!(page.used, 2);
+    }
+}

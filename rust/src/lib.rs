@@ -1,0 +1,41 @@
+//! SnapMLA — FP8 MLA decoding via hardware-aware quantized pipelining.
+//!
+//! A full reproduction of the SnapMLA paper as a three-layer
+//! Rust + JAX + Pallas serving stack:
+//!
+//! * **L1/L2 (build-time Python)** — the SnapMLA FP8 decode-attention Pallas
+//!   kernel and an absorbed-mode MLA transformer, AOT-lowered to HLO text
+//!   artifacts (`make artifacts`, see `python/compile/`).
+//! * **L3 (this crate)** — the serving coordinator: request router,
+//!   continuous batcher, prefill/decode scheduler, paged FP8 KV cache,
+//!   DP/TP cluster simulation, and a PJRT runtime (`xla` crate) that loads
+//!   and executes the artifacts. Python never runs on the request path.
+//!
+//! The offline crate set contains only the `xla` closure, so `util` provides
+//! hand-rolled JSON, CLI parsing, RNG, statistics, property testing and a
+//! criterion-style bench harness (see DESIGN.md "Deliberate deviations").
+//!
+//! Module map (DESIGN.md has the full inventory):
+//! * [`fp8`] — bit-exact E4M3/BF16 codecs and the paper's quantizers
+//! * [`mla`] — f32 MLA attention reference, the Algorithm-1 software
+//!   pipeline (incl. the App. E dual-warp-group hazard study), synthetic
+//!   KV statistics and fidelity metrics
+//! * [`kvcache`] — paged KV cache: u8 FP8 content + bf16 RoPE + f32 scales
+//! * [`runtime`] — PJRT artifact registry, weight loading, model engine
+//! * [`coordinator`] — requests, sequences, batcher, scheduler, router,
+//!   serving loop, metrics
+//! * [`cluster`] — DP/TP topology and collective cost model
+//! * [`perfmodel`] — calibrated Hopper roofline/kernel/E2E timing model
+//! * [`workload`] — trace generators and the synthetic benchmark suite
+//! * [`bench`] — timing harness used by `cargo bench` targets
+
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod fp8;
+pub mod kvcache;
+pub mod mla;
+pub mod perfmodel;
+pub mod runtime;
+pub mod util;
+pub mod workload;

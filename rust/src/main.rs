@@ -1,0 +1,178 @@
+//! snapmla — CLI for the SnapMLA serving stack.
+//!
+//! Subcommands:
+//!   info                         — artifact/model summary
+//!   serve   [--mode fp8|bf16] [--requests N] [--dp N] [--pages N] …
+//!                                — serve a synthetic trace, print metrics
+//!   fidelity [--ctx N] [--layers N]
+//!                                — Table-3 config fidelity study (rust sim)
+//!   perf    [--model deepseek|longcat]
+//!                                — Fig.-1-style analytical throughput sweep
+//!
+//! `cargo run --release -- serve --requests 16`
+
+use snapmla::cluster::NodeTopology;
+use snapmla::coordinator::{Router, ServeRequest, Server};
+use snapmla::kvcache::CacheMode;
+use snapmla::mla::fidelity::{build_stimuli, layerwise_errors};
+use snapmla::mla::quant_configs::QuantConfig;
+use snapmla::mla::Shape;
+use snapmla::perfmodel::{self, GpuSpec, KernelKind, ModelSpec};
+use snapmla::runtime::{Manifest, ModelEngine};
+use snapmla::util::cli::Args;
+use snapmla::util::rng::Rng;
+use snapmla::util::table::{f1, f2, f4, Table};
+use snapmla::workload::{TraceConfig, TraceGen};
+use std::path::PathBuf;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_with_flags(&["quick", "verbose"]);
+    match args.positional.first().map(String::as_str) {
+        Some("info") => info(&args),
+        Some("serve") => serve(&args),
+        Some("fidelity") => fidelity(&args),
+        Some("perf") => perf(&args),
+        _ => {
+            eprintln!("usage: snapmla <info|serve|fidelity|perf> [flags]");
+            eprintln!("see rust/src/main.rs docs for flags");
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!(
+        "model: {} params, d_model {}, {} layers, H{} d_c {} d_r {} vocab {}",
+        m.model.params, m.model.d_model, m.model.n_layers, m.model.n_heads,
+        m.model.d_c, m.model.d_r, m.model.vocab
+    );
+    let mut t = Table::new("artifacts", &["name", "kind", "mode", "batch", "seq", "heads"]);
+    for a in m.artifacts.values() {
+        t.row(vec![
+            a.name.clone(),
+            format!("{:?}", a.kind),
+            a.mode.clone(),
+            a.batch.to_string(),
+            a.seq.to_string(),
+            a.heads.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let mode = match args.get_or("mode", "fp8") {
+        "bf16" => CacheMode::Bf16,
+        _ => CacheMode::Fp8,
+    };
+    let dp = args.usize_or("dp", 1);
+    let pages = args.usize_or("pages", 256);
+    let dir = artifacts_dir(args);
+    let trace = TraceGen::generate(&TraceConfig {
+        seed: args.u64_or("seed", 0),
+        num_requests: args.usize_or("requests", 8),
+        mean_interarrival_s: args.f64_or("interarrival", 0.0),
+        prompt_min: args.usize_or("prompt-min", 8),
+        prompt_max: args.usize_or("prompt-max", 96),
+        out_min: args.usize_or("out-min", 16),
+        out_max: args.usize_or("out-max", 96),
+        temperature: args.f64_or("temperature", 0.7) as f32,
+    });
+
+    let ranks: anyhow::Result<Vec<Server>> = (0..dp)
+        .map(|_| Ok(Server::new(ModelEngine::load(&dir, mode)?, pages)))
+        .collect();
+    let mut router = Router::new(ranks?);
+    let mut rng = Rng::new(1234);
+    for r in &trace {
+        let prompt = synth_prompt(&mut rng, r.prompt_tokens);
+        router.submit(ServeRequest {
+            id: r.id,
+            prompt,
+            max_new_tokens: r.max_new_tokens,
+            temperature: r.temperature,
+            seed: r.id, ignore_eos: false });
+    }
+    let outcomes = router.run_to_completion()?;
+    println!("completed {} requests", outcomes.len());
+    for (i, rank) in router.ranks.iter().enumerate() {
+        println!("{}", rank.metrics.render(&format!("rank {i} ({mode:?})")));
+        let s = &rank.engine.stats;
+        println!(
+            "engine: {} decode steps, {} compiles, gather {:.2}s exec {:.2}s append {:.2}s",
+            s.decode_steps, s.compiles, s.gather_s, s.execute_s, s.append_s
+        );
+    }
+    Ok(())
+}
+
+fn synth_prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
+    // repeat-family prompt in the synthetic token language
+    let mlen = rng.range_usize(2, 6);
+    let motif: Vec<i32> = (0..mlen).map(|_| 64 + rng.below(256) as i32).collect();
+    let mut p = vec![1];
+    for i in 0..len.saturating_sub(1) {
+        p.push(motif[i % mlen]);
+    }
+    p
+}
+
+fn fidelity(args: &Args) -> anyhow::Result<()> {
+    let ctx = args.usize_or("ctx", 2048);
+    let layers = args.usize_or("layers", 8);
+    let shape = Shape { heads: 8, d_c: 128, d_r: 32 };
+    let stimuli = build_stimuli(7, layers, ctx, &shape);
+    let mut t = Table::new(
+        &format!("layer-wise fidelity (ctx {ctx})"),
+        &["config", "mean rel-l2", "final rel-l2", "final cosine"],
+    );
+    for cfg in QuantConfig::ALL {
+        let r = layerwise_errors(cfg, &stimuli, &shape, 13);
+        t.row(vec![
+            cfg.name().to_string(),
+            f4(r.mean_rel()),
+            f4(r.final_rel()),
+            f4(r.per_layer.last().unwrap().cosine),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn perf(args: &Args) -> anyhow::Result<()> {
+    let gpu = GpuSpec::h20();
+    let model = match args.get_or("model", "deepseek") {
+        "longcat" => ModelSpec::longcat_flash(),
+        _ => ModelSpec::deepseek_v31(),
+    };
+    let mut t = Table::new(
+        &format!("modeled decode throughput — {}", model.name),
+        &["config", "ctx", "bf16 tok/s", "fp8 tok/s", "speedup", "b/rank bf16", "b/rank fp8"],
+    );
+    for topo in NodeTopology::enumerate(8) {
+        for ctx in [16_384usize, 32_768, 65_536, 131_072] {
+            let cfg = topo.config;
+            let bf =
+                perfmodel::e2e::serving_point(&gpu, &model, &cfg, ctx, KernelKind::FlashMlaBf16);
+            let fp =
+                perfmodel::e2e::serving_point(&gpu, &model, &cfg, ctx, KernelKind::SnapMlaFp8);
+            t.row(vec![
+                cfg.label(),
+                format!("{}k", ctx / 1024),
+                f1(bf.tokens_per_s),
+                f1(fp.tokens_per_s),
+                format!("{}x", f2(fp.tokens_per_s / bf.tokens_per_s)),
+                bf.batch_per_rank.to_string(),
+                fp.batch_per_rank.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

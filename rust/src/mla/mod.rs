@@ -1,0 +1,61 @@
+//! MLA decode-attention math in rust: the f32 oracle, the exact SnapMLA
+//! Algorithm-1 software pipeline (incl. the Appendix-E dual-warp-group
+//! ordering hazards), Table-3 quantization configs, synthetic KV statistics
+//! and fidelity metrics.
+//!
+//! This module is the *numerics twin* of the Pallas kernel: it shares the
+//! E4M3/BF16 grid with `crate::fp8` (itself bit-matched to the python side),
+//! so pipeline properties proven here transfer to the kernel. It also powers
+//! the long-context fidelity bench (Fig. 5) where running the interpret-mode
+//! kernel at 32k tokens would be impractical.
+
+pub mod fidelity;
+pub mod pipeline;
+pub mod quant_configs;
+pub mod ref_attn;
+pub mod synth;
+
+/// Shape of one decode-attention call (T*H query rows over an N-token cache).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Shape {
+    pub heads: usize,
+    pub d_c: usize,
+    pub d_r: usize,
+}
+
+impl Shape {
+    pub fn sm_scale(&self) -> f32 {
+        1.0 / ((self.d_c + self.d_r) as f32).sqrt()
+    }
+
+    /// The paper's kernel shape (DeepSeek-V3: nine 64-wide QK groups).
+    pub fn paper(heads: usize) -> Shape {
+        Shape { heads, d_c: 512, d_r: 64 }
+    }
+
+    /// The small serving model's shape.
+    pub fn small() -> Shape {
+        Shape { heads: 8, d_c: 128, d_r: 32 }
+    }
+}
+
+/// Query operands for one decode step: row-major [heads, d_c] / [heads, d_r].
+#[derive(Clone, Debug)]
+pub struct Query {
+    pub q_c: Vec<f32>,
+    pub q_r: Vec<f32>,
+}
+
+/// Full-precision KV cache: row-major [n, d_c] content + [n, d_r] rope.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    pub k_c: Vec<f32>,
+    pub k_r: Vec<f32>,
+    pub n: usize,
+}
+
+impl Cache {
+    pub fn new(n: usize, shape: &Shape) -> Cache {
+        Cache { k_c: vec![0.0; n * shape.d_c], k_r: vec![0.0; n * shape.d_r], n }
+    }
+}

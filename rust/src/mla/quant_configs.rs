@@ -1,0 +1,189 @@
+//! Table-3 KV-cache quantization configurations (mirrors
+//! `python/compile/kernels/ref.py::QUANT_CONFIGS`).
+//!
+//! Each config maps a full-precision cache to its dequantized-equivalent
+//! values; attention is then evaluated in f32 so the measured error isolates
+//! the cache treatment (the Fig. 5 methodology).
+
+use super::{Cache, Shape};
+use crate::fp8::{
+    bf16_round, dequant_per_block, e4m3_round, quant_per_block, quant_per_tensor,
+    quant_per_token,
+};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantConfig {
+    /// SnapMLA: per-token FP8 content, bf16 RoPE (RoPE-aware).
+    SnapMla,
+    /// Config A: per-token RoPE-unaware — one shared scale over [content;rope].
+    ConfigA,
+    /// Config B: per-tensor static (fixed scale 1.0), RoPE-aware.
+    ConfigB,
+    /// Config C: per-tensor dynamic, RoPE-aware.
+    ConfigC,
+    /// Config D: per-block (64x64), RoPE-aware.
+    ConfigD,
+}
+
+impl QuantConfig {
+    pub const ALL: [QuantConfig; 5] = [
+        QuantConfig::SnapMla,
+        QuantConfig::ConfigA,
+        QuantConfig::ConfigB,
+        QuantConfig::ConfigC,
+        QuantConfig::ConfigD,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantConfig::SnapMla => "SnapMLA (Per-Token RoPE-Aware)",
+            QuantConfig::ConfigA => "Config A (Per-Token RoPE-Unaware)",
+            QuantConfig::ConfigB => "Config B (Per-Tensor Static 1.0)",
+            QuantConfig::ConfigC => "Config C (Per-Tensor Dynamic)",
+            QuantConfig::ConfigD => "Config D (Per-Block)",
+        }
+    }
+
+    /// Apply the config to a cache, returning dequantized-equivalent values.
+    pub fn apply(&self, shape: &Shape, cache: &Cache) -> Cache {
+        let (d_c, d_r, n) = (shape.d_c, shape.d_r, cache.n);
+        let mut out = Cache::new(n, shape);
+        match self {
+            QuantConfig::SnapMla => {
+                for j in 0..n {
+                    let q = quant_per_token(&cache.k_c[j * d_c..(j + 1) * d_c]);
+                    q.dequant_into(&mut out.k_c[j * d_c..(j + 1) * d_c]);
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            QuantConfig::ConfigA => {
+                // one shared per-token scale over the concatenated KV vector
+                let mut row = vec![0.0f32; d_c + d_r];
+                for j in 0..n {
+                    row[..d_c].copy_from_slice(&cache.k_c[j * d_c..(j + 1) * d_c]);
+                    row[d_c..].copy_from_slice(&cache.k_r[j * d_r..(j + 1) * d_r]);
+                    let q = quant_per_token(&row);
+                    let d = q.dequant();
+                    out.k_c[j * d_c..(j + 1) * d_c].copy_from_slice(&d[..d_c]);
+                    out.k_r[j * d_r..(j + 1) * d_r].copy_from_slice(&d[d_c..]);
+                }
+            }
+            QuantConfig::ConfigB => {
+                for (o, &x) in out.k_c.iter_mut().zip(&cache.k_c) {
+                    *o = e4m3_round(x); // scale 1.0
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            QuantConfig::ConfigC => {
+                let (codes, s) = quant_per_tensor(&cache.k_c, None);
+                for (o, &c) in out.k_c.iter_mut().zip(&codes) {
+                    *o = crate::fp8::e4m3_decode(c) * s;
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            QuantConfig::ConfigD => {
+                // 64x64 blocks over [n, d_c]; degrade gracefully if not divisible
+                let br = if n % 64 == 0 { 64 } else { n };
+                let bc = if d_c % 64 == 0 { 64 } else { d_c };
+                let q = quant_per_block(&cache.k_c, n, d_c, br, bc);
+                out.k_c = dequant_per_block(&q);
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+        }
+        out
+    }
+}
+
+fn bf16_rope(src: &[f32], dst: &mut [f32]) {
+    for (o, &x) in dst.iter_mut().zip(src) {
+        *o = bf16_round(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mla::synth;
+    use crate::util::rng::Rng;
+    use crate::util::stats::mse;
+
+    fn synth_cache(seed: u64, n: usize, shape: &Shape) -> Cache {
+        let mut rng = Rng::new(seed);
+        Cache {
+            k_c: synth::content(&mut rng, n, shape.d_c),
+            k_r: synth::rope(&mut rng, n, shape.d_r),
+            n,
+        }
+    }
+
+    #[test]
+    fn snapmla_keeps_rope_at_bf16() {
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let cache = synth_cache(1, 128, &shape);
+        let out = QuantConfig::SnapMla.apply(&shape, &cache);
+        for (x, y) in cache.k_r.iter().zip(&out.k_r) {
+            assert_eq!(*y, bf16_round(*x));
+        }
+    }
+
+    #[test]
+    fn config_a_couples_rope_and_content_scale() {
+        // with a huge rope outlier, config A's content error grows vs SnapMLA
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let cache = synth_cache(2, 256, &shape);
+        let snap = QuantConfig::SnapMla.apply(&shape, &cache);
+        let a = QuantConfig::ConfigA.apply(&shape, &cache);
+        let rope_err_snap = mse(&snap.k_r, &cache.k_r);
+        let rope_err_a = mse(&a.k_r, &cache.k_r);
+        assert!(rope_err_a > 5.0 * rope_err_snap.max(1e-12),
+            "rope: snap {rope_err_snap} vs A {rope_err_a}");
+    }
+
+    #[test]
+    fn config_b_saturates_sinks() {
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let cache = synth_cache(3, 512, &shape);
+        let amax = cache.k_c.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(amax > 448.0, "generator must produce sink tokens: {amax}");
+        let b = QuantConfig::ConfigB.apply(&shape, &cache);
+        let bmax = b.k_c.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert_eq!(bmax, 448.0);
+        // and the MSE blows up vs per-token
+        let snap = QuantConfig::SnapMla.apply(&shape, &cache);
+        assert!(mse(&b.k_c, &cache.k_c) > 5.0 * mse(&snap.k_c, &cache.k_c));
+    }
+
+    #[test]
+    fn per_token_not_worse_than_coarse_on_ptre() {
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let cache = synth_cache(4, 512, &shape);
+        let ptre = |out: &Cache| -> f64 {
+            let mut total = 0.0;
+            for j in 0..cache.n {
+                let a = &out.k_c[j * 64..(j + 1) * 64];
+                let b = &cache.k_c[j * 64..(j + 1) * 64];
+                let num: f64 =
+                    a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+                let den: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum();
+                total += (num / den.max(1e-18)).sqrt();
+            }
+            total / cache.n as f64
+        };
+        let e_snap = ptre(&QuantConfig::SnapMla.apply(&shape, &cache));
+        let e_c = ptre(&QuantConfig::ConfigC.apply(&shape, &cache));
+        let e_d = ptre(&QuantConfig::ConfigD.apply(&shape, &cache));
+        assert!(e_snap <= e_c * 1.01, "snap {e_snap} vs C {e_c}");
+        assert!(e_snap <= e_d * 1.01, "snap {e_snap} vs D {e_d}");
+    }
+
+    #[test]
+    fn all_configs_produce_finite_values() {
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let cache = synth_cache(5, 256, &shape);
+        for cfg in QuantConfig::ALL {
+            let out = cfg.apply(&shape, &cache);
+            assert!(out.k_c.iter().all(|x| x.is_finite()), "{cfg:?}");
+            assert!(out.k_r.iter().all(|x| x.is_finite()), "{cfg:?}");
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! f32 reference MLA decode attention (the oracle the pipeline is tested
+//! against; V = latent content per the absorbed form, paper Eq. 5).
+
+use super::{Cache, Query, Shape};
+
+/// Output of one decode-attention call.
+#[derive(Clone, Debug)]
+pub struct AttnOut {
+    /// row-major [heads, d_c]
+    pub o: Vec<f32>,
+    /// per-head logsumexp
+    pub lse: Vec<f32>,
+}
+
+/// Full-precision decode attention of `q` over the first `length` cache rows.
+pub fn attention(shape: &Shape, q: &Query, cache: &Cache, length: usize, sm_scale: f32) -> AttnOut {
+    attention_with_values(shape, q, &cache.k_c, &cache.k_r, length, sm_scale)
+}
+
+/// Same, over explicit (possibly dequantized) key/value buffers.
+pub fn attention_with_values(
+    shape: &Shape,
+    q: &Query,
+    k_c: &[f32],
+    k_r: &[f32],
+    length: usize,
+    sm_scale: f32,
+) -> AttnOut {
+    let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+    assert!(length * d_c <= k_c.len() && length * d_r <= k_r.len());
+    let mut o = vec![0.0f32; h * d_c];
+    let mut lse = vec![0.0f32; h];
+
+    let mut logits = vec![0.0f32; length];
+    for head in 0..h {
+        let qc = &q.q_c[head * d_c..(head + 1) * d_c];
+        let qr = &q.q_r[head * d_r..(head + 1) * d_r];
+        for j in 0..length {
+            let kc = &k_c[j * d_c..(j + 1) * d_c];
+            let kr = &k_r[j * d_r..(j + 1) * d_r];
+            let mut s = 0.0f32;
+            for i in 0..d_c {
+                s += qc[i] * kc[i];
+            }
+            for i in 0..d_r {
+                s += qr[i] * kr[i];
+            }
+            logits[j] = s * sm_scale;
+        }
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for j in 0..length {
+            logits[j] = (logits[j] - m).exp();
+            l += logits[j];
+        }
+        let out = &mut o[head * d_c..(head + 1) * d_c];
+        for j in 0..length {
+            let p = logits[j] / l;
+            let kc = &k_c[j * d_c..(j + 1) * d_c];
+            for i in 0..d_c {
+                out[i] += p * kc[i];
+            }
+        }
+        lse[head] = m + l.ln();
+    }
+    AttnOut { o, lse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_case(seed: u64, n: usize, shape: &Shape) -> (Query, Cache) {
+        let mut rng = Rng::new(seed);
+        let q = Query {
+            q_c: rng.normal_vec(shape.heads * shape.d_c, 1.0),
+            q_r: rng.normal_vec(shape.heads * shape.d_r, 0.5),
+        };
+        let mut cache = Cache::new(n, shape);
+        cache.k_c = rng.normal_vec(n * shape.d_c, 2.0);
+        cache.k_r = rng.normal_vec(n * shape.d_r, 2.0);
+        (q, cache)
+    }
+
+    #[test]
+    fn single_token_returns_that_value() {
+        let shape = Shape { heads: 2, d_c: 8, d_r: 4 };
+        let (q, cache) = rand_case(1, 4, &shape);
+        let out = attention(&shape, &q, &cache, 1, 0.1);
+        for head in 0..2 {
+            for i in 0..8 {
+                assert!((out.o[head * 8 + i] - cache.k_c[i]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn identical_keys_give_mean_value() {
+        let shape = Shape { heads: 1, d_c: 4, d_r: 2 };
+        let n = 6;
+
+        let mut cache = Cache::new(n, &shape);
+        for j in 0..n {
+            for i in 0..4 {
+                cache.k_c[j * 4 + i] = (j + i) as f32; // varying values…
+            }
+        }
+        // …but identical keys → set content equal per row for the K side?
+        // Instead: make all logits equal by zeroing q.
+        let q0 = Query { q_c: vec![0.0; 4], q_r: vec![0.0; 2] };
+        let out = attention(&shape, &q0, &cache, n, 0.5);
+        for i in 0..4 {
+            let mean: f32 = (0..n).map(|j| cache.k_c[j * 4 + i]).sum::<f32>() / n as f32;
+            assert!((out.o[i] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lse_matches_direct() {
+        let shape = Shape { heads: 3, d_c: 16, d_r: 8 };
+        let (q, cache) = rand_case(2, 32, &shape);
+        let sm = shape.sm_scale();
+        let out = attention(&shape, &q, &cache, 32, sm);
+        for head in 0..3 {
+            let mut direct = 0.0f64;
+            let mut logits = Vec::new();
+            for j in 0..32 {
+                let mut s = 0.0f32;
+                for i in 0..16 {
+                    s += q.q_c[head * 16 + i] * cache.k_c[j * 16 + i];
+                }
+                for i in 0..8 {
+                    s += q.q_r[head * 8 + i] * cache.k_r[j * 8 + i];
+                }
+                logits.push((s * sm) as f64);
+            }
+            let m = logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            for &l in &logits {
+                direct += (l - m).exp();
+            }
+            let want = m + direct.ln();
+            assert!((out.lse[head] as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn length_masks_tail() {
+        let shape = Shape { heads: 1, d_c: 8, d_r: 4 };
+        let (q, mut cache) = rand_case(3, 16, &shape);
+        let out1 = attention(&shape, &q, &cache, 10, 0.2);
+        for j in 10..16 {
+            for i in 0..8 {
+                cache.k_c[j * 8 + i] = 1e6;
+            }
+        }
+        let out2 = attention(&shape, &q, &cache, 10, 0.2);
+        assert_eq!(out1.o, out2.o);
+    }
+
+    #[test]
+    fn softmax_weights_sum_property() {
+        // o lies in the convex hull of the value rows (per coordinate within
+        // [min, max] of values).
+        let shape = Shape { heads: 2, d_c: 8, d_r: 4 };
+        let (q, cache) = rand_case(4, 24, &shape);
+        let out = attention(&shape, &q, &cache, 24, 0.1);
+        for i in 0..8 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for j in 0..24 {
+                lo = lo.min(cache.k_c[j * 8 + i]);
+                hi = hi.max(cache.k_c[j * 8 + i]);
+            }
+            for head in 0..2 {
+                let v = out.o[head * 8 + i];
+                assert!(v >= lo - 1e-5 && v <= hi + 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Synthetic MLA KV-cache statistics matched to the paper's Fig. 3a
+//! (mirrors `python/compile/kernels/synthkv.py` — see that module's docstring
+//! for the mechanism rationale: sink tokens + massive phase-coherent RoPE
+//! channels).
+
+use crate::util::rng::Rng;
+
+pub const ROPE_MASSIVE_AMP: f32 = 800.0;
+pub const ROPE_MASSIVE_AMP2: f32 = 250.0;
+pub const ROPE_BULK_SCALE: f32 = 20.0;
+pub const CONTENT_SCALE: f32 = 2.5;
+pub const CONTENT_TOKEN_SPREAD: f64 = 1.0;
+pub const SINK_FRACTION: f64 = 0.01;
+pub const SINK_MAGNIFICATION: f32 = 40.0;
+
+/// Latent content cache [n, d_c]: Gaussian bulk x lognormal token spread
+/// plus sparse sink tokens.
+pub fn content(rng: &mut Rng, n: usize, d_c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d_c];
+    let n_sink = ((n as f64 * SINK_FRACTION) as usize).max(1);
+    let mut sinks = vec![false; n];
+    for _ in 0..n_sink {
+        sinks[rng.below(n)] = true;
+    }
+    for j in 0..n {
+        let tok_scale = rng.lognormal(0.0, CONTENT_TOKEN_SPREAD) as f32;
+        let mag = if sinks[j] { SINK_MAGNIFICATION } else { 1.0 };
+        for i in 0..d_c {
+            out[j * d_c + i] = rng.normal() as f32 * CONTENT_SCALE * tok_scale * mag;
+        }
+    }
+    out
+}
+
+/// Decoupled RoPE cache [n, d_r] with phase-coherent massive channel pairs.
+pub fn rope(rng: &mut Rng, n: usize, d_r: usize) -> Vec<f32> {
+    assert!(d_r >= 4);
+    let mut out = vec![0.0f32; n * d_r];
+    for j in 0..n {
+        for i in 0..d_r {
+            out[j * d_r + i] = rng.normal() as f32 * ROPE_BULK_SCALE;
+        }
+    }
+    for (c0, amp, omega) in [(0usize, ROPE_MASSIVE_AMP, 0.013f64), (2, ROPE_MASSIVE_AMP2, 0.11)] {
+        let phi = rng.range_f64(0.0, std::f64::consts::TAU);
+        for j in 0..n {
+            let phase = j as f64 * omega + phi + rng.normal_scaled(0.0, 0.05);
+            let jitter = |r: &mut Rng| 1.0 + r.normal_scaled(0.0, 0.02) as f32;
+            out[j * d_r + c0] = amp * phase.cos() as f32 * jitter(rng);
+            out[j * d_r + c0 + 1] = amp * phase.sin() as f32 * jitter(rng);
+        }
+    }
+    out
+}
+
+/// Queries giving realistic logit composition (positional swings of
+/// ~±rope_logit_amp plus a content term of std ~content_logit_std).
+pub fn queries(
+    rng: &mut Rng,
+    heads: usize,
+    d_c: usize,
+    d_r: usize,
+    sm_scale: f32,
+    rope_logit_amp: f32,
+    content_logit_std: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let qs = content_logit_std / (CONTENT_SCALE * (d_c as f32).sqrt() * sm_scale);
+    let row_std = qs / (d_c as f32).sqrt();
+    let mut q_c = vec![0.0f32; heads * d_c];
+    for x in q_c.iter_mut() {
+        *x = rng.normal() as f32 * row_std * (d_c as f32).sqrt() / (d_c as f32).sqrt();
+    }
+    // normalize rows to the target rms
+    for h in 0..heads {
+        let row = &mut q_c[h * d_c..(h + 1) * d_c];
+        let rms = (row.iter().map(|&x| (x * x) as f64).sum::<f64>() / d_c as f64).sqrt() as f32;
+        let target = qs / (d_c as f32).sqrt();
+        if rms > 0.0 {
+            for x in row.iter_mut() {
+                *x *= target / rms;
+            }
+        }
+    }
+    let mut q_r = vec![0.0f32; heads * d_r];
+    for x in q_r.iter_mut() {
+        *x = rng.normal() as f32 * 0.02;
+    }
+    let b = rope_logit_amp / (ROPE_MASSIVE_AMP * sm_scale);
+    let b2 = 0.4 * rope_logit_amp / (ROPE_MASSIVE_AMP2 * sm_scale);
+    for h in 0..heads {
+        let psi = rng.range_f64(0.0, std::f64::consts::TAU);
+        q_r[h * d_r] = b * psi.cos() as f32;
+        q_r[h * d_r + 1] = b * psi.sin() as f32;
+        let psi2 = rng.range_f64(0.0, std::f64::consts::TAU);
+        q_r[h * d_r + 2] = b2 * psi2.cos() as f32;
+        q_r[h * d_r + 3] = b2 * psi2.sin() as f32;
+    }
+    (q_c, q_r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn content_matches_paper_ranges() {
+        let mut rng = Rng::new(1);
+        let xs = content(&mut rng, 4096, 128);
+        // bulk concentrated: 99th percentile of |x| below ~60
+        let mut abs: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = abs[(abs.len() as f64 * 0.99) as usize];
+        assert!(p99 < 100.0, "{p99}");
+        // sinks push the max well beyond the E4M3 range
+        assert!(abs[abs.len() - 1] > 448.0);
+    }
+
+    #[test]
+    fn rope_reaches_e3_and_is_heavy_tailed() {
+        let mut rng = Rng::new(2);
+        let xs = rope(&mut rng, 4096, 32);
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(amax > 500.0, "{amax}");
+        let mut abs: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+        abs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = abs[abs.len() / 2];
+        assert!(median < 60.0, "{median}"); // bulk is moderate
+    }
+
+    #[test]
+    fn rope_massive_channels_are_phase_coherent() {
+        // cos²+sin² of the massive pair ≈ amp² per token
+        let mut rng = Rng::new(3);
+        let d_r = 16;
+        let xs = rope(&mut rng, 512, d_r);
+        for j in 0..512 {
+            let c = xs[j * d_r];
+            let s = xs[j * d_r + 1];
+            let r = (c * c + s * s).sqrt();
+            assert!((r / ROPE_MASSIVE_AMP - 1.0).abs() < 0.15, "token {j}: {r}");
+        }
+    }
+
+    #[test]
+    fn queries_give_moderate_logits() {
+        let mut rng = Rng::new(4);
+        let (d_c, d_r, h) = (128, 32, 8);
+        let sm = 1.0 / ((d_c + d_r) as f32).sqrt();
+        let k_c = content(&mut rng, 512, d_c);
+        let k_r = rope(&mut rng, 512, d_r);
+        let (q_c, q_r) = queries(&mut rng, h, d_c, d_r, sm, 4.0, 2.0);
+        let mut logits = Vec::new();
+        for head in 0..h {
+            for j in 0..512 {
+                let mut s = 0.0f32;
+                for i in 0..d_c {
+                    s += q_c[head * d_c + i] * k_c[j * d_c + i];
+                }
+                for i in 0..d_r {
+                    s += q_r[head * d_r + i] * k_r[j * d_r + i];
+                }
+                logits.push((s * sm) as f64);
+            }
+        }
+        let n = logits.len() as f64;
+        let mean = logits.iter().sum::<f64>() / n;
+        let std = (logits.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n).sqrt();
+        assert!(std > 1.0 && std < 30.0, "logit std {std}");
+    }
+}

@@ -1,0 +1,59 @@
+//! GPU constants (H20-class Hopper device; see module docs in `perfmodel`).
+
+#[derive(Clone, Copy, Debug)]
+pub struct GpuSpec {
+    /// dense BF16 tensor-core peak, TFLOPS
+    pub bf16_tflops: f64,
+    /// dense FP8 tensor-core peak, TFLOPS (2x BF16 on Hopper)
+    pub fp8_tflops: f64,
+    /// HBM bandwidth, bytes/s
+    pub hbm_bw: f64,
+    /// HBM capacity, bytes
+    pub hbm_bytes: f64,
+    /// NVLink per-GPU bandwidth, bytes/s (for TP collectives)
+    pub nvlink_bw: f64,
+    /// kernel launch + scheduling overhead per launch, seconds
+    pub launch_s: f64,
+    /// achievable fraction of peak for a well-tuned kernel (App. I: ~85%)
+    pub peak_util: f64,
+}
+
+impl GpuSpec {
+    /// The paper's testbed GPU (H20-class: BF16 peak 148 TFLOPS per App. H).
+    pub fn h20() -> GpuSpec {
+        GpuSpec {
+            bf16_tflops: 148.0,
+            fp8_tflops: 296.0,
+            hbm_bw: 4.0e12,
+            hbm_bytes: 141.0e9,
+            nvlink_bw: 450.0e9,
+            launch_s: 4.0e-6,
+            peak_util: 0.88,
+        }
+    }
+
+    /// Effective FP8 peak of the SnapMLA mixed-precision MLA kernel
+    /// (App. H Eq. 14): 17 tiles of BF16-equivalent work executed in
+    /// 16/2 + 1 = 9 BF16-tile time units.
+    pub fn snapmla_effective_peak_tflops(&self) -> f64 {
+        self.bf16_tflops * 17.0 / 9.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_peak_matches_paper() {
+        let g = GpuSpec::h20();
+        let p = g.snapmla_effective_peak_tflops();
+        assert!((p - 279.6).abs() < 0.2, "{p}"); // paper: ≈ 279.6 TFLOPS
+    }
+
+    #[test]
+    fn fp8_is_double_bf16() {
+        let g = GpuSpec::h20();
+        assert_eq!(g.fp8_tflops, 2.0 * g.bf16_tflops);
+    }
+}

@@ -1,0 +1,185 @@
+//! Kernel-level timing model for the MLA decode-attention kernels
+//! (SnapMLA FP8 vs FlashMLA BF16), backing Figs. 6 and 7.
+
+use super::gpu::GpuSpec;
+
+/// Which kernel (determines compute rate and KV-cache byte width).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// SnapMLA FP8: E4M3 content + bf16 RoPE cache, 17/9 effective peak.
+    SnapMlaFp8,
+    /// FlashMLA BF16 baseline.
+    FlashMlaBf16,
+}
+
+/// One decode-attention invocation shape (absorbed MLA decode).
+#[derive(Clone, Copy, Debug)]
+pub struct KernelShape {
+    pub batch: usize,
+    pub heads: usize,
+    /// query tokens per sequence (MTP; 1 or 2)
+    pub t_q: usize,
+    /// KV-cache length (tokens attended)
+    pub seq: usize,
+    pub d_c: usize,
+    pub d_r: usize,
+}
+
+impl KernelShape {
+    pub fn paper(batch: usize, heads: usize, t_q: usize, seq: usize) -> KernelShape {
+        KernelShape { batch, heads, t_q, seq, d_c: 512, d_r: 64 }
+    }
+
+    /// FLOPs of one invocation: QK GEMM over (d_c + d_r) + PV GEMM over d_c,
+    /// per (batch, head, query token, cache token), 2 flops per MAC.
+    pub fn flops(&self) -> f64 {
+        let rows = (self.batch * self.heads * self.t_q) as f64;
+        let n = self.seq as f64;
+        let qk = rows * n * (self.d_c + self.d_r) as f64 * 2.0;
+        let pv = rows * n * self.d_c as f64 * 2.0;
+        qk + pv
+    }
+
+    /// HBM bytes of one invocation. The latent KV cache is read ONCE per
+    /// sequence (shared across heads — MLA's core memory property); Q in and
+    /// O out are negligible at decode shapes but included.
+    pub fn bytes(&self, kind: KernelKind) -> f64 {
+        let per_token = match kind {
+            // u8 content + bf16 rope + f32 scale
+            KernelKind::SnapMlaFp8 => self.d_c + 2 * self.d_r + 4,
+            // bf16 content + bf16 rope
+            KernelKind::FlashMlaBf16 => 2 * (self.d_c + self.d_r),
+        } as f64;
+        let kv = (self.batch * self.seq) as f64 * per_token;
+        let qo = (self.batch * self.heads * self.t_q * (2 * self.d_c + self.d_r)) as f64 * 4.0;
+        kv + qo
+    }
+
+    /// Arithmetic intensity (flops per HBM byte).
+    pub fn intensity(&self, kind: KernelKind) -> f64 {
+        self.flops() / self.bytes(kind)
+    }
+}
+
+/// MXU/WGMMA row-tile utilization: the decode GEMM's M dimension is
+/// heads × t_q per CTA; tiles are 64 rows, so small head counts leave the
+/// tensor core underfed (App. I: saturation at H ≥ 64, ~85% of peak).
+fn row_tile_util(heads: usize, t_q: usize) -> f64 {
+    let m = (heads * t_q) as f64;
+    (m / 64.0).min(1.0).max(1.0 / 64.0)
+}
+
+/// Pipeline ramp: prologue/epilogue amortize over the KV length (the fig. 6
+/// rising trend toward the roofline).
+fn ramp(seq: usize) -> f64 {
+    let n = seq as f64;
+    n / (n + 400.0)
+}
+
+/// Predicted execution time (seconds) of one kernel invocation.
+pub fn kernel_time_s(gpu: &GpuSpec, shape: &KernelShape, kind: KernelKind) -> f64 {
+    let peak_tflops = match kind {
+        KernelKind::SnapMlaFp8 => gpu.snapmla_effective_peak_tflops(),
+        KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
+    };
+    let eff = gpu.peak_util * row_tile_util(shape.heads, shape.t_q) * ramp(shape.seq);
+    let compute = shape.flops() / (peak_tflops * 1e12 * eff);
+    let memory = shape.bytes(kind) / gpu.hbm_bw;
+    compute.max(memory) + gpu.launch_s
+}
+
+/// Achieved TFLOPS under the model (what Figs. 6/7 plot).
+pub fn kernel_tflops(gpu: &GpuSpec, shape: &KernelShape, kind: KernelKind) -> f64 {
+    shape.flops() / kernel_time_s(gpu, shape, kind) / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::h20()
+    }
+
+    #[test]
+    fn flop_accounting_exact() {
+        let s = KernelShape::paper(1, 1, 1, 1);
+        // 1 row, 1 token: (512+64)*2 + 512*2 = 2176
+        assert_eq!(s.flops(), 2176.0);
+    }
+
+    #[test]
+    fn byte_accounting_exact() {
+        let s = KernelShape::paper(1, 1, 1, 1);
+        // fp8 token: 512 + 128 + 4 = 644; bf16 token: 1152
+        assert_eq!(s.bytes(KernelKind::SnapMlaFp8), 644.0 + (1024.0 + 64.0) * 4.0);
+        assert_eq!(s.bytes(KernelKind::FlashMlaBf16), 1152.0 + (1024.0 + 64.0) * 4.0);
+    }
+
+    #[test]
+    fn fp8_cache_is_smaller() {
+        let s = KernelShape::paper(8, 128, 1, 65536);
+        assert!(s.bytes(KernelKind::SnapMlaFp8) < 0.6 * s.bytes(KernelKind::FlashMlaBf16));
+    }
+
+    #[test]
+    fn snapmla_never_slower_under_model() {
+        for &(b, h, t, n) in
+            &[(1usize, 16usize, 1usize, 4096usize), (8, 64, 1, 16384), (32, 128, 2, 131072)]
+        {
+            let s = KernelShape::paper(b, h, t, n);
+            let t_fp8 = kernel_time_s(&gpu(), &s, KernelKind::SnapMlaFp8);
+            let t_bf16 = kernel_time_s(&gpu(), &s, KernelKind::FlashMlaBf16);
+            assert!(t_fp8 <= t_bf16 * 1.001, "{b} {h} {t} {n}: {t_fp8} vs {t_bf16}");
+        }
+    }
+
+    #[test]
+    fn tflops_below_effective_peak_and_saturates() {
+        let g = gpu();
+        let peak = g.snapmla_effective_peak_tflops();
+        // long-context, many-head shape → approaches ~85% of effective peak
+        let s = KernelShape::paper(32, 128, 1, 131072);
+        let tf = kernel_tflops(&g, &s, KernelKind::SnapMlaFp8);
+        assert!(tf <= peak);
+        assert!(tf > 0.75 * peak, "{tf} vs peak {peak}");
+    }
+
+    #[test]
+    fn head_scaling_matches_fig7() {
+        // TFLOPS increases with head count and saturates at H >= 64
+        let g = gpu();
+        let tf = |h: usize| {
+            kernel_tflops(&g, &KernelShape::paper(32, h, 1, 8192), KernelKind::SnapMlaFp8)
+        };
+        assert!(tf(16) < tf(32) && tf(32) < tf(64));
+        let sat = (tf(128) - tf(64)).abs() / tf(64);
+        assert!(sat < 0.1, "saturated region should be flat: {sat}");
+    }
+
+    #[test]
+    fn mtp2_helps_at_low_heads() {
+        let g = gpu();
+        let t1 = kernel_tflops(&g, &KernelShape::paper(32, 16, 1, 8192), KernelKind::SnapMlaFp8);
+        let t2 = kernel_tflops(&g, &KernelShape::paper(32, 16, 2, 8192), KernelKind::SnapMlaFp8);
+        assert!(t2 > 1.2 * t1, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn seqlen_ramp_matches_fig6() {
+        let g = gpu();
+        let tf = |n: usize| {
+            kernel_tflops(&g, &KernelShape::paper(8, 64, 1, n), KernelKind::SnapMlaFp8)
+        };
+        assert!(tf(1024) < tf(4096) && tf(4096) < tf(16384));
+    }
+
+    #[test]
+    fn high_head_decode_is_compute_bound() {
+        // the paper's premise: FlashMLA-style decode at H=128 is compute-bound
+        let s = KernelShape::paper(32, 128, 1, 65536);
+        let g = gpu();
+        let compute_intensity_break = g.bf16_tflops * 1e12 / g.hbm_bw;
+        assert!(s.intensity(KernelKind::FlashMlaBf16) > compute_intensity_break);
+    }
+}

@@ -1,0 +1,70 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax≥0.5 protos —
+//! see DESIGN.md). Executables are compiled once per artifact and cached by
+//! the engine; weights live on device as `PjRtBuffer`s and are passed by
+//! reference to `execute_b`, so the request path never re-uploads them.
+
+use std::path::Path;
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Ok(Runtime { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load_hlo(&self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Host f32 data → device buffer with the given dims.
+    pub fn buf_f32(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Host i32 data → device buffer with the given dims.
+    pub fn buf_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute with buffer args; returns the flattened output tuple as
+    /// host-side f32 vectors (all our model outputs are f32).
+    pub fn run_to_f32(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let result = exe.execute_b(args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffer_roundtrip() {
+        let rt = Runtime::cpu().unwrap();
+        let b = rt.buf_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let lit = b.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.buf_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,384 @@
+//! The model engine: bucketized decode/prefill execution of the AOT
+//! artifacts over the paged KV cache.
+//!
+//! One engine = one model replica (a DP rank). Weights are uploaded to the
+//! device once at load; each step uploads only the step inputs (token ids,
+//! positions, gathered cache views) and downloads logits + the new KV
+//! entries, which are appended to the rust-owned paged cache (the canonical
+//! store — u8 E4M3 + bf16, bit-exact with the in-graph quantization).
+
+use super::client::Runtime;
+use super::manifest::{ArtifactKind, Manifest};
+use super::weights::Weights;
+use crate::kvcache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub decode_steps: u64,
+    pub decode_tokens: u64,
+    pub prefill_calls: u64,
+    pub prefill_tokens: u64,
+    pub compiles: u64,
+    pub gather_s: f64,
+    pub execute_s: f64,
+    pub append_s: f64,
+}
+
+pub struct ModelEngine {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub mode: CacheMode,
+    mode_str: &'static str,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+#[derive(Debug)]
+pub struct DecodeResult {
+    /// per input item: full next-token logits [vocab]
+    pub logits: Vec<Vec<f32>>,
+}
+
+#[derive(Debug)]
+pub struct PrefillResult {
+    /// per input item: logits after the last prompt token [vocab]
+    pub logits: Vec<Vec<f32>>,
+}
+
+impl ModelEngine {
+    /// Load manifest + weights and upload weights to the device.
+    pub fn load(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = Weights::load(&artifacts_dir.join("weights.bin"))?;
+        anyhow::ensure!(
+            weights.total_params() == manifest.model.params,
+            "weights/manifest param count mismatch"
+        );
+        let mut weight_bufs = Vec::with_capacity(manifest.param_order.len());
+        for name in &manifest.param_order {
+            let t = weights.get(name)?;
+            weight_bufs.push(rt.buf_f32(&t.data, &t.dims)?);
+        }
+        Ok(ModelEngine {
+            rt,
+            manifest,
+            mode,
+            mode_str: match mode {
+                CacheMode::Fp8 => "fp8",
+                CacheMode::Bf16 => "bf16",
+            },
+            weight_bufs,
+            execs: BTreeMap::new(),
+            stats: EngineStats::default(),
+        })
+    }
+
+    pub fn mode_str(&self) -> &'static str {
+        self.mode_str
+    }
+
+    /// A cache config sized for this engine's largest decode bucket.
+    pub fn cache_config(&self, capacity_pages: usize) -> CacheConfig {
+        CacheConfig {
+            n_layers: self.manifest.model.n_layers,
+            d_c: self.manifest.model.d_c,
+            d_r: self.manifest.model.d_r,
+            mode: self.mode,
+            capacity_pages,
+        }
+    }
+
+    /// Largest supported context (largest decode bucket).
+    pub fn max_context(&self) -> usize {
+        self.manifest.max_context(self.mode_str)
+    }
+
+    fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
+        if !self.execs.contains_key(name) {
+            let path = self.manifest.hlo_path(name);
+            let exe = self.rt.load_hlo(&path)?;
+            self.execs.insert(name.to_string(), exe);
+            self.stats.compiles += 1;
+        }
+        Ok(())
+    }
+
+    /// Execute an arbitrary artifact with explicit (non-weight) args —
+    /// used by the kernel benches.
+    pub fn execute_kernel(
+        &mut self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let exe = self.execs.get(name).unwrap();
+        self.rt.run_to_f32(exe, args)
+    }
+
+    /// One decode step for `items` = (sequence, input token) pairs. Appends
+    /// the new KV entries to `cache` and returns next-token logits per item.
+    pub fn decode(
+        &mut self,
+        cache: &mut PagedKvCache,
+        items: &[(SeqHandle, i32)],
+    ) -> anyhow::Result<DecodeResult> {
+        anyhow::ensure!(!items.is_empty(), "empty decode batch");
+        let m = &self.manifest.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let max_ctx = items
+            .iter()
+            .map(|&(s, _)| cache.tokens_of(s) + 1)
+            .max()
+            .unwrap();
+        let bucket = self
+            .manifest
+            .decode_bucket(self.mode_str, items.len(), max_ctx)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no decode bucket for batch {} ctx {max_ctx} ({})",
+                    items.len(),
+                    self.mode_str
+                )
+            })?;
+        let (bb, ss, name) = (bucket.batch, bucket.seq, bucket.name.clone());
+        self.ensure_compiled(&name)?;
+
+        // ---- stage inputs ---------------------------------------------------
+        let t0 = Instant::now();
+        let mut token_ids = vec![0i32; bb];
+        let mut positions = vec![0i32; bb];
+        for (i, &(seq, tok)) in items.iter().enumerate() {
+            token_ids[i] = tok;
+            positions[i] = cache.tokens_of(seq) as i32;
+        }
+        let fp8 = self.mode == CacheMode::Fp8;
+        let mut k_c = vec![0.0f32; l * bb * ss * d_c];
+        let mut k_r = vec![0.0f32; l * bb * ss * d_r];
+        let mut sigma = vec![1.0f32; l * bb * ss];
+        for (b, &(seq, _)) in items.iter().enumerate() {
+            for layer in 0..l {
+                let off = (layer * bb + b) * ss;
+                cache.gather_kernel_view(
+                    seq,
+                    layer,
+                    ss,
+                    &mut k_c[off * d_c..(off + ss) * d_c],
+                    &mut k_r[off * d_r..(off + ss) * d_r],
+                    &mut sigma[off..off + ss],
+                );
+            }
+        }
+        let tok_buf = self.rt.buf_i32(&token_ids, &[bb, 1])?;
+        let pos_buf = self.rt.buf_i32(&positions, &[bb])?;
+        let kc_buf = self.rt.buf_f32(&k_c, &[l, bb, ss, d_c])?;
+        let kr_buf = self.rt.buf_f32(&k_r, &[l, bb, ss, d_r])?;
+        let sg_buf = if fp8 { Some(self.rt.buf_f32(&sigma, &[l, bb, ss, 1])?) } else { None };
+        self.stats.gather_s += t0.elapsed().as_secs_f64();
+
+        // ---- execute --------------------------------------------------------
+        let t1 = Instant::now();
+        let exe = self.execs.get(&name).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&pos_buf);
+        args.push(&kc_buf);
+        args.push(&kr_buf);
+        if let Some(ref sg) = sg_buf {
+            args.push(sg);
+        }
+        let outs = self.rt.run_to_f32(exe, &args)?;
+        self.stats.execute_s += t1.elapsed().as_secs_f64();
+        anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
+
+        // ---- append new KV entries + collect logits -------------------------
+        let t2 = Instant::now();
+        let logits_flat = &outs[0]; // [bb, 1, vocab]
+        let new_kc = &outs[1]; // [l, bb, 1, d_c]
+        let new_kr = &outs[2]; // [l, bb, 1, d_r]
+        let mut logits = Vec::with_capacity(items.len());
+        let mut kc_tok = vec![0.0f32; l * d_c];
+        let mut kr_tok = vec![0.0f32; l * d_r];
+        for (b, &(seq, _)) in items.iter().enumerate() {
+            for layer in 0..l {
+                let src = (layer * bb + b) * d_c;
+                kc_tok[layer * d_c..(layer + 1) * d_c]
+                    .copy_from_slice(&new_kc[src..src + d_c]);
+                let src = (layer * bb + b) * d_r;
+                kr_tok[layer * d_r..(layer + 1) * d_r]
+                    .copy_from_slice(&new_kr[src..src + d_r]);
+            }
+            if fp8 {
+                let new_sg = &outs[3]; // [l, bb, 1, 1]
+                let sg_tok: Vec<f32> =
+                    (0..l).map(|layer| new_sg[layer * bb + b]).collect();
+                cache
+                    .append_prequantized(seq, &kc_tok, &kr_tok, &sg_tok)
+                    .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+            } else {
+                cache
+                    .append_token(seq, &kc_tok, &kr_tok)
+                    .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+            }
+            logits.push(logits_flat[b * vocab..(b + 1) * vocab].to_vec());
+        }
+        self.stats.append_s += t2.elapsed().as_secs_f64();
+        self.stats.decode_steps += 1;
+        self.stats.decode_tokens += items.len() as u64;
+        Ok(DecodeResult { logits })
+    }
+
+    /// Prefill `items` = (sequence, prompt tokens). Appends all prompt KV
+    /// entries to `cache`; returns last-token logits per item.
+    pub fn prefill(
+        &mut self,
+        cache: &mut PagedKvCache,
+        items: &[(SeqHandle, Vec<i32>)],
+    ) -> anyhow::Result<PrefillResult> {
+        anyhow::ensure!(!items.is_empty(), "empty prefill batch");
+        let m = &self.manifest.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let max_p = items.iter().map(|(_, p)| p.len()).max().unwrap();
+        let bucket = self
+            .manifest
+            .prefill_bucket(self.mode_str, items.len(), max_p)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no prefill bucket for batch {} prompt {max_p}", items.len())
+            })?;
+        let (bb, pp, name) = (bucket.batch, bucket.seq, bucket.name.clone());
+        self.ensure_compiled(&name)?;
+
+        let t0 = Instant::now();
+        let mut token_ids = vec![0i32; bb * pp];
+        let mut plens = vec![1i32; bb]; // dummy rows use plen 1
+        for (i, (_, prompt)) in items.iter().enumerate() {
+            token_ids[i * pp..i * pp + prompt.len()].copy_from_slice(prompt);
+            plens[i] = prompt.len() as i32;
+        }
+        let tok_buf = self.rt.buf_i32(&token_ids, &[bb, pp])?;
+        let len_buf = self.rt.buf_i32(&plens, &[bb])?;
+        self.stats.gather_s += t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let exe = self.execs.get(&name).unwrap();
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let outs = self.rt.run_to_f32(exe, &args)?;
+        self.stats.execute_s += t1.elapsed().as_secs_f64();
+        let fp8 = self.mode == CacheMode::Fp8;
+        anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
+
+        let t2 = Instant::now();
+        let last_logits = &outs[0]; // [bb, vocab]
+        let e_kc = &outs[1]; // [l, bb, pp, d_c]
+        let e_kr = &outs[2]; // [l, bb, pp, d_r]
+        let mut logits = Vec::with_capacity(items.len());
+        let mut kc_tok = vec![0.0f32; l * d_c];
+        let mut kr_tok = vec![0.0f32; l * d_r];
+        for (b, (seq, prompt)) in items.iter().enumerate() {
+            for t in 0..prompt.len() {
+                for layer in 0..l {
+                    let src = ((layer * bb + b) * pp + t) * d_c;
+                    kc_tok[layer * d_c..(layer + 1) * d_c]
+                        .copy_from_slice(&e_kc[src..src + d_c]);
+                    let src = ((layer * bb + b) * pp + t) * d_r;
+                    kr_tok[layer * d_r..(layer + 1) * d_r]
+                        .copy_from_slice(&e_kr[src..src + d_r]);
+                }
+                if fp8 {
+                    let e_sg = &outs[3]; // [l, bb, pp, 1]
+                    let sg_tok: Vec<f32> = (0..l)
+                        .map(|layer| e_sg[(layer * bb + b) * pp + t])
+                        .collect();
+                    cache
+                        .append_prequantized(*seq, &kc_tok, &kr_tok, &sg_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                } else {
+                    cache
+                        .append_token(*seq, &kc_tok, &kr_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                }
+            }
+            logits.push(last_logits[b * vocab..(b + 1) * vocab].to_vec());
+            self.stats.prefill_tokens += prompt.len() as u64;
+        }
+        self.stats.append_s += t2.elapsed().as_secs_f64();
+        self.stats.prefill_calls += 1;
+        Ok(PrefillResult { logits })
+    }
+}
+
+/// Kernel-artifact argument staging (shared by benches): builds the buffers
+/// for a `kernel_snapmla_*` / `kernel_flashmla_*` artifact invocation.
+pub struct KernelArgs {
+    pub bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl KernelArgs {
+    pub fn snapmla(
+        rt: &Runtime,
+        t_q: usize,
+        heads: usize,
+        d_c: usize,
+        d_r: usize,
+        n: usize,
+        length: usize,
+        seed: u64,
+    ) -> anyhow::Result<KernelArgs> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let q_c = rng.normal_vec(t_q * heads * d_c, 1.0);
+        let q_r = rng.normal_vec(t_q * heads * d_r, 0.3);
+        let sq = vec![0.01f32; t_q * heads];
+        let k_c = rng.normal_vec(n * d_c, 1.0);
+        let k_r = rng.normal_vec(n * d_r, 0.3);
+        let sk = vec![0.02f32; n];
+        Ok(KernelArgs {
+            bufs: vec![
+                rt.buf_f32(&q_c, &[t_q, heads, d_c])?,
+                rt.buf_f32(&q_r, &[t_q, heads, d_r])?,
+                rt.buf_f32(&sq, &[t_q, heads, 1])?,
+                rt.buf_f32(&k_c, &[n, d_c])?,
+                rt.buf_f32(&k_r, &[n, d_r])?,
+                rt.buf_f32(&sk, &[n, 1])?,
+                rt.buf_i32(&[length as i32], &[1])?,
+            ],
+        })
+    }
+
+    pub fn flashmla(
+        rt: &Runtime,
+        t_q: usize,
+        heads: usize,
+        d_c: usize,
+        d_r: usize,
+        n: usize,
+        length: usize,
+        seed: u64,
+    ) -> anyhow::Result<KernelArgs> {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let q_c = rng.normal_vec(t_q * heads * d_c, 1.0);
+        let q_r = rng.normal_vec(t_q * heads * d_r, 0.3);
+        let k_c = rng.normal_vec(n * d_c, 1.0);
+        let k_r = rng.normal_vec(n * d_r, 0.3);
+        Ok(KernelArgs {
+            bufs: vec![
+                rt.buf_f32(&q_c, &[t_q, heads, d_c])?,
+                rt.buf_f32(&q_r, &[t_q, heads, d_r])?,
+                rt.buf_f32(&k_c, &[n, d_c])?,
+                rt.buf_f32(&k_r, &[n, d_r])?,
+                rt.buf_i32(&[length as i32], &[1])?,
+            ],
+        })
+    }
+
+    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
+        self.bufs.iter().collect()
+    }
+}

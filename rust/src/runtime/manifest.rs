@@ -1,0 +1,212 @@
+//! artifacts/manifest.json — the contract between `python/compile/aot.py`
+//! and the rust runtime (model dims, artifact shapes, flattened param order).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_c: usize,
+    pub d_r: usize,
+    pub d_ffn: usize,
+    pub sm_scale: f64,
+    pub params: usize,
+    pub eos: i32,
+    pub bos: i32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Decode,
+    Prefill,
+    Kernel,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// "fp8" | "bf16" for model artifacts; kernel name for kernels
+    pub mode: String,
+    pub batch: usize,
+    /// decode: cache bucket length; prefill: prompt bucket; kernel: seq
+    pub seq: usize,
+    pub heads: usize,
+    pub t_q: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelMeta,
+    pub param_order: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let need = |path: &[&str]| -> anyhow::Result<f64> {
+            j.at(path)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing {path:?}"))
+        };
+        let model = ModelMeta {
+            vocab: need(&["model", "vocab"])? as usize,
+            d_model: need(&["model", "d_model"])? as usize,
+            n_layers: need(&["model", "n_layers"])? as usize,
+            n_heads: need(&["model", "n_heads"])? as usize,
+            d_c: need(&["model", "d_c"])? as usize,
+            d_r: need(&["model", "d_r"])? as usize,
+            d_ffn: need(&["model", "d_ffn"])? as usize,
+            sm_scale: need(&["model", "sm_scale"])?,
+            params: need(&["model", "params"])? as usize,
+            eos: need(&["tokens", "eos"])? as i32,
+            bos: need(&["tokens", "bos"])? as i32,
+        };
+        let param_order = j
+            .get("param_order")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        for (name, info) in arts {
+            let kind = match info.get("kind").and_then(|v| v.as_str()) {
+                Some("decode") => ArtifactKind::Decode,
+                Some("prefill") => ArtifactKind::Prefill,
+                Some("kernel") => ArtifactKind::Kernel,
+                other => anyhow::bail!("artifact {name}: bad kind {other:?}"),
+            };
+            let get = |k: &str| info.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            let mode = info
+                .get("mode")
+                .or_else(|| info.get("kernel"))
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string();
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    kind,
+                    mode,
+                    batch: get("batch").max(1),
+                    seq: match kind {
+                        ArtifactKind::Prefill => get("prompt"),
+                        _ => get("seq"),
+                    },
+                    heads: get("heads"),
+                    t_q: get("t_q").max(1),
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), model, param_order, artifacts })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Smallest decode bucket covering (batch, context) in `mode`.
+    pub fn decode_bucket(&self, mode: &str, batch: usize, context: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.kind == ArtifactKind::Decode
+                    && a.mode == mode
+                    && a.batch >= batch
+                    && a.seq >= context
+            })
+            .min_by_key(|a| (a.seq, a.batch))
+    }
+
+    /// Smallest prefill bucket covering (batch, prompt len) in `mode`.
+    pub fn prefill_bucket(&self, mode: &str, batch: usize, prompt: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.kind == ArtifactKind::Prefill
+                    && a.mode == mode
+                    && a.batch >= batch
+                    && a.seq >= prompt
+            })
+            .min_by_key(|a| (a.seq, a.batch))
+    }
+
+    /// Largest decode context supported for a mode.
+    pub fn max_context(&self, mode: &str) -> usize {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == ArtifactKind::Decode && a.mode == mode)
+            .map(|a| a.seq)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn kernel_artifact(&self, kernel: &str, heads: usize, t_q: usize, seq: usize) -> Option<&ArtifactInfo> {
+        self.artifacts.values().find(|a| {
+            a.kind == ArtifactKind::Kernel
+                && a.mode == kernel
+                && a.heads == heads
+                && a.t_q == t_q
+                && a.seq == seq
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests run against the real artifacts when present (CI runs
+    /// `make artifacts` first — see Makefile `test` target).
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_model_meta() {
+        let Some(m) = manifest() else { return };
+        assert_eq!(m.model.d_c, 128);
+        assert_eq!(m.model.d_r, 32);
+        assert_eq!(m.model.n_layers, 8);
+        assert!(m.model.params > 20_000_000);
+        assert_eq!(m.param_order.len(), 2 + 10 * m.model.n_layers);
+        assert_eq!(m.param_order[0], "embed");
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        let b = m.decode_bucket("fp8", 3, 400).expect("bucket");
+        assert!(b.batch >= 3 && b.seq >= 400);
+        // smallest covering bucket: batch 4, seq 512
+        assert_eq!((b.batch, b.seq), (4, 512));
+        assert!(m.decode_bucket("fp8", 9, 512).is_none()); // beyond largest
+        let p = m.prefill_bucket("bf16", 1, 64).expect("prefill bucket");
+        assert_eq!(p.seq, 128);
+    }
+
+    #[test]
+    fn kernel_artifacts_present() {
+        let Some(m) = manifest() else { return };
+        for h in [16, 32, 64, 128] {
+            assert!(m.kernel_artifact("snapmla", h, 1, 1024).is_some(), "h{h}");
+            assert!(m.kernel_artifact("flashmla", h, 1, 1024).is_some(), "h{h}");
+        }
+        assert!(m.kernel_artifact("snapmla", 64, 1, 8192).is_some());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT artifacts (HLO text), manage weights on device,
+//! and execute decode/prefill steps from the rust hot path.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire model-execution surface at serve time:
+//!
+//! * [`manifest`] — artifact index + model metadata (artifacts/manifest.json)
+//! * [`weights`]  — weights.bin loader (custom binary bundle)
+//! * [`client`]   — thin `xla` crate wrapper (PJRT CPU client)
+//! * [`engine`]   — bucketized decode/prefill execution over the paged cache
+
+pub mod client;
+pub mod engine;
+pub mod manifest;
+pub mod weights;
+
+pub use client::Runtime;
+pub use engine::{DecodeResult, ModelEngine, PrefillResult};
+pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelMeta};
+pub use weights::Weights;

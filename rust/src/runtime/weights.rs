@@ -1,0 +1,140 @@
+//! weights.bin loader — the custom binary bundle written by aot.py:
+//! magic "SNAPW001", u32 count, then per tensor:
+//! u16 name_len | name | u8 dtype (0=f32) | u8 ndim | u32 dims… | f32 LE data.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+#[derive(Debug)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+#[derive(Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> anyhow::Result<Weights> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"SNAPW001", "bad weights magic {magic:?}");
+        let count = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = read_u16(&mut f)? as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let mut hdr = [0u8; 2];
+            f.read_exact(&mut hdr)?;
+            anyhow::ensure!(hdr[0] == 0, "{name}: unsupported dtype {}", hdr[0]);
+            let ndim = hdr[1] as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(read_u32(&mut f)? as usize);
+            }
+            let n: usize = dims.iter().product();
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let data = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, Tensor { dims, data });
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor {name}"))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+fn read_u16<R: Read>(r: &mut R) -> anyhow::Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_test_bundle(path: &Path) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(b"SNAPW001").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        // tensor "a": [2, 3]
+        f.write_all(&(1u16).to_le_bytes()).unwrap();
+        f.write_all(b"a").unwrap();
+        f.write_all(&[0u8, 2u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        for i in 0..6 {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        // tensor "ln": scalar-ish [4]
+        f.write_all(&(2u16).to_le_bytes()).unwrap();
+        f.write_all(b"ln").unwrap();
+        f.write_all(&[0u8, 1u8]).unwrap();
+        f.write_all(&4u32.to_le_bytes()).unwrap();
+        for _ in 0..4 {
+            f.write_all(&1.5f32.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_synthetic_bundle() {
+        let dir = std::env::temp_dir().join("snapmla_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        write_test_bundle(&path);
+        let w = Weights::load(&path).unwrap();
+        assert_eq!(w.tensors.len(), 2);
+        let a = w.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.get("ln").unwrap().data, vec![1.5; 4]);
+        assert_eq!(w.total_params(), 10);
+        assert!(w.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("snapmla_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC....").unwrap();
+        assert!(Weights::load(&path).is_err());
+    }
+
+    #[test]
+    fn loads_real_bundle_when_present() {
+        let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/weights.bin");
+        if !path.exists() {
+            return;
+        }
+        let w = Weights::load(&path).unwrap();
+        assert!(w.total_params() > 20_000_000);
+        assert!(w.get("embed").is_ok());
+        assert!(w.get("layer00.w_dkv").is_ok());
+    }
+}

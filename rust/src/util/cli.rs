@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        Args::parse_from_with_flags(it, &[])
+    }
+
+    /// `bool_flags` names flags that never take a value, resolving the
+    /// `--verbose file.json` ambiguity (file.json stays positional).
+    pub fn parse_from_with_flags<I: IntoIterator<Item = String>>(
+        it: I,
+        bool_flags: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if !bool_flags.contains(&stripped)
+                    && it.peek().map(|n| !n.starts_with("--")).unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                    out.present.push(stripped.to_string());
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                    out.present.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    /// Parse from the environment with known boolean flags.
+    pub fn parse_with_flags(bool_flags: &[&str]) -> Args {
+        Args::parse_from_with_flags(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.present.iter().any(|k| k == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse_from_with_flags(args.iter().map(|s| s.to_string()), &["verbose"])
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["serve", "--batch", "8", "--mode=fp8", "--verbose", "trace.json"]);
+        assert_eq!(a.positional, vec!["serve", "trace.json"]);
+        assert_eq!(a.usize_or("batch", 1), 8);
+        assert_eq!(a.get("mode"), Some("fp8"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 3), 3);
+        assert_eq!(a.f64_or("x", 0.5), 0.5);
+        assert_eq!(a.get_or("mode", "bf16"), "bf16");
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--a", "--b", "7"]);
+        assert!(a.has("a"));
+        assert_eq!(a.get("a"), Some("true"));
+        assert_eq!(a.usize_or("b", 0), 7);
+    }
+}

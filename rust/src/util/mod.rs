@@ -1,0 +1,8 @@
+//! Std-only utility substrates (the offline crate set has no serde/clap/rand).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

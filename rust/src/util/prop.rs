@@ -1,0 +1,159 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it performs a bounded greedy shrink via the generator's
+//! `shrink` hook and panics with the minimal counterexample found.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// A generator produces a random value and can propose smaller variants.
+pub trait Gen {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks, largest reduction first. Default: no shrinking.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over `cases` random inputs.
+pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if let Err(msg) = prop(&v) {
+            // greedy shrink
+            let mut cur = v;
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in gen.shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {seed}): {cur_msg}\ncounterexample: {cur:?}"
+            );
+        }
+    }
+}
+
+/// Generator: usize in [lo, hi], shrinks toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        rng.range_usize(self.0, self.1 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: Vec<f32> of length in [min_len, max_len], N(0, std) entries;
+/// shrinks by halving length and zeroing entries.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub std: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let n = rng.range_usize(self.min_len, self.max_len + 1);
+        rng.normal_vec(n, self.std)
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let half = self.min_len.max(v.len() / 2);
+            out.push(v[..half].to_vec());
+            out.push(v[..v.len() - 1].to_vec());
+        }
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|_| 0.0).collect());
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(1, 50, &UsizeIn(0, 100), |&v| {
+            if v <= 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(2, 200, &UsizeIn(0, 1000), |&v| {
+                if v < 17 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 17"))
+                }
+            });
+        });
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // greedy shrink should land at or very near the boundary value 17
+        assert!(msg.contains("counterexample: 17"), "{msg}");
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let gen = VecF32 { min_len: 2, max_len: 8, std: 1.0 };
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let v = gen.generate(&mut rng);
+            assert!((2..=8).contains(&v.len()));
+        }
+    }
+}

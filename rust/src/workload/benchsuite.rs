@@ -1,0 +1,276 @@
+//! The synthetic benchmark suite standing in for the paper's closed
+//! evaluation suites (Table 1 / Table 2; DESIGN.md §Substitutions).
+//!
+//! Each family mirrors one of the paper's benchmark rows with:
+//! * a *task generator* producing prompts in the small model's synthetic
+//!   token language together with a programmatically checkable target
+//!   (the corpus families are deterministic continuations, so "accuracy" =
+//!   fraction of continuation tokens predicted correctly — an objective,
+//!   repeatable metric like IFEval's verifiable constraints),
+//! * a *generated-length profile* matched to Table 2 (scaled 1/16 for the
+//!   CPU substrate; the scale factor is reported alongside results).
+//!
+//! Quality parity (Table 1) is then: run the same tasks through the BF16 and
+//! FP8 decode pipelines and compare per-family scores; genlen parity
+//! (Table 2) compares the achieved generation lengths.
+
+use crate::util::rng::Rng;
+
+/// Length-profile scale factor vs the paper's Table 2 (CPU substrate).
+pub const GENLEN_SCALE: usize = 16;
+
+/// One benchmark family (a Table-1/Table-2 row).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BenchFamily {
+    pub name: &'static str,
+    pub domain: &'static str,
+    /// paper's observed average generated length (Table 2, BF16 column)
+    pub paper_avg_genlen: usize,
+    /// corpus family used for the prompt structure
+    pub corpus_family: &'static str,
+    /// sampling temperature
+    pub temperature: f32,
+}
+
+/// The suite (paper Table 2 rows, DeepSeek-V3.1 lengths).
+pub const SUITE: [BenchFamily; 8] = [
+    BenchFamily { name: "MMLU-Pro", domain: "General", paper_avg_genlen: 2447,
+        corpus_family: "nested", temperature: 0.3 },
+    BenchFamily { name: "MMLU-Redux", domain: "General", paper_avg_genlen: 562,
+        corpus_family: "repeat", temperature: 0.3 },
+    BenchFamily { name: "IFEval", domain: "Instruction", paper_avg_genlen: 680,
+        corpus_family: "copy", temperature: 0.2 },
+    BenchFamily { name: "Arena-Hard", domain: "Instruction", paper_avg_genlen: 3275,
+        corpus_family: "nested", temperature: 0.7 },
+    BenchFamily { name: "MATH-500", domain: "Math", paper_avg_genlen: 2346,
+        corpus_family: "arith", temperature: 0.2 },
+    BenchFamily { name: "AIME-24", domain: "Math", paper_avg_genlen: 11909,
+        corpus_family: "arith", temperature: 0.4 },
+    BenchFamily { name: "GPQA-Diamond", domain: "Reasoning", paper_avg_genlen: 9183,
+        corpus_family: "nested", temperature: 0.4 },
+    BenchFamily { name: "LCB", domain: "Coding", paper_avg_genlen: 13034,
+        corpus_family: "copy", temperature: 0.3 },
+];
+
+/// A concrete task instance: prompt tokens + ground-truth continuation.
+#[derive(Clone, Debug)]
+pub struct BenchTask {
+    pub family: &'static str,
+    pub prompt: Vec<i32>,
+    /// deterministic continuation implied by the prompt's structure
+    pub target: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+}
+
+pub struct Suite;
+
+const BOS: i32 = 1;
+const CONTENT_BASE: i32 = 64;
+const CONTENT_RANGE: i32 = 256;
+const OP_BASE: i32 = 2;
+
+fn content(rng: &mut Rng) -> i32 {
+    CONTENT_BASE + rng.below(CONTENT_RANGE as usize) as i32
+}
+
+impl Suite {
+    /// Target mean generated length for a family on this substrate.
+    pub fn scaled_genlen(fam: &BenchFamily) -> usize {
+        (fam.paper_avg_genlen / GENLEN_SCALE).clamp(8, 1500)
+    }
+
+    /// Generate `n` tasks for a family. Prompts are structured so that the
+    /// continuation is *deterministic* given the structure:
+    ///   repeat — motif repeated; target continues the motif
+    ///   arith  — arithmetic progression; target continues it
+    ///   copy   — span + separator + start of the span; target finishes copy
+    ///   nested — open brackets + content; target mirrors the closes
+    pub fn tasks(fam: &BenchFamily, n: usize, seed: u64) -> Vec<BenchTask> {
+        let mut rng = Rng::new(seed ^ fam.name.len() as u64 * 0x9E37);
+        let genlen = Self::scaled_genlen(fam);
+        (0..n)
+            .map(|_| {
+                let target_len = (genlen as f64 * rng.range_f64(0.7, 1.3)) as usize;
+                let target_len = target_len.clamp(4, 1500);
+                let (prompt, target) = match fam.corpus_family {
+                    "repeat" => {
+                        let mlen = rng.range_usize(2, 8);
+                        let motif: Vec<i32> = (0..mlen).map(|_| content(&mut rng)).collect();
+                        let shown = rng.range_usize(3, 6) * mlen;
+                        let mut prompt = vec![BOS];
+                        for i in 0..shown {
+                            prompt.push(motif[i % mlen]);
+                        }
+                        let target: Vec<i32> =
+                            (0..target_len).map(|i| motif[(shown + i) % mlen]).collect();
+                        (prompt, target)
+                    }
+                    "arith" => {
+                        let start = rng.below(CONTENT_RANGE as usize) as i32;
+                        let step = rng.range_usize(1, 17) as i32;
+                        let shown = rng.range_usize(8, 24);
+                        let tok = |k: i32| CONTENT_BASE + (start + step * k) % CONTENT_RANGE;
+                        let mut prompt = vec![BOS];
+                        prompt.extend((0..shown as i32).map(tok));
+                        let target: Vec<i32> = (0..target_len as i32)
+                            .map(|i| tok(shown as i32 + i))
+                            .collect();
+                        (prompt, target)
+                    }
+                    "copy" => {
+                        // span capped so prompts fit the prefill bucket; long
+                        // outputs are produced by LOOP-copying the span (the
+                        // deterministic continuation of a periodic prompt)
+                        let span_len = target_len.clamp(8, 100);
+                        let span: Vec<i32> =
+                            (0..span_len).map(|_| content(&mut rng)).collect();
+                        let sep = OP_BASE + rng.below(62) as i32;
+                        let mut prompt = vec![BOS];
+                        prompt.extend(&span);
+                        prompt.push(sep);
+                        let target: Vec<i32> =
+                            (0..target_len).map(|i| span[i % span_len]).collect();
+                        (prompt, target)
+                    }
+                    _ => {
+                        // nested: opens + content; target = mirrored closes
+                        let depth = target_len.clamp(2, 30);
+                        let opens: Vec<i32> =
+                            (0..depth).map(|_| OP_BASE + rng.below(31) as i32).collect();
+                        let inner = rng.range_usize(4, 16);
+                        let mut prompt = vec![BOS];
+                        prompt.extend(&opens);
+                        for _ in 0..inner {
+                            prompt.push(content(&mut rng));
+                        }
+                        let target: Vec<i32> =
+                            opens.iter().rev().map(|&o| o + 31).collect();
+                        (prompt, target)
+                    }
+                };
+                BenchTask {
+                    family: fam.name,
+                    prompt,
+                    // long-output families decode to their scaled profile
+                    // even when the scoreable target is shorter (nested):
+                    // achieved length is then model/EOS-driven, which is
+                    // what the Table-2 parity study wants
+                    max_new_tokens: (target.len() + 8).max(genlen),
+                    target,
+                    temperature: fam.temperature,
+                }
+            })
+            .collect()
+    }
+
+    /// Score a generation against the task target: fraction of positions
+    /// matching until the first divergence-insensitive window ends (we use
+    /// plain positional accuracy — objective and pipeline-comparable).
+    pub fn score(task: &BenchTask, generated: &[i32]) -> f64 {
+        if task.target.is_empty() {
+            return 1.0;
+        }
+        let n = task.target.len().min(generated.len());
+        let hits = (0..n).filter(|&i| generated[i] == task.target[i]).count();
+        hits as f64 / task.target.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_all_domains() {
+        let domains: std::collections::BTreeSet<_> =
+            SUITE.iter().map(|f| f.domain).collect();
+        assert!(domains.len() >= 4);
+    }
+
+    #[test]
+    fn genlen_scaling() {
+        let lcb = SUITE.iter().find(|f| f.name == "LCB").unwrap();
+        assert_eq!(Suite::scaled_genlen(lcb), 13034 / 16);
+        let redux = SUITE.iter().find(|f| f.name == "MMLU-Redux").unwrap();
+        assert_eq!(Suite::scaled_genlen(redux), 562 / 16);
+    }
+
+    #[test]
+    fn tasks_are_deterministic_given_seed() {
+        let fam = &SUITE[4]; // MATH-500 / arith
+        let a = Suite::tasks(fam, 5, 7);
+        let b = Suite::tasks(fam, 5, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.target, y.target);
+        }
+    }
+
+    #[test]
+    fn repeat_target_continues_motif() {
+        let fam = &SUITE[1];
+        for t in Suite::tasks(fam, 10, 3) {
+            // the target must be consistent with the motif visible in the
+            // prompt: find the motif length by the prompt periodicity
+            let body = &t.prompt[1..];
+            for m in 2..8 {
+                if body.len() % m == 0
+                    && (0..body.len()).all(|i| body[i] == body[i % m])
+                {
+                    assert_eq!(t.target[0], body[body.len() % m]);
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arith_target_is_progression() {
+        let fam = &SUITE[4];
+        for t in Suite::tasks(fam, 10, 11) {
+            let step_in_prompt =
+                (t.prompt[2] - t.prompt[1]).rem_euclid(CONTENT_RANGE);
+            let step_in_target =
+                (t.target[1] - t.target[0]).rem_euclid(CONTENT_RANGE);
+            assert_eq!(step_in_prompt, step_in_target);
+        }
+    }
+
+    #[test]
+    fn copy_target_loops_span() {
+        let fam = &SUITE[7]; // LCB / copy
+        for t in Suite::tasks(fam, 3, 13) {
+            // prompt = BOS + span + sep; target cycles the span
+            let span = &t.prompt[1..t.prompt.len() - 1];
+            assert!(t.prompt.len() <= 110, "prompt must fit prefill bucket");
+            for (i, &tok) in t.target.iter().enumerate() {
+                assert_eq!(tok, span[i % span.len()]);
+            }
+        }
+    }
+
+    #[test]
+    fn score_bounds_and_exactness() {
+        let t = BenchTask {
+            family: "x",
+            prompt: vec![1],
+            target: vec![70, 71, 72, 73],
+            max_new_tokens: 8,
+            temperature: 0.0,
+        };
+        assert_eq!(Suite::score(&t, &[70, 71, 72, 73]), 1.0);
+        assert_eq!(Suite::score(&t, &[70, 71, 0, 0]), 0.5);
+        assert_eq!(Suite::score(&t, &[]), 0.0);
+    }
+
+    #[test]
+    fn long_output_families_have_long_targets() {
+        let aime = SUITE.iter().find(|f| f.name == "AIME-24").unwrap();
+        let tasks = Suite::tasks(aime, 5, 1);
+        let mean: f64 =
+            tasks.iter().map(|t| t.target.len() as f64).sum::<f64>() / tasks.len() as f64;
+        let want = Suite::scaled_genlen(aime) as f64;
+        assert!((mean / want - 1.0).abs() < 0.4, "mean {mean} want {want}");
+    }
+}

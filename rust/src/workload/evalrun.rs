@@ -1,0 +1,80 @@
+//! Shared evaluation runner: drive the benchmark suite through a serving
+//! `Server` and collect per-family scores and generation lengths.
+//! Used by `benches/table1_quality.rs`, `benches/table2_genlen.rs` and
+//! `examples/quality_eval.rs`-style drivers.
+
+use super::benchsuite::{BenchFamily, BenchTask, Suite};
+use crate::coordinator::{ServeRequest, Server};
+
+#[derive(Clone, Debug)]
+pub struct FamilyResult {
+    pub family: &'static str,
+    pub domain: &'static str,
+    pub score: f64,
+    pub mean_genlen: f64,
+    pub tasks: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalConfig {
+    pub tasks_per_family: usize,
+    pub seed: u64,
+    /// cap on generation length (CPU substrate)
+    pub max_gen: usize,
+    /// greedy (0.0) isolates pipeline parity; family temperature exercises
+    /// sampling (genlen study)
+    pub use_family_temperature: bool,
+    /// stop on EOS (genlen study) or always run to target (quality study)
+    pub stop_on_eos: bool,
+}
+
+/// Run the whole suite; returns one result per family.
+pub fn run_suite(
+    server: &mut Server,
+    cfg: &EvalConfig,
+) -> anyhow::Result<Vec<FamilyResult>> {
+    let mut results = Vec::new();
+    for fam in &super::benchsuite::SUITE {
+        results.push(run_family(server, fam, cfg)?);
+    }
+    Ok(results)
+}
+
+/// Run one family's tasks through the server.
+pub fn run_family(
+    server: &mut Server,
+    fam: &BenchFamily,
+    cfg: &EvalConfig,
+) -> anyhow::Result<FamilyResult> {
+    let tasks: Vec<BenchTask> = Suite::tasks(fam, cfg.tasks_per_family, cfg.seed)
+        .into_iter()
+        .filter(|t| t.prompt.len() <= server.scheduler.cfg.max_prefill_tokens)
+        .collect();
+    anyhow::ensure!(!tasks.is_empty(), "family {} produced no usable tasks", fam.name);
+    for (i, t) in tasks.iter().enumerate() {
+        server.submit(ServeRequest {
+            id: i as u64,
+            prompt: t.prompt.clone(),
+            max_new_tokens: t.max_new_tokens.min(cfg.max_gen),
+            temperature: if cfg.use_family_temperature { t.temperature } else { 0.0 },
+            seed: cfg.seed.wrapping_add(i as u64),
+            ignore_eos: !cfg.stop_on_eos,
+        });
+    }
+    server.run_to_completion()?;
+    let mut outcomes = std::mem::take(&mut server.finished);
+    outcomes.sort_by_key(|o| o.id);
+    let mut score = 0.0;
+    let mut genlen = 0.0;
+    for (t, o) in tasks.iter().zip(&outcomes) {
+        score += Suite::score(t, &o.generated);
+        genlen += o.generated.len() as f64;
+    }
+    Ok(FamilyResult {
+        family: fam.name,
+        domain: fam.domain,
+        score: score / tasks.len() as f64,
+        mean_genlen: genlen / tasks.len() as f64,
+        tasks: tasks.len(),
+    })
+}

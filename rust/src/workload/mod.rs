@@ -1,0 +1,10 @@
+//! Workload generation: serving traces and the synthetic benchmark suite
+//! whose generated-length profiles match the paper's Table 2.
+
+pub mod benchsuite;
+pub mod evalrun;
+pub mod tracegen;
+
+pub use benchsuite::{BenchFamily, BenchTask, Suite};
+pub use evalrun::{run_family, run_suite, EvalConfig, FamilyResult};
+pub use tracegen::{Request, TraceConfig, TraceGen};

@@ -1,0 +1,134 @@
+//! Integration: the paper-shape kernel artifacts (d_c=512, d_r=64) execute
+//! via PJRT and the SnapMLA FP8 kernel matches the rust Algorithm-1 pipeline
+//! simulation on identical operands — tying L1 (Pallas) to the rust numerics
+//! twin through the AOT path.
+
+use snapmla::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
+use snapmla::mla::Shape;
+use snapmla::runtime::engine::KernelArgs;
+use snapmla::runtime::{ModelEngine, Runtime};
+use snapmla::kvcache::CacheMode;
+use snapmla::util::rng::Rng;
+use snapmla::util::stats::rel_l2;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn kernel_artifacts_execute_and_are_finite() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+    let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
+    for heads in [16usize, 64] {
+        let name = format!("kernel_snapmla_h{heads}_t1_n{n}");
+        let args = KernelArgs::snapmla(&eng.rt, 1, heads, d_c, d_r, n, 1000, 7).unwrap();
+        let outs = eng.execute_kernel(&name, &args.refs()).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), heads * d_c);
+        assert!(outs[0].iter().all(|x| x.is_finite()), "h{heads}");
+
+        let name = format!("kernel_flashmla_h{heads}_t1_n{n}");
+        let args = KernelArgs::flashmla(&eng.rt, 1, heads, d_c, d_r, n, 1000, 7).unwrap();
+        let outs = eng.execute_kernel(&name, &args.refs()).unwrap();
+        assert!(outs[0].iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_rust_pipeline_sim() {
+    // Same quantized operands through (a) the AOT pallas kernel via PJRT and
+    // (b) the rust Algorithm-1 simulation — outputs must agree closely.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+    let (heads, d_c, d_r, n, length) = (16usize, 512usize, 64usize, 1024usize, 900usize);
+    let shape = Shape { heads, d_c, d_r };
+    let sm = shape.sm_scale();
+
+    // build operands already in SnapMLA form (E4M3-grid content, aligned rope)
+    let mut rng = Rng::new(42);
+    let q_c_raw = rng.normal_vec(heads * d_c, 1.0);
+    let q_r_raw = rng.normal_vec(heads * d_r, 0.3);
+    let k_c_raw = rng.normal_vec(n * d_c, 1.5);
+    let k_r_raw = rng.normal_vec(n * d_r, 5.0);
+    let cache: QuantCache =
+        snapmla::mla::pipeline::build_quant_cache(&shape, &k_c_raw, &k_r_raw, n);
+    let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(
+        &shape,
+        &snapmla::mla::Query { q_c: q_c_raw, q_r: q_r_raw },
+    );
+
+    // rust sim
+    let sim = snapmla_pipeline(
+        &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
+    );
+
+    // pallas kernel through PJRT with the same operands
+    let rt: &Runtime = &eng.rt;
+    let sigma_k_col: Vec<f32> = cache.sigma_k.clone();
+    let bufs = vec![
+        rt.buf_f32(&q_c_q, &[1, heads, d_c]).unwrap(),
+        rt.buf_f32(&q_r_al, &[1, heads, d_r]).unwrap(),
+        rt.buf_f32(&sigma_q, &[1, heads, 1]).unwrap(),
+        rt.buf_f32(&cache.k_c_q, &[n, d_c]).unwrap(),
+        rt.buf_f32(&cache.k_r_al, &[n, d_r]).unwrap(),
+        rt.buf_f32(&sigma_k_col, &[n, 1]).unwrap(),
+        rt.buf_i32(&[length as i32], &[1]).unwrap(),
+    ];
+    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    let outs = eng
+        .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &args)
+        .unwrap();
+
+    let rel = rel_l2(&outs[0], &sim.o);
+    assert!(rel < 5e-3, "pallas vs rust pipeline sim: rel {rel}");
+    // lse agreement
+    let lse_diff: f32 = outs[1]
+        .iter()
+        .zip(&sim.lse)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(lse_diff < 2e-2, "lse diff {lse_diff}");
+}
+
+#[test]
+fn masking_parity_between_kernel_and_sim() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+    let (heads, d_c, d_r, n) = (16usize, 512usize, 64usize, 1024usize);
+    let shape = Shape { heads, d_c, d_r };
+    let sm = shape.sm_scale();
+    let mut rng = Rng::new(3);
+    let k_c_raw = rng.normal_vec(n * d_c, 1.0);
+    let k_r_raw = rng.normal_vec(n * d_r, 2.0);
+    let cache = snapmla::mla::pipeline::build_quant_cache(&shape, &k_c_raw, &k_r_raw, n);
+    let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(
+        &shape,
+        &snapmla::mla::Query {
+            q_c: rng.normal_vec(heads * d_c, 1.0),
+            q_r: rng.normal_vec(heads * d_r, 0.2),
+        },
+    );
+    for length in [1usize, 64, 65, 513] {
+        let sim = snapmla_pipeline(
+            &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
+        );
+        let bufs = vec![
+            eng.rt.buf_f32(&q_c_q, &[1, heads, d_c]).unwrap(),
+            eng.rt.buf_f32(&q_r_al, &[1, heads, d_r]).unwrap(),
+            eng.rt.buf_f32(&sigma_q, &[1, heads, 1]).unwrap(),
+            eng.rt.buf_f32(&cache.k_c_q, &[n, d_c]).unwrap(),
+            eng.rt.buf_f32(&cache.k_r_al, &[n, d_r]).unwrap(),
+            eng.rt.buf_f32(&cache.sigma_k, &[n, 1]).unwrap(),
+            eng.rt.buf_i32(&[length as i32], &[1]).unwrap(),
+        ];
+        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = eng
+            .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &args)
+            .unwrap();
+        let rel = rel_l2(&outs[0], &sim.o);
+        assert!(rel < 5e-3, "length {length}: rel {rel}");
+    }
+}

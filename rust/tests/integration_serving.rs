@@ -1,0 +1,127 @@
+//! Integration: the full serving coordinator over the real engine —
+//! continuous batching, admission, EOS/max-token termination, preemption
+//! under KV pressure, and DP routing across two ranks.
+
+use snapmla::coordinator::{FinishReason, Router, ServeRequest, Server};
+use snapmla::kvcache::CacheMode;
+use snapmla::runtime::ModelEngine;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn server(mode: CacheMode, pages: usize) -> Option<Server> {
+    let dir = artifacts_dir()?;
+    let engine = ModelEngine::load(&dir, mode).expect("engine");
+    Some(Server::new(engine, pages))
+}
+
+fn repeat_prompt(seed: i32, len: usize) -> Vec<i32> {
+    let motif = [70 + seed % 50, 90 + seed % 30, 130];
+    let mut p = vec![1];
+    for i in 0..len - 1 {
+        p.push(motif[i as usize % 3]);
+    }
+    p
+}
+
+#[test]
+fn serves_batch_to_completion() {
+    let Some(mut srv) = server(CacheMode::Fp8, 256) else { return };
+    for i in 0..6 {
+        srv.submit(ServeRequest {
+            id: i,
+            prompt: repeat_prompt(i as i32, 12 + i as usize * 7),
+            max_new_tokens: 12,
+            temperature: 0.7,
+            seed: i, ignore_eos: false });
+    }
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 6);
+    for o in &srv.finished {
+        assert!(!o.generated.is_empty());
+        assert!(o.generated.len() <= 12);
+        assert!(matches!(o.finish, FinishReason::Eos | FinishReason::MaxTokens));
+        assert!(o.metrics.e2e_s >= o.metrics.ttft_s);
+    }
+    // continuous batching actually batched decodes
+    assert!(srv.metrics.decode_batch.mean() > 1.5, "{}", srv.metrics.decode_batch.mean());
+    // all KV released at the end
+    assert_eq!(srv.cache.used_pages(), 0);
+}
+
+#[test]
+fn preemption_under_kv_pressure_still_completes() {
+    // 4 pages total; 3 long-ish requests force page churn + preemption.
+    // ignore_eos pins the generation lengths (benchmark mode) so the KV
+    // pressure pattern is deterministic.
+    let Some(mut srv) = server(CacheMode::Fp8, 4) else { return };
+    for i in 0..3 {
+        srv.submit(ServeRequest {
+            id: i,
+            prompt: repeat_prompt(i as i32, 50),
+            max_new_tokens: 30,
+            temperature: 0.0,
+            seed: i,
+            ignore_eos: true,
+        });
+    }
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 3);
+    for o in &srv.finished {
+        assert_eq!(o.generated.len(), 30, "id {} finished early: {:?}", o.id, o.finish);
+    }
+    assert!(
+        srv.metrics.total_preemptions > 0,
+        "this workload must trigger preemption"
+    );
+}
+
+#[test]
+fn deterministic_outputs_given_seeds() {
+    let Some(mut a) = server(CacheMode::Fp8, 128) else { return };
+    let mut b = server(CacheMode::Fp8, 128).unwrap();
+    for srv in [&mut a, &mut b] {
+        for i in 0..3 {
+            srv.submit(ServeRequest {
+                id: i,
+                prompt: repeat_prompt(i as i32, 16),
+                max_new_tokens: 10,
+                temperature: 0.9,
+                seed: 1000 + i, ignore_eos: false });
+        }
+        srv.run_to_completion().unwrap();
+    }
+    for (x, y) in a.finished.iter().zip(&b.finished) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.generated, y.generated, "sampling must be reproducible");
+    }
+}
+
+#[test]
+fn dp_router_spreads_and_completes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ranks: Vec<Server> = (0..2)
+        .map(|_| Server::new(ModelEngine::load(&dir, CacheMode::Fp8).unwrap(), 64))
+        .collect();
+    let mut router = Router::new(ranks);
+    let mut placements = Vec::new();
+    for i in 0..8 {
+        placements.push(router.submit(ServeRequest {
+            id: i,
+            prompt: repeat_prompt(i as i32, 20),
+            max_new_tokens: 8,
+            temperature: 0.5,
+            seed: i, ignore_eos: false }));
+    }
+    // shortest-queue must use both ranks
+    assert!(placements.iter().any(|&r| r == 0) && placements.iter().any(|&r| r == 1));
+    let outcomes = router.run_to_completion().unwrap();
+    assert_eq!(outcomes.len(), 8);
+    assert_eq!(
+        outcomes.iter().map(|o| o.id).collect::<Vec<_>>(),
+        (0..8).collect::<Vec<_>>()
+    );
+}
