@@ -81,10 +81,10 @@ fn main() {
         ("fp8_mse_rope", Json::num(mse_r)),
     ]));
 
-    // real-model capture
-    let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        let mut engine = ModelEngine::load(dir, CacheMode::Fp8).expect("engine");
+    // real-model capture (sim backend offline; PJRT with artifacts + `pjrt`)
+    {
+        let mut engine =
+            ModelEngine::auto(Path::new("artifacts"), CacheMode::Fp8).expect("engine");
         let (layers, d_c, d_r) = (
             engine.manifest.model.n_layers,
             engine.manifest.model.d_c,

@@ -52,49 +52,51 @@ fn main() {
     t.print();
     println!("(BF16 peak 148 TFLOPS; the SnapMLA curve should track 279.6 × ~0.85)\n");
 
-    // ---- real kernel artifacts on CPU (structural sanity) ------------------
+    // ---- real kernel execution on CPU (structural sanity) ------------------
     if !args.has("skip-real") {
-        let dir = Path::new("artifacts");
-        if dir.join("manifest.json").exists() {
-            let bench = bench_from_args(&args);
-            let mut eng = ModelEngine::load(dir, CacheMode::Fp8).expect("engine");
-            let (d_c, d_r) = (512usize, 64usize);
-            let mut t = Table::new(
-                "real kernel artifacts, CPU wallclock (interpret-mode; structure only)",
-                &["seqlen", "snapmla ms", "flashmla ms", "ratio"],
-            );
-            let seqs: &[usize] =
-                if args.has("quick") { &[1024, 2048] } else { &[1024, 2048, 4096] };
-            for &n in seqs {
-                let sargs = KernelArgs::snapmla(&eng.rt, 1, 64, d_c, d_r, n, n - 7, 5).unwrap();
-                let fargs = KernelArgs::flashmla(&eng.rt, 1, 64, d_c, d_r, n, n - 7, 5).unwrap();
-                let sname = format!("kernel_snapmla_h64_t1_n{n}");
-                let fname = format!("kernel_flashmla_h64_t1_n{n}");
-                // warm compile outside timing
-                eng.execute_kernel(&sname, &sargs.refs()).unwrap();
-                eng.execute_kernel(&fname, &fargs.refs()).unwrap();
-                let ms = bench.measure(&sname, || {
-                    eng.execute_kernel(&sname, &sargs.refs()).unwrap();
-                });
-                let mf = bench.measure(&fname, || {
-                    eng.execute_kernel(&fname, &fargs.refs()).unwrap();
-                });
-                t.row(vec![
-                    n.to_string(),
-                    f1(ms.mean_s * 1e3),
-                    f1(mf.mean_s * 1e3),
-                    format!("{:.2}", ms.mean_s / mf.mean_s),
-                ]);
-                report.push(Json::obj(vec![
-                    ("seqlen", Json::num(n as f64)),
-                    ("cpu_snapmla_ms", Json::num(ms.mean_s * 1e3)),
-                    ("cpu_flashmla_ms", Json::num(mf.mean_s * 1e3)),
-                ]));
-            }
-            t.print();
-        } else {
-            println!("(artifacts missing — modeled sweep only)");
+        let bench = bench_from_args(&args);
+        let mut eng = ModelEngine::auto(Path::new("artifacts"), CacheMode::Fp8).expect("engine");
+        let (d_c, d_r) = (512usize, 64usize);
+        let mut t = Table::new(
+            &format!(
+                "kernel execution via {} backend, CPU wallclock (structure only)",
+                eng.backend_name()
+            ),
+            &["seqlen", "snapmla ms", "flashmla ms", "ratio"],
+        );
+        let seqs: &[usize] =
+            if args.has("quick") { &[1024, 2048] } else { &[1024, 2048, 4096] };
+        for &n in seqs {
+            let sargs =
+                KernelArgs::snapmla(eng.backend_mut(), 1, 64, d_c, d_r, n, n - 7, 5).unwrap();
+            let fargs =
+                KernelArgs::flashmla(eng.backend_mut(), 1, 64, d_c, d_r, n, n - 7, 5).unwrap();
+            let sname = format!("kernel_snapmla_h64_t1_n{n}");
+            let fname = format!("kernel_flashmla_h64_t1_n{n}");
+            // warm compile outside timing
+            eng.execute_kernel(&sname, &sargs.bufs).unwrap();
+            eng.execute_kernel(&fname, &fargs.bufs).unwrap();
+            let ms = bench.measure(&sname, || {
+                eng.execute_kernel(&sname, &sargs.bufs).unwrap();
+            });
+            let mf = bench.measure(&fname, || {
+                eng.execute_kernel(&fname, &fargs.bufs).unwrap();
+            });
+            t.row(vec![
+                n.to_string(),
+                f1(ms.mean_s * 1e3),
+                f1(mf.mean_s * 1e3),
+                format!("{:.2}", ms.mean_s / mf.mean_s),
+            ]);
+            report.push(Json::obj(vec![
+                ("seqlen", Json::num(n as f64)),
+                ("cpu_snapmla_ms", Json::num(ms.mean_s * 1e3)),
+                ("cpu_flashmla_ms", Json::num(mf.mean_s * 1e3)),
+            ]));
+            sargs.release(eng.backend_mut());
+            fargs.release(eng.backend_mut());
         }
+        t.print();
     }
     write_report("fig6_kernel_tflops", Json::arr(report));
 }

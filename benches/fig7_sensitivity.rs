@@ -52,43 +52,45 @@ fn main() {
     println!("(saturation at H >= 64 near 85% of 279.6 TFLOPS, per App. I)\n");
 
     if !args.has("skip-real") {
-        let dir = Path::new("artifacts");
-        if dir.join("manifest.json").exists() {
-            let bench = bench_from_args(&args);
-            let mut eng = ModelEngine::load(dir, CacheMode::Fp8).expect("engine");
-            let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
-            let mut t = Table::new(
-                "real kernel artifacts, CPU wallclock (structure only, B=1)",
-                &["heads", "MTP", "snapmla ms", "flashmla ms"],
-            );
-            let heads: &[usize] = if args.has("quick") { &[16, 64] } else { &[16, 32, 64, 128] };
-            let mtps: &[usize] = if args.has("quick") { &[1] } else { &[1, 2] };
-            for &mtp in mtps {
-                for &h in heads {
-                    let sname = format!("kernel_snapmla_h{h}_t{mtp}_n{n}");
-                    let fname = format!("kernel_flashmla_h{h}_t{mtp}_n{n}");
-                    let sargs =
-                        KernelArgs::snapmla(&eng.rt, mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
-                    let fargs =
-                        KernelArgs::flashmla(&eng.rt, mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
-                    eng.execute_kernel(&sname, &sargs.refs()).unwrap();
-                    eng.execute_kernel(&fname, &fargs.refs()).unwrap();
-                    let ms = bench.measure(&sname, || {
-                        eng.execute_kernel(&sname, &sargs.refs()).unwrap();
-                    });
-                    let mf = bench.measure(&fname, || {
-                        eng.execute_kernel(&fname, &fargs.refs()).unwrap();
-                    });
-                    t.row(vec![
-                        h.to_string(),
-                        mtp.to_string(),
-                        f1(ms.mean_s * 1e3),
-                        f1(mf.mean_s * 1e3),
-                    ]);
-                }
+        let bench = bench_from_args(&args);
+        let mut eng = ModelEngine::auto(Path::new("artifacts"), CacheMode::Fp8).expect("engine");
+        let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
+        let mut t = Table::new(
+            &format!(
+                "kernel execution via {} backend, CPU wallclock (structure only, B=1)",
+                eng.backend_name()
+            ),
+            &["heads", "MTP", "snapmla ms", "flashmla ms"],
+        );
+        let heads: &[usize] = if args.has("quick") { &[16, 64] } else { &[16, 32, 64, 128] };
+        let mtps: &[usize] = if args.has("quick") { &[1] } else { &[1, 2] };
+        for &mtp in mtps {
+            for &h in heads {
+                let sname = format!("kernel_snapmla_h{h}_t{mtp}_n{n}");
+                let fname = format!("kernel_flashmla_h{h}_t{mtp}_n{n}");
+                let sargs =
+                    KernelArgs::snapmla(eng.backend_mut(), mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
+                let fargs =
+                    KernelArgs::flashmla(eng.backend_mut(), mtp, h, d_c, d_r, n, n - 3, 9).unwrap();
+                eng.execute_kernel(&sname, &sargs.bufs).unwrap();
+                eng.execute_kernel(&fname, &fargs.bufs).unwrap();
+                let ms = bench.measure(&sname, || {
+                    eng.execute_kernel(&sname, &sargs.bufs).unwrap();
+                });
+                let mf = bench.measure(&fname, || {
+                    eng.execute_kernel(&fname, &fargs.bufs).unwrap();
+                });
+                t.row(vec![
+                    h.to_string(),
+                    mtp.to_string(),
+                    f1(ms.mean_s * 1e3),
+                    f1(mf.mean_s * 1e3),
+                ]);
+                sargs.release(eng.backend_mut());
+                fargs.release(eng.backend_mut());
             }
-            t.print();
         }
+        t.print();
     }
     write_report("fig7_sensitivity", Json::arr(report));
 }

@@ -13,6 +13,7 @@
 //!
 //!     cargo bench --bench table1_quality [-- --quick --tasks N]
 
+use snapmla::anyhow;
 use snapmla::kvcache::{CacheMode, PagedKvCache};
 use snapmla::runtime::ModelEngine;
 use snapmla::util::cli::Args;
@@ -52,16 +53,12 @@ fn teacher_forced(
 fn main() {
     let args = Args::parse_with_flags(&["quick"]);
     let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return;
-    }
     let quick = args.has("quick");
     let n_tasks = args.usize_or("tasks", if quick { 1 } else { 2 });
     let max_target = args.usize_or("max-target", if quick { 24 } else { 48 });
 
-    let mut e8 = ModelEngine::load(dir, CacheMode::Fp8).expect("fp8 engine");
-    let mut e16 = ModelEngine::load(dir, CacheMode::Bf16).expect("bf16 engine");
+    let mut e8 = ModelEngine::auto(dir, CacheMode::Fp8).expect("fp8 engine");
+    let mut e16 = ModelEngine::auto(dir, CacheMode::Bf16).expect("bf16 engine");
 
     let mut t = Table::new(
         "Table 1 — teacher-forced parity, BF16 baseline vs SnapMLA FP8",

@@ -20,10 +20,6 @@ use std::path::Path;
 fn main() {
     let args = Args::parse_with_flags(&["quick"]);
     let dir = Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts missing — run `make artifacts` first");
-        return;
-    }
     let quick = args.has("quick");
     let cfg = EvalConfig {
         tasks_per_family: args.usize_or("tasks", 2),
@@ -37,7 +33,7 @@ fn main() {
     for mode in [CacheMode::Bf16, CacheMode::Fp8] {
         println!("measuring genlen under {mode:?}…");
         let mut server =
-            Server::new(ModelEngine::load(dir, mode).expect("engine"), 256);
+            Server::new(ModelEngine::auto(dir, mode).expect("engine"), 256);
         rows.push(run_suite(&mut server, &cfg).expect("suite"));
     }
 

@@ -6,6 +6,7 @@
 //!
 //!     cargo run --release --example fidelity_analysis -- [--quick]
 
+use snapmla::anyhow;
 use snapmla::fp8::quant_per_token;
 use snapmla::kvcache::{CacheMode, PagedKvCache};
 use snapmla::mla::fidelity::{build_stimuli, layerwise_errors};
@@ -67,10 +68,10 @@ fn main() -> anyhow::Result<()> {
     t.row(vec!["RoPE".into(), sci(quant_mse(&k_r, 32))]);
     t.print();
 
-    // ---- the same analysis on the REAL model's cache -----------------------
-    let dir = Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
-        let mut engine = ModelEngine::load(dir, CacheMode::Fp8)?;
+    // ---- the same analysis on the engine's own cache -----------------------
+    {
+        let dir = Path::new("artifacts");
+        let mut engine = ModelEngine::auto(dir, CacheMode::Fp8)?;
         let (n_layers, d_c, d_r) = (
             engine.manifest.model.n_layers,
             engine.manifest.model.d_c,
@@ -98,8 +99,6 @@ fn main() -> anyhow::Result<()> {
             component_stats(&format!("layer {layer} RoPE"), &r, &mut t);
         }
         t.print();
-    } else {
-        println!("(artifacts missing — skipping real-model capture)");
     }
 
     // ---- Fig. 5 analogue: layer-compounded fidelity ------------------------

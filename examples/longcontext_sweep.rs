@@ -4,6 +4,7 @@
 //!
 //!     cargo run --release --example longcontext_sweep -- [--quick]
 
+use snapmla::anyhow;
 use snapmla::kvcache::{CacheMode, PagedKvCache};
 use snapmla::perfmodel::{self, GpuSpec, KernelKind, KernelShape, ModelSpec};
 use snapmla::runtime::ModelEngine;
@@ -16,7 +17,6 @@ use std::time::Instant;
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_with_flags(&["quick"]);
     let dir = Path::new("artifacts");
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
     let quick = args.has("quick");
     let steps = args.usize_or("steps", if quick { 4 } else { 12 });
 
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             CacheMode::Fp8 => "SnapMLA FP8",
             CacheMode::Bf16 => "FlashMLA BF16",
         };
-        let mut engine = ModelEngine::load(dir, mode)?;
+        let mut engine = ModelEngine::auto(dir, mode)?;
         for &(fill, bucket) in &[(384usize, 512usize), (1536, 2048)] {
             let mut cache = PagedKvCache::new(engine.cache_config(256));
             let batch = 4usize;

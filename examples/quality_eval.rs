@@ -10,6 +10,7 @@
 //!
 //!     cargo run --release --example quality_eval -- [--tasks 6] [--quick]
 
+use snapmla::anyhow;
 use snapmla::coordinator::{ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
@@ -22,7 +23,6 @@ use std::path::Path;
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_with_flags(&["quick"]);
     let dir = Path::new("artifacts");
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
     let quick = args.has("quick");
     let n_tasks = args.usize_or("tasks", if quick { 3 } else { 6 });
     // cap generation lengths on the CPU substrate
@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
             "== evaluating {} pipeline…",
             if mi == 0 { "BF16" } else { "FP8" }
         );
-        let mut server = Server::new(ModelEngine::load(dir, mode)?, 256);
+        let mut server = Server::new(ModelEngine::auto(dir, mode)?, 256);
         for fam in &SUITE {
             let tasks = Suite::tasks(fam, n_tasks, 42);
             let mut id = 0u64;

@@ -1,12 +1,15 @@
-//! Quickstart: load the AOT-compiled SnapMLA model, prefill a prompt, and
+//! Quickstart: load the SnapMLA model engine, prefill a prompt, and
 //! greedily decode a continuation through the FP8 pipeline.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Everything on the request path is rust: the PJRT engine executes the
-//! HLO artifacts; the paged KV cache stores true u8 E4M3 content + bf16
-//! RoPE with per-token scales (the SnapMLA cache layout).
+//! Fully offline by default: the sim backend executes the reference MLA
+//! math over the deterministic induction model. With `--features pjrt` and
+//! compiled artifacts (`make artifacts`) the same code drives the AOT HLO
+//! via PJRT. Either way the paged KV cache stores true u8 E4M3 content +
+//! bf16 RoPE with per-token scales (the SnapMLA cache layout).
 
+use snapmla::anyhow;
 use snapmla::kvcache::{CacheMode, PagedKvCache};
 use snapmla::runtime::ModelEngine;
 use snapmla::util::rng::argmax;
@@ -15,17 +18,14 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let dir = Path::new("artifacts");
-    anyhow::ensure!(
-        dir.join("manifest.json").exists(),
-        "run `make artifacts` first"
-    );
 
     println!("loading engine (FP8 pipeline)…");
     let t0 = Instant::now();
-    let mut engine = ModelEngine::load(dir, CacheMode::Fp8)?;
+    let mut engine = ModelEngine::auto(dir, CacheMode::Fp8)?;
     println!(
-        "  {} params on device in {:.1}s",
+        "  {} params on the {} backend in {:.1}s",
         engine.manifest.model.params,
+        engine.backend_name(),
         t0.elapsed().as_secs_f64()
     );
 

@@ -8,6 +8,7 @@
 //!     cargo run --release --example serve_trace -- [--requests 24] [--dp 2]
 //!         [--quick]
 
+use snapmla::anyhow;
 use snapmla::coordinator::{Router, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
@@ -21,7 +22,6 @@ use std::path::Path;
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_with_flags(&["quick"]);
     let dir = Path::new("artifacts");
-    anyhow::ensure!(dir.join("manifest.json").exists(), "run `make artifacts` first");
     let quick = args.has("quick");
     let requests = args.usize_or("requests", if quick { 8 } else { 24 });
     let dp = args.usize_or("dp", 2);
@@ -52,12 +52,11 @@ fn main() -> anyhow::Result<()> {
         };
         println!("== {label}: loading {dp} DP rank(s)…");
         let ranks: anyhow::Result<Vec<Server>> = (0..dp)
-            .map(|_| Ok(Server::new(ModelEngine::load(dir, mode)?, pages)))
+            .map(|_| Ok(Server::new(ModelEngine::auto(dir, mode)?, pages)))
             .collect();
         let mut router = Router::new(ranks?);
 
         let mut rng = Rng::new(99);
-        let mut kv_bytes_per_token = 0usize;
         for r in &trace {
             let mlen = rng.range_usize(2, 6);
             let motif: Vec<i32> = (0..mlen).map(|_| 64 + rng.below(256) as i32).collect();
@@ -76,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         }
         let outcomes = router.run_to_completion()?;
         let cfg = router.ranks[0].cache.cfg;
-        kv_bytes_per_token = cfg.page_bytes() / snapmla::kvcache::PAGE_TOKENS;
+        let kv_bytes_per_token = cfg.page_bytes() / snapmla::kvcache::PAGE_TOKENS;
 
         let mut gen_tokens = 0u64;
         let mut wall = 0f64;
@@ -86,9 +85,6 @@ fn main() -> anyhow::Result<()> {
         for r in &router.ranks {
             gen_tokens += r.metrics.total_generated_tokens;
             wall = wall.max(r.metrics.wall_s);
-            for o in 0..r.metrics.ttft.len() {
-                let _ = o;
-            }
             batch.push(r.metrics.decode_batch.mean());
         }
         for o in &outcomes {

@@ -1,6 +1,7 @@
 //! Node topology: (DP, TP) layouts over an 8-GPU node and per-rank memory
 //! accounting (weights + KV budget), feeding the Fig. 1 batch-capacity model.
 
+use crate::anyhow;
 use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
 
 #[derive(Clone, Copy, Debug)]

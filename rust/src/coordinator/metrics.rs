@@ -106,10 +106,10 @@ impl ServerMetrics {
         t.row(vec!["wall time (s)".into(), f2(self.wall_s)]);
         t.row(vec!["gen throughput (tok/s)".into(), f1(self.gen_tokens_per_s())]);
         t.row(vec!["mean decode batch".into(), f2(self.decode_batch.mean())]);
-        t.row(vec!["TTFT p50/p95 (ms)".into(),
-            format!("{} / {}", f1(self.ttft.median() * 1e3), f1(self.ttft.percentile(95.0) * 1e3))]);
-        t.row(vec!["TPOT p50/p95 (ms)".into(),
-            format!("{} / {}", f1(self.tpot.median() * 1e3), f1(self.tpot.percentile(95.0) * 1e3))]);
+        let p50_p95 =
+            |s: &Summary| format!("{} / {}", f1(s.median() * 1e3), f1(s.percentile(95.0) * 1e3));
+        t.row(vec!["TTFT p50/p95 (ms)".into(), p50_p95(&self.ttft)]);
+        t.row(vec!["TPOT p50/p95 (ms)".into(), p50_p95(&self.tpot)]);
         t.row(vec!["preemptions".into(), format!("{}", self.total_preemptions)]);
         t.render()
     }

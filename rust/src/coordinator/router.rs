@@ -8,6 +8,7 @@
 
 use super::request::{RequestOutcome, ServeRequest};
 use super::server::Server;
+use crate::anyhow;
 
 /// Snapshot of one rank's load.
 #[derive(Clone, Copy, Debug)]
@@ -108,7 +109,7 @@ mod tests {
     use super::*;
 
     fn load(tokens: usize, free: usize, need: usize) -> RankLoad {
-        RankLoad { tokens: tokens, free_pages: free, pages_needed: need }
+        RankLoad { tokens, free_pages: free, pages_needed: need }
     }
 
     #[test]

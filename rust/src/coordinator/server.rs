@@ -5,6 +5,7 @@ use super::metrics::ServerMetrics;
 use super::request::{RequestOutcome, ServeRequest};
 use super::scheduler::{Action, RunningSeq, Scheduler, SchedulerConfig, WaitingSeq};
 use super::sequence::{SeqPhase, Sequence};
+use crate::anyhow;
 use crate::kvcache::{PagedKvCache, PAGE_TOKENS};
 use crate::runtime::ModelEngine;
 use std::collections::VecDeque;
@@ -86,12 +87,11 @@ impl Server {
 
     /// Queue-depth signal for the DP router (tokens outstanding).
     pub fn load_tokens(&self) -> usize {
-        self.waiting.iter().map(|s| s.request.prompt.len() + s.request.max_new_tokens).sum::<usize>()
-            + self
-                .running
-                .iter()
-                .map(|s| s.request.max_new_tokens - s.generated.len())
-                .sum::<usize>()
+        let queued: usize =
+            self.waiting.iter().map(|s| s.request.prompt.len() + s.request.max_new_tokens).sum();
+        let remaining: usize =
+            self.running.iter().map(|s| s.request.max_new_tokens - s.generated.len()).sum();
+        queued + remaining
     }
 
     /// One scheduling iteration. Returns false when fully idle.

@@ -125,8 +125,8 @@ mod tests {
             let d = q.dequant();
             let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
             for (x, y) in xs.iter().zip(&d) {
-                assert!((x - y).abs() <= amax * 0.0625 / 448.0 * 448.0 * 0.0625 + amax * 2.0_f32.powi(-4) ,
-                    "x={x} y={y} amax={amax}");
+                let tol = amax * 0.0625 / 448.0 * 448.0 * 0.0625 + amax * 2.0_f32.powi(-4);
+                assert!((x - y).abs() <= tol, "x={x} y={y} amax={amax}");
             }
         }
     }

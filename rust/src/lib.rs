@@ -8,12 +8,22 @@
 //!   artifacts (`make artifacts`, see `python/compile/`).
 //! * **L3 (this crate)** — the serving coordinator: request router,
 //!   continuous batcher, prefill/decode scheduler, paged FP8 KV cache,
-//!   DP/TP cluster simulation, and a PJRT runtime (`xla` crate) that loads
-//!   and executes the artifacts. Python never runs on the request path.
+//!   DP/TP cluster simulation, and a backend-abstracted model engine.
 //!
-//! The offline crate set contains only the `xla` closure, so `util` provides
-//! hand-rolled JSON, CLI parsing, RNG, statistics, property testing and a
-//! criterion-style bench harness (see DESIGN.md "Deliberate deviations").
+//! Execution is decoupled from the device behind
+//! [`runtime::backend::ExecBackend`]:
+//!
+//! * the default build is **fully offline** — [`runtime::sim::SimBackend`]
+//!   executes decode/prefill through the `mla` reference math + bit-exact
+//!   `fp8` quantizers over a deterministic hand-constructed induction model;
+//! * the `pjrt` cargo feature enables the PJRT path (`runtime::client`) that
+//!   compiles and runs the AOT HLO artifacts via the `xla` crate (the
+//!   in-repo `third_party/xla-stub` keeps it type-checking offline).
+//!
+//! The offline crate set is dependency-free, so `util` provides hand-rolled
+//! JSON, CLI parsing, RNG, statistics, error handling ([`anyhow`]), property
+//! testing and a criterion-style bench harness (see DESIGN.md "Deliberate
+//! deviations").
 //!
 //! Module map (DESIGN.md has the full inventory):
 //! * [`fp8`] — bit-exact E4M3/BF16 codecs and the paper's quantizers
@@ -21,7 +31,7 @@
 //!   pipeline (incl. the App. E dual-warp-group hazard study), synthetic
 //!   KV statistics and fidelity metrics
 //! * [`kvcache`] — paged KV cache: u8 FP8 content + bf16 RoPE + f32 scales
-//! * [`runtime`] — PJRT artifact registry, weight loading, model engine
+//! * [`runtime`] — backend trait, sim + PJRT backends, model engine
 //! * [`coordinator`] — requests, sequences, batcher, scheduler, router,
 //!   serving loop, metrics
 //! * [`cluster`] — DP/TP topology and collective cost model
@@ -39,3 +49,12 @@ pub mod perfmodel;
 pub mod runtime;
 pub mod util;
 pub mod workload;
+
+/// `anyhow`-compatible facade over [`util::error`] (the offline crate set
+/// has no external dependencies): `use snapmla::anyhow;` then
+/// `anyhow::Result<T>` / `anyhow::anyhow!` / `anyhow::bail!` /
+/// `anyhow::ensure!` exactly as with the real crate.
+pub mod anyhow {
+    pub use crate::util::error::{Error, Result};
+    pub use crate::{__anyhow as anyhow, bail, ensure};
+}

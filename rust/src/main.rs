@@ -10,7 +10,12 @@
 //!                                — Fig.-1-style analytical throughput sweep
 //!
 //! `cargo run --release -- serve --requests 16`
+//!
+//! Without compiled artifacts (default offline build) every subcommand runs
+//! against the pure-Rust `SimBackend`; with `--features pjrt` and an
+//! `artifacts/` dir the same commands drive the AOT HLO via PJRT.
 
+use snapmla::anyhow;
 use snapmla::cluster::NodeTopology;
 use snapmla::coordinator::{Router, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
@@ -45,7 +50,19 @@ fn main() -> anyhow::Result<()> {
 }
 
 fn info(args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(&artifacts_dir(args))?;
+    let dir = artifacts_dir(args);
+    let m = if dir.join("manifest.json").exists() {
+        if !cfg!(feature = "pjrt") {
+            println!(
+                "(note: offline build — serving subcommands execute the sim backend; \
+                 rebuild with --features pjrt to run these artifacts)"
+            );
+        }
+        Manifest::load(&dir)?
+    } else {
+        println!("(no artifacts at {dir:?} — describing the sim model)");
+        snapmla::runtime::sim::sim_manifest(&snapmla::runtime::SimSpec::small())
+    };
     println!(
         "model: {} params, d_model {}, {} layers, H{} d_c {} d_r {} vocab {}",
         m.model.params, m.model.d_model, m.model.n_layers, m.model.n_heads,
@@ -86,7 +103,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     });
 
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)
-        .map(|_| Ok(Server::new(ModelEngine::load(&dir, mode)?, pages)))
+        .map(|_| Ok(Server::new(ModelEngine::auto(&dir, mode)?, pages)))
         .collect();
     let mut router = Router::new(ranks?);
     let mut rng = Rng::new(1234);

@@ -66,7 +66,7 @@ impl KernelShape {
 /// tensor core underfed (App. I: saturation at H ≥ 64, ~85% of peak).
 fn row_tile_util(heads: usize, t_q: usize) -> f64 {
     let m = (heads * t_q) as f64;
-    (m / 64.0).min(1.0).max(1.0 / 64.0)
+    (m / 64.0).clamp(1.0 / 64.0, 1.0)
 }
 
 /// Pipeline ramp: prologue/epilogue amortize over the KV length (the fig. 6

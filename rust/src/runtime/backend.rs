@@ -1,0 +1,118 @@
+//! The execution-backend abstraction: everything `ModelEngine` needs from a
+//! device — buffer upload/download, executable loading, step execution —
+//! behind one object-safe trait.
+//!
+//! Two implementations ship:
+//! * [`super::sim::SimBackend`] — pure-Rust reference execution through
+//!   `mla::ref_attn` / `mla::pipeline` plus the bit-exact `fp8` quantizers.
+//!   No external dependencies; the default build is fully offline.
+//! * `super::client::PjrtBackend` (cargo feature `pjrt`) — the PJRT path
+//!   that compiles and runs the AOT HLO artifacts via the `xla` crate.
+//!
+//! Buffers and executables are opaque integer handles so the trait stays
+//! object-safe and backends own their device state. Handles are only valid
+//! on the backend that issued them.
+
+use super::manifest::Manifest;
+use crate::anyhow;
+
+/// Opaque device-buffer handle.
+pub type BufId = usize;
+
+/// Opaque loaded-executable handle.
+pub type ExecId = usize;
+
+/// A model-execution device.
+pub trait ExecBackend {
+    /// Human-readable backend name ("sim" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Upload host f32 data shaped `dims`; fails on element-count mismatch.
+    fn upload_f32(&mut self, data: &[f32], dims: &[usize]) -> anyhow::Result<BufId>;
+
+    /// Upload host i32 data shaped `dims`; fails on element-count mismatch.
+    fn upload_i32(&mut self, data: &[i32], dims: &[usize]) -> anyhow::Result<BufId>;
+
+    /// Read a buffer back as f32 (tests / debugging surface).
+    fn download_f32(&mut self, buf: BufId) -> anyhow::Result<Vec<f32>>;
+
+    /// Release a buffer. Releasing an unknown/freed handle is a no-op.
+    fn free(&mut self, buf: BufId);
+
+    /// Load (and compile, where applicable) the executable for manifest
+    /// artifact `name`.
+    fn load_exec(&mut self, manifest: &Manifest, name: &str) -> anyhow::Result<ExecId>;
+
+    /// Execute with positional buffer arguments (weights first, in manifest
+    /// `param_order`, then the step inputs); returns the flattened f32
+    /// output tuple.
+    fn execute(&mut self, exec: ExecId, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>>;
+}
+
+/// Shared handle-table plumbing for backends (slot reuse via a free list).
+pub(crate) struct Slots<T> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+}
+
+impl<T> Default for Slots<T> {
+    fn default() -> Slots<T> {
+        Slots { slots: Vec::new(), free: Vec::new() }
+    }
+}
+
+impl<T> Slots<T> {
+    pub fn new() -> Slots<T> {
+        Slots::default()
+    }
+
+    pub fn insert(&mut self, value: T) -> usize {
+        if let Some(id) = self.free.pop() {
+            self.slots[id] = Some(value);
+            id
+        } else {
+            self.slots.push(Some(value));
+            self.slots.len() - 1
+        }
+    }
+
+    pub fn get(&self, id: usize) -> Option<&T> {
+        self.slots.get(id).and_then(|s| s.as_ref())
+    }
+
+    pub fn remove(&mut self, id: usize) {
+        if id < self.slots.len() && self.slots[id].is_some() {
+            self.slots[id] = None;
+            self.free.push(id);
+        }
+    }
+
+    pub fn live(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_reuse_freed_ids() {
+        let mut s: Slots<u32> = Slots::new();
+        let a = s.insert(10);
+        let b = s.insert(20);
+        assert_ne!(a, b);
+        assert_eq!(s.live(), 2);
+        s.remove(a);
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.live(), 1);
+        let c = s.insert(30);
+        assert_eq!(c, a, "freed slot must be reused");
+        assert_eq!(s.get(c), Some(&30));
+        // double-free and unknown ids are no-ops
+        s.remove(b);
+        s.remove(b);
+        s.remove(999);
+        assert_eq!(s.live(), 1);
+    }
+}

@@ -1,15 +1,23 @@
-//! The model engine: bucketized decode/prefill execution of the AOT
-//! artifacts over the paged KV cache.
+//! The model engine: bucketized decode/prefill execution over the paged KV
+//! cache, on top of an [`ExecBackend`].
 //!
 //! One engine = one model replica (a DP rank). Weights are uploaded to the
-//! device once at load; each step uploads only the step inputs (token ids,
+//! backend once at load; each step uploads only the step inputs (token ids,
 //! positions, gathered cache views) and downloads logits + the new KV
 //! entries, which are appended to the rust-owned paged cache (the canonical
 //! store — u8 E4M3 + bf16, bit-exact with the in-graph quantization).
+//!
+//! The engine is backend-agnostic: [`ModelEngine::sim`] builds the offline
+//! pure-Rust backend (default); [`ModelEngine::load`] (feature `pjrt`)
+//! drives AOT HLO artifacts through PJRT; [`ModelEngine::auto`] picks
+//! whichever is available.
 
-use super::client::Runtime;
-use super::manifest::{ArtifactKind, Manifest};
+use super::backend::{BufId, ExecBackend, ExecId};
+use super::manifest::Manifest;
+use super::sim::{sim_manifest, sim_weights, SimBackend};
+use super::sim_model::SimSpec;
 use super::weights::Weights;
+use crate::anyhow;
 use crate::kvcache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -28,12 +36,12 @@ pub struct EngineStats {
 }
 
 pub struct ModelEngine {
-    pub rt: Runtime,
+    backend: Box<dyn ExecBackend>,
     pub manifest: Manifest,
     pub mode: CacheMode,
     mode_str: &'static str,
-    weight_bufs: Vec<xla::PjRtBuffer>,
-    execs: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<BufId>,
+    execs: BTreeMap<String, ExecId>,
     pub stats: EngineStats,
 }
 
@@ -50,11 +58,13 @@ pub struct PrefillResult {
 }
 
 impl ModelEngine {
-    /// Load manifest + weights and upload weights to the device.
-    pub fn load(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
-        let rt = Runtime::cpu()?;
-        let manifest = Manifest::load(artifacts_dir)?;
-        let weights = Weights::load(&artifacts_dir.join("weights.bin"))?;
+    /// Build an engine over an explicit backend + manifest + weights.
+    pub fn with_backend(
+        mut backend: Box<dyn ExecBackend>,
+        manifest: Manifest,
+        weights: &Weights,
+        mode: CacheMode,
+    ) -> anyhow::Result<ModelEngine> {
         anyhow::ensure!(
             weights.total_params() == manifest.model.params,
             "weights/manifest param count mismatch"
@@ -62,10 +72,10 @@ impl ModelEngine {
         let mut weight_bufs = Vec::with_capacity(manifest.param_order.len());
         for name in &manifest.param_order {
             let t = weights.get(name)?;
-            weight_bufs.push(rt.buf_f32(&t.data, &t.dims)?);
+            weight_bufs.push(backend.upload_f32(&t.data, &t.dims)?);
         }
         Ok(ModelEngine {
-            rt,
+            backend,
             manifest,
             mode,
             mode_str: match mode {
@@ -76,6 +86,46 @@ impl ModelEngine {
             execs: BTreeMap::new(),
             stats: EngineStats::default(),
         })
+    }
+
+    /// The offline engine: pure-Rust [`SimBackend`] over the deterministic
+    /// hand-constructed induction model. Needs no artifacts, no deps.
+    pub fn sim(mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        let spec = SimSpec::small();
+        let manifest = sim_manifest(&spec);
+        let weights = sim_weights(&spec);
+        ModelEngine::with_backend(Box::new(SimBackend::new(spec)), manifest, &weights, mode)
+    }
+
+    /// Load manifest + weights from an AOT artifacts dir and upload weights
+    /// to the PJRT device.
+    #[cfg(feature = "pjrt")]
+    pub fn load(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        let backend = super::client::PjrtBackend::cpu()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let weights = Weights::load(&artifacts_dir.join("weights.bin"))?;
+        ModelEngine::with_backend(Box::new(backend), manifest, &weights, mode)
+    }
+
+    /// Backend auto-selection: the PJRT path when the `pjrt` feature is on
+    /// AND `artifacts_dir` holds compiled artifacts; the sim otherwise.
+    pub fn auto(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        #[cfg(feature = "pjrt")]
+        if artifacts_dir.join("manifest.json").exists() {
+            return ModelEngine::load(artifacts_dir, mode);
+        }
+        #[cfg(not(feature = "pjrt"))]
+        let _ = artifacts_dir;
+        ModelEngine::sim(mode)
+    }
+
+    /// The execution backend (kernel benches stage their own buffers).
+    pub fn backend_mut(&mut self) -> &mut dyn ExecBackend {
+        self.backend.as_mut()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn mode_str(&self) -> &'static str {
@@ -98,14 +148,14 @@ impl ModelEngine {
         self.manifest.max_context(self.mode_str)
     }
 
-    fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<()> {
-        if !self.execs.contains_key(name) {
-            let path = self.manifest.hlo_path(name);
-            let exe = self.rt.load_hlo(&path)?;
-            self.execs.insert(name.to_string(), exe);
-            self.stats.compiles += 1;
+    fn ensure_compiled(&mut self, name: &str) -> anyhow::Result<ExecId> {
+        if let Some(&id) = self.execs.get(name) {
+            return Ok(id);
         }
-        Ok(())
+        let id = self.backend.load_exec(&self.manifest, name)?;
+        self.execs.insert(name.to_string(), id);
+        self.stats.compiles += 1;
+        Ok(id)
     }
 
     /// Execute an arbitrary artifact with explicit (non-weight) args —
@@ -113,11 +163,10 @@ impl ModelEngine {
     pub fn execute_kernel(
         &mut self,
         name: &str,
-        args: &[&xla::PjRtBuffer],
+        args: &[BufId],
     ) -> anyhow::Result<Vec<Vec<f32>>> {
-        self.ensure_compiled(name)?;
-        let exe = self.execs.get(name).unwrap();
-        self.rt.run_to_f32(exe, args)
+        let exec = self.ensure_compiled(name)?;
+        self.backend.execute(exec, args)
     }
 
     /// One decode step for `items` = (sequence, input token) pairs. Appends
@@ -146,7 +195,7 @@ impl ModelEngine {
                 )
             })?;
         let (bb, ss, name) = (bucket.batch, bucket.seq, bucket.name.clone());
-        self.ensure_compiled(&name)?;
+        let exec = self.ensure_compiled(&name)?;
 
         // ---- stage inputs ---------------------------------------------------
         let t0 = Instant::now();
@@ -173,25 +222,40 @@ impl ModelEngine {
                 );
             }
         }
-        let tok_buf = self.rt.buf_i32(&token_ids, &[bb, 1])?;
-        let pos_buf = self.rt.buf_i32(&positions, &[bb])?;
-        let kc_buf = self.rt.buf_f32(&k_c, &[l, bb, ss, d_c])?;
-        let kr_buf = self.rt.buf_f32(&k_r, &[l, bb, ss, d_r])?;
-        let sg_buf = if fp8 { Some(self.rt.buf_f32(&sigma, &[l, bb, ss, 1])?) } else { None };
+        // step buffers are freed on every exit path (incl. failed uploads)
+        let mut step_bufs: Vec<BufId> = Vec::new();
+        let staged = {
+            let backend = self.backend.as_mut();
+            let bufs = &mut step_bufs;
+            let mut stage = || -> anyhow::Result<()> {
+                bufs.push(backend.upload_i32(&token_ids, &[bb, 1])?);
+                bufs.push(backend.upload_i32(&positions, &[bb])?);
+                bufs.push(backend.upload_f32(&k_c, &[l, bb, ss, d_c])?);
+                bufs.push(backend.upload_f32(&k_r, &[l, bb, ss, d_r])?);
+                if fp8 {
+                    bufs.push(backend.upload_f32(&sigma, &[l, bb, ss, 1])?);
+                }
+                Ok(())
+            };
+            stage()
+        };
+        if let Err(e) = staged {
+            for id in step_bufs {
+                self.backend.free(id);
+            }
+            return Err(e);
+        }
         self.stats.gather_s += t0.elapsed().as_secs_f64();
 
         // ---- execute --------------------------------------------------------
         let t1 = Instant::now();
-        let exe = self.execs.get(&name).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.push(&tok_buf);
-        args.push(&pos_buf);
-        args.push(&kc_buf);
-        args.push(&kr_buf);
-        if let Some(ref sg) = sg_buf {
-            args.push(sg);
+        let mut args: Vec<BufId> = self.weight_bufs.clone();
+        args.extend(&step_bufs);
+        let result = self.backend.execute(exec, &args);
+        for id in step_bufs {
+            self.backend.free(id);
         }
-        let outs = self.rt.run_to_f32(exe, &args)?;
+        let outs = result?;
         self.stats.execute_s += t1.elapsed().as_secs_f64();
         anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
 
@@ -250,7 +314,7 @@ impl ModelEngine {
                 anyhow::anyhow!("no prefill bucket for batch {} prompt {max_p}", items.len())
             })?;
         let (bb, pp, name) = (bucket.batch, bucket.seq, bucket.name.clone());
-        self.ensure_compiled(&name)?;
+        let exec = self.ensure_compiled(&name)?;
 
         let t0 = Instant::now();
         let mut token_ids = vec![0i32; bb * pp];
@@ -259,16 +323,24 @@ impl ModelEngine {
             token_ids[i * pp..i * pp + prompt.len()].copy_from_slice(prompt);
             plens[i] = prompt.len() as i32;
         }
-        let tok_buf = self.rt.buf_i32(&token_ids, &[bb, pp])?;
-        let len_buf = self.rt.buf_i32(&plens, &[bb])?;
+        let tok_buf = self.backend.upload_i32(&token_ids, &[bb, pp])?;
+        let len_buf = match self.backend.upload_i32(&plens, &[bb]) {
+            Ok(id) => id,
+            Err(e) => {
+                self.backend.free(tok_buf);
+                return Err(e);
+            }
+        };
         self.stats.gather_s += t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let exe = self.execs.get(&name).unwrap();
-        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-        let outs = self.rt.run_to_f32(exe, &args)?;
+        let mut args: Vec<BufId> = self.weight_bufs.clone();
+        args.push(tok_buf);
+        args.push(len_buf);
+        let result = self.backend.execute(exec, &args);
+        self.backend.free(tok_buf);
+        self.backend.free(len_buf);
+        let outs = result?;
         self.stats.execute_s += t1.elapsed().as_secs_f64();
         let fp8 = self.mode == CacheMode::Fp8;
         anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
@@ -316,12 +388,13 @@ impl ModelEngine {
 /// Kernel-artifact argument staging (shared by benches): builds the buffers
 /// for a `kernel_snapmla_*` / `kernel_flashmla_*` artifact invocation.
 pub struct KernelArgs {
-    pub bufs: Vec<xla::PjRtBuffer>,
+    pub bufs: Vec<BufId>,
 }
 
 impl KernelArgs {
+    #[allow(clippy::too_many_arguments)]
     pub fn snapmla(
-        rt: &Runtime,
+        backend: &mut dyn ExecBackend,
         t_q: usize,
         heads: usize,
         d_c: usize,
@@ -340,19 +413,20 @@ impl KernelArgs {
         let sk = vec![0.02f32; n];
         Ok(KernelArgs {
             bufs: vec![
-                rt.buf_f32(&q_c, &[t_q, heads, d_c])?,
-                rt.buf_f32(&q_r, &[t_q, heads, d_r])?,
-                rt.buf_f32(&sq, &[t_q, heads, 1])?,
-                rt.buf_f32(&k_c, &[n, d_c])?,
-                rt.buf_f32(&k_r, &[n, d_r])?,
-                rt.buf_f32(&sk, &[n, 1])?,
-                rt.buf_i32(&[length as i32], &[1])?,
+                backend.upload_f32(&q_c, &[t_q, heads, d_c])?,
+                backend.upload_f32(&q_r, &[t_q, heads, d_r])?,
+                backend.upload_f32(&sq, &[t_q, heads, 1])?,
+                backend.upload_f32(&k_c, &[n, d_c])?,
+                backend.upload_f32(&k_r, &[n, d_r])?,
+                backend.upload_f32(&sk, &[n, 1])?,
+                backend.upload_i32(&[length as i32], &[1])?,
             ],
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     pub fn flashmla(
-        rt: &Runtime,
+        backend: &mut dyn ExecBackend,
         t_q: usize,
         heads: usize,
         d_c: usize,
@@ -369,16 +443,56 @@ impl KernelArgs {
         let k_r = rng.normal_vec(n * d_r, 0.3);
         Ok(KernelArgs {
             bufs: vec![
-                rt.buf_f32(&q_c, &[t_q, heads, d_c])?,
-                rt.buf_f32(&q_r, &[t_q, heads, d_r])?,
-                rt.buf_f32(&k_c, &[n, d_c])?,
-                rt.buf_f32(&k_r, &[n, d_r])?,
-                rt.buf_i32(&[length as i32], &[1])?,
+                backend.upload_f32(&q_c, &[t_q, heads, d_c])?,
+                backend.upload_f32(&q_r, &[t_q, heads, d_r])?,
+                backend.upload_f32(&k_c, &[n, d_c])?,
+                backend.upload_f32(&k_r, &[n, d_r])?,
+                backend.upload_i32(&[length as i32], &[1])?,
             ],
         })
     }
 
-    pub fn refs(&self) -> Vec<&xla::PjRtBuffer> {
-        self.bufs.iter().collect()
+    /// Release the staged buffers.
+    pub fn release(self, backend: &mut dyn ExecBackend) {
+        for id in self.bufs {
+            backend.free(id);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_engine_loads_and_reports_buckets() {
+        let eng = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        assert_eq!(eng.backend_name(), "sim");
+        assert_eq!(eng.mode_str(), "fp8");
+        assert_eq!(eng.max_context(), 2048);
+        let cfg = eng.cache_config(16);
+        assert_eq!(cfg.n_layers, eng.manifest.model.n_layers);
+        assert_eq!(cfg.capacity_pages, 16);
+    }
+
+    #[test]
+    fn auto_falls_back_to_sim_without_artifacts() {
+        let eng = ModelEngine::auto(Path::new("/definitely/not/there"), CacheMode::Bf16).unwrap();
+        assert_eq!(eng.backend_name(), "sim");
+    }
+
+    #[test]
+    fn decode_roundtrip_updates_cache() {
+        let mut eng = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache = PagedKvCache::new(eng.cache_config(8));
+        cache.register(1);
+        let out = eng.prefill(&mut cache, &[(1, vec![1, 70, 71, 70])]).unwrap();
+        assert_eq!(out.logits[0].len(), eng.manifest.model.vocab);
+        assert_eq!(cache.tokens_of(1), 4);
+        let r = eng.decode(&mut cache, &[(1, 71)]).unwrap();
+        assert!(r.logits[0].iter().all(|x| x.is_finite()));
+        assert_eq!(cache.tokens_of(1), 5);
+        assert_eq!(eng.stats.decode_steps, 1);
+        assert_eq!(eng.stats.prefill_calls, 1);
     }
 }

@@ -1,6 +1,7 @@
 //! artifacts/manifest.json — the contract between `python/compile/aot.py`
 //! and the rust runtime (model dims, artifact shapes, flattened param order).
 
+use crate::anyhow;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -155,7 +156,13 @@ impl Manifest {
             .unwrap_or(0)
     }
 
-    pub fn kernel_artifact(&self, kernel: &str, heads: usize, t_q: usize, seq: usize) -> Option<&ArtifactInfo> {
+    pub fn kernel_artifact(
+        &self,
+        kernel: &str,
+        heads: usize,
+        t_q: usize,
+        seq: usize,
+    ) -> Option<&ArtifactInfo> {
         self.artifacts.values().find(|a| {
             a.kind == ArtifactKind::Kernel
                 && a.mode == kernel

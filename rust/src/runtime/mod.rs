@@ -1,20 +1,30 @@
-//! PJRT runtime: load AOT artifacts (HLO text), manage weights on device,
-//! and execute decode/prefill steps from the rust hot path.
-//!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire model-execution surface at serve time:
+//! Model execution: artifact manifest, weight loading, the backend
+//! abstraction and the model engine.
 //!
 //! * [`manifest`] — artifact index + model metadata (artifacts/manifest.json)
 //! * [`weights`]  — weights.bin loader (custom binary bundle)
-//! * [`client`]   — thin `xla` crate wrapper (PJRT CPU client)
+//! * [`backend`]  — [`backend::ExecBackend`]: upload/download, executable
+//!   load, step execution behind one object-safe trait
+//! * [`sim`]      — offline pure-Rust backend (reference MLA math + bit-exact
+//!   FP8 quantizers over a deterministic induction model)
+//! * [`sim_model`] — the sim model's constructed weights + forward pass
+//! * `client` (feature `pjrt`) — PJRT backend executing AOT HLO artifacts
 //! * [`engine`]   — bucketized decode/prefill execution over the paged cache
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod client;
 pub mod engine;
 pub mod manifest;
+pub mod sim;
+pub mod sim_model;
 pub mod weights;
 
-pub use client::Runtime;
-pub use engine::{DecodeResult, ModelEngine, PrefillResult};
+pub use backend::{BufId, ExecBackend, ExecId};
+#[cfg(feature = "pjrt")]
+pub use client::{PjrtBackend, Runtime};
+pub use engine::{DecodeResult, KernelArgs, ModelEngine, PrefillResult};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelMeta};
+pub use sim::SimBackend;
+pub use sim_model::SimSpec;
 pub use weights::Weights;

@@ -1,0 +1,546 @@
+//! `SimBackend` — the offline-first execution backend.
+//!
+//! Implements [`super::backend::ExecBackend`] entirely in safe, dependency-
+//! free Rust: decode/prefill steps run the reference MLA math
+//! (`mla::ref_attn` for BF16, the Algorithm-1 `mla::pipeline` for FP8) over
+//! the engine's gathered paged-cache views, with the bit-exact `fp8`
+//! quantizers producing the new cache entries; kernel artifacts execute the
+//! same paper-shape math the Pallas kernels implement. Everything is
+//! deterministic via `util::rng`, so serving runs reproduce exactly.
+//!
+//! The backend interprets the same artifact names, bucket shapes and
+//! positional calling convention as the AOT HLO artifacts, so `ModelEngine`
+//! is byte-for-byte agnostic to which backend it drives.
+
+use super::backend::{BufId, ExecBackend, ExecId, Slots};
+use super::manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelMeta};
+use super::sim_model::{self, DecodeCache, SimParams, SimSpec};
+use super::weights::Weights;
+use crate::anyhow;
+use crate::fp8::bf16_round;
+use crate::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
+use crate::mla::ref_attn::attention_with_values;
+use crate::mla::{Query, Shape};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Decode/prefill bucket shapes — mirrors `DECODE_BUCKETS`/`PREFILL_BUCKETS`
+/// in `python/compile/aot.py` so scheduler behavior matches the PJRT path.
+const DECODE_BUCKETS: [(usize, usize); 8] =
+    [(1, 128), (4, 128), (8, 128), (1, 512), (4, 512), (8, 512), (4, 2048), (8, 2048)];
+const PREFILL_BUCKETS: [(usize, usize); 6] =
+    [(1, 32), (4, 32), (8, 32), (1, 128), (4, 128), (8, 128)];
+
+/// Paper-shape kernel sweep (heads, t_q, seq) — mirrors `KERNEL_SWEEP`.
+fn kernel_sweep() -> Vec<(usize, usize, usize)> {
+    let mut sweep = Vec::new();
+    for h in [16, 32, 64, 128] {
+        for t in [1, 2] {
+            sweep.push((h, t, 1024));
+        }
+    }
+    for n in [2048, 4096, 8192] {
+        sweep.push((64, 1, n));
+    }
+    sweep
+}
+
+/// Build the in-memory manifest describing the sim model + its "artifacts".
+pub fn sim_manifest(spec: &SimSpec) -> Manifest {
+    let model = ModelMeta {
+        vocab: spec.vocab,
+        d_model: spec.d_model,
+        n_layers: spec.n_layers,
+        n_heads: spec.n_heads,
+        d_c: spec.d_c,
+        d_r: spec.d_r,
+        d_ffn: spec.d_ffn,
+        sm_scale: spec.sm_scale(),
+        params: spec.param_count(),
+        eos: 0,
+        bos: 1,
+    };
+    let param_order: Vec<String> =
+        spec.param_shapes().into_iter().map(|(name, _)| name).collect();
+
+    let mut artifacts = BTreeMap::new();
+    for mode in ["fp8", "bf16"] {
+        for (batch, seq) in DECODE_BUCKETS {
+            let name = format!("model_{mode}_decode_b{batch}_s{seq}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    kind: ArtifactKind::Decode,
+                    mode: mode.to_string(),
+                    batch,
+                    seq,
+                    heads: spec.n_heads,
+                    t_q: 1,
+                },
+            );
+        }
+        for (batch, prompt) in PREFILL_BUCKETS {
+            let name = format!("model_{mode}_prefill_b{batch}_p{prompt}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    kind: ArtifactKind::Prefill,
+                    mode: mode.to_string(),
+                    batch,
+                    seq: prompt,
+                    heads: spec.n_heads,
+                    t_q: 1,
+                },
+            );
+        }
+    }
+    for kernel in ["snapmla", "flashmla"] {
+        for (heads, t_q, seq) in kernel_sweep() {
+            let name = format!("kernel_{kernel}_h{heads}_t{t_q}_n{seq}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    kind: ArtifactKind::Kernel,
+                    mode: kernel.to_string(),
+                    batch: 1,
+                    seq,
+                    heads,
+                    t_q,
+                },
+            );
+        }
+    }
+    Manifest { dir: PathBuf::from("artifacts"), model, param_order, artifacts }
+}
+
+/// The deterministically constructed sim weights.
+pub fn sim_weights(spec: &SimSpec) -> Weights {
+    sim_model::build_weights(spec, sim_model::SIM_WEIGHT_SEED)
+}
+
+enum SimBuffer {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+#[derive(Clone)]
+struct SimExec {
+    info: ArtifactInfo,
+    model: ModelMeta,
+    param_order: Vec<String>,
+}
+
+/// Pure-Rust execution backend (no device, no external deps).
+pub struct SimBackend {
+    spec: SimSpec,
+    bufs: Slots<SimBuffer>,
+    execs: Vec<SimExec>,
+}
+
+impl Default for SimBackend {
+    fn default() -> SimBackend {
+        SimBackend::new(SimSpec::small())
+    }
+}
+
+impl SimBackend {
+    pub fn new(spec: SimSpec) -> SimBackend {
+        SimBackend { spec, bufs: Slots::new(), execs: Vec::new() }
+    }
+
+    /// Live buffer count (leak checks in tests).
+    pub fn live_buffers(&self) -> usize {
+        self.bufs.live()
+    }
+
+    fn f32_buf(&self, id: BufId) -> anyhow::Result<(&[f32], &[usize])> {
+        match self.bufs.get(id) {
+            Some(SimBuffer::F32 { data, dims }) => Ok((data, dims)),
+            Some(SimBuffer::I32 { .. }) => anyhow::bail!("sim: buffer {id} is i32, want f32"),
+            None => anyhow::bail!("sim: unknown buffer {id}"),
+        }
+    }
+
+    fn i32_buf(&self, id: BufId) -> anyhow::Result<(&[i32], &[usize])> {
+        match self.bufs.get(id) {
+            Some(SimBuffer::I32 { data, dims }) => Ok((data, dims)),
+            Some(SimBuffer::F32 { .. }) => anyhow::bail!("sim: buffer {id} is f32, want i32"),
+            None => anyhow::bail!("sim: unknown buffer {id}"),
+        }
+    }
+
+    fn named_weights<'a>(
+        &'a self,
+        exec: &'a SimExec,
+        args: &[BufId],
+    ) -> anyhow::Result<BTreeMap<&'a str, &'a [f32]>> {
+        let mut named = BTreeMap::new();
+        for (name, &id) in exec.param_order.iter().zip(args) {
+            named.insert(name.as_str(), self.f32_buf(id)?.0);
+        }
+        Ok(named)
+    }
+
+    fn exec_decode(&self, exec: &SimExec, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let m = &exec.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let (bb, ss) = (exec.info.batch, exec.info.seq);
+        let fp8 = exec.info.mode == "fp8";
+        let nw = exec.param_order.len();
+        anyhow::ensure!(
+            args.len() == nw + 4 + usize::from(fp8),
+            "sim decode {}: got {} args, want {}",
+            exec.info.name,
+            args.len(),
+            nw + 4 + usize::from(fp8)
+        );
+        let named = self.named_weights(exec, args)?;
+        let params = SimParams::resolve(m, &named)?;
+
+        let (tok, _) = self.i32_buf(args[nw])?;
+        let (pos, _) = self.i32_buf(args[nw + 1])?;
+        let (k_c, _) = self.f32_buf(args[nw + 2])?;
+        let (k_r, _) = self.f32_buf(args[nw + 3])?;
+        let sigma = if fp8 { Some(self.f32_buf(args[nw + 4])?.0) } else { None };
+        anyhow::ensure!(tok.len() == bb && pos.len() == bb, "sim decode: bad tok/pos arity");
+        anyhow::ensure!(
+            k_c.len() == l * bb * ss * d_c && k_r.len() == l * bb * ss * d_r,
+            "sim decode: bad cache view size"
+        );
+        if let Some(sg) = sigma {
+            anyhow::ensure!(sg.len() == l * bb * ss, "sim decode: bad sigma size");
+        }
+
+        let mut logits = vec![0.0f32; bb * vocab];
+        let mut new_kc = vec![0.0f32; l * bb * d_c];
+        let mut new_kr = vec![0.0f32; l * bb * d_r];
+        let mut new_sg = vec![1.0f32; l * bb];
+        // The per-row DecodeCache copies the gathered view so the new token
+        // can be written in place before attention; borrowing the uploaded
+        // buffers with a scratch row would save a copy — acceptable at sim
+        // scale, revisit if the sim model grows.
+        for b in 0..bb {
+            let p = pos[b].max(0) as usize;
+            anyhow::ensure!(p < ss, "sim decode: position {p} exceeds bucket {ss}");
+            let mut cache = DecodeCache {
+                content: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_c[off * d_c..(off + ss) * d_c].to_vec()
+                    })
+                    .collect(),
+                rope: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_r[off * d_r..(off + ss) * d_r].to_vec()
+                    })
+                    .collect(),
+                sigma: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        match sigma {
+                            Some(sg) => sg[off..off + ss].to_vec(),
+                            None => vec![1.0; ss],
+                        }
+                    })
+                    .collect(),
+            };
+            let out = sim_model::decode_one(
+                m,
+                &params,
+                self.spec.rope_base,
+                fp8,
+                tok[b],
+                p,
+                &mut cache,
+            );
+            logits[b * vocab..(b + 1) * vocab].copy_from_slice(&out.logits);
+            for li in 0..l {
+                let dst = (li * bb + b) * d_c;
+                new_kc[dst..dst + d_c].copy_from_slice(&out.new_kc[li * d_c..(li + 1) * d_c]);
+                let dst = (li * bb + b) * d_r;
+                new_kr[dst..dst + d_r].copy_from_slice(&out.new_kr[li * d_r..(li + 1) * d_r]);
+                new_sg[li * bb + b] = out.new_sg[li];
+            }
+        }
+        let mut outs = vec![logits, new_kc, new_kr];
+        if fp8 {
+            outs.push(new_sg);
+        }
+        Ok(outs)
+    }
+
+    fn exec_prefill(&self, exec: &SimExec, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let m = &exec.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let (bb, pp) = (exec.info.batch, exec.info.seq);
+        let fp8 = exec.info.mode == "fp8";
+        let nw = exec.param_order.len();
+        anyhow::ensure!(
+            args.len() == nw + 2,
+            "sim prefill {}: got {} args, want {}",
+            exec.info.name,
+            args.len(),
+            nw + 2
+        );
+        let named = self.named_weights(exec, args)?;
+        let params = SimParams::resolve(m, &named)?;
+        let (tok, _) = self.i32_buf(args[nw])?;
+        let (plens, _) = self.i32_buf(args[nw + 1])?;
+        anyhow::ensure!(tok.len() == bb * pp && plens.len() == bb, "sim prefill: bad args");
+
+        let mut last_logits = vec![0.0f32; bb * vocab];
+        let mut e_kc = vec![0.0f32; l * bb * pp * d_c];
+        let mut e_kr = vec![0.0f32; l * bb * pp * d_r];
+        let mut e_sg = vec![0.0f32; l * bb * pp];
+        for b in 0..bb {
+            let plen = (plens[b].max(1) as usize).min(pp);
+            let out = sim_model::prefill_one(
+                m,
+                &params,
+                self.spec.rope_base,
+                fp8,
+                &tok[b * pp..b * pp + plen],
+            );
+            last_logits[b * vocab..(b + 1) * vocab].copy_from_slice(&out.last_logits);
+            for li in 0..l {
+                for t in 0..plen {
+                    let dst = ((li * bb + b) * pp + t) * d_c;
+                    let src = (li * plen + t) * d_c;
+                    e_kc[dst..dst + d_c].copy_from_slice(&out.e_kc[src..src + d_c]);
+                    let dst = ((li * bb + b) * pp + t) * d_r;
+                    let src = (li * plen + t) * d_r;
+                    e_kr[dst..dst + d_r].copy_from_slice(&out.e_kr[src..src + d_r]);
+                    e_sg[(li * bb + b) * pp + t] = out.e_sg[li * plen + t];
+                }
+            }
+        }
+        let mut outs = vec![last_logits, e_kc, e_kr];
+        if fp8 {
+            outs.push(e_sg);
+        }
+        Ok(outs)
+    }
+
+    /// SnapMLA kernel artifact: the FP8 decode-attention pipeline on
+    /// paper-shape operands (already quantized/aligned by the caller).
+    fn exec_kernel_snapmla(&self, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(args.len() == 7, "snapmla kernel wants 7 args");
+        let (q_c, qd) = self.f32_buf(args[0])?;
+        let (q_r, qrd) = self.f32_buf(args[1])?;
+        let (sq, _) = self.f32_buf(args[2])?;
+        let (k_c, _) = self.f32_buf(args[3])?;
+        let (k_r, _) = self.f32_buf(args[4])?;
+        let (sk, _) = self.f32_buf(args[5])?;
+        let (len, _) = self.i32_buf(args[6])?;
+        anyhow::ensure!(qd.len() == 3 && qrd.len() == 3, "snapmla kernel: bad query dims");
+        let (t_q, heads, d_c) = (qd[0], qd[1], qd[2]);
+        let d_r = qrd[2];
+        let n = k_c.len() / d_c;
+        let shape = Shape { heads, d_c, d_r };
+        let sm = shape.sm_scale();
+        let length = (len[0].max(0) as usize).min(n);
+        let cache =
+            QuantCache { k_c_q: k_c.to_vec(), sigma_k: sk.to_vec(), k_r_al: k_r.to_vec(), n };
+
+        let mut o = Vec::with_capacity(t_q * heads * d_c);
+        let mut lse = Vec::with_capacity(t_q * heads);
+        for ti in 0..t_q {
+            let out = snapmla_pipeline(
+                &shape,
+                &q_c[ti * heads * d_c..(ti + 1) * heads * d_c],
+                &sq[ti * heads..(ti + 1) * heads],
+                &q_r[ti * heads * d_r..(ti + 1) * heads * d_r],
+                &cache,
+                length,
+                sm,
+                PvOrder::Monotonic,
+            );
+            o.extend_from_slice(&out.o);
+            lse.extend_from_slice(&out.lse);
+        }
+        Ok(vec![o, lse])
+    }
+
+    /// FlashMLA baseline kernel artifact: BF16 decode attention.
+    fn exec_kernel_flashmla(&self, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(args.len() == 5, "flashmla kernel wants 5 args");
+        let (q_c, qd) = self.f32_buf(args[0])?;
+        let (q_r, qrd) = self.f32_buf(args[1])?;
+        let (k_c, _) = self.f32_buf(args[2])?;
+        let (k_r, _) = self.f32_buf(args[3])?;
+        let (len, _) = self.i32_buf(args[4])?;
+        anyhow::ensure!(qd.len() == 3 && qrd.len() == 3, "flashmla kernel: bad query dims");
+        let (t_q, heads, d_c) = (qd[0], qd[1], qd[2]);
+        let d_r = qrd[2];
+        let n = k_c.len() / d_c;
+        let shape = Shape { heads, d_c, d_r };
+        let sm = shape.sm_scale();
+        let length = (len[0].max(0) as usize).min(n);
+        let kc_b: Vec<f32> = k_c.iter().map(|&x| bf16_round(x)).collect();
+        let kr_b: Vec<f32> = k_r.iter().map(|&x| bf16_round(x)).collect();
+
+        let mut o = Vec::with_capacity(t_q * heads * d_c);
+        let mut lse = Vec::with_capacity(t_q * heads);
+        for ti in 0..t_q {
+            let q = Query {
+                q_c: q_c[ti * heads * d_c..(ti + 1) * heads * d_c]
+                    .iter()
+                    .map(|&x| bf16_round(x))
+                    .collect(),
+                q_r: q_r[ti * heads * d_r..(ti + 1) * heads * d_r]
+                    .iter()
+                    .map(|&x| bf16_round(x))
+                    .collect(),
+            };
+            let out = attention_with_values(&shape, &q, &kc_b, &kr_b, length, sm);
+            o.extend_from_slice(&out.o);
+            lse.extend_from_slice(&out.lse);
+        }
+        Ok(vec![o, lse])
+    }
+}
+
+impl ExecBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn upload_f32(&mut self, data: &[f32], dims: &[usize]) -> anyhow::Result<BufId> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "sim: {} elems do not fit dims {dims:?}", data.len());
+        Ok(self.bufs.insert(SimBuffer::F32 { data: data.to_vec(), dims: dims.to_vec() }))
+    }
+
+    fn upload_i32(&mut self, data: &[i32], dims: &[usize]) -> anyhow::Result<BufId> {
+        let n: usize = dims.iter().product();
+        anyhow::ensure!(n == data.len(), "sim: {} elems do not fit dims {dims:?}", data.len());
+        Ok(self.bufs.insert(SimBuffer::I32 { data: data.to_vec(), dims: dims.to_vec() }))
+    }
+
+    fn download_f32(&mut self, buf: BufId) -> anyhow::Result<Vec<f32>> {
+        Ok(self.f32_buf(buf)?.0.to_vec())
+    }
+
+    fn free(&mut self, buf: BufId) {
+        self.bufs.remove(buf);
+    }
+
+    fn load_exec(&mut self, manifest: &Manifest, name: &str) -> anyhow::Result<ExecId> {
+        let info = manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("sim: unknown artifact {name}"))?;
+        self.execs.push(SimExec {
+            info: info.clone(),
+            model: manifest.model.clone(),
+            param_order: manifest.param_order.clone(),
+        });
+        Ok(self.execs.len() - 1)
+    }
+
+    fn execute(&mut self, exec: ExecId, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let se = self
+            .execs
+            .get(exec)
+            .ok_or_else(|| anyhow::anyhow!("sim: unknown executable {exec}"))?;
+        match se.info.kind {
+            ArtifactKind::Decode => self.exec_decode(se, args),
+            ArtifactKind::Prefill => self.exec_prefill(se, args),
+            ArtifactKind::Kernel => match se.info.mode.as_str() {
+                "snapmla" => self.exec_kernel_snapmla(args),
+                "flashmla" => self.exec_kernel_flashmla(args),
+                other => anyhow::bail!("sim: unknown kernel flavor {other}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_mirrors_python_buckets() {
+        let m = sim_manifest(&SimSpec::small());
+        assert_eq!(m.param_order.len(), 2 + 10 * m.model.n_layers);
+        assert_eq!(m.param_order[0], "embed");
+        let b = m.decode_bucket("fp8", 3, 400).expect("bucket");
+        assert_eq!((b.batch, b.seq), (4, 512));
+        assert!(m.decode_bucket("fp8", 9, 512).is_none());
+        assert_eq!(m.prefill_bucket("bf16", 1, 64).expect("prefill").seq, 128);
+        assert_eq!(m.max_context("fp8"), 2048);
+        for h in [16, 32, 64, 128] {
+            assert!(m.kernel_artifact("snapmla", h, 1, 1024).is_some(), "h{h}");
+            assert!(m.kernel_artifact("flashmla", h, 1, 1024).is_some(), "h{h}");
+        }
+        assert!(m.kernel_artifact("snapmla", 64, 1, 8192).is_some());
+    }
+
+    #[test]
+    fn weights_match_manifest_param_count() {
+        let spec = SimSpec::small();
+        let w = sim_weights(&spec);
+        assert_eq!(w.total_params(), sim_manifest(&spec).model.params);
+        for name in sim_manifest(&spec).param_order {
+            assert!(w.get(&name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn upload_validates_dims() {
+        let mut b = SimBackend::default();
+        assert!(b.upload_f32(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+        let id = b.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(b.download_f32(id).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        b.free(id);
+        assert!(b.download_f32(id).is_err());
+        assert_eq!(b.live_buffers(), 0);
+    }
+
+    #[test]
+    fn kernel_dispatch_runs_both_flavors() {
+        let spec = SimSpec::small();
+        let manifest = sim_manifest(&spec);
+        let mut b = SimBackend::new(spec);
+        let (heads, d_c, d_r, n) = (16usize, 512usize, 64usize, 1024usize);
+        let mut rng = crate::util::rng::Rng::new(7);
+        let q_c = rng.normal_vec(heads * d_c, 1.0);
+        let q_r = rng.normal_vec(heads * d_r, 0.3);
+        let k_c = rng.normal_vec(n * d_c, 1.0);
+        let k_r = rng.normal_vec(n * d_r, 0.3);
+
+        let sq = vec![0.01f32; heads];
+        let sk = vec![0.02f32; n];
+        let exec = b.load_exec(&manifest, "kernel_snapmla_h16_t1_n1024").unwrap();
+        let args = vec![
+            b.upload_f32(&q_c, &[1, heads, d_c]).unwrap(),
+            b.upload_f32(&q_r, &[1, heads, d_r]).unwrap(),
+            b.upload_f32(&sq, &[1, heads, 1]).unwrap(),
+            b.upload_f32(&k_c, &[n, d_c]).unwrap(),
+            b.upload_f32(&k_r, &[n, d_r]).unwrap(),
+            b.upload_f32(&sk, &[n, 1]).unwrap(),
+            b.upload_i32(&[1000], &[1]).unwrap(),
+        ];
+        let outs = b.execute(exec, &args).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].len(), heads * d_c);
+        assert_eq!(outs[1].len(), heads);
+        assert!(outs[0].iter().all(|x| x.is_finite()));
+
+        let exec = b.load_exec(&manifest, "kernel_flashmla_h16_t1_n1024").unwrap();
+        let args = vec![
+            b.upload_f32(&q_c, &[1, heads, d_c]).unwrap(),
+            b.upload_f32(&q_r, &[1, heads, d_r]).unwrap(),
+            b.upload_f32(&k_c, &[n, d_c]).unwrap(),
+            b.upload_f32(&k_r, &[n, d_r]).unwrap(),
+            b.upload_i32(&[1000], &[1]).unwrap(),
+        ];
+        let outs = b.execute(exec, &args).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(outs[0].iter().all(|x| x.is_finite()));
+    }
+}

@@ -2,6 +2,7 @@
 //! magic "SNAPW001", u32 count, then per tensor:
 //! u16 name_len | name | u8 dtype (0=f32) | u8 ndim | u32 dims… | f32 LE data.
 
+use crate::anyhow;
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::path::Path;

@@ -1,0 +1,119 @@
+//! Minimal `anyhow`-compatible error type (the offline crate set has no
+//! external dependencies, so the crate carries its own error substrate).
+//!
+//! The [`crate::anyhow`] facade module re-exports this type plus the
+//! `anyhow!` / `bail!` / `ensure!` macros, so call sites keep the exact
+//! idiom of the `anyhow` crate: `use crate::anyhow;` then
+//! `anyhow::Result<T>`, `anyhow::ensure!(..)`, `anyhow::bail!(..)`.
+
+use std::fmt;
+
+/// A flattened, message-carrying error (the `anyhow::Error` analogue).
+pub struct Error {
+    msg: String,
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    /// Prepend context, anyhow-style: `err.context("loading manifest")`.
+    pub fn context(self, ctx: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like anyhow: `Error` itself does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion coherent — `?` works on any
+// std-error type without conflicting with `impl From<T> for T`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow!`-style message constructor.
+#[macro_export]
+#[doc(hidden)]
+macro_rules! __anyhow {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::__anyhow!($($t)*))
+    };
+}
+
+/// Assert-or-bail with a formatted [`Error`].
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::anyhow;
+
+    fn io_fail() -> anyhow::Result<String> {
+        let text = std::fs::read_to_string("/nonexistent/snapmla/path")?;
+        Ok(text)
+    }
+
+    fn checked(x: usize) -> anyhow::Result<usize> {
+        anyhow::ensure!(x < 10, "x too large: {x}");
+        if x == 7 {
+            anyhow::bail!("seven is right out");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(checked(3).unwrap(), 3);
+        assert!(checked(12).unwrap_err().to_string().contains("12"));
+        assert!(checked(7).unwrap_err().to_string().contains("seven"));
+    }
+
+    #[test]
+    fn anyhow_macro_and_context() {
+        let e = anyhow::anyhow!("bad value {}", 42).context("loading");
+        assert_eq!(format!("{e}"), "loading: bad value 42");
+        assert_eq!(format!("{e:?}"), "loading: bad value 42");
+    }
+}

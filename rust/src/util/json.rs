@@ -2,6 +2,7 @@
 //! in the offline crate set). Covers the full JSON grammar we produce and
 //! consume: artifacts/manifest.json, bench reports, config files.
 
+use crate::anyhow;
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -43,7 +44,7 @@ impl Json {
 
     pub fn from_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path)?;
-        Ok(Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?)
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
     }
 
     // -- typed accessors ----------------------------------------------------

@@ -1,6 +1,7 @@
 //! Std-only utility substrates (the offline crate set has no serde/clap/rand).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -18,7 +18,12 @@ pub trait Gen {
 }
 
 /// Run a property over `cases` random inputs.
-pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+pub fn check<G: Gen>(
+    seed: u64,
+    cases: usize,
+    gen: &G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) {
     let mut rng = Rng::new(seed);
     for case in 0..cases {
         let v = gen.generate(&mut rng);

@@ -11,6 +11,9 @@ impl Summary {
         Summary { xs: Vec::new() }
     }
 
+    // An inherent `from` (not the trait): callers read `Summary::from(&xs)`
+    // at many bench sites; the trait form would force type annotations.
+    #[allow(clippy::should_implement_trait)]
     pub fn from(xs: &[f64]) -> Self {
         Summary { xs: xs.to_vec() }
     }

@@ -4,6 +4,7 @@
 //! `examples/quality_eval.rs`-style drivers.
 
 use super::benchsuite::{BenchFamily, BenchTask, Suite};
+use crate::anyhow;
 use crate::coordinator::{ServeRequest, Server};
 
 #[derive(Clone, Debug)]

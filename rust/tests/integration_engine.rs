@@ -1,8 +1,9 @@
-//! Integration: the PJRT engine over real AOT artifacts.
+//! Integration: the model engine over the execution-backend abstraction.
 //!
-//! Requires `make artifacts` (skipped gracefully otherwise). Exercises the
-//! full L3→L2→L1 composition: prefill a prompt through the HLO graph, append
-//! the quantized entries to the paged cache, decode tokens autoregressively,
+//! Runs against the offline `SimBackend` by default (no artifacts needed);
+//! with `--features pjrt` and compiled artifacts the same tests exercise the
+//! PJRT path. Exercises the full composition: prefill a prompt, append the
+//! quantized entries to the paged cache, decode tokens autoregressively,
 //! and check FP8-vs-BF16 pipeline parity on identical inputs.
 
 use snapmla::kvcache::{CacheMode, PagedKvCache};
@@ -10,16 +11,14 @@ use snapmla::runtime::ModelEngine;
 use snapmla::util::rng::argmax;
 use std::path::{Path, PathBuf};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn engine(mode: CacheMode) -> Option<(ModelEngine, PagedKvCache)> {
-    let dir = artifacts_dir()?;
-    let engine = ModelEngine::load(&dir, mode).expect("engine load");
+fn engine(mode: CacheMode) -> (ModelEngine, PagedKvCache) {
+    let engine = ModelEngine::auto(&artifacts_dir(), mode).expect("engine load");
     let cache = PagedKvCache::new(engine.cache_config(256));
-    Some((engine, cache))
+    (engine, cache)
 }
 
 fn prompt(seed: u64, len: usize) -> Vec<i32> {
@@ -34,7 +33,7 @@ fn prompt(seed: u64, len: usize) -> Vec<i32> {
 
 #[test]
 fn prefill_then_decode_roundtrip_fp8() {
-    let Some((mut eng, mut cache)) = engine(CacheMode::Fp8) else { return };
+    let (mut eng, mut cache) = engine(CacheMode::Fp8);
     cache.register(1);
     let p = prompt(0, 24);
     let out = eng.prefill(&mut cache, &[(1, p.clone())]).unwrap();
@@ -55,12 +54,11 @@ fn prefill_then_decode_roundtrip_fp8() {
 }
 
 #[test]
-fn trained_model_prefers_motif_tokens() {
-    // The build-time training budget (minutes on CPU) is below the scale
-    // where crisp induction heads form, so we assert the weaker, robust
-    // signal: after a repeated motif, the motif's tokens must receive far
-    // more probability mass than the vocabulary average.
-    let Some((mut eng, mut cache)) = engine(CacheMode::Fp8) else { return };
+fn model_prefers_motif_tokens() {
+    // The sim model's constructed induction circuit (and, with artifacts,
+    // the build-time-trained model) must put far more probability mass on
+    // the repeated motif's tokens than the vocabulary average.
+    let (mut eng, mut cache) = engine(CacheMode::Fp8);
     cache.register(1);
     let motif = [80i32, 120, 77];
     let mut p = vec![1];
@@ -81,8 +79,36 @@ fn trained_model_prefers_motif_tokens() {
 }
 
 #[test]
+fn greedy_decode_continues_the_motif() {
+    // Stronger than motif preference: the induction circuit must continue
+    // the motif exactly under greedy decoding through the FP8 pipeline.
+    let (mut eng, mut cache) = engine(CacheMode::Fp8);
+    cache.register(1);
+    let motif = [70i32, 105, 230];
+    let plen = 24usize;
+    let p = {
+        let mut p = vec![1];
+        for i in 0..plen - 1 {
+            p.push(motif[i % 3]);
+        }
+        p
+    };
+    let out = eng.prefill(&mut cache, &[(1, p)]).unwrap();
+    let mut tok = argmax(&out.logits[0]) as i32;
+    let mut generated = vec![tok];
+    for _ in 0..8 {
+        let r = eng.decode(&mut cache, &[(1, tok)]).unwrap();
+        tok = argmax(&r.logits[0]) as i32;
+        generated.push(tok);
+    }
+    let expected: Vec<i32> = (0..9).map(|i| motif[(plen - 1 + i) % 3]).collect();
+    let hits = generated.iter().zip(&expected).filter(|(a, b)| a == b).count();
+    assert!(hits >= 8, "motif continuation {generated:?} vs expected {expected:?}");
+}
+
+#[test]
 fn batched_decode_isolated_sequences() {
-    let Some((mut eng, mut cache)) = engine(CacheMode::Fp8) else { return };
+    let (mut eng, mut cache) = engine(CacheMode::Fp8);
     // two sequences with different prompts, decoded (a) in one batch and
     // (b) separately — logits must agree and sequences must not interfere
     for id in [1, 2, 11, 12] {
@@ -96,7 +122,7 @@ fn batched_decode_isolated_sequences() {
     let batched = eng.decode(&mut cache, &[(1, 70), (2, 71)]).unwrap();
     let solo1 = eng.decode(&mut cache, &[(11, 70)]).unwrap();
     let solo2 = eng.decode(&mut cache, &[(12, 71)]).unwrap();
-    for (a, b) in [(&batched.logits[0], &solo1.logits[0]), (&batched.logits[1], &solo2.logits[1 - 1])] {
+    for (a, b) in [(&batched.logits[0], &solo1.logits[0]), (&batched.logits[1], &solo2.logits[0])] {
         let max_diff = a
             .iter()
             .zip(b.iter())
@@ -112,8 +138,8 @@ fn fp8_bf16_parity_on_greedy_decode() {
     // Table-1 flavour at integration level: same prompt, both pipelines,
     // greedy decode — the sampled continuations should agree at the start
     // and logits should correlate strongly.
-    let Some((mut e8, mut c8)) = engine(CacheMode::Fp8) else { return };
-    let (mut e16, mut c16) = engine(CacheMode::Bf16).unwrap();
+    let (mut e8, mut c8) = engine(CacheMode::Fp8);
+    let (mut e16, mut c16) = engine(CacheMode::Bf16);
     c8.register(1);
     c16.register(1);
     let p = prompt(3, 32);
@@ -138,7 +164,7 @@ fn fp8_bf16_parity_on_greedy_decode() {
 
 #[test]
 fn cache_pressure_reported() {
-    let Some((mut eng, _)) = engine(CacheMode::Fp8) else { return };
+    let (mut eng, _) = engine(CacheMode::Fp8);
     // tiny cache: 1 page = 64 tokens; a 65th token must fail cleanly
     let mut cache = PagedKvCache::new(eng.cache_config(1));
     cache.register(1);

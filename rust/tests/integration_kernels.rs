@@ -1,48 +1,86 @@
 //! Integration: the paper-shape kernel artifacts (d_c=512, d_r=64) execute
-//! via PJRT and the SnapMLA FP8 kernel matches the rust Algorithm-1 pipeline
-//! simulation on identical operands — tying L1 (Pallas) to the rust numerics
-//! twin through the AOT path.
+//! through the backend abstraction, and the SnapMLA FP8 kernel matches the
+//! rust Algorithm-1 pipeline simulation on identical operands.
+//!
+//! Under the offline `SimBackend` the kernel *is* the pipeline simulation,
+//! so agreement is exact; with `--features pjrt` + compiled artifacts the
+//! same assertions tie L1 (Pallas) to the rust numerics twin through the
+//! AOT path.
 
+use snapmla::kvcache::CacheMode;
 use snapmla::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
 use snapmla::mla::Shape;
 use snapmla::runtime::engine::KernelArgs;
-use snapmla::runtime::{ModelEngine, Runtime};
-use snapmla::kvcache::CacheMode;
+use snapmla::runtime::{BufId, ModelEngine};
 use snapmla::util::rng::Rng;
 use snapmla::util::stats::rel_l2;
 use std::path::{Path, PathBuf};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> ModelEngine {
+    ModelEngine::auto(&artifacts_dir(), CacheMode::Fp8).expect("engine")
 }
 
 #[test]
 fn kernel_artifacts_execute_and_are_finite() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+    let mut eng = engine();
     let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
     for heads in [16usize, 64] {
         let name = format!("kernel_snapmla_h{heads}_t1_n{n}");
-        let args = KernelArgs::snapmla(&eng.rt, 1, heads, d_c, d_r, n, 1000, 7).unwrap();
-        let outs = eng.execute_kernel(&name, &args.refs()).unwrap();
+        let args = KernelArgs::snapmla(eng.backend_mut(), 1, heads, d_c, d_r, n, 1000, 7).unwrap();
+        let outs = eng.execute_kernel(&name, &args.bufs).unwrap();
         assert_eq!(outs.len(), 2);
         assert_eq!(outs[0].len(), heads * d_c);
         assert!(outs[0].iter().all(|x| x.is_finite()), "h{heads}");
+        args.release(eng.backend_mut());
 
         let name = format!("kernel_flashmla_h{heads}_t1_n{n}");
-        let args = KernelArgs::flashmla(&eng.rt, 1, heads, d_c, d_r, n, 1000, 7).unwrap();
-        let outs = eng.execute_kernel(&name, &args.refs()).unwrap();
+        let args = KernelArgs::flashmla(eng.backend_mut(), 1, heads, d_c, d_r, n, 1000, 7).unwrap();
+        let outs = eng.execute_kernel(&name, &args.bufs).unwrap();
         assert!(outs[0].iter().all(|x| x.is_finite()));
+        args.release(eng.backend_mut());
     }
 }
 
+/// Upload the already-quantized SnapMLA operands and execute one kernel.
+/// `q` = (q_c_q, sigma_q, q_r_al).
+fn run_snapmla_kernel(
+    eng: &mut ModelEngine,
+    shape: &Shape,
+    n: usize,
+    q: (&[f32], &[f32], &[f32]),
+    cache: &QuantCache,
+    length: usize,
+) -> Vec<Vec<f32>> {
+    let (heads, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+    let (q_c_q, sigma_q, q_r_al) = q;
+    let be = eng.backend_mut();
+    let bufs: Vec<BufId> = vec![
+        be.upload_f32(q_c_q, &[1, heads, d_c]).unwrap(),
+        be.upload_f32(q_r_al, &[1, heads, d_r]).unwrap(),
+        be.upload_f32(sigma_q, &[1, heads, 1]).unwrap(),
+        be.upload_f32(&cache.k_c_q, &[n, d_c]).unwrap(),
+        be.upload_f32(&cache.k_r_al, &[n, d_r]).unwrap(),
+        be.upload_f32(&cache.sigma_k, &[n, 1]).unwrap(),
+        be.upload_i32(&[length as i32], &[1]).unwrap(),
+    ];
+    let outs = eng
+        .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &bufs)
+        .unwrap();
+    for id in bufs {
+        eng.backend_mut().free(id);
+    }
+    outs
+}
+
 #[test]
-fn pallas_kernel_matches_rust_pipeline_sim() {
-    // Same quantized operands through (a) the AOT pallas kernel via PJRT and
-    // (b) the rust Algorithm-1 simulation — outputs must agree closely.
-    let Some(dir) = artifacts_dir() else { return };
-    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+fn kernel_matches_rust_pipeline_sim() {
+    // Same quantized operands through (a) the kernel artifact via the
+    // backend and (b) the rust Algorithm-1 simulation — must agree closely.
+    let mut eng = engine();
     let (heads, d_c, d_r, n, length) = (16usize, 512usize, 64usize, 1024usize, 900usize);
     let shape = Shape { heads, d_c, d_r };
     let sm = shape.sm_scale();
@@ -65,25 +103,12 @@ fn pallas_kernel_matches_rust_pipeline_sim() {
         &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
     );
 
-    // pallas kernel through PJRT with the same operands
-    let rt: &Runtime = &eng.rt;
-    let sigma_k_col: Vec<f32> = cache.sigma_k.clone();
-    let bufs = vec![
-        rt.buf_f32(&q_c_q, &[1, heads, d_c]).unwrap(),
-        rt.buf_f32(&q_r_al, &[1, heads, d_r]).unwrap(),
-        rt.buf_f32(&sigma_q, &[1, heads, 1]).unwrap(),
-        rt.buf_f32(&cache.k_c_q, &[n, d_c]).unwrap(),
-        rt.buf_f32(&cache.k_r_al, &[n, d_r]).unwrap(),
-        rt.buf_f32(&sigma_k_col, &[n, 1]).unwrap(),
-        rt.buf_i32(&[length as i32], &[1]).unwrap(),
-    ];
-    let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-    let outs = eng
-        .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &args)
-        .unwrap();
+    // the kernel artifact with the same operands
+    let outs =
+        run_snapmla_kernel(&mut eng, &shape, n, (&q_c_q, &sigma_q, &q_r_al), &cache, length);
 
     let rel = rel_l2(&outs[0], &sim.o);
-    assert!(rel < 5e-3, "pallas vs rust pipeline sim: rel {rel}");
+    assert!(rel < 5e-3, "kernel vs rust pipeline sim: rel {rel}");
     // lse agreement
     let lse_diff: f32 = outs[1]
         .iter()
@@ -95,8 +120,7 @@ fn pallas_kernel_matches_rust_pipeline_sim() {
 
 #[test]
 fn masking_parity_between_kernel_and_sim() {
-    let Some(dir) = artifacts_dir() else { return };
-    let mut eng = ModelEngine::load(&dir, CacheMode::Fp8).unwrap();
+    let mut eng = engine();
     let (heads, d_c, d_r, n) = (16usize, 512usize, 64usize, 1024usize);
     let shape = Shape { heads, d_c, d_r };
     let sm = shape.sm_scale();
@@ -115,19 +139,8 @@ fn masking_parity_between_kernel_and_sim() {
         let sim = snapmla_pipeline(
             &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
         );
-        let bufs = vec![
-            eng.rt.buf_f32(&q_c_q, &[1, heads, d_c]).unwrap(),
-            eng.rt.buf_f32(&q_r_al, &[1, heads, d_r]).unwrap(),
-            eng.rt.buf_f32(&sigma_q, &[1, heads, 1]).unwrap(),
-            eng.rt.buf_f32(&cache.k_c_q, &[n, d_c]).unwrap(),
-            eng.rt.buf_f32(&cache.k_r_al, &[n, d_r]).unwrap(),
-            eng.rt.buf_f32(&cache.sigma_k, &[n, 1]).unwrap(),
-            eng.rt.buf_i32(&[length as i32], &[1]).unwrap(),
-        ];
-        let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        let outs = eng
-            .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &args)
-            .unwrap();
+        let outs =
+            run_snapmla_kernel(&mut eng, &shape, n, (&q_c_q, &sigma_q, &q_r_al), &cache, length);
         let rel = rel_l2(&outs[0], &sim.o);
         assert!(rel < 5e-3, "length {length}: rel {rel}");
     }

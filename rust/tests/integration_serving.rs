@@ -1,21 +1,22 @@
 //! Integration: the full serving coordinator over the real engine —
 //! continuous batching, admission, EOS/max-token termination, preemption
 //! under KV pressure, and DP routing across two ranks.
+//!
+//! Runs against the offline `SimBackend` by default; with `--features pjrt`
+//! and compiled artifacts the same tests drive the PJRT engine.
 
 use snapmla::coordinator::{FinishReason, Router, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
 use std::path::{Path, PathBuf};
 
-fn artifacts_dir() -> Option<PathBuf> {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-fn server(mode: CacheMode, pages: usize) -> Option<Server> {
-    let dir = artifacts_dir()?;
-    let engine = ModelEngine::load(&dir, mode).expect("engine");
-    Some(Server::new(engine, pages))
+fn server(mode: CacheMode, pages: usize) -> Server {
+    let engine = ModelEngine::auto(&artifacts_dir(), mode).expect("engine");
+    Server::new(engine, pages)
 }
 
 fn repeat_prompt(seed: i32, len: usize) -> Vec<i32> {
@@ -29,14 +30,16 @@ fn repeat_prompt(seed: i32, len: usize) -> Vec<i32> {
 
 #[test]
 fn serves_batch_to_completion() {
-    let Some(mut srv) = server(CacheMode::Fp8, 256) else { return };
+    let mut srv = server(CacheMode::Fp8, 256);
     for i in 0..6 {
         srv.submit(ServeRequest {
             id: i,
             prompt: repeat_prompt(i as i32, 12 + i as usize * 7),
             max_new_tokens: 12,
             temperature: 0.7,
-            seed: i, ignore_eos: false });
+            seed: i,
+            ignore_eos: false,
+        });
     }
     srv.run_to_completion().unwrap();
     assert_eq!(srv.finished.len(), 6);
@@ -57,7 +60,7 @@ fn preemption_under_kv_pressure_still_completes() {
     // 4 pages total; 3 long-ish requests force page churn + preemption.
     // ignore_eos pins the generation lengths (benchmark mode) so the KV
     // pressure pattern is deterministic.
-    let Some(mut srv) = server(CacheMode::Fp8, 4) else { return };
+    let mut srv = server(CacheMode::Fp8, 4);
     for i in 0..3 {
         srv.submit(ServeRequest {
             id: i,
@@ -81,8 +84,8 @@ fn preemption_under_kv_pressure_still_completes() {
 
 #[test]
 fn deterministic_outputs_given_seeds() {
-    let Some(mut a) = server(CacheMode::Fp8, 128) else { return };
-    let mut b = server(CacheMode::Fp8, 128).unwrap();
+    let mut a = server(CacheMode::Fp8, 128);
+    let mut b = server(CacheMode::Fp8, 128);
     for srv in [&mut a, &mut b] {
         for i in 0..3 {
             srv.submit(ServeRequest {
@@ -90,7 +93,9 @@ fn deterministic_outputs_given_seeds() {
                 prompt: repeat_prompt(i as i32, 16),
                 max_new_tokens: 10,
                 temperature: 0.9,
-                seed: 1000 + i, ignore_eos: false });
+                seed: 1000 + i,
+                ignore_eos: false,
+            });
         }
         srv.run_to_completion().unwrap();
     }
@@ -102,10 +107,7 @@ fn deterministic_outputs_given_seeds() {
 
 #[test]
 fn dp_router_spreads_and_completes() {
-    let Some(dir) = artifacts_dir() else { return };
-    let ranks: Vec<Server> = (0..2)
-        .map(|_| Server::new(ModelEngine::load(&dir, CacheMode::Fp8).unwrap(), 64))
-        .collect();
+    let ranks: Vec<Server> = (0..2).map(|_| server(CacheMode::Fp8, 64)).collect();
     let mut router = Router::new(ranks);
     let mut placements = Vec::new();
     for i in 0..8 {
@@ -114,7 +116,9 @@ fn dp_router_spreads_and_completes() {
             prompt: repeat_prompt(i as i32, 20),
             max_new_tokens: 8,
             temperature: 0.5,
-            seed: i, ignore_eos: false }));
+            seed: i,
+            ignore_eos: false,
+        }));
     }
     // shortest-queue must use both ranks
     assert!(placements.iter().any(|&r| r == 0) && placements.iter().any(|&r| r == 1));

@@ -1,0 +1,209 @@
+//! Property tests for the FP8 substrate: E4M3/BF16 encode-decode roundtrips
+//! and the per-token quantizer's scale invariants, via the `util::prop`
+//! harness (shrinking mini-proptest; proptest itself is not in the offline
+//! crate set).
+
+use snapmla::fp8::{
+    bf16_decode, bf16_encode, bf16_round, e4m3_decode, e4m3_encode, e4m3_round, per_token_scale,
+    quant_per_token, E4M3_MAX, SCALE_EPS,
+};
+use snapmla::util::prop::{check, Gen, Pair, UsizeIn, VecF32};
+use snapmla::util::rng::Rng;
+
+/// Generator: one finite f32 of magnitude up to ~1e4 (covers the full E4M3
+/// range incl. saturation), shrinking toward 0.
+struct F32Gen {
+    std: f32,
+}
+
+impl Gen for F32Gen {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        // mix of scales: bulk normal plus occasional huge/tiny magnitudes
+        let base = (rng.normal() as f32) * self.std;
+        match rng.below(8) {
+            0 => base * 1e3,
+            1 => base * 1e-3,
+            2 => base * 1e-6,
+            _ => base,
+        }
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        if *v != 0.0 {
+            out.push(0.0);
+            out.push(v / 2.0);
+            out.push(v.trunc());
+        }
+        out.dedup();
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// E4M3 roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e4m3_roundtrip_is_idempotent_and_bounded() {
+    check(11, 500, &F32Gen { std: 50.0 }, |&x| {
+        let r = e4m3_round(x);
+        if !r.is_finite() {
+            return Err(format!("non-finite round of {x}"));
+        }
+        // idempotence: grid points are fixed points
+        if e4m3_round(r) != r {
+            return Err(format!("not idempotent: {x} -> {r} -> {}", e4m3_round(r)));
+        }
+        // sign symmetry
+        if e4m3_round(-x) != -r {
+            return Err(format!("sign asymmetry at {x}"));
+        }
+        // error bound: relative 2^-4 for in-range normals, absolute half-step
+        // for subnormals, saturation at the max
+        let a = x.abs();
+        let ok = if a >= E4M3_MAX {
+            r.abs() == E4M3_MAX
+        } else if a >= 2.0f32.powi(-6) {
+            (r - x).abs() <= a * 0.0625 + 1e-9
+        } else {
+            (r - x).abs() <= 2.0f32.powi(-10) + 1e-12
+        };
+        if !ok {
+            return Err(format!("error bound violated: {x} -> {r}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn e4m3_round_is_monotone() {
+    let gen = Pair(F32Gen { std: 30.0 }, F32Gen { std: 30.0 });
+    check(12, 500, &gen, |&(a, b)| {
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        if e4m3_round(lo) <= e4m3_round(hi) {
+            Ok(())
+        } else {
+            Err(format!("monotonicity violated on ({lo}, {hi})"))
+        }
+    });
+}
+
+#[test]
+fn e4m3_all_codes_roundtrip_exactly() {
+    // exhaustive: every finite code decodes to a fixed point of the codec
+    for b in 0u16..256 {
+        let v = e4m3_decode(b as u8);
+        if v.is_nan() {
+            continue;
+        }
+        let re = e4m3_decode(e4m3_encode(v));
+        assert_eq!(re, v, "byte {b:#04x}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BF16 roundtrip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bf16_roundtrip_is_idempotent_and_bounded() {
+    check(13, 500, &F32Gen { std: 100.0 }, |&x| {
+        let r = bf16_round(x);
+        if bf16_round(r) != r {
+            return Err(format!("not idempotent at {x}"));
+        }
+        if x != 0.0 && ((r - x) / x).abs() > 2.0f32.powi(-8) + 1e-9 {
+            return Err(format!("bf16 relative error too large: {x} -> {r}"));
+        }
+        // encode/decode agree with round
+        if bf16_decode(bf16_encode(x)) != r {
+            return Err(format!("encode/decode disagree with round at {x}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Per-token quantizer scale invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_token_scale_is_amax_over_max_with_floor() {
+    let gen = VecF32 { min_len: 1, max_len: 256, std: 20.0 };
+    check(14, 300, &gen, |xs| {
+        let s = per_token_scale(xs);
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let want = (amax / E4M3_MAX).max(SCALE_EPS);
+        if s != want {
+            return Err(format!("scale {s} != {want} (amax {amax})"));
+        }
+        if s < SCALE_EPS {
+            return Err(format!("scale below floor: {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_token_quant_error_within_grid_bound() {
+    let gen = VecF32 { min_len: 1, max_len: 256, std: 20.0 };
+    check(15, 300, &gen, |xs| {
+        let q = quant_per_token(xs);
+        let d = q.dequant();
+        for (i, (&x, &y)) in xs.iter().zip(&d).enumerate() {
+            let tol = (x.abs() * 0.0625).max(q.scale * 2.0f32.powi(-9) * 0.5 + 1e-12);
+            if (x - y).abs() > tol + 1e-9 {
+                return Err(format!("elem {i}: {x} -> {y}, tol {tol}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_token_codes_invariant_under_pow2_rescale() {
+    // scaling a token by a power of two scales sigma exactly and leaves the
+    // E4M3 codes untouched (x / sigma is unchanged bit-for-bit)
+    let gen = Pair(VecF32 { min_len: 1, max_len: 128, std: 5.0 }, UsizeIn(0, 6));
+    check(16, 300, &gen, |(xs, k)| {
+        let amax = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if amax < 1e-4 {
+            return Ok(()); // near the eps floor the sigma law changes by design
+        }
+        let c = 2.0f32.powi(*k as i32);
+        let scaled: Vec<f32> = xs.iter().map(|&x| x * c).collect();
+        if scaled.iter().any(|x| !x.is_finite()) {
+            return Ok(());
+        }
+        let q1 = quant_per_token(xs);
+        let q2 = quant_per_token(&scaled);
+        if (q2.scale - q1.scale * c).abs() > q1.scale * c * 1e-6 {
+            return Err(format!("sigma not scaled: {} vs {}", q2.scale, q1.scale * c));
+        }
+        if q1.codes != q2.codes {
+            return Err("codes changed under power-of-two rescale".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_token_double_roundtrip_is_stable() {
+    // re-quantizing dequantized values must reproduce them (the cache can be
+    // rebuilt from its own dequantized view without drift)
+    let gen = VecF32 { min_len: 1, max_len: 128, std: 10.0 };
+    check(17, 300, &gen, |xs| {
+        let d1 = quant_per_token(xs).dequant();
+        let d2 = quant_per_token(&d1).dequant();
+        for (i, (&a, &b)) in d1.iter().zip(&d2).enumerate() {
+            let tol = a.abs() * 1e-6 + 1e-12;
+            if (a - b).abs() > tol {
+                return Err(format!("elem {i}: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
