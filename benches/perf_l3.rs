@@ -5,7 +5,9 @@
 //!     cargo bench --bench perf_l3 [-- --quick]
 
 use snapmla::bench::{bench_from_args, write_report};
-use snapmla::coordinator::scheduler::{RunningSeq, Scheduler, SchedulerConfig, WaitingSeq};
+use snapmla::coordinator::scheduler::{
+    RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
+};
 use snapmla::fp8::{e4m3_decode, e4m3_encode, quant_per_token};
 use snapmla::kvcache::{CacheConfig, CacheMode, PagedKvCache};
 use snapmla::util::cli::Args;
@@ -99,18 +101,24 @@ fn main() {
     });
     push("gather kernel view (1 layer)", 2048.0, "tok", m, &mut rows, &mut report);
 
-    // scheduler decision at scale
+    // scheduler decision at scale (the mixed chunked-prefill policy)
     let sched = Scheduler::new(SchedulerConfig {
         max_decode_batch: 64,
         max_prefill_batch: 8,
         max_prefill_tokens: 128,
         max_context: 2048,
         page_tokens: 64,
+        prefill_chunk_tokens: 128,
+        chunk_per_seq: 64,
+        max_step_items: 64,
+        max_running: 72,
+        policy: SchedPolicy::MixedChunked,
     });
     let waiting: Vec<WaitingSeq> =
-        (0..128).map(|i| WaitingSeq { idx: i, tokens: 64 + i }).collect();
-    let running: Vec<RunningSeq> =
-        (0..64).map(|i| RunningSeq { idx: i, context: 100 + 7 * i }).collect();
+        (0..128).map(|i| WaitingSeq { idx: i, tokens: 64 + i, spilled: false }).collect();
+    let running: Vec<RunningSeq> = (0..64)
+        .map(|i| RunningSeq { idx: i, context: 100 + 7 * i, pending_prefill: 0 })
+        .collect();
     let m = bench.measure("scheduler decide x1000", || {
         for _ in 0..1000 {
             std::hint::black_box(sched.decide(&waiting, &running, 37));

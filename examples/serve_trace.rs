@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         out_min: 12,
         out_max: if quick { 32 } else { 96 },
         temperature: 0.7,
+        ..TraceConfig::default()
     });
 
     let mut report = Vec::new();

@@ -78,6 +78,20 @@ pub struct ServerMetrics {
     pub wall_s: f64,
     pub decode_steps: u64,
     pub decode_batch: Summary,
+    /// mixed steps executed (chunked-prefill policy)
+    pub mixed_steps: u64,
+    /// mixed steps whose decode batch was non-empty (non-starvation signal)
+    pub mixed_steps_with_decode: u64,
+    /// prompt tokens prefilled through chunks
+    pub chunk_tokens: u64,
+    /// prompt tokens served from the prefix cache instead of prefilling
+    pub prefix_hit_tokens: u64,
+    /// page-spill preemptions performed
+    pub spills: u64,
+    /// spilled sequences restored
+    pub restores: u64,
+    /// pages moved to host memory by spills
+    pub spilled_pages: u64,
 }
 
 impl ServerMetrics {
@@ -88,6 +102,27 @@ impl ServerMetrics {
         self.total_prompt_tokens += prompt_tokens as u64;
         self.total_generated_tokens += gen_tokens as u64;
         self.total_preemptions += m.preemptions as u64;
+    }
+
+    /// The wall-clock-free counters: two runs over the same trace must agree
+    /// on every one of these exactly (the serving determinism contract).
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.e2e.len() as u64),
+            ("prompt_tokens", self.total_prompt_tokens),
+            ("generated_tokens", self.total_generated_tokens),
+            ("preemptions", self.total_preemptions),
+            ("decode_steps", self.decode_steps),
+            ("decode_batches", self.decode_batch.len() as u64),
+            ("decode_tokens_batched", self.decode_batch.sum() as u64),
+            ("mixed_steps", self.mixed_steps),
+            ("mixed_steps_with_decode", self.mixed_steps_with_decode),
+            ("chunk_tokens", self.chunk_tokens),
+            ("prefix_hit_tokens", self.prefix_hit_tokens),
+            ("spills", self.spills),
+            ("restores", self.restores),
+            ("spilled_pages", self.spilled_pages),
+        ]
     }
 
     /// Decode throughput over the run (generated tokens / wall time).
@@ -110,7 +145,18 @@ impl ServerMetrics {
             |s: &Summary| format!("{} / {}", f1(s.median() * 1e3), f1(s.percentile(95.0) * 1e3));
         t.row(vec!["TTFT p50/p95 (ms)".into(), p50_p95(&self.ttft)]);
         t.row(vec!["TPOT p50/p95 (ms)".into(), p50_p95(&self.tpot)]);
-        t.row(vec!["preemptions".into(), format!("{}", self.total_preemptions)]);
+        t.row(vec!["preemptions (spills)".into(), format!("{}", self.total_preemptions)]);
+        if self.mixed_steps > 0 {
+            t.row(vec![
+                "mixed steps (w/ decode)".into(),
+                format!("{} ({})", self.mixed_steps, self.mixed_steps_with_decode),
+            ]);
+            t.row(vec!["chunk-prefilled tokens".into(), format!("{}", self.chunk_tokens)]);
+            t.row(vec![
+                "prefix-cache hit tokens".into(),
+                format!("{}", self.prefix_hit_tokens),
+            ]);
+        }
         t.render()
     }
 }

@@ -2,6 +2,11 @@
 //! loop, DP routing and metrics — the vLLM/SGLang-shaped layer the paper's
 //! system-level contributions (§3.3, per-token instant quantization,
 //! framework compatibility) plug into.
+//!
+//! The scheduler runs **mixed batches**: chunked prefill rides along with
+//! the decode batch in one engine step (`Action::Mixed`), prompt prefixes
+//! are shared through the cache's prefix trie, and preemption spills KV
+//! pages instead of recomputing.
 
 pub mod metrics;
 pub mod request;
@@ -13,6 +18,6 @@ pub mod server;
 pub use metrics::{RequestMetrics, ServerMetrics};
 pub use request::{FinishReason, RequestOutcome, ServeRequest};
 pub use router::Router;
-pub use scheduler::{Action, Scheduler, SchedulerConfig};
+pub use scheduler::{Action, PrefillChunk, SchedPolicy, Scheduler, SchedulerConfig};
 pub use sequence::{SeqPhase, Sequence};
 pub use server::Server;

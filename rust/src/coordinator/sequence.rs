@@ -2,6 +2,7 @@
 
 use super::metrics::Stopwatch;
 use super::request::{FinishReason, RequestOutcome, ServeRequest};
+use crate::kvcache::SpilledKv;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -17,6 +18,12 @@ pub struct Sequence {
     pub generated: Vec<i32>,
     /// the token to feed into the next decode step
     pub next_input: i32,
+    /// prompt tokens already in the KV cache (chunked-prefill progress;
+    /// equals the prompt length once decoding)
+    pub prefilled: usize,
+    /// spilled KV pages held while preempted (page-spill preemption keeps
+    /// the generated-token KV state instead of discarding it)
+    pub spilled: Option<SpilledKv>,
     pub rng: Rng,
     pub watch: Stopwatch,
     pub eos: i32,
@@ -31,6 +38,8 @@ impl Sequence {
             phase: SeqPhase::Waiting,
             generated: Vec::new(),
             next_input,
+            prefilled: 0,
+            spilled: None,
             rng,
             watch: Stopwatch::start(),
             eos,
@@ -41,9 +50,22 @@ impl Sequence {
         self.request.id
     }
 
-    /// Tokens currently in the KV cache once running (prompt + generated).
+    /// Logical context (prompt + generated tokens).
     pub fn context_len(&self) -> usize {
         self.request.prompt.len() + self.generated.len()
+    }
+
+    /// Prompt tokens not yet in the KV cache.
+    pub fn pending_prefill(&self) -> usize {
+        self.request.prompt.len().saturating_sub(self.prefilled)
+    }
+
+    /// The next `n` prompt tokens to chunk-prefill (clamped to the
+    /// remaining prompt).
+    pub fn next_chunk(&self, n: usize) -> Vec<i32> {
+        let start = self.prefilled;
+        let end = (start + n).min(self.request.prompt.len());
+        self.request.prompt[start..end].to_vec()
     }
 
     /// Sample the next token from logits; updates state and returns whether
@@ -64,18 +86,18 @@ impl Sequence {
         false
     }
 
-    /// Reset to Waiting after a preemption (KV pages were released; the
-    /// prompt + generated tokens will be re-prefilled).
-    pub fn preempt(&mut self) {
+    /// Park after a page-spill preemption: the KV pages travel with the
+    /// sequence and are restored verbatim on resume — no recompute, so a
+    /// preempted run stays byte-identical to an uninterrupted one.
+    pub fn preempt(&mut self, spilled: SpilledKv) {
         self.phase = SeqPhase::Waiting;
+        self.spilled = Some(spilled);
         self.watch.preemptions += 1;
     }
 
-    /// The token sequence to prefill when (re)admitted: prompt + generated.
-    pub fn prefill_tokens(&self) -> Vec<i32> {
-        let mut t = self.request.prompt.clone();
-        t.extend(&self.generated);
-        t
+    /// Take the spilled snapshot for a restore.
+    pub fn take_spilled(&mut self) -> Option<SpilledKv> {
+        self.spilled.take()
     }
 
     pub fn into_outcome(self) -> RequestOutcome {
@@ -96,6 +118,7 @@ impl Sequence {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::{CacheConfig, CacheMode, PagedKvCache};
 
     fn seq(max_new: usize, temperature: f32) -> Sequence {
         Sequence::new(
@@ -140,16 +163,43 @@ mod tests {
     }
 
     #[test]
-    fn preemption_resets_and_replays() {
+    fn chunked_prefill_progress() {
+        let mut s = seq(10, 0.0);
+        assert_eq!(s.pending_prefill(), 3);
+        assert_eq!(s.next_chunk(2), vec![1, 70]);
+        s.prefilled += 2;
+        assert_eq!(s.pending_prefill(), 1);
+        assert_eq!(s.next_chunk(64), vec![71]); // clamped to the prompt tail
+        s.prefilled += 1;
+        assert_eq!(s.pending_prefill(), 0);
+        assert!(s.next_chunk(4).is_empty());
+    }
+
+    #[test]
+    fn preemption_parks_spilled_kv() {
+        // build a real spill snapshot so the sequence carries actual pages
+        let cfg = CacheConfig {
+            n_layers: 1, d_c: 8, d_r: 4, mode: CacheMode::Fp8, capacity_pages: 2,
+        };
+        let mut cache = PagedKvCache::new(cfg);
+        cache.register(1);
+        cache.append_token(1, &[1.0; 8], &[1.0; 4]).unwrap();
+        let sp = cache.spill(1).unwrap();
+
         let mut s = seq(10, 0.0);
         let mut logits = vec![0.0f32; 8];
         logits[3] = 1.0;
         s.accept_logits(&logits);
         s.phase = SeqPhase::Running;
-        s.preempt();
+        s.preempt(sp);
         assert_eq!(s.phase, SeqPhase::Waiting);
-        assert_eq!(s.prefill_tokens(), vec![1, 70, 71, 3]);
         assert_eq!(s.watch.preemptions, 1);
+        // the generated-token state survives preemption untouched
+        assert_eq!(s.generated, vec![3]);
+        assert_eq!(s.next_input, 3);
+        let sp = s.take_spilled().expect("spill snapshot travels with the seq");
+        assert_eq!(sp.tokens(), 1);
+        assert!(s.take_spilled().is_none());
     }
 
     #[test]

@@ -1,15 +1,28 @@
 //! The serving loop: one DP rank = one engine + one paged cache + the
 //! continuous-batching scheduler.
+//!
+//! Default policy is **mixed chunked-prefill**: every step runs the full
+//! decode batch plus prefill chunks in ONE engine call, so a long prompt
+//! never stalls running decoders. Admission adopts shared prompt prefixes
+//! from the cache's prefix trie, completed prompt pages are published back,
+//! and preemption spills pages to host memory (restored verbatim on
+//! resume — a preempted sequence emits byte-identical output).
 
 use super::metrics::ServerMetrics;
-use super::request::{RequestOutcome, ServeRequest};
-use super::scheduler::{Action, RunningSeq, Scheduler, SchedulerConfig, WaitingSeq};
+use super::request::{FinishReason, RequestOutcome, ServeRequest};
+use super::scheduler::{
+    Action, PrefillChunk, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
+};
 use super::sequence::{SeqPhase, Sequence};
 use crate::anyhow;
 use crate::kvcache::{PagedKvCache, PAGE_TOKENS};
-use crate::runtime::ModelEngine;
+use crate::runtime::{ArtifactKind, ModelEngine};
 use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Consecutive unproductive scheduler steps tolerated before bailing
+/// (preempt/resume churn without any engine progress = livelock).
+const STALL_LIMIT: usize = 10_000;
 
 pub struct Server {
     pub engine: ModelEngine,
@@ -23,40 +36,51 @@ pub struct Server {
 }
 
 impl Server {
-    /// Build a server around a loaded engine with `capacity_pages` of KV.
+    /// Build a server around a loaded engine with `capacity_pages` of KV,
+    /// using the mixed chunked-prefill scheduler.
     pub fn new(engine: ModelEngine, capacity_pages: usize) -> Server {
+        Server::with_policy(engine, capacity_pages, SchedPolicy::MixedChunked)
+    }
+
+    /// Build a server with an explicit scheduling policy (the alternating
+    /// baseline remains available for A/B comparison).
+    pub fn with_policy(
+        engine: ModelEngine,
+        capacity_pages: usize,
+        policy: SchedPolicy,
+    ) -> Server {
         let cache = PagedKvCache::new(engine.cache_config(capacity_pages));
         let mode = engine.mode_str();
-        let max_decode_batch = engine
-            .manifest
-            .artifacts
-            .values()
-            .filter(|a| a.kind == crate::runtime::ArtifactKind::Decode && a.mode == mode)
-            .map(|a| a.batch)
-            .max()
-            .unwrap_or(1);
-        let max_prefill_batch = engine
-            .manifest
-            .artifacts
-            .values()
-            .filter(|a| a.kind == crate::runtime::ArtifactKind::Prefill && a.mode == mode)
-            .map(|a| a.batch)
-            .max()
-            .unwrap_or(1);
-        let max_prefill_tokens = engine
-            .manifest
-            .artifacts
-            .values()
-            .filter(|a| a.kind == crate::runtime::ArtifactKind::Prefill && a.mode == mode)
-            .map(|a| a.seq)
-            .max()
-            .unwrap_or(0);
+        let max_for = |kind: ArtifactKind, field: fn(&crate::runtime::ArtifactInfo) -> usize| {
+            engine
+                .manifest
+                .artifacts
+                .values()
+                .filter(|a| a.kind == kind && a.mode == mode)
+                .map(field)
+                .max()
+        };
+        let max_decode_batch = max_for(ArtifactKind::Decode, |a| a.batch).unwrap_or(1);
+        let max_prefill_batch = max_for(ArtifactKind::Prefill, |a| a.batch).unwrap_or(1);
+        let max_prefill_tokens = max_for(ArtifactKind::Prefill, |a| a.seq).unwrap_or(0);
+        let chunk_per_seq = max_for(ArtifactKind::Mixed, |a| a.t_q).unwrap_or(PAGE_TOKENS);
+        let max_step_items = max_for(ArtifactKind::Mixed, |a| a.batch).unwrap_or(max_decode_batch);
         let cfg = SchedulerConfig {
             max_decode_batch,
             max_prefill_batch,
             max_prefill_tokens,
             max_context: engine.max_context(),
             page_tokens: PAGE_TOKENS,
+            // default chunk budget: two page-sized chunks per step — one
+            // keeps the longest prompt moving, the other admits/advances a
+            // second prompt, while decode throughput stays flat
+            prefill_chunk_tokens: 2 * chunk_per_seq,
+            chunk_per_seq,
+            max_step_items,
+            // concurrency beyond the decode bucket: chunk-prefilling
+            // prompts must not evict decoders from the running set
+            max_running: max_decode_batch + max_prefill_batch,
+            policy,
         };
         let eos = engine.manifest.model.eos;
         Server {
@@ -72,12 +96,21 @@ impl Server {
     }
 
     pub fn submit(&mut self, req: ServeRequest) {
-        assert!(
-            req.prompt.len() <= self.scheduler.cfg.max_prefill_tokens,
-            "prompt {} exceeds prefill bucket {}",
-            req.prompt.len(),
-            self.scheduler.cfg.max_prefill_tokens
-        );
+        assert!(!req.prompt.is_empty(), "empty prompt");
+        match self.scheduler.cfg.policy {
+            SchedPolicy::Alternating => assert!(
+                req.prompt.len() <= self.scheduler.cfg.max_prefill_tokens,
+                "prompt {} exceeds prefill bucket {}",
+                req.prompt.len(),
+                self.scheduler.cfg.max_prefill_tokens
+            ),
+            SchedPolicy::MixedChunked => assert!(
+                req.prompt.len() < self.scheduler.cfg.max_context,
+                "prompt {} exceeds max context {}",
+                req.prompt.len(),
+                self.scheduler.cfg.max_context
+            ),
+        }
         self.waiting.push_back(Sequence::new(req, self.eos));
     }
 
@@ -94,27 +127,72 @@ impl Server {
         queued + remaining
     }
 
+    /// (id, cache tokens, pending prefill tokens, generated tokens) per
+    /// running sequence — read-only observability for tests and debugging.
+    pub fn running_info(&self) -> Vec<(u64, usize, usize, usize)> {
+        self.running
+            .iter()
+            .map(|s| {
+                (s.id(), self.cache.tokens_of(s.id()), s.pending_prefill(), s.generated.len())
+            })
+            .collect()
+    }
+
+    /// Waiting-queue ids in FCFS order.
+    pub fn waiting_ids(&self) -> Vec<u64> {
+        self.waiting.iter().map(|s| s.id()).collect()
+    }
+
     /// One scheduling iteration. Returns false when fully idle.
     pub fn step(&mut self) -> anyhow::Result<bool> {
+        // length-cap sweep: a sequence whose cache reached the largest
+        // decode bucket can never decode again — finish it as a length stop
+        // instead of wedging the scheduler into a permanent Idle
+        let max_ctx = self.scheduler.cfg.max_context;
+        let mut capped: Vec<usize> = (0..self.running.len())
+            .filter(|&i| self.cache.tokens_of(self.running[i].id()) >= max_ctx)
+            .collect();
+        if !capped.is_empty() {
+            capped.sort_unstable_by(|a, b| b.cmp(a));
+            for i in capped {
+                let mut seq = self.running.remove(i);
+                seq.phase = SeqPhase::Finished(FinishReason::MaxTokens);
+                self.cache.release(seq.id());
+                self.finish(seq);
+            }
+            return Ok(true);
+        }
+
         let waiting_view: Vec<WaitingSeq> = self
             .waiting
             .iter()
             .enumerate()
-            .map(|(i, s)| WaitingSeq { idx: i, tokens: s.prefill_tokens().len() })
+            .map(|(i, s)| WaitingSeq {
+                idx: i,
+                tokens: match &s.spilled {
+                    Some(sp) => sp.tokens(),
+                    None => s.request.prompt.len(),
+                },
+                spilled: s.spilled.is_some(),
+            })
             .collect();
         let running_view: Vec<RunningSeq> = self
             .running
             .iter()
             .enumerate()
-            .map(|(i, s)| RunningSeq { idx: i, context: s.context_len() })
+            .map(|(i, s)| RunningSeq {
+                idx: i,
+                context: self.cache.tokens_of(s.id()),
+                pending_prefill: s.pending_prefill(),
+            })
             .collect();
-        let action = self
-            .scheduler
-            .decide(&waiting_view, &running_view, self.cache.free_pages());
+        let action =
+            self.scheduler
+                .decide(&waiting_view, &running_view, self.cache.available_pages());
 
         match action {
             Action::Prefill(idxs) => {
-                // idxs are FCFS-prefix indices into `waiting`
+                // idxs are FCFS-prefix indices into `waiting` (fresh only)
                 let mut batch = Vec::new();
                 for _ in 0..idxs.len() {
                     let mut seq = self.waiting.pop_front().unwrap();
@@ -125,13 +203,27 @@ impl Server {
                     .iter()
                     .map(|s| {
                         self.cache.register(s.id());
-                        (s.id(), s.prefill_tokens())
+                        (s.id(), s.request.prompt.clone())
                     })
                     .collect();
                 let out = self.engine.prefill(&mut self.cache, &items)?;
                 for (mut seq, logits) in batch.into_iter().zip(out.logits) {
+                    seq.prefilled = seq.request.prompt.len();
+                    // publish the prompt's full pages for prefix reuse
+                    // (mixed policy only — the alternating baseline pre-dates
+                    // sharing; monolithic admission still re-prefills on a
+                    // hit since the whole-prompt engine call cannot skip
+                    // adopted tokens, but later chunked admissions benefit)
+                    if self.scheduler.cfg.policy == SchedPolicy::MixedChunked {
+                        let full = (seq.prefilled / PAGE_TOKENS) * PAGE_TOKENS;
+                        if full > 0 {
+                            self.cache.publish_prefix(seq.id(), &seq.request.prompt[..full]);
+                        }
+                    }
                     let done = seq.accept_logits(&logits);
                     if done {
+                        let id = seq.id();
+                        self.cache.release(id);
                         self.finish(seq);
                     } else {
                         self.running.push(seq);
@@ -161,16 +253,138 @@ impl Server {
                     self.finish(seq);
                 }
             }
+            Action::Mixed { prefill_chunks, decode_idxs } => {
+                self.run_mixed(prefill_chunks, decode_idxs)?;
+            }
+            Action::Resume(idx) => {
+                debug_assert_eq!(idx, 0, "only the queue head resumes");
+                let mut seq = self.waiting.pop_front().unwrap();
+                let sp = seq.take_spilled().expect("resume target carries spilled KV");
+                self.cache
+                    .restore(seq.id(), sp)
+                    .map_err(|e| anyhow::anyhow!("restore seq {}: {e:?}", seq.id()))?;
+                seq.phase = SeqPhase::Running;
+                self.metrics.restores += 1;
+                self.running.push(seq);
+            }
             Action::Preempt(idx) => {
                 let mut seq = self.running.remove(idx);
-                self.cache.release(seq.id());
-                seq.preempt();
+                let sp = self
+                    .cache
+                    .spill(seq.id())
+                    .map_err(|e| anyhow::anyhow!("spill seq {}: {e:?}", seq.id()))?;
+                self.metrics.spills += 1;
+                self.metrics.spilled_pages += sp.pages() as u64;
+                seq.preempt(sp);
                 // re-queue at the FRONT: preempted work ages first
                 self.waiting.push_front(seq);
             }
             Action::Idle => return Ok(false),
         }
         Ok(true)
+    }
+
+    /// Execute one mixed step: admit the scheduled waiting sequences
+    /// (adopting shared prompt prefixes), then run their prefill chunks
+    /// interleaved with the decode batch in one engine call.
+    fn run_mixed(
+        &mut self,
+        chunks: Vec<PrefillChunk>,
+        decode_idxs: Vec<usize>,
+    ) -> anyhow::Result<()> {
+        // 1) admissions — the from_waiting chunks reference a FCFS prefix
+        //    of the waiting queue by position (the chunk LIST is in service
+        //    order, shortest remaining prefill first)
+        let base = self.running.len();
+        let n_admit = chunks.iter().filter(|c| c.from_waiting).count();
+        #[cfg(debug_assertions)]
+        {
+            let mut idxs: Vec<usize> =
+                chunks.iter().filter(|c| c.from_waiting).map(|c| c.idx).collect();
+            idxs.sort_unstable();
+            debug_assert_eq!(idxs, (0..n_admit).collect::<Vec<_>>(), "queue-prefix admissions");
+        }
+        for _ in 0..n_admit {
+            let mut seq = self.waiting.pop_front().unwrap();
+            seq.phase = SeqPhase::Running;
+            self.cache.register(seq.id());
+            let hit = self.cache.adopt_prefix(seq.id(), &seq.request.prompt);
+            if hit > 0 {
+                seq.prefilled = hit;
+                self.metrics.prefix_hit_tokens += hit as u64;
+            }
+            self.running.push(seq);
+        }
+        // pops preserve order: waiting[idx] is now running[base + idx]
+        let granted: Vec<(usize, usize)> = chunks
+            .iter()
+            .map(|c| (if c.from_waiting { base + c.idx } else { c.idx }, c.tokens))
+            .collect();
+
+        // 2) engine items (a prefix hit may shrink or absorb a grant)
+        let mut chunk_owners: Vec<usize> = Vec::with_capacity(granted.len());
+        let mut engine_chunks: Vec<(u64, Vec<i32>)> = Vec::with_capacity(granted.len());
+        for &(ridx, grant) in &granted {
+            let s = &self.running[ridx];
+            let toks = s.next_chunk(grant);
+            if !toks.is_empty() {
+                chunk_owners.push(ridx);
+                engine_chunks.push((s.id(), toks));
+            }
+        }
+        let decode_items: Vec<(u64, i32)> = decode_idxs
+            .iter()
+            .map(|&i| (self.running[i].id(), self.running[i].next_input))
+            .collect();
+        if engine_chunks.is_empty() && decode_items.is_empty() {
+            return Ok(()); // the admissions alone were the step's progress
+        }
+
+        let out = self.engine.step_mixed(&mut self.cache, &engine_chunks, &decode_items)?;
+        self.metrics.mixed_steps += 1;
+        if !decode_items.is_empty() {
+            self.metrics.mixed_steps_with_decode += 1;
+            self.metrics.decode_steps += 1;
+            self.metrics.decode_batch.push(decode_items.len() as f64);
+        }
+
+        // 3) chunk results: advance prefill, publish completed prompt pages,
+        //    sample the first token when the prompt just completed
+        let mut done: Vec<usize> = Vec::new();
+        let mut publishes: Vec<(u64, Vec<i32>)> = Vec::new();
+        for (k, &ridx) in chunk_owners.iter().enumerate() {
+            let took = engine_chunks[k].1.len();
+            let s = &mut self.running[ridx];
+            let full_before = s.prefilled / PAGE_TOKENS;
+            s.prefilled += took;
+            self.metrics.chunk_tokens += took as u64;
+            // publish only when this chunk completed a new full page (the
+            // trie is first-publisher-wins, so re-publishing is a no-op walk)
+            let full = (s.prefilled / PAGE_TOKENS) * PAGE_TOKENS;
+            if full > full_before * PAGE_TOKENS {
+                publishes.push((s.id(), s.request.prompt[..full].to_vec()));
+            }
+            if s.pending_prefill() == 0 && s.accept_logits(&out.chunk_logits[k]) {
+                done.push(ridx);
+            }
+        }
+        for (id, prefix) in publishes {
+            self.cache.publish_prefix(id, &prefix);
+        }
+
+        // 4) decode results
+        for (k, &ridx) in decode_idxs.iter().enumerate() {
+            if self.running[ridx].accept_logits(&out.decode_logits[k]) {
+                done.push(ridx);
+            }
+        }
+        done.sort_unstable_by(|a, b| b.cmp(a));
+        for i in done {
+            let seq = self.running.remove(i);
+            self.cache.release(seq.id());
+            self.finish(seq);
+        }
+        Ok(())
     }
 
     fn finish(&mut self, seq: Sequence) {
@@ -184,14 +398,36 @@ impl Server {
         self.finished.push(outcome);
     }
 
+    /// Monotone progress signal: tokens the engine has actually produced or
+    /// ingested (preempt/resume churn does not move it).
+    fn engine_work(&self) -> u64 {
+        let s = &self.engine.stats;
+        s.decode_tokens + s.prefill_tokens + s.chunk_tokens
+    }
+
     /// Run until all submitted requests complete; returns wall seconds.
     pub fn run_to_completion(&mut self) -> anyhow::Result<f64> {
         let t0 = Instant::now();
+        let mut stalled = 0usize;
         while self.pending() > 0 {
+            let work = self.engine_work();
             let progressed = self.step()?;
             if !progressed && self.pending() > 0 {
                 anyhow::bail!(
                     "scheduler deadlock: {} waiting, {} running, {} free pages",
+                    self.waiting.len(),
+                    self.running.len(),
+                    self.cache.free_pages()
+                );
+            }
+            if self.engine_work() > work {
+                stalled = 0;
+            } else {
+                stalled += 1;
+                anyhow::ensure!(
+                    stalled <= STALL_LIMIT,
+                    "scheduler livelock: {stalled} steps without engine progress \
+                     ({} waiting, {} running, {} free pages)",
                     self.waiting.len(),
                     self.running.len(),
                     self.cache.free_pages()

@@ -1,6 +1,11 @@
 //! Page allocator: fixed page pool with a free list, per-sequence page maps,
-//! and capacity accounting (the KV-memory budget drives Fig. 1's max batch
-//! size per context length).
+//! **per-page reference counts** (prefix-sharing KV reuse), and capacity
+//! accounting (the KV-memory budget drives Fig. 1's max batch size per
+//! context length).
+//!
+//! A physical page may be referenced by several sequences at once (shared
+//! prompt-prefix pages) plus the prefix trie's retention reference; it
+//! returns to the free list only when the last reference drops.
 
 use std::collections::BTreeMap;
 
@@ -9,6 +14,8 @@ use std::collections::BTreeMap;
 pub struct PageAllocator {
     capacity: usize,
     free: Vec<usize>,
+    /// per-physical-page reference count (0 = on the free list)
+    rc: Vec<u32>,
     /// seq id → allocated page indices, in sequence order
     maps: BTreeMap<u64, Vec<usize>>,
 }
@@ -17,6 +24,8 @@ pub struct PageAllocator {
 pub enum AllocError {
     OutOfPages,
     UnknownSequence,
+    /// the referenced physical page is on the free list (stale share/retain)
+    PageNotLive,
 }
 
 impl PageAllocator {
@@ -24,6 +33,7 @@ impl PageAllocator {
         PageAllocator {
             capacity,
             free: (0..capacity).rev().collect(),
+            rc: vec![0; capacity],
             maps: BTreeMap::new(),
         }
     }
@@ -40,6 +50,11 @@ impl PageAllocator {
         self.capacity - self.free.len()
     }
 
+    /// Reference count of a physical page (0 = free).
+    pub fn ref_count(&self, page: usize) -> u32 {
+        self.rc[page]
+    }
+
     /// Register a sequence (idempotent).
     pub fn register(&mut self, seq: u64) {
         self.maps.entry(seq).or_default();
@@ -50,12 +65,73 @@ impl PageAllocator {
         self.maps.get(&seq).map(|v| v.as_slice())
     }
 
-    /// Grow a sequence by one page; returns the new page index.
+    /// Grow a sequence by one freshly-allocated page (rc = 1); returns the
+    /// new page index.
     pub fn grow(&mut self, seq: u64) -> Result<usize, AllocError> {
         let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
         let page = self.free.pop().ok_or(AllocError::OutOfPages)?;
+        self.rc[page] = 1;
         map.push(page);
         Ok(page)
+    }
+
+    /// Allocate a page that is not attached to any sequence map (rc = 1) —
+    /// the copy-on-write staging slot.
+    pub fn alloc_unmapped(&mut self) -> Result<usize, AllocError> {
+        let page = self.free.pop().ok_or(AllocError::OutOfPages)?;
+        self.rc[page] = 1;
+        Ok(page)
+    }
+
+    /// Append an existing live page to `seq`'s table (prefix sharing):
+    /// increments the page's reference count.
+    pub fn share(&mut self, seq: u64, page: usize) -> Result<(), AllocError> {
+        if self.rc[page] == 0 {
+            return Err(AllocError::PageNotLive);
+        }
+        let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        self.rc[page] += 1;
+        map.push(page);
+        Ok(())
+    }
+
+    /// Take an extra reference on a live page without attaching it to a
+    /// sequence (the prefix trie's retention reference).
+    pub fn retain(&mut self, page: usize) -> Result<(), AllocError> {
+        if self.rc[page] == 0 {
+            return Err(AllocError::PageNotLive);
+        }
+        self.rc[page] += 1;
+        Ok(())
+    }
+
+    /// Drop one reference on a live page; returns true when this was the
+    /// last reference and the page went back to the free list.
+    pub fn release_page(&mut self, page: usize) -> Result<bool, AllocError> {
+        if self.rc[page] == 0 {
+            return Err(AllocError::PageNotLive);
+        }
+        self.rc[page] -= 1;
+        if self.rc[page] == 0 {
+            self.free.push(page);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Replace slot `idx` of `seq`'s table with `new_page` (already
+    /// allocated via [`alloc_unmapped`]); drops the old page's reference and
+    /// returns `Some(old)` when the old page was freed by this.
+    pub fn replace(
+        &mut self,
+        seq: u64,
+        idx: usize,
+        new_page: usize,
+    ) -> Result<Option<usize>, AllocError> {
+        let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        let old = map[idx];
+        map[idx] = new_page;
+        Ok(if self.release_page(old)? { Some(old) } else { None })
     }
 
     /// Pages needed to hold `tokens` tokens.
@@ -71,15 +147,52 @@ impl PageAllocator {
         need.saturating_sub(have) <= self.free.len()
     }
 
-    /// Release a sequence's pages back to the pool.
-    pub fn release(&mut self, seq: u64) -> usize {
+    /// Release a sequence's references; returns the pages actually freed
+    /// (rc reached 0) so the owner can drop their storage.
+    pub fn release(&mut self, seq: u64) -> Vec<usize> {
+        let mut freed = Vec::new();
         if let Some(pages) = self.maps.remove(&seq) {
-            let n = pages.len();
-            self.free.extend(pages);
-            n
-        } else {
-            0
+            for p in pages {
+                if self.release_page(p).expect("mapped page must be live") {
+                    freed.push(p);
+                }
+            }
         }
+        freed
+    }
+
+    /// Structural consistency check (used by the property suite): per-page
+    /// reference counts must equal the number of map slots referencing the
+    /// page plus the caller-supplied external references, and the free list
+    /// must hold exactly the rc==0 pages, each once.
+    pub fn validate(&self, external_refs: &[usize]) -> Result<(), String> {
+        let mut want = vec![0u32; self.capacity];
+        for pages in self.maps.values() {
+            for &p in pages {
+                want[p] += 1;
+            }
+        }
+        for &p in external_refs {
+            want[p] += 1;
+        }
+        for p in 0..self.capacity {
+            if self.rc[p] != want[p] {
+                return Err(format!("page {p}: rc {} != referenced {}", self.rc[p], want[p]));
+            }
+        }
+        let mut on_free = vec![false; self.capacity];
+        for &p in &self.free {
+            if on_free[p] {
+                return Err(format!("page {p} on free list twice"));
+            }
+            on_free[p] = true;
+        }
+        for p in 0..self.capacity {
+            if on_free[p] != (self.rc[p] == 0) {
+                return Err(format!("page {p}: free-list {} but rc {}", on_free[p], self.rc[p]));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -97,9 +210,10 @@ mod tests {
         assert_eq!(a.grow(2).unwrap(), 2);
         assert_eq!(a.used_pages(), 3);
         assert_eq!(a.pages_of(1).unwrap(), &[0, 1]);
-        assert_eq!(a.release(1), 2);
+        assert_eq!(a.release(1), vec![0, 1]);
         assert_eq!(a.free_pages(), 3);
         assert_eq!(a.pages_of(1), None);
+        a.validate(&[]).unwrap();
     }
 
     #[test]
@@ -150,5 +264,53 @@ mod tests {
         a.register(2);
         assert!(a.grow(2).is_ok());
         assert!(a.grow(2).is_ok());
+    }
+
+    #[test]
+    fn shared_page_survives_one_release() {
+        let mut a = PageAllocator::new(2);
+        a.register(1);
+        a.register(2);
+        let p = a.grow(1).unwrap();
+        a.share(2, p).unwrap();
+        assert_eq!(a.ref_count(p), 2);
+        assert_eq!(a.release(1), Vec::<usize>::new()); // still referenced by 2
+        assert_eq!(a.used_pages(), 1);
+        assert_eq!(a.release(2), vec![p]);
+        assert_eq!(a.free_pages(), 2);
+        a.validate(&[]).unwrap();
+    }
+
+    #[test]
+    fn retain_keeps_page_live_after_owner_exits() {
+        let mut a = PageAllocator::new(2);
+        a.register(1);
+        let p = a.grow(1).unwrap();
+        a.retain(p).unwrap(); // trie reference
+        assert_eq!(a.release(1), Vec::<usize>::new());
+        assert_eq!(a.ref_count(p), 1);
+        a.validate(&[p]).unwrap();
+        assert!(a.release_page(p).unwrap()); // trie eviction frees it
+        assert_eq!(a.free_pages(), 2);
+    }
+
+    #[test]
+    fn share_and_retain_reject_free_pages() {
+        let mut a = PageAllocator::new(2);
+        a.register(1);
+        assert_eq!(a.share(1, 0), Err(AllocError::PageNotLive));
+        assert_eq!(a.retain(0), Err(AllocError::PageNotLive));
+        assert_eq!(a.release_page(0), Err(AllocError::PageNotLive));
+    }
+
+    #[test]
+    fn replace_swaps_table_slot() {
+        let mut a = PageAllocator::new(3);
+        a.register(1);
+        let p0 = a.grow(1).unwrap();
+        let fresh = a.alloc_unmapped().unwrap();
+        assert_eq!(a.replace(1, 0, fresh).unwrap(), Some(p0));
+        assert_eq!(a.pages_of(1).unwrap(), &[fresh]);
+        a.validate(&[]).unwrap();
     }
 }

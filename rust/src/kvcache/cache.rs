@@ -5,9 +5,22 @@
 //! is per (logical page, layer): FP8 mode holds u8 E4M3 content + f32 scales
 //! + bf16 aligned RoPE; BF16 mode (FlashMLA baseline) holds bf16 content +
 //! bf16 RoPE.
+//!
+//! Serving-grade lifecycle on top of the storage:
+//! * **prefix sharing** — full prompt-prefix pages are published to a
+//!   [`PrefixTrie`]; later sequences with the same prefix `adopt` the same
+//!   physical pages (refcounted, copy-on-write on divergence inside a
+//!   shared page). Trie-retained pages are evicted LRU under page pressure.
+//! * **page-spill preemption** — `spill` clones a sequence's pages to host
+//!   memory and frees them; `restore` maps them back bit-exactly, so a
+//!   preempted-then-resumed sequence replays nothing and emits the same
+//!   tokens as an uninterrupted run (recompute-preemption would re-prefill
+//!   through the full-precision prefill path and diverge from the FP8
+//!   decode path).
 
 use super::allocator::{AllocError, PageAllocator};
 use super::page::{Page, PAGE_TOKENS};
+use super::prefix::PrefixTrie;
 use crate::fp8::{bf16_decode, bf16_encode};
 use std::collections::BTreeMap;
 
@@ -52,6 +65,7 @@ struct Bf16Page {
     rope: Vec<u16>,
 }
 
+#[derive(Clone)]
 enum PageData {
     Fp8(Vec<Page>),      // [n_layers]
     Bf16(Vec<Bf16Page>), // [n_layers]
@@ -64,13 +78,34 @@ struct SeqState {
     tokens: usize,
 }
 
+/// A preempted sequence's KV pages, spilled to host memory. Opaque: only
+/// the cache that produced it can map it back.
+pub struct SpilledKv {
+    tokens: usize,
+    pages: Vec<PageData>,
+}
+
+impl SpilledKv {
+    /// Cache tokens this spill snapshot holds.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Pages the restore will need.
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
 /// The paged KV cache.
 pub struct PagedKvCache {
     pub cfg: CacheConfig,
     alloc: PageAllocator,
     pages: Vec<Option<PageData>>, // indexed by physical page id
     seqs: BTreeMap<SeqHandle, SeqState>,
+    trie: PrefixTrie,
     appends: u64, // stats: token-append operations
+    cow_copies: u64,
 }
 
 impl PagedKvCache {
@@ -82,7 +117,9 @@ impl PagedKvCache {
             alloc: PageAllocator::new(cfg.capacity_pages),
             pages,
             seqs: BTreeMap::new(),
+            trie: PrefixTrie::new(),
             appends: 0,
+            cow_copies: 0,
         }
     }
 
@@ -92,12 +129,9 @@ impl PagedKvCache {
     }
 
     pub fn release(&mut self, seq: SeqHandle) {
-        if let Some(pages) = self.alloc.pages_of(seq).map(|p| p.to_vec()) {
-            for p in pages {
-                self.pages[p] = None;
-            }
+        for p in self.alloc.release(seq) {
+            self.pages[p] = None;
         }
-        self.alloc.release(seq);
         self.seqs.remove(&seq);
     }
 
@@ -113,6 +147,35 @@ impl PagedKvCache {
         self.alloc.used_pages()
     }
 
+    /// Pages obtainable without touching live sequences: the free list plus
+    /// trie-retained pages no sequence references (evictable on demand).
+    /// This is the scheduler's admission/backpressure signal — prefix-cache
+    /// retention must not masquerade as pressure.
+    pub fn available_pages(&self) -> usize {
+        let mut evictable = 0usize;
+        self.trie.for_each_page(|p| {
+            if self.alloc.ref_count(p) == 1 {
+                evictable += 1;
+            }
+        });
+        self.alloc.free_pages() + evictable
+    }
+
+    /// Pages currently retained by the prefix cache.
+    pub fn retained_pages(&self) -> usize {
+        self.trie.retained_pages()
+    }
+
+    /// Copy-on-write page copies performed (divergence inside shared pages).
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+
+    /// Drop the whole prefix cache (releases every trie retention ref).
+    pub fn drop_prefix_cache(&mut self) {
+        while self.evict_one() {}
+    }
+
     pub fn can_append(&self, seq: SeqHandle, extra_tokens: usize) -> bool {
         self.alloc.can_grow(seq, self.tokens_of(seq), extra_tokens)
     }
@@ -125,6 +188,174 @@ impl PagedKvCache {
     pub fn memory_stats(&self) -> (usize, usize) {
         let used = self.alloc.used_pages();
         (used * self.cfg.page_bytes(), used * self.cfg.page_bytes_f32())
+    }
+
+    /// Structural consistency check (property suite): refcounts match the
+    /// sequence maps + trie retention, the free list is exact, and storage
+    /// exists iff a page is live.
+    pub fn validate(&self) -> Result<(), String> {
+        self.alloc.validate(&self.trie.pages())?;
+        for p in 0..self.cfg.capacity_pages {
+            let live = self.alloc.ref_count(p) > 0;
+            if live != self.pages[p].is_some() {
+                let stored = self.pages[p].is_some();
+                return Err(format!("page {p}: live {live} but storage {stored}"));
+            }
+        }
+        Ok(())
+    }
+
+    // --- prefix sharing ----------------------------------------------------
+
+    /// Map the longest published full-page prefix of `prompt` into `seq`'s
+    /// (empty) page table; returns the adopted token count. At least one
+    /// prompt token is always left to prefill so the sequence gets its
+    /// first-token logits from a real model step.
+    pub fn adopt_prefix(&mut self, seq: SeqHandle, prompt: &[i32]) -> usize {
+        let Some(state) = self.seqs.get(&seq) else { return 0 };
+        if state.tokens > 0 {
+            return 0;
+        }
+        let limit = prompt.len().saturating_sub(1);
+        let pages = self.trie.lookup(prompt, limit);
+        if pages.is_empty() {
+            return 0;
+        }
+        for &p in &pages {
+            self.alloc.share(seq, p).expect("trie-retained page is live");
+        }
+        let tokens = pages.len() * PAGE_TOKENS;
+        self.seqs.get_mut(&seq).unwrap().tokens = tokens;
+        tokens
+    }
+
+    /// Publish the full pages of `prompt_prefix` (tokens already appended by
+    /// `seq`) to the prefix trie; the trie takes a retention reference on
+    /// each newly-inserted page. Idempotent per page.
+    pub fn publish_prefix(&mut self, seq: SeqHandle, prompt_prefix: &[i32]) {
+        let full = prompt_prefix.len() / PAGE_TOKENS;
+        if full == 0 {
+            return;
+        }
+        debug_assert!(self.tokens_of(seq) >= full * PAGE_TOKENS);
+        let Some(table) = self.alloc.pages_of(seq) else { return };
+        if table.len() < full {
+            return;
+        }
+        let pages: Vec<usize> = table[..full].to_vec();
+        for p in self.trie.insert(prompt_prefix, &pages) {
+            self.alloc.retain(p).expect("sequence page is live");
+        }
+    }
+
+    // --- spill / restore (page-spill preemption) ---------------------------
+
+    /// Spill `seq`'s pages to host memory and free them in the pool. The
+    /// snapshot is bit-exact: `restore` brings back the same KV bytes.
+    ///
+    /// Adopted shared-prefix pages are cloned into the snapshot too and
+    /// become private copies on restore — exactness over dedup. (Re-adopting
+    /// from the trie on restore would reclaim the sharing but needs an
+    /// eviction-safe validity check; candidate for a future PR.)
+    pub fn spill(&mut self, seq: SeqHandle) -> Result<SpilledKv, AllocError> {
+        let tokens = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.to_vec();
+        let pages: Vec<PageData> =
+            table.iter().map(|&p| self.pages[p].clone().expect("allocated page")).collect();
+        self.release(seq);
+        Ok(SpilledKv { tokens, pages })
+    }
+
+    /// Map a spilled snapshot back into the pool under `seq` (which must not
+    /// be live). Evicts prefix-cache pages as needed; fails with
+    /// `OutOfPages` — before touching anything, including the prefix
+    /// cache — when even full eviction could not free enough pages.
+    pub fn restore(&mut self, seq: SeqHandle, sp: SpilledKv) -> Result<(), AllocError> {
+        assert!(!self.seqs.contains_key(&seq), "restore over a live sequence");
+        if self.available_pages() < sp.pages.len() {
+            return Err(AllocError::OutOfPages);
+        }
+        while self.alloc.free_pages() < sp.pages.len() {
+            if !self.evict_one() {
+                return Err(AllocError::OutOfPages);
+            }
+        }
+        self.register(seq);
+        for data in sp.pages {
+            let p = self.alloc.grow(seq).expect("reserved above");
+            self.pages[p] = Some(data);
+        }
+        self.seqs.get_mut(&seq).unwrap().tokens = sp.tokens;
+        Ok(())
+    }
+
+    // --- allocation internals ---------------------------------------------
+
+    /// Evict one prefix-trie page (LRU leaf, preferring pages whose only
+    /// remaining reference is the trie's — evicting a page a live sequence
+    /// still shares frees nothing). Returns false when the trie is empty.
+    fn evict_one(&mut self) -> bool {
+        let alloc = &self.alloc;
+        match self.trie.evict_lru_preferring(|p| alloc.ref_count(p) == 1) {
+            Some(page) => {
+                if self.alloc.release_page(page).expect("trie page is live") {
+                    self.pages[page] = None;
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn grow_page(&mut self, seq: SeqHandle) -> Result<usize, AllocError> {
+        loop {
+            match self.alloc.grow(seq) {
+                Err(AllocError::OutOfPages) => {
+                    if !self.evict_one() {
+                        return Err(AllocError::OutOfPages);
+                    }
+                }
+                r => return r,
+            }
+        }
+    }
+
+    fn alloc_slot(&mut self) -> Result<usize, AllocError> {
+        loop {
+            match self.alloc.alloc_unmapped() {
+                Err(AllocError::OutOfPages) => {
+                    if !self.evict_one() {
+                        return Err(AllocError::OutOfPages);
+                    }
+                }
+                r => return r,
+            }
+        }
+    }
+
+    /// Physical page `seq` may write its `page_idx`-th page into: grows the
+    /// table when past the end, and copies-on-write when the slot is shared
+    /// (divergence inside a shared page).
+    fn writable_page(&mut self, seq: SeqHandle, page_idx: usize) -> Result<usize, AllocError> {
+        let table_len = self.alloc.pages_of(seq).map(|p| p.len()).unwrap_or(0);
+        if page_idx >= table_len {
+            debug_assert_eq!(page_idx, table_len, "pages are appended in order");
+            let p = self.grow_page(seq)?;
+            self.pages[p] = Some(self.new_page_data());
+            return Ok(p);
+        }
+        let phys = self.alloc.pages_of(seq).unwrap()[page_idx];
+        if self.alloc.ref_count(phys) <= 1 {
+            return Ok(phys);
+        }
+        let fresh = self.alloc_slot()?;
+        let copy = self.pages[phys].clone();
+        self.pages[fresh] = copy;
+        if let Some(old_freed) = self.alloc.replace(seq, page_idx, fresh)? {
+            self.pages[old_freed] = None;
+        }
+        self.cow_copies += 1;
+        Ok(fresh)
     }
 
     fn new_page_data(&self) -> PageData {
@@ -143,6 +374,8 @@ impl PagedKvCache {
         }
     }
 
+    // --- append / read paths ----------------------------------------------
+
     /// Fused-K-Append: quantize (mode-dependent) + paged write of ONE token
     /// across all layers. `c_kv` and `k_r` are [n_layers * d_c] / [n_layers *
     /// d_r] raw f32 values for this token.
@@ -155,18 +388,9 @@ impl PagedKvCache {
         let (d_c, d_r, layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
         assert_eq!(c_kv.len(), layers * d_c);
         assert_eq!(k_r.len(), layers * d_r);
-        let state = self.seqs.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
-        let pos = state.tokens;
+        let pos = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
         let slot = pos % PAGE_TOKENS;
-        let page_idx = pos / PAGE_TOKENS;
-        let table_len = self.alloc.pages_of(seq).map(|p| p.len()).unwrap_or(0);
-        let phys = if page_idx >= table_len {
-            let p = self.alloc.grow(seq)?;
-            self.pages[p] = Some(self.new_page_data());
-            p
-        } else {
-            self.alloc.pages_of(seq).unwrap()[page_idx]
-        };
+        let phys = self.writable_page(seq, pos / PAGE_TOKENS)?;
         let data = self.pages[phys].as_mut().expect("allocated page must exist");
         match data {
             PageData::Fp8(layers_pages) => {
@@ -191,8 +415,7 @@ impl PagedKvCache {
                 }
             }
         }
-        let state = self.seqs.get_mut(&seq).unwrap();
-        state.tokens = pos + 1;
+        self.seqs.get_mut(&seq).unwrap().tokens = pos + 1;
         self.appends += 1;
         Ok(())
     }
@@ -209,18 +432,9 @@ impl PagedKvCache {
     ) -> Result<(), AllocError> {
         assert_eq!(self.cfg.mode, CacheMode::Fp8);
         let (d_c, d_r, _layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
-        let state = self.seqs.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
-        let pos = state.tokens;
+        let pos = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
         let slot = pos % PAGE_TOKENS;
-        let page_idx = pos / PAGE_TOKENS;
-        let table_len = self.alloc.pages_of(seq).map(|p| p.len()).unwrap_or(0);
-        let phys = if page_idx >= table_len {
-            let p = self.alloc.grow(seq)?;
-            self.pages[p] = Some(self.new_page_data());
-            p
-        } else {
-            self.alloc.pages_of(seq).unwrap()[page_idx]
-        };
+        let phys = self.writable_page(seq, pos / PAGE_TOKENS)?;
         let data = self.pages[phys].as_mut().unwrap();
         if let PageData::Fp8(layers_pages) = data {
             for (l, page) in layers_pages.iter_mut().enumerate() {
@@ -238,8 +452,7 @@ impl PagedKvCache {
                 );
             }
         }
-        let state = self.seqs.get_mut(&seq).unwrap();
-        state.tokens = pos + 1;
+        self.seqs.get_mut(&seq).unwrap().tokens = pos + 1;
         self.appends += 1;
         Ok(())
     }
@@ -447,6 +660,7 @@ mod tests {
         cache.release(1);
         assert_eq!(cache.used_pages(), 0);
         assert_eq!(cache.tokens_of(1), 0);
+        cache.validate().unwrap();
     }
 
     #[test]
@@ -501,5 +715,195 @@ mod tests {
         assert_ne!(&c1[..c.d_c], &c2[..c.d_c]);
         // seq 1 token 1 equals token 0 (same input appended twice)
         assert_eq!(&c1[..c.d_c], &c1[c.d_c..2 * c.d_c]);
+    }
+
+    // --- prefix sharing / spill lifecycle -----------------------------------
+
+    fn fill_tokens(cache: &mut PagedKvCache, seq: u64, n: usize, seed: u64) {
+        let c = cache.cfg;
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let (ck, kr) = rand_token(&mut rng, &c);
+            cache.append_token(seq, &ck, &kr).unwrap();
+        }
+    }
+
+    #[test]
+    fn publish_and_adopt_share_physical_pages() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..130).collect(); // 2 full pages + 2 tokens
+        cache.register(1);
+        fill_tokens(&mut cache, 1, prompt.len(), 11);
+        cache.publish_prefix(1, &prompt);
+        assert_eq!(cache.retained_pages(), 2);
+        let before = cache.used_pages();
+
+        cache.register(2);
+        let adopted = cache.adopt_prefix(2, &prompt);
+        assert_eq!(adopted, 2 * PAGE_TOKENS);
+        assert_eq!(cache.tokens_of(2), 128);
+        // sharing allocated no new pages
+        assert_eq!(cache.used_pages(), before);
+        cache.validate().unwrap();
+
+        // the adopted view is byte-identical to the publisher's
+        let (n, dc, dr) = (128, c.d_c, c.d_r);
+        let mut a = vec![0.0f32; n * dc];
+        let mut b = vec![0.0f32; n * dc];
+        let mut r = vec![0.0f32; n * dr];
+        let mut s = vec![0.0f32; n];
+        cache.gather_kernel_view(1, 0, n, &mut a, &mut r, &mut s);
+        cache.gather_kernel_view(2, 0, n, &mut b, &mut r, &mut s);
+        assert_eq!(a, b);
+
+        // release both: pages stay retained by the trie, then drop to zero
+        cache.release(1);
+        cache.release(2);
+        assert_eq!(cache.used_pages(), 2);
+        cache.drop_prefix_cache();
+        assert_eq!(cache.used_pages(), 0);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn adopt_leaves_at_least_one_token_to_prefill() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..64).collect(); // exactly one page
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 64, 12);
+        cache.publish_prefix(1, &prompt);
+        cache.register(2);
+        // matching all 64 tokens would leave nothing to prefill → adopt none
+        assert_eq!(cache.adopt_prefix(2, &prompt), 0);
+        // a longer prompt sharing the page adopts it
+        let mut longer = prompt.clone();
+        longer.push(999);
+        cache.register(3);
+        assert_eq!(cache.adopt_prefix(3, &longer), 64);
+    }
+
+    #[test]
+    fn cow_on_divergence_inside_shared_page() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 10, 13); // partial page
+        // force-share seq 1's partial page into seq 2 (the trie never does
+        // this; the append path must still be safe if it ever happens)
+        let p = cache.alloc.pages_of(1).unwrap()[0];
+        cache.register(2);
+        cache.alloc.share(2, p).unwrap();
+        cache.seqs.get_mut(&2).unwrap().tokens = 10;
+
+        let mut rng = Rng::new(14);
+        let (ck, kr) = rand_token(&mut rng, &c);
+        cache.append_token(2, &ck, &kr).unwrap();
+        assert_eq!(cache.cow_copies(), 1);
+        // seq 1's page is untouched; seq 2 got its own copy
+        assert_ne!(cache.alloc.pages_of(1).unwrap()[0], cache.alloc.pages_of(2).unwrap()[0]);
+        assert_eq!(cache.tokens_of(1), 10);
+        assert_eq!(cache.tokens_of(2), 11);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn spill_restore_is_bit_exact() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 70, 15);
+        let (n, dc, dr) = (70, c.d_c, c.d_r);
+        let mut before_c = vec![0.0f32; 128 * dc];
+        let mut before_r = vec![0.0f32; 128 * dr];
+        let mut before_s = vec![0.0f32; 128];
+        cache.gather_kernel_view(1, 1, n, &mut before_c, &mut before_r, &mut before_s);
+
+        let sp = cache.spill(1).unwrap();
+        assert_eq!(sp.tokens(), 70);
+        assert_eq!(sp.pages(), 2);
+        assert_eq!(cache.used_pages(), 0);
+
+        cache.restore(1, sp).unwrap();
+        assert_eq!(cache.tokens_of(1), 70);
+        let mut after_c = vec![0.0f32; 128 * dc];
+        let mut after_r = vec![0.0f32; 128 * dr];
+        let mut after_s = vec![0.0f32; 128];
+        cache.gather_kernel_view(1, 1, n, &mut after_c, &mut after_r, &mut after_s);
+        assert_eq!(before_c, after_c);
+        assert_eq!(before_r, after_r);
+        assert_eq!(before_s, after_s);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn restore_evicts_prefix_cache_under_pressure() {
+        let mut c = cfg(CacheMode::Fp8);
+        c.capacity_pages = 2;
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..65).collect();
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 65, 16);
+        cache.publish_prefix(1, &prompt); // retains page 0
+        let sp = cache.spill(1).unwrap();
+        assert_eq!(cache.retained_pages(), 1);
+        assert_eq!(cache.free_pages(), 1);
+        assert_eq!(cache.available_pages(), 2);
+        // restore needs 2 pages → evicts the trie page
+        cache.restore(1, sp).unwrap();
+        assert_eq!(cache.retained_pages(), 0);
+        assert_eq!(cache.tokens_of(1), 65);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn eviction_prefers_reclaimable_over_shared_pages() {
+        let mut c = cfg(CacheMode::Fp8);
+        c.capacity_pages = 3;
+        let mut cache = PagedKvCache::new(c);
+        // page A: published AND still shared with live seq 1 (rc 2)
+        let prompt_a: Vec<i32> = (0..64).collect();
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 64, 21);
+        cache.publish_prefix(1, &prompt_a);
+        // page B: published, publisher finished (rc 1 — trie only)
+        let prompt_b: Vec<i32> = (1000..1064).collect();
+        cache.register(2);
+        fill_tokens(&mut cache, 2, 64, 22);
+        cache.publish_prefix(2, &prompt_b);
+        cache.release(2);
+        assert_eq!(cache.retained_pages(), 2);
+
+        // A is LRU-older, but evicting it would free nothing: pressure must
+        // reclaim B and keep the still-hot shared retention of A
+        cache.register(3);
+        fill_tokens(&mut cache, 3, 65, 23); // needs 2 pages, only 1 free
+        assert_eq!(cache.retained_pages(), 1);
+        assert_eq!(cache.tokens_of(1), 64);
+        let mut longer = prompt_a.clone();
+        longer.push(7);
+        cache.register(4);
+        assert_eq!(cache.adopt_prefix(4, &longer), 64, "A's retention must survive");
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn append_evicts_prefix_cache_under_pressure() {
+        let mut c = cfg(CacheMode::Fp8);
+        c.capacity_pages = 2;
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..64).collect();
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 64, 17);
+        cache.publish_prefix(1, &prompt);
+        cache.release(1); // page lives on via trie retention
+        assert_eq!(cache.used_pages(), 1);
+
+        cache.register(2);
+        fill_tokens(&mut cache, 2, 65, 18); // needs 2 pages → evicts trie page
+        assert_eq!(cache.retained_pages(), 0);
+        assert_eq!(cache.tokens_of(2), 65);
+        cache.validate().unwrap();
     }
 }

@@ -14,12 +14,19 @@
 //! decoding-centric granularity argument of §3.1.1). The per-block
 //! alternative with page-tail rebuffering lives in `blockwise.rs` for the
 //! granularity ablation.
+//!
+//! Serving lifecycle: pages are **refcounted** (`allocator`), full prompt-
+//! prefix pages are shared across sequences via a prefix trie (`prefix`),
+//! and preemption spills page bytes to host memory instead of discarding
+//! the KV state (`cache::spill`/`restore`).
 
 pub mod allocator;
 pub mod blockwise;
 pub mod cache;
 pub mod page;
+pub mod prefix;
 
 pub use allocator::PageAllocator;
-pub use cache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
+pub use cache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle, SpilledKv};
 pub use page::{Page, PAGE_TOKENS};
+pub use prefix::PrefixTrie;

@@ -1,0 +1,286 @@
+//! Prefix-sharing trie over full KV pages.
+//!
+//! Sequences that share a prompt prefix map the same *physical* pages: the
+//! trie keys each level by the 64 token ids of one full page and stores the
+//! physical page holding that page's KV. Only **full** pages are ever
+//! published (partial pages stay private to their sequence), so shared pages
+//! are immutable by construction; the cache still guards the append path
+//! with copy-on-write in case a partially-filled page ever becomes shared.
+//!
+//! The MLA latent cache makes this cheap: a 64-token page is ~40 KB of
+//! E4M3+bf16 per layer instead of multi-head f32 KV, so retaining popular
+//! prefixes costs little (cf. *Hardware-Centric Analysis of DeepSeek's
+//! MLA*). The trie holds one retention reference per published page; under
+//! page pressure the cache evicts least-recently-used leaves.
+
+use super::PAGE_TOKENS;
+use std::collections::BTreeMap;
+
+struct Node {
+    /// the 64 token ids this level matched
+    tokens: Vec<i32>,
+    /// physical page holding the KV of those tokens (trie holds one ref)
+    page: usize,
+    parent: Option<usize>,
+    children: BTreeMap<Vec<i32>, usize>,
+    last_used: u64,
+}
+
+/// Trie of published full-page prompt prefixes → physical pages.
+pub struct PrefixTrie {
+    nodes: Vec<Option<Node>>,
+    free_slots: Vec<usize>,
+    roots: BTreeMap<Vec<i32>, usize>,
+    clock: u64,
+}
+
+impl Default for PrefixTrie {
+    fn default() -> Self {
+        PrefixTrie::new()
+    }
+}
+
+impl PrefixTrie {
+    pub fn new() -> PrefixTrie {
+        PrefixTrie { nodes: Vec::new(), free_slots: Vec::new(), roots: BTreeMap::new(), clock: 0 }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn node(&self, id: usize) -> &Node {
+        self.nodes[id].as_ref().expect("live trie node")
+    }
+
+    /// Number of published pages currently retained by the trie.
+    pub fn retained_pages(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.retained_pages() == 0
+    }
+
+    /// All physical pages the trie currently retains.
+    pub fn pages(&self) -> Vec<usize> {
+        self.nodes.iter().flatten().map(|n| n.page).collect()
+    }
+
+    /// Visit every retained physical page without allocating.
+    pub fn for_each_page(&self, mut f: impl FnMut(usize)) {
+        for n in self.nodes.iter().flatten() {
+            f(n.page);
+        }
+    }
+
+    /// Longest full-page prefix of `tokens` present in the trie, considering
+    /// at most `max_tokens` tokens; returns the matched physical pages in
+    /// prefix order (empty when nothing matches).
+    pub fn lookup(&mut self, tokens: &[i32], max_tokens: usize) -> Vec<usize> {
+        let now = self.tick();
+        let full_pages = tokens.len().min(max_tokens) / PAGE_TOKENS;
+        let mut matched = Vec::new();
+        let mut level = None; // None = root
+        for p in 0..full_pages {
+            let key = &tokens[p * PAGE_TOKENS..(p + 1) * PAGE_TOKENS];
+            let next = match level {
+                None => self.roots.get(key).copied(),
+                Some(id) => self.node(id).children.get(key).copied(),
+            };
+            let Some(id) = next else { break };
+            let n = self.nodes[id].as_mut().expect("live trie node");
+            n.last_used = now;
+            matched.push(n.page);
+            level = Some(id);
+        }
+        matched
+    }
+
+    /// Publish the full pages of `tokens` (a prompt prefix) backed by the
+    /// sequence's physical `pages` (page i holds tokens `[64i, 64(i+1))`).
+    /// Existing levels are kept (first publisher wins); returns the physical
+    /// pages newly inserted — the caller must take one retention reference
+    /// on each.
+    pub fn insert(&mut self, tokens: &[i32], pages: &[usize]) -> Vec<usize> {
+        let now = self.tick();
+        let full_pages = (tokens.len() / PAGE_TOKENS).min(pages.len());
+        let mut newly = Vec::new();
+        let mut level = None;
+        for p in 0..full_pages {
+            let key = tokens[p * PAGE_TOKENS..(p + 1) * PAGE_TOKENS].to_vec();
+            let existing = match level {
+                None => self.roots.get(&key).copied(),
+                Some(id) => self.node(id).children.get(&key).copied(),
+            };
+            let id = match existing {
+                Some(id) => {
+                    let n = self.nodes[id].as_mut().expect("live trie node");
+                    n.last_used = now;
+                    id
+                }
+                None => {
+                    let node = Node {
+                        tokens: key.clone(),
+                        page: pages[p],
+                        parent: level,
+                        children: BTreeMap::new(),
+                        last_used: now,
+                    };
+                    let id = match self.free_slots.pop() {
+                        Some(slot) => {
+                            self.nodes[slot] = Some(node);
+                            slot
+                        }
+                        None => {
+                            self.nodes.push(Some(node));
+                            self.nodes.len() - 1
+                        }
+                    };
+                    match level {
+                        None => {
+                            self.roots.insert(key, id);
+                        }
+                        Some(pid) => {
+                            self.nodes[pid]
+                                .as_mut()
+                                .expect("live trie node")
+                                .children
+                                .insert(key, id);
+                        }
+                    }
+                    newly.push(pages[p]);
+                    id
+                }
+            };
+            level = Some(id);
+        }
+        newly
+    }
+
+    /// Evict the least-recently-used **leaf**; returns its physical page so
+    /// the caller can drop the trie's retention reference. None when the
+    /// trie is empty.
+    pub fn evict_lru(&mut self) -> Option<usize> {
+        self.evict_lru_preferring(|_| true)
+    }
+
+    /// Evict the least-recently-used leaf, preferring leaves whose page the
+    /// caller marks reclaimable (last reference = the trie's): burning a
+    /// shared page's retention frees nothing. Falls back to any leaf so
+    /// reclaimable internal pages can still be unlocked by peeling.
+    pub fn evict_lru_preferring(
+        &mut self,
+        reclaimable: impl Fn(usize) -> bool,
+    ) -> Option<usize> {
+        let pick = |want_reclaimable: bool| {
+            self.nodes
+                .iter()
+                .enumerate()
+                .filter_map(|(id, n)| n.as_ref().map(|n| (id, n)))
+                .filter(|(_, n)| n.children.is_empty())
+                .filter(|(_, n)| !want_reclaimable || reclaimable(n.page))
+                .min_by_key(|(id, n)| (n.last_used, *id))
+                .map(|(id, _)| id)
+        };
+        let victim = pick(true).or_else(|| pick(false))?;
+        Some(self.remove_node(victim))
+    }
+
+    fn remove_node(&mut self, victim: usize) -> usize {
+        let node = self.nodes[victim].take().expect("victim is live");
+        match node.parent {
+            None => {
+                self.roots.remove(&node.tokens);
+            }
+            Some(pid) => {
+                self.nodes[pid]
+                    .as_mut()
+                    .expect("live parent")
+                    .children
+                    .remove(&node.tokens);
+            }
+        }
+        self.free_slots.push(victim);
+        node.page
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, offset: i32) -> Vec<i32> {
+        (0..n as i32).map(|i| i + offset).collect()
+    }
+
+    #[test]
+    fn insert_then_lookup_full_pages() {
+        let mut t = PrefixTrie::new();
+        let prompt = toks(3 * PAGE_TOKENS + 10, 0);
+        let newly = t.insert(&prompt, &[7, 8, 9]);
+        assert_eq!(newly, vec![7, 8, 9]); // only the 3 full pages
+        assert_eq!(t.retained_pages(), 3);
+        assert_eq!(t.lookup(&prompt, prompt.len()), vec![7, 8, 9]);
+        // limited lookup stops at the full-page boundary under the cap
+        assert_eq!(t.lookup(&prompt, 2 * PAGE_TOKENS + 5), vec![7, 8]);
+    }
+
+    #[test]
+    fn diverging_suffix_shares_common_prefix() {
+        let mut t = PrefixTrie::new();
+        let a = toks(2 * PAGE_TOKENS, 0);
+        let mut b = a.clone();
+        b[PAGE_TOKENS] += 1000; // second page differs
+        t.insert(&a, &[1, 2]);
+        let newly = t.insert(&b, &[3, 4]);
+        assert_eq!(newly, vec![4]); // first page deduped against a's
+        assert_eq!(t.lookup(&a, a.len()), vec![1, 2]);
+        assert_eq!(t.lookup(&b, b.len()), vec![3, 4]);
+        assert_eq!(t.retained_pages(), 3);
+    }
+
+    #[test]
+    fn first_publisher_wins() {
+        let mut t = PrefixTrie::new();
+        let a = toks(PAGE_TOKENS, 0);
+        assert_eq!(t.insert(&a, &[5]), vec![5]);
+        assert_eq!(t.insert(&a, &[9]), Vec::<usize>::new());
+        assert_eq!(t.lookup(&a, a.len()), vec![5]);
+    }
+
+    #[test]
+    fn partial_page_never_published() {
+        let mut t = PrefixTrie::new();
+        let a = toks(PAGE_TOKENS - 1, 0);
+        assert_eq!(t.insert(&a, &[1]), Vec::<usize>::new());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn evict_lru_leaf_first() {
+        let mut t = PrefixTrie::new();
+        let a = toks(2 * PAGE_TOKENS, 0);
+        t.insert(&a, &[1, 2]);
+        // touch the chain so the leaf (page 2) is newest; eviction still
+        // picks a leaf — the only leaf is page 2's node
+        t.lookup(&a, a.len());
+        assert_eq!(t.evict_lru(), Some(2));
+        // now the former parent is a leaf
+        assert_eq!(t.evict_lru(), Some(1));
+        assert_eq!(t.evict_lru(), None);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn eviction_unlinks_child_key() {
+        let mut t = PrefixTrie::new();
+        let a = toks(PAGE_TOKENS, 0);
+        t.insert(&a, &[3]);
+        assert_eq!(t.evict_lru(), Some(3));
+        // re-publishing after eviction works (slot + key fully recycled)
+        assert_eq!(t.insert(&a, &[4]), vec![4]);
+        assert_eq!(t.lookup(&a, a.len()), vec![4]);
+    }
+}

@@ -30,9 +30,11 @@
 //! * [`mla`] — f32 MLA attention reference, the Algorithm-1 software
 //!   pipeline (incl. the App. E dual-warp-group hazard study), synthetic
 //!   KV statistics and fidelity metrics
-//! * [`kvcache`] — paged KV cache: u8 FP8 content + bf16 RoPE + f32 scales
+//! * [`kvcache`] — paged KV cache: u8 FP8 content + bf16 RoPE + f32 scales,
+//!   refcounted prefix-sharing pages, page-spill preemption
 //! * [`runtime`] — backend trait, sim + PJRT backends, model engine
-//! * [`coordinator`] — requests, sequences, batcher, scheduler, router,
+//!   (decode / prefill / mixed chunked-prefill steps)
+//! * [`coordinator`] — requests, sequences, mixed-batch scheduler, router,
 //!   serving loop, metrics
 //! * [`cluster`] — DP/TP topology and collective cost model
 //! * [`perfmodel`] — calibrated Hopper roofline/kernel/E2E timing model

@@ -100,6 +100,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         out_min: args.usize_or("out-min", 16),
         out_max: args.usize_or("out-max", 96),
         temperature: args.f64_or("temperature", 0.7) as f32,
+        long_frac: args.f64_or("long-frac", 0.0),
+        long_prompt_min: args.usize_or("long-prompt-min", 512),
+        long_prompt_max: args.usize_or("long-prompt-max", 1024),
+        max_total_tokens: args.usize_or("token-budget", 0),
     });
 
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)

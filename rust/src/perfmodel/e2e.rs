@@ -123,6 +123,13 @@ pub fn max_batch_per_rank(
     (kv_budget / per_seq).floor() as usize
 }
 
+/// Expert/dense weight bytes one step streams for `units` concurrent token
+/// rows (batching improves expert reuse sublinearly — dispersion exponent
+/// 0.35 — capped by the full model once all experts are touched).
+fn expert_stream_read(model: &ModelSpec, units: f64) -> f64 {
+    (model.active_params * units.powf(0.35)).min(model.total_params)
+}
+
 /// One decode step time for a batch of `batch` sequences at `context`.
 pub fn decode_step_s(
     gpu: &GpuSpec,
@@ -147,11 +154,8 @@ pub fn decode_step_s(
     let attn = kernel_time_s(gpu, &shape, kind) * model.n_layers as f64;
 
     // --- expert/dense weight streaming --------------------------------------
-    // Decode reads the activated parameters; batching improves expert reuse
-    // sublinearly (dispersion): effective read ≈ active · batch^0.35, capped
-    // by the full model (all experts touched).
-    let active_bytes = model.active_params; // FP8: 1 byte/param
-    let read = (active_bytes * (batch as f64).powf(0.35)).min(model.total_params);
+    // Decode reads the activated parameters; FP8 weights: 1 byte/param.
+    let read = expert_stream_read(model, batch as f64);
     let weights = read / cfg.gpus() as f64 / gpu.hbm_bw;
     // GEMM compute for the activated params (FP8 tensor cores)
     let gemm_flops = 2.0 * model.active_params * batch as f64 / cfg.gpus() as f64;
@@ -176,6 +180,112 @@ pub fn decode_step_s(
     let launches = launches_per_layer * model.n_layers as f64 * gpu.launch_s;
 
     attn + weights.max(gemm) + allreduce + launches
+}
+
+/// Head dims of the NON-absorbed MLA form prefill attention runs in
+/// (absorption is decode-only: a 512-dim latent per head is
+/// flop-prohibitive for multi-token queries, so production MLA serving
+/// prefills in the naive form — cf. the hardware-centric MLA analysis).
+const PREFILL_V_HEAD: usize = 128;
+const PREFILL_ROPE_HEAD: usize = 64;
+
+/// Prefill attention time for `t_q` new tokens against a `ctx`-token cache.
+fn prefill_attn_s(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    cfg: &DeploymentConfig,
+    t_q: usize,
+    ctx: usize,
+    kind: KernelKind,
+) -> f64 {
+    let shape = KernelShape {
+        batch: 1,
+        heads: model.heads / cfg.tp,
+        t_q,
+        seq: ctx.max(1),
+        d_c: PREFILL_V_HEAD,
+        d_r: PREFILL_ROPE_HEAD,
+    };
+    kernel_time_s(gpu, &shape, kind) * model.n_layers as f64
+}
+
+/// One standalone prefill call over `tokens` prompt tokens (the alternating
+/// scheduler's dedicated prefill step): prompt GEMMs, one expert
+/// weight-streaming pass, causal attention over the growing context, and
+/// the separate token-preparation launches. While it runs, every decoder
+/// stalls — that serialization is exactly what mixed batching removes.
+pub fn prefill_step_s(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    cfg: &DeploymentConfig,
+    tokens: usize,
+    kind: KernelKind,
+) -> f64 {
+    if tokens == 0 {
+        return 0.0;
+    }
+    let t = tokens as f64;
+    let weights = expert_stream_read(model, t) / cfg.gpus() as f64 / gpu.hbm_bw;
+    let peak_tflops = match kind {
+        KernelKind::SnapMlaFp8 => gpu.fp8_tflops,
+        KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
+    };
+    let gemm_flops = 2.0 * model.active_params * t / cfg.gpus() as f64;
+    let gemm = gemm_flops / (peak_tflops * 1e12 * gpu.peak_util);
+    // causal attention ≈ every token attends to half the prompt on average
+    let attn = prefill_attn_s(gpu, model, cfg, tokens, (tokens / 2).max(1), kind);
+    let launches = 3.0 * model.n_layers as f64 * gpu.launch_s;
+    weights.max(gemm) + attn + launches
+}
+
+/// One **mixed** step: the decode batch at `context` plus `chunk_tokens` of
+/// piggybacked chunked prefill whose own cache reaches `chunk_context`.
+/// Decode at serving batch sizes is weight-streaming bound, so the chunk's
+/// GEMM compute hides inside the decode step's memory phase (the §3.3
+/// fused-dataflow argument: one weight pass feeds both token streams); only
+/// the excess compute extends the step.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_step_s(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    cfg: &DeploymentConfig,
+    decode_batch: usize,
+    context: usize,
+    chunk_tokens: usize,
+    chunk_context: usize,
+    kind: KernelKind,
+) -> f64 {
+    if chunk_tokens == 0 {
+        return decode_step_s(gpu, model, cfg, decode_batch, context, kind);
+    }
+    let c = chunk_tokens as f64;
+    let peak_tflops = match kind {
+        KernelKind::SnapMlaFp8 => gpu.fp8_tflops,
+        KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
+    };
+    let eff = peak_tflops * 1e12 * gpu.peak_util;
+    let gemm_c = 2.0 * model.active_params * c / cfg.gpus() as f64 / eff;
+    let attn_c =
+        prefill_attn_s(gpu, model, cfg, chunk_tokens, chunk_context.max(chunk_tokens), kind);
+    let chunk_compute = gemm_c + attn_c;
+    if decode_batch == 0 {
+        // nothing to hide behind: the chunk pays its own weight pass
+        let weights = expert_stream_read(model, c) / cfg.gpus() as f64 / gpu.hbm_bw;
+        return weights.max(chunk_compute) + 2.0 * model.n_layers as f64 * gpu.launch_s;
+    }
+    let base = decode_step_s(gpu, model, cfg, decode_batch, context, kind);
+    let weights_mem =
+        expert_stream_read(model, decode_batch as f64) / cfg.gpus() as f64 / gpu.hbm_bw;
+    let gemm_d = 2.0 * model.active_params * decode_batch as f64 / cfg.gpus() as f64 / eff;
+    // compute idle while the decode streams weights — the piggyback budget
+    let hidden = (weights_mem - gemm_d).max(0.0);
+    base + (chunk_compute - hidden).max(0.0) + gpu.launch_s
+}
+
+/// Host-side page-spill (or restore) time for a preempted sequence:
+/// moving `tokens` of KV at HBM bandwidth plus a fixed launch pair.
+pub fn spill_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {
+    model.kv_bytes_per_token(kind) * tokens as f64 / gpu.hbm_bw + 2.0 * gpu.launch_s
 }
 
 /// Evaluate one Fig. 1 serving point (batch chosen by KV capacity).
@@ -300,6 +410,63 @@ mod tests {
         let tp8 = serving_point(&g, &m, &DeploymentConfig { dp: 1, tp: 8 }, 65_536,
             KernelKind::SnapMlaFp8);
         assert!(dp8.tokens_per_s > tp8.tokens_per_s);
+    }
+
+    #[test]
+    fn mixed_step_piggybacks_cheaper_than_separate_prefill() {
+        // the whole point of mixed batching: the marginal cost of riding a
+        // prompt chunk on a decode step is far below a standalone prefill
+        // of the same tokens (the chunk's GEMM hides in the decode's
+        // weight-streaming phase)
+        let (g, m) = setup();
+        let cfg = DeploymentConfig { dp: 8, tp: 1 };
+        for ctx in [4096usize, 16_384, 65_536] {
+            for chunk in [64usize, 128] {
+                let decode_only = decode_step_s(&g, &m, &cfg, 8, ctx, KernelKind::SnapMlaFp8);
+                let mixed =
+                    mixed_step_s(&g, &m, &cfg, 8, ctx, chunk, chunk, KernelKind::SnapMlaFp8);
+                let extra = mixed - decode_only;
+                let standalone = prefill_step_s(&g, &m, &cfg, chunk, KernelKind::SnapMlaFp8);
+                assert!(
+                    extra < 0.6 * standalone,
+                    "ctx {ctx} chunk {chunk}: extra {extra} vs standalone {standalone}"
+                );
+                // and the chunk is never free below the decode-only step
+                assert!(mixed >= decode_only, "ctx {ctx} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_cost_scales_with_prompt() {
+        let (g, m) = setup();
+        let cfg = DeploymentConfig { dp: 8, tp: 1 };
+        let t256 = prefill_step_s(&g, &m, &cfg, 256, KernelKind::SnapMlaFp8);
+        let t2048 = prefill_step_s(&g, &m, &cfg, 2048, KernelKind::SnapMlaFp8);
+        assert!(t2048 > 4.0 * t256, "{t256} vs {t2048}");
+        assert_eq!(prefill_step_s(&g, &m, &cfg, 0, KernelKind::SnapMlaFp8), 0.0);
+    }
+
+    #[test]
+    fn mixed_with_no_decode_still_pays_weight_pass() {
+        let (g, m) = setup();
+        let cfg = DeploymentConfig { dp: 8, tp: 1 };
+        let solo = mixed_step_s(&g, &m, &cfg, 0, 0, 64, 64, KernelKind::SnapMlaFp8);
+        assert!(solo > 0.0 && solo.is_finite());
+        // zero chunk tokens degrades exactly to a decode step
+        let d = decode_step_s(&g, &m, &cfg, 4, 8192, KernelKind::SnapMlaFp8);
+        assert_eq!(mixed_step_s(&g, &m, &cfg, 4, 8192, 0, 0, KernelKind::SnapMlaFp8), d);
+    }
+
+    #[test]
+    fn spill_cost_is_small_vs_recompute() {
+        let (g, m) = setup();
+        let cfg = DeploymentConfig { dp: 8, tp: 1 };
+        // spilling 8k tokens of latent KV must be much cheaper than
+        // re-prefilling them (the case for page-spill preemption)
+        let spill = spill_s(&g, &m, 8192, KernelKind::SnapMlaFp8);
+        let recompute = prefill_step_s(&g, &m, &cfg, 8192, KernelKind::SnapMlaFp8);
+        assert!(spill * 20.0 < recompute, "{spill} vs {recompute}");
     }
 
     #[test]

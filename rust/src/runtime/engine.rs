@@ -29,6 +29,8 @@ pub struct EngineStats {
     pub decode_tokens: u64,
     pub prefill_calls: u64,
     pub prefill_tokens: u64,
+    pub mixed_steps: u64,
+    pub chunk_tokens: u64,
     pub compiles: u64,
     pub gather_s: f64,
     pub execute_s: f64,
@@ -55,6 +57,14 @@ pub struct DecodeResult {
 pub struct PrefillResult {
     /// per input item: logits after the last prompt token [vocab]
     pub logits: Vec<Vec<f32>>,
+}
+
+#[derive(Debug)]
+pub struct MixedResult {
+    /// per prefill-chunk item: logits after the chunk's last token [vocab]
+    pub chunk_logits: Vec<Vec<f32>>,
+    /// per decode item: next-token logits [vocab]
+    pub decode_logits: Vec<Vec<f32>>,
 }
 
 impl ModelEngine {
@@ -296,6 +306,165 @@ impl ModelEngine {
         Ok(DecodeResult { logits })
     }
 
+    /// One mixed step: interleaved prefill-chunk items (sequence, chunk
+    /// tokens — appended after the sequence's current cache) and decode
+    /// items (sequence, input token) in ONE backend call, so decode never
+    /// waits for a separate prefill launch. Every new token's KV lands in
+    /// `cache` through the same bit-exact append as `decode`.
+    pub fn step_mixed(
+        &mut self,
+        cache: &mut PagedKvCache,
+        chunks: &[(SeqHandle, Vec<i32>)],
+        decodes: &[(SeqHandle, i32)],
+    ) -> anyhow::Result<MixedResult> {
+        anyhow::ensure!(!(chunks.is_empty() && decodes.is_empty()), "empty mixed step");
+        let m = &self.manifest.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let n_items = chunks.len() + decodes.len();
+        let max_ctx = chunks
+            .iter()
+            .map(|(s, t)| cache.tokens_of(*s) + t.len())
+            .chain(decodes.iter().map(|&(s, _)| cache.tokens_of(s) + 1))
+            .max()
+            .unwrap();
+        let max_chunk = chunks.iter().map(|(_, t)| t.len()).max().unwrap_or(1);
+        let bucket = self
+            .manifest
+            .mixed_bucket(self.mode_str, n_items, max_ctx)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no mixed bucket for {n_items} items ctx {max_ctx} ({})",
+                    self.mode_str
+                )
+            })?;
+        let (bb, ss, cc, name) = (bucket.batch, bucket.seq, bucket.t_q, bucket.name.clone());
+        anyhow::ensure!(
+            max_chunk <= cc,
+            "prefill chunk {max_chunk} exceeds the mixed bucket cap {cc}"
+        );
+        let exec = self.ensure_compiled(&name)?;
+
+        // ---- stage inputs: chunk items first, then decode items -------------
+        let t0 = Instant::now();
+        let mut token_ids = vec![0i32; bb * cc];
+        let mut lens = vec![0i32; bb]; // padding rows advance 0 tokens
+        let mut positions = vec![0i32; bb];
+        let item_seq = |i: usize| -> SeqHandle {
+            if i < chunks.len() {
+                chunks[i].0
+            } else {
+                decodes[i - chunks.len()].0
+            }
+        };
+        for (i, (seq, toks)) in chunks.iter().enumerate() {
+            token_ids[i * cc..i * cc + toks.len()].copy_from_slice(toks);
+            lens[i] = toks.len() as i32;
+            positions[i] = cache.tokens_of(*seq) as i32;
+        }
+        for (k, &(seq, tok)) in decodes.iter().enumerate() {
+            let i = chunks.len() + k;
+            token_ids[i * cc] = tok;
+            lens[i] = 1;
+            positions[i] = cache.tokens_of(seq) as i32;
+        }
+        let fp8 = self.mode == CacheMode::Fp8;
+        let mut k_c = vec![0.0f32; l * bb * ss * d_c];
+        let mut k_r = vec![0.0f32; l * bb * ss * d_r];
+        let mut sigma = vec![1.0f32; l * bb * ss];
+        for i in 0..n_items {
+            let seq = item_seq(i);
+            for layer in 0..l {
+                let off = (layer * bb + i) * ss;
+                cache.gather_kernel_view(
+                    seq,
+                    layer,
+                    ss,
+                    &mut k_c[off * d_c..(off + ss) * d_c],
+                    &mut k_r[off * d_r..(off + ss) * d_r],
+                    &mut sigma[off..off + ss],
+                );
+            }
+        }
+        let mut step_bufs: Vec<BufId> = Vec::new();
+        let staged = {
+            let backend = self.backend.as_mut();
+            let bufs = &mut step_bufs;
+            let mut stage = || -> anyhow::Result<()> {
+                bufs.push(backend.upload_i32(&token_ids, &[bb, cc])?);
+                bufs.push(backend.upload_i32(&lens, &[bb])?);
+                bufs.push(backend.upload_i32(&positions, &[bb])?);
+                bufs.push(backend.upload_f32(&k_c, &[l, bb, ss, d_c])?);
+                bufs.push(backend.upload_f32(&k_r, &[l, bb, ss, d_r])?);
+                if fp8 {
+                    bufs.push(backend.upload_f32(&sigma, &[l, bb, ss, 1])?);
+                }
+                Ok(())
+            };
+            stage()
+        };
+        if let Err(e) = staged {
+            for id in step_bufs {
+                self.backend.free(id);
+            }
+            return Err(e);
+        }
+        self.stats.gather_s += t0.elapsed().as_secs_f64();
+
+        // ---- execute --------------------------------------------------------
+        let t1 = Instant::now();
+        let mut args: Vec<BufId> = self.weight_bufs.clone();
+        args.extend(&step_bufs);
+        let result = self.backend.execute(exec, &args);
+        for id in step_bufs {
+            self.backend.free(id);
+        }
+        let outs = result?;
+        self.stats.execute_s += t1.elapsed().as_secs_f64();
+        anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
+
+        // ---- append new KV entries + collect logits -------------------------
+        let t2 = Instant::now();
+        let logits_flat = &outs[0]; // [bb, vocab]
+        let e_kc = &outs[1]; // [l, bb, cc, d_c]
+        let e_kr = &outs[2]; // [l, bb, cc, d_r]
+        let mut all_logits = Vec::with_capacity(n_items);
+        let mut kc_tok = vec![0.0f32; l * d_c];
+        let mut kr_tok = vec![0.0f32; l * d_r];
+        for i in 0..n_items {
+            let seq = item_seq(i);
+            let len = lens[i] as usize;
+            for k in 0..len {
+                for layer in 0..l {
+                    let src = ((layer * bb + i) * cc + k) * d_c;
+                    kc_tok[layer * d_c..(layer + 1) * d_c]
+                        .copy_from_slice(&e_kc[src..src + d_c]);
+                    let src = ((layer * bb + i) * cc + k) * d_r;
+                    kr_tok[layer * d_r..(layer + 1) * d_r]
+                        .copy_from_slice(&e_kr[src..src + d_r]);
+                }
+                if fp8 {
+                    let e_sg = &outs[3]; // [l, bb, cc]
+                    let sg_tok: Vec<f32> =
+                        (0..l).map(|layer| e_sg[(layer * bb + i) * cc + k]).collect();
+                    cache
+                        .append_prequantized(seq, &kc_tok, &kr_tok, &sg_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                } else {
+                    cache
+                        .append_token(seq, &kc_tok, &kr_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                }
+            }
+            all_logits.push(logits_flat[i * vocab..(i + 1) * vocab].to_vec());
+        }
+        self.stats.append_s += t2.elapsed().as_secs_f64();
+        self.stats.mixed_steps += 1;
+        self.stats.chunk_tokens += chunks.iter().map(|(_, t)| t.len() as u64).sum::<u64>();
+        self.stats.decode_tokens += decodes.len() as u64;
+        let decode_logits = all_logits.split_off(chunks.len());
+        Ok(MixedResult { chunk_logits: all_logits, decode_logits })
+    }
+
     /// Prefill `items` = (sequence, prompt tokens). Appends all prompt KV
     /// entries to `cache`; returns last-token logits per item.
     pub fn prefill(
@@ -479,6 +648,65 @@ mod tests {
     fn auto_falls_back_to_sim_without_artifacts() {
         let eng = ModelEngine::auto(Path::new("/definitely/not/there"), CacheMode::Bf16).unwrap();
         assert_eq!(eng.backend_name(), "sim");
+    }
+
+    #[test]
+    fn mixed_step_is_chunk_schedule_invariant() {
+        // the same token stream fed as (3+2)-token chunks or one 5-token
+        // chunk must produce identical cache state and logits — chunked
+        // prefill runs per-token decode math, so chunk boundaries are
+        // numerically irrelevant (preemption/resume correctness rests on
+        // this)
+        let toks = vec![1, 70, 71, 70, 71];
+        let mut eng_a = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache_a = PagedKvCache::new(eng_a.cache_config(8));
+        cache_a.register(1);
+        let r1 = eng_a.step_mixed(&mut cache_a, &[(1, toks[..3].to_vec())], &[]).unwrap();
+        assert_eq!(r1.chunk_logits.len(), 1);
+        let r2 = eng_a.step_mixed(&mut cache_a, &[(1, toks[3..].to_vec())], &[]).unwrap();
+
+        let mut eng_b = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache_b = PagedKvCache::new(eng_b.cache_config(8));
+        cache_b.register(1);
+        let rb = eng_b.step_mixed(&mut cache_b, &[(1, toks.clone())], &[]).unwrap();
+
+        assert_eq!(cache_a.tokens_of(1), 5);
+        assert_eq!(cache_b.tokens_of(1), 5);
+        assert_eq!(r2.chunk_logits[0], rb.chunk_logits[0]);
+
+        // and a follow-up decode sees identical state on both
+        let da = eng_a.decode(&mut cache_a, &[(1, 70)]).unwrap();
+        let db = eng_b.decode(&mut cache_b, &[(1, 70)]).unwrap();
+        assert_eq!(da.logits[0], db.logits[0]);
+    }
+
+    #[test]
+    fn mixed_step_interleaves_chunks_and_decodes() {
+        let mut eng = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache = PagedKvCache::new(eng.cache_config(16));
+        // seq 1 decodes while seq 2 chunk-prefills in the SAME call
+        cache.register(1);
+        eng.step_mixed(&mut cache, &[(1, vec![1, 70, 71, 70])], &[]).unwrap();
+        cache.register(2);
+        let out = eng
+            .step_mixed(&mut cache, &[(2, vec![1, 90, 91])], &[(1, 71)])
+            .unwrap();
+        assert_eq!(out.chunk_logits.len(), 1);
+        assert_eq!(out.decode_logits.len(), 1);
+        assert_eq!(cache.tokens_of(1), 5);
+        assert_eq!(cache.tokens_of(2), 3);
+        assert!(out.decode_logits[0].iter().all(|x| x.is_finite()));
+
+        // the interleaved decode matches a pure decode step from the same
+        // cache state
+        let mut eng2 = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache2 = PagedKvCache::new(eng2.cache_config(16));
+        cache2.register(1);
+        eng2.step_mixed(&mut cache2, &[(1, vec![1, 70, 71, 70])], &[]).unwrap();
+        let pure = eng2.decode(&mut cache2, &[(1, 71)]).unwrap();
+        assert_eq!(out.decode_logits[0], pure.logits[0]);
+        assert_eq!(eng.stats.mixed_steps, 2);
+        assert_eq!(eng.stats.chunk_tokens, 7);
     }
 
     #[test]

@@ -25,6 +25,9 @@ pub struct ModelMeta {
 pub enum ArtifactKind {
     Decode,
     Prefill,
+    /// one step over interleaved prefill-chunk and decode items: `batch`
+    /// items, each advancing 1..=`t_q` tokens against a `seq`-long cache
+    Mixed,
     Kernel,
 }
 
@@ -87,6 +90,7 @@ impl Manifest {
             let kind = match info.get("kind").and_then(|v| v.as_str()) {
                 Some("decode") => ArtifactKind::Decode,
                 Some("prefill") => ArtifactKind::Prefill,
+                Some("mixed") => ArtifactKind::Mixed,
                 Some("kernel") => ArtifactKind::Kernel,
                 other => anyhow::bail!("artifact {name}: bad kind {other:?}"),
             };
@@ -142,6 +146,21 @@ impl Manifest {
                     && a.mode == mode
                     && a.batch >= batch
                     && a.seq >= prompt
+            })
+            .min_by_key(|a| (a.seq, a.batch))
+    }
+
+    /// Smallest mixed-step bucket covering (items, context) in `mode`.
+    /// `context` must cover every item's cache length *after* its new
+    /// tokens; each item may advance at most `t_q` tokens.
+    pub fn mixed_bucket(&self, mode: &str, items: usize, context: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.kind == ArtifactKind::Mixed
+                    && a.mode == mode
+                    && a.batch >= items
+                    && a.seq >= context
             })
             .min_by_key(|a| (a.seq, a.batch))
     }

@@ -23,8 +23,8 @@ pub mod weights;
 pub use backend::{BufId, ExecBackend, ExecId};
 #[cfg(feature = "pjrt")]
 pub use client::{PjrtBackend, Runtime};
-pub use engine::{DecodeResult, KernelArgs, ModelEngine, PrefillResult};
+pub use engine::{DecodeResult, KernelArgs, MixedResult, ModelEngine, PrefillResult};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelMeta};
-pub use sim::SimBackend;
+pub use sim::{SimBackend, MIXED_CHUNK};
 pub use sim_model::SimSpec;
 pub use weights::Weights;

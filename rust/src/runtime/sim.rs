@@ -30,6 +30,10 @@ const DECODE_BUCKETS: [(usize, usize); 8] =
     [(1, 128), (4, 128), (8, 128), (1, 512), (4, 512), (8, 512), (4, 2048), (8, 2048)];
 const PREFILL_BUCKETS: [(usize, usize); 6] =
     [(1, 32), (4, 32), (8, 32), (1, 128), (4, 128), (8, 128)];
+/// Mixed chunked-prefill/decode step buckets mirror the decode shapes; each
+/// item advances at most `MIXED_CHUNK` tokens (one KV page) per step.
+const MIXED_BUCKETS: [(usize, usize); 8] = DECODE_BUCKETS;
+pub const MIXED_CHUNK: usize = 64;
 
 /// Paper-shape kernel sweep (heads, t_q, seq) — mirrors `KERNEL_SWEEP`.
 fn kernel_sweep() -> Vec<(usize, usize, usize)> {
@@ -92,6 +96,21 @@ pub fn sim_manifest(spec: &SimSpec) -> Manifest {
                     seq: prompt,
                     heads: spec.n_heads,
                     t_q: 1,
+                },
+            );
+        }
+        for (batch, seq) in MIXED_BUCKETS {
+            let name = format!("model_{mode}_mixed_b{batch}_s{seq}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    kind: ArtifactKind::Mixed,
+                    mode: mode.to_string(),
+                    batch,
+                    seq,
+                    heads: spec.n_heads,
+                    t_q: MIXED_CHUNK,
                 },
             );
         }
@@ -325,6 +344,112 @@ impl SimBackend {
         Ok(outs)
     }
 
+    /// Mixed step: interleaved prefill-chunk and decode items in ONE
+    /// executable call. Item `b` advances `lens[b]` tokens (1 for decode
+    /// items, up to the chunk cap for prefill chunks) starting at cache
+    /// position `pos[b]`; every new token runs the same per-token
+    /// decode/append math as `exec_decode`, so chunk boundaries never
+    /// change the numerics.
+    fn exec_mixed(&self, exec: &SimExec, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let m = &exec.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let (bb, ss, cc) = (exec.info.batch, exec.info.seq, exec.info.t_q);
+        let fp8 = exec.info.mode == "fp8";
+        let nw = exec.param_order.len();
+        anyhow::ensure!(
+            args.len() == nw + 5 + usize::from(fp8),
+            "sim mixed {}: got {} args, want {}",
+            exec.info.name,
+            args.len(),
+            nw + 5 + usize::from(fp8)
+        );
+        let named = self.named_weights(exec, args)?;
+        let params = SimParams::resolve(m, &named)?;
+
+        let (tok, _) = self.i32_buf(args[nw])?;
+        let (lens, _) = self.i32_buf(args[nw + 1])?;
+        let (pos, _) = self.i32_buf(args[nw + 2])?;
+        let (k_c, _) = self.f32_buf(args[nw + 3])?;
+        let (k_r, _) = self.f32_buf(args[nw + 4])?;
+        let sigma = if fp8 { Some(self.f32_buf(args[nw + 5])?.0) } else { None };
+        anyhow::ensure!(
+            tok.len() == bb * cc && lens.len() == bb && pos.len() == bb,
+            "sim mixed: bad tok/len/pos arity"
+        );
+        anyhow::ensure!(
+            k_c.len() == l * bb * ss * d_c && k_r.len() == l * bb * ss * d_r,
+            "sim mixed: bad cache view size"
+        );
+
+        let mut logits = vec![0.0f32; bb * vocab];
+        let mut new_kc = vec![0.0f32; l * bb * cc * d_c];
+        let mut new_kr = vec![0.0f32; l * bb * cc * d_r];
+        let mut new_sg = vec![1.0f32; l * bb * cc];
+        for b in 0..bb {
+            let len = (lens[b].max(0) as usize).min(cc);
+            if len == 0 {
+                continue; // padding row
+            }
+            let start = pos[b].max(0) as usize;
+            anyhow::ensure!(
+                start + len <= ss,
+                "sim mixed: item {b} reaches {} past bucket {ss}",
+                start + len
+            );
+            let mut cache = DecodeCache {
+                content: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_c[off * d_c..(off + ss) * d_c].to_vec()
+                    })
+                    .collect(),
+                rope: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_r[off * d_r..(off + ss) * d_r].to_vec()
+                    })
+                    .collect(),
+                sigma: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        match sigma {
+                            Some(sg) => sg[off..off + ss].to_vec(),
+                            None => vec![1.0; ss],
+                        }
+                    })
+                    .collect(),
+            };
+            for k in 0..len {
+                let out = sim_model::decode_one(
+                    m,
+                    &params,
+                    self.spec.rope_base,
+                    fp8,
+                    tok[b * cc + k],
+                    start + k,
+                    &mut cache,
+                );
+                for li in 0..l {
+                    let dst = ((li * bb + b) * cc + k) * d_c;
+                    new_kc[dst..dst + d_c]
+                        .copy_from_slice(&out.new_kc[li * d_c..(li + 1) * d_c]);
+                    let dst = ((li * bb + b) * cc + k) * d_r;
+                    new_kr[dst..dst + d_r]
+                        .copy_from_slice(&out.new_kr[li * d_r..(li + 1) * d_r]);
+                    new_sg[(li * bb + b) * cc + k] = out.new_sg[li];
+                }
+                if k == len - 1 {
+                    logits[b * vocab..(b + 1) * vocab].copy_from_slice(&out.logits);
+                }
+            }
+        }
+        let mut outs = vec![logits, new_kc, new_kr];
+        if fp8 {
+            outs.push(new_sg);
+        }
+        Ok(outs)
+    }
+
     /// SnapMLA kernel artifact: the FP8 decode-attention pipeline on
     /// paper-shape operands (already quantized/aligned by the caller).
     fn exec_kernel_snapmla(&self, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
@@ -450,6 +575,7 @@ impl ExecBackend for SimBackend {
         match se.info.kind {
             ArtifactKind::Decode => self.exec_decode(se, args),
             ArtifactKind::Prefill => self.exec_prefill(se, args),
+            ArtifactKind::Mixed => self.exec_mixed(se, args),
             ArtifactKind::Kernel => match se.info.mode.as_str() {
                 "snapmla" => self.exec_kernel_snapmla(args),
                 "flashmla" => self.exec_kernel_flashmla(args),
@@ -472,6 +598,9 @@ mod tests {
         assert_eq!((b.batch, b.seq), (4, 512));
         assert!(m.decode_bucket("fp8", 9, 512).is_none());
         assert_eq!(m.prefill_bucket("bf16", 1, 64).expect("prefill").seq, 128);
+        let mx = m.mixed_bucket("fp8", 3, 400).expect("mixed bucket");
+        assert_eq!((mx.batch, mx.seq, mx.t_q), (4, 512, MIXED_CHUNK));
+        assert!(m.mixed_bucket("fp8", 9, 512).is_none());
         assert_eq!(m.max_context("fp8"), 2048);
         for h in [16, 32, 64, 128] {
             assert!(m.kernel_artifact("snapmla", h, 1, 1024).is_some(), "h{h}");

@@ -7,4 +7,4 @@ pub mod tracegen;
 
 pub use benchsuite::{BenchFamily, BenchTask, Suite};
 pub use evalrun::{run_family, run_suite, EvalConfig, FamilyResult};
-pub use tracegen::{Request, TraceConfig, TraceGen};
+pub use tracegen::{Request, TokenBudget, TraceConfig, TraceGen};

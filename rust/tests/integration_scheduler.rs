@@ -1,0 +1,216 @@
+//! Integration: the mixed chunked-prefill scheduler over the real engine —
+//! FCFS admission, decode non-starvation while a long prompt chunk-prefills,
+//! page-pressure preemption without starvation, and prefix-sharing KV reuse.
+//!
+//! Runs against the offline `SimBackend` (the same serving contract as the
+//! PJRT engine).
+
+use snapmla::coordinator::{SchedPolicy, ServeRequest, Server};
+use snapmla::kvcache::CacheMode;
+use snapmla::runtime::ModelEngine;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn server(pages: usize) -> Server {
+    let engine = ModelEngine::auto(&artifacts_dir(), CacheMode::Fp8).expect("engine");
+    Server::new(engine, pages)
+}
+
+fn motif_prompt(seed: i32, len: usize) -> Vec<i32> {
+    let motif = [70 + seed % 50, 90 + seed % 30, 130];
+    let mut p = vec![1];
+    for i in 0..len - 1 {
+        p.push(motif[i as usize % 3]);
+    }
+    p
+}
+
+fn req(id: u64, prompt_len: usize, max_new: usize) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: motif_prompt(id as i32, prompt_len),
+        max_new_tokens: max_new,
+        temperature: 0.0,
+        seed: id,
+        ignore_eos: true,
+    }
+}
+
+#[test]
+fn fcfs_admission_order() {
+    let mut srv = server(256);
+    for id in [10u64, 11, 12, 13, 14] {
+        srv.submit(req(id, 16 + (id as usize % 3) * 8, 8));
+    }
+    assert_eq!(srv.waiting_ids(), vec![10, 11, 12, 13, 14]);
+    // first step admits; admission order must be exactly submit order
+    srv.step().unwrap();
+    let admitted: Vec<u64> = srv.running_info().iter().map(|&(id, ..)| id).collect();
+    assert!(!admitted.is_empty());
+    assert_eq!(admitted, (10..10 + admitted.len() as u64).collect::<Vec<_>>());
+    // and the queue keeps FCFS order for whoever is still waiting
+    let waiting = srv.waiting_ids();
+    assert_eq!(waiting, (10 + admitted.len() as u64..15).collect::<Vec<_>>());
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 5);
+}
+
+#[test]
+fn decode_stays_busy_while_long_prompt_chunk_prefills() {
+    let mut srv = server(256);
+    // three short requests reach steady decode first
+    for id in 0..3u64 {
+        srv.submit(req(id, 16, 48));
+    }
+    while srv.running_info().len() < 3
+        || srv.running_info().iter().any(|&(_, _, pending, gen)| pending > 0 || gen == 0)
+    {
+        assert!(srv.step().unwrap());
+    }
+    let gen0: usize = srv.running_info().iter().map(|&(.., gen)| gen).sum();
+
+    // a long prompt arrives and chunk-prefills over many steps
+    srv.submit(req(9, 1024, 4));
+    let mixed0 = srv.metrics.mixed_steps;
+    let mut prefill_steps = 0usize;
+    loop {
+        assert!(srv.step().unwrap());
+        let info = srv.running_info();
+        match info.iter().find(|&&(id, ..)| id == 9) {
+            Some(&(_, _, pending, _)) if pending > 0 => prefill_steps += 1,
+            Some(_) => break, // prefill complete
+            None => {
+                if srv.waiting_ids().contains(&9) {
+                    continue; // not admitted yet
+                }
+                break;
+            }
+        }
+    }
+    // the 1024-token prompt takes many chunk steps…
+    assert!(prefill_steps >= 8, "expected chunked prefill, got {prefill_steps} steps");
+    // …and every mixed step in that window still ran a decode batch
+    let mixed_delta = srv.metrics.mixed_steps - mixed0;
+    assert_eq!(
+        srv.metrics.mixed_steps_with_decode,
+        srv.metrics.mixed_steps,
+        "a mixed step ran without decoding"
+    );
+    assert!(mixed_delta as usize >= prefill_steps);
+    // the shorts kept generating throughout (no decode starvation)
+    let gen1: usize = srv
+        .running_info()
+        .iter()
+        .filter(|&&(id, ..)| id != 9)
+        .map(|&(.., gen)| gen)
+        .sum();
+    let finished_gen: usize = srv.finished.iter().map(|o| o.generated.len()).sum();
+    assert!(
+        gen1 + finished_gen >= gen0 + prefill_steps,
+        "decoders starved: {gen0} -> {} over {prefill_steps} prefill steps",
+        gen1 + finished_gen
+    );
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 4);
+}
+
+#[test]
+fn preemption_under_page_pressure_without_starvation() {
+    // 6 pages = 384 tokens; three 80+60 sequences need 420 → page pressure
+    let mut srv = server(6);
+    for id in 0..3u64 {
+        srv.submit(req(id, 80, 60));
+    }
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 3, "every sequence must complete");
+    for o in &srv.finished {
+        assert_eq!(o.generated.len(), 60, "id {} starved", o.id);
+    }
+    assert!(srv.metrics.spills > 0, "this workload must trigger page-spill preemption");
+    assert_eq!(srv.metrics.spills, srv.metrics.restores, "every spill must resume");
+    assert!(srv.metrics.total_preemptions > 0);
+    // all live KV released; only prefix-cache retention may remain
+    assert_eq!(srv.cache.used_pages(), srv.cache.retained_pages());
+    srv.cache.validate().unwrap();
+}
+
+#[test]
+fn prefix_sharing_reuses_pages_and_releases_refcounts() {
+    // two sequences share a 1024-token prompt prefix (16 full pages) and
+    // diverge on the last token
+    let mut prefix = motif_prompt(3, 1024);
+    assert_eq!(prefix.len(), 1024);
+    let mut srv = server(64);
+
+    // run A alone, tracking its peak page usage
+    let mut prompt_a = prefix.clone();
+    prompt_a.push(5);
+    srv.submit(ServeRequest {
+        id: 1,
+        prompt: prompt_a,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 1,
+        ignore_eos: true,
+    });
+    let mut peak_single = 0usize;
+    while srv.pending() > 0 {
+        assert!(srv.step().unwrap());
+        peak_single = peak_single.max(srv.cache.used_pages());
+    }
+    assert!(peak_single >= 16, "a 1025-token sequence spans >= 17 pages, saw {peak_single}");
+    // the prompt's 16 full pages stay retained for reuse
+    assert_eq!(srv.cache.retained_pages(), 16);
+    assert_eq!(srv.cache.used_pages(), 16);
+
+    // B shares the prefix: it must adopt 1024 tokens and allocate only its
+    // divergent tail
+    prefix.push(7);
+    srv.submit(ServeRequest {
+        id: 2,
+        prompt: prefix,
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: 2,
+        ignore_eos: true,
+    });
+    let mut peak_total = 0usize;
+    while srv.pending() > 0 {
+        assert!(srv.step().unwrap());
+        peak_total = peak_total.max(srv.cache.used_pages());
+    }
+    assert_eq!(srv.metrics.prefix_hit_tokens, 1024, "B must adopt the full shared prefix");
+    assert!(
+        peak_total < 2 * peak_single,
+        "sharing must beat 2x single-sequence pages: {peak_total} vs 2x{peak_single}"
+    );
+    assert!(peak_total <= peak_single + 2, "B should add only its divergent tail pages");
+
+    // refcounts: after both finish, only the trie retention remains; then
+    // dropping the prefix cache returns every page
+    assert_eq!(srv.cache.used_pages(), srv.cache.retained_pages());
+    srv.cache.validate().unwrap();
+    srv.cache.drop_prefix_cache();
+    assert_eq!(srv.cache.used_pages(), 0);
+    srv.cache.validate().unwrap();
+}
+
+#[test]
+fn alternating_policy_still_serves() {
+    // the pre-chunking baseline stays available and functional
+    let engine = ModelEngine::auto(&artifacts_dir(), CacheMode::Fp8).expect("engine");
+    let mut srv = Server::with_policy(engine, 64, SchedPolicy::Alternating);
+    for id in 0..4u64 {
+        srv.submit(req(id, 24, 10));
+    }
+    srv.run_to_completion().unwrap();
+    assert_eq!(srv.finished.len(), 4);
+    for o in &srv.finished {
+        assert_eq!(o.generated.len(), 10);
+    }
+    assert_eq!(srv.metrics.mixed_steps, 0, "alternating never runs mixed steps");
+    assert_eq!(srv.cache.used_pages(), 0);
+}

@@ -8,6 +8,8 @@
 use snapmla::coordinator::{FinishReason, Router, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
+use snapmla::util::rng::Rng;
+use snapmla::workload::{TraceConfig, TraceGen};
 use std::path::{Path, PathBuf};
 
 fn artifacts_dir() -> PathBuf {
@@ -103,6 +105,106 @@ fn deterministic_outputs_given_seeds() {
         assert_eq!(x.id, y.id);
         assert_eq!(x.generated, y.generated, "sampling must be reproducible");
     }
+}
+
+#[test]
+fn preempted_and_resumed_run_is_byte_identical() {
+    // page-spill preemption must preserve the generated-token KV state: a
+    // run on a page-starved server (forced preempt/resume churn) emits
+    // byte-identical outputs to an uninterrupted run. Prompts exceed the
+    // monolithic prefill bucket so both runs take the chunked path, whose
+    // per-token math is chunk-schedule-invariant.
+    // each sequence: 3 prompt pages + decode growth into a 4th page
+    // (prompt + 70 tokens crosses the 192-token boundary); all three admit
+    // concurrently into 9 pages, then 3 x 4 = 12 pages of demand forces
+    // page-spill preemption
+    let reqs: Vec<ServeRequest> = (0..3u64)
+        .map(|i| ServeRequest {
+            id: i,
+            prompt: repeat_prompt(i as i32, 130 + 10 * i as usize),
+            max_new_tokens: 70,
+            temperature: 0.8,
+            seed: 100 + i,
+            ignore_eos: true,
+        })
+        .collect();
+    let mut tight = server(CacheMode::Fp8, 9);
+    let mut roomy = server(CacheMode::Fp8, 128);
+    for r in &reqs {
+        tight.submit(r.clone());
+        roomy.submit(r.clone());
+    }
+    tight.run_to_completion().unwrap();
+    roomy.run_to_completion().unwrap();
+    assert!(tight.metrics.spills > 0, "the tight pool must preempt");
+    assert_eq!(tight.metrics.spills, tight.metrics.restores);
+    assert_eq!(roomy.metrics.spills, 0, "the roomy pool must not preempt");
+    let by_id = |srv: &Server| {
+        let mut v: Vec<(u64, Vec<i32>)> =
+            srv.finished.iter().map(|o| (o.id, o.generated.clone())).collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    assert_eq!(
+        by_id(&tight),
+        by_id(&roomy),
+        "preempt/resume changed the generated tokens"
+    );
+}
+
+#[test]
+fn determinism_same_trace_seed_same_outcomes_and_counters() {
+    // two full serving runs over the same tracegen seed must agree on every
+    // outcome and every wall-clock-free metrics counter
+    let run = || {
+        let trace = TraceGen::generate(&TraceConfig {
+            seed: 11,
+            num_requests: 8,
+            mean_interarrival_s: 0.0,
+            prompt_min: 16,
+            prompt_max: 90,
+            out_min: 6,
+            out_max: 18,
+            temperature: 0.7,
+            long_frac: 0.25,
+            long_prompt_min: 192,
+            long_prompt_max: 400,
+            max_total_tokens: 0,
+        });
+        let mut srv = server(CacheMode::Fp8, 32);
+        let mut rng = Rng::new(5);
+        for r in &trace {
+            let mlen = rng.range_usize(2, 6);
+            let motif: Vec<i32> = (0..mlen).map(|_| 64 + rng.below(256) as i32).collect();
+            let mut prompt = vec![1];
+            for i in 0..r.prompt_tokens.saturating_sub(1) {
+                prompt.push(motif[i % mlen]);
+            }
+            srv.submit(ServeRequest {
+                id: r.id,
+                prompt,
+                max_new_tokens: r.max_new_tokens,
+                temperature: r.temperature,
+                seed: r.id,
+                ignore_eos: false,
+            });
+        }
+        srv.run_to_completion().unwrap();
+        let outcomes: Vec<(u64, Vec<i32>, FinishReason)> = srv
+            .finished
+            .iter()
+            .map(|o| (o.id, o.generated.clone(), o.finish))
+            .collect();
+        (outcomes, srv.metrics.counters())
+    };
+    let (fin_a, counters_a) = run();
+    let (fin_b, counters_b) = run();
+    // identical finish ORDER, tokens and reasons — not just identical sets
+    assert_eq!(fin_a, fin_b, "finished outcomes diverged across identical runs");
+    assert_eq!(counters_a, counters_b, "metrics counters diverged across identical runs");
+    // the trace's long-prompt mixture actually exercised chunked prefill
+    let chunks = counters_a.iter().find(|(k, _)| *k == "chunk_tokens").unwrap().1;
+    assert!(chunks > 0, "expected chunked prefill in this trace");
 }
 
 #[test]

@@ -1,0 +1,247 @@
+//! Property suite for the paged KV cache lifecycle: random interleavings of
+//! append / release / spill / restore / prefix publish+adopt / eviction
+//! must never leak a page, never double-free, and always return every
+//! reference to zero once all sharers are gone.
+//!
+//! `PagedKvCache::validate()` is the oracle: it recomputes per-page
+//! reference counts from the sequence maps + trie retention and checks the
+//! free list holds exactly the rc==0 pages (a double-free would surface as
+//! an rc underflow error inside the cache long before).
+
+use snapmla::kvcache::{CacheConfig, CacheMode, PagedKvCache, SpilledKv, PAGE_TOKENS};
+use snapmla::util::prop::{check, Gen};
+use snapmla::util::rng::Rng;
+use std::collections::BTreeMap;
+
+const NSEQ: usize = 4;
+const CAPACITY: usize = 12;
+
+fn cfg() -> CacheConfig {
+    CacheConfig { n_layers: 1, d_c: 8, d_r: 4, mode: CacheMode::Fp8, capacity_pages: CAPACITY }
+}
+
+/// Two prompt "groups" (seq % 2): sequences in a group share a prompt, so
+/// publish/adopt actually exercises cross-sequence page sharing.
+fn group_prompt(seq: u64, len: usize) -> Vec<i32> {
+    let g = (seq % 2) as i32;
+    (0..len as i32).map(|i| g * 10_000 + i).collect()
+}
+
+#[derive(Clone, Debug)]
+struct Ops(Vec<(u8, u8, u8)>);
+
+struct OpsGen {
+    max_ops: usize,
+}
+
+impl Gen for OpsGen {
+    type Value = Ops;
+    fn generate(&self, rng: &mut Rng) -> Ops {
+        let n = rng.range_usize(1, self.max_ops + 1);
+        Ops(
+            (0..n)
+                .map(|_| (rng.below(6) as u8, rng.below(NSEQ) as u8, rng.below(97) as u8))
+                .collect(),
+        )
+    }
+    fn shrink(&self, v: &Ops) -> Vec<Ops> {
+        let mut out = Vec::new();
+        if v.0.len() > 1 {
+            out.push(Ops(v.0[..v.0.len() / 2].to_vec()));
+            out.push(Ops(v.0[..v.0.len() - 1].to_vec()));
+        }
+        out
+    }
+}
+
+/// Interpret one op sequence against a fresh cache; validate after each op.
+fn run_ops(ops: &Ops) -> Result<PagedKvCache, String> {
+    let mut cache = PagedKvCache::new(cfg());
+    let mut live = [false; NSEQ];
+    let mut tokens = [0usize; NSEQ]; // mirrors cache.tokens_of for live seqs
+    let mut parked: BTreeMap<u64, SpilledKv> = BTreeMap::new();
+    for &(kind, s, arg) in &ops.0 {
+        let si = s as usize;
+        let seq = s as u64;
+        match kind {
+            // append up to ~a page of tokens (registering + adopting first)
+            0 | 1 => {
+                if parked.contains_key(&seq) {
+                    continue; // a spilled sequence cannot append
+                }
+                if !live[si] {
+                    cache.register(seq);
+                    live[si] = true;
+                    tokens[si] = cache.adopt_prefix(seq, &group_prompt(seq, 3 * PAGE_TOKENS));
+                }
+                let n = arg as usize % 70 + 1;
+                for _ in 0..n {
+                    if cache.append_token(seq, &[0.5; 8], &[1.0; 4]).is_err() {
+                        break; // pool exhausted: fine, not a leak
+                    }
+                    tokens[si] += 1;
+                }
+                if cache.tokens_of(seq) != tokens[si] {
+                    return Err(format!(
+                        "seq {seq}: cache says {} tokens, model says {}",
+                        cache.tokens_of(seq),
+                        tokens[si]
+                    ));
+                }
+            }
+            // publish the full prompt pages written so far
+            2 => {
+                if live[si] {
+                    let upto = tokens[si].min(3 * PAGE_TOKENS);
+                    let full = (upto / PAGE_TOKENS) * PAGE_TOKENS;
+                    if full > 0 {
+                        cache.publish_prefix(seq, &group_prompt(seq, full));
+                    }
+                }
+            }
+            // release
+            3 => {
+                if live[si] {
+                    cache.release(seq);
+                    live[si] = false;
+                    tokens[si] = 0;
+                }
+                parked.remove(&seq);
+            }
+            // spill
+            4 => {
+                if live[si] {
+                    let sp = cache.spill(seq).map_err(|e| format!("spill: {e:?}"))?;
+                    if sp.tokens() != tokens[si] {
+                        return Err(format!(
+                            "spill lost tokens: {} != {}",
+                            sp.tokens(),
+                            tokens[si]
+                        ));
+                    }
+                    live[si] = false;
+                    parked.insert(seq, sp);
+                }
+            }
+            // restore (only when the pool can hold it, like the scheduler)
+            5 => {
+                if let Some(sp) = parked.remove(&seq) {
+                    if cache.available_pages() >= sp.pages() {
+                        let n = sp.tokens();
+                        cache.restore(seq, sp).map_err(|e| format!("restore: {e:?}"))?;
+                        live[si] = true;
+                        tokens[si] = n;
+                    }
+                    // else: the snapshot is dropped (request abandoned) —
+                    // its pages were never re-allocated, nothing to leak
+                }
+            }
+            _ => unreachable!(),
+        }
+        cache.validate().map_err(|e| format!("after op ({kind},{s},{arg}): {e}"))?;
+        if cache.free_pages() + cache.used_pages() != CAPACITY {
+            return Err("free/used do not partition the pool".into());
+        }
+    }
+    // cleanup: every sharer finishes, the prefix cache drops its retention
+    for s in 0..NSEQ {
+        if live[s] {
+            cache.release(s as u64);
+        }
+    }
+    parked.clear();
+    cache.drop_prefix_cache();
+    cache.validate().map_err(|e| format!("final: {e}"))?;
+    Ok(cache)
+}
+
+#[test]
+fn prop_lifecycle_never_leaks_or_double_frees() {
+    check(0xA11C_0001, 120, &OpsGen { max_ops: 40 }, |ops| {
+        let cache = run_ops(ops)?;
+        if cache.used_pages() != 0 {
+            return Err(format!("leak: {} pages live after full cleanup", cache.used_pages()));
+        }
+        if cache.free_pages() != CAPACITY {
+            return Err("free list incomplete after cleanup".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refcounts_return_to_zero_after_all_sharers_finish() {
+    // heavier on publish/adopt: force the shared-prefix path specifically
+    check(0xA11C_0002, 80, &OpsGen { max_ops: 24 }, |ops| {
+        // prepend a writer+publisher for each group (one 70-token append
+        // fills a page) so later registrations adopt shared pages
+        let mut seeded = vec![(0u8, 0u8, 69u8), (2, 0, 0), (0, 1, 69), (2, 1, 0)];
+        seeded.extend(ops.0.iter().copied());
+        let cache = run_ops(&Ops(seeded))?;
+        if cache.used_pages() != 0 || cache.retained_pages() != 0 {
+            return Err(format!(
+                "references survived cleanup: {} pages, {} retained",
+                cache.used_pages(),
+                cache.retained_pages()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn free_pages_monotone_consistent() {
+    // scripted page-accounting walk: every transition moves free_pages by
+    // exactly the modeled amount
+    let mut cache = PagedKvCache::new(CacheConfig {
+        n_layers: 1,
+        d_c: 8,
+        d_r: 4,
+        mode: CacheMode::Fp8,
+        capacity_pages: 4,
+    });
+    let prompt = group_prompt(0, 65);
+    cache.register(0);
+    assert_eq!(cache.free_pages(), 4);
+    cache.append_token(0, &[0.5; 8], &[1.0; 4]).unwrap();
+    assert_eq!(cache.free_pages(), 3); // first token allocates page 0
+    for _ in 1..64 {
+        cache.append_token(0, &[0.5; 8], &[1.0; 4]).unwrap();
+    }
+    assert_eq!(cache.free_pages(), 3); // page 0 fills without allocation
+    cache.append_token(0, &[0.5; 8], &[1.0; 4]).unwrap();
+    assert_eq!(cache.free_pages(), 2); // boundary token allocates page 1
+
+    cache.publish_prefix(0, &prompt[..64]);
+    assert_eq!(cache.free_pages(), 2); // retention adds a ref, not a page
+    cache.register(2);
+    assert_eq!(cache.adopt_prefix(2, &prompt), 64);
+    assert_eq!(cache.free_pages(), 2); // sharing allocates nothing
+
+    cache.release(0);
+    assert_eq!(cache.free_pages(), 3); // page 1 freed; page 0 still shared
+    cache.release(2);
+    assert_eq!(cache.free_pages(), 3); // page 0 still trie-retained
+    cache.drop_prefix_cache();
+    assert_eq!(cache.free_pages(), 4); // last reference gone
+    cache.validate().unwrap();
+}
+
+#[test]
+fn spill_restore_cycles_preserve_token_counts() {
+    // repeated spill/restore churn keeps the pool exact
+    let mut cache = PagedKvCache::new(cfg());
+    cache.register(7);
+    for _ in 0..100 {
+        cache.append_token(7, &[0.5; 8], &[1.0; 4]).unwrap();
+    }
+    for round in 0..5 {
+        let sp = cache.spill(7).unwrap();
+        assert_eq!(cache.used_pages(), 0, "round {round}");
+        assert_eq!(sp.tokens(), 100);
+        cache.restore(7, sp).unwrap();
+        assert_eq!(cache.tokens_of(7), 100, "round {round}");
+        assert_eq!(cache.used_pages(), 2, "round {round}");
+        cache.validate().unwrap();
+    }
+}
