@@ -320,7 +320,7 @@ fn main() {
         long_frac: 0.25,
         long_prompt_min: 768,
         long_prompt_max: 1280,
-        max_total_tokens: 0,
+        ..TraceConfig::default()
     };
     let trace = TraceGen::generate(&trace_cfg);
     let sched_cfg = SchedulerConfig {

@@ -1,0 +1,156 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare quick-mode bench reports against the
+committed BENCH_*.json headline ratios.
+
+CI runs the bench targets with `--quick` (reduced traces), which write
+reports under target/bench-reports/. This script checks every headline
+ratio that exists in BOTH the committed baseline and the quick report,
+failing the job when any drifts beyond the tolerance (quick-vs-full ratio
+drift is ~5-7% on these workloads; 15% flags real scheduler/router/cost
+regressions without flaking). Metrics absent from the quick report — e.g.
+the DP4 rows `serve_cluster` only runs in full mode — are skipped.
+
+Usage:
+    python3 ci/bench_gate.py             # gate the reports
+    python3 ci/bench_gate.py --selftest  # first prove the gate fails on a
+                                         # perturbed ratio, then gate
+
+Exit code 0 = all gated ratios in tolerance, 1 = regression (or missing
+report/baseline).
+"""
+
+import copy
+import json
+import os
+import sys
+
+TOLERANCE = 0.15
+
+# (committed baseline, quick report, headline ratio paths)
+GATES = [
+    (
+        "BENCH_serve.json",
+        "target/bench-reports/serve_mixed.json",
+        [
+            "speedup.decode_throughput",
+            "speedup.ttft_p95_ratio",
+        ],
+    ),
+    (
+        "BENCH_cluster.json",
+        "target/bench-reports/serve_cluster.json",
+        [
+            f"results.dp{dp}.affinity_vs_sq.{metric}"
+            for dp in (1, 2, 4)
+            for metric in ("peak_pages_ratio", "ttft_p95_ratio", "throughput_ratio")
+        ],
+    ),
+]
+
+
+def lookup(obj, dotted):
+    for key in dotted.split("."):
+        if not isinstance(obj, dict) or key not in obj:
+            return None
+        obj = obj[key]
+    return obj
+
+
+def check(baseline, report, paths, label):
+    """Returns a list of failure strings (empty = pass)."""
+    failures = []
+    gated = 0
+    for path in paths:
+        want = lookup(baseline, path)
+        got = lookup(report, path)
+        if want is None:
+            failures.append(f"{label}: baseline is missing {path}")
+            continue
+        if got is None:
+            print(f"  skip {label}:{path} (absent in quick mode)")
+            continue
+        gated += 1
+        drift = abs(got - want) / abs(want)
+        status = "ok" if drift <= TOLERANCE else "REGRESSION"
+        print(
+            f"  {status:>10} {label}:{path} baseline {want:.4f} "
+            f"quick {got:.4f} drift {drift * 100:.1f}%"
+        )
+        if drift > TOLERANCE:
+            failures.append(
+                f"{label}: {path} drifted {drift * 100:.1f}% "
+                f"(baseline {want:.4f}, quick {got:.4f}, tolerance "
+                f"{TOLERANCE * 100:.0f}%)"
+            )
+    if gated == 0:
+        failures.append(f"{label}: no ratios were gated (all absent?)")
+    return failures
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_gate():
+    failures = []
+    for baseline_path, report_path, paths in GATES:
+        if not os.path.exists(baseline_path):
+            failures.append(f"missing committed baseline {baseline_path}")
+            continue
+        if not os.path.exists(report_path):
+            failures.append(
+                f"missing quick report {report_path} (did the bench run?)"
+            )
+            continue
+        label = os.path.basename(report_path).removesuffix(".json")
+        print(f"gating {report_path} against {baseline_path}:")
+        failures.extend(check(load(baseline_path), load(report_path), paths, label))
+    return failures
+
+
+def selftest():
+    """The gate must demonstrably fail when a headline ratio is perturbed
+    beyond tolerance — run the serve gate against a perturbed copy of its
+    own baseline and require a reported regression."""
+    baseline_path, _, paths = GATES[0]
+    baseline = load(baseline_path)
+    perturbed = copy.deepcopy(baseline)
+    path = paths[0]
+    keys = path.split(".")
+    node = perturbed
+    for k in keys[:-1]:
+        node = node[k]
+    node[keys[-1]] *= 1.0 + 2 * TOLERANCE
+    print(f"selftest: perturbing {path} by +{2 * TOLERANCE * 100:.0f}%…")
+    failures = check(baseline, perturbed, paths, "selftest")
+    if not any("drifted" in f for f in failures):
+        print("selftest FAILED: the gate did not flag a 2x-tolerance drift")
+        return 1
+    # and an untouched copy must pass clean
+    if any("drifted" in f for f in check(baseline, baseline, paths, "selftest")):
+        print("selftest FAILED: the gate flagged an identical report")
+        return 1
+    print("selftest ok: gate fails on perturbation, passes on identity")
+    return 0
+
+
+def main():
+    os.chdir(os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+    if "--selftest" in sys.argv:
+        rc = selftest()
+        if rc != 0:
+            return rc
+        print()
+    failures = run_gate()
+    if failures:
+        print("\nbench-regression gate FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nbench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

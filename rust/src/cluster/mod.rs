@@ -1,13 +1,19 @@
-//! Cluster topology + collective cost model for the DP/TP study (Fig. 1).
+//! The multi-rank cluster layer: DP/TP topology accounting, the collective
+//! cost model, and the real data-parallel serving subsystem.
 //!
-//! The real 8-GPU node is simulated (DESIGN.md §Substitutions): `topology`
-//! enumerates and validates (DP, TP) layouts and accounts per-rank memory;
-//! `collective` prices the TP all-reduce. The Fig. 1 bench combines these
-//! with `perfmodel` to regenerate the paper's throughput comparison; the
-//! serving examples use real multi-`Server` DP via `coordinator::Router`.
+//! `topology` enumerates and validates (DP, TP) layouts of the simulated
+//! 8-GPU node and accounts per-rank memory (weights shard across the TP
+//! group but replicate across DP replicas); `collective` prices the TP
+//! all-reduce that `perfmodel::e2e` folds into step times; `server` is the
+//! working subsystem — `ClusterServer` drives `dp` real `Server` replicas
+//! lock-step behind the prefix-affinity/shortest-queue `Router`. The Fig. 1
+//! bench combines topology + collectives with `perfmodel`; the
+//! `serve_cluster` bench A/Bs the routing policies in virtual time.
 
 pub mod collective;
+pub mod server;
 pub mod topology;
 
 pub use collective::{allreduce_time_s, CollectiveSpec};
+pub use server::ClusterServer;
 pub use topology::{NodeTopology, RankMemory};

@@ -1,0 +1,106 @@
+//! Multi-rank data-parallel serving: `ClusterServer` owns `dp` real
+//! `Server` replicas — each with its own `ModelEngine`, `PagedKvCache` and
+//! mixed chunked-prefill scheduler — and drives them lock-step (one
+//! scheduling step per rank per round). Requests enter through the
+//! `coordinator::Router` policy (shortest-queue or prefix-affinity), so a
+//! shared prompt prefix can land every group member on the rank already
+//! holding those pages.
+
+use crate::anyhow;
+use crate::coordinator::metrics::ClusterMetrics;
+use crate::coordinator::router::{RoutePolicy, Router};
+use crate::coordinator::{RequestOutcome, ServeRequest, Server};
+use crate::kvcache::CacheMode;
+use crate::runtime::ModelEngine;
+use std::time::Instant;
+
+pub struct ClusterServer {
+    pub router: Router,
+    pub metrics: ClusterMetrics,
+}
+
+impl ClusterServer {
+    pub fn new(ranks: Vec<Server>, policy: RoutePolicy) -> ClusterServer {
+        let dp = ranks.len();
+        let metrics = ClusterMetrics::new(dp);
+        ClusterServer { router: Router::with_policy(ranks, policy), metrics }
+    }
+
+    /// A cluster of `dp` offline sim ranks (each its own engine + cache +
+    /// scheduler) — the multi-rank quickstart and test entry point.
+    pub fn sim(
+        dp: usize,
+        capacity_pages: usize,
+        mode: CacheMode,
+        policy: RoutePolicy,
+    ) -> anyhow::Result<ClusterServer> {
+        let ranks = (0..dp)
+            .map(|_| Ok(Server::new(ModelEngine::sim(mode)?, capacity_pages)))
+            .collect::<anyhow::Result<Vec<Server>>>()?;
+        Ok(ClusterServer::new(ranks, policy))
+    }
+
+    pub fn dp(&self) -> usize {
+        self.router.dp()
+    }
+
+    pub fn rank(&self, i: usize) -> &Server {
+        &self.router.ranks[i]
+    }
+
+    pub fn pending(&self) -> usize {
+        self.router.pending()
+    }
+
+    /// Route and enqueue one request; returns the chosen rank.
+    pub fn submit(&mut self, req: ServeRequest) -> usize {
+        let rank = self.router.submit(req);
+        self.metrics.routed[rank] += 1;
+        rank
+    }
+
+    /// One lock-step round: every rank takes one scheduling step, then the
+    /// cluster-wide page allocation is sampled for the peak-pages metric.
+    pub fn step_all(&mut self) -> anyhow::Result<bool> {
+        let any = self.router.step_all()?;
+        let used: usize = self.router.ranks.iter().map(|r| r.cache.used_pages()).sum();
+        self.metrics.observe_pages(used);
+        Ok(any)
+    }
+
+    /// Drive every rank to completion; outcomes are merged and id-sorted.
+    /// Unlike `Router::run_to_completion`, every round goes through
+    /// `step_all` so the peak-pages metric keeps sampling.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestOutcome>> {
+        let t0 = Instant::now();
+        while self.pending() > 0 {
+            if !self.step_all()? && self.pending() > 0 {
+                anyhow::bail!(
+                    "cluster deadlock: {} requests pending over {} ranks",
+                    self.pending(),
+                    self.dp()
+                );
+            }
+        }
+        Ok(self.router.drain_finished(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Total prompt tokens served from prefix caches instead of re-prefilled.
+    pub fn prefix_hit_tokens(&self) -> u64 {
+        self.router.ranks.iter().map(|r| r.metrics.prefix_hit_tokens).sum()
+    }
+
+    /// Wall-clock-free counters for the whole cluster: routing decisions,
+    /// the page peak, and every rank's deterministic serving counters —
+    /// two runs over the same submissions must agree on all of these.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let mut out = vec![("peak_pages_used".to_string(), self.metrics.peak_pages_used as u64)];
+        for (i, r) in self.router.ranks.iter().enumerate() {
+            out.push((format!("rank{i}_routed"), self.metrics.routed[i]));
+            for (k, v) in r.metrics.counters() {
+                out.push((format!("rank{i}_{k}"), v));
+            }
+        }
+        out
+    }
+}

@@ -17,6 +17,14 @@ pub struct RankMemory {
     pub reserve_bytes: f64,
 }
 
+impl RankMemory {
+    /// Whether the layout leaves any KV budget at all (weights + reserve
+    /// fit the device); a layout that does not fit serves zero sequences.
+    pub fn fits(&self) -> bool {
+        self.kv_budget_bytes > 0.0
+    }
+}
+
 impl NodeTopology {
     pub fn new(gpus: usize, dp: usize, tp: usize) -> anyhow::Result<NodeTopology> {
         anyhow::ensure!(dp * tp == gpus, "DP{dp} x TP{tp} != {gpus} GPUs");
@@ -32,10 +40,17 @@ impl NodeTopology {
             .collect()
     }
 
-    /// Per-GPU memory budget under this layout.
+    /// Per-GPU memory budget under this layout. Weights shard across the
+    /// **TP group only** and replicate across DP replicas (each replica
+    /// serves independently, so it holds a full copy of its shard) — the
+    /// earlier `total_params / gpus` accounting undercounted per-rank
+    /// weight bytes at DP > 1 and inflated the Fig. 1 capacity of DP-heavy
+    /// layouts. Expert-parallel spreading (which `perfmodel::e2e` assumes
+    /// for its throughput model) would relax this; the topology module
+    /// prices the plain DP×TP layout.
     pub fn rank_memory(&self, gpu: &GpuSpec, model: &ModelSpec) -> RankMemory {
         let reserve = 8e9;
-        let weight = model.total_params / self.gpus as f64;
+        let weight = model.total_params / self.config.tp as f64;
         RankMemory {
             weight_bytes: weight,
             kv_budget_bytes: (gpu.hbm_bytes - weight - reserve).max(0.0),
@@ -86,23 +101,42 @@ mod tests {
     fn fp8_cache_doubles_capacity() {
         let g = GpuSpec::h20();
         let m = ModelSpec::deepseek_v31();
+        let mut compared = 0;
         for t in NodeTopology::enumerate(8) {
+            if !t.rank_memory(&g, &m).fits() {
+                continue; // weights alone exceed HBM under this layout
+            }
+            compared += 1;
             let c8 = t.max_sequences(&g, &m, 65_536, KernelKind::SnapMlaFp8);
             let c16 = t.max_sequences(&g, &m, 65_536, KernelKind::FlashMlaBf16);
             assert!(c8 as f64 >= 1.6 * c16.max(1) as f64, "{:?}", t.config);
         }
+        assert!(compared >= 1, "no layout fits the model at all");
     }
 
     #[test]
-    fn dp_scales_total_capacity() {
+    fn weight_replication_pins_dp8_vs_tp8_capacity_ordering() {
         let g = GpuSpec::h20();
-        let m = ModelSpec::deepseek_v31();
         let dp8 = NodeTopology::new(8, 8, 1).unwrap();
         let tp8 = NodeTopology::new(8, 1, 8).unwrap();
-        // DP8 holds 8 independent KV pools; TP8 replicates the cache
+
+        // DeepSeek-671B: a DP8 replica must hold the FULL weights — they do
+        // not fit a 141 GB part, so DP8 serves zero sequences while TP8
+        // (weights sharded 8-ways, cache replicated) still serves plenty.
+        // The old `/ gpus` accounting got this exactly backwards.
+        let m = ModelSpec::deepseek_v31();
+        assert!(!dp8.rank_memory(&g, &m).fits());
+        assert_eq!(dp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8), 0);
+        assert!(tp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8) > 0);
+
+        // A model small enough to replicate per rank flips the ordering:
+        // DP8 holds 8 independent KV pools while TP8 replicates the latent
+        // cache across all 8 GPUs — DP wins once weights fit.
+        let small = ModelSpec { total_params: 60e9, ..m };
+        assert!(dp8.rank_memory(&g, &small).fits());
         assert!(
-            dp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8)
-                > 4 * tp8.max_sequences(&g, &m, 32_768, KernelKind::SnapMlaFp8)
+            dp8.max_sequences(&g, &small, 32_768, KernelKind::SnapMlaFp8)
+                > 4 * tp8.max_sequences(&g, &small, 32_768, KernelKind::SnapMlaFp8)
         );
     }
 }

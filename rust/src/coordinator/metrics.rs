@@ -161,9 +161,43 @@ impl ServerMetrics {
     }
 }
 
+/// Cluster-level aggregates no single rank can observe: where requests were
+/// routed and the peak of total page allocation across all ranks (the
+/// capacity metric prefix-affinity routing is meant to shrink — shared
+/// prefixes held once per cluster instead of once per rank).
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// requests routed to each rank
+    pub routed: Vec<u64>,
+    /// max over lock-step rounds of Σ per-rank allocated pages
+    pub peak_pages_used: usize,
+}
+
+impl ClusterMetrics {
+    pub fn new(dp: usize) -> ClusterMetrics {
+        ClusterMetrics { routed: vec![0; dp], peak_pages_used: 0 }
+    }
+
+    /// Fold one round's total allocated-page count into the peak.
+    pub fn observe_pages(&mut self, used: usize) {
+        self.peak_pages_used = self.peak_pages_used.max(used);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cluster_metrics_track_peak_and_routing() {
+        let mut cm = ClusterMetrics::new(2);
+        cm.observe_pages(10);
+        cm.observe_pages(25);
+        cm.observe_pages(7);
+        cm.routed[1] += 3;
+        assert_eq!(cm.peak_pages_used, 25);
+        assert_eq!(cm.routed, vec![0, 3]);
+    }
 
     #[test]
     fn stopwatch_counts_tokens() {

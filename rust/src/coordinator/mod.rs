@@ -15,9 +15,9 @@ pub mod scheduler;
 pub mod sequence;
 pub mod server;
 
-pub use metrics::{RequestMetrics, ServerMetrics};
+pub use metrics::{ClusterMetrics, RequestMetrics, ServerMetrics};
 pub use request::{FinishReason, RequestOutcome, ServeRequest};
-pub use router::Router;
+pub use router::{RankLoad, RoutePolicy, Router};
 pub use scheduler::{Action, PrefillChunk, SchedPolicy, Scheduler, SchedulerConfig};
 pub use sequence::{SeqPhase, Sequence};
 pub use server::Server;

@@ -1,14 +1,37 @@
-//! DP request router: spread requests over data-parallel ranks by
-//! outstanding-token load with KV-capacity awareness (vllm-router-style
-//! shortest-queue policy).
+//! DP request router: spread requests over data-parallel ranks.
 //!
-//! The routing *policy* is a pure function (`pick_rank`) so it can be tested
-//! and reused by the Fig. 1 simulator; `Router` wires it to real `Server`
-//! ranks for the multi-rank serving examples.
+//! Two policies:
+//!
+//! * **shortest queue** (the vllm-router-style baseline): outstanding-token
+//!   load with KV-capacity awareness,
+//! * **prefix affinity**: consult each rank's prefix trie
+//!   (`kvcache::prefix`) so requests sharing a prompt prefix land on the
+//!   rank already holding those pages — the rank prefills only the unshared
+//!   tail and the shared pages exist once per cluster instead of once per
+//!   rank. A queue-imbalance window bounds how far affinity may override
+//!   load balance, and when every rank is saturated the fallback prefers
+//!   spill-capable ranks (largest reclaimable headroom) over raw queue
+//!   depth.
+//!
+//! The routing *policies* are pure functions (`pick_rank`,
+//! `pick_rank_affinity`) so they can be tested and reused by the
+//! virtual-time cluster bench; `Router` wires them to real `Server` ranks
+//! for the multi-rank serving path (`cluster::ClusterServer`).
 
 use super::request::{RequestOutcome, ServeRequest};
 use super::server::Server;
 use crate::anyhow;
+use crate::kvcache::PAGE_TOKENS;
+use std::cmp::Reverse;
+
+/// Routing policy for a DP rank set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// capacity-aware shortest queue (the baseline)
+    ShortestQueue,
+    /// prefix-affinity first, shortest queue as fallback
+    PrefixAffinity,
+}
 
 /// Snapshot of one rank's load.
 #[derive(Clone, Copy, Debug)]
@@ -19,7 +42,19 @@ pub struct RankLoad {
     pub free_pages: usize,
     /// pages the incoming request would need
     pub pages_needed: usize,
+    /// prompt tokens this rank's prefix cache already holds for the request
+    pub prefix_hit_tokens: usize,
+    /// trie-retained pages reclaimable on demand (spill-free headroom)
+    pub evictable_pages: usize,
 }
+
+/// Queue-imbalance guard for affinity routing: a prefix hit may pull a
+/// request onto a busier rank only while that rank's outstanding tokens stay
+/// within this multiple of the hit tokens above the least-loaded feasible
+/// rank (re-prefilling `hit` tokens elsewhere costs about one engine pass
+/// per token; queued tokens drain batched, so a few tokens of queue depth
+/// per hit token is a good trade).
+pub const AFFINITY_IMBALANCE_WINDOW: usize = 4;
 
 /// Shortest-queue with capacity awareness: prefer ranks that can hold the
 /// request's KV immediately; among those, least outstanding tokens.
@@ -41,33 +76,94 @@ pub fn pick_rank(loads: &[RankLoad]) -> usize {
     })
 }
 
+/// Prefix-affinity routing. Feasibility counts evictable prefix-cache pages
+/// as headroom and discounts the pages a hit would adopt; among feasible
+/// ranks the largest in-window prefix hit wins, else the capacity-aware
+/// shortest queue; with every rank saturated, rank pressure rebalances
+/// toward the most spill-capable rank.
+pub fn pick_rank_affinity(loads: &[RankLoad], page_tokens: usize) -> usize {
+    if loads.is_empty() {
+        return 0;
+    }
+    let eff_needed =
+        |l: &RankLoad| l.pages_needed.saturating_sub(l.prefix_hit_tokens / page_tokens);
+    let feasible: Vec<usize> = (0..loads.len())
+        .filter(|&i| loads[i].free_pages + loads[i].evictable_pages >= eff_needed(&loads[i]))
+        .collect();
+    if feasible.is_empty() {
+        // all ranks saturated: prefer the most spill-capable rank (largest
+        // reclaimable headroom), then the shortest queue
+        return (0..loads.len())
+            .min_by_key(|&i| {
+                let l = &loads[i];
+                (Reverse(l.free_pages + l.evictable_pages), l.tokens, i)
+            })
+            .unwrap();
+    }
+    let min_tokens = feasible.iter().map(|&i| loads[i].tokens).min().unwrap();
+    let hit = feasible
+        .iter()
+        .copied()
+        .filter(|&i| {
+            let l = &loads[i];
+            l.prefix_hit_tokens > 0
+                && l.tokens <= min_tokens + AFFINITY_IMBALANCE_WINDOW * l.prefix_hit_tokens
+        })
+        .min_by_key(|&i| (Reverse(loads[i].prefix_hit_tokens), loads[i].tokens, i));
+    if let Some(i) = hit {
+        return i;
+    }
+    feasible.into_iter().min_by_key(|i| (loads[*i].tokens, *i)).unwrap()
+}
+
 pub struct Router {
     pub ranks: Vec<Server>,
+    pub policy: RoutePolicy,
 }
 
 impl Router {
+    /// Shortest-queue router (the historical default).
     pub fn new(ranks: Vec<Server>) -> Router {
+        Router::with_policy(ranks, RoutePolicy::ShortestQueue)
+    }
+
+    pub fn with_policy(ranks: Vec<Server>, policy: RoutePolicy) -> Router {
         assert!(!ranks.is_empty());
-        Router { ranks }
+        Router { ranks, policy }
     }
 
     pub fn dp(&self) -> usize {
         self.ranks.len()
     }
 
-    pub fn submit(&mut self, req: ServeRequest) -> usize {
-        let pages_needed =
-            (req.prompt.len() + req.max_new_tokens).div_ceil(crate::kvcache::PAGE_TOKENS);
-        let loads: Vec<RankLoad> = self
-            .ranks
+    /// Load snapshot of every rank for `req` (the policy input). The trie
+    /// probes (prefix match + evictable scan) cost O(trie) per rank, so
+    /// they run only when the affinity policy will actually read them.
+    pub fn loads(&self, req: &ServeRequest) -> Vec<RankLoad> {
+        let pages_needed = (req.prompt.len() + req.max_new_tokens).div_ceil(PAGE_TOKENS);
+        let probe = self.policy == RoutePolicy::PrefixAffinity;
+        self.ranks
             .iter()
-            .map(|r| RankLoad {
-                tokens: r.load_tokens(),
-                free_pages: r.cache.free_pages(),
-                pages_needed,
+            .map(|r| {
+                let prefix_hit_tokens =
+                    if probe { r.cache.prefix_match_tokens(&req.prompt) } else { 0 };
+                RankLoad {
+                    tokens: r.load_tokens(),
+                    free_pages: r.cache.free_pages(),
+                    pages_needed,
+                    prefix_hit_tokens,
+                    evictable_pages: if probe { r.cache.evictable_pages() } else { 0 },
+                }
             })
-            .collect();
-        let rank = pick_rank(&loads);
+            .collect()
+    }
+
+    pub fn submit(&mut self, req: ServeRequest) -> usize {
+        let loads = self.loads(&req);
+        let rank = match self.policy {
+            RoutePolicy::ShortestQueue => pick_rank(&loads),
+            RoutePolicy::PrefixAffinity => pick_rank_affinity(&loads, PAGE_TOKENS),
+        };
         self.ranks[rank].submit(req);
         rank
     }
@@ -93,14 +189,19 @@ impl Router {
                 anyhow::bail!("router deadlock");
             }
         }
-        let wall = t0.elapsed().as_secs_f64();
+        Ok(self.drain_finished(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Charge `wall_s` to every rank and drain all finished outcomes,
+    /// merged id-sorted (shared by this and `cluster::ClusterServer`).
+    pub fn drain_finished(&mut self, wall_s: f64) -> Vec<RequestOutcome> {
         let mut outcomes = Vec::new();
         for r in &mut self.ranks {
-            r.metrics.wall_s += wall;
+            r.metrics.wall_s += wall_s;
             outcomes.extend(r.finished.drain(..));
         }
         outcomes.sort_by_key(|o| o.id);
-        Ok(outcomes)
+        outcomes
     }
 }
 
@@ -109,8 +210,26 @@ mod tests {
     use super::*;
 
     fn load(tokens: usize, free: usize, need: usize) -> RankLoad {
-        RankLoad { tokens, free_pages: free, pages_needed: need }
+        RankLoad {
+            tokens,
+            free_pages: free,
+            pages_needed: need,
+            prefix_hit_tokens: 0,
+            evictable_pages: 0,
+        }
     }
+
+    fn load_hit(tokens: usize, free: usize, need: usize, hit: usize, evict: usize) -> RankLoad {
+        RankLoad {
+            tokens,
+            free_pages: free,
+            pages_needed: need,
+            prefix_hit_tokens: hit,
+            evictable_pages: evict,
+        }
+    }
+
+    // --- shortest queue -----------------------------------------------------
 
     #[test]
     fn picks_least_loaded_feasible() {
@@ -129,5 +248,77 @@ mod tests {
     fn ties_break_deterministically() {
         let loads = [load(10, 5, 1), load(10, 5, 1)];
         assert_eq!(pick_rank(&loads), 0);
+    }
+
+    #[test]
+    fn empty_feasible_set_saturated_ties_and_degenerate_input() {
+        // empty feasible set: every rank lacks pages → global shortest queue
+        let loads = [load(30, 0, 4), load(30, 3, 4), load(29, 0, 4)];
+        assert_eq!(pick_rank(&loads), 2);
+        // saturated tie on tokens → lowest index wins
+        let loads = [load(30, 0, 4), load(30, 1, 4)];
+        assert_eq!(pick_rank(&loads), 0);
+        // no ranks at all → 0 (callers assert non-empty rank sets)
+        assert_eq!(pick_rank(&[]), 0);
+        assert_eq!(pick_rank_affinity(&[], 64), 0);
+        // single saturated rank still routes somewhere
+        assert_eq!(pick_rank(&[load(10, 0, 5)]), 0);
+    }
+
+    // --- prefix affinity ----------------------------------------------------
+
+    #[test]
+    fn affinity_prefers_prefix_hit_over_shorter_queue() {
+        // rank 1 holds a 256-token prefix; rank 0 is less loaded
+        let loads = [load(10, 50, 10), load_hit(100, 50, 10, 256, 0)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
+        // no hits anywhere → capacity-aware shortest queue
+        let loads = [load(10, 50, 10), load(100, 50, 10)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 0);
+    }
+
+    #[test]
+    fn affinity_imbalance_window_restores_load_balance() {
+        // the hit rank's queue exceeds min + 4×hit → ignore the hit
+        let loads = [load(0, 50, 10), load_hit(300, 50, 10, 64, 0)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 0);
+        // just inside the window → affinity wins
+        let loads = [load(0, 50, 10), load_hit(256, 50, 10, 64, 0)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
+    }
+
+    #[test]
+    fn affinity_largest_hit_wins_then_tokens_then_index() {
+        let loads = [
+            load_hit(20, 50, 10, 128, 0),
+            load_hit(10, 50, 10, 256, 0),
+            load_hit(30, 50, 10, 256, 0),
+        ];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
+        let loads = [load_hit(10, 50, 10, 256, 0), load_hit(10, 50, 10, 256, 0)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 0);
+    }
+
+    #[test]
+    fn affinity_feasibility_discounts_adopted_pages_and_counts_evictable() {
+        // 10 pages needed, 4 free: infeasible alone, but a 256-token hit
+        // adopts 4 pages and 2 are evictable → 10 - 4 = 6 ≤ 4 + 2
+        let loads = [load(5, 5, 10), load_hit(50, 4, 10, 256, 2)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
+        // without the hit the same rank is infeasible and rank 0 also lacks
+        // pages → saturated fallback kicks in
+        let loads = [load(5, 5, 10), load(50, 4, 10)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 0);
+    }
+
+    #[test]
+    fn affinity_saturated_prefers_spill_capable_rank() {
+        // nobody fits; rank 1 has the most reclaimable headroom (3+4) even
+        // though rank 0 has the shortest queue
+        let loads = [load(10, 1, 20), load_hit(80, 3, 20, 0, 4), load_hit(40, 2, 20, 0, 1)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
+        // headroom tie → shortest queue, then index
+        let loads = [load_hit(80, 3, 20, 0, 4), load_hit(40, 5, 20, 0, 2)];
+        assert_eq!(pick_rank_affinity(&loads, 64), 1);
     }
 }

@@ -1,5 +1,7 @@
 //! The serving loop: one DP rank = one engine + one paged cache + the
-//! continuous-batching scheduler.
+//! continuous-batching scheduler. Ranks compose into a data-parallel
+//! cluster through `cluster::ClusterServer`, which routes requests by
+//! prefix affinity against this cache's trie and drives ranks lock-step.
 //!
 //! Default policy is **mixed chunked-prefill**: every step runs the full
 //! decode batch plus prefill chunks in ONE engine call, so a long prompt

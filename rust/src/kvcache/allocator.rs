@@ -120,7 +120,7 @@ impl PageAllocator {
     }
 
     /// Replace slot `idx` of `seq`'s table with `new_page` (already
-    /// allocated via [`alloc_unmapped`]); drops the old page's reference and
+    /// allocated via [`Self::alloc_unmapped`]); drops the old page's reference and
     /// returns `Some(old)` when the old page was freed by this.
     pub fn replace(
         &mut self,

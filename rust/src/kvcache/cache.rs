@@ -147,18 +147,34 @@ impl PagedKvCache {
         self.alloc.used_pages()
     }
 
-    /// Pages obtainable without touching live sequences: the free list plus
-    /// trie-retained pages no sequence references (evictable on demand).
-    /// This is the scheduler's admission/backpressure signal — prefix-cache
-    /// retention must not masquerade as pressure.
-    pub fn available_pages(&self) -> usize {
+    /// Trie-retained pages no live sequence references — reclaimable on
+    /// demand by LRU eviction. The DP router reads this as a rank's
+    /// spill-free headroom beyond the free list.
+    pub fn evictable_pages(&self) -> usize {
         let mut evictable = 0usize;
         self.trie.for_each_page(|p| {
             if self.alloc.ref_count(p) == 1 {
                 evictable += 1;
             }
         });
-        self.alloc.free_pages() + evictable
+        evictable
+    }
+
+    /// Pages obtainable without touching live sequences: the free list plus
+    /// trie-retained pages no sequence references (evictable on demand).
+    /// This is the scheduler's admission/backpressure signal — prefix-cache
+    /// retention must not masquerade as pressure.
+    pub fn available_pages(&self) -> usize {
+        self.alloc.free_pages() + self.evictable_pages()
+    }
+
+    /// Prompt tokens a new sequence could adopt from the prefix cache right
+    /// now (full published pages of the longest matching prefix, always
+    /// leaving ≥1 token to prefill — the same limit `adopt_prefix` applies).
+    /// Read-only: routing probes must not refresh trie recency.
+    pub fn prefix_match_tokens(&self, prompt: &[i32]) -> usize {
+        let limit = prompt.len().saturating_sub(1);
+        self.trie.peek_match_pages(prompt, limit) * PAGE_TOKENS
     }
 
     /// Pages currently retained by the prefix cache.
@@ -763,6 +779,32 @@ mod tests {
         assert_eq!(cache.used_pages(), 2);
         cache.drop_prefix_cache();
         assert_eq!(cache.used_pages(), 0);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn prefix_match_probe_agrees_with_adopt() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..130).collect(); // 2 full pages + 2 tokens
+        cache.register(1);
+        fill_tokens(&mut cache, 1, prompt.len(), 31);
+        assert_eq!(cache.prefix_match_tokens(&prompt), 0);
+        cache.publish_prefix(1, &prompt);
+        // probe reports exactly what adopt_prefix would take…
+        assert_eq!(cache.prefix_match_tokens(&prompt), 2 * PAGE_TOKENS);
+        // …including the ≥1-token-to-prefill cap on an exact-page prompt
+        let exact: Vec<i32> = (0..2 * PAGE_TOKENS as i32).collect();
+        assert_eq!(cache.prefix_match_tokens(&exact), PAGE_TOKENS);
+        cache.register(2);
+        assert_eq!(cache.adopt_prefix(2, &prompt), 2 * PAGE_TOKENS);
+        // publisher live + adopter live: nothing evictable; after both
+        // release, the retained pages become reclaimable headroom
+        assert_eq!(cache.evictable_pages(), 0);
+        cache.release(1);
+        cache.release(2);
+        assert_eq!(cache.evictable_pages(), 2);
+        assert_eq!(cache.available_pages(), c.capacity_pages);
         cache.validate().unwrap();
     }
 

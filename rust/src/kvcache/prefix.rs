@@ -98,6 +98,28 @@ impl PrefixTrie {
         matched
     }
 
+    /// Read-only probe: how many full pages of `tokens` (considering at most
+    /// `max_tokens`) the trie already holds. Unlike [`PrefixTrie::lookup`]
+    /// this touches no LRU state — the DP router calls it on every candidate
+    /// rank per request, and a probe that refreshed recency would let mere
+    /// routing queries pin prefixes that no sequence ever adopted.
+    pub fn peek_match_pages(&self, tokens: &[i32], max_tokens: usize) -> usize {
+        let full_pages = tokens.len().min(max_tokens) / PAGE_TOKENS;
+        let mut matched = 0;
+        let mut level = None;
+        for p in 0..full_pages {
+            let key = &tokens[p * PAGE_TOKENS..(p + 1) * PAGE_TOKENS];
+            let next = match level {
+                None => self.roots.get(key).copied(),
+                Some(id) => self.node(id).children.get(key).copied(),
+            };
+            let Some(id) = next else { break };
+            matched += 1;
+            level = Some(id);
+        }
+        matched
+    }
+
     /// Publish the full pages of `tokens` (a prompt prefix) backed by the
     /// sequence's physical `pages` (page i holds tokens `[64i, 64(i+1))`).
     /// Existing levels are kept (first publisher wins); returns the physical
@@ -271,6 +293,24 @@ mod tests {
         assert_eq!(t.evict_lru(), Some(1));
         assert_eq!(t.evict_lru(), None);
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn peek_matches_without_touching_lru() {
+        let mut t = PrefixTrie::new();
+        let a = toks(2 * PAGE_TOKENS, 0);
+        let b = toks(PAGE_TOKENS, 5000);
+        t.insert(&a, &[1, 2]);
+        t.insert(&b, &[3]); // b is now the most recently used
+        assert_eq!(t.peek_match_pages(&a, a.len()), 2);
+        assert_eq!(t.peek_match_pages(&a, PAGE_TOKENS + 5), 1);
+        assert_eq!(t.peek_match_pages(&b, b.len()), 1);
+        assert_eq!(t.peek_match_pages(&toks(PAGE_TOKENS, 9000), PAGE_TOKENS), 0);
+        // peeking at `a` (older) must NOT refresh it: LRU eviction still
+        // removes a's leaf first, then a's root, then b
+        assert_eq!(t.evict_lru(), Some(2));
+        assert_eq!(t.evict_lru(), Some(1));
+        assert_eq!(t.evict_lru(), Some(3));
     }
 
     #[test]

@@ -2,8 +2,12 @@
 //!
 //! Subcommands:
 //!   info                         — artifact/model summary
-//!   serve   [--mode fp8|bf16] [--requests N] [--dp N] [--pages N] …
-//!                                — serve a synthetic trace, print metrics
+//!   serve   [--mode fp8|bf16] [--requests N] [--dp N] [--pages N]
+//!           [--route affinity|shortest] [--shared-frac F] [--shared-groups N]
+//!           [--shared-tokens N] …
+//!                                — serve a synthetic trace through the DP
+//!                                  cluster (prefix-affinity routing by
+//!                                  default), print per-rank metrics
 //!   fidelity [--ctx N] [--layers N]
 //!                                — Table-3 config fidelity study (rust sim)
 //!   perf    [--model deepseek|longcat]
@@ -16,8 +20,8 @@
 //! `artifacts/` dir the same commands drive the AOT HLO via PJRT.
 
 use snapmla::anyhow;
-use snapmla::cluster::NodeTopology;
-use snapmla::coordinator::{Router, ServeRequest, Server};
+use snapmla::cluster::{ClusterServer, NodeTopology};
+use snapmla::coordinator::{RoutePolicy, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::mla::fidelity::{build_stimuli, layerwise_errors};
 use snapmla::mla::quant_configs::QuantConfig;
@@ -103,26 +107,47 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         long_frac: args.f64_or("long-frac", 0.0),
         long_prompt_min: args.usize_or("long-prompt-min", 512),
         long_prompt_max: args.usize_or("long-prompt-max", 1024),
+        shared_prefix_frac: args.f64_or("shared-frac", 0.0),
+        shared_prefix_groups: args.usize_or("shared-groups", 4),
+        shared_prefix_tokens: args.usize_or("shared-tokens", 256),
         max_total_tokens: args.usize_or("token-budget", 0),
     });
+    let policy = match args.get_or("route", "affinity") {
+        "shortest" => RoutePolicy::ShortestQueue,
+        "affinity" => RoutePolicy::PrefixAffinity,
+        other => anyhow::bail!("--route must be 'affinity' or 'shortest', got '{other}'"),
+    };
 
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)
         .map(|_| Ok(Server::new(ModelEngine::auto(&dir, mode)?, pages)))
         .collect();
-    let mut router = Router::new(ranks?);
+    let mut cluster = ClusterServer::new(ranks?, policy);
     let mut rng = Rng::new(1234);
     for r in &trace {
-        let prompt = synth_prompt(&mut rng, r.prompt_tokens);
-        router.submit(ServeRequest {
+        let prompt = synth_prompt(&mut rng, r);
+        cluster.submit(ServeRequest {
             id: r.id,
             prompt,
             max_new_tokens: r.max_new_tokens,
             temperature: r.temperature,
             seed: r.id, ignore_eos: false });
+        // drive the cluster while the queue fills: affinity routing probes
+        // prefixes PUBLISHED by earlier requests, so routing the whole
+        // trace up front would leave every trie empty and degenerate to
+        // shortest-queue
+        cluster.step_all()?;
     }
-    let outcomes = router.run_to_completion()?;
-    println!("completed {} requests", outcomes.len());
-    for (i, rank) in router.ranks.iter().enumerate() {
+    let outcomes = cluster.run_to_completion()?;
+    println!(
+        "completed {} requests over {} rank(s) ({policy:?}): routed {:?}, \
+         peak pages {}, prefix-hit tokens {}",
+        outcomes.len(),
+        cluster.dp(),
+        cluster.metrics.routed,
+        cluster.metrics.peak_pages_used,
+        cluster.prefix_hit_tokens()
+    );
+    for (i, rank) in cluster.router.ranks.iter().enumerate() {
         println!("{}", rank.metrics.render(&format!("rank {i} ({mode:?})")));
         let s = &rank.engine.stats;
         println!(
@@ -133,13 +158,23 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn synth_prompt(rng: &mut Rng, len: usize) -> Vec<i32> {
-    // repeat-family prompt in the synthetic token language
+fn synth_prompt(rng: &mut Rng, r: &snapmla::workload::Request) -> Vec<i32> {
+    // repeat-family prompt in the synthetic token language; requests in the
+    // same shared-prefix group start with an identical group-seeded prefix
+    // so the prefix trie (and affinity routing) can actually share pages
+    let mut p = vec![1];
+    if let Some(g) = r.prefix_group {
+        let mut grng = Rng::new(0xC1A5_7E50 + g as u64);
+        let mlen = grng.range_usize(2, 6);
+        let motif: Vec<i32> = (0..mlen).map(|_| 64 + grng.below(256) as i32).collect();
+        for i in 0..r.prefix_tokens {
+            p.push(motif[i % mlen]);
+        }
+    }
     let mlen = rng.range_usize(2, 6);
     let motif: Vec<i32> = (0..mlen).map(|_| 64 + rng.below(256) as i32).collect();
-    let mut p = vec![1];
-    for i in 0..len.saturating_sub(1) {
-        p.push(motif[i % mlen]);
+    while p.len() < r.prompt_tokens {
+        p.push(motif[(p.len() - 1) % mlen]);
     }
     p
 }

@@ -15,6 +15,30 @@
 
 use super::gpu::GpuSpec;
 use super::kernel::{kernel_time_s, KernelKind, KernelShape};
+use crate::cluster::collective::{allreduce_time_s, CollectiveSpec};
+
+/// Per-collective launch/sync latency (one all-reduce per layer).
+const COLLECTIVE_LATENCY_S: f64 = 5.0e-6;
+
+/// Hidden-state bytes one token row's per-layer all-reduce moves (~d_model
+/// in bf16).
+fn hidden_bytes_per_token(model: &ModelSpec) -> f64 {
+    (model.d_c * model.heads / 64) as f64 * 2.0
+}
+
+/// TP collective time for `units` concurrent token rows through all layers:
+/// one ring all-reduce of the hidden state per layer, priced by the
+/// `cluster::collective` model over the GPU's NVLink. Zero at TP = 1 — this
+/// is what makes TP > 1 layouts pay for their communication in decode,
+/// prefill AND mixed steps.
+fn tp_comm_s(gpu: &GpuSpec, model: &ModelSpec, cfg: &DeploymentConfig, units: f64) -> f64 {
+    if cfg.tp <= 1 {
+        return 0.0;
+    }
+    let spec = CollectiveSpec { link_bw: gpu.nvlink_bw, latency_s: COLLECTIVE_LATENCY_S };
+    allreduce_time_s(&spec, hidden_bytes_per_token(model) * units, cfg.tp)
+        * model.n_layers as f64
+}
 
 /// A served model (DeepSeek-V3.1 / LongCat-Flash class MoE with MLA).
 #[derive(Clone, Copy, Debug)]
@@ -162,14 +186,7 @@ pub fn decode_step_s(
     let gemm = gemm_flops / (gpu.fp8_tflops * 1e12 * gpu.peak_util);
 
     // --- TP collectives: one all-reduce of the hidden state per layer -------
-    let hidden_bytes = (model.d_c * model.heads / 64) as f64 * 2.0 * batch as f64; // ~d_model bf16
-    let allreduce = if cfg.tp > 1 {
-        2.0 * (cfg.tp as f64 - 1.0) / cfg.tp as f64 * hidden_bytes / gpu.nvlink_bw
-            * model.n_layers as f64
-            + model.n_layers as f64 * 5e-6 // collective launch latency
-    } else {
-        0.0
-    };
+    let allreduce = tp_comm_s(gpu, model, cfg, batch as f64);
 
     // --- dataflow launches (§3.3): BF16 path needs separate quant-free
     // copies; SnapMLA fuses token-prep+append+quant into the step ----------
@@ -235,7 +252,7 @@ pub fn prefill_step_s(
     // causal attention ≈ every token attends to half the prompt on average
     let attn = prefill_attn_s(gpu, model, cfg, tokens, (tokens / 2).max(1), kind);
     let launches = 3.0 * model.n_layers as f64 * gpu.launch_s;
-    weights.max(gemm) + attn + launches
+    weights.max(gemm) + attn + tp_comm_s(gpu, model, cfg, t) + launches
 }
 
 /// One **mixed** step: the decode batch at `context` plus `chunk_tokens` of
@@ -271,7 +288,9 @@ pub fn mixed_step_s(
     if decode_batch == 0 {
         // nothing to hide behind: the chunk pays its own weight pass
         let weights = expert_stream_read(model, c) / cfg.gpus() as f64 / gpu.hbm_bw;
-        return weights.max(chunk_compute) + 2.0 * model.n_layers as f64 * gpu.launch_s;
+        return weights.max(chunk_compute)
+            + tp_comm_s(gpu, model, cfg, c)
+            + 2.0 * model.n_layers as f64 * gpu.launch_s;
     }
     let base = decode_step_s(gpu, model, cfg, decode_batch, context, kind);
     let weights_mem =
@@ -279,7 +298,9 @@ pub fn mixed_step_s(
     let gemm_d = 2.0 * model.active_params * decode_batch as f64 / cfg.gpus() as f64 / eff;
     // compute idle while the decode streams weights — the piggyback budget
     let hidden = (weights_mem - gemm_d).max(0.0);
-    base + (chunk_compute - hidden).max(0.0) + gpu.launch_s
+    // the chunk's share of each layer's all-reduce rides the wire serially
+    // with the decode rows — communication does not hide behind HBM reads
+    base + (chunk_compute - hidden).max(0.0) + tp_comm_s(gpu, model, cfg, c) + gpu.launch_s
 }
 
 /// Host-side page-spill (or restore) time for a preempted sequence:
@@ -435,6 +456,40 @@ mod tests {
                 assert!(mixed >= decode_only, "ctx {ctx} chunk {chunk}");
             }
         }
+    }
+
+    #[test]
+    fn tp_layouts_price_their_collectives_everywhere() {
+        // isolate the collective term by varying ONLY the link bandwidth:
+        // the step-time delta must equal the all-reduce wire-time delta
+        // exactly, in decode, standalone prefill, and both mixed branches
+        let (g, m) = setup();
+        let fast = GpuSpec { nvlink_bw: g.nvlink_bw * 1e6, ..g };
+        let tp4 = DeploymentConfig { dp: 2, tp: 4 };
+        let k = KernelKind::SnapMlaFp8;
+        let wire = |units: f64| tp_comm_s(&g, &m, &tp4, units) - tp_comm_s(&fast, &m, &tp4, units);
+        assert!(wire(512.0) > 0.0);
+        assert!(tp_comm_s(&g, &m, &tp4, 1.0) >= COLLECTIVE_LATENCY_S * m.n_layers as f64);
+
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(1.0);
+        let dd = decode_step_s(&g, &m, &tp4, 8, 8192, k)
+            - decode_step_s(&fast, &m, &tp4, 8, 8192, k);
+        assert!(close(dd, wire(8.0)), "decode: {dd} vs {}", wire(8.0));
+        let dp = prefill_step_s(&g, &m, &tp4, 512, k) - prefill_step_s(&fast, &m, &tp4, 512, k);
+        assert!(close(dp, wire(512.0)), "prefill: {dp} vs {}", wire(512.0));
+        let dm = mixed_step_s(&g, &m, &tp4, 8, 8192, 128, 128, k)
+            - mixed_step_s(&fast, &m, &tp4, 8, 8192, 128, 128, k);
+        assert!(close(dm, wire(8.0) + wire(128.0)), "mixed: {dm}");
+        let ds = mixed_step_s(&g, &m, &tp4, 0, 0, 128, 128, k)
+            - mixed_step_s(&fast, &m, &tp4, 0, 0, 128, 128, k);
+        assert!(close(ds, wire(128.0)), "chunk-only: {ds}");
+        // TP = 1 moves no bytes: link bandwidth is irrelevant
+        let tp1 = DeploymentConfig { dp: 8, tp: 1 };
+        assert_eq!(tp_comm_s(&g, &m, &tp1, 64.0), 0.0);
+        assert_eq!(
+            prefill_step_s(&g, &m, &tp1, 512, k),
+            prefill_step_s(&fast, &m, &tp1, 512, k)
+        );
     }
 
     #[test]

@@ -124,7 +124,7 @@ fn unit_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
 /// Build the hand-constructed induction weights for `spec`.
 ///
 /// The construction is specific to the `SimSpec::small` layout (two identity
-/// subspaces of width [`SUB`] plus a bias channel; exactly two layers).
+/// subspaces of width `SUB` plus a bias channel; exactly two layers).
 pub fn build_weights(spec: &SimSpec, seed: u64) -> Weights {
     assert!(spec.n_layers == 2, "sim construction is a 2-layer circuit");
     assert!(spec.d_model > BIAS, "d_model must fit E1+E2+bias");

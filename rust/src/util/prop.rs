@@ -73,8 +73,8 @@ impl Gen for UsizeIn {
     }
 }
 
-/// Generator: Vec<f32> of length in [min_len, max_len], N(0, std) entries;
-/// shrinks by halving length and zeroing entries.
+/// Generator: `Vec<f32>` of length in `[min_len, max_len]`, N(0, std)
+/// entries; shrinks by halving length and zeroing entries.
 pub struct VecF32 {
     pub min_len: usize,
     pub max_len: usize,

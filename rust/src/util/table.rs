@@ -81,6 +81,10 @@ pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
 
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
 pub fn f4(x: f64) -> String {
     format!("{x:.4}")
 }

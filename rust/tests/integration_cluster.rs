@@ -1,0 +1,128 @@
+//! Integration: the multi-rank `ClusterServer` over real engines — prefix
+//! affinity co-locates requests sharing a 1024-token prompt prefix on the
+//! rank already holding those pages (strictly fewer total pages than
+//! shortest-queue routing spreads), and per-rank outcomes are deterministic
+//! across runs.
+//!
+//! Runs against the offline `SimBackend` (max context 2048, 64-token
+//! pages): the 1024-token prefix is 16 shareable pages.
+
+use snapmla::cluster::ClusterServer;
+use snapmla::coordinator::{FinishReason, RoutePolicy, ServeRequest};
+use snapmla::kvcache::CacheMode;
+
+const PREFIX_TOKENS: usize = 1024;
+const PROMPT_TOKENS: usize = 1057; // prefix + [1] + 32-token divergent tail
+const EXTRA_REQUESTS: u64 = 4;
+
+/// Prompt = [1] + shared 1024-token motif + per-request divergent tail.
+fn prefix_prompt(id: u64) -> Vec<i32> {
+    let motif = [70, 91, 130];
+    let mut p = vec![1];
+    for i in 0..PREFIX_TOKENS {
+        p.push(motif[i % 3]);
+    }
+    while p.len() < PROMPT_TOKENS {
+        p.push(40 + (id as i32 * 7 + p.len() as i32) % 50);
+    }
+    p
+}
+
+fn req(id: u64) -> ServeRequest {
+    ServeRequest {
+        id,
+        prompt: prefix_prompt(id),
+        max_new_tokens: 4,
+        temperature: 0.0,
+        seed: id,
+        ignore_eos: true,
+    }
+}
+
+struct RunOutcome {
+    outcomes: Vec<(u64, Vec<i32>, FinishReason)>,
+    counters: Vec<(String, u64)>,
+    routed: Vec<u64>,
+    peak_pages: usize,
+    prefix_hit_tokens: u64,
+}
+
+/// Publish the prefix via request 0, then route `EXTRA_REQUESTS` more
+/// requests sharing it and drive the cluster dry.
+fn run_cluster(policy: RoutePolicy) -> RunOutcome {
+    let mut cluster = ClusterServer::sim(2, 256, CacheMode::Fp8, policy).expect("cluster");
+    cluster.submit(req(0));
+    let mut outcomes = cluster.run_to_completion().expect("phase 1");
+    for id in 1..=EXTRA_REQUESTS {
+        cluster.submit(req(id));
+    }
+    outcomes.extend(cluster.run_to_completion().expect("phase 2"));
+    outcomes.sort_by_key(|o| o.id);
+    RunOutcome {
+        outcomes: outcomes.into_iter().map(|o| (o.id, o.generated, o.finish)).collect(),
+        counters: cluster.counters(),
+        routed: cluster.metrics.routed.clone(),
+        peak_pages: cluster.metrics.peak_pages_used,
+        prefix_hit_tokens: cluster.prefix_hit_tokens(),
+    }
+}
+
+#[test]
+fn affinity_routing_uses_strictly_fewer_pages_than_shortest_queue() {
+    let aff = run_cluster(RoutePolicy::PrefixAffinity);
+    let sq = run_cluster(RoutePolicy::ShortestQueue);
+    assert_eq!(aff.outcomes.len(), 1 + EXTRA_REQUESTS as usize);
+    assert_eq!(sq.outcomes.len(), 1 + EXTRA_REQUESTS as usize);
+
+    // affinity co-locates every prefix sharer on the publishing rank;
+    // shortest-queue spreads them across both
+    assert!(
+        aff.routed.iter().any(|&n| n == 0),
+        "affinity left no rank idle: {:?}",
+        aff.routed
+    );
+    assert!(
+        sq.routed.iter().all(|&n| n > 0),
+        "shortest queue did not spread: {:?}",
+        sq.routed
+    );
+
+    // the headline capacity claim: a shared prefix held once per cluster
+    // beats one copy per rank — strictly fewer total pages at peak
+    assert!(
+        aff.peak_pages < sq.peak_pages,
+        "affinity {} pages vs shortest-queue {}",
+        aff.peak_pages,
+        sq.peak_pages
+    );
+    // and strictly more prompt tokens served from the prefix cache
+    assert!(
+        aff.prefix_hit_tokens > sq.prefix_hit_tokens,
+        "affinity hit {} tokens vs shortest-queue {}",
+        aff.prefix_hit_tokens,
+        sq.prefix_hit_tokens
+    );
+    // every sharer on the affinity path adopted the full 16-page prefix
+    assert_eq!(aff.prefix_hit_tokens, EXTRA_REQUESTS * PREFIX_TOKENS as u64);
+}
+
+#[test]
+fn identical_prompts_generate_identical_tokens_on_both_policies() {
+    // routing placement must never change what a request generates: the
+    // adopted prefix pages are byte-identical to a fresh prefill's
+    let aff = run_cluster(RoutePolicy::PrefixAffinity);
+    let sq = run_cluster(RoutePolicy::ShortestQueue);
+    assert_eq!(aff.outcomes, sq.outcomes, "policy changed generated tokens");
+}
+
+#[test]
+fn per_rank_outcomes_are_deterministic_across_runs() {
+    for policy in [RoutePolicy::PrefixAffinity, RoutePolicy::ShortestQueue] {
+        let a = run_cluster(policy);
+        let b = run_cluster(policy);
+        assert_eq!(a.outcomes, b.outcomes, "{policy:?}: outcomes diverged");
+        assert_eq!(a.counters, b.counters, "{policy:?}: counters diverged");
+        assert_eq!(a.routed, b.routed, "{policy:?}: routing diverged");
+        assert_eq!(a.peak_pages, b.peak_pages, "{policy:?}: page peak diverged");
+    }
+}

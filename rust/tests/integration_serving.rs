@@ -169,7 +169,7 @@ fn determinism_same_trace_seed_same_outcomes_and_counters() {
             long_frac: 0.25,
             long_prompt_min: 192,
             long_prompt_max: 400,
-            max_total_tokens: 0,
+            ..TraceConfig::default()
         });
         let mut srv = server(CacheMode::Fp8, 32);
         let mut rng = Rng::new(5);
