@@ -112,6 +112,7 @@ fn main() {
         chunk_per_seq: 64,
         max_step_items: 64,
         max_running: 72,
+        disagg_prefill: false,
         policy: SchedPolicy::MixedChunked,
     });
     let waiting: Vec<WaitingSeq> =

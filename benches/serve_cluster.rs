@@ -444,6 +444,8 @@ fn apply_action(
             r.waiting.insert(0, sid);
             cost
         }
+        // colocated ranks never hand off (disagg_prefill is unset)
+        Action::Handoff(_) => unreachable!("colocated scheduler"),
     }
 }
 
@@ -503,6 +505,7 @@ fn main() {
         chunk_per_seq: 64,
         max_step_items: 16,
         max_running: 16,
+        disagg_prefill: false,
         policy: SchedPolicy::MixedChunked,
     };
     let gpu = GpuSpec::h20();

@@ -271,6 +271,8 @@ fn simulate(
                 out.spills += 1;
                 waiting.insert(0, sid);
             }
+            // colocated ranks never hand off (disagg_prefill is unset)
+            Action::Handoff(_) => unreachable!("colocated scheduler"),
         }
     }
 
@@ -333,6 +335,7 @@ fn main() {
         chunk_per_seq: 40,
         max_step_items: 16,
         max_running: 16,
+        disagg_prefill: false,
         policy: SchedPolicy::MixedChunked, // overridden per run
     };
     let gpu = GpuSpec::h20();

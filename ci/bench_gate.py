@@ -45,6 +45,20 @@ GATES = [
             for metric in ("peak_pages_ratio", "ttft_p95_ratio", "throughput_ratio")
         ],
     ),
+    (
+        "BENCH_disagg.json",
+        "target/bench-reports/serve_disagg.json",
+        [
+            f"results.n{n}.disagg_vs_colocated.{metric}"
+            for n in (2, 4)
+            for metric in (
+                "ttft_p95_ratio",
+                "itl_p95_ratio",
+                "throughput_ratio",
+                "wire_bytes_ratio",
+            )
+        ],
+    ),
 ]
 
 
@@ -88,8 +102,17 @@ def check(baseline, report, paths, label):
 
 
 def load(path):
-    with open(path) as f:
-        return json.load(f)
+    """Read a report/baseline; exits with a clear one-line error (no
+    traceback) when the file is missing or malformed."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        print(f"bench-gate error: cannot read {path}: {e.strerror or e}")
+        sys.exit(1)
+    except json.JSONDecodeError as e:
+        print(f"bench-gate error: {path} is not valid JSON ({e})")
+        sys.exit(1)
 
 
 def run_gate():
@@ -111,27 +134,32 @@ def run_gate():
 
 def selftest():
     """The gate must demonstrably fail when a headline ratio is perturbed
-    beyond tolerance — run the serve gate against a perturbed copy of its
-    own baseline and require a reported regression."""
-    baseline_path, _, paths = GATES[0]
-    baseline = load(baseline_path)
-    perturbed = copy.deepcopy(baseline)
-    path = paths[0]
-    keys = path.split(".")
-    node = perturbed
-    for k in keys[:-1]:
-        node = node[k]
-    node[keys[-1]] *= 1.0 + 2 * TOLERANCE
-    print(f"selftest: perturbing {path} by +{2 * TOLERANCE * 100:.0f}%…")
-    failures = check(baseline, perturbed, paths, "selftest")
-    if not any("drifted" in f for f in failures):
-        print("selftest FAILED: the gate did not flag a 2x-tolerance drift")
-        return 1
-    # and an untouched copy must pass clean
-    if any("drifted" in f for f in check(baseline, baseline, paths, "selftest")):
-        print("selftest FAILED: the gate flagged an identical report")
-        return 1
-    print("selftest ok: gate fails on perturbation, passes on identity")
+    beyond tolerance — run EVERY gate family against a perturbed copy of
+    its own baseline and require a reported regression."""
+    for baseline_path, _, paths in GATES:
+        if not os.path.exists(baseline_path):
+            print(f"selftest FAILED: committed baseline {baseline_path} is missing")
+            return 1
+        baseline = load(baseline_path)
+        perturbed = copy.deepcopy(baseline)
+        path = paths[0]
+        keys = path.split(".")
+        node = perturbed
+        for k in keys[:-1]:
+            node = node[k]
+        node[keys[-1]] *= 1.0 + 2 * TOLERANCE
+        label = f"selftest:{os.path.basename(baseline_path)}"
+        print(f"selftest: perturbing {baseline_path}:{path} by +{2 * TOLERANCE * 100:.0f}%…")
+        failures = check(baseline, perturbed, paths, label)
+        if not any("drifted" in f for f in failures):
+            print(f"selftest FAILED: the gate did not flag a 2x-tolerance drift "
+                  f"in {baseline_path}")
+            return 1
+        # and an untouched copy must pass clean
+        if any("drifted" in f for f in check(baseline, baseline, paths, label)):
+            print(f"selftest FAILED: the gate flagged an identical {baseline_path}")
+            return 1
+    print("selftest ok: every gate fails on perturbation, passes on identity")
     return 0
 
 

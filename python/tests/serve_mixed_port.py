@@ -289,11 +289,15 @@ def decide_mixed(cfg, waiting, running, free_pages):
 
     # hybrid fallback: with nothing decoding and no chunked prefill in
     # flight, dribbling 64-token chunks wastes one weight pass per step —
-    # admit monolithically through the prefill bucket instead
+    # admit monolithically through the prefill bucket instead. Disabled on
+    # disaggregated prefill ranks: there is never a decode batch to ride,
+    # and only chunked admission adopts published prompt prefixes, so
+    # prefill ranks run big-chunk admission instead.
     if (
         not decode_idxs
         and not any(r[2] > 0 for r in running)
         and not head_parked
+        and not cfg.get("disagg_prefill", False)
         and waiting
         and len(running) < cfg["max_running"]
     ):

@@ -23,6 +23,12 @@ pub fn allreduce_time_s(spec: &CollectiveSpec, bytes: f64, ranks: usize) -> f64 
     2.0 * (n - 1.0) / n * bytes / spec.link_bw + spec.latency_s
 }
 
+/// Point-to-point transfer time over one link: bytes / bw + latency. Prices
+/// the prefill→decode `KvWireBlock` migration in disaggregated serving.
+pub fn transfer_time_s(spec: &CollectiveSpec, bytes: f64) -> f64 {
+    bytes / spec.link_bw + spec.latency_s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,5 +54,14 @@ mod tests {
     fn latency_floor() {
         let s = CollectiveSpec::nvlink();
         assert!(allreduce_time_s(&s, 8.0, 8) >= s.latency_s);
+    }
+
+    #[test]
+    fn transfer_scales_linearly_with_a_latency_floor() {
+        let s = CollectiveSpec::nvlink();
+        assert!(transfer_time_s(&s, 0.0) == s.latency_s);
+        let t1 = transfer_time_s(&s, 1e9) - s.latency_s;
+        let t2 = transfer_time_s(&s, 2e9) - s.latency_s;
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
     }
 }

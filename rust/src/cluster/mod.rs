@@ -4,16 +4,19 @@
 //! `topology` enumerates and validates (DP, TP) layouts of the simulated
 //! 8-GPU node and accounts per-rank memory (weights shard across the TP
 //! group but replicate across DP replicas); `collective` prices the TP
-//! all-reduce that `perfmodel::e2e` folds into step times; `server` is the
-//! working subsystem — `ClusterServer` drives `dp` real `Server` replicas
-//! lock-step behind the prefix-affinity/shortest-queue `Router`. The Fig. 1
-//! bench combines topology + collectives with `perfmodel`; the
-//! `serve_cluster` bench A/Bs the routing policies in virtual time.
+//! all-reduce that `perfmodel::e2e` folds into step times plus the
+//! point-to-point KV-migration transfer; `server` is the working
+//! subsystem — `ClusterServer` drives real `Server` replicas lock-step,
+//! either colocated behind the prefix-affinity/shortest-queue `Router` or
+//! **disaggregated** (dedicated prefill ranks migrating finished prompts
+//! to decode ranks over the `KvWireBlock` wire format). The Fig. 1 bench
+//! combines topology + collectives with `perfmodel`; the `serve_cluster`
+//! and `serve_disagg` benches A/B the topologies in virtual time.
 
 pub mod collective;
 pub mod server;
 pub mod topology;
 
-pub use collective::{allreduce_time_s, CollectiveSpec};
-pub use server::ClusterServer;
+pub use collective::{allreduce_time_s, transfer_time_s, CollectiveSpec};
+pub use server::{ClusterMode, ClusterServer};
 pub use topology::{NodeTopology, RankMemory};

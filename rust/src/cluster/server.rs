@@ -1,29 +1,76 @@
-//! Multi-rank data-parallel serving: `ClusterServer` owns `dp` real
-//! `Server` replicas — each with its own `ModelEngine`, `PagedKvCache` and
-//! mixed chunked-prefill scheduler — and drives them lock-step (one
-//! scheduling step per rank per round). Requests enter through the
-//! `coordinator::Router` policy (shortest-queue or prefix-affinity), so a
-//! shared prompt prefix can land every group member on the rank already
-//! holding those pages.
+//! Multi-rank serving: `ClusterServer` owns real `Server` replicas — each
+//! with its own `ModelEngine`, `PagedKvCache` and mixed chunked-prefill
+//! scheduler — and drives them lock-step (one scheduling step per rank per
+//! round) in one of two topologies:
+//!
+//! * **Colocated** (classic DP): every rank serves the full request
+//!   lifecycle; requests enter through the `coordinator::Router` policy
+//!   (shortest-queue or prefix-affinity), so a shared prompt prefix can
+//!   land every group member on the rank already holding those pages.
+//! * **Disaggregated**: dedicated *prefill* ranks run prefill only — each
+//!   completed prompt is serialized into a `kvcache::transfer::KvWireBlock`
+//!   (per-token FP8 codes + scales + bf16 RoPE, ~half the bytes of a
+//!   bf16-everything transfer) and migrated to a *decode* rank chosen by
+//!   `pick_handoff_rank` (headroom/affinity). The imported KV is bit-exact,
+//!   so a sequence prefilled on rank A and decoded on rank B emits the same
+//!   tokens as a colocated run.
 
 use crate::anyhow;
 use crate::coordinator::metrics::ClusterMetrics;
-use crate::coordinator::router::{RoutePolicy, Router};
-use crate::coordinator::{RequestOutcome, ServeRequest, Server};
-use crate::kvcache::CacheMode;
+use crate::coordinator::router::{pick_handoff_rank, RankLoad, RoutePolicy, Router};
+use crate::coordinator::{RequestOutcome, Sequence, ServeRequest, Server};
+use crate::kvcache::{CacheMode, KvWireBlock, PAGE_TOKENS};
 use crate::runtime::ModelEngine;
+use std::collections::VecDeque;
 use std::time::Instant;
+
+/// Cluster topology: every rank full-lifecycle, or prefill/decode split.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// classic data parallelism: all ranks prefill and decode
+    Colocated,
+    /// ranks `0..prefill_ranks` prefill + hand off; the remaining
+    /// `decode_ranks` ranks decode migrated sequences
+    Disaggregated { prefill_ranks: usize, decode_ranks: usize },
+}
 
 pub struct ClusterServer {
     pub router: Router,
     pub metrics: ClusterMetrics,
+    pub mode: ClusterMode,
+    /// disaggregated mode: serialized sequences in transit between a
+    /// prefill rank's outbox and a decode rank with room (FIFO)
+    in_flight: VecDeque<(Sequence, KvWireBlock)>,
 }
 
 impl ClusterServer {
     pub fn new(ranks: Vec<Server>, policy: RoutePolicy) -> ClusterServer {
         let dp = ranks.len();
         let metrics = ClusterMetrics::new(dp);
-        ClusterServer { router: Router::with_policy(ranks, policy), metrics }
+        ClusterServer {
+            router: Router::with_policy(ranks, policy),
+            metrics,
+            mode: ClusterMode::Colocated,
+            in_flight: VecDeque::new(),
+        }
+    }
+
+    /// A disaggregated cluster: the first `prefill_ranks` ranks prefill
+    /// and hand off, the rest decode. Admissions go to the least-loaded
+    /// prefill rank (`RoutePolicy::Disagg`).
+    pub fn disaggregated(mut ranks: Vec<Server>, prefill_ranks: usize) -> ClusterServer {
+        let dp = ranks.len();
+        assert!(prefill_ranks >= 1 && prefill_ranks < dp, "need ≥1 prefill and ≥1 decode rank");
+        for r in ranks.iter_mut().take(prefill_ranks) {
+            r.set_disagg_prefill();
+        }
+        let metrics = ClusterMetrics::new(dp);
+        ClusterServer {
+            router: Router::disaggregated(ranks, prefill_ranks),
+            metrics,
+            mode: ClusterMode::Disaggregated { prefill_ranks, decode_ranks: dp - prefill_ranks },
+            in_flight: VecDeque::new(),
+        }
     }
 
     /// A cluster of `dp` offline sim ranks (each its own engine + cache +
@@ -34,10 +81,27 @@ impl ClusterServer {
         mode: CacheMode,
         policy: RoutePolicy,
     ) -> anyhow::Result<ClusterServer> {
-        let ranks = (0..dp)
-            .map(|_| Ok(Server::new(ModelEngine::sim(mode)?, capacity_pages)))
-            .collect::<anyhow::Result<Vec<Server>>>()?;
-        Ok(ClusterServer::new(ranks, policy))
+        Ok(ClusterServer::new(Self::sim_ranks(dp, capacity_pages, mode)?, policy))
+    }
+
+    /// A disaggregated cluster of offline sim ranks: `prefill_ranks`
+    /// prefill + `decode_ranks` decode.
+    pub fn sim_disagg(
+        prefill_ranks: usize,
+        decode_ranks: usize,
+        capacity_pages: usize,
+        mode: CacheMode,
+    ) -> anyhow::Result<ClusterServer> {
+        let ranks = Self::sim_ranks(prefill_ranks + decode_ranks, capacity_pages, mode)?;
+        Ok(ClusterServer::disaggregated(ranks, prefill_ranks))
+    }
+
+    fn sim_ranks(
+        dp: usize,
+        capacity_pages: usize,
+        mode: CacheMode,
+    ) -> anyhow::Result<Vec<Server>> {
+        (0..dp).map(|_| Ok(Server::new(ModelEngine::sim(mode)?, capacity_pages))).collect()
     }
 
     pub fn dp(&self) -> usize {
@@ -49,7 +113,12 @@ impl ClusterServer {
     }
 
     pub fn pending(&self) -> usize {
-        self.router.pending()
+        self.router.pending() + self.in_flight.len()
+    }
+
+    /// Sequences currently serialized and awaiting a decode rank.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight.len()
     }
 
     /// Route and enqueue one request; returns the chosen rank.
@@ -59,13 +128,57 @@ impl ClusterServer {
         rank
     }
 
-    /// One lock-step round: every rank takes one scheduling step, then the
-    /// cluster-wide page allocation is sampled for the peak-pages metric.
+    /// One lock-step round: every rank takes one scheduling step; in
+    /// disaggregated mode, completed prefills then migrate — outboxes drain
+    /// into the transfer queue and every transfer whose target decode rank
+    /// has room is delivered (FIFO; an undeliverable transfer parks until a
+    /// decode rank drains). Finally the cluster-wide page allocation is
+    /// sampled for the peak-pages metric.
     pub fn step_all(&mut self) -> anyhow::Result<bool> {
-        let any = self.router.step_all()?;
+        let mut any = self.router.step_all()?;
+        if let ClusterMode::Disaggregated { prefill_ranks, .. } = self.mode {
+            for r in self.router.ranks.iter_mut().take(prefill_ranks) {
+                self.in_flight.extend(std::mem::take(&mut r.handoff_outbox));
+            }
+            any |= self.deliver_handoffs(prefill_ranks)?;
+        }
         let used: usize = self.router.ranks.iter().map(|r| r.cache.used_pages()).sum();
         self.metrics.observe_pages(used);
         Ok(any)
+    }
+
+    /// Deliver every in-flight transfer that fits a decode rank right now.
+    fn deliver_handoffs(&mut self, prefill_ranks: usize) -> anyhow::Result<bool> {
+        let mut delivered_any = false;
+        let mut parked = VecDeque::new();
+        while let Some((seq, wire)) = self.in_flight.pop_front() {
+            let remaining = seq.request.max_new_tokens - seq.generated.len();
+            let needed = (wire.tokens() + remaining).div_ceil(PAGE_TOKENS);
+            let loads: Vec<RankLoad> = self.router.ranks[prefill_ranks..]
+                .iter()
+                .map(|r| {
+                    let open = r.can_accept_handoff(wire.tokens(), remaining);
+                    RankLoad {
+                        tokens: r.load_tokens(),
+                        free_pages: r.cache.free_pages(),
+                        // a slot-saturated rank is marked infeasible by
+                        // inflating its need past any possible headroom
+                        pages_needed: if open { needed } else { r.cache.cfg.capacity_pages + 1 },
+                        prefix_hit_tokens: 0,
+                        evictable_pages: r.cache.evictable_pages(),
+                    }
+                })
+                .collect();
+            match pick_handoff_rank(&loads) {
+                Some(j) => {
+                    self.router.ranks[prefill_ranks + j].accept_handoff(seq, wire)?;
+                    delivered_any = true;
+                }
+                None => parked.push_back((seq, wire)),
+            }
+        }
+        self.in_flight = parked;
+        Ok(delivered_any)
     }
 
     /// Drive every rank to completion; outcomes are merged and id-sorted.
@@ -76,8 +189,9 @@ impl ClusterServer {
         while self.pending() > 0 {
             if !self.step_all()? && self.pending() > 0 {
                 anyhow::bail!(
-                    "cluster deadlock: {} requests pending over {} ranks",
+                    "cluster deadlock: {} requests pending ({} in flight) over {} ranks",
                     self.pending(),
+                    self.in_flight.len(),
                     self.dp()
                 );
             }
@@ -88,6 +202,16 @@ impl ClusterServer {
     /// Total prompt tokens served from prefix caches instead of re-prefilled.
     pub fn prefix_hit_tokens(&self) -> u64 {
         self.router.ranks.iter().map(|r| r.metrics.prefix_hit_tokens).sum()
+    }
+
+    /// Total sequences migrated prefill→decode (disaggregated mode).
+    pub fn handoffs(&self) -> u64 {
+        self.router.ranks.iter().map(|r| r.metrics.handoffs_in).sum()
+    }
+
+    /// Total KV bytes serialized onto the wire by handoffs.
+    pub fn handoff_wire_bytes(&self) -> u64 {
+        self.router.ranks.iter().map(|r| r.metrics.handoff_wire_bytes).sum()
     }
 
     /// Wall-clock-free counters for the whole cluster: routing decisions,

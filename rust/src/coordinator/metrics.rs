@@ -92,6 +92,12 @@ pub struct ServerMetrics {
     pub restores: u64,
     /// pages moved to host memory by spills
     pub spilled_pages: u64,
+    /// sequences handed off to a decode rank (disaggregated prefill rank)
+    pub handoffs_out: u64,
+    /// migrated sequences accepted from a prefill rank (decode rank)
+    pub handoffs_in: u64,
+    /// KV bytes serialized onto the wire by outbound handoffs
+    pub handoff_wire_bytes: u64,
 }
 
 impl ServerMetrics {
@@ -122,6 +128,9 @@ impl ServerMetrics {
             ("spills", self.spills),
             ("restores", self.restores),
             ("spilled_pages", self.spilled_pages),
+            ("handoffs_out", self.handoffs_out),
+            ("handoffs_in", self.handoffs_in),
+            ("handoff_wire_bytes", self.handoff_wire_bytes),
         ]
     }
 
@@ -146,6 +155,16 @@ impl ServerMetrics {
         t.row(vec!["TTFT p50/p95 (ms)".into(), p50_p95(&self.ttft)]);
         t.row(vec!["TPOT p50/p95 (ms)".into(), p50_p95(&self.tpot)]);
         t.row(vec!["preemptions (spills)".into(), format!("{}", self.total_preemptions)]);
+        if self.handoffs_out + self.handoffs_in > 0 {
+            t.row(vec![
+                "handoffs (out / in)".into(),
+                format!("{} / {}", self.handoffs_out, self.handoffs_in),
+            ]);
+            t.row(vec![
+                "handoff wire MB".into(),
+                f2(self.handoff_wire_bytes as f64 / 1e6),
+            ]);
+        }
         if self.mixed_steps > 0 {
             t.row(vec![
                 "mixed steps (w/ decode)".into(),

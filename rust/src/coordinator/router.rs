@@ -31,6 +31,10 @@ pub enum RoutePolicy {
     ShortestQueue,
     /// prefix-affinity first, shortest queue as fallback
     PrefixAffinity,
+    /// disaggregated serving: admissions go to the least-loaded *prefill*
+    /// rank (the first `Router::prefill_ranks` ranks); decode ranks only
+    /// receive migrated sequences, placed by [`pick_handoff_rank`]
+    Disagg,
 }
 
 /// Snapshot of one rank's load.
@@ -116,9 +120,25 @@ pub fn pick_rank_affinity(loads: &[RankLoad], page_tokens: usize) -> usize {
     feasible.into_iter().min_by_key(|i| (loads[*i].tokens, *i)).unwrap()
 }
 
+/// Decode-rank placement for a migrated sequence (disaggregated serving):
+/// among ranks whose reclaimable headroom (`free + evictable`) covers the
+/// sequence's full page need, prefer the largest prefix hit (normally zero
+/// on decode ranks — kept so a warmed decode trie is honored), then the
+/// least outstanding tokens, then index. `None` parks the transfer until a
+/// rank drains — callers mark slot-saturated ranks infeasible by inflating
+/// their `pages_needed` past the headroom.
+pub fn pick_handoff_rank(loads: &[RankLoad]) -> Option<usize> {
+    (0..loads.len())
+        .filter(|&i| loads[i].free_pages + loads[i].evictable_pages >= loads[i].pages_needed)
+        .min_by_key(|&i| (Reverse(loads[i].prefix_hit_tokens), loads[i].tokens, i))
+}
+
 pub struct Router {
     pub ranks: Vec<Server>,
     pub policy: RoutePolicy,
+    /// disaggregated mode: ranks `0..prefill_ranks` prefill, the rest
+    /// decode (0 = every rank serves the full lifecycle)
+    pub prefill_ranks: usize,
 }
 
 impl Router {
@@ -129,7 +149,16 @@ impl Router {
 
     pub fn with_policy(ranks: Vec<Server>, policy: RoutePolicy) -> Router {
         assert!(!ranks.is_empty());
-        Router { ranks, policy }
+        assert_ne!(policy, RoutePolicy::Disagg, "use Router::disaggregated");
+        Router { ranks, policy, prefill_ranks: 0 }
+    }
+
+    /// Disaggregated router: admissions go to the least-loaded of the
+    /// first `prefill_ranks` ranks; the remaining ranks decode migrants.
+    pub fn disaggregated(ranks: Vec<Server>, prefill_ranks: usize) -> Router {
+        assert!(prefill_ranks >= 1, "disaggregation needs a prefill rank");
+        assert!(prefill_ranks < ranks.len(), "disaggregation needs a decode rank");
+        Router { ranks, policy: RoutePolicy::Disagg, prefill_ranks }
     }
 
     pub fn dp(&self) -> usize {
@@ -138,9 +167,14 @@ impl Router {
 
     /// Load snapshot of every rank for `req` (the policy input). The trie
     /// probes (prefix match + evictable scan) cost O(trie) per rank, so
-    /// they run only when the affinity policy will actually read them.
+    /// they run only when the affinity policy will actually read them. A
+    /// disaggregated prefill rank holds only the prompt's pages (the KV
+    /// migrates at handoff), so its feasibility need excludes generation.
     pub fn loads(&self, req: &ServeRequest) -> Vec<RankLoad> {
-        let pages_needed = (req.prompt.len() + req.max_new_tokens).div_ceil(PAGE_TOKENS);
+        let pages_needed = match self.policy {
+            RoutePolicy::Disagg => req.prompt.len().div_ceil(PAGE_TOKENS),
+            _ => (req.prompt.len() + req.max_new_tokens).div_ceil(PAGE_TOKENS),
+        };
         let probe = self.policy == RoutePolicy::PrefixAffinity;
         self.ranks
             .iter()
@@ -163,6 +197,8 @@ impl Router {
         let rank = match self.policy {
             RoutePolicy::ShortestQueue => pick_rank(&loads),
             RoutePolicy::PrefixAffinity => pick_rank_affinity(&loads, PAGE_TOKENS),
+            // admissions see only the prefill ranks
+            RoutePolicy::Disagg => pick_rank(&loads[..self.prefill_ranks]),
         };
         self.ranks[rank].submit(req);
         rank
@@ -309,6 +345,32 @@ mod tests {
         // pages → saturated fallback kicks in
         let loads = [load(5, 5, 10), load(50, 4, 10)];
         assert_eq!(pick_rank_affinity(&loads, 64), 0);
+    }
+
+    // --- handoff placement (disaggregated serving) --------------------------
+
+    #[test]
+    fn handoff_picks_least_loaded_feasible_decode_rank() {
+        // rank 1 is least loaded and fits
+        let loads = [load(100, 20, 10), load(40, 20, 10), load(60, 20, 10)];
+        assert_eq!(pick_handoff_rank(&loads), Some(1));
+        // least-loaded rank lacks pages, evictable headroom rescues rank 2
+        let loads = [load(100, 20, 10), load(40, 5, 10), load_hit(60, 5, 10, 0, 6)];
+        assert_eq!(pick_handoff_rank(&loads), Some(2));
+        // nobody fits → park the transfer
+        let loads = [load(10, 2, 10), load(5, 3, 10)];
+        assert_eq!(pick_handoff_rank(&loads), None);
+        assert_eq!(pick_handoff_rank(&[]), None);
+    }
+
+    #[test]
+    fn handoff_prefers_prefix_hit_then_tokens_then_index() {
+        // a warmed decode trie wins over a shorter queue
+        let loads = [load(10, 20, 10), load_hit(80, 20, 10, 256, 0)];
+        assert_eq!(pick_handoff_rank(&loads), Some(1));
+        // ties break on index
+        let loads = [load(10, 20, 10), load(10, 20, 10)];
+        assert_eq!(pick_handoff_rank(&loads), Some(0));
     }
 
     #[test]

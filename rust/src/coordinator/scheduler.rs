@@ -62,6 +62,10 @@ pub struct SchedulerConfig {
     /// concurrency cap for the running set (mixed policy): decoupled from
     /// the decode batch so chunk-prefilling prompts never evict decoders
     pub max_running: usize,
+    /// disaggregated-serving prefill rank: sequences never decode here — a
+    /// running sequence whose prefill completed is handed off to a decode
+    /// rank (`Action::Handoff`) instead of entering the decode batch
+    pub disagg_prefill: bool,
     pub policy: SchedPolicy,
 }
 
@@ -88,6 +92,10 @@ pub enum Action {
     Resume(usize),
     /// spill this running sequence's pages and move it back to waiting
     Preempt(usize),
+    /// disaggregated prefill rank: this running sequence finished its
+    /// prefill — serialize its KV (`kvcache::transfer::KvWireBlock`) and
+    /// migrate it to a decode rank (no engine call)
+    Handoff(usize),
     Idle,
 }
 
@@ -111,6 +119,14 @@ impl Scheduler {
         running: &[RunningSeq],
         free_pages: usize,
     ) -> Action {
+        // disaggregated prefill rank: a completed prefill hands off before
+        // anything else — it frees this rank's pages for the next prompt
+        // and never enters a decode batch here
+        if self.cfg.disagg_prefill {
+            if let Some(r) = running.iter().find(|r| r.pending_prefill == 0) {
+                return Action::Handoff(r.idx);
+            }
+        }
         match self.cfg.policy {
             SchedPolicy::Alternating => self.decide_alternating(waiting, running, free_pages),
             SchedPolicy::MixedChunked => self.decide_mixed(waiting, running, free_pages),
@@ -301,10 +317,15 @@ impl Scheduler {
         }
         let mut page_budget = free_pages - growth;
 
-        // 2) monolithic fallback when chunking has nothing to ride on
+        // 2) monolithic fallback when chunking has nothing to ride on.
+        //    Disabled on disaggregated prefill ranks: there is never a
+        //    decode batch to ride, and only chunked admission adopts
+        //    published prompt prefixes — prefill ranks run big-chunk
+        //    admission instead of re-prefilling shared prefixes.
         if decode_idxs.is_empty()
             && !running.iter().any(|r| r.pending_prefill > 0)
             && !head_parked
+            && !self.cfg.disagg_prefill
         {
             let admitted =
                 self.admit_monolithic(waiting, running.len(), self.cfg.max_running, free_pages);
@@ -408,6 +429,7 @@ mod tests {
             chunk_per_seq: 64,
             max_step_items: 4,
             max_running: 4,
+            disagg_prefill: false,
             policy,
         }
     }
@@ -696,5 +718,60 @@ mod tests {
         let s = mixed();
         assert_eq!(s.decide(&[], &[r(0, 512)], 100), Action::Idle);
         assert_eq!(s.decide(&[], &[], 100), Action::Idle);
+    }
+
+    // --- disaggregated prefill rank -----------------------------------------
+
+    fn prefill_rank() -> Scheduler {
+        let mut c = cfg(SchedPolicy::MixedChunked);
+        c.disagg_prefill = true;
+        Scheduler::new(c)
+    }
+
+    #[test]
+    fn disagg_hands_off_completed_prefill_before_anything_else() {
+        let s = prefill_rank();
+        // a completed prefill (pending 0) hands off even with admissions
+        // waiting and another prompt mid-prefill
+        let a = s.decide(&[w(0, 100)], &[rp(0, 64, 200), r(1, 128)], 100);
+        assert_eq!(a, Action::Handoff(1));
+        // without any completed prefill the rank behaves like a normal
+        // mixed-chunked scheduler over prefill work
+        let a = s.decide(&[w(0, 100)], &[rp(0, 64, 200)], 100);
+        match a {
+            Action::Mixed { prefill_chunks, decode_idxs } => {
+                assert!(decode_idxs.is_empty(), "prefill ranks never decode");
+                assert_eq!(prefill_chunks.len(), 2);
+            }
+            other => panic!("expected mixed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disagg_admission_is_chunked_so_prefix_hits_adopt() {
+        let s = prefill_rank();
+        // nothing running: admission still goes through the CHUNK path
+        // (the monolithic fallback would re-prefill adopted prefixes)
+        let a = s.decide(&[w(0, 30), w(1, 50)], &[], 100);
+        match a {
+            Action::Mixed { prefill_chunks, decode_idxs } => {
+                assert!(decode_idxs.is_empty());
+                assert_eq!(prefill_chunks.len(), 2);
+                assert!(prefill_chunks.iter().all(|c| c.from_waiting));
+            }
+            other => panic!("expected chunked admission, got {other:?}"),
+        }
+        // empty rank is idle
+        assert_eq!(s.decide(&[], &[], 100), Action::Idle);
+        // a colocated rank with the same state still goes monolithic
+        let a = mixed().decide(&[w(0, 30), w(1, 50)], &[], 100);
+        assert_eq!(a, Action::Prefill(vec![0, 1]));
+    }
+
+    #[test]
+    fn colocated_rank_never_hands_off() {
+        let s = mixed();
+        let a = s.decide(&[], &[r(0, 128)], 100);
+        assert_eq!(a, Action::Mixed { prefill_chunks: vec![], decode_idxs: vec![0] });
     }
 }

@@ -17,7 +17,7 @@ use super::scheduler::{
 };
 use super::sequence::{SeqPhase, Sequence};
 use crate::anyhow;
-use crate::kvcache::{PagedKvCache, PAGE_TOKENS};
+use crate::kvcache::{KvWireBlock, PagedKvCache, PAGE_TOKENS};
 use crate::runtime::{ArtifactKind, ModelEngine};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -33,6 +33,10 @@ pub struct Server {
     waiting: VecDeque<Sequence>,
     running: Vec<Sequence>,
     pub finished: Vec<RequestOutcome>,
+    /// disaggregated prefill rank: sequences whose prefill completed,
+    /// serialized and awaiting migration — the cluster layer drains this
+    /// and delivers each to a decode rank (`accept_handoff`)
+    pub handoff_outbox: Vec<(Sequence, KvWireBlock)>,
     pub metrics: ServerMetrics,
     eos: i32,
 }
@@ -82,6 +86,7 @@ impl Server {
             // concurrency beyond the decode bucket: chunk-prefilling
             // prompts must not evict decoders from the running set
             max_running: max_decode_batch + max_prefill_batch,
+            disagg_prefill: false,
             policy,
         };
         let eos = engine.manifest.model.eos;
@@ -92,9 +97,17 @@ impl Server {
             waiting: VecDeque::new(),
             running: Vec::new(),
             finished: Vec::new(),
+            handoff_outbox: Vec::new(),
             metrics: ServerMetrics::default(),
             eos,
         }
+    }
+
+    /// Turn this rank into a disaggregated **prefill** rank: the scheduler
+    /// hands completed prefills off (`Action::Handoff`) instead of ever
+    /// decoding them.
+    pub fn set_disagg_prefill(&mut self) {
+        self.scheduler.cfg.disagg_prefill = true;
     }
 
     pub fn submit(&mut self, req: ServeRequest) {
@@ -117,7 +130,7 @@ impl Server {
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.running.len() + self.handoff_outbox.len()
     }
 
     /// Queue-depth signal for the DP router (tokens outstanding).
@@ -165,32 +178,57 @@ impl Server {
             return Ok(true);
         }
 
-        let waiting_view: Vec<WaitingSeq> = self
-            .waiting
-            .iter()
-            .enumerate()
-            .map(|(i, s)| WaitingSeq {
-                idx: i,
-                tokens: match &s.spilled {
-                    Some(sp) => sp.tokens(),
-                    None => s.request.prompt.len(),
-                },
-                spilled: s.spilled.is_some(),
-            })
-            .collect();
-        let running_view: Vec<RunningSeq> = self
-            .running
-            .iter()
-            .enumerate()
-            .map(|(i, s)| RunningSeq {
-                idx: i,
-                context: self.cache.tokens_of(s.id()),
-                pending_prefill: s.pending_prefill(),
-            })
-            .collect();
-        let action =
-            self.scheduler
-                .decide(&waiting_view, &running_view, self.cache.available_pages());
+        // handoffs are free for this rank (serialize + async send), so a
+        // disaggregated prefill rank drains every completed prefill into
+        // the outbox and still takes its real action within this step
+        let mut handed = false;
+        let action = loop {
+            let waiting_view: Vec<WaitingSeq> = self
+                .waiting
+                .iter()
+                .enumerate()
+                .map(|(i, s)| WaitingSeq {
+                    idx: i,
+                    tokens: match &s.spilled {
+                        Some(sp) => sp.tokens(),
+                        None => s.request.prompt.len(),
+                    },
+                    spilled: s.spilled.is_some(),
+                })
+                .collect();
+            let running_view: Vec<RunningSeq> = self
+                .running
+                .iter()
+                .enumerate()
+                .map(|(i, s)| RunningSeq {
+                    idx: i,
+                    context: self.cache.tokens_of(s.id()),
+                    pending_prefill: s.pending_prefill(),
+                })
+                .collect();
+            let action =
+                self.scheduler
+                    .decide(&waiting_view, &running_view, self.cache.available_pages());
+            match action {
+                Action::Handoff(idx) => {
+                    // serialize the sequence's KV into the wire format and
+                    // park it in the outbox — the cluster layer migrates it
+                    // to a decode rank. The pages free immediately (the
+                    // wire block carries the bytes).
+                    let seq = self.running.remove(idx);
+                    let wire = self
+                        .cache
+                        .export_wire(seq.id())
+                        .map_err(|e| anyhow::anyhow!("export seq {}: {e:?}", seq.id()))?;
+                    self.cache.release(seq.id());
+                    self.metrics.handoffs_out += 1;
+                    self.metrics.handoff_wire_bytes += wire.wire_bytes() as u64;
+                    self.handoff_outbox.push((seq, wire));
+                    handed = true;
+                }
+                other => break other,
+            }
+        };
 
         match action {
             Action::Prefill(idxs) => {
@@ -281,7 +319,8 @@ impl Server {
                 // re-queue at the FRONT: preempted work ages first
                 self.waiting.push_front(seq);
             }
-            Action::Idle => return Ok(false),
+            Action::Handoff(_) => unreachable!("drained by the handoff loop above"),
+            Action::Idle => return Ok(handed),
         }
         Ok(true)
     }
@@ -386,6 +425,30 @@ impl Server {
             self.cache.release(seq.id());
             self.finish(seq);
         }
+        Ok(())
+    }
+
+    /// Can this rank take a migrated sequence right now? Needs a running
+    /// slot and pages for the wire block plus the remaining generation
+    /// (full reservation, so an accepted migrant never wedges on pages
+    /// another migrant needs).
+    pub fn can_accept_handoff(&self, wire_tokens: usize, remaining_tokens: usize) -> bool {
+        self.running.len() < self.scheduler.cfg.max_running
+            && self.cache.available_pages()
+                >= (wire_tokens + remaining_tokens).div_ceil(PAGE_TOKENS)
+    }
+
+    /// Accept a migrated sequence on this (decode) rank: map its wire block
+    /// into the local pool and enter it into the running set. The imported
+    /// KV is bit-identical to the prefill rank's, so decoding continues
+    /// exactly as if the sequence had prefilled here.
+    pub fn accept_handoff(&mut self, mut seq: Sequence, wire: KvWireBlock) -> anyhow::Result<()> {
+        self.cache
+            .import_wire(seq.id(), &wire)
+            .map_err(|e| anyhow::anyhow!("import seq {}: {e:?}", seq.id()))?;
+        seq.phase = SeqPhase::Running;
+        self.metrics.handoffs_in += 1;
+        self.running.push(seq);
         Ok(())
     }
 

@@ -21,6 +21,7 @@
 use super::allocator::{AllocError, PageAllocator};
 use super::page::{Page, PAGE_TOKENS};
 use super::prefix::PrefixTrie;
+use super::transfer::{KvWireBlock, WirePayload};
 use crate::fp8::{bf16_decode, bf16_encode};
 use std::collections::BTreeMap;
 
@@ -302,6 +303,110 @@ impl PagedKvCache {
             self.pages[p] = Some(data);
         }
         self.seqs.get_mut(&seq).unwrap().tokens = sp.tokens;
+        Ok(())
+    }
+
+    // --- wire transfer (prefill→decode KV migration) -----------------------
+
+    /// Serialize `seq`'s KV state into the page-table-free wire format
+    /// (`kvcache::transfer::KvWireBlock`): token-major u8 E4M3 codes + f32
+    /// scales + bf16 RoPE in FP8 mode, bf16 content + RoPE in BF16 mode.
+    /// Reads through shared (adopted-prefix) pages like any gather; the
+    /// source sequence is left untouched.
+    pub fn export_wire(&self, seq: SeqHandle) -> Result<KvWireBlock, AllocError> {
+        let tokens = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?;
+        let (d_c, d_r, layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
+        let mut rope = Vec::with_capacity(tokens * layers * d_r);
+        let mut payload = match self.cfg.mode {
+            CacheMode::Fp8 => WirePayload::Fp8 {
+                codes: Vec::with_capacity(tokens * layers * d_c),
+                scales: Vec::with_capacity(tokens * layers),
+            },
+            CacheMode::Bf16 => {
+                WirePayload::Bf16 { content: Vec::with_capacity(tokens * layers * d_c) }
+            }
+        };
+        for t in 0..tokens {
+            let phys = table[t / PAGE_TOKENS];
+            let slot = t % PAGE_TOKENS;
+            match (self.pages[phys].as_ref().expect("mapped page"), &mut payload) {
+                (PageData::Fp8(pages), WirePayload::Fp8 { codes, scales }) => {
+                    for page in pages {
+                        codes.extend_from_slice(&page.content[slot * d_c..(slot + 1) * d_c]);
+                        scales.push(page.scales[slot]);
+                        rope.extend_from_slice(&page.rope[slot * d_r..(slot + 1) * d_r]);
+                    }
+                }
+                (PageData::Bf16(pages), WirePayload::Bf16 { content }) => {
+                    for page in pages {
+                        content.extend_from_slice(&page.content[slot * d_c..(slot + 1) * d_c]);
+                        rope.extend_from_slice(&page.rope[slot * d_r..(slot + 1) * d_r]);
+                    }
+                }
+                _ => unreachable!("page data always matches the cache mode"),
+            }
+        }
+        Ok(KvWireBlock { tokens, n_layers: layers, d_c, d_r, payload, rope })
+    }
+
+    /// Map a wire block into this pool under `seq` (which must not be
+    /// live): allocates fresh pages (evicting prefix-cache retention under
+    /// pressure, like `restore`) and writes the wire bytes back verbatim —
+    /// the imported kernel views are bit-identical to the exporter's.
+    pub fn import_wire(&mut self, seq: SeqHandle, block: &KvWireBlock) -> Result<(), AllocError> {
+        assert!(!self.seqs.contains_key(&seq), "import over a live sequence");
+        assert_eq!(block.mode(), self.cfg.mode, "wire/cache mode mismatch");
+        assert_eq!(block.n_layers, self.cfg.n_layers, "wire/cache layer mismatch");
+        assert_eq!((block.d_c, block.d_r), (self.cfg.d_c, self.cfg.d_r), "wire/cache dims");
+        let need = block.tokens.div_ceil(PAGE_TOKENS);
+        if self.available_pages() < need {
+            return Err(AllocError::OutOfPages);
+        }
+        while self.alloc.free_pages() < need {
+            if !self.evict_one() {
+                return Err(AllocError::OutOfPages);
+            }
+        }
+        self.register(seq);
+        let (d_c, d_r, layers) = (self.cfg.d_c, self.cfg.d_r, self.cfg.n_layers);
+        for t in 0..block.tokens {
+            let slot = t % PAGE_TOKENS;
+            let phys = if slot == 0 {
+                let p = self.alloc.grow(seq).expect("reserved above");
+                self.pages[p] = Some(self.new_page_data());
+                p
+            } else {
+                *self.alloc.pages_of(seq).unwrap().last().unwrap()
+            };
+            let data = self.pages[phys].as_mut().unwrap();
+            match (data, &block.payload) {
+                (PageData::Fp8(pages), WirePayload::Fp8 { codes, scales }) => {
+                    for (l, page) in pages.iter_mut().enumerate() {
+                        let row = (t * layers + l) * d_c;
+                        page.content[slot * d_c..(slot + 1) * d_c]
+                            .copy_from_slice(&codes[row..row + d_c]);
+                        let rrow = (t * layers + l) * d_r;
+                        page.rope[slot * d_r..(slot + 1) * d_r]
+                            .copy_from_slice(&block.rope[rrow..rrow + d_r]);
+                        page.scales[slot] = scales[t * layers + l];
+                        page.used = page.used.max(slot + 1);
+                    }
+                }
+                (PageData::Bf16(pages), WirePayload::Bf16 { content }) => {
+                    for (l, page) in pages.iter_mut().enumerate() {
+                        let row = (t * layers + l) * d_c;
+                        page.content[slot * d_c..(slot + 1) * d_c]
+                            .copy_from_slice(&content[row..row + d_c]);
+                        let rrow = (t * layers + l) * d_r;
+                        page.rope[slot * d_r..(slot + 1) * d_r]
+                            .copy_from_slice(&block.rope[rrow..rrow + d_r]);
+                    }
+                }
+                _ => unreachable!("mode asserted above"),
+            }
+        }
+        self.seqs.get_mut(&seq).unwrap().tokens = block.tokens;
         Ok(())
     }
 
@@ -927,6 +1032,75 @@ mod tests {
         longer.push(7);
         cache.register(4);
         assert_eq!(cache.adopt_prefix(4, &longer), 64, "A's retention must survive");
+        cache.validate().unwrap();
+    }
+
+    fn views(cache: &PagedKvCache, seq: u64, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c = cache.cfg;
+        let mut content = vec![0.0f32; n * c.d_c];
+        let mut rope = vec![0.0f32; n * c.d_r];
+        let mut sigma = vec![0.0f32; n];
+        let mut all = (Vec::new(), Vec::new(), Vec::new());
+        for layer in 0..c.n_layers {
+            cache.gather_kernel_view(seq, layer, n, &mut content, &mut rope, &mut sigma);
+            all.0.extend_from_slice(&content);
+            all.1.extend_from_slice(&rope);
+            all.2.extend_from_slice(&sigma);
+        }
+        all
+    }
+
+    #[test]
+    fn wire_roundtrip_matches_spill_restore() {
+        for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+            let c = cfg(mode);
+            let mut src = PagedKvCache::new(c);
+            src.register(1);
+            fill_tokens(&mut src, 1, 70, 41); // 2 pages, partial last
+            let wire = src.export_wire(1).unwrap();
+            assert_eq!(wire.tokens(), 70);
+            assert_eq!(wire.mode(), mode);
+
+            let mut dst = PagedKvCache::new(c);
+            dst.import_wire(9, &wire).unwrap();
+            assert_eq!(dst.tokens_of(9), 70);
+            // the imported kernel views are bit-identical to the source's
+            assert_eq!(views(&src, 1, 70), views(&dst, 9, 70));
+            // and re-exporting reproduces the wire block byte for byte
+            assert_eq!(dst.export_wire(9).unwrap(), wire);
+            dst.validate().unwrap();
+
+            // spill/restore within the source is the reference lifecycle:
+            // the wire path must agree with it exactly
+            let before = views(&src, 1, 70);
+            let sp = src.spill(1).unwrap();
+            src.restore(1, sp).unwrap();
+            assert_eq!(views(&src, 1, 70), before);
+        }
+    }
+
+    #[test]
+    fn import_wire_evicts_prefix_cache_and_reports_exhaustion() {
+        let mut c = cfg(CacheMode::Fp8);
+        c.capacity_pages = 2;
+        let mut cache = PagedKvCache::new(c);
+        let prompt: Vec<i32> = (0..64).collect();
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 70, 42); // 2 pages
+        cache.publish_prefix(1, &prompt); // retains page 0
+        let wire = cache.export_wire(1).unwrap();
+        cache.release(1); // page 0 lives on via the trie; page 1 freed
+        assert_eq!(cache.free_pages(), 1);
+        assert_eq!(cache.retained_pages(), 1);
+
+        // importing 2 pages needs the retained page back: trie evicted
+        cache.import_wire(2, &wire).unwrap();
+        assert_eq!(cache.retained_pages(), 0);
+        assert_eq!(cache.tokens_of(2), 70);
+        cache.validate().unwrap();
+
+        // a second import cannot fit even with full eviction
+        assert_eq!(cache.import_wire(3, &wire), Err(AllocError::OutOfPages));
         cache.validate().unwrap();
     }
 

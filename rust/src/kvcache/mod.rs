@@ -17,16 +17,21 @@
 //!
 //! Serving lifecycle: pages are **refcounted** (`allocator`), full prompt-
 //! prefix pages are shared across sequences via a prefix trie (`prefix`),
-//! and preemption spills page bytes to host memory instead of discarding
-//! the KV state (`cache::spill`/`restore`).
+//! preemption spills page bytes to host memory instead of discarding the
+//! KV state (`cache::spill`/`restore`), and a sequence's whole KV state
+//! serializes into the page-table-free [`transfer::KvWireBlock`] wire
+//! format for prefill→decode rank migration (bit-exact with
+//! spill/restore, ~half the bytes of a bf16-everything transfer).
 
 pub mod allocator;
 pub mod blockwise;
 pub mod cache;
 pub mod page;
 pub mod prefix;
+pub mod transfer;
 
 pub use allocator::PageAllocator;
 pub use cache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle, SpilledKv};
 pub use page::{Page, PAGE_TOKENS};
 pub use prefix::PrefixTrie;
+pub use transfer::KvWireBlock;

@@ -1,0 +1,110 @@
+//! `KvWireBlock` — the prefill→decode KV migration codec.
+//!
+//! SnapMLA's RoPE-aware per-token FP8 cache makes a sequence's KV state a
+//! compact, self-describing wire format: per-token **u8 E4M3 NoPE codes** +
+//! **f32 per-(token, layer) scales** + **u16 bf16 aligned RoPE** — exactly
+//! the bytes the pages already hold, so encode→decode is bit-exact with
+//! `PagedKvCache::spill`/`restore` and the transfer moves roughly half the
+//! bytes of a bf16-everything migration (644 vs 1152 B/token/layer at
+//! DeepSeek dims). The BF16 baseline mode serializes its native bf16
+//! content instead (same bytes as its pages).
+//!
+//! The codec is storage-layout-free: tokens are packed densely in token
+//! order, independent of page tables, so a block encoded on one rank maps
+//! into any other rank's pool (`PagedKvCache::export_wire` /
+//! `import_wire`). `cluster::collective::transfer_time_s` prices the block
+//! over the inter-rank link for the virtual-time benches.
+
+use super::cache::CacheMode;
+
+/// Wire payload: the mode-dependent content planes (RoPE is shared).
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum WirePayload {
+    /// u8 E4M3 codes `[tokens][layers][d_c]` + f32 scales `[tokens][layers]`
+    Fp8 { codes: Vec<u8>, scales: Vec<f32> },
+    /// u16 bf16 content `[tokens][layers][d_c]` (FlashMLA baseline cache)
+    Bf16 { content: Vec<u16> },
+}
+
+/// One sequence's KV state in wire form (all layers, token-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct KvWireBlock {
+    pub(crate) tokens: usize,
+    pub(crate) n_layers: usize,
+    pub(crate) d_c: usize,
+    pub(crate) d_r: usize,
+    pub(crate) payload: WirePayload,
+    /// u16 bf16 aligned RoPE `[tokens][layers][d_r]`
+    pub(crate) rope: Vec<u16>,
+}
+
+impl KvWireBlock {
+    /// Cache tokens this block carries.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Cache mode the block was encoded from (decode must match).
+    pub fn mode(&self) -> CacheMode {
+        match self.payload {
+            WirePayload::Fp8 { .. } => CacheMode::Fp8,
+            WirePayload::Bf16 { .. } => CacheMode::Bf16,
+        }
+    }
+
+    /// Bytes this block occupies on the wire (payload + rope; the
+    /// fixed-size header is negligible and excluded, as in the perf model).
+    pub fn wire_bytes(&self) -> usize {
+        self.tokens * self.n_layers * Self::bytes_per_token_layer(self.mode(), self.d_c, self.d_r)
+    }
+
+    /// Bytes a bf16-everything transfer of the same tokens would move (the
+    /// A/B stat: FP8 wire vs the naive bf16 migration format).
+    pub fn bf16_equiv_bytes(&self) -> usize {
+        self.tokens
+            * self.n_layers
+            * Self::bytes_per_token_layer(CacheMode::Bf16, self.d_c, self.d_r)
+    }
+
+    /// Wire bytes per (token, layer) for a mode: FP8 = d_c codes + bf16
+    /// rope + one f32 scale; BF16 = bf16 content + bf16 rope.
+    pub fn bytes_per_token_layer(mode: CacheMode, d_c: usize, d_r: usize) -> usize {
+        match mode {
+            CacheMode::Fp8 => d_c + 2 * d_r + 4,
+            CacheMode::Bf16 => 2 * (d_c + d_r),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp8_wire_is_roughly_half_of_bf16() {
+        // DeepSeek dims: 644 vs 1152 B/token/layer
+        let fp8 = KvWireBlock::bytes_per_token_layer(CacheMode::Fp8, 512, 64);
+        let bf16 = KvWireBlock::bytes_per_token_layer(CacheMode::Bf16, 512, 64);
+        assert_eq!(fp8, 644);
+        assert_eq!(bf16, 1152);
+        let ratio = fp8 as f64 / bf16 as f64;
+        assert!(ratio < 0.6, "{ratio}");
+    }
+
+    #[test]
+    fn wire_bytes_count_payload_and_rope() {
+        let block = KvWireBlock {
+            tokens: 3,
+            n_layers: 2,
+            d_c: 16,
+            d_r: 8,
+            payload: WirePayload::Fp8 { codes: vec![0; 3 * 2 * 16], scales: vec![1.0; 3 * 2] },
+            rope: vec![0; 3 * 2 * 8],
+        };
+        // 3 tok × 2 layers × (16 codes + 16 rope bytes + 4 scale bytes)
+        assert_eq!(block.wire_bytes(), 3 * 2 * (16 + 16 + 4));
+        assert_eq!(block.bf16_equiv_bytes(), 3 * 2 * 2 * (16 + 8));
+        assert_eq!(block.mode(), CacheMode::Fp8);
+        assert_eq!(block.tokens(), 3);
+    }
+}

@@ -2,12 +2,15 @@
 //!
 //! Subcommands:
 //!   info                         — artifact/model summary
-//!   serve   [--mode fp8|bf16] [--requests N] [--dp N] [--pages N]
-//!           [--route affinity|shortest] [--shared-frac F] [--shared-groups N]
-//!           [--shared-tokens N] …
-//!                                — serve a synthetic trace through the DP
+//!   serve   [--mode fp8|bf16|disagg] [--requests N] [--dp N] [--pages N]
+//!           [--prefill-ranks N] [--route affinity|shortest]
+//!           [--shared-frac F] [--shared-groups N] [--shared-tokens N] …
+//!                                — serve a synthetic trace through the
 //!                                  cluster (prefix-affinity routing by
-//!                                  default), print per-rank metrics
+//!                                  default; `--mode disagg` splits the dp
+//!                                  ranks into `--prefill-ranks` prefill
+//!                                  ranks migrating KV to the rest), print
+//!                                  per-rank metrics
 //!   fidelity [--ctx N] [--layers N]
 //!                                — Table-3 config fidelity study (rust sim)
 //!   perf    [--model deepseek|longcat]
@@ -88,11 +91,14 @@ fn info(args: &Args) -> anyhow::Result<()> {
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let mode = match args.get_or("mode", "fp8") {
-        "bf16" => CacheMode::Bf16,
-        _ => CacheMode::Fp8,
+    let (mode, disagg) = match args.get_or("mode", "fp8") {
+        "bf16" => (CacheMode::Bf16, false),
+        "fp8" => (CacheMode::Fp8, false),
+        // disaggregated prefill/decode serving over the FP8 wire format
+        "disagg" => (CacheMode::Fp8, true),
+        other => anyhow::bail!("--mode must be 'fp8', 'bf16' or 'disagg', got '{other}'"),
     };
-    let dp = args.usize_or("dp", 1);
+    let dp = args.usize_or("dp", if disagg { 2 } else { 1 });
     let pages = args.usize_or("pages", 256);
     let dir = artifacts_dir(args);
     let trace = TraceGen::generate(&TraceConfig {
@@ -121,7 +127,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)
         .map(|_| Ok(Server::new(ModelEngine::auto(&dir, mode)?, pages)))
         .collect();
-    let mut cluster = ClusterServer::new(ranks?, policy);
+    let mut cluster = if disagg {
+        let prefill_ranks = args.usize_or("prefill-ranks", 1);
+        anyhow::ensure!(
+            prefill_ranks >= 1 && prefill_ranks < dp,
+            "--prefill-ranks must be in 1..dp (dp {dp}, got {prefill_ranks})"
+        );
+        ClusterServer::disaggregated(ranks?, prefill_ranks)
+    } else {
+        ClusterServer::new(ranks?, policy)
+    };
     let mut rng = Rng::new(1234);
     for r in &trace {
         let prompt = synth_prompt(&mut rng, r);
@@ -139,14 +154,22 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     }
     let outcomes = cluster.run_to_completion()?;
     println!(
-        "completed {} requests over {} rank(s) ({policy:?}): routed {:?}, \
+        "completed {} requests over {} rank(s) ({:?}): routed {:?}, \
          peak pages {}, prefix-hit tokens {}",
         outcomes.len(),
         cluster.dp(),
+        cluster.mode,
         cluster.metrics.routed,
         cluster.metrics.peak_pages_used,
         cluster.prefix_hit_tokens()
     );
+    if disagg {
+        println!(
+            "disagg: {} handoffs, {:.2} MB on the FP8 wire",
+            cluster.handoffs(),
+            cluster.handoff_wire_bytes() as f64 / 1e6
+        );
+    }
     for (i, rank) in cluster.router.ranks.iter().enumerate() {
         println!("{}", rank.metrics.render(&format!("rank {i} ({mode:?})")));
         let s = &rank.engine.stats;

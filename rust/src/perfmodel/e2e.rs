@@ -15,7 +15,7 @@
 
 use super::gpu::GpuSpec;
 use super::kernel::{kernel_time_s, KernelKind, KernelShape};
-use crate::cluster::collective::{allreduce_time_s, CollectiveSpec};
+use crate::cluster::collective::{allreduce_time_s, transfer_time_s, CollectiveSpec};
 
 /// Per-collective launch/sync latency (one all-reduce per layer).
 const COLLECTIVE_LATENCY_S: f64 = 5.0e-6;
@@ -309,6 +309,17 @@ pub fn spill_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind
     model.kv_bytes_per_token(kind) * tokens as f64 / gpu.hbm_bw + 2.0 * gpu.launch_s
 }
 
+/// Prefill→decode KV migration time for a handed-off sequence: the wire
+/// block (`tokens` of the pipeline's per-token KV bytes — the `KvWireBlock`
+/// format is exactly the cache's storage bytes) over the inter-rank link,
+/// priced by `cluster::collective::transfer_time_s`. The transfer overlaps
+/// the prefill rank's next step; this is the latency until the decode rank
+/// holds the sequence.
+pub fn handoff_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {
+    let spec = CollectiveSpec { link_bw: gpu.nvlink_bw, latency_s: COLLECTIVE_LATENCY_S };
+    transfer_time_s(&spec, model.kv_bytes_per_token(kind) * tokens as f64)
+}
+
 /// Evaluate one Fig. 1 serving point (batch chosen by KV capacity).
 pub fn serving_point(
     gpu: &GpuSpec,
@@ -511,6 +522,21 @@ mod tests {
         // zero chunk tokens degrades exactly to a decode step
         let d = decode_step_s(&g, &m, &cfg, 4, 8192, KernelKind::SnapMlaFp8);
         assert_eq!(mixed_step_s(&g, &m, &cfg, 4, 8192, 0, 0, KernelKind::SnapMlaFp8), d);
+    }
+
+    #[test]
+    fn handoff_is_cheaper_than_re_prefill_and_fp8_wire_beats_bf16() {
+        let (g, m) = setup();
+        let cfg = DeploymentConfig { dp: 8, tp: 1 };
+        // migrating 8k tokens of KV must be far cheaper than re-prefilling
+        // them on the decode rank (the case for KV migration)
+        let hand = handoff_s(&g, &m, 8192, KernelKind::SnapMlaFp8);
+        let recompute = prefill_step_s(&g, &m, &cfg, 8192, KernelKind::SnapMlaFp8);
+        assert!(hand * 4.0 < recompute, "{hand} vs {recompute}");
+        // and the FP8 wire format moves ~56% of the bf16-everything bytes
+        let bf16 = handoff_s(&g, &m, 8192, KernelKind::FlashMlaBf16);
+        let ratio = (hand - COLLECTIVE_LATENCY_S) / (bf16 - COLLECTIVE_LATENCY_S);
+        assert!((ratio - 644.0 / 1152.0).abs() < 1e-9, "{ratio}");
     }
 
     #[test]

@@ -227,6 +227,105 @@ fn free_pages_monotone_consistent() {
     cache.validate().unwrap();
 }
 
+/// All-layer kernel views of a sequence (content on grid, rope, sigma) —
+/// the byte-identity oracle for wire/spill comparisons.
+fn kernel_views(cache: &PagedKvCache, seq: u64, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let c = cache.cfg;
+    let mut content = vec![0.0f32; n * c.d_c];
+    let mut rope = vec![0.0f32; n * c.d_r];
+    let mut sigma = vec![0.0f32; n];
+    let mut all = (Vec::new(), Vec::new(), Vec::new());
+    for layer in 0..c.n_layers {
+        cache.gather_kernel_view(seq, layer, n, &mut content, &mut rope, &mut sigma);
+        all.0.extend_from_slice(&content);
+        all.1.extend_from_slice(&rope);
+        all.2.extend_from_slice(&sigma);
+    }
+    all
+}
+
+struct TokenCountGen;
+
+impl Gen for TokenCountGen {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        // 1 token up to CAPACITY full pages, biased to hit page boundaries
+        // and partial last pages
+        match rng.below(4) {
+            0 => rng.range_usize(1, CAPACITY * PAGE_TOKENS + 1),
+            1 => PAGE_TOKENS * rng.range_usize(1, CAPACITY + 1), // exact pages
+            2 => PAGE_TOKENS * rng.range_usize(1, CAPACITY) + 1, // one past
+            _ => rng.range_usize(1, PAGE_TOKENS),                // sub-page
+        }
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        if *v > 1 {
+            vec![v / 2, v - 1]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_is_byte_identical_to_spill_restore() {
+    // the KvWireBlock codec must carry EXACTLY the bytes spill/restore
+    // preserves, for any token count (full pages, partial last page, a
+    // single token), in both cache modes: encode on rank A, decode on rank
+    // B, and the kernel views — the bits the attention kernel consumes —
+    // agree with A's original and with A's spill→restore views
+    for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+        check(0xA11C_0003, 60, &TokenCountGen, |&tokens| {
+            let mut c = cfg();
+            c.mode = mode;
+            let mut src = PagedKvCache::new(c);
+            src.register(1);
+            let mut rng = Rng::new(0xF00D ^ tokens as u64);
+            for _ in 0..tokens {
+                let ck: Vec<f32> = rng.normal_vec(c.d_c, 2.0);
+                let kr: Vec<f32> = rng.normal_vec(c.d_r, 30.0);
+                src.append_token(1, &ck, &kr).map_err(|e| format!("append: {e:?}"))?;
+            }
+            let wire = src.export_wire(1).map_err(|e| format!("export: {e:?}"))?;
+            if wire.tokens() != tokens {
+                return Err(format!("wire carries {} of {tokens} tokens", wire.tokens()));
+            }
+            // FP8 wire must beat the bf16-everything format on bytes
+            let (w, b) = (wire.wire_bytes(), wire.bf16_equiv_bytes());
+            if mode == CacheMode::Fp8 && w >= b {
+                return Err(format!("fp8 wire {w} B not below bf16 {b} B"));
+            }
+
+            let mut dst = PagedKvCache::new(c);
+            dst.import_wire(9, &wire).map_err(|e| format!("import: {e:?}"))?;
+            if dst.tokens_of(9) != tokens {
+                return Err(format!("import produced {} tokens", dst.tokens_of(9)));
+            }
+            let original = kernel_views(&src, 1, tokens);
+            if kernel_views(&dst, 9, tokens) != original {
+                return Err("imported kernel views differ from source".into());
+            }
+            // re-encoding the import reproduces the block byte for byte
+            if dst.export_wire(9).map_err(|e| format!("re-export: {e:?}"))? != wire {
+                return Err("re-exported wire block differs".into());
+            }
+            dst.validate().map_err(|e| format!("dst: {e}"))?;
+
+            // spill/restore is the reference lifecycle: views must agree
+            let sp = src.spill(1).map_err(|e| format!("spill: {e:?}"))?;
+            if sp.pages() != tokens.div_ceil(PAGE_TOKENS) {
+                return Err(format!("spill holds {} pages", sp.pages()));
+            }
+            src.restore(1, sp).map_err(|e| format!("restore: {e:?}"))?;
+            if kernel_views(&src, 1, tokens) != original {
+                return Err("spill/restore changed the source views".into());
+            }
+            src.validate().map_err(|e| format!("src: {e}"))?;
+            Ok(())
+        });
+    }
+}
+
 #[test]
 fn spill_restore_cycles_preserve_token_counts() {
     // repeated spill/restore churn keeps the pool exact
