@@ -1,476 +1,38 @@
 //! serve_cluster — prefix-affinity vs shortest-queue DP routing on a
 //! shared-prefix-heavy trace, for DP ∈ {1, 2, 4} ranks of an 8-GPU node
-//! (TP = 8/DP), in deterministic virtual time.
+//! (TP = 8/DP), in deterministic **lock-step** virtual time.
 //!
-//! Drives the REAL routing policies (`coordinator::router::pick_rank` /
-//! `pick_rank_affinity`) and the REAL mixed chunked-prefill `Scheduler` on
-//! every rank, lock-step: each round every rank with work takes one
-//! scheduler action and the round costs the slowest rank's step (costed by
-//! the calibrated H20 analytical model, including the TP all-reduce term
-//! `perfmodel::e2e` folds in from `cluster::collective`). Admission adopts
-//! a rank's published prefix pages exactly like the serving path
-//! (`PagedKvCache::adopt_prefix`): adopted pages are shared, so affinity
-//! routing holds each group prefix once per cluster instead of once per
-//! rank. No wall clock anywhere — two runs produce byte-identical numbers.
-//!
-//! Reported per (policy, DP): throughput, TTFT p50/p95, peak total pages,
-//! engine-prefilled tokens, prefix-hit tokens. The acceptance rows are the
-//! affinity/shortest-queue ratios (pages < 1, TTFT p95 < 1) and the DP
-//! throughput scaling.
+//! A thin scenario config over `snapmla::simulate`: the REAL routing
+//! policies (`coordinator::router`) and the REAL mixed chunked-prefill
+//! `Scheduler` on every rank; each round every rank with work takes one
+//! scheduler action and the round costs the slowest rank's step (calibrated
+//! H20 analytical model, including the TP all-reduce term). Admission
+//! adopts a rank's published prefix pages exactly like the serving path,
+//! so affinity routing holds each group prefix once per cluster instead of
+//! once per rank. No wall clock anywhere — two runs produce byte-identical
+//! numbers. (The straggler variant of this study — a 1.5x-slow rank the
+//! lock-step core cannot express — lives in `serve_straggler`.)
 //!
 //!     cargo bench --bench serve_cluster [-- --quick]
 //!
 //! Quick mode runs a shorter trace over DP ∈ {1, 2} only (the regression
 //! gate skips metrics absent in quick reports). The full run also refreshes
 //! BENCH_cluster.json at the repo root. `python/tests/serve_cluster_port.py`
-//! is the exact Python port that generated the committed baseline in a
-//! container without a Rust toolchain.
+//! is the exact Python port (thin wrapper over serve_port_common.py) that
+//! generated the committed baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::router::{pick_rank, pick_rank_affinity, RankLoad};
-use snapmla::coordinator::scheduler::{
-    Action, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
-};
-use snapmla::perfmodel::e2e::{decode_step_s, mixed_step_s, prefill_step_s, spill_s};
-use snapmla::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::simulate::scenario::cluster_result_json;
+use snapmla::simulate::{Scenario, SimRoute, NODE_GPUS};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
-use snapmla::util::stats::Summary;
 use snapmla::util::table::{f1, f3, Table};
-use snapmla::workload::{Request, TraceConfig, TraceGen};
+use snapmla::workload::{TraceConfig, TraceGen};
 
 const PAGE: usize = 64;
 const CAPACITY_PAGES: usize = 768; // per rank
-const NODE_GPUS: usize = 8;
 const DP_FULL: [usize; 3] = [1, 2, 4];
 const DP_QUICK: [usize; 2] = [1, 2];
-
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Policy {
-    ShortestQueue,
-    PrefixAffinity,
-}
-
-impl Policy {
-    fn name(&self) -> &'static str {
-        match self {
-            Policy::ShortestQueue => "shortest_queue",
-            Policy::PrefixAffinity => "prefix_affinity",
-        }
-    }
-}
-
-struct SimSeq {
-    prompt: usize,
-    out: usize,
-    arrival: f64,
-    group: Option<u32>,
-    prefix_tokens: usize,
-    cached: usize,
-    prefilled: usize,
-    generated: usize,
-    spilled: bool,
-    /// prefix pages adopted from the rank's published set (never allocated)
-    adopted: usize,
-    /// own pages that became the rank's published copy (never freed)
-    transferred: usize,
-    first_token: Option<f64>,
-}
-
-struct SimRank {
-    waiting: Vec<usize>,
-    running: Vec<usize>,
-    free: usize,
-    /// published prefix pages per group (the rank's trie, page-granular)
-    shared: Vec<usize>,
-}
-
-struct SimResult {
-    policy: &'static str,
-    dp: usize,
-    requests: usize,
-    gen_tokens: u64,
-    wall_s: f64,
-    ttft: Summary,
-    peak_pages: usize,
-    prefill_tokens: u64,
-    prefix_hit_tokens: u64,
-    decode_steps: u64,
-    decode_batch_sum: u64,
-    rounds: u64,
-    spills: u64,
-    routed: Vec<u64>,
-}
-
-impl SimResult {
-    fn tok_per_s(&self) -> f64 {
-        self.gen_tokens as f64 / self.wall_s
-    }
-}
-
-fn pages_for(tokens: usize) -> usize {
-    tokens.div_ceil(PAGE)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn simulate_cluster(
-    policy: Policy,
-    dp: usize,
-    trace: &[Request],
-    sched_cfg: SchedulerConfig,
-    gpu: &GpuSpec,
-    model: &ModelSpec,
-    kind: KernelKind,
-    groups: usize,
-) -> SimResult {
-    let dcfg = DeploymentConfig { dp, tp: NODE_GPUS / dp };
-    let sched = Scheduler::new(sched_cfg);
-    let mut seqs: Vec<SimSeq> = trace
-        .iter()
-        .map(|r| SimSeq {
-            prompt: r.prompt_tokens,
-            out: r.max_new_tokens,
-            arrival: r.arrival_s,
-            group: r.prefix_group,
-            prefix_tokens: r.prefix_tokens,
-            cached: 0,
-            prefilled: 0,
-            generated: 0,
-            spilled: false,
-            adopted: 0,
-            transferred: 0,
-            first_token: None,
-        })
-        .collect();
-    let mut ranks: Vec<SimRank> = (0..dp)
-        .map(|_| SimRank {
-            waiting: Vec::new(),
-            running: Vec::new(),
-            free: CAPACITY_PAGES,
-            shared: vec![0; groups],
-        })
-        .collect();
-    let mut clock = 0.0f64;
-    let mut next_arrival = 0usize;
-    let mut out = SimResult {
-        policy: policy.name(),
-        dp,
-        requests: trace.len(),
-        gen_tokens: 0,
-        wall_s: 0.0,
-        ttft: Summary::new(),
-        peak_pages: 0,
-        prefill_tokens: 0,
-        prefix_hit_tokens: 0,
-        decode_steps: 0,
-        decode_batch_sum: 0,
-        rounds: 0,
-        spills: 0,
-        routed: vec![0; dp],
-    };
-
-    // published pages of `sid`'s group usable by a fresh admission (the
-    // adopt limit: ≥1 prompt token always left to prefill)
-    let hit_pages = |ranks: &[SimRank], rank: usize, s: &SimSeq| -> usize {
-        match s.group {
-            Some(g) => ranks[rank].shared[g as usize].min((s.prompt - 1) / PAGE),
-            None => 0,
-        }
-    };
-
-    let route = |ranks: &mut [SimRank], seqs: &[SimSeq], out: &mut SimResult, sid: usize| {
-        let s = &seqs[sid];
-        let pages_needed = pages_for(s.prompt + s.out);
-        let loads: Vec<RankLoad> = (0..dp)
-            .map(|ri| {
-                let r = &ranks[ri];
-                let queued: usize =
-                    r.waiting.iter().map(|&w| seqs[w].prompt + seqs[w].out).sum();
-                let remaining: usize =
-                    r.running.iter().map(|&x| seqs[x].out - seqs[x].generated).sum();
-                RankLoad {
-                    tokens: queued + remaining,
-                    free_pages: r.free,
-                    pages_needed,
-                    prefix_hit_tokens: hit_pages(ranks, ri, s) * PAGE,
-                    evictable_pages: 0,
-                }
-            })
-            .collect();
-        let rank = match policy {
-            Policy::ShortestQueue => pick_rank(&loads),
-            Policy::PrefixAffinity => pick_rank_affinity(&loads, PAGE),
-        };
-        out.routed[rank] += 1;
-        ranks[rank].waiting.push(sid);
-    };
-
-    let mut rounds = 0usize;
-    while next_arrival < trace.len()
-        || ranks.iter().any(|r| !r.waiting.is_empty() || !r.running.is_empty())
-    {
-        rounds += 1;
-        assert!(rounds <= 500_000, "sim runaway");
-        while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-            route(&mut ranks, &seqs, &mut out, next_arrival);
-            next_arrival += 1;
-        }
-
-        // one lock-step round: every rank takes one scheduler action off
-        // its pre-round state; the round costs the slowest rank's step
-        let mut round_cost = 0.0f64;
-        let mut progressed = false;
-        for r in ranks.iter_mut() {
-            if r.waiting.is_empty() && r.running.is_empty() {
-                continue;
-            }
-            let wview: Vec<WaitingSeq> = r
-                .waiting
-                .iter()
-                .enumerate()
-                .map(|(i, &sid)| WaitingSeq {
-                    idx: i,
-                    tokens: if seqs[sid].spilled { seqs[sid].cached } else { seqs[sid].prompt },
-                    spilled: seqs[sid].spilled,
-                })
-                .collect();
-            let rview: Vec<RunningSeq> = r
-                .running
-                .iter()
-                .enumerate()
-                .map(|(i, &sid)| RunningSeq {
-                    idx: i,
-                    context: seqs[sid].cached,
-                    pending_prefill: seqs[sid].prompt - seqs[sid].prefilled,
-                })
-                .collect();
-            let action = sched.decide(&wview, &rview, r.free);
-            if action == Action::Idle {
-                continue;
-            }
-            progressed = true;
-            let cost = apply_action(r, &mut seqs, &mut out, action, gpu, model, &dcfg, kind);
-            round_cost = round_cost.max(cost);
-        }
-        if !progressed {
-            if next_arrival < trace.len() {
-                clock = clock.max(trace[next_arrival].arrival_s);
-                continue;
-            }
-            panic!("cluster deadlock");
-        }
-        clock += round_cost;
-        for s in seqs.iter_mut() {
-            if s.first_token.is_none() && s.generated > 0 {
-                s.first_token = Some(clock);
-            }
-        }
-        out.rounds += 1;
-        let used: usize = ranks.iter().map(|r| CAPACITY_PAGES - r.free).sum();
-        out.peak_pages = out.peak_pages.max(used);
-    }
-
-    for s in &seqs {
-        out.ttft.push(s.first_token.expect("all sequences finished") - s.arrival);
-    }
-    out.wall_s = clock;
-    out
-}
-
-#[allow(clippy::too_many_arguments)]
-fn apply_action(
-    r: &mut SimRank,
-    seqs: &mut [SimSeq],
-    out: &mut SimResult,
-    action: Action,
-    gpu: &GpuSpec,
-    model: &ModelSpec,
-    dcfg: &DeploymentConfig,
-    kind: KernelKind,
-) -> f64 {
-    let private_pages = |s: &SimSeq| pages_for(s.cached) - s.adopted - s.transferred;
-    let publish = |r: &mut SimRank, s: &mut SimSeq| {
-        let Some(g) = s.group else { return };
-        let done = s.prefilled.min(s.prefix_tokens) / PAGE;
-        let have = r.shared[g as usize];
-        if done > have {
-            s.transferred += done - have;
-            r.shared[g as usize] = done;
-        }
-    };
-    match action {
-        Action::Idle => 0.0,
-        Action::Prefill(idxs) => {
-            // monolithic admission re-prefills even on a hit (the
-            // whole-prompt engine call cannot skip adopted tokens) but
-            // publishes its prefix pages afterwards — mirrors Server
-            let ids: Vec<usize> = idxs.iter().map(|&i| r.waiting[i]).collect();
-            r.waiting.drain(..ids.len());
-            let total: usize = ids.iter().map(|&sid| seqs[sid].prompt).sum();
-            out.prefill_tokens += total as u64;
-            let cost = prefill_step_s(gpu, model, dcfg, total, kind);
-            for sid in ids {
-                let s = &mut seqs[sid];
-                r.free -= pages_for(s.prompt);
-                s.cached = s.prompt;
-                s.prefilled = s.prompt;
-                publish(r, s);
-                let s = &mut seqs[sid];
-                s.generated = 1;
-                out.gen_tokens += 1;
-                if s.generated >= s.out {
-                    r.free += private_pages(s);
-                } else {
-                    r.running.push(sid);
-                }
-            }
-            cost
-        }
-        Action::Decode(idxs) => {
-            let ids: Vec<usize> = idxs.iter().map(|&i| r.running[i]).collect();
-            let ctx = ids.iter().map(|&sid| seqs[sid].cached).max().unwrap() + 1;
-            let cost = decode_step_s(gpu, model, dcfg, ids.len(), ctx, kind);
-            out.decode_steps += 1;
-            out.decode_batch_sum += ids.len() as u64;
-            for &sid in &ids {
-                let s = &mut seqs[sid];
-                if s.cached % PAGE == 0 {
-                    r.free -= 1;
-                }
-                s.cached += 1;
-                s.generated += 1;
-                out.gen_tokens += 1;
-                if s.generated >= s.out {
-                    r.free += private_pages(s);
-                    r.running.retain(|&x| x != sid);
-                }
-            }
-            cost
-        }
-        Action::Mixed { prefill_chunks, decode_idxs } => {
-            let n_admit = prefill_chunks.iter().filter(|c| c.from_waiting).count();
-            let admitted: Vec<usize> = r.waiting.drain(..n_admit).collect();
-            // admission adopts the rank's published prefix pages (shared,
-            // no allocation) — mirrors PagedKvCache::adopt_prefix
-            for &sid in &admitted {
-                let s = &mut seqs[sid];
-                if let Some(g) = s.group {
-                    let hit = r.shared[g as usize].min((s.prompt - 1) / PAGE);
-                    if hit > 0 {
-                        s.adopted = hit;
-                        s.cached = hit * PAGE;
-                        s.prefilled = hit * PAGE;
-                        out.prefix_hit_tokens += (hit * PAGE) as u64;
-                    }
-                }
-            }
-            let chunk_plan: Vec<(usize, usize)> = prefill_chunks
-                .iter()
-                .map(|c| {
-                    let sid = if c.from_waiting { admitted[c.idx] } else { r.running[c.idx] };
-                    let take = c.tokens.min(seqs[sid].prompt - seqs[sid].prefilled);
-                    (sid, take)
-                })
-                .collect();
-            r.running.extend(&admitted);
-            let decode_ids: Vec<usize> = decode_idxs.iter().map(|&i| r.running[i]).collect();
-            let total_chunk: usize = chunk_plan.iter().map(|&(_, t)| t).sum();
-            let dctx = decode_ids
-                .iter()
-                .map(|&sid| seqs[sid].cached)
-                .max()
-                .map(|c| c + 1)
-                .unwrap_or(0);
-            let cctx = chunk_plan.iter().map(|&(sid, t)| seqs[sid].cached + t).max().unwrap_or(0);
-            let cost =
-                mixed_step_s(gpu, model, dcfg, decode_ids.len(), dctx, total_chunk, cctx, kind);
-            if !decode_ids.is_empty() {
-                out.decode_steps += 1;
-                out.decode_batch_sum += decode_ids.len() as u64;
-            }
-            for &(sid, take) in &chunk_plan {
-                let s = &mut seqs[sid];
-                r.free -= pages_for(s.cached + take) - pages_for(s.cached);
-                s.cached += take;
-                s.prefilled += take;
-                out.prefill_tokens += take as u64;
-                publish(r, s);
-                let s = &mut seqs[sid];
-                if s.prefilled == s.prompt {
-                    s.generated = 1;
-                    out.gen_tokens += 1;
-                    if s.generated >= s.out {
-                        r.free += private_pages(s);
-                        r.running.retain(|&x| x != sid);
-                    }
-                }
-            }
-            for &sid in &decode_ids {
-                let s = &mut seqs[sid];
-                if s.cached % PAGE == 0 {
-                    r.free -= 1;
-                }
-                s.cached += 1;
-                s.generated += 1;
-                out.gen_tokens += 1;
-                if s.generated >= s.out {
-                    r.free += private_pages(s);
-                    r.running.retain(|&x| x != sid);
-                }
-            }
-            cost
-        }
-        Action::Resume(_) => {
-            let sid = r.waiting.remove(0);
-            let s = &mut seqs[sid];
-            let cost = spill_s(gpu, model, s.cached, kind);
-            r.free -= pages_for(s.cached);
-            s.spilled = false;
-            s.adopted = 0;
-            s.transferred = 0;
-            r.running.push(sid);
-            cost
-        }
-        Action::Preempt(idx) => {
-            let sid = r.running.remove(idx);
-            let s = &mut seqs[sid];
-            let cost = spill_s(gpu, model, s.cached, kind);
-            r.free += private_pages(s);
-            // the spill snapshot privatizes adopted pages (exactness over
-            // dedup): the restore reallocates every page
-            s.adopted = 0;
-            s.transferred = 0;
-            s.spilled = true;
-            out.spills += 1;
-            r.waiting.insert(0, sid);
-            cost
-        }
-        // colocated ranks never hand off (disagg_prefill is unset)
-        Action::Handoff(_) => unreachable!("colocated scheduler"),
-    }
-}
-
-fn result_json(r: &SimResult) -> Json {
-    Json::obj(vec![
-        ("policy", Json::str(r.policy)),
-        ("dp", Json::num(r.dp as f64)),
-        ("requests", Json::num(r.requests as f64)),
-        ("gen_tokens", Json::num(r.gen_tokens as f64)),
-        ("wall_s", Json::num(r.wall_s)),
-        ("tok_per_s", Json::num(r.tok_per_s())),
-        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
-        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
-        ("peak_pages", Json::num(r.peak_pages as f64)),
-        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
-        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
-        (
-            "mean_decode_batch",
-            Json::num(r.decode_batch_sum as f64 / r.decode_steps.max(1) as f64),
-        ),
-        ("rounds", Json::num(r.rounds as f64)),
-        ("spills", Json::num(r.spills as f64)),
-        ("routed", Json::arr(r.routed.iter().map(|&n| Json::num(n as f64)))),
-    ])
-}
 
 fn main() {
     let args = Args::parse_with_flags(&["quick"]);
@@ -508,9 +70,6 @@ fn main() {
         disagg_prefill: false,
         policy: SchedPolicy::MixedChunked,
     };
-    let gpu = GpuSpec::h20();
-    let model = ModelSpec::deepseek_v31();
-    let kind = KernelKind::SnapMlaFp8;
     let dps: &[usize] = if quick { &DP_QUICK } else { &DP_FULL };
 
     let mut t = Table::new(
@@ -522,17 +81,14 @@ fn main() {
     let mut scaling: Vec<(String, f64)> = Vec::new();
     let mut base_tok_per_s = 0.0;
     for &dp in dps {
-        let groups = trace_cfg.shared_prefix_groups;
-        let sq = simulate_cluster(
-            Policy::ShortestQueue, dp, &trace, sched_cfg, &gpu, &model, kind, groups,
-        );
-        let aff = simulate_cluster(
-            Policy::PrefixAffinity, dp, &trace, sched_cfg, &gpu, &model, kind, groups,
-        );
-        for r in [&sq, &aff] {
+        let sq = Scenario::cluster(SimRoute::ShortestQueue, dp, sched_cfg, CAPACITY_PAGES)
+            .run(&trace);
+        let aff = Scenario::cluster(SimRoute::PrefixAffinity, dp, sched_cfg, CAPACITY_PAGES)
+            .run(&trace);
+        for (name, r) in [("shortest_queue", &sq), ("prefix_affinity", &aff)] {
             t.row(vec![
                 dp.to_string(),
-                r.policy.into(),
+                name.into(),
                 f1(r.tok_per_s()),
                 f1(r.ttft.median() * 1e3),
                 f1(r.ttft.percentile(95.0) * 1e3),
@@ -571,8 +127,8 @@ fn main() {
         results.push((
             Box::leak(format!("dp{dp}").into_boxed_str()),
             Json::obj(vec![
-                ("shortest_queue", result_json(&sq)),
-                ("prefix_affinity", result_json(&aff)),
+                ("shortest_queue", cluster_result_json("shortest_queue", dp, &sq)),
+                ("prefix_affinity", cluster_result_json("prefix_affinity", dp, &aff)),
                 ("affinity_vs_sq", ratios),
             ]),
         ));
@@ -593,7 +149,7 @@ fn main() {
                 ("out_tokens", Json::str("48..=128")),
                 ("capacity_pages_per_rank", Json::num(CAPACITY_PAGES as f64)),
                 ("node_gpus", Json::num(NODE_GPUS as f64)),
-                ("model", Json::str(model.name)),
+                ("model", Json::str("DeepSeek-V3.1")),
                 ("kernel", Json::str("SnapMLA FP8")),
             ]),
         ),

@@ -1,29 +1,17 @@
 //! serve_disagg — disaggregated prefill/decode serving vs colocated DP at
 //! equal rank count, on a long-prompt + shared-prefix mixture, in
-//! **asynchronous** virtual time: every rank owns its clock and advances by
-//! its own step costs (disaggregation's whole point is that prefill and
-//! decode stress different roofline regimes — lock-stepping the
-//! heterogeneous ranks would charge every decode step the prefill rank's
-//! long GEMM-bound steps). Both arms run the same event loop, cost model
-//! (calibrated H20 analytical model) and REAL scheduler policy
-//! (`coordinator::scheduler`), so the comparison isolates the topology:
+//! **event-driven** per-rank virtual time (disaggregation's whole point is
+//! that prefill and decode stress different roofline regimes — lock-
+//! stepping the heterogeneous ranks would charge every decode step the
+//! prefill rank's long GEMM-bound steps).
 //!
-//! * colocated arm: every rank runs the full lifecycle (mixed chunked
-//!   prefill), requests routed by prefix affinity (`pick_rank_affinity`),
-//! * disagg arm: the first `prefill_ranks` (= n/2) ranks run big-chunk
-//!   prefill only (chunked admission adopts published prompt prefixes; the
-//!   monolithic fallback is off under `disagg_prefill`) and hand each
-//!   finished sequence to a decode rank as a `kvcache::transfer::KvWireBlock`
-//!   — per-token e4m3 NoPE bytes + f32 scales + bf16 RoPE, 644 vs 1152
-//!   B/token/layer for a bf16-everything transfer — priced over the NVLink
-//!   link (`perfmodel::e2e::handoff_s`) and overlapped with the rank's next
-//!   step. Admissions go to the least-loaded prefill rank (`pick_rank`);
-//!   migrants land on the decode rank picked by `pick_handoff_rank`.
-//!
-//! Reported per (arm, n): throughput, TTFT p50/p95, inter-token latency
-//! p50/p95 (the decode-purity headline: colocated decode steps carry chunk
-//! overhead, disagg decode steps do not), peak pages, transferred GB on
-//! the FP8 wire vs the bf16-everything equivalent.
+//! A thin scenario config over `snapmla::simulate`: both arms run the same
+//! harness, cost model and REAL scheduler policy, so the comparison
+//! isolates the topology — the disagg arm's first n/2 ranks run big-chunk
+//! prefill only and hand each finished sequence to a decode rank as a
+//! `kvcache::transfer::KvWireBlock` (644 vs 1152 B/token/layer bf16-
+//! everything) priced over the NVLink link and overlapped with the rank's
+//! next step.
 //!
 //!     cargo bench --bench serve_disagg [-- --quick]
 //!
@@ -31,29 +19,21 @@
 //! trace: the sim is deterministic, so quick n2 ratios equal the committed
 //! baseline exactly unless the scheduler/router/cost model changed. The
 //! full run also refreshes BENCH_disagg.json at the repo root.
-//! `python/tests/serve_disagg_port.py` is the exact Python port that
-//! generated the committed baseline in a container without a Rust
-//! toolchain.
+//! `python/tests/serve_disagg_port.py` is the exact Python port (thin
+//! wrapper over serve_port_common.py) that generated the committed
+//! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::router::{
-    pick_handoff_rank, pick_rank, pick_rank_affinity, RankLoad,
-};
-use snapmla::coordinator::scheduler::{
-    Action, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
-};
-use snapmla::perfmodel::e2e::{
-    decode_step_s, handoff_s, mixed_step_s, prefill_step_s, spill_s,
-};
-use snapmla::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::perfmodel::{KernelKind, ModelSpec};
+use snapmla::simulate::scenario::disagg_result_json;
+use snapmla::simulate::{Scenario, NODE_GPUS};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
-use snapmla::util::stats::Summary;
 use snapmla::util::table::{f1, f3, Table};
-use snapmla::workload::{Request, TraceConfig, TraceGen};
+use snapmla::workload::{TraceConfig, TraceGen};
 
 const PAGE: usize = 64;
 const CAPACITY_PAGES: usize = 768; // per rank
-const NODE_GPUS: usize = 8;
 const N_FULL: [usize; 2] = [2, 4];
 const N_QUICK: [usize; 1] = [2];
 
@@ -62,667 +42,6 @@ const N_QUICK: [usize; 1] = [2];
 /// the A/B holds total rank count equal.
 fn prefill_split(n: usize) -> usize {
     n / 2
-}
-
-struct SimSeq {
-    prompt: usize,
-    out: usize,
-    arrival: f64,
-    group: Option<u32>,
-    prefix_tokens: usize,
-    cached: usize,
-    prefilled: usize,
-    generated: usize,
-    spilled: bool,
-    /// prefix pages adopted from the rank's published set (never allocated)
-    adopted: usize,
-    /// own pages that became the rank's published copy (never freed)
-    transferred: usize,
-    first_token: Option<f64>,
-    last_token: Option<f64>,
-}
-
-struct SimRank {
-    waiting: Vec<usize>,
-    running: Vec<usize>,
-    free: usize,
-    /// published prefix pages per group (the rank's trie, page-granular)
-    shared: Vec<usize>,
-    /// rank-local clock (asynchronous virtual time)
-    t: f64,
-}
-
-#[derive(Default)]
-struct SimStats {
-    gen_tokens: u64,
-    prefill_tokens: u64,
-    prefix_hit_tokens: u64,
-    decode_steps: u64,
-    decode_batch_sum: u64,
-    steps: u64,
-    peak_pages: usize,
-    spills: u64,
-    handoffs: u64,
-    wire_fp8_bytes: u64,
-    wire_bf16_bytes: u64,
-    routed: Vec<u64>,
-}
-
-struct SimResult {
-    policy: &'static str,
-    ranks: usize,
-    prefill_ranks: usize,
-    decode_ranks: usize,
-    requests: usize,
-    gen_tokens: u64,
-    wall_s: f64,
-    ttft: Summary,
-    itl: Summary,
-    peak_pages: usize,
-    prefill_tokens: u64,
-    prefix_hit_tokens: u64,
-    decode_steps: u64,
-    decode_batch_sum: u64,
-    steps: u64,
-    spills: u64,
-    handoffs: u64,
-    wire_fp8_bytes: u64,
-    wire_bf16_bytes: u64,
-    routed: Vec<u64>,
-}
-
-impl SimResult {
-    fn tok_per_s(&self) -> f64 {
-        self.gen_tokens as f64 / self.wall_s
-    }
-}
-
-fn pages_for(tokens: usize) -> usize {
-    tokens.div_ceil(PAGE)
-}
-
-struct Sim {
-    n: usize,
-    prefill_ranks: usize,
-    dcfg: DeploymentConfig,
-    sched_decode: Scheduler,
-    sched_prefill: Scheduler,
-    gpu: GpuSpec,
-    model: ModelSpec,
-    kind: KernelKind,
-    max_running: usize,
-    seqs: Vec<SimSeq>,
-    ranks: Vec<SimRank>,
-    /// (sid, ready_at) FIFO of serialized sequences in transit
-    in_flight: Vec<(usize, f64)>,
-    stats: SimStats,
-    itl: Vec<f64>,
-}
-
-impl Sim {
-    fn private_pages(&self, sid: usize) -> usize {
-        let s = &self.seqs[sid];
-        pages_for(s.cached) - s.adopted - s.transferred
-    }
-
-    fn emit(&mut self, sid: usize, t: f64) {
-        if let Some(last) = self.seqs[sid].last_token {
-            self.itl.push(t - last);
-        }
-        self.seqs[sid].last_token = Some(t);
-        self.stats.gen_tokens += 1;
-    }
-
-    fn hit_pages(&self, rank: usize, sid: usize) -> usize {
-        let s = &self.seqs[sid];
-        match s.group {
-            Some(g) => self.ranks[rank].shared[g as usize].min((s.prompt - 1) / PAGE),
-            None => 0,
-        }
-    }
-
-    fn route(&mut self, sid: usize) {
-        let s = &self.seqs[sid];
-        let rank = if self.prefill_ranks == 0 {
-            // colocated: prefix-affinity over every rank
-            let needed = pages_for(s.prompt + s.out);
-            let loads: Vec<RankLoad> = (0..self.n)
-                .map(|ri| {
-                    let r = &self.ranks[ri];
-                    let queued: usize =
-                        r.waiting.iter().map(|&w| self.seqs[w].prompt + self.seqs[w].out).sum();
-                    let remaining: usize = r
-                        .running
-                        .iter()
-                        .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                        .sum();
-                    RankLoad {
-                        tokens: queued + remaining,
-                        free_pages: r.free,
-                        pages_needed: needed,
-                        prefix_hit_tokens: self.hit_pages(ri, sid) * PAGE,
-                        evictable_pages: 0,
-                    }
-                })
-                .collect();
-            pick_rank_affinity(&loads, PAGE)
-        } else {
-            // disagg: least-loaded prefill rank; a prefill rank holds just
-            // the prompt's pages (the KV migrates at handoff)
-            let needed = pages_for(s.prompt);
-            let loads: Vec<RankLoad> = (0..self.prefill_ranks)
-                .map(|ri| {
-                    let r = &self.ranks[ri];
-                    let queued: usize =
-                        r.waiting.iter().map(|&w| self.seqs[w].prompt + self.seqs[w].out).sum();
-                    let remaining: usize = r
-                        .running
-                        .iter()
-                        .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                        .sum();
-                    RankLoad {
-                        tokens: queued + remaining,
-                        free_pages: r.free,
-                        pages_needed: needed,
-                        prefix_hit_tokens: 0,
-                        evictable_pages: 0,
-                    }
-                })
-                .collect();
-            pick_rank(&loads)
-        };
-        self.stats.routed[rank] += 1;
-        self.ranks[rank].waiting.push(sid);
-    }
-
-    /// Every ready transfer lands on the decode rank with headroom;
-    /// slot-saturated ranks are marked infeasible by inflating their need.
-    fn deliver(&mut self, clock: f64) -> bool {
-        let mut delivered = false;
-        let mut keep = Vec::new();
-        let pending = std::mem::take(&mut self.in_flight);
-        for (sid, ready) in pending {
-            if ready > clock {
-                keep.push((sid, ready));
-                continue;
-            }
-            let s = &self.seqs[sid];
-            let remaining = s.out - s.generated;
-            let needed = pages_for(s.cached + remaining);
-            let loads: Vec<RankLoad> = (self.prefill_ranks..self.n)
-                .map(|ri| {
-                    let r = &self.ranks[ri];
-                    let tokens: usize = r
-                        .running
-                        .iter()
-                        .chain(r.waiting.iter())
-                        .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                        .sum();
-                    let open_slot = r.running.len() < self.max_running;
-                    RankLoad {
-                        tokens,
-                        free_pages: r.free,
-                        pages_needed: if open_slot { needed } else { CAPACITY_PAGES + 1 },
-                        prefix_hit_tokens: 0,
-                        evictable_pages: 0,
-                    }
-                })
-                .collect();
-            match pick_handoff_rank(&loads) {
-                Some(j) => {
-                    let r = &mut self.ranks[self.prefill_ranks + j];
-                    r.free -= pages_for(self.seqs[sid].cached);
-                    r.running.push(sid);
-                    self.stats.handoffs += 1;
-                    delivered = true;
-                }
-                None => keep.push((sid, ready)),
-            }
-        }
-        self.in_flight = keep;
-        delivered
-    }
-
-    fn publish(&mut self, rank: usize, sid: usize) {
-        let Some(g) = self.seqs[sid].group else { return };
-        let done = self.seqs[sid].prefilled.min(self.seqs[sid].prefix_tokens) / PAGE;
-        let have = self.ranks[rank].shared[g as usize];
-        if done > have {
-            self.seqs[sid].transferred += done - have;
-            self.ranks[rank].shared[g as usize] = done;
-        }
-    }
-
-    /// Apply one scheduler action on rank `ri`; returns its cost. First
-    /// tokens are stamped at the rank-local completion time t_start + cost.
-    fn apply(&mut self, ri: usize, action: Action, t_start: f64) -> f64 {
-        match action {
-            Action::Idle => 0.0,
-            Action::Prefill(idxs) => {
-                let ids: Vec<usize> =
-                    idxs.iter().map(|&i| self.ranks[ri].waiting[i]).collect();
-                self.ranks[ri].waiting.drain(..ids.len());
-                let total: usize = ids.iter().map(|&sid| self.seqs[sid].prompt).sum();
-                let cost = prefill_step_s(&self.gpu, &self.model, &self.dcfg, total, self.kind);
-                self.stats.prefill_tokens += total as u64;
-                for sid in ids {
-                    let prompt = self.seqs[sid].prompt;
-                    self.ranks[ri].free -= pages_for(prompt);
-                    let s = &mut self.seqs[sid];
-                    s.cached = prompt;
-                    s.prefilled = prompt;
-                    self.publish(ri, sid);
-                    let s = &mut self.seqs[sid];
-                    s.generated = 1;
-                    s.first_token = Some(t_start + cost);
-                    self.emit(sid, t_start + cost);
-                    if self.seqs[sid].generated >= self.seqs[sid].out {
-                        let freed = self.private_pages(sid);
-                        self.ranks[ri].free += freed;
-                    } else {
-                        self.ranks[ri].running.push(sid);
-                    }
-                }
-                cost
-            }
-            Action::Handoff(idx) => {
-                // serialize + free this rank's pages; the wire block rides
-                // the link overlapped with the rank's next step
-                let sid = self.ranks[ri].running.remove(idx);
-                let freed = self.private_pages(sid);
-                self.ranks[ri].free += freed;
-                let fp8_per_tok = self.model.kv_bytes_per_token(KernelKind::SnapMlaFp8) as u64;
-                let bf16_per_tok = self.model.kv_bytes_per_token(KernelKind::FlashMlaBf16) as u64;
-                let s = &mut self.seqs[sid];
-                s.adopted = 0;
-                s.transferred = 0;
-                let cached = s.cached;
-                self.stats.wire_fp8_bytes += fp8_per_tok * cached as u64;
-                self.stats.wire_bf16_bytes += bf16_per_tok * cached as u64;
-                let transfer = handoff_s(&self.gpu, &self.model, cached, self.kind);
-                self.in_flight.push((sid, t_start + transfer));
-                0.0
-            }
-            Action::Decode(idxs) => {
-                let ids: Vec<usize> =
-                    idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
-                let ctx = ids.iter().map(|&sid| self.seqs[sid].cached).max().unwrap() + 1;
-                let cost =
-                    decode_step_s(&self.gpu, &self.model, &self.dcfg, ids.len(), ctx, self.kind);
-                self.stats.decode_steps += 1;
-                self.stats.decode_batch_sum += ids.len() as u64;
-                let mut done = Vec::new();
-                for &sid in &ids {
-                    let s = &mut self.seqs[sid];
-                    if s.cached % PAGE == 0 {
-                        self.ranks[ri].free -= 1;
-                    }
-                    let s = &mut self.seqs[sid];
-                    s.cached += 1;
-                    s.generated += 1;
-                    self.emit(sid, t_start + cost);
-                    if self.seqs[sid].generated >= self.seqs[sid].out {
-                        done.push(sid);
-                    }
-                }
-                for sid in done {
-                    let freed = self.private_pages(sid);
-                    self.ranks[ri].free += freed;
-                    self.ranks[ri].running.retain(|&x| x != sid);
-                }
-                cost
-            }
-            Action::Mixed { prefill_chunks, decode_idxs } => {
-                let n_admit = prefill_chunks.iter().filter(|c| c.from_waiting).count();
-                let admitted: Vec<usize> =
-                    self.ranks[ri].waiting.drain(..n_admit).collect();
-                // admission adopts the rank's published prefix pages
-                // (shared, no allocation) — mirrors PagedKvCache::adopt_prefix
-                for &sid in &admitted {
-                    let hit = self.hit_pages(ri, sid);
-                    if hit > 0 {
-                        let s = &mut self.seqs[sid];
-                        s.adopted = hit;
-                        s.cached = hit * PAGE;
-                        s.prefilled = hit * PAGE;
-                        self.stats.prefix_hit_tokens += (hit * PAGE) as u64;
-                    }
-                }
-                let chunk_plan: Vec<(usize, usize)> = prefill_chunks
-                    .iter()
-                    .map(|c| {
-                        let sid = if c.from_waiting {
-                            admitted[c.idx]
-                        } else {
-                            self.ranks[ri].running[c.idx]
-                        };
-                        let s = &self.seqs[sid];
-                        (sid, c.tokens.min(s.prompt - s.prefilled))
-                    })
-                    .collect();
-                self.ranks[ri].running.extend(&admitted);
-                let decode_ids: Vec<usize> =
-                    decode_idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
-                let total_chunk: usize = chunk_plan.iter().map(|&(_, t)| t).sum();
-                let dctx = decode_ids
-                    .iter()
-                    .map(|&sid| self.seqs[sid].cached)
-                    .max()
-                    .map(|c| c + 1)
-                    .unwrap_or(0);
-                let cctx =
-                    chunk_plan.iter().map(|&(sid, t)| self.seqs[sid].cached + t).max().unwrap_or(0);
-                let cost = mixed_step_s(
-                    &self.gpu,
-                    &self.model,
-                    &self.dcfg,
-                    decode_ids.len(),
-                    dctx,
-                    total_chunk,
-                    cctx,
-                    self.kind,
-                );
-                if !decode_ids.is_empty() {
-                    self.stats.decode_steps += 1;
-                    self.stats.decode_batch_sum += decode_ids.len() as u64;
-                }
-                let mut done = Vec::new();
-                for &(sid, take) in &chunk_plan {
-                    let s = &self.seqs[sid];
-                    let need = pages_for(s.cached + take) - pages_for(s.cached);
-                    self.ranks[ri].free -= need;
-                    let s = &mut self.seqs[sid];
-                    s.cached += take;
-                    s.prefilled += take;
-                    self.stats.prefill_tokens += take as u64;
-                    self.publish(ri, sid);
-                    let s = &mut self.seqs[sid];
-                    if s.prefilled == s.prompt {
-                        s.generated = 1;
-                        s.first_token = Some(t_start + cost);
-                        self.emit(sid, t_start + cost);
-                        if self.seqs[sid].generated >= self.seqs[sid].out {
-                            done.push(sid);
-                        }
-                    }
-                }
-                for &sid in &decode_ids {
-                    let s = &mut self.seqs[sid];
-                    if s.cached % PAGE == 0 {
-                        self.ranks[ri].free -= 1;
-                    }
-                    let s = &mut self.seqs[sid];
-                    s.cached += 1;
-                    s.generated += 1;
-                    self.emit(sid, t_start + cost);
-                    if self.seqs[sid].generated >= self.seqs[sid].out {
-                        done.push(sid);
-                    }
-                }
-                for sid in done {
-                    let freed = self.private_pages(sid);
-                    self.ranks[ri].free += freed;
-                    self.ranks[ri].running.retain(|&x| x != sid);
-                }
-                cost
-            }
-            Action::Resume(_) => {
-                let sid = self.ranks[ri].waiting.remove(0);
-                let cached = self.seqs[sid].cached;
-                let cost = spill_s(&self.gpu, &self.model, cached, self.kind);
-                self.ranks[ri].free -= pages_for(cached);
-                self.seqs[sid].spilled = false;
-                self.ranks[ri].running.push(sid);
-                cost
-            }
-            Action::Preempt(idx) => {
-                let sid = self.ranks[ri].running.remove(idx);
-                let cached = self.seqs[sid].cached;
-                let cost = spill_s(&self.gpu, &self.model, cached, self.kind);
-                let freed = self.private_pages(sid);
-                self.ranks[ri].free += freed;
-                let s = &mut self.seqs[sid];
-                s.adopted = 0;
-                s.transferred = 0;
-                s.spilled = true;
-                self.stats.spills += 1;
-                self.ranks[ri].waiting.insert(0, sid);
-                cost
-            }
-        }
-    }
-
-    fn decide(&self, ri: usize) -> Action {
-        let r = &self.ranks[ri];
-        let wview: Vec<WaitingSeq> = r
-            .waiting
-            .iter()
-            .enumerate()
-            .map(|(i, &sid)| WaitingSeq {
-                idx: i,
-                tokens: if self.seqs[sid].spilled {
-                    self.seqs[sid].cached
-                } else {
-                    self.seqs[sid].prompt
-                },
-                spilled: self.seqs[sid].spilled,
-            })
-            .collect();
-        let rview: Vec<RunningSeq> = r
-            .running
-            .iter()
-            .enumerate()
-            .map(|(i, &sid)| RunningSeq {
-                idx: i,
-                context: self.seqs[sid].cached,
-                pending_prefill: self.seqs[sid].prompt - self.seqs[sid].prefilled,
-            })
-            .collect();
-        let sched =
-            if ri < self.prefill_ranks { &self.sched_prefill } else { &self.sched_decode };
-        sched.decide(&wview, &rview, r.free)
-    }
-
-    fn run(mut self, trace: &[Request]) -> SimResult {
-        let mut clock = 0.0f64;
-        let mut next_arrival = 0usize;
-        let mut iters = 0usize;
-        while next_arrival < trace.len()
-            || !self.in_flight.is_empty()
-            || self.ranks.iter().any(|r| !r.waiting.is_empty() || !r.running.is_empty())
-        {
-            iters += 1;
-            assert!(iters <= 2_000_000, "sim runaway");
-            let mut cands: Vec<f64> = self
-                .ranks
-                .iter()
-                .filter(|r| !r.waiting.is_empty() || !r.running.is_empty())
-                .map(|r| r.t)
-                .collect();
-            if next_arrival < trace.len() {
-                cands.push(trace[next_arrival].arrival_s);
-            }
-            cands.extend(self.in_flight.iter().map(|&(_, ready)| ready));
-            let min_cand = cands.iter().copied().fold(f64::INFINITY, f64::min);
-            clock = clock.max(min_cand);
-
-            let mut progressed = false;
-            while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-                self.route(next_arrival);
-                next_arrival += 1;
-                progressed = true;
-            }
-            if self.prefill_ranks > 0 && self.deliver(clock) {
-                progressed = true;
-            }
-
-            for ri in 0..self.n {
-                if self.ranks[ri].t > clock {
-                    continue;
-                }
-                // handoffs cost the rank nothing (serialize + async send):
-                // a prefill rank drains every completed prefill and still
-                // takes its real action at the same instant
-                let action = loop {
-                    if self.ranks[ri].waiting.is_empty() && self.ranks[ri].running.is_empty() {
-                        break Action::Idle;
-                    }
-                    let action = self.decide(ri);
-                    if !matches!(action, Action::Handoff(_)) {
-                        break action;
-                    }
-                    let t = self.ranks[ri].t;
-                    self.apply(ri, action, t);
-                    progressed = true;
-                };
-                if action == Action::Idle {
-                    continue;
-                }
-                let t = self.ranks[ri].t;
-                let cost = self.apply(ri, action, t);
-                self.ranks[ri].t += cost;
-                self.stats.steps += 1;
-                progressed = true;
-            }
-
-            if !progressed {
-                let later =
-                    cands.iter().copied().filter(|&c| c > clock).fold(f64::INFINITY, f64::min);
-                assert!(later.is_finite(), "serve_disagg deadlock");
-                clock = later;
-                continue;
-            }
-            let used: usize = self.ranks.iter().map(|r| CAPACITY_PAGES - r.free).sum();
-            self.stats.peak_pages = self.stats.peak_pages.max(used);
-        }
-
-        let mut wall = clock;
-        for r in &self.ranks {
-            wall = wall.max(r.t);
-        }
-        let mut ttft = Summary::new();
-        for s in &self.seqs {
-            ttft.push(s.first_token.expect("all sequences finished") - s.arrival);
-        }
-        let mut itl = Summary::new();
-        for &x in &self.itl {
-            itl.push(x);
-        }
-        SimResult {
-            policy: if self.prefill_ranks == 0 { "colocated" } else { "disagg" },
-            ranks: self.n,
-            prefill_ranks: self.prefill_ranks,
-            decode_ranks: if self.prefill_ranks == 0 {
-                self.n
-            } else {
-                self.n - self.prefill_ranks
-            },
-            requests: self.seqs.len(),
-            gen_tokens: self.stats.gen_tokens,
-            wall_s: wall,
-            ttft,
-            itl,
-            peak_pages: self.stats.peak_pages,
-            prefill_tokens: self.stats.prefill_tokens,
-            prefix_hit_tokens: self.stats.prefix_hit_tokens,
-            decode_steps: self.stats.decode_steps,
-            decode_batch_sum: self.stats.decode_batch_sum,
-            steps: self.stats.steps,
-            spills: self.stats.spills,
-            handoffs: self.stats.handoffs,
-            wire_fp8_bytes: self.stats.wire_fp8_bytes,
-            wire_bf16_bytes: self.stats.wire_bf16_bytes,
-            routed: self.stats.routed,
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn simulate(
-    n: usize,
-    prefill_ranks: usize,
-    trace: &[Request],
-    sched_cfg: SchedulerConfig,
-    prefill_sched_cfg: SchedulerConfig,
-    gpu: GpuSpec,
-    model: ModelSpec,
-    kind: KernelKind,
-    groups: usize,
-) -> SimResult {
-    let seqs: Vec<SimSeq> = trace
-        .iter()
-        .map(|r| SimSeq {
-            prompt: r.prompt_tokens,
-            out: r.max_new_tokens,
-            arrival: r.arrival_s,
-            group: r.prefix_group,
-            prefix_tokens: r.prefix_tokens,
-            cached: 0,
-            prefilled: 0,
-            generated: 0,
-            spilled: false,
-            adopted: 0,
-            transferred: 0,
-            first_token: None,
-            last_token: None,
-        })
-        .collect();
-    let ranks: Vec<SimRank> = (0..n)
-        .map(|_| SimRank {
-            waiting: Vec::new(),
-            running: Vec::new(),
-            free: CAPACITY_PAGES,
-            shared: vec![0; groups],
-            t: 0.0,
-        })
-        .collect();
-    let sim = Sim {
-        n,
-        prefill_ranks,
-        dcfg: DeploymentConfig { dp: n, tp: NODE_GPUS / n },
-        sched_decode: Scheduler::new(sched_cfg),
-        sched_prefill: Scheduler::new(prefill_sched_cfg),
-        gpu,
-        model,
-        kind,
-        max_running: sched_cfg.max_running,
-        seqs,
-        ranks,
-        in_flight: Vec::new(),
-        stats: SimStats { routed: vec![0; n], ..SimStats::default() },
-        itl: Vec::new(),
-    };
-    sim.run(trace)
-}
-
-fn result_json(r: &SimResult) -> Json {
-    Json::obj(vec![
-        ("policy", Json::str(r.policy)),
-        ("ranks", Json::num(r.ranks as f64)),
-        ("prefill_ranks", Json::num(r.prefill_ranks as f64)),
-        ("decode_ranks", Json::num(r.decode_ranks as f64)),
-        ("requests", Json::num(r.requests as f64)),
-        ("gen_tokens", Json::num(r.gen_tokens as f64)),
-        ("wall_s", Json::num(r.wall_s)),
-        ("tok_per_s", Json::num(r.tok_per_s())),
-        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
-        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
-        ("itl_p50_ms", Json::num(r.itl.median() * 1e3)),
-        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
-        ("peak_pages", Json::num(r.peak_pages as f64)),
-        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
-        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
-        (
-            "mean_decode_batch",
-            Json::num(r.decode_batch_sum as f64 / r.decode_steps.max(1) as f64),
-        ),
-        ("steps", Json::num(r.steps as f64)),
-        ("spills", Json::num(r.spills as f64)),
-        ("handoffs", Json::num(r.handoffs as f64)),
-        ("transferred_gb_fp8", Json::num(r.wire_fp8_bytes as f64 / 1e9)),
-        ("transferred_gb_bf16", Json::num(r.wire_bf16_bytes as f64 / 1e9)),
-        ("routed", Json::arr(r.routed.iter().map(|&x| Json::num(x as f64)))),
-    ])
 }
 
 fn main() {
@@ -775,11 +94,8 @@ fn main() {
         disagg_prefill: true,
         ..sched_cfg
     };
-    let gpu = GpuSpec::h20();
     let model = ModelSpec::deepseek_v31();
-    let kind = KernelKind::SnapMlaFp8;
     let ns: &[usize] = if quick { &N_QUICK } else { &N_FULL };
-    let groups = trace_cfg.shared_prefix_groups;
 
     let mut t = Table::new(
         "serve_disagg — disaggregated prefill/decode vs colocated DP (async virtual time)",
@@ -788,24 +104,16 @@ fn main() {
     );
     let mut results: Vec<(&str, Json)> = Vec::new();
     for &n in ns {
-        let coloc = simulate(
-            n, 0, &trace, sched_cfg, prefill_sched_cfg, gpu, model, kind, groups,
-        );
-        let dis = simulate(
-            n,
-            prefill_split(n),
-            &trace,
-            sched_cfg,
-            prefill_sched_cfg,
-            gpu,
-            model,
-            kind,
-            groups,
-        );
+        let arm = |prefill_ranks: usize| {
+            Scenario::disagg(n, prefill_ranks, sched_cfg, prefill_sched_cfg, CAPACITY_PAGES)
+                .run(&trace)
+        };
+        let coloc = arm(0);
+        let dis = arm(prefill_split(n));
         for r in [&coloc, &dis] {
             t.row(vec![
                 n.to_string(),
-                r.policy.into(),
+                if r.prefill_ranks == 0 { "colocated".into() } else { "disagg".to_string() },
                 f1(r.tok_per_s()),
                 f1(r.ttft.percentile(95.0) * 1e3),
                 f1(r.itl.percentile(95.0) * 1e3),
@@ -839,8 +147,8 @@ fn main() {
         results.push((
             Box::leak(format!("n{n}").into_boxed_str()),
             Json::obj(vec![
-                ("colocated", result_json(&coloc)),
-                ("disagg", result_json(&dis)),
+                ("colocated", disagg_result_json(&coloc)),
+                ("disagg", disagg_result_json(&dis)),
                 ("disagg_vs_colocated", ratios),
             ]),
         ));

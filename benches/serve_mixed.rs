@@ -2,308 +2,29 @@
 //! scheduler, on a deterministic perfmodel trace (25% long-prompt, 75%
 //! short requests, burst arrivals).
 //!
-//! Drives the REAL `coordinator::Scheduler` (both policies) through a
-//! virtual-time discrete-event simulation whose step costs come from the
-//! calibrated H20-class analytical model (`perfmodel::e2e`): decode steps,
-//! standalone prefill calls, mixed steps with piggybacked chunks, and
-//! page-spill preemption. No wall clock anywhere — two runs produce
-//! byte-identical numbers.
-//!
-//! Reported per policy: decode throughput (generated tokens per virtual
-//! second) and TTFT p50/p95. The acceptance row is the speedup of mixed
-//! over alternating (target ≥ 1.3×) with a lower TTFT p95.
+//! A thin scenario config over `snapmla::simulate`: one rank, event-driven
+//! virtual time (degenerates to a single global clock), the REAL
+//! `coordinator::Scheduler` under both policies, step costs from the
+//! calibrated H20 analytical model. No wall clock anywhere — two runs
+//! produce byte-identical numbers.
 //!
 //!     cargo bench --bench serve_mixed [-- --quick]
 //!
 //! The full run also refreshes BENCH_serve.json at the repo root.
+//! `python/tests/serve_mixed_port.py` is the exact Python port (thin
+//! wrapper over serve_port_common.py) that generated the committed
+//! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{
-    Action, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
-};
-use snapmla::perfmodel::e2e::{decode_step_s, mixed_step_s, prefill_step_s, spill_s};
-use snapmla::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::simulate::scenario::mixed_result_json;
+use snapmla::simulate::{Scenario, SimResult};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
-use snapmla::util::stats::Summary;
 use snapmla::util::table::{f1, f2, Table};
-use snapmla::workload::{Request, TraceConfig, TraceGen};
+use snapmla::workload::{TraceConfig, TraceGen};
 
 const PAGE: usize = 64;
 const CAPACITY_PAGES: usize = 2048;
-
-struct SimSeq {
-    prompt: usize,
-    out: usize,
-    arrival: f64,
-    long: bool,
-    cached: usize,
-    prefilled: usize,
-    generated: usize,
-    spilled: bool,
-    first_token: Option<f64>,
-}
-
-struct SimResult {
-    policy: &'static str,
-    requests: usize,
-    gen_tokens: u64,
-    wall_s: f64,
-    ttft: Summary,
-    ttft_short: Summary,
-    decode_steps: u64,
-    decode_batch_sum: u64,
-    chunk_tokens: u64,
-    spills: u64,
-    restores: u64,
-}
-
-impl SimResult {
-    fn decode_tok_per_s(&self) -> f64 {
-        self.gen_tokens as f64 / self.wall_s
-    }
-
-    fn mean_decode_batch(&self) -> f64 {
-        self.decode_batch_sum as f64 / (self.decode_steps.max(1)) as f64
-    }
-}
-
-fn pages_for(tokens: usize) -> usize {
-    tokens.div_ceil(PAGE)
-}
-
-#[allow(clippy::too_many_arguments)]
-fn simulate(
-    policy: SchedPolicy,
-    name: &'static str,
-    trace: &[Request],
-    sched_cfg: SchedulerConfig,
-    gpu: &GpuSpec,
-    model: &ModelSpec,
-    dcfg: &DeploymentConfig,
-    kind: KernelKind,
-) -> SimResult {
-    let sched = Scheduler::new(SchedulerConfig { policy, ..sched_cfg });
-    let mut seqs: Vec<SimSeq> = trace
-        .iter()
-        .map(|r| SimSeq {
-            prompt: r.prompt_tokens,
-            out: r.max_new_tokens,
-            arrival: r.arrival_s,
-            long: r.long_prompt,
-            cached: 0,
-            prefilled: 0,
-            generated: 0,
-            spilled: false,
-            first_token: None,
-        })
-        .collect();
-    let mut waiting: Vec<usize> = Vec::new();
-    let mut running: Vec<usize> = Vec::new();
-    let mut free = CAPACITY_PAGES;
-    let mut clock = 0.0f64;
-    let mut next_arrival = 0usize;
-    let mut out = SimResult {
-        policy: name,
-        requests: trace.len(),
-        gen_tokens: 0,
-        wall_s: 0.0,
-        ttft: Summary::new(),
-        ttft_short: Summary::new(),
-        decode_steps: 0,
-        decode_batch_sum: 0,
-        chunk_tokens: 0,
-        spills: 0,
-        restores: 0,
-    };
-
-    let mut steps = 0usize;
-    while next_arrival < trace.len() || !waiting.is_empty() || !running.is_empty() {
-        steps += 1;
-        assert!(steps <= 500_000, "sim runaway");
-        while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-            waiting.push(next_arrival);
-            next_arrival += 1;
-        }
-
-        let wview: Vec<WaitingSeq> = waiting
-            .iter()
-            .enumerate()
-            .map(|(i, &sid)| WaitingSeq {
-                idx: i,
-                tokens: if seqs[sid].spilled { seqs[sid].cached } else { seqs[sid].prompt },
-                spilled: seqs[sid].spilled,
-            })
-            .collect();
-        let rview: Vec<RunningSeq> = running
-            .iter()
-            .enumerate()
-            .map(|(i, &sid)| RunningSeq {
-                idx: i,
-                context: seqs[sid].cached,
-                pending_prefill: seqs[sid].prompt - seqs[sid].prefilled,
-            })
-            .collect();
-
-        match sched.decide(&wview, &rview, free) {
-            Action::Idle => {
-                if next_arrival < trace.len() {
-                    clock = clock.max(trace[next_arrival].arrival_s);
-                    continue;
-                }
-                panic!("sim deadlock: {} waiting, {} running", waiting.len(), running.len());
-            }
-            Action::Prefill(idxs) => {
-                let ids: Vec<usize> = idxs.iter().map(|&i| waiting[i]).collect();
-                waiting.drain(..ids.len());
-                let total: usize = ids.iter().map(|&sid| seqs[sid].prompt).sum();
-                clock += prefill_step_s(gpu, model, dcfg, total, kind);
-                for sid in ids {
-                    let s = &mut seqs[sid];
-                    free -= pages_for(s.prompt);
-                    s.cached = s.prompt;
-                    s.prefilled = s.prompt;
-                    s.generated = 1;
-                    out.gen_tokens += 1;
-                    s.first_token = Some(clock);
-                    if s.generated >= s.out {
-                        free += pages_for(s.cached);
-                    } else {
-                        running.push(sid);
-                    }
-                }
-            }
-            Action::Decode(idxs) => {
-                let ids: Vec<usize> = idxs.iter().map(|&i| running[i]).collect();
-                let ctx = ids.iter().map(|&sid| seqs[sid].cached).max().unwrap() + 1;
-                clock += decode_step_s(gpu, model, dcfg, ids.len(), ctx, kind);
-                out.decode_steps += 1;
-                out.decode_batch_sum += ids.len() as u64;
-                for &sid in &ids {
-                    let s = &mut seqs[sid];
-                    if s.cached % PAGE == 0 {
-                        free -= 1;
-                    }
-                    s.cached += 1;
-                    s.generated += 1;
-                    out.gen_tokens += 1;
-                    if s.generated >= s.out {
-                        free += pages_for(s.cached);
-                        running.retain(|&x| x != sid);
-                    }
-                }
-            }
-            Action::Mixed { prefill_chunks, decode_idxs } => {
-                // admissions are a FCFS prefix of `waiting`; chunk-list
-                // order is service order, idx is the waiting position
-                let n_admit = prefill_chunks.iter().filter(|c| c.from_waiting).count();
-                let admitted: Vec<usize> = waiting.drain(..n_admit).collect();
-                let chunk_plan: Vec<(usize, usize)> = prefill_chunks
-                    .iter()
-                    .map(|c| {
-                        let sid = if c.from_waiting { admitted[c.idx] } else { running[c.idx] };
-                        let take = c.tokens.min(seqs[sid].prompt - seqs[sid].prefilled);
-                        (sid, take)
-                    })
-                    .collect();
-                let decode_ids: Vec<usize> = decode_idxs.iter().map(|&i| running[i]).collect();
-                running.extend(&admitted);
-                let total_chunk: usize = chunk_plan.iter().map(|&(_, t)| t).sum();
-                let dctx = decode_ids
-                    .iter()
-                    .map(|&sid| seqs[sid].cached)
-                    .max()
-                    .map(|c| c + 1)
-                    .unwrap_or(0);
-                let cctx =
-                    chunk_plan.iter().map(|&(sid, t)| seqs[sid].cached + t).max().unwrap_or(0);
-                clock += mixed_step_s(
-                    gpu, model, dcfg, decode_ids.len(), dctx, total_chunk, cctx, kind,
-                );
-                if !decode_ids.is_empty() {
-                    out.decode_steps += 1;
-                    out.decode_batch_sum += decode_ids.len() as u64;
-                }
-                for &(sid, take) in &chunk_plan {
-                    let s = &mut seqs[sid];
-                    free -= pages_for(s.cached + take) - pages_for(s.cached);
-                    s.cached += take;
-                    s.prefilled += take;
-                    out.chunk_tokens += take as u64;
-                    if s.prefilled == s.prompt {
-                        s.generated = 1;
-                        out.gen_tokens += 1;
-                        s.first_token = Some(clock);
-                        if s.generated >= s.out {
-                            free += pages_for(s.cached);
-                            running.retain(|&x| x != sid);
-                        }
-                    }
-                }
-                for &sid in &decode_ids {
-                    let s = &mut seqs[sid];
-                    if s.cached % PAGE == 0 {
-                        free -= 1;
-                    }
-                    s.cached += 1;
-                    s.generated += 1;
-                    out.gen_tokens += 1;
-                    if s.generated >= s.out {
-                        free += pages_for(s.cached);
-                        running.retain(|&x| x != sid);
-                    }
-                }
-            }
-            Action::Resume(_) => {
-                let sid = waiting.remove(0);
-                let s = &mut seqs[sid];
-                clock += spill_s(gpu, model, s.cached, kind);
-                free -= pages_for(s.cached);
-                s.spilled = false;
-                out.restores += 1;
-                running.push(sid);
-            }
-            Action::Preempt(idx) => {
-                let sid = running.remove(idx);
-                let s = &mut seqs[sid];
-                clock += spill_s(gpu, model, s.cached, kind);
-                free += pages_for(s.cached);
-                s.spilled = true;
-                out.spills += 1;
-                waiting.insert(0, sid);
-            }
-            // colocated ranks never hand off (disagg_prefill is unset)
-            Action::Handoff(_) => unreachable!("colocated scheduler"),
-        }
-    }
-
-    for s in &seqs {
-        let ttft = s.first_token.expect("all sequences finished") - s.arrival;
-        out.ttft.push(ttft);
-        if !s.long {
-            out.ttft_short.push(ttft);
-        }
-    }
-    out.wall_s = clock;
-    out
-}
-
-fn result_json(r: &SimResult) -> Json {
-    Json::obj(vec![
-        ("policy", Json::str(r.policy)),
-        ("requests", Json::num(r.requests as f64)),
-        ("gen_tokens", Json::num(r.gen_tokens as f64)),
-        ("wall_s", Json::num(r.wall_s)),
-        ("decode_tok_per_s", Json::num(r.decode_tok_per_s())),
-        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
-        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
-        ("ttft_short_p95_ms", Json::num(r.ttft_short.percentile(95.0) * 1e3)),
-        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
-        ("decode_steps", Json::num(r.decode_steps as f64)),
-        ("chunk_tokens", Json::num(r.chunk_tokens as f64)),
-        ("spills", Json::num(r.spills as f64)),
-        ("restores", Json::num(r.restores as f64)),
-    ])
-}
 
 fn main() {
     let args = Args::parse_with_flags(&["quick"]);
@@ -336,32 +57,27 @@ fn main() {
         max_step_items: 16,
         max_running: 16,
         disagg_prefill: false,
-        policy: SchedPolicy::MixedChunked, // overridden per run
+        policy: SchedPolicy::MixedChunked, // overridden per arm
     };
-    let gpu = GpuSpec::h20();
-    let model = ModelSpec::deepseek_v31();
-    let dcfg = DeploymentConfig { dp: 8, tp: 1 };
-    let kind = KernelKind::SnapMlaFp8;
 
-    let alt = simulate(
-        SchedPolicy::Alternating, "alternating", &trace, sched_cfg, &gpu, &model, &dcfg, kind,
-    );
-    let mix = simulate(
-        SchedPolicy::MixedChunked, "mixed_chunked", &trace, sched_cfg, &gpu, &model, &dcfg, kind,
-    );
+    let arm = |policy: SchedPolicy| -> SimResult {
+        Scenario::mixed(SchedulerConfig { policy, ..sched_cfg }, CAPACITY_PAGES).run(&trace)
+    };
+    let alt = arm(SchedPolicy::Alternating);
+    let mix = arm(SchedPolicy::MixedChunked);
 
     let mut t = Table::new(
         "serve_mixed — mixed chunked-prefill vs alternating (virtual time, perfmodel)",
         &["policy", "req", "gen tok", "wall s", "dec tok/s", "TTFT p50 ms", "TTFT p95 ms",
           "mean batch", "spills"],
     );
-    for r in [&alt, &mix] {
+    for (name, r) in [("alternating", &alt), ("mixed_chunked", &mix)] {
         t.row(vec![
-            r.policy.into(),
+            name.into(),
             r.requests.to_string(),
             r.gen_tokens.to_string(),
             f2(r.wall_s),
-            f1(r.decode_tok_per_s()),
+            f1(r.tok_per_s()),
             f1(r.ttft.median() * 1e3),
             f1(r.ttft.percentile(95.0) * 1e3),
             f2(r.mean_decode_batch()),
@@ -369,7 +85,7 @@ fn main() {
         ]);
     }
     t.print();
-    let speedup = mix.decode_tok_per_s() / alt.decode_tok_per_s();
+    let speedup = mix.tok_per_s() / alt.tok_per_s();
     let ttft_ratio = mix.ttft.percentile(95.0) / alt.ttft.percentile(95.0);
     println!(
         "decode-throughput speedup: {speedup:.2}x (target >= 1.3), \
@@ -405,13 +121,13 @@ fn main() {
                 ),
                 ("max_decode_batch", Json::num(sched_cfg.max_decode_batch as f64)),
                 ("max_running", Json::num(sched_cfg.max_running as f64)),
-                ("model", Json::str(model.name)),
-                ("config", Json::str(&dcfg.label())),
+                ("model", Json::str("DeepSeek-V3.1")),
+                ("config", Json::str("DP8/TP1")),
                 ("kernel", Json::str("SnapMLA FP8")),
             ]),
         ),
-        ("alternating", result_json(&alt)),
-        ("mixed_chunked", result_json(&mix)),
+        ("alternating", mixed_result_json("alternating", &alt)),
+        ("mixed_chunked", mixed_result_json("mixed_chunked", &mix)),
         (
             "speedup",
             Json::obj(vec![

@@ -1,0 +1,188 @@
+//! serve_straggler — prefix-affinity vs shortest-queue DP routing under a
+//! 1.5x-slow rank, in **event-driven** per-rank virtual time: the scenario
+//! the old lock-step core could not express (a lock-step round charges
+//! every rank the slowest rank's step, so a slow rank slows the whole
+//! cluster instead of falling behind).
+//!
+//! A thin scenario config over `snapmla::simulate`: a DP4 colocated
+//! cluster (TP=2) on the shared-prefix trace, rank 0 running every step at
+//! a 1.5x cost factor. The A/B shows how affinity routing behaves when its
+//! prefix hits point at a rank that drains slower: the queue-depth signal
+//! pushes load off the straggler in both policies, but affinity's
+//! imbalance window keeps feeding it group members up to 4x the hit
+//! tokens — affinity keeps its page footprint and throughput edge, at a
+//! TTFT p95 penalty.
+//!
+//!     cargo bench --bench serve_straggler [-- --quick]
+//!
+//! Quick mode runs the identical configuration (the sim is deterministic
+//! and cheap), so quick ratios equal the committed baseline exactly. The
+//! full run also refreshes BENCH_straggler.json at the repo root.
+//! `python/tests/serve_straggler_port.py` is the exact Python port (thin
+//! wrapper over serve_port_common.py) that generated the committed
+//! baseline in a container without a Rust toolchain.
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::simulate::scenario::straggler_result_json;
+use snapmla::simulate::{Scenario, SimResult, SimRoute, NODE_GPUS};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, f3, Table};
+use snapmla::workload::{TraceConfig, TraceGen};
+
+const PAGE: usize = 64;
+const CAPACITY_PAGES: usize = 768; // per rank
+const DP: usize = 4;
+const SLOW_FACTOR: f64 = 1.5; // rank 0's per-step cost multiplier
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let quick = args.has("quick");
+    let num_requests = args.usize_or("requests", 96);
+
+    let trace_cfg = TraceConfig {
+        seed: args.u64_or("seed", 2029),
+        num_requests,
+        mean_interarrival_s: 0.008,
+        prompt_min: 16,
+        prompt_max: 96,
+        out_min: 48,
+        out_max: 128,
+        temperature: 0.0,
+        long_frac: 0.0,
+        long_prompt_min: 0,
+        long_prompt_max: 0,
+        shared_prefix_frac: 0.8,
+        shared_prefix_groups: 6,
+        shared_prefix_tokens: 512,
+        max_total_tokens: 0,
+    };
+    let trace = TraceGen::generate(&trace_cfg);
+    let sched_cfg = SchedulerConfig {
+        max_decode_batch: 12,
+        max_prefill_batch: 4,
+        max_prefill_tokens: 4096,
+        max_context: 8192,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 128,
+        chunk_per_seq: 64,
+        max_step_items: 16,
+        max_running: 16,
+        disagg_prefill: false,
+        policy: SchedPolicy::MixedChunked,
+    };
+    let uniform = vec![1.0; DP];
+    let mut straggler = vec![1.0; DP];
+    straggler[0] = SLOW_FACTOR;
+
+    let arm = |route: SimRoute, speeds: &[f64]| -> SimResult {
+        Scenario::straggler(route, DP, speeds.to_vec(), sched_cfg, CAPACITY_PAGES).run(&trace)
+    };
+
+    let mut t = Table::new(
+        "serve_straggler — affinity vs shortest-queue under a 1.5x-slow rank (event time)",
+        &["policy", "speeds", "tok/s", "TTFT p95 ms", "ITL p95 ms", "peak pages", "routed"],
+    );
+    let mut results: Vec<(&str, Json)> = Vec::new();
+    let mut straggler_arms: Vec<SimResult> = Vec::new();
+    for (name, route) in
+        [("shortest_queue", SimRoute::ShortestQueue), ("prefix_affinity", SimRoute::PrefixAffinity)]
+    {
+        let uni = arm(route, &uniform);
+        let strag = arm(route, &straggler);
+        for (speeds, r) in [(&uniform, &uni), (&straggler, &strag)] {
+            t.row(vec![
+                name.into(),
+                format!("{speeds:?}"),
+                f1(r.tok_per_s()),
+                f1(r.ttft.percentile(95.0) * 1e3),
+                f1(r.itl.percentile(95.0) * 1e3),
+                r.peak_pages.to_string(),
+                format!("{:?}", r.routed),
+            ]);
+        }
+        let slow_share = strag.routed[0] as f64 / strag.routed.iter().sum::<u64>() as f64;
+        println!(
+            "{name}: straggler throughput ratio {}, TTFT p95 ratio {}, slow-rank share {}",
+            f3(strag.tok_per_s() / uni.tok_per_s()),
+            f3(strag.ttft.percentile(95.0) / uni.ttft.percentile(95.0)),
+            f3(slow_share),
+        );
+        let ratios = Json::obj(vec![
+            ("throughput_ratio", Json::num(strag.tok_per_s() / uni.tok_per_s())),
+            (
+                "ttft_p95_ratio",
+                Json::num(strag.ttft.percentile(95.0) / uni.ttft.percentile(95.0)),
+            ),
+            (
+                "itl_p95_ratio",
+                Json::num(strag.itl.percentile(95.0) / uni.itl.percentile(95.0)),
+            ),
+            ("slow_rank_share", Json::num(slow_share)),
+        ]);
+        results.push((
+            name,
+            Json::obj(vec![
+                ("uniform", straggler_result_json(name, &uniform, &uni)),
+                ("straggler", straggler_result_json(name, &straggler, &strag)),
+                ("straggler_vs_uniform", ratios),
+            ]),
+        ));
+        straggler_arms.push(strag);
+    }
+    t.print();
+    let (sq, aff) = (&straggler_arms[0], &straggler_arms[1]);
+    println!(
+        "affinity vs shortest-queue under the straggler: throughput {}, TTFT p95 {}, \
+         peak pages {}",
+        f3(aff.tok_per_s() / sq.tok_per_s()),
+        f3(aff.ttft.percentile(95.0) / sq.ttft.percentile(95.0)),
+        f3(aff.peak_pages as f64 / sq.peak_pages as f64),
+    );
+
+    let report = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("seed", Json::num(trace_cfg.seed as f64)),
+                ("num_requests", Json::num(num_requests as f64)),
+                ("mean_interarrival_s", Json::num(trace_cfg.mean_interarrival_s)),
+                ("shared_prefix_frac", Json::num(trace_cfg.shared_prefix_frac)),
+                ("shared_prefix_groups", Json::num(trace_cfg.shared_prefix_groups as f64)),
+                ("shared_prefix_tokens", Json::num(trace_cfg.shared_prefix_tokens as f64)),
+                ("tail_prompt", Json::str("16..=96")),
+                ("out_tokens", Json::str("48..=128")),
+                ("capacity_pages_per_rank", Json::num(CAPACITY_PAGES as f64)),
+                ("node_gpus", Json::num(NODE_GPUS as f64)),
+                ("dp", Json::num(DP as f64)),
+                ("slow_rank", Json::num(0.0)),
+                ("slow_factor", Json::num(SLOW_FACTOR)),
+                ("model", Json::str("DeepSeek-V3.1")),
+                ("kernel", Json::str("SnapMLA FP8")),
+            ]),
+        ),
+        ("results", Json::obj(results)),
+        (
+            "affinity_vs_sq_straggler",
+            Json::obj(vec![
+                ("throughput_ratio", Json::num(aff.tok_per_s() / sq.tok_per_s())),
+                (
+                    "ttft_p95_ratio",
+                    Json::num(aff.ttft.percentile(95.0) / sq.ttft.percentile(95.0)),
+                ),
+                (
+                    "peak_pages_ratio",
+                    Json::num(aff.peak_pages as f64 / sq.peak_pages as f64),
+                ),
+            ]),
+        ),
+    ]);
+    snapmla::bench::write_report("serve_straggler", report.clone());
+    if !quick {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_straggler.json");
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("[report] {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {path:?}: {e}"),
+        }
+    }
+}

@@ -59,6 +59,20 @@ GATES = [
             )
         ],
     ),
+    (
+        "BENCH_straggler.json",
+        "target/bench-reports/serve_straggler.json",
+        [
+            f"results.{policy}.straggler_vs_uniform.{metric}"
+            for policy in ("shortest_queue", "prefix_affinity")
+            for metric in ("throughput_ratio", "ttft_p95_ratio")
+        ]
+        + [
+            "affinity_vs_sq_straggler.throughput_ratio",
+            "affinity_vs_sq_straggler.ttft_p95_ratio",
+            "affinity_vs_sq_straggler.peak_pages_ratio",
+        ],
+    ),
 ]
 
 

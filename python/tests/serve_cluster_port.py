@@ -1,455 +1,60 @@
-"""Exact Python port of benches/serve_cluster.rs (mirrors the Rust, f64 math).
+"""Exact Python port of benches/serve_cluster.rs — a thin scenario over the
+shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
 
-The container this repo grows in has no Rust toolchain, so BENCH_cluster.json
-is generated from this port; `cargo bench --bench serve_cluster` regenerates
-the authoritative copy under target/bench-reports/ once cargo is available.
-
-The bench A/Bs the two `coordinator::router` policies — capacity-aware
-shortest-queue vs prefix-affinity — on a shared-prefix-heavy trace served by
-a DP cluster of ranks driven lock-step in virtual time (each round every
-rank takes one scheduler action; the round costs the slowest rank's step).
-Per-rank scheduling reuses the mixed chunked-prefill policy ported in
-serve_mixed_port.py; step costs come from the calibrated H20 analytical
-model including the TP all-reduce term (`cluster::collective` folded into
-`perfmodel::e2e`) — DP ranks on the 8-GPU node run TP = 8/DP.
+Prefix-affinity vs shortest-queue DP routing on a shared-prefix-heavy trace,
+for DP in {1, 2, 4} ranks of an 8-GPU node (TP = 8/DP), ranks driven
+**lock-step**: each round every rank takes one scheduler action and the
+round costs the slowest rank's step. BENCH_cluster.json is generated from
+this port; `cargo bench --bench serve_cluster` regenerates the
+authoritative copy once cargo is available.
 
 Run: python3 python/tests/serve_cluster_port.py [--quick]
 """
 
 import json
-import math
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
-from serve_mixed_port import (  # noqa: E402
-    GPU,
-    MODEL,
-    Rng,
-    decide_mixed,
-    expert_stream_read,
-    kernel_time_s,
-    normalize,
-    pages_for,
-    percentile,
-    PREFILL_ROPE_HEAD,
-    PREFILL_V_HEAD,
-)
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
 
 PAGE = 64
 NODE_GPUS = 8
-COLLECTIVE_LATENCY_S = 5.0e-6
-AFFINITY_IMBALANCE_WINDOW = 4
+CAPACITY_PAGES = 768  # per rank
+DP_FULL = [1, 2, 4]
+DP_QUICK = [1, 2]
 
 
-# --- perfmodel::e2e with the TP collective term (cluster::collective) --------
-
-def allreduce_time_s(link_bw, latency_s, nbytes, ranks):
-    if ranks <= 1:
-        return 0.0
-    n = float(ranks)
-    return 2.0 * (n - 1.0) / n * nbytes / link_bw + latency_s
-
-
-def hidden_bytes_per_token():
-    return MODEL["d_c"] * MODEL["heads"] // 64 * 2.0
-
-
-def tp_comm_s(cfg, units):
-    if cfg["tp"] <= 1:
-        return 0.0
-    return (
-        allreduce_time_s(
-            GPU["nvlink_bw"], COLLECTIVE_LATENCY_S, hidden_bytes_per_token() * units, cfg["tp"]
-        )
-        * MODEL["n_layers"]
+def sim(policy, dp, trace, sched_cfg):
+    res = simulate(
+        trace,
+        dict(
+            ranks=dp,
+            routing=policy,
+            timing="lockstep",
+            sched_cfg=sched_cfg,
+            capacity_pages=CAPACITY_PAGES,
+            model_cfg=dict(dp=dp, tp=NODE_GPUS // dp),
+        ),
     )
-
-
-def decode_step_s(cfg, batch, context):
-    if batch == 0:
-        return math.inf
-    gpus = cfg["dp"] * cfg["tp"]
-    attn = (
-        kernel_time_s(batch, MODEL["heads"] // cfg["tp"], 1, context, MODEL["d_c"], MODEL["d_r"])
-        * MODEL["n_layers"]
-    )
-    weights = expert_stream_read(float(batch)) / gpus / GPU["hbm_bw"]
-    gemm_flops = 2.0 * MODEL["active_params"] * batch / gpus
-    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
-    launches = 2.0 * MODEL["n_layers"] * GPU["launch_s"]
-    return attn + max(weights, gemm) + tp_comm_s(cfg, float(batch)) + launches
-
-
-def prefill_attn_s(cfg, t_q, ctx):
-    return (
-        kernel_time_s(
-            1, MODEL["heads"] // cfg["tp"], t_q, max(ctx, 1), PREFILL_V_HEAD, PREFILL_ROPE_HEAD
-        )
-        * MODEL["n_layers"]
-    )
-
-
-def prefill_step_s(cfg, tokens):
-    if tokens == 0:
-        return 0.0
-    gpus = cfg["dp"] * cfg["tp"]
-    t = float(tokens)
-    weights = expert_stream_read(t) / gpus / GPU["hbm_bw"]
-    gemm_flops = 2.0 * MODEL["active_params"] * t / gpus
-    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
-    attn = prefill_attn_s(cfg, tokens, max(tokens // 2, 1))
-    launches = 3.0 * MODEL["n_layers"] * GPU["launch_s"]
-    return max(weights, gemm) + attn + tp_comm_s(cfg, t) + launches
-
-
-def mixed_step_s(cfg, decode_batch, context, chunk_tokens, chunk_context):
-    if chunk_tokens == 0:
-        return decode_step_s(cfg, decode_batch, context)
-    gpus = cfg["dp"] * cfg["tp"]
-    c = float(chunk_tokens)
-    eff = GPU["fp8_tflops"] * 1e12 * GPU["peak_util"]
-    gemm_c = 2.0 * MODEL["active_params"] * c / gpus / eff
-    attn_c = prefill_attn_s(cfg, chunk_tokens, max(chunk_context, chunk_tokens))
-    chunk_compute = gemm_c + attn_c
-    if decode_batch == 0:
-        weights = expert_stream_read(c) / gpus / GPU["hbm_bw"]
-        return (
-            max(weights, chunk_compute)
-            + tp_comm_s(cfg, c)
-            + 2.0 * MODEL["n_layers"] * GPU["launch_s"]
-        )
-    base = decode_step_s(cfg, decode_batch, context)
-    weights_mem = expert_stream_read(float(decode_batch)) / gpus / GPU["hbm_bw"]
-    gemm_d = 2.0 * MODEL["active_params"] * decode_batch / gpus / eff
-    hidden = max(weights_mem - gemm_d, 0.0)
-    return base + max(chunk_compute - hidden, 0.0) + tp_comm_s(cfg, c) + GPU["launch_s"]
-
-
-# --- workload::tracegen with the shared-prefix mixture ------------------------
-
-def generate_trace(cfg):
-    rng = Rng(cfg["seed"])
-    t = 0.0
-    reqs = []
-    for i in range(cfg["num_requests"]):
-        if cfg["mean_interarrival_s"] > 0.0:
-            t += rng.exponential(cfg["mean_interarrival_s"])
-        long_prompt = cfg.get("long_frac", 0.0) > 0.0 and rng.bool(cfg["long_frac"])
-        shared = cfg["shared_prefix_frac"] > 0.0 and rng.bool(cfg["shared_prefix_frac"])
-        group = rng.below(cfg["shared_prefix_groups"]) if shared else None
-        if long_prompt:
-            base = rng.range_usize(cfg["long_prompt_min"], cfg["long_prompt_max"] + 1)
-        else:
-            base = rng.range_usize(cfg["prompt_min"], cfg["prompt_max"] + 1)
-        prefix = cfg["shared_prefix_tokens"] if shared else 0
-        out = rng.range_usize(cfg["out_min"], cfg["out_max"] + 1)
-        reqs.append(
-            dict(
-                id=i,
-                arrival_s=t,
-                prompt=prefix + base,
-                out=out,
-                group=group,
-                prefix_tokens=prefix,
-            )
-        )
-    return reqs
-
-
-# --- coordinator::router policies --------------------------------------------
-
-def pick_rank(loads):
-    """Capacity-aware shortest queue (router::pick_rank)."""
-    feasible = [(i, l) for i, l in enumerate(loads) if l["free"] >= l["needed"]]
-    if feasible:
-        return min(feasible, key=lambda il: (il[1]["tokens"], il[0]))[0]
-    return min(enumerate(loads), key=lambda il: (il[1]["tokens"], il[0]))[0]
-
-
-def pick_rank_affinity(loads, page):
-    """Prefix-affinity routing (router::pick_rank_affinity)."""
-
-    def eff_needed(l):
-        return max(l["needed"] - l["hit"] // page, 0)
-
-    feasible = [
-        (i, l) for i, l in enumerate(loads) if l["free"] + l["evictable"] >= eff_needed(l)
-    ]
-    if not feasible:
-        # all ranks saturated: prefer the most spill-capable rank (largest
-        # reclaimable headroom), then the shortest queue
-        return min(
-            enumerate(loads),
-            key=lambda il: (-(il[1]["free"] + il[1]["evictable"]), il[1]["tokens"], il[0]),
-        )[0]
-    min_tokens = min(l["tokens"] for _, l in feasible)
-    hits = [
-        (i, l)
-        for i, l in feasible
-        if l["hit"] > 0 and l["tokens"] <= min_tokens + AFFINITY_IMBALANCE_WINDOW * l["hit"]
-    ]
-    if hits:
-        return min(hits, key=lambda il: (-il[1]["hit"], il[1]["tokens"], il[0]))[0]
-    return min(feasible, key=lambda il: (il[1]["tokens"], il[0]))[0]
-
-
-# --- the lock-step virtual-time cluster simulation ----------------------------
-
-def simulate_cluster(policy, dp, trace, sched_cfg, capacity_pages):
-    cfg = dict(dp=dp, tp=NODE_GPUS // dp)
-    page = sched_cfg["page"]
-    seqs = {
-        r["id"]: dict(
-            prompt=r["prompt"], out=r["out"], arrival=r["arrival_s"], group=r["group"],
-            prefix_tokens=r["prefix_tokens"], cached=0, prefilled=0, generated=0,
-            spilled=False, adopted=0, transferred=0, first_token=None,
-        )
-        for r in trace
-    }
-    ranks = [
-        dict(waiting=[], running=[], free=capacity_pages, shared={}) for _ in range(dp)
-    ]
-    clock = 0.0
-    next_arrival = 0
-    stats = dict(
-        gen_tokens=0, prefill_tokens=0, chunk_tokens=0, prefix_hit_tokens=0,
-        spills=0, restores=0, decode_steps=0, decode_batch_sum=0, rounds=0,
-        peak_pages=0, routed=[0] * dp,
-    )
-
-    def route(sid):
-        s = seqs[sid]
-        needed = pages_for(s["prompt"] + s["out"], page)
-        loads = []
-        for r in ranks:
-            tokens = sum(
-                seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
-            ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
-            if s["group"] is not None and r["shared"].get(s["group"], 0) > 0:
-                hit_pages = min(r["shared"][s["group"]], (s["prompt"] - 1) // page)
-            else:
-                hit_pages = 0
-            loads.append(
-                dict(tokens=tokens, free=r["free"], needed=needed,
-                     hit=hit_pages * page, evictable=0)
-            )
-        if policy == "prefix_affinity":
-            rank = pick_rank_affinity(loads, page)
-        else:
-            rank = pick_rank(loads)
-        stats["routed"][rank] += 1
-        ranks[rank]["waiting"].append(sid)
-
-    def publish(r, sid):
-        s = seqs[sid]
-        if s["group"] is None:
-            return
-        done = min(s["prefilled"], s["prefix_tokens"]) // page
-        have = r["shared"].get(s["group"], 0)
-        if done > have:
-            s["transferred"] += done - have
-            r["shared"][s["group"]] = done
-
-    def private_pages(sid):
-        s = seqs[sid]
-        return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
-
-    def finish(r, sid):
-        r["free"] += private_pages(sid)
-
-    def apply(r, action):
-        # first tokens produced this round are stamped at the round boundary
-        # by the caller (lock-step: every rank ends the round together)
-        cost = 0.0
-        kind = action[0]
-        if kind == "prefill":
-            ids = [r["waiting"][i] for i in action[1]]
-            r["waiting"] = r["waiting"][len(ids):]
-            total = sum(seqs[sid]["prompt"] for sid in ids)
-            cost = prefill_step_s(cfg, total)
-            stats["prefill_tokens"] += total
-            for sid in ids:
-                s = seqs[sid]
-                r["free"] -= pages_for(s["prompt"], page)
-                s["cached"] = s["prompt"]
-                s["prefilled"] = s["prompt"]
-                publish(r, sid)
-                s["generated"] = 1
-                stats["gen_tokens"] += 1
-                if s["generated"] >= s["out"]:
-                    finish(r, sid)
-                else:
-                    r["running"].append(sid)
-        elif kind == "decode":
-            ids = [r["running"][i] for i in action[1]]
-            ctx = max(seqs[sid]["cached"] for sid in ids) + 1
-            cost = decode_step_s(cfg, len(ids), ctx)
-            stats["decode_steps"] += 1
-            stats["decode_batch_sum"] += len(ids)
-            done = []
-            for sid in ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                stats["gen_tokens"] += 1
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                finish(r, sid)
-                r["running"].remove(sid)
-        elif kind == "mixed":
-            chunks, decode_idxs = action[1], action[2]
-            n_admit = sum(1 for c in chunks if c[0])
-            admitted = r["waiting"][:n_admit]
-            r["waiting"] = r["waiting"][n_admit:]
-            # admission adopts the rank's published prefix pages (shared,
-            # no allocation), exactly like PagedKvCache::adopt_prefix
-            for sid in admitted:
-                s = seqs[sid]
-                if s["group"] is not None and r["shared"].get(s["group"], 0) > 0:
-                    hit_pages = min(r["shared"][s["group"]], (s["prompt"] - 1) // page)
-                    if hit_pages > 0:
-                        s["adopted"] = hit_pages
-                        s["cached"] = hit_pages * page
-                        s["prefilled"] = hit_pages * page
-                        stats["prefix_hit_tokens"] += hit_pages * page
-            chunk_plan = []
-            for (fw, idx, grant) in chunks:
-                sid = admitted[idx] if fw else r["running"][idx]
-                s = seqs[sid]
-                take = min(grant, s["prompt"] - s["prefilled"])
-                chunk_plan.append((sid, take))
-            r["running"].extend(admitted)
-            decode_ids = [r["running"][i] for i in decode_idxs]
-            total_chunk = sum(t for (_, t) in chunk_plan)
-            dctx = max((seqs[sid]["cached"] for sid in decode_ids), default=-1) + 1
-            cctx = max((seqs[sid]["cached"] + t for (sid, t) in chunk_plan), default=0)
-            cost = mixed_step_s(cfg, len(decode_ids), dctx, total_chunk, cctx)
-            if decode_ids:
-                stats["decode_steps"] += 1
-                stats["decode_batch_sum"] += len(decode_ids)
-            done = []
-            for (sid, take) in chunk_plan:
-                s = seqs[sid]
-                r["free"] -= pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
-                s["cached"] += take
-                s["prefilled"] += take
-                stats["chunk_tokens"] += take
-                stats["prefill_tokens"] += take
-                publish(r, sid)
-                if s["prefilled"] == s["prompt"]:
-                    s["generated"] = 1
-                    stats["gen_tokens"] += 1
-                    if s["generated"] >= s["out"]:
-                        done.append(sid)
-            for sid in decode_ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                stats["gen_tokens"] += 1
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                finish(r, sid)
-                r["running"].remove(sid)
-        elif kind == "resume":
-            sid = r["waiting"].pop(0)
-            s = seqs[sid]
-            cost = spill_cost(s)
-            r["free"] -= pages_for(s["cached"], page)
-            s["spilled"] = False
-            s["adopted"] = 0
-            s["transferred"] = 0
-            stats["restores"] += 1
-            r["running"].append(sid)
-        elif kind == "preempt":
-            sid = r["running"].pop(action[1])
-            s = seqs[sid]
-            cost = spill_cost(s)
-            r["free"] += private_pages(sid)
-            # the spill snapshot privatizes adopted pages (exactness over
-            # dedup): the restore reallocates every page
-            s["transferred"] = 0
-            s["adopted"] = 0
-            s["spilled"] = True
-            stats["spills"] += 1
-            r["waiting"].insert(0, sid)
-        return cost
-
-    def spill_cost(s):
-        kv = (MODEL["d_c"] + 2 * MODEL["d_r"] + 4) * MODEL["n_layers"]
-        return kv * s["cached"] / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
-
-    rounds = 0
-    while next_arrival < len(trace) or any(r["waiting"] or r["running"] for r in ranks):
-        rounds += 1
-        if rounds > 500_000:
-            raise RuntimeError("sim runaway")
-        while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
-            route(trace[next_arrival]["id"])
-            next_arrival += 1
-
-        # one lock-step round: every rank takes one scheduler action off the
-        # pre-round state; the round costs the slowest rank's step
-        decisions = []
-        for r in ranks:
-            if not r["waiting"] and not r["running"]:
-                continue
-            wview = [
-                (i, seqs[sid]["cached"] if seqs[sid]["spilled"] else seqs[sid]["prompt"],
-                 seqs[sid]["spilled"])
-                for i, sid in enumerate(r["waiting"])
-            ]
-            rview = [
-                (i, seqs[sid]["cached"], seqs[sid]["prompt"] - seqs[sid]["prefilled"])
-                for i, sid in enumerate(r["running"])
-            ]
-            action = decide_mixed(sched_cfg, wview, rview, r["free"])
-            if action[0] != "idle":
-                decisions.append((r, action))
-        if not decisions:
-            if next_arrival < len(trace):
-                clock = max(clock, trace[next_arrival]["arrival_s"])
-                continue
-            raise RuntimeError("cluster deadlock")
-        # costs depend only on each rank's own pre-apply state, so apply per
-        # rank, then charge the round's max cost (lock-step barrier)
-        round_cost = max(apply(r, action) for (r, action) in decisions)
-        clock += round_cost
-        for s in seqs.values():
-            if s["first_token"] is None and s["generated"] > 0:
-                s["first_token"] = clock
-        stats["rounds"] += 1
-        used = sum(capacity_pages - r["free"] for r in ranks)
-        stats["peak_pages"] = max(stats["peak_pages"], used)
-
-    ttfts = [s["first_token"] - s["arrival"] for s in seqs.values()]
+    # exact field selection of the committed BENCH_cluster.json result rows
     return dict(
         policy=policy,
         dp=dp,
-        requests=len(seqs),
-        gen_tokens=stats["gen_tokens"],
-        wall_s=clock,
-        tok_per_s=stats["gen_tokens"] / clock,
-        ttft_p50_ms=percentile(ttfts, 50.0) * 1e3,
-        ttft_p95_ms=percentile(ttfts, 95.0) * 1e3,
-        peak_pages=stats["peak_pages"],
-        prefill_tokens=stats["prefill_tokens"],
-        prefix_hit_tokens=stats["prefix_hit_tokens"],
-        mean_decode_batch=stats["decode_batch_sum"] / max(stats["decode_steps"], 1),
-        rounds=stats["rounds"],
-        spills=stats["spills"],
-        routed=stats["routed"],
+        requests=res["requests"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p50_ms=res["ttft_p50_ms"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        peak_pages=res["peak_pages"],
+        prefill_tokens=res["prefill_tokens"],
+        prefix_hit_tokens=res["prefix_hit_tokens"],
+        mean_decode_batch=res["mean_decode_batch"],
+        rounds=res["rounds"],
+        spills=res["spills"],
+        routed=res["routed"],
     )
-
-
-CAPACITY_PAGES = 768
-DP_FULL = [1, 2, 4]
-DP_QUICK = [1, 2]
 
 
 def run(quick=False):
@@ -482,8 +87,8 @@ def run(quick=False):
     trace = generate_trace(trace_cfg)
     results = {}
     for dp in (DP_QUICK if quick else DP_FULL):
-        sq = simulate_cluster("shortest_queue", dp, trace, sched_cfg, CAPACITY_PAGES)
-        aff = simulate_cluster("prefix_affinity", dp, trace, sched_cfg, CAPACITY_PAGES)
+        sq = sim("shortest_queue", dp, trace, sched_cfg)
+        aff = sim("prefix_affinity", dp, trace, sched_cfg)
         results[f"dp{dp}"] = dict(
             shortest_queue=sq,
             prefix_affinity=aff,

@@ -1,29 +1,14 @@
-"""Exact Python port of benches/serve_disagg.rs (mirrors the Rust, f64 math).
+"""Exact Python port of benches/serve_disagg.rs — a thin scenario over the
+shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
 
-The container this repo grows in has no Rust toolchain, so BENCH_disagg.json
-is generated from this port; `cargo bench --bench serve_disagg` regenerates
-the authoritative copy under target/bench-reports/ once cargo is available.
-
-The bench A/Bs **disaggregated** prefill/decode serving against colocated
-DP at equal rank count on a long-prompt + shared-prefix mixture, in
-**asynchronous** virtual time: every rank owns its clock and advances by
-its own step costs (disaggregation's whole point is that prefill and
-decode stress different roofline regimes — lock-stepping the heterogeneous
-ranks would charge every decode step the prefill rank's long GEMM-bound
-steps). Both arms run the same event loop, cost model, and real scheduler
-policy, so the comparison isolates the topology:
-
-* colocated arm: every rank runs the full lifecycle (mixed chunked
-  prefill), requests routed by prefix affinity (`pick_rank_affinity`),
-* disagg arm: the first `prefill_ranks` ranks run big-chunk prefill only
-  (chunked admission adopts published prompt prefixes; the monolithic
-  fallback is off under `disagg_prefill`) and hand each finished sequence
-  to a decode rank as a `KvWireBlock` — per-token e4m3 NoPE bytes + f32
-  scales + bf16 RoPE, 644 vs 1152 B/token/layer for a bf16-everything
-  transfer — priced over the NVLink link (`perfmodel::e2e::handoff_s`) and
-  overlapped with the rank's next step. Admissions go to the least-loaded
-  prefill rank (`pick_rank`); migrants land on the decode rank picked by
-  `pick_handoff_rank` (headroom, then shortest queue).
+Disaggregated prefill/decode serving vs colocated DP at equal rank count on
+a long-prompt + shared-prefix mixture, in **event-driven** per-rank virtual
+time: prefill ranks run big-chunk prefill only and hand each finished
+sequence to a decode rank as a KvWireBlock priced over the NVLink link and
+overlapped with the rank's next step. BENCH_disagg.json is generated from
+this port; `cargo bench --bench serve_disagg` regenerates the authoritative
+copy once cargo is available.
 
 Run: python3 python/tests/serve_disagg_port.py [--quick]
 """
@@ -32,406 +17,17 @@ import json
 import sys
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
-from serve_mixed_port import (  # noqa: E402
-    GPU,
-    MODEL,
-    decide_mixed,
-    normalize,
-    pages_for,
-    percentile,
-)
-from serve_cluster_port import (  # noqa: E402
-    COLLECTIVE_LATENCY_S,
-    decode_step_s,
+from serve_port_common import (  # noqa: E402
+    WIRE_BF16_PER_TOKEN,
+    WIRE_FP8_PER_TOKEN,
     generate_trace,
-    mixed_step_s,
-    pick_rank,
-    pick_rank_affinity,
-    prefill_step_s,
+    normalize,
+    simulate,
 )
 
 PAGE = 64
 NODE_GPUS = 8
 CAPACITY_PAGES = 768  # per rank
-
-# kvcache::transfer::KvWireBlock bytes per token (all layers)
-WIRE_FP8_PER_TOKEN = (MODEL["d_c"] + 2 * MODEL["d_r"] + 4) * MODEL["n_layers"]
-WIRE_BF16_PER_TOKEN = 2 * (MODEL["d_c"] + MODEL["d_r"]) * MODEL["n_layers"]
-
-
-def handoff_s(tokens):
-    """perfmodel::e2e::handoff_s — the FP8 wire block over the link."""
-    return WIRE_FP8_PER_TOKEN * tokens / GPU["nvlink_bw"] + COLLECTIVE_LATENCY_S
-
-
-def spill_s(tokens):
-    return WIRE_FP8_PER_TOKEN * tokens / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
-
-
-# --- coordinator::router / scheduler (disagg additions) -----------------------
-
-def pick_handoff_rank(loads):
-    """router::pick_handoff_rank: decode-rank placement for a migrant."""
-    feasible = [
-        (i, l) for i, l in enumerate(loads) if l["free"] + l["evictable"] >= l["needed"]
-    ]
-    if not feasible:
-        return None
-    return min(feasible, key=lambda il: (-il[1]["hit"], il[1]["tokens"], il[0]))[0]
-
-
-def decide_prefill_rank(cfg, wview, rview, free):
-    """Scheduler::decide with cfg.disagg_prefill: a completed prefill hands
-    off before anything else; otherwise the mixed policy runs (with the
-    monolithic fallback disabled — chunked admission adopts prefixes)."""
-    for (i, _ctx, pending) in rview:
-        if pending == 0:
-            return ("handoff", i)
-    return decide_mixed(cfg, wview, rview, free)
-
-
-# --- the asynchronous virtual-time cluster simulation -------------------------
-
-def simulate(n, prefill_ranks, trace, sched_cfg, prefill_sched_cfg, capacity_pages):
-    """prefill_ranks == 0 → colocated DP with prefix-affinity routing;
-    prefill_ranks > 0 → that many dedicated prefill ranks, the rest decode."""
-    cfg = dict(dp=n, tp=NODE_GPUS // n)
-    page = sched_cfg["page"]
-    seqs = {
-        r["id"]: dict(
-            prompt=r["prompt"], out=r["out"], arrival=r["arrival_s"], group=r["group"],
-            prefix_tokens=r["prefix_tokens"], cached=0, prefilled=0, generated=0,
-            spilled=False, adopted=0, transferred=0, first_token=None, last_token=None,
-        )
-        for r in trace
-    }
-    ranks = [
-        dict(waiting=[], running=[], free=capacity_pages, shared={}, t=0.0)
-        for _ in range(n)
-    ]
-    in_flight = []  # (sid, ready_at) FIFO
-    clock = 0.0
-    next_arrival = 0
-    stats = dict(
-        gen_tokens=0, prefill_tokens=0, prefix_hit_tokens=0, decode_steps=0,
-        decode_batch_sum=0, steps=0, peak_pages=0, spills=0, restores=0,
-        handoffs=0, wire_fp8_bytes=0, wire_bf16_bytes=0, routed=[0] * n,
-    )
-    itl = []  # inter-token latencies (every gap after a sequence's first token)
-
-    def emit(sid, t):
-        # one generated token for `sid` at rank-local time t
-        s = seqs[sid]
-        if s["last_token"] is not None:
-            itl.append(t - s["last_token"])
-        s["last_token"] = t
-        stats["gen_tokens"] += 1
-
-    def private_pages(sid):
-        s = seqs[sid]
-        return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
-
-    def route(sid):
-        s = seqs[sid]
-        if prefill_ranks == 0:
-            # colocated: prefix-affinity over every rank
-            needed = pages_for(s["prompt"] + s["out"], page)
-            loads = []
-            for r in ranks:
-                tokens = sum(
-                    seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
-                ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
-                if s["group"] is not None and r["shared"].get(s["group"], 0) > 0:
-                    hit_pages = min(r["shared"][s["group"]], (s["prompt"] - 1) // page)
-                else:
-                    hit_pages = 0
-                loads.append(
-                    dict(tokens=tokens, free=r["free"], needed=needed,
-                         hit=hit_pages * page, evictable=0)
-                )
-            rank = pick_rank_affinity(loads, page)
-        else:
-            # disagg: least-loaded prefill rank; a prefill rank holds just
-            # the prompt's pages (the KV migrates at handoff)
-            needed = pages_for(s["prompt"], page)
-            loads = []
-            for r in ranks[:prefill_ranks]:
-                tokens = sum(
-                    seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
-                ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
-                loads.append(dict(tokens=tokens, free=r["free"], needed=needed))
-            rank = pick_rank(loads)
-        stats["routed"][rank] += 1
-        ranks[rank]["waiting"].append(sid)
-
-    def deliver():
-        # every ready transfer lands on the decode rank with headroom;
-        # slot-saturated ranks are marked infeasible by inflating their need
-        delivered = False
-        keep = []
-        for (sid, ready) in in_flight:
-            if ready > clock:
-                keep.append((sid, ready))
-                continue
-            s = seqs[sid]
-            remaining = s["out"] - s["generated"]
-            needed = pages_for(s["cached"] + remaining, page)
-            loads = []
-            for r in ranks[prefill_ranks:]:
-                tokens = sum(
-                    seqs[x]["out"] - seqs[x]["generated"] for x in r["running"]
-                ) + sum(seqs[w]["out"] - seqs[w]["generated"] for w in r["waiting"])
-                open_slot = len(r["running"]) < sched_cfg["max_running"]
-                loads.append(
-                    dict(tokens=tokens, free=r["free"], evictable=0, hit=0,
-                         needed=needed if open_slot else capacity_pages + 1)
-                )
-            j = pick_handoff_rank(loads)
-            if j is None:
-                keep.append((sid, ready))
-                continue
-            r = ranks[prefill_ranks + j]
-            r["free"] -= pages_for(s["cached"], page)
-            r["running"].append(sid)
-            stats["handoffs"] += 1
-            delivered = True
-        in_flight[:] = keep
-        return delivered
-
-    def publish(r, sid):
-        s = seqs[sid]
-        if s["group"] is None:
-            return
-        done = min(s["prefilled"], s["prefix_tokens"]) // page
-        have = r["shared"].get(s["group"], 0)
-        if done > have:
-            s["transferred"] += done - have
-            r["shared"][s["group"]] = done
-
-    def apply(r, action, t_start):
-        """Apply one scheduler action; returns its cost. First tokens are
-        stamped at the rank-local completion time t_start + cost."""
-        cost = 0.0
-        kind = action[0]
-        if kind == "prefill":
-            ids = [r["waiting"][i] for i in action[1]]
-            r["waiting"] = r["waiting"][len(ids):]
-            total = sum(seqs[sid]["prompt"] for sid in ids)
-            cost = prefill_step_s(cfg, total)
-            stats["prefill_tokens"] += total
-            for sid in ids:
-                s = seqs[sid]
-                r["free"] -= pages_for(s["prompt"], page)
-                s["cached"] = s["prompt"]
-                s["prefilled"] = s["prompt"]
-                publish(r, sid)
-                s["generated"] = 1
-                s["first_token"] = t_start + cost
-                emit(sid, t_start + cost)
-                if s["generated"] >= s["out"]:
-                    r["free"] += private_pages(sid)
-                else:
-                    r["running"].append(sid)
-        elif kind == "handoff":
-            # serialize + free this rank's pages; the wire block rides the
-            # link overlapped with the rank's next step
-            sid = r["running"].pop(action[1])
-            s = seqs[sid]
-            r["free"] += private_pages(sid)
-            s["adopted"] = 0
-            s["transferred"] = 0
-            stats["wire_fp8_bytes"] += WIRE_FP8_PER_TOKEN * s["cached"]
-            stats["wire_bf16_bytes"] += WIRE_BF16_PER_TOKEN * s["cached"]
-            in_flight.append((sid, t_start + handoff_s(s["cached"])))
-        elif kind == "decode":
-            ids = [r["running"][i] for i in action[1]]
-            ctx = max(seqs[sid]["cached"] for sid in ids) + 1
-            cost = decode_step_s(cfg, len(ids), ctx)
-            stats["decode_steps"] += 1
-            stats["decode_batch_sum"] += len(ids)
-            done = []
-            for sid in ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                emit(sid, t_start + cost)
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                r["free"] += private_pages(sid)
-                r["running"].remove(sid)
-        elif kind == "mixed":
-            chunks, decode_idxs = action[1], action[2]
-            n_admit = sum(1 for c in chunks if c[0])
-            admitted = r["waiting"][:n_admit]
-            r["waiting"] = r["waiting"][n_admit:]
-            for sid in admitted:
-                s = seqs[sid]
-                if s["group"] is not None and r["shared"].get(s["group"], 0) > 0:
-                    hit_pages = min(r["shared"][s["group"]], (s["prompt"] - 1) // page)
-                    if hit_pages > 0:
-                        s["adopted"] = hit_pages
-                        s["cached"] = hit_pages * page
-                        s["prefilled"] = hit_pages * page
-                        stats["prefix_hit_tokens"] += hit_pages * page
-            chunk_plan = []
-            for (fw, idx, grant) in chunks:
-                sid = admitted[idx] if fw else r["running"][idx]
-                s = seqs[sid]
-                take = min(grant, s["prompt"] - s["prefilled"])
-                chunk_plan.append((sid, take))
-            r["running"].extend(admitted)
-            decode_ids = [r["running"][i] for i in decode_idxs]
-            total_chunk = sum(t for (_, t) in chunk_plan)
-            dctx = max((seqs[sid]["cached"] for sid in decode_ids), default=-1) + 1
-            cctx = max((seqs[sid]["cached"] + t for (sid, t) in chunk_plan), default=0)
-            cost = mixed_step_s(cfg, len(decode_ids), dctx, total_chunk, cctx)
-            if decode_ids:
-                stats["decode_steps"] += 1
-                stats["decode_batch_sum"] += len(decode_ids)
-            done = []
-            for (sid, take) in chunk_plan:
-                s = seqs[sid]
-                r["free"] -= pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
-                s["cached"] += take
-                s["prefilled"] += take
-                stats["prefill_tokens"] += take
-                publish(r, sid)
-                if s["prefilled"] == s["prompt"]:
-                    s["generated"] = 1
-                    s["first_token"] = t_start + cost
-                    emit(sid, t_start + cost)
-                    if s["generated"] >= s["out"]:
-                        done.append(sid)
-            for sid in decode_ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                emit(sid, t_start + cost)
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                r["free"] += private_pages(sid)
-                r["running"].remove(sid)
-        elif kind == "resume":
-            sid = r["waiting"].pop(0)
-            s = seqs[sid]
-            cost = spill_s(s["cached"])
-            r["free"] -= pages_for(s["cached"], page)
-            s["spilled"] = False
-            stats["restores"] += 1
-            r["running"].append(sid)
-        elif kind == "preempt":
-            sid = r["running"].pop(action[1])
-            s = seqs[sid]
-            cost = spill_s(s["cached"])
-            r["free"] += private_pages(sid)
-            s["adopted"] = 0
-            s["transferred"] = 0
-            s["spilled"] = True
-            stats["spills"] += 1
-            r["waiting"].insert(0, sid)
-        return cost
-
-    iters = 0
-    while (
-        next_arrival < len(trace)
-        or in_flight
-        or any(r["waiting"] or r["running"] for r in ranks)
-    ):
-        iters += 1
-        if iters > 2_000_000:
-            raise RuntimeError("sim runaway")
-        cands = [r["t"] for r in ranks if r["waiting"] or r["running"]]
-        if next_arrival < len(trace):
-            cands.append(trace[next_arrival]["arrival_s"])
-        cands.extend(ready for (_, ready) in in_flight)
-        clock = max(clock, min(cands))
-
-        progressed = False
-        while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
-            route(trace[next_arrival]["id"])
-            next_arrival += 1
-            progressed = True
-        if prefill_ranks > 0 and deliver():
-            progressed = True
-
-        for ri, r in enumerate(ranks):
-            if r["t"] > clock:
-                continue
-            # handoffs cost the rank nothing (serialize + async send): a
-            # prefill rank drains every completed prefill and still takes
-            # its real action at the same instant
-            while True:
-                if not r["waiting"] and not r["running"]:
-                    action = ("idle",)
-                    break
-                wview = [
-                    (i, seqs[sid]["cached"] if seqs[sid]["spilled"] else seqs[sid]["prompt"],
-                     seqs[sid]["spilled"])
-                    for i, sid in enumerate(r["waiting"])
-                ]
-                rview = [
-                    (i, seqs[sid]["cached"], seqs[sid]["prompt"] - seqs[sid]["prefilled"])
-                    for i, sid in enumerate(r["running"])
-                ]
-                if ri < prefill_ranks:
-                    action = decide_prefill_rank(prefill_sched_cfg, wview, rview, r["free"])
-                else:
-                    action = decide_mixed(sched_cfg, wview, rview, r["free"])
-                if action[0] != "handoff":
-                    break
-                apply(r, action, r["t"])
-                progressed = True
-            if action[0] == "idle":
-                continue
-            r["t"] += apply(r, action, r["t"])
-            stats["steps"] += 1
-            progressed = True
-
-        if not progressed:
-            later = [c for c in cands if c > clock]
-            if not later:
-                raise RuntimeError("serve_disagg deadlock")
-            clock = min(later)
-            continue
-        used = sum(capacity_pages - r["free"] for r in ranks)
-        stats["peak_pages"] = max(stats["peak_pages"], used)
-
-    wall = clock
-    for r in ranks:
-        wall = max(wall, r["t"])
-    ttfts = [s["first_token"] - s["arrival"] for s in seqs.values()]
-    return dict(
-        policy="colocated" if prefill_ranks == 0 else "disagg",
-        ranks=n,
-        prefill_ranks=prefill_ranks,
-        decode_ranks=n - prefill_ranks if prefill_ranks else n,
-        requests=len(seqs),
-        gen_tokens=stats["gen_tokens"],
-        wall_s=wall,
-        tok_per_s=stats["gen_tokens"] / wall,
-        ttft_p50_ms=percentile(ttfts, 50.0) * 1e3,
-        ttft_p95_ms=percentile(ttfts, 95.0) * 1e3,
-        itl_p50_ms=percentile(itl, 50.0) * 1e3,
-        itl_p95_ms=percentile(itl, 95.0) * 1e3,
-        peak_pages=stats["peak_pages"],
-        prefill_tokens=stats["prefill_tokens"],
-        prefix_hit_tokens=stats["prefix_hit_tokens"],
-        mean_decode_batch=stats["decode_batch_sum"] / max(stats["decode_steps"], 1),
-        steps=stats["steps"],
-        spills=stats["spills"],
-        handoffs=stats["handoffs"],
-        transferred_gb_fp8=stats["wire_fp8_bytes"] / 1e9,
-        transferred_gb_bf16=stats["wire_bf16_bytes"] / 1e9,
-        routed=stats["routed"],
-    )
-
-
 N_FULL = [2, 4]
 N_QUICK = [2]
 
@@ -441,6 +37,49 @@ def prefill_split(n):
     prefill compute (long prompts) and decode compute are of the same
     order, and the A/B holds total rank count equal."""
     return n // 2
+
+
+def sim(n, prefill_ranks, trace, sched_cfg, prefill_sched_cfg):
+    """prefill_ranks == 0 → colocated DP with prefix-affinity routing;
+    prefill_ranks > 0 → that many dedicated prefill ranks, the rest decode."""
+    res = simulate(
+        trace,
+        dict(
+            ranks=n,
+            prefill_ranks=prefill_ranks,
+            routing="disagg" if prefill_ranks else "prefix_affinity",
+            timing="event",
+            sched_cfg=sched_cfg,
+            prefill_sched_cfg=prefill_sched_cfg,
+            capacity_pages=CAPACITY_PAGES,
+            model_cfg=dict(dp=n, tp=NODE_GPUS // n),
+        ),
+    )
+    # exact field selection of the committed BENCH_disagg.json result rows
+    return dict(
+        policy="colocated" if prefill_ranks == 0 else "disagg",
+        ranks=res["ranks"],
+        prefill_ranks=res["prefill_ranks"],
+        decode_ranks=res["decode_ranks"],
+        requests=res["requests"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p50_ms=res["ttft_p50_ms"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        itl_p50_ms=res["itl_p50_ms"],
+        itl_p95_ms=res["itl_p95_ms"],
+        peak_pages=res["peak_pages"],
+        prefill_tokens=res["prefill_tokens"],
+        prefix_hit_tokens=res["prefix_hit_tokens"],
+        mean_decode_batch=res["mean_decode_batch"],
+        steps=res["steps"],
+        spills=res["spills"],
+        handoffs=res["handoffs"],
+        transferred_gb_fp8=res["transferred_gb_fp8"],
+        transferred_gb_bf16=res["transferred_gb_bf16"],
+        routed=res["routed"],
+    )
 
 
 def run(quick=False):
@@ -484,10 +123,8 @@ def run(quick=False):
     trace = generate_trace(trace_cfg)
     results = {}
     for n in (N_QUICK if quick else N_FULL):
-        coloc = simulate(n, 0, trace, sched_cfg, prefill_sched_cfg, CAPACITY_PAGES)
-        dis = simulate(
-            n, prefill_split(n), trace, sched_cfg, prefill_sched_cfg, CAPACITY_PAGES
-        )
+        coloc = sim(n, 0, trace, sched_cfg, prefill_sched_cfg)
+        dis = sim(n, prefill_split(n), trace, sched_cfg, prefill_sched_cfg)
         results[f"n{n}"] = dict(
             colocated=coloc,
             disagg=dis,

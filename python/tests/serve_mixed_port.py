@@ -1,576 +1,54 @@
-"""Exact Python port of benches/serve_mixed.rs (mirrors the Rust, f64 math).
+"""Exact Python port of benches/serve_mixed.rs — a thin scenario over the
+shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
 
-The container this repo grows in has no Rust toolchain, so BENCH_serve.json
-is generated from this port; `cargo bench --bench serve_mixed` regenerates
-the authoritative copy under target/bench-reports/ once cargo is available.
-Every function here mirrors its Rust counterpart line by line:
-util::rng::Rng, workload::tracegen, coordinator::scheduler (both policies),
-perfmodel::{kernel,e2e} cost functions, util::stats percentile.
+Mixed chunked-prefill batching vs the alternating scheduler on one rank
+(event timing degenerates to a single global clock), burst arrivals, 25%
+long prompts. BENCH_serve.json is generated from this port; `cargo bench
+--bench serve_mixed` regenerates the authoritative copy once cargo is
+available.
 
 Run: python3 python/tests/serve_mixed_port.py [--quick]
 """
 
 import json
-import math
 import sys
 
-MASK = (1 << 64) - 1
-
-
-class Rng:
-    """xoshiro256** seeded via SplitMix64 (util::rng)."""
-
-    def __init__(self, seed):
-        x = (seed + 0x9E3779B97F4A7C15) & MASK
-
-        def nxt():
-            nonlocal x
-            x = (x + 0x9E3779B97F4A7C15) & MASK
-            z = x
-            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
-            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
-            return (z ^ (z >> 31)) & MASK
-
-        # Rust fills s[0..4] via four successive SplitMix64 draws
-        self.s = [nxt(), nxt(), nxt(), nxt()]
-
-    def next_u64(self):
-        def rotl(v, k):
-            return ((v << k) | (v >> (64 - k))) & MASK
-
-        s = self.s
-        r = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
-        t = (s[1] << 17) & MASK
-        s[2] ^= s[0]
-        s[3] ^= s[1]
-        s[1] ^= s[2]
-        s[0] ^= s[3]
-        s[2] ^= t
-        s[3] = rotl(s[3], 45)
-        return r
-
-    def f64(self):
-        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
-
-    def below(self, n):
-        return (self.next_u64() * n) >> 64
-
-    def range_usize(self, lo, hi):
-        return lo + self.below(hi - lo)
-
-    def bool(self, p):
-        return self.f64() < p
-
-    def exponential(self, mean):
-        u = max(self.f64(), 1e-12)
-        return -mean * math.log(u)
-
-
-# --- workload::tracegen -----------------------------------------------------
-
-def generate_trace(cfg):
-    rng = Rng(cfg["seed"])
-    t = 0.0
-    reqs = []
-    for i in range(cfg["num_requests"]):
-        if cfg["mean_interarrival_s"] > 0.0:
-            t += rng.exponential(cfg["mean_interarrival_s"])
-        long_prompt = cfg["long_frac"] > 0.0 and rng.bool(cfg["long_frac"])
-        if long_prompt:
-            prompt = rng.range_usize(cfg["long_prompt_min"], cfg["long_prompt_max"] + 1)
-        else:
-            prompt = rng.range_usize(cfg["prompt_min"], cfg["prompt_max"] + 1)
-        out = rng.range_usize(cfg["out_min"], cfg["out_max"] + 1)
-        reqs.append(
-            dict(id=i, arrival_s=t, prompt=prompt, out=out, long=long_prompt)
-        )
-    return reqs
-
-
-# --- perfmodel --------------------------------------------------------------
-
-GPU = dict(
-    bf16_tflops=148.0,
-    fp8_tflops=296.0,
-    hbm_bw=4.0e12,
-    hbm_bytes=141.0e9,
-    nvlink_bw=450.0e9,
-    launch_s=4.0e-6,
-    peak_util=0.88,
-)
-MODEL = dict(
-    n_layers=61,
-    heads=128,
-    d_c=512,
-    d_r=64,
-    total_params=671e9,
-    active_params=37e9,
-)
-CFG = dict(dp=8, tp=1)
-
-
-def gpus():
-    return CFG["dp"] * CFG["tp"]
-
-
-def snapmla_effective_peak_tflops():
-    return GPU["bf16_tflops"] * 17.0 / 9.0
-
-
-def kv_bytes_per_token():
-    return (MODEL["d_c"] + 2 * MODEL["d_r"] + 4) * MODEL["n_layers"]
-
-
-def kernel_time_s(batch, heads, t_q, seq, d_c, d_r):
-    """perfmodel::kernel::kernel_time_s for SnapMlaFp8."""
-    rows = batch * heads * t_q
-    n = float(seq)
-    qk = rows * n * (d_c + d_r) * 2.0
-    pv = rows * n * d_c * 2.0
-    flops = qk + pv
-    per_token = d_c + 2 * d_r + 4
-    kv = batch * seq * float(per_token)
-    qo = batch * heads * t_q * (2 * d_c + d_r) * 4.0
-    nbytes = kv + qo
-    peak = snapmla_effective_peak_tflops()
-    m = float(heads * t_q)
-    row_tile = min(max(m / 64.0, 1.0 / 64.0), 1.0)
-    ramp = n / (n + 400.0)
-    eff = GPU["peak_util"] * row_tile * ramp
-    compute = flops / (peak * 1e12 * eff)
-    memory = nbytes / GPU["hbm_bw"]
-    return max(compute, memory) + GPU["launch_s"]
-
-
-def expert_stream_read(units):
-    return min(MODEL["active_params"] * units ** 0.35, MODEL["total_params"])
-
-
-def decode_step_s(batch, context):
-    if batch == 0:
-        return math.inf
-    attn = (
-        kernel_time_s(batch, MODEL["heads"] // CFG["tp"], 1, context, MODEL["d_c"], MODEL["d_r"])
-        * MODEL["n_layers"]
-    )
-    read = expert_stream_read(float(batch))
-    weights = read / gpus() / GPU["hbm_bw"]
-    gemm_flops = 2.0 * MODEL["active_params"] * batch / gpus()
-    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
-    allreduce = 0.0  # tp == 1
-    launches = 2.0 * MODEL["n_layers"] * GPU["launch_s"]
-    return attn + max(weights, gemm) + allreduce + launches
-
-
-# Prefill attention runs the NON-absorbed MLA form (decode-only absorption:
-# d_c=512 per head is flop-prohibitive for multi-token queries), with naive
-# head dims qk=192 (v=128 + rope=64), v=128.
-PREFILL_V_HEAD = 128
-PREFILL_ROPE_HEAD = 64
-
-
-def prefill_attn_s(t_q, ctx):
-    return (
-        kernel_time_s(
-            1, MODEL["heads"] // CFG["tp"], t_q, max(ctx, 1),
-            PREFILL_V_HEAD, PREFILL_ROPE_HEAD,
-        )
-        * MODEL["n_layers"]
-    )
-
-
-def prefill_step_s(tokens):
-    if tokens == 0:
-        return 0.0
-    t = float(tokens)
-    weights = expert_stream_read(t) / gpus() / GPU["hbm_bw"]
-    gemm_flops = 2.0 * MODEL["active_params"] * t / gpus()
-    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
-    attn = prefill_attn_s(tokens, max(tokens // 2, 1))
-    launches = 3.0 * MODEL["n_layers"] * GPU["launch_s"]
-    return max(weights, gemm) + attn + launches
-
-
-def mixed_step_s(decode_batch, context, chunk_tokens, chunk_context):
-    if chunk_tokens == 0:
-        return decode_step_s(decode_batch, context)
-    c = float(chunk_tokens)
-    eff = GPU["fp8_tflops"] * 1e12 * GPU["peak_util"]
-    gemm_c = 2.0 * MODEL["active_params"] * c / gpus() / eff
-    attn_c = prefill_attn_s(chunk_tokens, max(chunk_context, chunk_tokens))
-    chunk_compute = gemm_c + attn_c
-    if decode_batch == 0:
-        weights = expert_stream_read(c) / gpus() / GPU["hbm_bw"]
-        return max(weights, chunk_compute) + 2.0 * MODEL["n_layers"] * GPU["launch_s"]
-    base = decode_step_s(decode_batch, context)
-    weights_mem = expert_stream_read(float(decode_batch)) / gpus() / GPU["hbm_bw"]
-    gemm_d = 2.0 * MODEL["active_params"] * decode_batch / gpus() / eff
-    hidden = max(weights_mem - gemm_d, 0.0)
-    return base + max(chunk_compute - hidden, 0.0) + GPU["launch_s"]
-
-
-def spill_s(tokens):
-    return kv_bytes_per_token() * tokens / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
-
-
-# --- coordinator::scheduler --------------------------------------------------
-
-def pages_for(tokens, page):
-    return -(-tokens // page)
-
-
-def decide_alternating(cfg, waiting, running, free_pages):
-    # waiting: (idx, tokens, spilled); running: (idx, context, pending)
-    growth = sum(
-        1
-        for r in running[: cfg["max_decode_batch"]]
-        if r[1] < cfg["max_context"] and r[1] % cfg["page"] == 0
-    )
-    if waiting and waiting[0][2]:
-        w = waiting[0]
-        if (
-            len(running) < cfg["max_decode_batch"]
-            and pages_for(w[1] + 1, cfg["page"]) <= max(free_pages - growth, 0)
-        ):
-            return ("resume", w[0])
-    head_parked = bool(waiting) and waiting[0][2]
-    if not head_parked and waiting and len(running) < cfg["max_decode_batch"]:
-        admitted, pages_needed = [], 0
-        slots = cfg["max_decode_batch"] - len(running)
-        for w in waiting[: min(cfg["max_prefill_batch"], slots)]:
-            if w[2] or w[1] > cfg["max_prefill_tokens"]:
-                break
-            need = pages_for(w[1] + 1, cfg["page"])
-            if pages_needed + need > free_pages:
-                break
-            pages_needed += need
-            admitted.append(w[0])
-        if admitted:
-            return ("prefill", admitted)
-    if running:
-        if growth > free_pages:
-            return ("preempt", running[-1][0])
-        batch = [
-            r[0] for r in running[: cfg["max_decode_batch"]] if r[1] < cfg["max_context"]
-        ]
-        if batch:
-            return ("decode", batch)
-    return ("idle",)
-
-
-def decide_mixed(cfg, waiting, running, free_pages):
-    head_parked = bool(waiting) and waiting[0][2]
-
-    # reserve one step-item slot for chunk progress whenever prefill work
-    # exists, so a full decode batch cannot starve an in-flight prompt
-    prefill_pending = any(r[2] > 0 for r in running) or (
-        bool(waiting) and not waiting[0][2]
-    )
-    decode_cap = min(
-        cfg["max_decode_batch"],
-        cfg["max_step_items"] - 1 if prefill_pending else cfg["max_step_items"],
-    )
-    decodable = [r for r in running if r[2] == 0 and r[1] < cfg["max_context"]]
-    decodable = decodable[:decode_cap]
-    decode_idxs = [r[0] for r in decodable]
-    growth = sum(1 for r in decodable if r[1] % cfg["page"] == 0)
-    # a resume may only use pages beyond the decode set's growth, or a
-    # boundary-parked decode batch ping-pongs preempt/resume forever
-    if waiting and waiting[0][2]:
-        w = waiting[0]
-        if (
-            len(running) < cfg["max_running"]
-            and pages_for(w[1] + 1, cfg["page"]) <= max(free_pages - growth, 0)
-        ):
-            return ("resume", w[0])
-    if growth > free_pages:
-        return ("preempt", running[-1][0])
-    page_budget = free_pages - growth
-
-    # hybrid fallback: with nothing decoding and no chunked prefill in
-    # flight, dribbling 64-token chunks wastes one weight pass per step —
-    # admit monolithically through the prefill bucket instead. Disabled on
-    # disaggregated prefill ranks: there is never a decode batch to ride,
-    # and only chunked admission adopts published prompt prefixes, so
-    # prefill ranks run big-chunk admission instead.
-    if (
-        not decode_idxs
-        and not any(r[2] > 0 for r in running)
-        and not head_parked
-        and not cfg.get("disagg_prefill", False)
-        and waiting
-        and len(running) < cfg["max_running"]
-    ):
-        admitted, pages_needed = [], 0
-        slots = cfg["max_running"] - len(running)
-        for w in waiting[: min(cfg["max_prefill_batch"], slots)]:
-            if w[2] or w[1] > cfg["max_prefill_tokens"]:
-                break
-            need = pages_for(w[1] + 1, cfg["page"])
-            if pages_needed + need > free_pages:
-                break
-            pages_needed += need
-            admitted.append(w[0])
-        if admitted:
-            return ("prefill", admitted)
-
-    item_slots = cfg["max_step_items"] - len(decode_idxs)
-    admit_slots = max(cfg["max_running"] - len(running), 0)
-    cands = []
-    for r in running:
-        if r[2] > 0:
-            if item_slots == 0 or len(cands) >= cfg["max_prefill_batch"]:
-                break
-            cands.append((False, r[0], r[1], r[2]))
-            item_slots -= 1
-    reserved = sum(
-        pages_for(r[1] + r[2] + 1, cfg["page"]) - pages_for(r[1], cfg["page"])
-        for r in running
-        if r[2] > 0
-    )
-    if not head_parked:
-        for w in waiting:
-            if w[2] or item_slots == 0 or admit_slots == 0:
-                break
-            # at most max_prefill_batch prompts mid-flight at once: idle
-            # half-prefilled prompts would hold running slots + page
-            # reservations while starved of chunk budget
-            if len(cands) >= cfg["max_prefill_batch"]:
-                break
-            if w[1] + 1 > cfg["max_context"]:
-                break
-            need = pages_for(w[1] + 1, cfg["page"])
-            if reserved + need > max(free_pages - growth, 0):
-                break
-            reserved += need
-            cands.append((True, w[0], 0, w[1]))
-            item_slots -= 1
-            admit_slots -= 1
-
-    # shortest-remaining-prefill-first within the admitted set (admission
-    # itself stays FCFS): short prompts finish in one chunk and refill the
-    # decode pool immediately, while long prompts drain on the leftover
-    # budget every step
-    cands.sort(key=lambda c: c[3])
-    token_budget = cfg["prefill_chunk_tokens"]
-    chunks = []
-    for k, (fw, idx, cached, pending) in enumerate(cands):
-        # every remaining candidate is guaranteed one token while the budget
-        # lasts, so the admitted set stays a full FCFS prefix of the queue
-        rest = len(cands) - k - 1
-        take = min(cfg["chunk_per_seq"], pending, max(token_budget - rest, 1), token_budget)
-        held_capacity = pages_for(cached, cfg["page"]) * cfg["page"]
-        absorbable = max(held_capacity + page_budget * cfg["page"] - cached, 0)
-        take = min(take, absorbable)
-        if take == 0 and not fw:
-            continue
-        # a from_waiting candidate ALWAYS emits its chunk (even 0 tokens):
-        # the server pops exactly the emitted admissions
-        need = pages_for(cached + take, cfg["page"]) - pages_for(cached, cfg["page"])
-        page_budget -= need
-        token_budget -= take
-        chunks.append((fw, idx, take))
-
-    if not chunks and not decode_idxs:
-        return ("idle",)
-    return ("mixed", chunks, decode_idxs)
-
-
-# --- the virtual-time serving simulation -------------------------------------
-
-def percentile(xs, p):
-    xs = sorted(xs)
-    rank = (p / 100.0) * (len(xs) - 1)
-    lo, hi = int(math.floor(rank)), int(math.ceil(rank))
-    if lo == hi:
-        return xs[lo]
-    frac = rank - lo
-    return xs[lo] * (1.0 - frac) + xs[hi] * frac
-
-
-def simulate(policy, trace, sched_cfg, capacity_pages):
-    page = sched_cfg["page"]
-    seqs = {
-        r["id"]: dict(
-            prompt=r["prompt"], out=r["out"], arrival=r["arrival_s"], long=r["long"],
-            cached=0, prefilled=0, generated=0, spilled=False, first_token=None,
-            finish=None,
-        )
-        for r in trace
-    }
-    waiting, running = [], []
-    free = capacity_pages
-    clock = 0.0
-    next_arrival = 0
-    spills = restores = decode_steps = 0
-    decode_batch_sum = chunk_tokens = 0
-    gen_tokens = 0
-
-    def release(sid):
-        nonlocal free
-        free += pages_for(seqs[sid]["cached"], page)
-
-    def finish(sid, t):
-        seqs[sid]["finish"] = t
-        release(sid)
-
-    steps = 0
-    while next_arrival < len(trace) or waiting or running:
-        steps += 1
-        if steps > 500_000:
-            raise RuntimeError("sim runaway")
-        while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
-            waiting.append(trace[next_arrival]["id"])
-            next_arrival += 1
-
-        wview = [
-            (i, seqs[sid]["cached"] if seqs[sid]["spilled"] else seqs[sid]["prompt"],
-             seqs[sid]["spilled"])
-            for i, sid in enumerate(waiting)
-        ]
-        rview = [
-            (i, seqs[sid]["cached"], seqs[sid]["prompt"] - seqs[sid]["prefilled"])
-            for i, sid in enumerate(running)
-        ]
-        if policy == "alternating":
-            action = decide_alternating(sched_cfg, wview, rview, free)
-        else:
-            action = decide_mixed(sched_cfg, wview, rview, free)
-
-        if action[0] == "idle":
-            if next_arrival < len(trace):
-                clock = max(clock, trace[next_arrival]["arrival_s"])
-                continue
-            raise RuntimeError(f"deadlock: {len(waiting)} waiting, {len(running)} running")
-
-        if action[0] == "prefill":
-            ids = [waiting[i] for i in action[1]]
-            waiting = waiting[len(ids):]
-            total = sum(seqs[sid]["prompt"] for sid in ids)
-            cost = prefill_step_s(total)
-            clock += cost
-            for sid in ids:
-                s = seqs[sid]
-                free -= pages_for(s["prompt"], page)
-                s["cached"] = s["prompt"]
-                s["prefilled"] = s["prompt"]
-                s["generated"] = 1
-                gen_tokens += 1
-                s["first_token"] = clock
-                if s["generated"] >= s["out"]:
-                    finish(sid, clock)
-                else:
-                    running.append(sid)
-        elif action[0] == "decode":
-            ids = [running[i] for i in action[1]]
-            ctx = max(seqs[sid]["cached"] for sid in ids) + 1
-            cost = decode_step_s(len(ids), ctx)
-            clock += cost
-            decode_steps += 1
-            decode_batch_sum += len(ids)
-            done = []
-            for sid in ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    free -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                gen_tokens += 1
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                finish(sid, clock)
-                running.remove(sid)
-        elif action[0] == "mixed":
-            chunks, decode_idxs = action[1], action[2]
-            # admissions are a FCFS prefix of `waiting`; chunk list order is
-            # service order (SRPT), idx is the waiting position
-            n_admit = sum(1 for c in chunks if c[0])
-            admitted = waiting[:n_admit]
-            chunk_plan = []  # (sid, take)
-            for (fw, idx, grant) in chunks:
-                sid = admitted[idx] if fw else running[idx]
-                s = seqs[sid]
-                take = min(grant, s["prompt"] - s["prefilled"])
-                chunk_plan.append((sid, take))
-            waiting = waiting[n_admit:]
-            running.extend(admitted)
-            decode_ids = [running[i] for i in decode_idxs]
-            total_chunk = sum(t for (_, t) in chunk_plan)
-            dctx = (
-                max(seqs[sid]["cached"] for sid in decode_ids) + 1 if decode_ids else 0
-            )
-            cctx = max((seqs[sid]["cached"] + t for (sid, t) in chunk_plan), default=0)
-            cost = mixed_step_s(len(decode_ids), dctx, total_chunk, cctx)
-            clock += cost
-            if decode_ids:
-                decode_steps += 1
-                decode_batch_sum += len(decode_ids)
-            done = []
-            for (sid, take) in chunk_plan:
-                s = seqs[sid]
-                need = pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
-                free -= need
-                s["cached"] += take
-                s["prefilled"] += take
-                chunk_tokens += take
-                if s["prefilled"] == s["prompt"]:
-                    s["generated"] = 1
-                    gen_tokens += 1
-                    s["first_token"] = clock
-                    if s["generated"] >= s["out"]:
-                        done.append(sid)
-            for sid in decode_ids:
-                s = seqs[sid]
-                if s["cached"] % page == 0:
-                    free -= 1
-                s["cached"] += 1
-                s["generated"] += 1
-                gen_tokens += 1
-                if s["generated"] >= s["out"]:
-                    done.append(sid)
-            for sid in done:
-                finish(sid, clock)
-                running.remove(sid)
-        elif action[0] == "resume":
-            sid = waiting.pop(0)
-            s = seqs[sid]
-            clock += spill_s(s["cached"])
-            free -= pages_for(s["cached"], page)
-            s["spilled"] = False
-            restores += 1
-            running.append(sid)
-        elif action[0] == "preempt":
-            sid = running.pop(action[1])
-            s = seqs[sid]
-            clock += spill_s(s["cached"])
-            release(sid)
-            s["spilled"] = True
-            spills += 1
-            waiting.insert(0, sid)
-
-    ttfts = [s["first_token"] - s["arrival"] for s in seqs.values()]
-    ttfts_short = [
-        s["first_token"] - s["arrival"] for s in seqs.values() if not s["long"]
-    ]
-    return dict(
-        policy=policy,
-        requests=len(seqs),
-        gen_tokens=gen_tokens,
-        wall_s=clock,
-        decode_tok_per_s=gen_tokens / clock,
-        ttft_p50_ms=percentile(ttfts, 50.0) * 1e3,
-        ttft_p95_ms=percentile(ttfts, 95.0) * 1e3,
-        ttft_short_p95_ms=percentile(ttfts_short, 95.0) * 1e3,
-        mean_decode_batch=decode_batch_sum / max(decode_steps, 1),
-        decode_steps=decode_steps,
-        chunk_tokens=chunk_tokens,
-        spills=spills,
-        restores=restores,
-    )
-
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
 
 CAPACITY_PAGES = 2048
+
+
+def sim(policy, trace, sched_cfg):
+    res = simulate(
+        trace,
+        dict(
+            ranks=1,
+            routing="single",
+            timing="event",
+            policy=policy,
+            sched_cfg=sched_cfg,
+            capacity_pages=CAPACITY_PAGES,
+            model_cfg=dict(dp=8, tp=1),
+        ),
+    )
+    # exact field selection of the committed BENCH_serve.json result rows
+    return dict(
+        policy=policy,
+        requests=res["requests"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        decode_tok_per_s=res["tok_per_s"],
+        ttft_p50_ms=res["ttft_p50_ms"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        ttft_short_p95_ms=res["ttft_short_p95_ms"],
+        mean_decode_batch=res["mean_decode_batch"],
+        decode_steps=res["decode_steps"],
+        chunk_tokens=res["chunk_tokens"],
+        spills=res["spills"],
+        restores=res["restores"],
+    )
 
 
 def run(quick=False):
@@ -599,8 +77,8 @@ def run(quick=False):
         max_running=16,
     )
     trace = generate_trace(trace_cfg)
-    alt = simulate("alternating", trace, sched_cfg, CAPACITY_PAGES)
-    mix = simulate("mixed_chunked", trace, sched_cfg, CAPACITY_PAGES)
+    alt = sim("alternating", trace, sched_cfg)
+    mix = sim("mixed_chunked", trace, sched_cfg)
     return dict(
         workload=dict(
             seed=trace_cfg["seed"],
@@ -624,17 +102,6 @@ def run(quick=False):
             ttft_p95_ratio=mix["ttft_p95_ms"] / alt["ttft_p95_ms"],
         ),
     )
-
-
-def normalize(v):
-    """Match util::json's number rendering: integral floats print as ints."""
-    if isinstance(v, dict):
-        return {k: normalize(x) for k, x in v.items()}
-    if isinstance(v, list):
-        return [normalize(x) for x in v]
-    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
-        return int(v)
-    return v
 
 
 if __name__ == "__main__":

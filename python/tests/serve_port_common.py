@@ -1,0 +1,998 @@
+"""Shared core of the serve-bench Python ports (mirrors rust/src/simulate/).
+
+The container this repo grows in has no Rust toolchain, so the committed
+BENCH_*.json baselines are generated from exact Python ports of the serve
+benches. This module is the single copy of everything those ports share —
+util::rng, workload::tracegen, the calibrated H20 cost model
+(perfmodel::{kernel,e2e} + cluster::collective), the continuous-batching
+scheduler (coordinator::scheduler, both policies), the routing policies
+(coordinator::router), util::stats percentile, and the **virtual-time
+simulation harness** itself (rust/src/simulate/harness.rs) in both timing
+modes:
+
+* ``lockstep``  — every rank takes one scheduler action per round off the
+  pre-round state; the round costs the slowest rank's step (serve_cluster),
+* ``event``     — every rank owns its clock and advances by its own step
+  costs; the global clock follows the earliest candidate event: a busy
+  rank's local time, the next arrival, or an in-flight transfer's
+  ready-time (serve_mixed with one rank, serve_disagg, serve_straggler).
+
+Per-rank **speed factors** scale every action cost a rank executes (the
+straggler scenario's 1.5x-slow rank); the lock-step core cannot express
+them, which is why the straggler arm exists only as an event scenario.
+
+The per-scenario ports (serve_{mixed,cluster,disagg,straggler}_port.py) are
+thin wrappers: a trace config + a scenario config + exact report-field
+selection. ci/port_drift.py --selftest perturbs THIS module (via the
+SNAPMLA_PORT_PERTURB env var scaling the launch overhead) and requires
+every baseline regeneration to fail — a wrapper that silently forked off
+this core would keep reproducing its baseline and flunk the selftest.
+"""
+
+import math
+import os
+
+MASK = (1 << 64) - 1
+
+
+class Rng:
+    """xoshiro256** seeded via SplitMix64 (util::rng)."""
+
+    def __init__(self, seed):
+        x = (seed + 0x9E3779B97F4A7C15) & MASK
+
+        def nxt():
+            nonlocal x
+            x = (x + 0x9E3779B97F4A7C15) & MASK
+            z = x
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            return (z ^ (z >> 31)) & MASK
+
+        # Rust fills s[0..4] via four successive SplitMix64 draws
+        self.s = [nxt(), nxt(), nxt(), nxt()]
+
+    def next_u64(self):
+        def rotl(v, k):
+            return ((v << k) | (v >> (64 - k))) & MASK
+
+        s = self.s
+        r = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return r
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def range_usize(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+    def bool(self, p):
+        return self.f64() < p
+
+    def exponential(self, mean):
+        u = max(self.f64(), 1e-12)
+        return -mean * math.log(u)
+
+
+# --- workload::tracegen -------------------------------------------------------
+
+def generate_trace(cfg):
+    """Mirrors workload::tracegen::TraceGen::generate. Mixture draws happen
+    only when the mixture is on, so long_frac == 0 / shared_prefix_frac == 0
+    reproduce the legacy streams draw-for-draw."""
+    rng = Rng(cfg["seed"])
+    t = 0.0
+    reqs = []
+    for i in range(cfg["num_requests"]):
+        if cfg["mean_interarrival_s"] > 0.0:
+            t += rng.exponential(cfg["mean_interarrival_s"])
+        long_prompt = cfg.get("long_frac", 0.0) > 0.0 and rng.bool(cfg["long_frac"])
+        shared = (
+            cfg.get("shared_prefix_frac", 0.0) > 0.0
+            and rng.bool(cfg["shared_prefix_frac"])
+        )
+        group = rng.below(cfg["shared_prefix_groups"]) if shared else None
+        if long_prompt:
+            base = rng.range_usize(cfg["long_prompt_min"], cfg["long_prompt_max"] + 1)
+        else:
+            base = rng.range_usize(cfg["prompt_min"], cfg["prompt_max"] + 1)
+        prefix = cfg["shared_prefix_tokens"] if shared else 0
+        out = rng.range_usize(cfg["out_min"], cfg["out_max"] + 1)
+        reqs.append(
+            dict(
+                id=i,
+                arrival_s=t,
+                prompt=prefix + base,
+                out=out,
+                long=long_prompt,
+                group=group,
+                prefix_tokens=prefix,
+            )
+        )
+    return reqs
+
+
+# --- perfmodel (calibrated H20 analytical model) ------------------------------
+
+GPU = dict(
+    bf16_tflops=148.0,
+    fp8_tflops=296.0,
+    hbm_bw=4.0e12,
+    hbm_bytes=141.0e9,
+    nvlink_bw=450.0e9,
+    launch_s=4.0e-6,
+    peak_util=0.88,
+)
+MODEL = dict(
+    n_layers=61,
+    heads=128,
+    d_c=512,
+    d_r=64,
+    total_params=671e9,
+    active_params=37e9,
+)
+
+# port-drift selftest hook: scaling the launch overhead shifts every step
+# cost, so every BENCH_*.json regeneration must drift when this is set —
+# proving each scenario wrapper actually routes through this shared core
+if os.environ.get("SNAPMLA_PORT_PERTURB"):
+    GPU["launch_s"] *= 1.5
+
+COLLECTIVE_LATENCY_S = 5.0e-6
+AFFINITY_IMBALANCE_WINDOW = 4
+
+# kvcache::transfer::KvWireBlock bytes per token (all layers)
+WIRE_FP8_PER_TOKEN = (MODEL["d_c"] + 2 * MODEL["d_r"] + 4) * MODEL["n_layers"]
+WIRE_BF16_PER_TOKEN = 2 * (MODEL["d_c"] + MODEL["d_r"]) * MODEL["n_layers"]
+
+
+def snapmla_effective_peak_tflops():
+    return GPU["bf16_tflops"] * 17.0 / 9.0
+
+
+def kernel_time_s(batch, heads, t_q, seq, d_c, d_r):
+    """perfmodel::kernel::kernel_time_s for SnapMlaFp8."""
+    rows = batch * heads * t_q
+    n = float(seq)
+    qk = rows * n * (d_c + d_r) * 2.0
+    pv = rows * n * d_c * 2.0
+    flops = qk + pv
+    per_token = d_c + 2 * d_r + 4
+    kv = batch * seq * float(per_token)
+    qo = batch * heads * t_q * (2 * d_c + d_r) * 4.0
+    nbytes = kv + qo
+    peak = snapmla_effective_peak_tflops()
+    m = float(heads * t_q)
+    row_tile = min(max(m / 64.0, 1.0 / 64.0), 1.0)
+    ramp = n / (n + 400.0)
+    eff = GPU["peak_util"] * row_tile * ramp
+    compute = flops / (peak * 1e12 * eff)
+    memory = nbytes / GPU["hbm_bw"]
+    return max(compute, memory) + GPU["launch_s"]
+
+
+def expert_stream_read(units):
+    return min(MODEL["active_params"] * units ** 0.35, MODEL["total_params"])
+
+
+def allreduce_time_s(link_bw, latency_s, nbytes, ranks):
+    if ranks <= 1:
+        return 0.0
+    n = float(ranks)
+    return 2.0 * (n - 1.0) / n * nbytes / link_bw + latency_s
+
+
+def hidden_bytes_per_token():
+    return MODEL["d_c"] * MODEL["heads"] // 64 * 2.0
+
+
+def tp_comm_s(cfg, units):
+    if cfg["tp"] <= 1:
+        return 0.0
+    return (
+        allreduce_time_s(
+            GPU["nvlink_bw"], COLLECTIVE_LATENCY_S, hidden_bytes_per_token() * units, cfg["tp"]
+        )
+        * MODEL["n_layers"]
+    )
+
+
+def decode_step_s(cfg, batch, context):
+    if batch == 0:
+        return math.inf
+    gpus = cfg["dp"] * cfg["tp"]
+    attn = (
+        kernel_time_s(batch, MODEL["heads"] // cfg["tp"], 1, context, MODEL["d_c"], MODEL["d_r"])
+        * MODEL["n_layers"]
+    )
+    weights = expert_stream_read(float(batch)) / gpus / GPU["hbm_bw"]
+    gemm_flops = 2.0 * MODEL["active_params"] * batch / gpus
+    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
+    launches = 2.0 * MODEL["n_layers"] * GPU["launch_s"]
+    return attn + max(weights, gemm) + tp_comm_s(cfg, float(batch)) + launches
+
+
+# Prefill attention runs the NON-absorbed MLA form (decode-only absorption:
+# d_c=512 per head is flop-prohibitive for multi-token queries), with naive
+# head dims qk=192 (v=128 + rope=64), v=128.
+PREFILL_V_HEAD = 128
+PREFILL_ROPE_HEAD = 64
+
+
+def prefill_attn_s(cfg, t_q, ctx):
+    return (
+        kernel_time_s(
+            1, MODEL["heads"] // cfg["tp"], t_q, max(ctx, 1), PREFILL_V_HEAD, PREFILL_ROPE_HEAD
+        )
+        * MODEL["n_layers"]
+    )
+
+
+def prefill_step_s(cfg, tokens):
+    if tokens == 0:
+        return 0.0
+    gpus = cfg["dp"] * cfg["tp"]
+    t = float(tokens)
+    weights = expert_stream_read(t) / gpus / GPU["hbm_bw"]
+    gemm_flops = 2.0 * MODEL["active_params"] * t / gpus
+    gemm = gemm_flops / (GPU["fp8_tflops"] * 1e12 * GPU["peak_util"])
+    attn = prefill_attn_s(cfg, tokens, max(tokens // 2, 1))
+    launches = 3.0 * MODEL["n_layers"] * GPU["launch_s"]
+    return max(weights, gemm) + attn + tp_comm_s(cfg, t) + launches
+
+
+def mixed_step_s(cfg, decode_batch, context, chunk_tokens, chunk_context):
+    if chunk_tokens == 0:
+        return decode_step_s(cfg, decode_batch, context)
+    gpus = cfg["dp"] * cfg["tp"]
+    c = float(chunk_tokens)
+    eff = GPU["fp8_tflops"] * 1e12 * GPU["peak_util"]
+    gemm_c = 2.0 * MODEL["active_params"] * c / gpus / eff
+    attn_c = prefill_attn_s(cfg, chunk_tokens, max(chunk_context, chunk_tokens))
+    chunk_compute = gemm_c + attn_c
+    if decode_batch == 0:
+        weights = expert_stream_read(c) / gpus / GPU["hbm_bw"]
+        return (
+            max(weights, chunk_compute)
+            + tp_comm_s(cfg, c)
+            + 2.0 * MODEL["n_layers"] * GPU["launch_s"]
+        )
+    base = decode_step_s(cfg, decode_batch, context)
+    weights_mem = expert_stream_read(float(decode_batch)) / gpus / GPU["hbm_bw"]
+    gemm_d = 2.0 * MODEL["active_params"] * decode_batch / gpus / eff
+    hidden = max(weights_mem - gemm_d, 0.0)
+    return base + max(chunk_compute - hidden, 0.0) + tp_comm_s(cfg, c) + GPU["launch_s"]
+
+
+def spill_s(tokens):
+    return WIRE_FP8_PER_TOKEN * tokens / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
+
+
+def handoff_s(tokens):
+    """perfmodel::e2e::handoff_s — the FP8 wire block over the link."""
+    return WIRE_FP8_PER_TOKEN * tokens / GPU["nvlink_bw"] + COLLECTIVE_LATENCY_S
+
+
+# --- coordinator::scheduler ---------------------------------------------------
+
+def pages_for(tokens, page):
+    return -(-tokens // page)
+
+
+def decide_alternating(cfg, waiting, running, free_pages):
+    # waiting: (idx, tokens, spilled); running: (idx, context, pending)
+    growth = sum(
+        1
+        for r in running[: cfg["max_decode_batch"]]
+        if r[1] < cfg["max_context"] and r[1] % cfg["page"] == 0
+    )
+    if waiting and waiting[0][2]:
+        w = waiting[0]
+        if (
+            len(running) < cfg["max_decode_batch"]
+            and pages_for(w[1] + 1, cfg["page"]) <= max(free_pages - growth, 0)
+        ):
+            return ("resume", w[0])
+    head_parked = bool(waiting) and waiting[0][2]
+    if not head_parked and waiting and len(running) < cfg["max_decode_batch"]:
+        admitted, pages_needed = [], 0
+        slots = cfg["max_decode_batch"] - len(running)
+        for w in waiting[: min(cfg["max_prefill_batch"], slots)]:
+            if w[2] or w[1] > cfg["max_prefill_tokens"]:
+                break
+            need = pages_for(w[1] + 1, cfg["page"])
+            if pages_needed + need > free_pages:
+                break
+            pages_needed += need
+            admitted.append(w[0])
+        if admitted:
+            return ("prefill", admitted)
+    if running:
+        if growth > free_pages:
+            return ("preempt", running[-1][0])
+        batch = [
+            r[0] for r in running[: cfg["max_decode_batch"]] if r[1] < cfg["max_context"]
+        ]
+        if batch:
+            return ("decode", batch)
+    return ("idle",)
+
+
+def decide_mixed(cfg, waiting, running, free_pages):
+    head_parked = bool(waiting) and waiting[0][2]
+
+    # reserve one step-item slot for chunk progress whenever prefill work
+    # exists, so a full decode batch cannot starve an in-flight prompt
+    prefill_pending = any(r[2] > 0 for r in running) or (
+        bool(waiting) and not waiting[0][2]
+    )
+    decode_cap = min(
+        cfg["max_decode_batch"],
+        cfg["max_step_items"] - 1 if prefill_pending else cfg["max_step_items"],
+    )
+    decodable = [r for r in running if r[2] == 0 and r[1] < cfg["max_context"]]
+    decodable = decodable[:decode_cap]
+    decode_idxs = [r[0] for r in decodable]
+    growth = sum(1 for r in decodable if r[1] % cfg["page"] == 0)
+    # a resume may only use pages beyond the decode set's growth, or a
+    # boundary-parked decode batch ping-pongs preempt/resume forever
+    if waiting and waiting[0][2]:
+        w = waiting[0]
+        if (
+            len(running) < cfg["max_running"]
+            and pages_for(w[1] + 1, cfg["page"]) <= max(free_pages - growth, 0)
+        ):
+            return ("resume", w[0])
+    if growth > free_pages:
+        return ("preempt", running[-1][0])
+    page_budget = free_pages - growth
+
+    # hybrid fallback: with nothing decoding and no chunked prefill in
+    # flight, dribbling 64-token chunks wastes one weight pass per step —
+    # admit monolithically through the prefill bucket instead. Disabled on
+    # disaggregated prefill ranks: there is never a decode batch to ride,
+    # and only chunked admission adopts published prompt prefixes, so
+    # prefill ranks run big-chunk admission instead.
+    if (
+        not decode_idxs
+        and not any(r[2] > 0 for r in running)
+        and not head_parked
+        and not cfg.get("disagg_prefill", False)
+        and waiting
+        and len(running) < cfg["max_running"]
+    ):
+        admitted, pages_needed = [], 0
+        slots = cfg["max_running"] - len(running)
+        for w in waiting[: min(cfg["max_prefill_batch"], slots)]:
+            if w[2] or w[1] > cfg["max_prefill_tokens"]:
+                break
+            need = pages_for(w[1] + 1, cfg["page"])
+            if pages_needed + need > free_pages:
+                break
+            pages_needed += need
+            admitted.append(w[0])
+        if admitted:
+            return ("prefill", admitted)
+
+    item_slots = cfg["max_step_items"] - len(decode_idxs)
+    admit_slots = max(cfg["max_running"] - len(running), 0)
+    cands = []
+    for r in running:
+        if r[2] > 0:
+            if item_slots == 0 or len(cands) >= cfg["max_prefill_batch"]:
+                break
+            cands.append((False, r[0], r[1], r[2]))
+            item_slots -= 1
+    reserved = sum(
+        pages_for(r[1] + r[2] + 1, cfg["page"]) - pages_for(r[1], cfg["page"])
+        for r in running
+        if r[2] > 0
+    )
+    if not head_parked:
+        for w in waiting:
+            if w[2] or item_slots == 0 or admit_slots == 0:
+                break
+            # at most max_prefill_batch prompts mid-flight at once: idle
+            # half-prefilled prompts would hold running slots + page
+            # reservations while starved of chunk budget
+            if len(cands) >= cfg["max_prefill_batch"]:
+                break
+            if w[1] + 1 > cfg["max_context"]:
+                break
+            need = pages_for(w[1] + 1, cfg["page"])
+            if reserved + need > max(free_pages - growth, 0):
+                break
+            reserved += need
+            cands.append((True, w[0], 0, w[1]))
+            item_slots -= 1
+            admit_slots -= 1
+
+    # shortest-remaining-prefill-first within the admitted set (admission
+    # itself stays FCFS): short prompts finish in one chunk and refill the
+    # decode pool immediately, while long prompts drain on the leftover
+    # budget every step
+    cands.sort(key=lambda c: c[3])
+    token_budget = cfg["prefill_chunk_tokens"]
+    chunks = []
+    for k, (fw, idx, cached, pending) in enumerate(cands):
+        # every remaining candidate is guaranteed one token while the budget
+        # lasts, so the admitted set stays a full FCFS prefix of the queue
+        rest = len(cands) - k - 1
+        take = min(cfg["chunk_per_seq"], pending, max(token_budget - rest, 1), token_budget)
+        held_capacity = pages_for(cached, cfg["page"]) * cfg["page"]
+        absorbable = max(held_capacity + page_budget * cfg["page"] - cached, 0)
+        take = min(take, absorbable)
+        if take == 0 and not fw:
+            continue
+        # a from_waiting candidate ALWAYS emits its chunk (even 0 tokens):
+        # the server pops exactly the emitted admissions
+        need = pages_for(cached + take, cfg["page"]) - pages_for(cached, cfg["page"])
+        page_budget -= need
+        token_budget -= take
+        chunks.append((fw, idx, take))
+
+    if not chunks and not decode_idxs:
+        return ("idle",)
+    return ("mixed", chunks, decode_idxs)
+
+
+def decide_prefill_rank(cfg, wview, rview, free):
+    """Scheduler::decide with cfg.disagg_prefill: a completed prefill hands
+    off before anything else; otherwise the mixed policy runs (with the
+    monolithic fallback disabled — chunked admission adopts prefixes)."""
+    for (i, _ctx, pending) in rview:
+        if pending == 0:
+            return ("handoff", i)
+    return decide_mixed(cfg, wview, rview, free)
+
+
+# --- coordinator::router policies ---------------------------------------------
+
+def pick_rank(loads):
+    """Capacity-aware shortest queue (router::pick_rank)."""
+    feasible = [(i, l) for i, l in enumerate(loads) if l["free"] >= l["needed"]]
+    if feasible:
+        return min(feasible, key=lambda il: (il[1]["tokens"], il[0]))[0]
+    return min(enumerate(loads), key=lambda il: (il[1]["tokens"], il[0]))[0]
+
+
+def pick_rank_affinity(loads, page):
+    """Prefix-affinity routing (router::pick_rank_affinity)."""
+
+    def eff_needed(l):
+        return max(l["needed"] - l["hit"] // page, 0)
+
+    feasible = [
+        (i, l) for i, l in enumerate(loads) if l["free"] + l["evictable"] >= eff_needed(l)
+    ]
+    if not feasible:
+        # all ranks saturated: prefer the most spill-capable rank (largest
+        # reclaimable headroom), then the shortest queue
+        return min(
+            enumerate(loads),
+            key=lambda il: (-(il[1]["free"] + il[1]["evictable"]), il[1]["tokens"], il[0]),
+        )[0]
+    min_tokens = min(l["tokens"] for _, l in feasible)
+    hits = [
+        (i, l)
+        for i, l in feasible
+        if l["hit"] > 0 and l["tokens"] <= min_tokens + AFFINITY_IMBALANCE_WINDOW * l["hit"]
+    ]
+    if hits:
+        return min(hits, key=lambda il: (-il[1]["hit"], il[1]["tokens"], il[0]))[0]
+    return min(feasible, key=lambda il: (il[1]["tokens"], il[0]))[0]
+
+
+def pick_handoff_rank(loads):
+    """router::pick_handoff_rank: decode-rank placement for a migrant."""
+    feasible = [
+        (i, l) for i, l in enumerate(loads) if l["free"] + l["evictable"] >= l["needed"]
+    ]
+    if not feasible:
+        return None
+    return min(feasible, key=lambda il: (-il[1]["hit"], il[1]["tokens"], il[0]))[0]
+
+
+# --- util::stats --------------------------------------------------------------
+
+def percentile(xs, p):
+    """Linear-interpolated percentile (util::stats::Stats::percentile)."""
+    xs = sorted(xs)
+    rank = (p / 100.0) * (len(xs) - 1)
+    lo, hi = int(math.floor(rank)), int(math.ceil(rank))
+    if lo == hi:
+        return xs[lo]
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def normalize(v):
+    """Match util::json's number rendering: integral floats print as ints."""
+    if isinstance(v, dict):
+        return {k: normalize(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [normalize(x) for x in v]
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return int(v)
+    return v
+
+
+# --- the virtual-time simulation harness (rust/src/simulate/harness.rs) -------
+
+def simulate(trace, scen):
+    """Run one scenario over a trace; returns the full recorder dict (each
+    wrapper selects exactly the fields its committed baseline carries).
+
+    scen keys:
+      ranks            number of ranks
+      prefill_ranks    dedicated prefill ranks (0 = colocated lifecycle)
+      routing          "single" | "shortest_queue" | "prefix_affinity" | "disagg"
+      timing           "lockstep" | "event"
+      policy           "mixed_chunked" (default) | "alternating"
+      sched_cfg        scheduler config (decode/colocated ranks)
+      prefill_sched_cfg  scheduler config for prefill ranks (disagg)
+      capacity_pages   KV pages per rank
+      model_cfg        dict(dp, tp) for the analytical cost model
+      speeds           per-rank cost multipliers (event mode; default 1.0)
+    """
+    n = scen["ranks"]
+    prefill_ranks = scen.get("prefill_ranks", 0)
+    routing = scen["routing"]
+    timing = scen["timing"]
+    policy = scen.get("policy", "mixed_chunked")
+    sched_cfg = scen["sched_cfg"]
+    prefill_sched_cfg = scen.get("prefill_sched_cfg")
+    capacity_pages = scen["capacity_pages"]
+    mcfg = scen["model_cfg"]
+    speeds = scen.get("speeds") or [1.0] * n
+    page = sched_cfg["page"]
+
+    seqs = {
+        r["id"]: dict(
+            prompt=r["prompt"], out=r["out"], arrival=r["arrival_s"], long=r["long"],
+            group=r["group"], prefix_tokens=r["prefix_tokens"], cached=0, prefilled=0,
+            generated=0, spilled=False, adopted=0, transferred=0, first_token=None,
+            last_token=None,
+        )
+        for r in trace
+    }
+    ranks = [
+        dict(waiting=[], running=[], free=capacity_pages, shared={}, t=0.0)
+        for _ in range(n)
+    ]
+    in_flight = []  # (sid, ready_at) FIFO of serialized sequences in transit
+    clock = 0.0
+    next_arrival = 0
+    stats = dict(
+        gen_tokens=0, prefill_tokens=0, chunk_tokens=0, prefix_hit_tokens=0,
+        decode_steps=0, decode_batch_sum=0, rounds=0, steps=0, peak_pages=0,
+        spills=0, restores=0, handoffs=0, wire_fp8_bytes=0, wire_bf16_bytes=0,
+        routed=[0] * n,
+    )
+    itl = []  # inter-token latencies (every gap after a sequence's first token)
+    pending_emits = []  # lockstep: tokens produced this round, stamped at the barrier
+
+    def emit(sid, t):
+        # one generated token for `sid`; in lockstep mode t is None and the
+        # stamp is deferred to the round barrier (every rank ends together)
+        stats["gen_tokens"] += 1
+        if t is None:
+            pending_emits.append(sid)
+            return
+        s = seqs[sid]
+        if s["last_token"] is not None:
+            itl.append(t - s["last_token"])
+        s["last_token"] = t
+
+    def private_pages(sid):
+        s = seqs[sid]
+        return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
+
+    def hit_pages(rank, sid):
+        s = seqs[sid]
+        if s["group"] is not None and ranks[rank]["shared"].get(s["group"], 0) > 0:
+            return min(ranks[rank]["shared"][s["group"]], (s["prompt"] - 1) // page)
+        return 0
+
+    def colocated_loads(sid):
+        s = seqs[sid]
+        needed = pages_for(s["prompt"] + s["out"], page)
+        loads = []
+        for ri, r in enumerate(ranks):
+            tokens = sum(
+                seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
+            ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+            loads.append(
+                dict(tokens=tokens, free=r["free"], needed=needed,
+                     hit=hit_pages(ri, sid) * page, evictable=0)
+            )
+        return loads
+
+    def route(sid):
+        s = seqs[sid]
+        if routing == "single":
+            rank = 0
+        elif routing == "disagg":
+            # disagg: least-loaded prefill rank; a prefill rank holds just
+            # the prompt's pages (the KV migrates at handoff)
+            needed = pages_for(s["prompt"], page)
+            loads = []
+            for r in ranks[:prefill_ranks]:
+                tokens = sum(
+                    seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
+                ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+                loads.append(dict(tokens=tokens, free=r["free"], needed=needed))
+            rank = pick_rank(loads)
+        elif routing == "prefix_affinity":
+            rank = pick_rank_affinity(colocated_loads(sid), page)
+        else:
+            rank = pick_rank(colocated_loads(sid))
+        stats["routed"][rank] += 1
+        ranks[rank]["waiting"].append(sid)
+
+    def deliver():
+        # every ready transfer lands on the decode rank with headroom;
+        # slot-saturated ranks are marked infeasible by inflating their need
+        delivered = False
+        keep = []
+        for (sid, ready) in in_flight:
+            if ready > clock:
+                keep.append((sid, ready))
+                continue
+            s = seqs[sid]
+            remaining = s["out"] - s["generated"]
+            needed = pages_for(s["cached"] + remaining, page)
+            loads = []
+            for r in ranks[prefill_ranks:]:
+                tokens = sum(
+                    seqs[x]["out"] - seqs[x]["generated"] for x in r["running"]
+                ) + sum(seqs[w]["out"] - seqs[w]["generated"] for w in r["waiting"])
+                open_slot = len(r["running"]) < sched_cfg["max_running"]
+                loads.append(
+                    dict(tokens=tokens, free=r["free"], evictable=0, hit=0,
+                         needed=needed if open_slot else capacity_pages + 1)
+                )
+            j = pick_handoff_rank(loads)
+            if j is None:
+                keep.append((sid, ready))
+                continue
+            r = ranks[prefill_ranks + j]
+            r["free"] -= pages_for(s["cached"], page)
+            r["running"].append(sid)
+            stats["handoffs"] += 1
+            delivered = True
+        in_flight[:] = keep
+        return delivered
+
+    def publish(r, sid):
+        s = seqs[sid]
+        if s["group"] is None:
+            return
+        done = min(s["prefilled"], s["prefix_tokens"]) // page
+        have = r["shared"].get(s["group"], 0)
+        if done > have:
+            s["transferred"] += done - have
+            r["shared"][s["group"]] = done
+
+    def decide(ri):
+        r = ranks[ri]
+        wview = [
+            (i, seqs[sid]["cached"] if seqs[sid]["spilled"] else seqs[sid]["prompt"],
+             seqs[sid]["spilled"])
+            for i, sid in enumerate(r["waiting"])
+        ]
+        rview = [
+            (i, seqs[sid]["cached"], seqs[sid]["prompt"] - seqs[sid]["prefilled"])
+            for i, sid in enumerate(r["running"])
+        ]
+        if ri < prefill_ranks:
+            return decide_prefill_rank(prefill_sched_cfg, wview, rview, r["free"])
+        if policy == "alternating":
+            return decide_alternating(sched_cfg, wview, rview, r["free"])
+        return decide_mixed(sched_cfg, wview, rview, r["free"])
+
+    def apply(ri, action, t_start):
+        """Apply one scheduler action; returns its (speed-scaled) cost.
+        Event mode stamps tokens at the rank-local completion time
+        t_start + cost; lockstep passes t_start=None and the harness stamps
+        at the round barrier."""
+        r = ranks[ri]
+        cost = 0.0
+        kind = action[0]
+        if kind == "prefill":
+            ids = [r["waiting"][i] for i in action[1]]
+            r["waiting"] = r["waiting"][len(ids):]
+            total = sum(seqs[sid]["prompt"] for sid in ids)
+            cost = prefill_step_s(mcfg, total) * speeds[ri]
+            stats["prefill_tokens"] += total
+            t_emit = None if t_start is None else t_start + cost
+            for sid in ids:
+                s = seqs[sid]
+                r["free"] -= pages_for(s["prompt"], page)
+                s["cached"] = s["prompt"]
+                s["prefilled"] = s["prompt"]
+                publish(r, sid)
+                s["generated"] = 1
+                if t_emit is not None:
+                    s["first_token"] = t_emit
+                emit(sid, t_emit)
+                if s["generated"] >= s["out"]:
+                    r["free"] += private_pages(sid)
+                else:
+                    r["running"].append(sid)
+        elif kind == "handoff":
+            # serialize + free this rank's pages; the wire block rides the
+            # link (unscaled: it is the link's time, not the rank's)
+            # overlapped with the rank's next step
+            sid = r["running"].pop(action[1])
+            s = seqs[sid]
+            r["free"] += private_pages(sid)
+            s["adopted"] = 0
+            s["transferred"] = 0
+            stats["wire_fp8_bytes"] += WIRE_FP8_PER_TOKEN * s["cached"]
+            stats["wire_bf16_bytes"] += WIRE_BF16_PER_TOKEN * s["cached"]
+            in_flight.append((sid, t_start + handoff_s(s["cached"])))
+        elif kind == "decode":
+            ids = [r["running"][i] for i in action[1]]
+            ctx = max(seqs[sid]["cached"] for sid in ids) + 1
+            cost = decode_step_s(mcfg, len(ids), ctx) * speeds[ri]
+            stats["decode_steps"] += 1
+            stats["decode_batch_sum"] += len(ids)
+            t_emit = None if t_start is None else t_start + cost
+            done = []
+            for sid in ids:
+                s = seqs[sid]
+                if s["cached"] % page == 0:
+                    r["free"] -= 1
+                s["cached"] += 1
+                s["generated"] += 1
+                emit(sid, t_emit)
+                if s["generated"] >= s["out"]:
+                    done.append(sid)
+            for sid in done:
+                r["free"] += private_pages(sid)
+                r["running"].remove(sid)
+        elif kind == "mixed":
+            chunks, decode_idxs = action[1], action[2]
+            # admissions are a FCFS prefix of `waiting`; chunk list order is
+            # service order (SRPT), idx is the waiting position
+            n_admit = sum(1 for c in chunks if c[0])
+            admitted = r["waiting"][:n_admit]
+            r["waiting"] = r["waiting"][n_admit:]
+            # admission adopts the rank's published prefix pages (shared,
+            # no allocation), exactly like PagedKvCache::adopt_prefix
+            for sid in admitted:
+                hit = hit_pages(ri, sid)
+                if hit > 0:
+                    s = seqs[sid]
+                    s["adopted"] = hit
+                    s["cached"] = hit * page
+                    s["prefilled"] = hit * page
+                    stats["prefix_hit_tokens"] += hit * page
+            chunk_plan = []
+            for (fw, idx, grant) in chunks:
+                sid = admitted[idx] if fw else r["running"][idx]
+                s = seqs[sid]
+                take = min(grant, s["prompt"] - s["prefilled"])
+                chunk_plan.append((sid, take))
+            r["running"].extend(admitted)
+            decode_ids = [r["running"][i] for i in decode_idxs]
+            total_chunk = sum(t for (_, t) in chunk_plan)
+            dctx = max((seqs[sid]["cached"] for sid in decode_ids), default=-1) + 1
+            cctx = max((seqs[sid]["cached"] + t for (sid, t) in chunk_plan), default=0)
+            cost = mixed_step_s(mcfg, len(decode_ids), dctx, total_chunk, cctx) * speeds[ri]
+            if decode_ids:
+                stats["decode_steps"] += 1
+                stats["decode_batch_sum"] += len(decode_ids)
+            t_emit = None if t_start is None else t_start + cost
+            done = []
+            for (sid, take) in chunk_plan:
+                s = seqs[sid]
+                r["free"] -= pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
+                s["cached"] += take
+                s["prefilled"] += take
+                stats["chunk_tokens"] += take
+                stats["prefill_tokens"] += take
+                publish(r, sid)
+                if s["prefilled"] == s["prompt"]:
+                    s["generated"] = 1
+                    if t_emit is not None:
+                        s["first_token"] = t_emit
+                    emit(sid, t_emit)
+                    if s["generated"] >= s["out"]:
+                        done.append(sid)
+            for sid in decode_ids:
+                s = seqs[sid]
+                if s["cached"] % page == 0:
+                    r["free"] -= 1
+                s["cached"] += 1
+                s["generated"] += 1
+                emit(sid, t_emit)
+                if s["generated"] >= s["out"]:
+                    done.append(sid)
+            for sid in done:
+                r["free"] += private_pages(sid)
+                r["running"].remove(sid)
+        elif kind == "resume":
+            sid = r["waiting"].pop(0)
+            s = seqs[sid]
+            cost = spill_s(s["cached"]) * speeds[ri]
+            r["free"] -= pages_for(s["cached"], page)
+            s["spilled"] = False
+            s["adopted"] = 0
+            s["transferred"] = 0
+            stats["restores"] += 1
+            r["running"].append(sid)
+        elif kind == "preempt":
+            sid = r["running"].pop(action[1])
+            s = seqs[sid]
+            cost = spill_s(s["cached"]) * speeds[ri]
+            r["free"] += private_pages(sid)
+            # the spill snapshot privatizes adopted pages (exactness over
+            # dedup): the restore reallocates every page
+            s["adopted"] = 0
+            s["transferred"] = 0
+            s["spilled"] = True
+            stats["spills"] += 1
+            r["waiting"].insert(0, sid)
+        return cost
+
+    def stuck_report():
+        worst = max(
+            (ri for ri, r in enumerate(ranks) if r["waiting"] or r["running"]),
+            key=lambda ri: len(ranks[ri]["waiting"]) + len(ranks[ri]["running"]),
+            default=0,
+        )
+        r = ranks[worst]
+        return (
+            f"rank {worst} stuck with {len(r['waiting'])} waiting + "
+            f"{len(r['running'])} running and {r['free']} free pages"
+        )
+
+    iters = 0
+    if timing == "lockstep":
+        while next_arrival < len(trace) or any(
+            r["waiting"] or r["running"] for r in ranks
+        ):
+            iters += 1
+            if iters > 500_000:
+                raise RuntimeError("sim runaway")
+            while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
+                route(trace[next_arrival]["id"])
+                next_arrival += 1
+
+            # one lock-step round: every rank takes one scheduler action off
+            # the pre-round state; the round costs the slowest rank's step
+            decisions = []
+            for ri, r in enumerate(ranks):
+                if not r["waiting"] and not r["running"]:
+                    continue
+                action = decide(ri)
+                if action[0] != "idle":
+                    decisions.append((ri, action))
+            if not decisions:
+                if next_arrival < len(trace):
+                    clock = max(clock, trace[next_arrival]["arrival_s"])
+                    continue
+                raise RuntimeError(f"lockstep deadlock: {stuck_report()}")
+            # costs depend only on each rank's own pre-apply state, so apply
+            # per rank, then charge the round's max cost (lock-step barrier)
+            round_cost = max(apply(ri, action, None) for (ri, action) in decisions)
+            clock += round_cost
+            # tokens produced this round are stamped at the round boundary
+            for sid in pending_emits:
+                s = seqs[sid]
+                if s["last_token"] is not None:
+                    itl.append(clock - s["last_token"])
+                s["last_token"] = clock
+            pending_emits.clear()
+            for s in seqs.values():
+                if s["first_token"] is None and s["generated"] > 0:
+                    s["first_token"] = clock
+            stats["rounds"] += 1
+            used = sum(capacity_pages - r["free"] for r in ranks)
+            stats["peak_pages"] = max(stats["peak_pages"], used)
+    else:
+        while (
+            next_arrival < len(trace)
+            or in_flight
+            or any(r["waiting"] or r["running"] for r in ranks)
+        ):
+            iters += 1
+            if iters > 2_000_000:
+                raise RuntimeError("sim runaway")
+            # the next instant anything can happen: a busy rank's local
+            # clock, the next arrival, or an in-flight transfer's ready-time
+            # (simulate::clock::EventLoop pops the same minimum in Rust)
+            cands = [r["t"] for r in ranks if r["waiting"] or r["running"]]
+            if next_arrival < len(trace):
+                cands.append(trace[next_arrival]["arrival_s"])
+            cands.extend(ready for (_, ready) in in_flight)
+            clock = max(clock, min(cands))
+
+            progressed = False
+            while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
+                route(trace[next_arrival]["id"])
+                next_arrival += 1
+                progressed = True
+            if prefill_ranks > 0 and deliver():
+                progressed = True
+
+            for ri, r in enumerate(ranks):
+                if r["t"] > clock:
+                    continue
+                # handoffs cost the rank nothing (serialize + async send): a
+                # prefill rank drains every completed prefill and still
+                # takes its real action at the same instant
+                while True:
+                    if not r["waiting"] and not r["running"]:
+                        action = ("idle",)
+                        break
+                    action = decide(ri)
+                    if action[0] != "handoff":
+                        break
+                    apply(ri, action, r["t"])
+                    progressed = True
+                if action[0] == "idle":
+                    continue
+                r["t"] += apply(ri, action, r["t"])
+                stats["steps"] += 1
+                progressed = True
+
+            if not progressed:
+                later = [c for c in cands if c > clock]
+                if not later:
+                    raise RuntimeError(f"event-loop deadlock: {stuck_report()}")
+                clock = min(later)
+                continue
+            used = sum(capacity_pages - r["free"] for r in ranks)
+            stats["peak_pages"] = max(stats["peak_pages"], used)
+
+    wall = clock
+    for r in ranks:
+        wall = max(wall, r["t"])
+    ttfts = [s["first_token"] - s["arrival"] for s in seqs.values()]
+    ttfts_short = [
+        s["first_token"] - s["arrival"] for s in seqs.values() if not s["long"]
+    ]
+    res = dict(
+        ranks=n,
+        prefill_ranks=prefill_ranks,
+        decode_ranks=n - prefill_ranks if prefill_ranks else n,
+        requests=len(seqs),
+        gen_tokens=stats["gen_tokens"],
+        wall_s=wall,
+        tok_per_s=stats["gen_tokens"] / wall,
+        ttft_p50_ms=percentile(ttfts, 50.0) * 1e3,
+        ttft_p95_ms=percentile(ttfts, 95.0) * 1e3,
+        peak_pages=stats["peak_pages"],
+        prefill_tokens=stats["prefill_tokens"],
+        chunk_tokens=stats["chunk_tokens"],
+        prefix_hit_tokens=stats["prefix_hit_tokens"],
+        mean_decode_batch=stats["decode_batch_sum"] / max(stats["decode_steps"], 1),
+        decode_steps=stats["decode_steps"],
+        rounds=stats["rounds"],
+        steps=stats["steps"],
+        spills=stats["spills"],
+        restores=stats["restores"],
+        handoffs=stats["handoffs"],
+        transferred_gb_fp8=stats["wire_fp8_bytes"] / 1e9,
+        transferred_gb_bf16=stats["wire_bf16_bytes"] / 1e9,
+        routed=stats["routed"],
+    )
+    if ttfts_short:
+        res["ttft_short_p95_ms"] = percentile(ttfts_short, 95.0) * 1e3
+    if itl:
+        res["itl_p50_ms"] = percentile(itl, 50.0) * 1e3
+        res["itl_p95_ms"] = percentile(itl, 95.0) * 1e3
+    return res

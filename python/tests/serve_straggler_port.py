@@ -1,0 +1,166 @@
+"""Exact Python port of benches/serve_straggler.rs — a thin scenario over
+the shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
+
+The straggler arm: a DP4 colocated cluster (TP=2) on the shared-prefix
+trace, with rank 0 running at a 1.5x per-step cost factor — the scenario
+the old lock-step core could not express (a lock-step round charges every
+rank the slowest rank's step, so a slow rank slows the whole cluster
+instead of falling behind). Event-driven per-rank clocks let the straggler
+fall behind for real; the A/B shows how prefix-affinity routing behaves
+when its prefix hits point at a rank that drains slower: the queue-depth
+signal (outstanding tokens) pushes load off the straggler in both policies,
+but affinity's imbalance window keeps feeding it group members up to
+4x the hit tokens.
+
+BENCH_straggler.json is generated from this port; `cargo bench --bench
+serve_straggler` regenerates the authoritative copy once cargo is
+available. Quick mode runs the identical configuration (the sim is
+deterministic and cheap), so quick ratios equal the baseline exactly.
+
+Run: python3 python/tests/serve_straggler_port.py [--quick]
+"""
+
+import json
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
+
+PAGE = 64
+NODE_GPUS = 8
+CAPACITY_PAGES = 768  # per rank
+DP = 4
+SLOW_FACTOR = 1.5  # rank 0's per-step cost multiplier in the straggler arm
+
+
+def sim(policy, speeds, trace, sched_cfg):
+    res = simulate(
+        trace,
+        dict(
+            ranks=DP,
+            routing=policy,
+            timing="event",
+            sched_cfg=sched_cfg,
+            capacity_pages=CAPACITY_PAGES,
+            model_cfg=dict(dp=DP, tp=NODE_GPUS // DP),
+            speeds=speeds,
+        ),
+    )
+    return dict(
+        policy=policy,
+        speeds=speeds,
+        requests=res["requests"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p50_ms=res["ttft_p50_ms"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        itl_p50_ms=res["itl_p50_ms"],
+        itl_p95_ms=res["itl_p95_ms"],
+        peak_pages=res["peak_pages"],
+        prefill_tokens=res["prefill_tokens"],
+        prefix_hit_tokens=res["prefix_hit_tokens"],
+        mean_decode_batch=res["mean_decode_batch"],
+        steps=res["steps"],
+        spills=res["spills"],
+        routed=res["routed"],
+    )
+
+
+def run(quick=False):
+    # quick mode is the full configuration: one cluster size, two policies,
+    # two speed profiles — deterministic and cheap, so the gate ratios are
+    # exact in both modes
+    del quick
+    trace_cfg = dict(
+        seed=2029,
+        num_requests=96,
+        mean_interarrival_s=0.008,
+        prompt_min=16,
+        prompt_max=96,
+        out_min=48,
+        out_max=128,
+        long_frac=0.0,
+        long_prompt_min=0,
+        long_prompt_max=0,
+        shared_prefix_frac=0.8,
+        shared_prefix_groups=6,
+        shared_prefix_tokens=512,
+    )
+    sched_cfg = dict(
+        max_decode_batch=12,
+        max_prefill_batch=4,
+        max_prefill_tokens=4096,
+        max_context=8192,
+        page=PAGE,
+        prefill_chunk_tokens=128,
+        chunk_per_seq=64,
+        max_step_items=16,
+        max_running=16,
+    )
+    uniform = [1.0] * DP
+    straggler = [SLOW_FACTOR] + [1.0] * (DP - 1)
+    trace = generate_trace(trace_cfg)
+    results = {}
+    for policy in ("shortest_queue", "prefix_affinity"):
+        uni = sim(policy, uniform, trace, sched_cfg)
+        strag = sim(policy, straggler, trace, sched_cfg)
+        results[policy] = dict(
+            uniform=uni,
+            straggler=strag,
+            straggler_vs_uniform=dict(
+                throughput_ratio=strag["tok_per_s"] / uni["tok_per_s"],
+                ttft_p95_ratio=strag["ttft_p95_ms"] / uni["ttft_p95_ms"],
+                itl_p95_ratio=strag["itl_p95_ms"] / uni["itl_p95_ms"],
+                slow_rank_share=strag["routed"][0] / sum(strag["routed"]),
+            ),
+        )
+    aff = results["prefix_affinity"]["straggler"]
+    sq = results["shortest_queue"]["straggler"]
+    return dict(
+        workload=dict(
+            seed=trace_cfg["seed"],
+            num_requests=trace_cfg["num_requests"],
+            mean_interarrival_s=trace_cfg["mean_interarrival_s"],
+            shared_prefix_frac=trace_cfg["shared_prefix_frac"],
+            shared_prefix_groups=trace_cfg["shared_prefix_groups"],
+            shared_prefix_tokens=trace_cfg["shared_prefix_tokens"],
+            tail_prompt="16..=96",
+            out_tokens="48..=128",
+            capacity_pages_per_rank=CAPACITY_PAGES,
+            node_gpus=NODE_GPUS,
+            dp=DP,
+            slow_rank=0,
+            slow_factor=SLOW_FACTOR,
+            model="DeepSeek-V3.1",
+            kernel="SnapMLA FP8",
+        ),
+        results=results,
+        affinity_vs_sq_straggler=dict(
+            throughput_ratio=aff["tok_per_s"] / sq["tok_per_s"],
+            ttft_p95_ratio=aff["ttft_p95_ms"] / sq["ttft_p95_ms"],
+            peak_pages_ratio=aff["peak_pages"] / sq["peak_pages"],
+        ),
+    )
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    report = normalize(run(quick))
+    print(json.dumps(report, indent=1, sort_keys=True))
+    for pk, r in sorted(report["results"].items()):
+        v = r["straggler_vs_uniform"]
+        print(
+            f"\n{pk}: straggler throughput ratio {v['throughput_ratio']:.3f}, "
+            f"TTFT p95 ratio {v['ttft_p95_ratio']:.3f}, "
+            f"slow-rank share {v['slow_rank_share']:.3f}",
+            file=sys.stderr,
+        )
+    a = report["affinity_vs_sq_straggler"]
+    print(
+        f"affinity vs shortest-queue under the straggler: throughput "
+        f"{a['throughput_ratio']:.3f}, TTFT p95 {a['ttft_p95_ratio']:.3f}, "
+        f"peak pages {a['peak_pages_ratio']:.3f}",
+        file=sys.stderr,
+    )

@@ -1,7 +1,7 @@
 //! Multi-rank serving: `ClusterServer` owns real `Server` replicas — each
 //! with its own `ModelEngine`, `PagedKvCache` and mixed chunked-prefill
-//! scheduler — and drives them lock-step (one scheduling step per rank per
-//! round) in one of two topologies:
+//! scheduler — and drives them on **per-rank virtual clocks** through the
+//! deterministic `simulate::clock::EventLoop`, in one of two topologies:
 //!
 //! * **Colocated** (classic DP): every rank serves the full request
 //!   lifecycle; requests enter through the `coordinator::Router` policy
@@ -14,6 +14,16 @@
 //!   `pick_handoff_rank` (headroom/affinity). The imported KV is bit-exact,
 //!   so a sequence prefilled on rank A and decoded on rank B emits the same
 //!   tokens as a colocated run.
+//!
+//! The drive ([`ClusterServer::run_until`]) pops `(time, rank, seq)`
+//! batches off the event loop: every rank whose clock reaches the batch
+//! time takes one scheduling step and re-arms at `time + step_costs[rank]`.
+//! **Lock-step is the degenerate uniform-cost mode**: with equal per-rank
+//! step costs every batch contains every busy rank in rank order — exactly
+//! one legacy [`ClusterServer::step_all`] round, pinned byte-for-byte by
+//! `rust/tests/integration_simulate.rs`. Heterogeneous costs let a slow
+//! rank genuinely fall behind (stragglers, prefill/decode asymmetry)
+//! instead of slowing every round.
 
 use crate::anyhow;
 use crate::coordinator::metrics::ClusterMetrics;
@@ -21,6 +31,7 @@ use crate::coordinator::router::{pick_handoff_rank, RankLoad, RoutePolicy, Route
 use crate::coordinator::{RequestOutcome, Sequence, ServeRequest, Server};
 use crate::kvcache::{CacheMode, KvWireBlock, PAGE_TOKENS};
 use crate::runtime::ModelEngine;
+use crate::simulate::EventLoop;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -41,6 +52,9 @@ pub struct ClusterServer {
     /// disaggregated mode: serialized sequences in transit between a
     /// prefill rank's outbox and a decode rank with room (FIFO)
     in_flight: VecDeque<(Sequence, KvWireBlock)>,
+    /// per-rank virtual clocks: when each rank is next ready to step
+    /// (advanced by `run_until`; `step_all` rounds do not touch them)
+    vclock: Vec<f64>,
 }
 
 impl ClusterServer {
@@ -52,6 +66,7 @@ impl ClusterServer {
             metrics,
             mode: ClusterMode::Colocated,
             in_flight: VecDeque::new(),
+            vclock: vec![0.0; dp],
         }
     }
 
@@ -70,6 +85,7 @@ impl ClusterServer {
             metrics,
             mode: ClusterMode::Disaggregated { prefill_ranks, decode_ranks: dp - prefill_ranks },
             in_flight: VecDeque::new(),
+            vclock: vec![0.0; dp],
         }
     }
 
@@ -121,6 +137,12 @@ impl ClusterServer {
         self.in_flight.len()
     }
 
+    /// The cluster's virtual time: the latest per-rank clock reached by
+    /// `run_until` (0 until the virtual drive has run).
+    pub fn virtual_time(&self) -> f64 {
+        self.vclock.iter().cloned().fold(0.0, f64::max)
+    }
+
     /// Route and enqueue one request; returns the chosen rank.
     pub fn submit(&mut self, req: ServeRequest) -> usize {
         let rank = self.router.submit(req);
@@ -133,9 +155,18 @@ impl ClusterServer {
     /// into the transfer queue and every transfer whose target decode rank
     /// has room is delivered (FIFO; an undeliverable transfer parks until a
     /// decode rank drains). Finally the cluster-wide page allocation is
-    /// sampled for the peak-pages metric.
+    /// sampled for the peak-pages metric. (The virtual drive `run_until`
+    /// reproduces this exactly under uniform step costs.)
     pub fn step_all(&mut self) -> anyhow::Result<bool> {
         let mut any = self.router.step_all()?;
+        any |= self.migrate_and_sample()?;
+        Ok(any)
+    }
+
+    /// Post-step bookkeeping shared by the lock-step and virtual drives:
+    /// drain prefill outboxes, deliver ready transfers, sample peak pages.
+    fn migrate_and_sample(&mut self) -> anyhow::Result<bool> {
+        let mut any = false;
         if let ClusterMode::Disaggregated { prefill_ranks, .. } = self.mode {
             for r in self.router.ranks.iter_mut().take(prefill_ranks) {
                 self.in_flight.extend(std::mem::take(&mut r.handoff_outbox));
@@ -181,22 +212,119 @@ impl ClusterServer {
         Ok(delivered_any)
     }
 
-    /// Drive every rank to completion; outcomes are merged and id-sorted.
-    /// Unlike `Router::run_to_completion`, every round goes through
-    /// `step_all` so the peak-pages metric keeps sampling.
-    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestOutcome>> {
-        let t0 = Instant::now();
+    /// Event-driven virtual drive: pop `(time, rank)` wake-ups off the
+    /// [`EventLoop`] and let every rank whose clock reached the batch time
+    /// take one scheduling step, re-arming it at `time + step_costs[rank]`.
+    /// A rank woken by a mid-run handoff delivery re-enters at the batch
+    /// time plus its own cost (it steps in the next batch, exactly where a
+    /// lock-step round would have picked it up). Stops once every rank's
+    /// clock would pass `until` (returns false) or the cluster drains
+    /// (returns true).
+    ///
+    /// With uniform `step_costs` this reproduces the legacy lock-step
+    /// `step_all` loop byte-for-byte — same per-request outputs, same
+    /// `ServerMetrics`/`ClusterMetrics` counters (pinned by
+    /// `integration_simulate`). Heterogeneous costs model stragglers and
+    /// prefill/decode asymmetry: a slow rank falls behind instead of
+    /// stretching every round.
+    ///
+    /// When no rank can make progress while requests are still pending,
+    /// returns a hard error naming the stuck rank and its queue depth
+    /// instead of looping or relying on the caller to notice.
+    pub fn run_until(&mut self, step_costs: &[f64], until: f64) -> anyhow::Result<bool> {
+        let dp = self.dp();
+        assert_eq!(step_costs.len(), dp, "one virtual step cost per rank");
+        assert!(
+            step_costs.iter().all(|c| c.is_finite() && *c > 0.0),
+            "step costs must be positive and finite: {step_costs:?}"
+        );
+        // ranks polled without progress since the cluster last progressed
+        let mut stalled = vec![false; dp];
         while self.pending() > 0 {
-            if !self.step_all()? && self.pending() > 0 {
+            let mut ev: EventLoop<()> = EventLoop::new();
+            for i in 0..dp {
+                if self.router.ranks[i].pending() > 0 {
+                    ev.push(self.vclock[i], i, ());
+                }
+            }
+            if ev.is_empty() {
+                // work exists only as in-flight transfers; deliver or stop
+                if self.migrate_and_sample()? {
+                    continue;
+                }
                 anyhow::bail!(
-                    "cluster deadlock: {} requests pending ({} in flight) over {} ranks",
+                    "cluster stuck: {} transfers in flight and no decode rank can accept \
+                     them (no rank holds queued work)",
+                    self.in_flight.len()
+                );
+            }
+            let batch = ev.pop_batch();
+            let t = batch[0].time;
+            if t > until {
+                return Ok(false);
+            }
+            let was_idle: Vec<bool> =
+                (0..dp).map(|i| self.router.ranks[i].pending() == 0).collect();
+            let mut progressed = false;
+            for e in &batch {
+                let i = e.rank;
+                if self.router.ranks[i].step()? {
+                    progressed = true;
+                } else {
+                    stalled[i] = true;
+                }
+                self.vclock[i] = t + step_costs[i];
+            }
+            progressed |= self.migrate_and_sample()?;
+            // a rank woken by this batch's deliveries steps NEXT batch —
+            // its stale clock must not let it run ahead of the batch time
+            for i in 0..dp {
+                if was_idle[i] && self.router.ranks[i].pending() > 0 {
+                    self.vclock[i] = self.vclock[i].max(t + step_costs[i]);
+                }
+            }
+            if progressed {
+                stalled.iter_mut().for_each(|s| *s = false);
+            } else if (0..dp).all(|i| self.router.ranks[i].pending() == 0 || stalled[i]) {
+                // every rank holding work has been polled since the last
+                // progress and none moved: name the stuck rank + queues
+                let (worst, waiting, running) = (0..dp)
+                    .filter(|&i| self.router.ranks[i].pending() > 0)
+                    .map(|i| {
+                        let (w, r) = self.router.ranks[i].queue_depths();
+                        (i, w, r)
+                    })
+                    .max_by_key(|&(_, w, r)| w + r)
+                    .expect("pending > 0 implies a rank holds work or a transfer is parked");
+                anyhow::bail!(
+                    "cluster stuck: rank {worst} made no progress with {waiting} waiting + \
+                     {running} running sequences and {} free pages; {} requests pending \
+                     over {dp} ranks ({} transfers in flight)",
+                    self.router.ranks[worst].cache.free_pages(),
                     self.pending(),
-                    self.in_flight.len(),
-                    self.dp()
+                    self.in_flight.len()
                 );
             }
         }
+        Ok(true)
+    }
+
+    /// Drive every rank to completion on per-rank virtual clocks; outcomes
+    /// are merged and id-sorted.
+    pub fn run_virtual(&mut self, step_costs: &[f64]) -> anyhow::Result<Vec<RequestOutcome>> {
+        let t0 = Instant::now();
+        let done = self.run_until(step_costs, f64::INFINITY)?;
+        debug_assert!(done, "an unbounded run_until drains or errors");
         Ok(self.router.drain_finished(t0.elapsed().as_secs_f64()))
+    }
+
+    /// Drive every rank to completion in the degenerate uniform-cost mode
+    /// (every step costs 1.0 virtual second on every rank — the lock-step
+    /// equivalent). A stuck cluster returns the `run_until` error naming
+    /// the wedged rank and its queue depth.
+    pub fn run_to_completion(&mut self) -> anyhow::Result<Vec<RequestOutcome>> {
+        let costs = vec![1.0; self.dp()];
+        self.run_virtual(&costs)
     }
 
     /// Total prompt tokens served from prefix caches instead of re-prefilled.

@@ -158,6 +158,12 @@ impl Server {
         self.waiting.iter().map(|s| s.id()).collect()
     }
 
+    /// (waiting, running) queue depths — the cluster drive's stuck-rank
+    /// diagnostics read this when a rank stops making progress.
+    pub fn queue_depths(&self) -> (usize, usize) {
+        (self.waiting.len(), self.running.len())
+    }
+
     /// One scheduling iteration. Returns false when fully idle.
     pub fn step(&mut self) -> anyhow::Result<bool> {
         // length-cap sweep: a sequence whose cache reached the largest

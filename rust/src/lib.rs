@@ -37,6 +37,9 @@
 //! * [`coordinator`] — requests, sequences, mixed-batch scheduler, router,
 //!   serving loop, metrics
 //! * [`cluster`] — DP/TP topology and collective cost model
+//! * [`simulate`] — deterministic virtual-time serving simulation: the
+//!   event loop, the lock-step/event-driven harness, and the scenario
+//!   configs every serve bench is a thin wrapper over
 //! * [`perfmodel`] — calibrated Hopper roofline/kernel/E2E timing model
 //! * [`workload`] — trace generators and the synthetic benchmark suite
 //! * [`bench`] — timing harness used by `cargo bench` targets
@@ -49,6 +52,7 @@ pub mod kvcache;
 pub mod mla;
 pub mod perfmodel;
 pub mod runtime;
+pub mod simulate;
 pub mod util;
 pub mod workload;
 

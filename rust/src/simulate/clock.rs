@@ -1,0 +1,184 @@
+//! Deterministic virtual-time event loop: a min-heap of `(time, rank,
+//! event)` entries with a **documented total order** — earliest time first,
+//! ties broken by rank id, then by push sequence id. Two runs that push the
+//! same events pop them in the same order, bit for bit; that determinism is
+//! what lets the event-driven drives (`simulate::harness` event timing,
+//! `cluster::ClusterServer::run_until`) pin themselves byte-for-byte
+//! against the legacy lock-step loops in the uniform-cost degenerate case.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One scheduled event: a wake-up at virtual `time` for `rank`, carrying a
+/// caller-defined payload. `seq` is the push sequence id (assigned by the
+/// loop) — the final tie-break, so same-(time, rank) events pop FIFO.
+#[derive(Clone, Copy, Debug)]
+pub struct Event<T> {
+    /// virtual seconds (finite; asserted on push)
+    pub time: f64,
+    /// rank id — the second tie-break key
+    pub rank: usize,
+    /// push sequence id — the third tie-break key (FIFO among exact ties)
+    pub seq: u64,
+    /// caller payload
+    pub payload: T,
+}
+
+/// Heap adapter: `BinaryHeap` is a max-heap, so the ordering is reversed —
+/// the SMALLEST `(time, rank, seq)` key is the heap maximum.
+struct HeapEntry<T>(Event<T>);
+
+impl<T> HeapEntry<T> {
+    fn key_cmp(&self, other: &Self) -> Ordering {
+        self.0
+            .time
+            .total_cmp(&other.0.time)
+            .then_with(|| self.0.rank.cmp(&other.0.rank))
+            .then_with(|| self.0.seq.cmp(&other.0.seq))
+    }
+}
+
+impl<T> PartialEq for HeapEntry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.key_cmp(other) == Ordering::Equal
+    }
+}
+
+impl<T> Eq for HeapEntry<T> {}
+
+impl<T> PartialOrd for HeapEntry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for HeapEntry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.key_cmp(self) // reversed: min-key pops first
+    }
+}
+
+/// The event loop: push wake-ups, pop them in `(time, rank, seq)` order.
+pub struct EventLoop<T> {
+    heap: BinaryHeap<HeapEntry<T>>,
+    next_seq: u64,
+}
+
+impl<T> EventLoop<T> {
+    pub fn new() -> EventLoop<T> {
+        EventLoop { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `payload` for `rank` at virtual `time` (must be finite).
+    pub fn push(&mut self, time: f64, rank: usize, payload: T) {
+        assert!(time.is_finite(), "event time must be finite, got {time}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(HeapEntry(Event { time, rank, seq, payload }));
+    }
+
+    /// Remove and return the earliest event (ties: lowest rank, then FIFO).
+    pub fn pop(&mut self) -> Option<Event<T>> {
+        self.heap.pop().map(|e| e.0)
+    }
+
+    /// The earliest scheduled time, if any event is pending.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.0.time)
+    }
+
+    /// Remove and return EVERY event whose time equals the earliest time
+    /// (bitwise `==`), in `(rank, seq)` order — one synchronized "batch".
+    /// With uniform per-step costs all ranks' wake-ups carry bit-identical
+    /// times, so a batch is exactly one legacy lock-step round.
+    pub fn pop_batch(&mut self) -> Vec<Event<T>> {
+        let mut batch = Vec::new();
+        let Some(first) = self.pop() else {
+            return batch;
+        };
+        let t = first.time;
+        batch.push(first);
+        while self.peek_time() == Some(t) {
+            batch.push(self.pop().unwrap());
+        }
+        batch
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for EventLoop<T> {
+    fn default() -> Self {
+        EventLoop::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut ev = EventLoop::new();
+        ev.push(3.0, 0, "c");
+        ev.push(1.0, 0, "a");
+        ev.push(2.0, 0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| ev.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_by_rank_then_push_order() {
+        let mut ev = EventLoop::new();
+        ev.push(1.0, 2, "r2-first");
+        ev.push(1.0, 0, "r0");
+        ev.push(1.0, 2, "r2-second");
+        ev.push(1.0, 1, "r1");
+        let order: Vec<&str> = std::iter::from_fn(|| ev.pop().map(|e| e.payload)).collect();
+        assert_eq!(order, vec!["r0", "r1", "r2-first", "r2-second"]);
+    }
+
+    #[test]
+    fn batch_extracts_one_synchronized_round() {
+        let mut ev = EventLoop::new();
+        ev.push(1.0, 1, ());
+        ev.push(1.0, 0, ());
+        ev.push(2.0, 0, ());
+        let batch = ev.pop_batch();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].rank, 0);
+        assert_eq!(batch[1].rank, 1);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev.peek_time(), Some(2.0));
+        assert_eq!(ev.pop_batch().len(), 1);
+        assert!(ev.pop_batch().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn rejects_non_finite_times() {
+        EventLoop::new().push(f64::INFINITY, 0, ());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let drive = || {
+            let mut ev = EventLoop::new();
+            for i in 0..32usize {
+                ev.push((i % 5) as f64 * 0.125, i % 3, i);
+            }
+            let mut order = Vec::new();
+            while let Some(e) = ev.pop() {
+                order.push((e.time.to_bits(), e.rank, e.seq, e.payload));
+            }
+            order
+        };
+        assert_eq!(drive(), drive());
+    }
+}

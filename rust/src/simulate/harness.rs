@@ -1,0 +1,919 @@
+//! The virtual-time serving harness: ONE simulation engine behind every
+//! serve bench (`serve_mixed`, `serve_cluster`, `serve_disagg`,
+//! `serve_straggler`) and their Python ports
+//! (`python/tests/serve_port_common.py` mirrors this file function for
+//! function — the committed BENCH_*.json baselines are generated there, so
+//! any edit here must be mirrored and the baselines regenerated).
+//!
+//! The harness owns everything the benches used to copy-paste: trace
+//! replay and arrival injection, per-rank queue/page state, prefix-page
+//! publication/adoption, routing through the REAL `coordinator::router`
+//! policies, scheduling through the REAL `coordinator::Scheduler`, step
+//! costs from the calibrated analytical model (`perfmodel::e2e`), and the
+//! TTFT/ITL/throughput recorders (backed by [`crate::util::stats::Stats`]).
+//! Two timing modes:
+//!
+//! * [`SimTiming::LockStep`] — every rank takes one scheduler action per
+//!   round off the pre-round state; the round costs the slowest rank's
+//!   step, and tokens produced in a round are stamped at the round barrier.
+//! * [`SimTiming::EventDriven`] — every rank owns its clock and advances by
+//!   its own (speed-scaled) step costs; the global clock follows the
+//!   earliest candidate wake-up popped from [`super::clock::EventLoop`]: a
+//!   busy rank's local time, the next arrival, or an in-flight transfer's
+//!   ready-time. A rank's clock may LAG the global clock while it idles —
+//!   its next action is charged from its own clock (the committed
+//!   asynchronous semantics; see DESIGN.md "Simulation core").
+//!
+//! No wall clock anywhere: two runs produce byte-identical numbers.
+
+use super::clock::EventLoop;
+use super::scenario::{Scenario, SimRoute, SimTiming};
+use crate::coordinator::router::{pick_handoff_rank, pick_rank, pick_rank_affinity, RankLoad};
+use crate::coordinator::scheduler::{Action, RunningSeq, Scheduler, WaitingSeq};
+use crate::kvcache::PAGE_TOKENS;
+use crate::perfmodel::e2e::{
+    decode_step_s, handoff_s, mixed_step_s, prefill_step_s, spill_s,
+};
+use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use crate::util::stats::Stats;
+use crate::workload::Request;
+
+/// Step-cost model for one scenario's ranks.
+#[derive(Clone, Copy, Debug)]
+pub enum CostModel {
+    /// the calibrated H20-class analytical model (`perfmodel::e2e`)
+    Analytic {
+        gpu: GpuSpec,
+        model: ModelSpec,
+        dcfg: DeploymentConfig,
+        kind: KernelKind,
+    },
+    /// every action costs the same constant — the degenerate mode in which
+    /// the event-driven loop reproduces lock-step byte-for-byte (pinned by
+    /// `integration_simulate`)
+    Uniform { step_s: f64 },
+}
+
+impl CostModel {
+    fn decode(&self, batch: usize, context: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, dcfg, kind } => {
+                decode_step_s(gpu, model, dcfg, batch, context, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    fn prefill(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, dcfg, kind } => {
+                prefill_step_s(gpu, model, dcfg, tokens, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    fn mixed(&self, batch: usize, dctx: usize, chunk: usize, cctx: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, dcfg, kind } => {
+                mixed_step_s(gpu, model, dcfg, batch, dctx, chunk, cctx, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    fn spill(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, kind, .. } => spill_s(gpu, model, tokens, *kind),
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    fn handoff(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, kind, .. } => {
+                handoff_s(gpu, model, tokens, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    /// (FP8 wire bytes, bf16-everything wire bytes) for `tokens` of KV.
+    fn wire_bytes(&self, tokens: usize) -> (u64, u64) {
+        match self {
+            CostModel::Analytic { model, .. } => (
+                model.kv_bytes_per_token(KernelKind::SnapMlaFp8) as u64 * tokens as u64,
+                model.kv_bytes_per_token(KernelKind::FlashMlaBf16) as u64 * tokens as u64,
+            ),
+            CostModel::Uniform { .. } => (tokens as u64, tokens as u64),
+        }
+    }
+}
+
+/// Recorders + counters of one simulated arm — every field a serve bench
+/// reports comes out of this one struct (`scenario.rs` selects the exact
+/// field set each committed baseline carries).
+#[derive(Debug)]
+pub struct SimResult {
+    pub ranks: usize,
+    pub prefill_ranks: usize,
+    pub decode_ranks: usize,
+    pub requests: usize,
+    pub gen_tokens: u64,
+    pub wall_s: f64,
+    pub ttft: Stats,
+    /// TTFT over requests NOT drawn from the long-prompt mixture
+    pub ttft_short: Stats,
+    /// inter-token latencies (every gap after a sequence's first token)
+    pub itl: Stats,
+    pub peak_pages: usize,
+    pub prefill_tokens: u64,
+    pub chunk_tokens: u64,
+    pub prefix_hit_tokens: u64,
+    pub decode_steps: u64,
+    pub decode_batch_sum: u64,
+    /// lock-step rounds executed (lock-step timing only)
+    pub rounds: u64,
+    /// per-rank scheduler actions executed (event timing only)
+    pub steps: u64,
+    pub spills: u64,
+    pub restores: u64,
+    pub handoffs: u64,
+    pub wire_fp8_bytes: u64,
+    pub wire_bf16_bytes: u64,
+    pub routed: Vec<u64>,
+}
+
+impl SimResult {
+    pub fn tok_per_s(&self) -> f64 {
+        self.gen_tokens as f64 / self.wall_s
+    }
+
+    pub fn mean_decode_batch(&self) -> f64 {
+        self.decode_batch_sum as f64 / self.decode_steps.max(1) as f64
+    }
+}
+
+struct SimSeq {
+    prompt: usize,
+    out: usize,
+    arrival: f64,
+    long: bool,
+    group: Option<u32>,
+    prefix_tokens: usize,
+    cached: usize,
+    prefilled: usize,
+    generated: usize,
+    spilled: bool,
+    /// prefix pages adopted from the rank's published set (never allocated)
+    adopted: usize,
+    /// own pages that became the rank's published copy (never freed)
+    transferred: usize,
+    first_token: Option<f64>,
+    last_token: Option<f64>,
+}
+
+struct SimRank {
+    waiting: Vec<usize>,
+    running: Vec<usize>,
+    free: usize,
+    /// published prefix pages per group (the rank's trie, page-granular)
+    shared: Vec<usize>,
+    /// rank-local clock (event timing; stays 0 under lock-step)
+    t: f64,
+}
+
+#[derive(Default)]
+struct SimStats {
+    gen_tokens: u64,
+    prefill_tokens: u64,
+    chunk_tokens: u64,
+    prefix_hit_tokens: u64,
+    decode_steps: u64,
+    decode_batch_sum: u64,
+    rounds: u64,
+    steps: u64,
+    peak_pages: usize,
+    spills: u64,
+    restores: u64,
+    handoffs: u64,
+    wire_fp8_bytes: u64,
+    wire_bf16_bytes: u64,
+    routed: Vec<u64>,
+}
+
+/// The simulation state machine. Construct via [`Scenario::run`].
+pub(super) struct Harness<'a> {
+    scen: &'a Scenario,
+    sched: Scheduler,
+    prefill_sched: Scheduler,
+    speeds: Vec<f64>,
+    page: usize,
+    seqs: Vec<SimSeq>,
+    ranks: Vec<SimRank>,
+    /// (sid, ready_at) FIFO of serialized sequences in transit
+    in_flight: Vec<(usize, f64)>,
+    stats: SimStats,
+    itl: Vec<f64>,
+    /// lock-step: tokens produced this round, stamped at the barrier
+    pending_emits: Vec<usize>,
+}
+
+fn pages_for(tokens: usize, page: usize) -> usize {
+    tokens.div_ceil(page)
+}
+
+impl<'a> Harness<'a> {
+    pub(super) fn new(scen: &'a Scenario, trace: &[Request]) -> Harness<'a> {
+        let n = scen.ranks;
+        assert!(scen.prefill_ranks < n, "need at least one non-prefill rank");
+        assert_eq!(scen.sched.page_tokens, PAGE_TOKENS, "page size mismatch");
+        let speeds = if scen.speeds.is_empty() {
+            vec![1.0; n]
+        } else {
+            assert_eq!(scen.speeds.len(), n, "one speed factor per rank");
+            scen.speeds.clone()
+        };
+        if scen.timing == SimTiming::LockStep {
+            assert_eq!(scen.prefill_ranks, 0, "lock-step cannot express handoffs");
+            assert!(
+                speeds.iter().all(|&s| s == 1.0),
+                "lock-step cannot express per-rank speed factors — that is \
+                 exactly why the straggler scenario is event-driven"
+            );
+        }
+        let groups = trace
+            .iter()
+            .filter_map(|r| r.prefix_group)
+            .max()
+            .map(|g| g as usize + 1)
+            .unwrap_or(0);
+        let seqs = trace
+            .iter()
+            .map(|r| SimSeq {
+                prompt: r.prompt_tokens,
+                out: r.max_new_tokens,
+                arrival: r.arrival_s,
+                long: r.long_prompt,
+                group: r.prefix_group,
+                prefix_tokens: r.prefix_tokens,
+                cached: 0,
+                prefilled: 0,
+                generated: 0,
+                spilled: false,
+                adopted: 0,
+                transferred: 0,
+                first_token: None,
+                last_token: None,
+            })
+            .collect();
+        let ranks = (0..n)
+            .map(|_| SimRank {
+                waiting: Vec::new(),
+                running: Vec::new(),
+                free: scen.capacity_pages,
+                shared: vec![0; groups],
+                t: 0.0,
+            })
+            .collect();
+        Harness {
+            scen,
+            sched: Scheduler::new(scen.sched),
+            prefill_sched: Scheduler::new(scen.prefill_sched.unwrap_or(scen.sched)),
+            speeds,
+            page: scen.sched.page_tokens,
+            seqs,
+            ranks,
+            in_flight: Vec::new(),
+            stats: SimStats { routed: vec![0; n], ..SimStats::default() },
+            itl: Vec::new(),
+            pending_emits: Vec::new(),
+        }
+    }
+
+    /// One generated token for `sid`; event timing stamps it at `t`,
+    /// lock-step passes None and the run loop stamps at the round barrier.
+    fn emit(&mut self, sid: usize, t: Option<f64>) {
+        self.stats.gen_tokens += 1;
+        let Some(t) = t else {
+            self.pending_emits.push(sid);
+            return;
+        };
+        let s = &mut self.seqs[sid];
+        if let Some(last) = s.last_token {
+            self.itl.push(t - last);
+        }
+        s.last_token = Some(t);
+    }
+
+    fn private_pages(&self, sid: usize) -> usize {
+        let s = &self.seqs[sid];
+        pages_for(s.cached, self.page) - s.adopted - s.transferred
+    }
+
+    /// Published pages of `sid`'s group usable by a fresh admission (the
+    /// adopt limit: ≥1 prompt token always left to prefill).
+    fn hit_pages(&self, rank: usize, sid: usize) -> usize {
+        let s = &self.seqs[sid];
+        match s.group {
+            Some(g) => self.ranks[rank].shared[g as usize].min((s.prompt - 1) / self.page),
+            None => 0,
+        }
+    }
+
+    fn colocated_loads(&self, sid: usize) -> Vec<RankLoad> {
+        let s = &self.seqs[sid];
+        let needed = pages_for(s.prompt + s.out, self.page);
+        (0..self.ranks.len())
+            .map(|ri| {
+                let r = &self.ranks[ri];
+                let queued: usize = r
+                    .waiting
+                    .iter()
+                    .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
+                    .sum();
+                let remaining: usize = r
+                    .running
+                    .iter()
+                    .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                    .sum();
+                RankLoad {
+                    tokens: queued + remaining,
+                    free_pages: r.free,
+                    pages_needed: needed,
+                    prefix_hit_tokens: self.hit_pages(ri, sid) * self.page,
+                    evictable_pages: 0,
+                }
+            })
+            .collect()
+    }
+
+    fn route(&mut self, sid: usize) {
+        let rank = match self.scen.routing {
+            SimRoute::Single => 0,
+            SimRoute::Disagg => {
+                // least-loaded prefill rank; a prefill rank holds just the
+                // prompt's pages (the KV migrates at handoff)
+                let needed = pages_for(self.seqs[sid].prompt, self.page);
+                let loads: Vec<RankLoad> = (0..self.scen.prefill_ranks)
+                    .map(|ri| {
+                        let r = &self.ranks[ri];
+                        let queued: usize = r
+                            .waiting
+                            .iter()
+                            .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
+                            .sum();
+                        let remaining: usize = r
+                            .running
+                            .iter()
+                            .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                            .sum();
+                        RankLoad {
+                            tokens: queued + remaining,
+                            free_pages: r.free,
+                            pages_needed: needed,
+                            prefix_hit_tokens: 0,
+                            evictable_pages: 0,
+                        }
+                    })
+                    .collect();
+                pick_rank(&loads)
+            }
+            SimRoute::PrefixAffinity => {
+                pick_rank_affinity(&self.colocated_loads(sid), self.page)
+            }
+            SimRoute::ShortestQueue => pick_rank(&self.colocated_loads(sid)),
+        };
+        self.stats.routed[rank] += 1;
+        self.ranks[rank].waiting.push(sid);
+    }
+
+    /// Every ready transfer lands on the decode rank with headroom;
+    /// slot-saturated ranks are marked infeasible by inflating their need.
+    fn deliver(&mut self, clock: f64) -> bool {
+        let mut delivered = false;
+        let mut keep = Vec::new();
+        let pending = std::mem::take(&mut self.in_flight);
+        let prefill_ranks = self.scen.prefill_ranks;
+        for (sid, ready) in pending {
+            if ready > clock {
+                keep.push((sid, ready));
+                continue;
+            }
+            let s = &self.seqs[sid];
+            let remaining = s.out - s.generated;
+            let needed = pages_for(s.cached + remaining, self.page);
+            let loads: Vec<RankLoad> = (prefill_ranks..self.ranks.len())
+                .map(|ri| {
+                    let r = &self.ranks[ri];
+                    let tokens: usize = r
+                        .running
+                        .iter()
+                        .chain(r.waiting.iter())
+                        .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                        .sum();
+                    let open_slot = r.running.len() < self.scen.sched.max_running;
+                    RankLoad {
+                        tokens,
+                        free_pages: r.free,
+                        pages_needed: if open_slot {
+                            needed
+                        } else {
+                            self.scen.capacity_pages + 1
+                        },
+                        prefix_hit_tokens: 0,
+                        evictable_pages: 0,
+                    }
+                })
+                .collect();
+            match pick_handoff_rank(&loads) {
+                Some(j) => {
+                    let cached = self.seqs[sid].cached;
+                    let r = &mut self.ranks[prefill_ranks + j];
+                    r.free -= pages_for(cached, self.page);
+                    r.running.push(sid);
+                    self.stats.handoffs += 1;
+                    delivered = true;
+                }
+                None => keep.push((sid, ready)),
+            }
+        }
+        self.in_flight = keep;
+        delivered
+    }
+
+    fn publish(&mut self, rank: usize, sid: usize) {
+        let Some(g) = self.seqs[sid].group else { return };
+        let done = self.seqs[sid].prefilled.min(self.seqs[sid].prefix_tokens) / self.page;
+        let have = self.ranks[rank].shared[g as usize];
+        if done > have {
+            self.seqs[sid].transferred += done - have;
+            self.ranks[rank].shared[g as usize] = done;
+        }
+    }
+
+    fn decide(&self, ri: usize) -> Action {
+        let r = &self.ranks[ri];
+        let wview: Vec<WaitingSeq> = r
+            .waiting
+            .iter()
+            .enumerate()
+            .map(|(i, &sid)| WaitingSeq {
+                idx: i,
+                tokens: if self.seqs[sid].spilled {
+                    self.seqs[sid].cached
+                } else {
+                    self.seqs[sid].prompt
+                },
+                spilled: self.seqs[sid].spilled,
+            })
+            .collect();
+        let rview: Vec<RunningSeq> = r
+            .running
+            .iter()
+            .enumerate()
+            .map(|(i, &sid)| RunningSeq {
+                idx: i,
+                context: self.seqs[sid].cached,
+                pending_prefill: self.seqs[sid].prompt - self.seqs[sid].prefilled,
+            })
+            .collect();
+        let sched = if ri < self.scen.prefill_ranks { &self.prefill_sched } else { &self.sched };
+        sched.decide(&wview, &rview, r.free)
+    }
+
+    /// Apply one scheduler action on rank `ri`; returns its (speed-scaled)
+    /// cost. Event timing passes `t_start = Some(rank clock)` and stamps
+    /// tokens at `t_start + cost`; lock-step passes None and the run loop
+    /// stamps at the round barrier.
+    fn apply(&mut self, ri: usize, action: Action, t_start: Option<f64>) -> f64 {
+        let cost;
+        match action {
+            Action::Idle => cost = 0.0,
+            Action::Prefill(idxs) => {
+                let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].waiting[i]).collect();
+                self.ranks[ri].waiting.drain(..ids.len());
+                let total: usize = ids.iter().map(|&sid| self.seqs[sid].prompt).sum();
+                cost = self.scen.cost.prefill(total) * self.speeds[ri];
+                self.stats.prefill_tokens += total as u64;
+                let t_emit = t_start.map(|t| t + cost);
+                for sid in ids {
+                    let prompt = self.seqs[sid].prompt;
+                    self.ranks[ri].free -= pages_for(prompt, self.page);
+                    let s = &mut self.seqs[sid];
+                    s.cached = prompt;
+                    s.prefilled = prompt;
+                    self.publish(ri, sid);
+                    let s = &mut self.seqs[sid];
+                    s.generated = 1;
+                    if t_emit.is_some() {
+                        s.first_token = t_emit;
+                    }
+                    self.emit(sid, t_emit);
+                    if self.seqs[sid].generated >= self.seqs[sid].out {
+                        let freed = self.private_pages(sid);
+                        self.ranks[ri].free += freed;
+                    } else {
+                        self.ranks[ri].running.push(sid);
+                    }
+                }
+            }
+            Action::Handoff(idx) => {
+                // serialize + free this rank's pages; the wire block rides
+                // the link (unscaled: the link's time, not the rank's)
+                // overlapped with the rank's next step
+                let t_start = t_start.expect("handoffs only exist under event timing");
+                let sid = self.ranks[ri].running.remove(idx);
+                let freed = self.private_pages(sid);
+                self.ranks[ri].free += freed;
+                let s = &mut self.seqs[sid];
+                s.adopted = 0;
+                s.transferred = 0;
+                let cached = s.cached;
+                let (fp8, bf16) = self.scen.cost.wire_bytes(cached);
+                self.stats.wire_fp8_bytes += fp8;
+                self.stats.wire_bf16_bytes += bf16;
+                let transfer = self.scen.cost.handoff(cached);
+                self.in_flight.push((sid, t_start + transfer));
+                cost = 0.0;
+            }
+            Action::Decode(idxs) => {
+                let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
+                let ctx = ids.iter().map(|&sid| self.seqs[sid].cached).max().unwrap() + 1;
+                cost = self.scen.cost.decode(ids.len(), ctx) * self.speeds[ri];
+                self.stats.decode_steps += 1;
+                self.stats.decode_batch_sum += ids.len() as u64;
+                let t_emit = t_start.map(|t| t + cost);
+                let mut done = Vec::new();
+                for &sid in &ids {
+                    let s = &mut self.seqs[sid];
+                    if s.cached % self.page == 0 {
+                        self.ranks[ri].free -= 1;
+                    }
+                    let s = &mut self.seqs[sid];
+                    s.cached += 1;
+                    s.generated += 1;
+                    self.emit(sid, t_emit);
+                    if self.seqs[sid].generated >= self.seqs[sid].out {
+                        done.push(sid);
+                    }
+                }
+                for sid in done {
+                    let freed = self.private_pages(sid);
+                    self.ranks[ri].free += freed;
+                    self.ranks[ri].running.retain(|&x| x != sid);
+                }
+            }
+            Action::Mixed { prefill_chunks, decode_idxs } => {
+                // admissions are a FCFS prefix of `waiting`; chunk-list
+                // order is service order (SRPT), idx is the waiting position
+                let n_admit = prefill_chunks.iter().filter(|c| c.from_waiting).count();
+                let admitted: Vec<usize> = self.ranks[ri].waiting.drain(..n_admit).collect();
+                // admission adopts the rank's published prefix pages
+                // (shared, no allocation) — mirrors PagedKvCache::adopt_prefix
+                for &sid in &admitted {
+                    let hit = self.hit_pages(ri, sid);
+                    if hit > 0 {
+                        let s = &mut self.seqs[sid];
+                        s.adopted = hit;
+                        s.cached = hit * self.page;
+                        s.prefilled = hit * self.page;
+                        self.stats.prefix_hit_tokens += (hit * self.page) as u64;
+                    }
+                }
+                let chunk_plan: Vec<(usize, usize)> = prefill_chunks
+                    .iter()
+                    .map(|c| {
+                        let sid = if c.from_waiting {
+                            admitted[c.idx]
+                        } else {
+                            self.ranks[ri].running[c.idx]
+                        };
+                        let s = &self.seqs[sid];
+                        (sid, c.tokens.min(s.prompt - s.prefilled))
+                    })
+                    .collect();
+                self.ranks[ri].running.extend(&admitted);
+                let decode_ids: Vec<usize> =
+                    decode_idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
+                let total_chunk: usize = chunk_plan.iter().map(|&(_, t)| t).sum();
+                let dctx = decode_ids
+                    .iter()
+                    .map(|&sid| self.seqs[sid].cached)
+                    .max()
+                    .map(|c| c + 1)
+                    .unwrap_or(0);
+                let cctx = chunk_plan
+                    .iter()
+                    .map(|&(sid, t)| self.seqs[sid].cached + t)
+                    .max()
+                    .unwrap_or(0);
+                cost = self.scen.cost.mixed(decode_ids.len(), dctx, total_chunk, cctx)
+                    * self.speeds[ri];
+                if !decode_ids.is_empty() {
+                    self.stats.decode_steps += 1;
+                    self.stats.decode_batch_sum += decode_ids.len() as u64;
+                }
+                let t_emit = t_start.map(|t| t + cost);
+                let mut done = Vec::new();
+                for &(sid, take) in &chunk_plan {
+                    let s = &self.seqs[sid];
+                    let need =
+                        pages_for(s.cached + take, self.page) - pages_for(s.cached, self.page);
+                    self.ranks[ri].free -= need;
+                    let s = &mut self.seqs[sid];
+                    s.cached += take;
+                    s.prefilled += take;
+                    self.stats.chunk_tokens += take as u64;
+                    self.stats.prefill_tokens += take as u64;
+                    self.publish(ri, sid);
+                    let s = &mut self.seqs[sid];
+                    if s.prefilled == s.prompt {
+                        s.generated = 1;
+                        if t_emit.is_some() {
+                            s.first_token = t_emit;
+                        }
+                        self.emit(sid, t_emit);
+                        if self.seqs[sid].generated >= self.seqs[sid].out {
+                            done.push(sid);
+                        }
+                    }
+                }
+                for &sid in &decode_ids {
+                    let s = &mut self.seqs[sid];
+                    if s.cached % self.page == 0 {
+                        self.ranks[ri].free -= 1;
+                    }
+                    let s = &mut self.seqs[sid];
+                    s.cached += 1;
+                    s.generated += 1;
+                    self.emit(sid, t_emit);
+                    if self.seqs[sid].generated >= self.seqs[sid].out {
+                        done.push(sid);
+                    }
+                }
+                for sid in done {
+                    let freed = self.private_pages(sid);
+                    self.ranks[ri].free += freed;
+                    self.ranks[ri].running.retain(|&x| x != sid);
+                }
+            }
+            Action::Resume(_) => {
+                let sid = self.ranks[ri].waiting.remove(0);
+                let cached = self.seqs[sid].cached;
+                cost = self.scen.cost.spill(cached) * self.speeds[ri];
+                self.ranks[ri].free -= pages_for(cached, self.page);
+                let s = &mut self.seqs[sid];
+                s.spilled = false;
+                s.adopted = 0;
+                s.transferred = 0;
+                self.stats.restores += 1;
+                self.ranks[ri].running.push(sid);
+            }
+            Action::Preempt(idx) => {
+                let sid = self.ranks[ri].running.remove(idx);
+                let cached = self.seqs[sid].cached;
+                cost = self.scen.cost.spill(cached) * self.speeds[ri];
+                let freed = self.private_pages(sid);
+                self.ranks[ri].free += freed;
+                // the spill snapshot privatizes adopted pages (exactness
+                // over dedup): the restore reallocates every page
+                let s = &mut self.seqs[sid];
+                s.adopted = 0;
+                s.transferred = 0;
+                s.spilled = true;
+                self.stats.spills += 1;
+                self.ranks[ri].waiting.insert(0, sid);
+            }
+        }
+        cost
+    }
+
+    /// Name the most-loaded stuck rank for a deadlock diagnostic.
+    fn stuck_report(&self) -> String {
+        let worst = (0..self.ranks.len())
+            .filter(|&ri| self.rank_busy(ri))
+            .max_by_key(|&ri| self.ranks[ri].waiting.len() + self.ranks[ri].running.len())
+            .unwrap_or(0);
+        let r = &self.ranks[worst];
+        format!(
+            "rank {worst} stuck with {} waiting + {} running and {} free pages",
+            r.waiting.len(),
+            r.running.len(),
+            r.free
+        )
+    }
+
+    pub(super) fn run(mut self, trace: &[Request]) -> SimResult {
+        match self.scen.timing {
+            SimTiming::LockStep => self.run_lockstep(trace),
+            SimTiming::EventDriven => self.run_event(trace),
+        }
+        self.summarize(trace)
+    }
+
+    fn rank_busy(&self, ri: usize) -> bool {
+        !self.ranks[ri].waiting.is_empty() || !self.ranks[ri].running.is_empty()
+    }
+
+    fn any_busy(&self) -> bool {
+        (0..self.ranks.len()).any(|ri| self.rank_busy(ri))
+    }
+
+    fn sample_pages(&mut self) {
+        let used: usize = self.ranks.iter().map(|r| self.scen.capacity_pages - r.free).sum();
+        self.stats.peak_pages = self.stats.peak_pages.max(used);
+    }
+
+    fn run_lockstep(&mut self, trace: &[Request]) {
+        let mut clock = 0.0f64;
+        let mut next_arrival = 0usize;
+        let mut rounds = 0usize;
+        while next_arrival < trace.len() || self.any_busy() {
+            rounds += 1;
+            assert!(rounds <= 500_000, "sim runaway");
+            while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
+                self.route(next_arrival);
+                next_arrival += 1;
+            }
+
+            // one lock-step round: every rank takes one scheduler action off
+            // the pre-round state; the round costs the slowest rank's step
+            let decisions: Vec<(usize, Action)> = (0..self.ranks.len())
+                .filter(|&ri| self.rank_busy(ri))
+                .map(|ri| (ri, self.decide(ri)))
+                .filter(|(_, a)| *a != Action::Idle)
+                .collect();
+            if decisions.is_empty() {
+                if next_arrival < trace.len() {
+                    clock = clock.max(trace[next_arrival].arrival_s);
+                    continue;
+                }
+                panic!("lockstep deadlock: {}", self.stuck_report());
+            }
+            // costs depend only on each rank's own pre-apply state, so
+            // apply per rank, then charge the round's max (lock-step barrier)
+            let mut round_cost = 0.0f64;
+            for (ri, action) in decisions {
+                round_cost = round_cost.max(self.apply(ri, action, None));
+            }
+            clock += round_cost;
+            // tokens produced this round are stamped at the round boundary
+            let emitted = std::mem::take(&mut self.pending_emits);
+            for sid in emitted {
+                let s = &mut self.seqs[sid];
+                if let Some(last) = s.last_token {
+                    self.itl.push(clock - last);
+                }
+                s.last_token = Some(clock);
+            }
+            for s in self.seqs.iter_mut() {
+                if s.first_token.is_none() && s.generated > 0 {
+                    s.first_token = Some(clock);
+                }
+            }
+            self.stats.rounds += 1;
+            self.sample_pages();
+        }
+        // lock-step wall time is the global clock; park it on rank 0 so
+        // summarize()'s max-over-clocks sees it
+        self.ranks[0].t = clock;
+    }
+
+    fn run_event(&mut self, trace: &[Request]) {
+        let mut clock = 0.0f64;
+        let mut next_arrival = 0usize;
+        let mut iters = 0usize;
+        while next_arrival < trace.len() || !self.in_flight.is_empty() || self.any_busy() {
+            iters += 1;
+            assert!(iters <= 2_000_000, "sim runaway");
+            // the next instant anything can happen, popped off the event
+            // loop in its documented (time, rank, seq) order: a busy rank's
+            // local clock, the next arrival, or an in-flight transfer's
+            // ready-time
+            let mut cands: EventLoop<()> = EventLoop::new();
+            let n = self.ranks.len();
+            for ri in 0..n {
+                if self.rank_busy(ri) {
+                    cands.push(self.ranks[ri].t, ri, ());
+                }
+            }
+            if next_arrival < trace.len() {
+                cands.push(trace[next_arrival].arrival_s, n, ());
+            }
+            for &(_, ready) in &self.in_flight {
+                cands.push(ready, n + 1, ());
+            }
+            let mut later = f64::INFINITY;
+            {
+                let min_cand = cands.peek_time().expect("busy sim has a next event");
+                clock = clock.max(min_cand);
+                while let Some(e) = cands.pop() {
+                    if e.time > clock {
+                        later = later.min(e.time);
+                    }
+                }
+            }
+
+            let mut progressed = false;
+            while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
+                self.route(next_arrival);
+                next_arrival += 1;
+                progressed = true;
+            }
+            if self.scen.prefill_ranks > 0 && self.deliver(clock) {
+                progressed = true;
+            }
+
+            for ri in 0..n {
+                if self.ranks[ri].t > clock {
+                    continue;
+                }
+                // handoffs cost the rank nothing (serialize + async send):
+                // a prefill rank drains every completed prefill and still
+                // takes its real action at the same instant
+                let action = loop {
+                    if !self.rank_busy(ri) {
+                        break Action::Idle;
+                    }
+                    let action = self.decide(ri);
+                    if !matches!(action, Action::Handoff(_)) {
+                        break action;
+                    }
+                    let t = self.ranks[ri].t;
+                    self.apply(ri, action, Some(t));
+                    progressed = true;
+                };
+                if action == Action::Idle {
+                    continue;
+                }
+                let t = self.ranks[ri].t;
+                let cost = self.apply(ri, action, Some(t));
+                self.ranks[ri].t += cost;
+                self.stats.steps += 1;
+                progressed = true;
+            }
+
+            if !progressed {
+                assert!(later.is_finite(), "event-loop deadlock: {}", self.stuck_report());
+                clock = later;
+                continue;
+            }
+            self.sample_pages();
+        }
+        // the final global clock is covered by summarize()'s max over rank
+        // clocks: the last progressing action always ran at a rank clock
+        // that `clock` had caught up to
+        self.ranks[0].t = self.ranks[0].t.max(clock);
+    }
+
+    fn summarize(self, trace: &[Request]) -> SimResult {
+        let mut wall = 0.0f64;
+        for r in &self.ranks {
+            wall = wall.max(r.t);
+        }
+        let mut ttft = Stats::new();
+        let mut ttft_short = Stats::new();
+        for s in &self.seqs {
+            let t = s.first_token.expect("all sequences finished") - s.arrival;
+            ttft.push(t);
+            if !s.long {
+                ttft_short.push(t);
+            }
+        }
+        let mut itl = Stats::new();
+        for &x in &self.itl {
+            itl.push(x);
+        }
+        let st = self.stats;
+        SimResult {
+            ranks: self.scen.ranks,
+            prefill_ranks: self.scen.prefill_ranks,
+            decode_ranks: if self.scen.prefill_ranks == 0 {
+                self.scen.ranks
+            } else {
+                self.scen.ranks - self.scen.prefill_ranks
+            },
+            requests: trace.len(),
+            gen_tokens: st.gen_tokens,
+            wall_s: wall,
+            ttft,
+            ttft_short,
+            itl,
+            peak_pages: st.peak_pages,
+            prefill_tokens: st.prefill_tokens,
+            chunk_tokens: st.chunk_tokens,
+            prefix_hit_tokens: st.prefix_hit_tokens,
+            decode_steps: st.decode_steps,
+            decode_batch_sum: st.decode_batch_sum,
+            rounds: st.rounds,
+            steps: st.steps,
+            spills: st.spills,
+            restores: st.restores,
+            handoffs: st.handoffs,
+            wire_fp8_bytes: st.wire_fp8_bytes,
+            wire_bf16_bytes: st.wire_bf16_bytes,
+            routed: st.routed,
+        }
+    }
+}

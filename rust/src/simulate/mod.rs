@@ -1,0 +1,26 @@
+//! Event-driven virtual-time serving simulation: ONE engine behind every
+//! serve bench, its Python port, and the cluster layer's virtual drive.
+//!
+//! * [`clock`] — the deterministic [`clock::EventLoop`]: a min-heap of
+//!   `(time, rank, event)` with the documented tie-break (time, then rank
+//!   id, then push sequence id).
+//! * [`harness`] — trace replay, arrival injection, per-rank queue/page
+//!   state, routing + scheduling through the REAL coordinator policies,
+//!   TTFT/ITL/throughput recorders backed by [`crate::util::stats::Stats`],
+//!   in lock-step or event-driven timing.
+//! * [`scenario`] — each serve bench as a thin [`scenario::Scenario`]
+//!   config plus its exact baseline field selection.
+//!
+//! `python/tests/serve_port_common.py` mirrors this module line for line —
+//! the committed BENCH_*.json baselines are generated there (this repo
+//! grows in containers without a Rust toolchain), so any semantic edit
+//! here must be mirrored and the baselines regenerated in the same PR
+//! (`ci/port_drift.py` pins the pairing).
+
+pub mod clock;
+pub mod harness;
+pub mod scenario;
+
+pub use clock::{Event, EventLoop};
+pub use harness::{CostModel, SimResult};
+pub use scenario::{Scenario, SimRoute, SimTiming, NODE_GPUS};

@@ -1,0 +1,262 @@
+//! Scenario definitions: each serve bench is a THIN configuration of the
+//! shared harness — rank count and roles, routing policy, timing mode,
+//! scheduler profiles, cost model, per-rank speed factors — plus the exact
+//! report-field selection its committed BENCH_*.json baseline carries.
+//!
+//! | bench            | ranks              | routing           | timing |
+//! |------------------|--------------------|-------------------|--------|
+//! | serve_mixed      | 1                  | single            | event  |
+//! | serve_cluster    | DP ∈ {1,2,4}       | shortest/affinity | lock-step |
+//! | serve_disagg     | n/2 prefill + n/2  | disagg / affinity | event  |
+//! | serve_straggler  | 4 (rank 0 @ 1.5x)  | shortest/affinity | event  |
+//!
+//! Adding a new serving study should be a new `Scenario` constructor here
+//! (plus a Python mirror in `serve_port_common.py` wrappers), not another
+//! hand-rolled simulator.
+
+use super::harness::{CostModel, Harness, SimResult};
+use crate::coordinator::scheduler::SchedulerConfig;
+use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use crate::util::json::Json;
+use crate::workload::Request;
+
+/// GPUs per simulated node: DP ranks run TP = NODE_GPUS / DP.
+pub const NODE_GPUS: usize = 8;
+
+/// How arrivals are routed onto ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimRoute {
+    /// one rank, no routing decision (serve_mixed)
+    Single,
+    /// capacity-aware shortest queue (`router::pick_rank`)
+    ShortestQueue,
+    /// prefix-affinity (`router::pick_rank_affinity`)
+    PrefixAffinity,
+    /// least-loaded prefill rank; decode ranks receive only migrants
+    /// placed by `router::pick_handoff_rank`
+    Disagg,
+}
+
+/// How virtual time advances.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimTiming {
+    /// one action per rank per round, charged the slowest rank's step
+    LockStep,
+    /// per-rank clocks; the global clock follows the earliest wake-up
+    EventDriven,
+}
+
+/// One simulated serving arm (see module docs for the bench mapping).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub ranks: usize,
+    /// ranks `0..prefill_ranks` prefill + hand off (0 = colocated)
+    pub prefill_ranks: usize,
+    pub routing: SimRoute,
+    pub timing: SimTiming,
+    /// scheduler profile of colocated/decode ranks (includes the policy)
+    pub sched: SchedulerConfig,
+    /// scheduler profile of prefill ranks (disaggregated scenarios)
+    pub prefill_sched: Option<SchedulerConfig>,
+    /// KV pages per rank
+    pub capacity_pages: usize,
+    pub cost: CostModel,
+    /// per-rank step-cost multipliers; empty = all 1.0. Only event timing
+    /// can express a straggler — a lock-step round would charge every rank
+    /// the slow rank's step.
+    pub speeds: Vec<f64>,
+}
+
+impl Scenario {
+    /// Run this scenario over a trace (deterministic: two runs produce
+    /// byte-identical results).
+    pub fn run(&self, trace: &[Request]) -> SimResult {
+        Harness::new(self, trace).run(trace)
+    }
+
+    /// The calibrated analytical cost model for a DP layout on the node.
+    pub fn h20_cost(dp: usize, tp: usize) -> CostModel {
+        CostModel::Analytic {
+            gpu: GpuSpec::h20(),
+            model: ModelSpec::deepseek_v31(),
+            dcfg: DeploymentConfig { dp, tp },
+            kind: KernelKind::SnapMlaFp8,
+        }
+    }
+
+    /// serve_mixed arm: one rank, scheduler-policy A/B (the policy rides in
+    /// `sched.policy`), DP8/TP1 per-rank cost shape.
+    pub fn mixed(sched: SchedulerConfig, capacity_pages: usize) -> Scenario {
+        Scenario {
+            ranks: 1,
+            prefill_ranks: 0,
+            routing: SimRoute::Single,
+            timing: SimTiming::EventDriven,
+            sched,
+            prefill_sched: None,
+            capacity_pages,
+            cost: Self::h20_cost(8, 1),
+            speeds: Vec::new(),
+        }
+    }
+
+    /// serve_cluster arm: DP colocated ranks (TP = 8/DP) driven lock-step.
+    pub fn cluster(
+        routing: SimRoute,
+        dp: usize,
+        sched: SchedulerConfig,
+        capacity_pages: usize,
+    ) -> Scenario {
+        Scenario {
+            ranks: dp,
+            prefill_ranks: 0,
+            routing,
+            timing: SimTiming::LockStep,
+            sched,
+            prefill_sched: None,
+            capacity_pages,
+            cost: Self::h20_cost(dp, NODE_GPUS / dp),
+            speeds: Vec::new(),
+        }
+    }
+
+    /// serve_disagg arm: `prefill_ranks` dedicated prefill ranks handing
+    /// off over the FP8 wire (0 = the colocated reference arm), event time.
+    pub fn disagg(
+        n: usize,
+        prefill_ranks: usize,
+        sched: SchedulerConfig,
+        prefill_sched: SchedulerConfig,
+        capacity_pages: usize,
+    ) -> Scenario {
+        Scenario {
+            ranks: n,
+            prefill_ranks,
+            routing: if prefill_ranks == 0 { SimRoute::PrefixAffinity } else { SimRoute::Disagg },
+            timing: SimTiming::EventDriven,
+            sched,
+            prefill_sched: Some(prefill_sched),
+            capacity_pages,
+            cost: Self::h20_cost(n, NODE_GPUS / n),
+            speeds: Vec::new(),
+        }
+    }
+
+    /// serve_straggler arm: DP colocated ranks in event time with per-rank
+    /// speed factors — the scenario lock-step could not express.
+    pub fn straggler(
+        routing: SimRoute,
+        dp: usize,
+        speeds: Vec<f64>,
+        sched: SchedulerConfig,
+        capacity_pages: usize,
+    ) -> Scenario {
+        Scenario {
+            ranks: dp,
+            prefill_ranks: 0,
+            routing,
+            timing: SimTiming::EventDriven,
+            sched,
+            prefill_sched: None,
+            capacity_pages,
+            cost: Self::h20_cost(dp, NODE_GPUS / dp),
+            speeds,
+        }
+    }
+}
+
+fn routed_json(r: &SimResult) -> Json {
+    Json::arr(r.routed.iter().map(|&x| Json::num(x as f64)))
+}
+
+/// The exact result-row field set of BENCH_serve.json.
+pub fn mixed_result_json(policy: &str, r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("decode_tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("ttft_short_p95_ms", Json::num(r.ttft_short.percentile(95.0) * 1e3)),
+        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
+        ("decode_steps", Json::num(r.decode_steps as f64)),
+        ("chunk_tokens", Json::num(r.chunk_tokens as f64)),
+        ("spills", Json::num(r.spills as f64)),
+        ("restores", Json::num(r.restores as f64)),
+    ])
+}
+
+/// The exact result-row field set of BENCH_cluster.json.
+pub fn cluster_result_json(policy: &str, dp: usize, r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("dp", Json::num(dp as f64)),
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("peak_pages", Json::num(r.peak_pages as f64)),
+        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
+        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
+        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
+        ("rounds", Json::num(r.rounds as f64)),
+        ("spills", Json::num(r.spills as f64)),
+        ("routed", routed_json(r)),
+    ])
+}
+
+/// The exact result-row field set of BENCH_disagg.json.
+pub fn disagg_result_json(r: &SimResult) -> Json {
+    let policy = if r.prefill_ranks == 0 { "colocated" } else { "disagg" };
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("ranks", Json::num(r.ranks as f64)),
+        ("prefill_ranks", Json::num(r.prefill_ranks as f64)),
+        ("decode_ranks", Json::num(r.decode_ranks as f64)),
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("itl_p50_ms", Json::num(r.itl.median() * 1e3)),
+        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
+        ("peak_pages", Json::num(r.peak_pages as f64)),
+        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
+        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
+        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
+        ("steps", Json::num(r.steps as f64)),
+        ("spills", Json::num(r.spills as f64)),
+        ("handoffs", Json::num(r.handoffs as f64)),
+        ("transferred_gb_fp8", Json::num(r.wire_fp8_bytes as f64 / 1e9)),
+        ("transferred_gb_bf16", Json::num(r.wire_bf16_bytes as f64 / 1e9)),
+        ("routed", routed_json(r)),
+    ])
+}
+
+/// The exact result-row field set of BENCH_straggler.json.
+pub fn straggler_result_json(policy: &str, speeds: &[f64], r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("policy", Json::str(policy)),
+        ("speeds", Json::arr(speeds.iter().map(|&s| Json::num(s)))),
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("itl_p50_ms", Json::num(r.itl.median() * 1e3)),
+        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
+        ("peak_pages", Json::num(r.peak_pages as f64)),
+        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
+        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
+        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
+        ("steps", Json::num(r.steps as f64)),
+        ("spills", Json::num(r.spills as f64)),
+        ("routed", routed_json(r)),
+    ])
+}

@@ -6,6 +6,11 @@ pub struct Summary {
     xs: Vec<f64>,
 }
 
+/// The canonical recorder type: every latency/throughput recorder in the
+/// serving stack (bench harness, `simulate`, `coordinator::metrics`) backs
+/// onto this — no bench or scenario keeps a private stats implementation.
+pub type Stats = Summary;
+
 impl Summary {
     pub fn new() -> Self {
         Summary { xs: Vec::new() }

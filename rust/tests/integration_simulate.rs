@@ -1,0 +1,271 @@
+//! Integration: the event-driven virtual-time core reproduces the legacy
+//! lock-step semantics byte-for-byte in the degenerate uniform-cost mode —
+//! at BOTH layers of the refactor seam:
+//!
+//! * `cluster::ClusterServer` over real engines: the `run_until` virtual
+//!   drive with uniform per-rank step costs vs the legacy `step_all` round
+//!   loop — same per-request outputs, same `ServerMetrics`/
+//!   `ClusterMetrics` counters, across seeded traces in all three serving
+//!   scenarios (single-rank mixed, colocated DP with prefix affinity,
+//!   disaggregated prefill/decode).
+//! * `simulate::Scenario` (the perfmodel-costed bench harness): lock-step
+//!   timing vs event-driven timing under `CostModel::Uniform` — identical
+//!   recorders bit for bit.
+//!
+//! Plus the new failure contract: a wedged cluster returns a hard error
+//! naming the stuck rank and its queue depth instead of relying on the
+//! caller to notice a false `step_all`.
+
+use snapmla::cluster::ClusterServer;
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::{RequestOutcome, RoutePolicy, ServeRequest};
+use snapmla::kvcache::CacheMode;
+use snapmla::simulate::{CostModel, Scenario, SimResult, SimRoute, SimTiming};
+use snapmla::workload::{TraceConfig, TraceGen};
+
+// --- ClusterServer: run_until(uniform) == legacy step_all loop --------------
+
+/// Prompt = [1] + shared 512-token motif + per-request divergent tail.
+fn prefix_prompt(id: u64, prefix_tokens: usize, prompt_tokens: usize) -> Vec<i32> {
+    let motif = [70, 91, 130];
+    let mut p = vec![1];
+    for i in 0..prefix_tokens {
+        p.push(motif[i % 3]);
+    }
+    while p.len() < prompt_tokens {
+        p.push(40 + (id as i32 * 7 + p.len() as i32) % 50);
+    }
+    p
+}
+
+fn req(id: u64, prompt: Vec<i32>, out: usize) -> ServeRequest {
+    ServeRequest { id, prompt, max_new_tokens: out, temperature: 0.0, seed: id, ignore_eos: true }
+}
+
+/// The pre-refactor drive: lock-step rounds until drained.
+fn run_legacy(cluster: &mut ClusterServer) -> Vec<RequestOutcome> {
+    let t0 = std::time::Instant::now();
+    while cluster.pending() > 0 {
+        assert!(cluster.step_all().expect("step"), "legacy drive wedged");
+    }
+    cluster.router.drain_finished(t0.elapsed().as_secs_f64())
+}
+
+fn signature(outcomes: Vec<RequestOutcome>) -> Vec<(u64, Vec<i32>)> {
+    let mut sig: Vec<(u64, Vec<i32>)> = outcomes.into_iter().map(|o| (o.id, o.generated)).collect();
+    sig.sort_by_key(|&(id, _)| id);
+    sig
+}
+
+/// Build two identically-configured clusters, submit the same requests,
+/// drive one with the legacy lock-step loop and one with the uniform-cost
+/// virtual drive, and require identical outputs + counters.
+fn assert_drives_equivalent(
+    make: impl Fn() -> ClusterServer,
+    requests: impl Fn() -> Vec<ServeRequest>,
+    label: &str,
+) {
+    let mut legacy = make();
+    let mut virt = make();
+    for r in requests() {
+        legacy.submit(r);
+    }
+    for r in requests() {
+        virt.submit(r);
+    }
+    let legacy_out = signature(run_legacy(&mut legacy));
+    let virt_out = signature(virt.run_to_completion().expect("virtual drive"));
+    assert_eq!(legacy_out, virt_out, "{label}: per-request outputs diverged");
+    assert_eq!(legacy.counters(), virt.counters(), "{label}: counters diverged");
+    assert!(virt.virtual_time() > 0.0, "{label}: virtual clock never advanced");
+}
+
+#[test]
+fn uniform_cost_drive_matches_lockstep_single_rank() {
+    // the serve_mixed shape: one colocated rank, a burst of short prompts
+    assert_drives_equivalent(
+        || ClusterServer::sim(1, 128, CacheMode::Fp8, RoutePolicy::ShortestQueue).unwrap(),
+        || (0..6).map(|id| req(id, prefix_prompt(id, 0, 24 + 9 * id as usize), 6)).collect(),
+        "single rank",
+    );
+}
+
+#[test]
+fn uniform_cost_drive_matches_lockstep_colocated_affinity() {
+    // the serve_cluster shape: DP2 prefix-affinity over a shared prefix
+    for policy in [RoutePolicy::PrefixAffinity, RoutePolicy::ShortestQueue] {
+        assert_drives_equivalent(
+            || ClusterServer::sim(2, 256, CacheMode::Fp8, policy).unwrap(),
+            || (0..5).map(|id| req(id, prefix_prompt(id, 512, 545), 4)).collect(),
+            "colocated DP",
+        );
+    }
+}
+
+#[test]
+fn uniform_cost_drive_matches_lockstep_disaggregated() {
+    // the serve_disagg shape: one prefill rank migrating into two decode
+    // ranks over the FP8 wire
+    assert_drives_equivalent(
+        || ClusterServer::sim_disagg(1, 2, 256, CacheMode::Fp8).unwrap(),
+        || (0..5).map(|id| req(id, prefix_prompt(id, 0, 96 + 32 * id as usize), 8)).collect(),
+        "disaggregated",
+    );
+}
+
+#[test]
+fn heterogeneous_costs_change_timing_but_never_outputs() {
+    // a 3x-slow rank reorders the virtual schedule; token streams are
+    // placement- and order-invariant so outputs must not move
+    let make = || ClusterServer::sim(2, 256, CacheMode::Fp8, RoutePolicy::ShortestQueue).unwrap();
+    let reqs =
+        || (0..6).map(|id| req(id, prefix_prompt(id, 0, 40 + 16 * id as usize), 6)).collect();
+    let mut uniform = make();
+    let mut skewed = make();
+    for r in reqs() {
+        uniform.submit(r);
+    }
+    for r in reqs() {
+        skewed.submit(r);
+    }
+    let base = signature(uniform.run_to_completion().expect("uniform"));
+    let skew = signature(skewed.run_virtual(&[3.0, 1.0]).expect("skewed"));
+    assert_eq!(base, skew, "straggler cost skew changed generated tokens");
+    assert!(skewed.virtual_time() > uniform.virtual_time());
+}
+
+#[test]
+fn run_until_pauses_at_the_horizon_and_resumes() {
+    let mut cluster =
+        ClusterServer::sim(2, 256, CacheMode::Fp8, RoutePolicy::ShortestQueue).unwrap();
+    for id in 0..4 {
+        cluster.submit(req(id, prefix_prompt(id, 0, 64), 16));
+    }
+    let costs = [1.0, 1.0];
+    let done = cluster.run_until(&costs, 3.0).expect("bounded drive");
+    assert!(!done, "a 3-step horizon cannot drain 4 multi-step requests");
+    assert!(cluster.pending() > 0);
+    assert!(cluster.virtual_time() <= 4.0, "clock ran past the horizon + one step");
+    let done = cluster.run_until(&costs, f64::INFINITY).expect("resume");
+    assert!(done);
+    assert_eq!(cluster.pending(), 0);
+}
+
+#[test]
+fn stuck_cluster_names_the_wedged_rank_and_queue_depth() {
+    // capacity of ONE page can never admit a 100-token prompt (2 pages):
+    // the scheduler idles forever — the drive must say which rank and why
+    let mut cluster = ClusterServer::sim(2, 1, CacheMode::Fp8, RoutePolicy::ShortestQueue)
+        .expect("cluster");
+    cluster.submit(req(0, prefix_prompt(0, 0, 100), 4));
+    let err = cluster.run_to_completion().expect_err("a wedged cluster must error");
+    let msg = err.to_string();
+    assert!(msg.contains("rank 0"), "error names the stuck rank: {msg}");
+    assert!(msg.contains("1 waiting"), "error names the queue depth: {msg}");
+}
+
+// --- simulate harness: lock-step == event-driven under uniform costs --------
+
+fn bench_sched(policy: SchedPolicy) -> SchedulerConfig {
+    SchedulerConfig {
+        max_decode_batch: 8,
+        max_prefill_batch: 4,
+        max_prefill_tokens: 4096,
+        max_context: 8192,
+        page_tokens: 64,
+        prefill_chunk_tokens: 96,
+        chunk_per_seq: 64,
+        max_step_items: 12,
+        max_running: 12,
+        disagg_prefill: false,
+        policy,
+    }
+}
+
+fn burst_trace() -> Vec<snapmla::workload::Request> {
+    TraceGen::generate(&TraceConfig {
+        seed: 77,
+        num_requests: 24,
+        mean_interarrival_s: 0.0, // burst: no rank ever idles mid-trace,
+        // the only regime where lock-step and per-rank clocks can agree
+        prompt_min: 16,
+        prompt_max: 96,
+        out_min: 16,
+        out_max: 48,
+        temperature: 0.0,
+        shared_prefix_frac: 0.5,
+        shared_prefix_groups: 4,
+        shared_prefix_tokens: 256,
+        ..TraceConfig::default()
+    })
+}
+
+fn harness_arm(timing: SimTiming, routing: SimRoute) -> SimResult {
+    Scenario {
+        ranks: 3,
+        prefill_ranks: 0,
+        routing,
+        timing,
+        sched: bench_sched(SchedPolicy::MixedChunked),
+        prefill_sched: None,
+        capacity_pages: 256,
+        cost: CostModel::Uniform { step_s: 1.0 },
+        speeds: Vec::new(),
+    }
+    .run(&burst_trace())
+}
+
+fn assert_recorders_identical(a: &SimResult, b: &SimResult) {
+    assert_eq!(a.gen_tokens, b.gen_tokens);
+    assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "wall {} vs {}", a.wall_s, b.wall_s);
+    for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+        assert_eq!(a.ttft.percentile(p).to_bits(), b.ttft.percentile(p).to_bits(), "ttft p{p}");
+        assert_eq!(a.itl.percentile(p).to_bits(), b.itl.percentile(p).to_bits(), "itl p{p}");
+    }
+    assert_eq!(a.ttft.len(), b.ttft.len());
+    assert_eq!(a.itl.len(), b.itl.len());
+    assert_eq!(a.peak_pages, b.peak_pages);
+    assert_eq!(a.prefill_tokens, b.prefill_tokens);
+    assert_eq!(a.chunk_tokens, b.chunk_tokens);
+    assert_eq!(a.prefix_hit_tokens, b.prefix_hit_tokens);
+    assert_eq!(a.decode_steps, b.decode_steps);
+    assert_eq!(a.decode_batch_sum, b.decode_batch_sum);
+    assert_eq!(a.spills, b.spills);
+    assert_eq!(a.restores, b.restores);
+    assert_eq!(a.routed, b.routed);
+}
+
+#[test]
+fn harness_event_mode_reproduces_lockstep_under_uniform_costs() {
+    for routing in [SimRoute::PrefixAffinity, SimRoute::ShortestQueue] {
+        let lock = harness_arm(SimTiming::LockStep, routing);
+        let event = harness_arm(SimTiming::EventDriven, routing);
+        assert!(lock.gen_tokens > 0 && lock.rounds > 0 && event.steps > 0);
+        assert_recorders_identical(&lock, &event);
+    }
+}
+
+#[test]
+fn harness_speed_factors_slow_the_straggler_arm() {
+    let scen = |speeds: Vec<f64>| Scenario {
+        ranks: 3,
+        prefill_ranks: 0,
+        routing: SimRoute::ShortestQueue,
+        timing: SimTiming::EventDriven,
+        sched: bench_sched(SchedPolicy::MixedChunked),
+        prefill_sched: None,
+        capacity_pages: 256,
+        cost: CostModel::Uniform { step_s: 1.0 },
+        speeds,
+    };
+    let trace = burst_trace();
+    let uniform = scen(Vec::new()).run(&trace);
+    let strag = scen(vec![2.0, 1.0, 1.0]).run(&trace);
+    assert_eq!(uniform.requests, strag.requests);
+    assert!(
+        strag.wall_s > uniform.wall_s,
+        "a 2x-slow rank must stretch the run: {} vs {}",
+        strag.wall_s,
+        uniform.wall_s
+    );
+}
