@@ -9,13 +9,13 @@
 //!     cargo bench --bench ablation_pipeline [-- --quick]
 
 use snapmla::bench::write_report;
-use snapmla::mla::pipeline::{snapmla_decode, PvOrder, BLOCK_N};
+use snapmla::mla::variant::{KernelVariant, PvOrder, SnapMla, BLOCK_N};
 use snapmla::mla::ref_attn;
 use snapmla::mla::{Cache, Query, Shape};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
 use snapmla::util::rng::Rng;
-use snapmla::util::stats::{rel_l2, Summary};
+use snapmla::util::stats::{rel_l2, Stats};
 use snapmla::util::table::{sci, Table};
 
 struct Case {
@@ -71,7 +71,7 @@ fn main() {
 
     let mut report = Vec::new();
     for make in [benign as fn(u64, usize, &Shape) -> Case, sink_blocks] {
-        let mut errs: [Summary; 3] = Default::default();
+        let mut errs: [Stats; 3] = Default::default();
         let mut name = "";
         for &seed in &seeds {
             let case = make(seed, n, &shape);
@@ -86,8 +86,8 @@ fn main() {
             .iter()
             .enumerate()
             {
-                let got =
-                    snapmla_decode(&shape, &case.q, &case.k_c, &case.k_r, case.n, sm, *order);
+                let got = SnapMla::with_order(*order)
+                    .decode(&shape, &case.q, &case.k_c, &case.k_r, case.n, sm);
                 errs[i].push(rel_l2(&got.o, &exact.o));
             }
         }

@@ -12,13 +12,13 @@ use snapmla::runtime::ModelEngine;
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
 use snapmla::util::rng::Rng;
-use snapmla::util::stats::Summary;
+use snapmla::util::stats::Stats;
 use snapmla::util::table::{sci, Table};
 use std::path::Path;
 
 fn abs_stats(xs: &[f32]) -> (f64, f64, f64) {
     let abs: Vec<f64> = xs.iter().map(|&x| x.abs() as f64).collect();
-    let s = Summary::from(&abs);
+    let s = Stats::from(&abs);
     (s.max(), s.percentile(99.0), s.median())
 }
 

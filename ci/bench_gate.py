@@ -73,6 +73,16 @@ GATES = [
             "affinity_vs_sq_straggler.peak_pages_ratio",
         ],
     ),
+    (
+        "BENCH_kernels.json",
+        "target/bench-reports/kernel_frontier.json",
+        [
+            "results.ctx4096.amla_vs_snapmla.speedup",
+            "results.ctx4096.pcast_vs_snapmla.speedup",
+            "results.ctx4096.snapmla_vs_flashmla.speedup",
+            "results.ctx4096.snapmla.rel_l2",
+        ],
+    ),
 ]
 
 

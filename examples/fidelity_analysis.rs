@@ -15,13 +15,13 @@ use snapmla::mla::{synth, Shape};
 use snapmla::runtime::ModelEngine;
 use snapmla::util::cli::Args;
 use snapmla::util::rng::Rng;
-use snapmla::util::stats::Summary;
+use snapmla::util::stats::Stats;
 use snapmla::util::table::{f4, sci, Table};
 use std::path::Path;
 
 fn component_stats(name: &str, xs: &[f32], table: &mut Table) {
     let abs: Vec<f64> = xs.iter().map(|&x| x.abs() as f64).collect();
-    let s = Summary::from(&abs);
+    let s = Stats::from(&abs);
     table.row(vec![
         name.into(),
         sci(s.max()),

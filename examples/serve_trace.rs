@@ -80,9 +80,9 @@ fn main() -> anyhow::Result<()> {
 
         let mut gen_tokens = 0u64;
         let mut wall = 0f64;
-        let mut ttft = snapmla::util::stats::Summary::new();
-        let mut tpot = snapmla::util::stats::Summary::new();
-        let mut batch = snapmla::util::stats::Summary::new();
+        let mut ttft = snapmla::util::stats::Stats::new();
+        let mut tpot = snapmla::util::stats::Stats::new();
+        let mut batch = snapmla::util::stats::Stats::new();
         for r in &router.ranks {
             gen_tokens += r.metrics.total_generated_tokens;
             wall = wall.max(r.metrics.wall_s);

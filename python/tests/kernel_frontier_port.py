@@ -1,0 +1,493 @@
+"""Exact Python port of benches/kernel_frontier.rs — the kernel-variant
+frontier (SnapMLA / AMLA / P-Cast) on both axes:
+
+* **throughput** — the calibrated H20 roofline (perfmodel::kernel) with each
+  variant's vector-stage saving (AMLA's exponent-ADD rescale, P-Cast's
+  skipped amax pass) subtracted from the compute term;
+* **fidelity** — a line-for-line mirror of the f64 study twin
+  (rust/src/mla/study.rs): every helper below has a same-named counterpart
+  there. The twin runs each variant's algorithm entirely in f64 with only
+  the quantization *grids* (f32 cast, E4M3, BF16) applied as explicit
+  rounding steps, so both languages execute the identical operation
+  sequence; residual discrepancy is libm-level (~1 ulp), far inside the
+  bench gate's 15% tolerance.
+
+BENCH_kernels.json is generated from this port; `cargo bench --bench
+kernel_frontier` regenerates the authoritative copy once cargo is
+available. The timing side routes through serve_port_common's GPU dict so
+ci/port_drift.py --selftest (SNAPMLA_PORT_PERTURB) proves the wiring.
+
+Run: python3 python/tests/kernel_frontier_port.py [--quick]
+"""
+
+import json
+import math
+import struct
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import (  # noqa: E402
+    GPU,
+    MASK,
+    Rng,
+    normalize,
+    snapmla_effective_peak_tflops,
+)
+
+# --- study shape + constants (rust/src/mla/study.rs) --------------------------
+
+STUDY_D_C = 32
+STUDY_D_R = 8
+STUDY_BLOCK_N = 64
+STUDY_SINK_STRIDE = 509
+STUDY_SINK_TARGET_LOGIT = 14.0
+STUDY_BAND_GAP = 5.0
+
+E4M3_MAX_F64 = 448.0
+SCALE_EPS_F64 = 1e-8
+NEG_INF_F64 = -1e300
+# AMLA's power-of-two sigma_P floor (2^-40).
+AMLA_SP_FLOOR_F64 = 9.094947017729282e-13
+# P-Cast's static probability scale S = 2^8.
+PCAST_P_SCALE_F64 = 256.0
+# f64 literal shared verbatim with study.rs (do not recompute).
+LOG2_E = 1.4426950408889634
+
+
+# --- grid roundings -----------------------------------------------------------
+
+def _f32(x):
+    """Round an f64 to the nearest f32 (the cast both languages share)."""
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def pow2(e):
+    return math.ldexp(1.0, e)
+
+
+def exponent_of(a):
+    # unbiased binary exponent: a = m * 2^e with 0.5 <= m < 1
+    return math.frexp(a)[1] - 1
+
+
+def round_half_even_f64(x):
+    f = math.floor(x)
+    d = x - f
+    if d > 0.5:
+        return f + 1.0
+    if d < 0.5:
+        return f
+    if int(f) % 2 == 0:
+        return f
+    return f + 1.0
+
+
+def e4m3_round_f64(x):
+    if x == 0.0:
+        return 0.0
+    sign = -1.0 if x < 0.0 else 1.0
+    a = abs(x)
+    if a >= E4M3_MAX_F64:
+        return sign * E4M3_MAX_F64
+    e_unb = exponent_of(a)
+    if e_unb >= -6:
+        q = round_half_even_f64(a / pow2(e_unb - 3))
+        if q >= 16.0:
+            q, e_fin = 8.0, e_unb + 1
+        else:
+            e_fin = e_unb
+        return sign * q * pow2(e_fin - 3)
+    # subnormal grid: multiples of 2^-9 (q == 8 is the first normal)
+    q = round_half_even_f64(a / pow2(-9))
+    return sign * q * pow2(-9)
+
+
+def bf16_round_f64(x):
+    if x == 0.0:
+        return 0.0
+    sign = -1.0 if x < 0.0 else 1.0
+    a = abs(x)
+    e_unb = exponent_of(a)
+    q = round_half_even_f64(a / pow2(e_unb - 7))
+    if q >= 256.0:
+        q, e_fin = 128.0, e_unb + 1
+    else:
+        e_fin = e_unb
+    return sign * q * pow2(e_fin - 7)
+
+
+# --- Rng normals (util::rng::Rng::normal / normal_vec) ------------------------
+
+def rng_normal(rng):
+    """Box-Muller, exactly as util::rng (v drawn only when u passes)."""
+    while True:
+        u = rng.f64()
+        if u > 1e-12:
+            v = rng.f64()
+            return math.sqrt(-2.0 * math.log(u)) * math.cos(2.0 * math.pi * v)
+
+
+def normal_vec_f64(rng, n, std):
+    # mirror of study.rs normal_vec_f64: multiply in f64, round through f32
+    s = _f32(std)
+    return [_f32(rng_normal(rng) * s) for _ in range(n)]
+
+
+# --- stimulus -----------------------------------------------------------------
+
+def study_seed(ctx):
+    return (0x57D ^ ((ctx * 0x9E37) & MASK)) & MASK
+
+
+def study_sm_scale():
+    return 1.0 / math.sqrt(STUDY_D_C + STUDY_D_R)
+
+
+def stimulus(ctx):
+    """study.rs stimulus(): sink tokens every 509th (zero content, pow2-scaled
+    rope attractor), band tokens with flat softmax mass per octave over
+    ln(ctx) - 1.7 octaves below the sink. Draw order matters — it is the
+    cross-language contract."""
+    assert ctx % STUDY_BLOCK_N == 0, "study contexts are whole blocks"
+    rng = Rng(study_seed(ctx))
+    q_c = [e4m3_round_f64(x) for x in normal_vec_f64(rng, STUDY_D_C, 1.0)]
+    q_c[0] = 7.0  # forces sigma_q = 7/448 = 2^-6 exactly
+    q_r = [bf16_round_f64(x) for x in normal_vec_f64(rng, STUDY_D_R, 0.3)]
+    qnorm = math.sqrt(sum(x * x for x in q_c))
+    rnorm2 = sum(x * x for x in q_r)
+    sm = study_sm_scale()
+    amp = pow2(int(round_half_even_f64(math.log2(STUDY_SINK_TARGET_LOGIT / (rnorm2 * sm)))))
+    sink_logit = rnorm2 * amp * sm
+    s_top = sink_logit - STUDY_BAND_GAP
+    band_range = math.log(ctx) - 1.7
+    k_c = [0.0] * (ctx * STUDY_D_C)
+    k_r = [0.0] * (ctx * STUDY_D_R)
+    for j in range(ctx):
+        if j % STUDY_SINK_STRIDE == 0:
+            for i in range(STUDY_D_R):
+                k_r[j * STUDY_D_R + i] = q_r[i] * amp  # bf16-exact (pow2 scale)
+            continue
+        w = normal_vec_f64(rng, STUDY_D_C, 2.0)
+        uv = rng.f64()
+        rope = normal_vec_f64(rng, STUDY_D_R, 4.0)
+        # depth below the band top, count density ∝ e^x: flat mass per octave
+        x = math.log(1.0 + uv * (math.exp(band_range) - 1.0))
+        s_j = s_top - x
+        dot = sum(w[i] * q_c[i] / qnorm for i in range(STUDY_D_C))
+        coeff = s_j / (qnorm * sm)
+        for i in range(STUDY_D_C):
+            u_i = q_c[i] / qnorm
+            k_c[j * STUDY_D_C + i] = w[i] - dot * u_i + coeff * u_i
+        for i in range(STUDY_D_R):
+            k_r[j * STUDY_D_R + i] = rope[i]
+    return dict(k_c=k_c, k_r=k_r, q_c=q_c, q_r=q_r, n=ctx)
+
+
+# --- quantized operands (SnapMLA cache layout, shared by all variants) --------
+
+def per_token_scale_f64(row):
+    amax = 0.0
+    for x in row:
+        a = abs(x)
+        if a > amax:
+            amax = a
+    return max(amax / E4M3_MAX_F64, SCALE_EPS_F64)
+
+
+def build_cache(stim):
+    n = stim["n"]
+    k_c_q = [0.0] * (n * STUDY_D_C)
+    sigma_k = [0.0] * n
+    k_r_al = [0.0] * (n * STUDY_D_R)
+    for j in range(n):
+        row = stim["k_c"][j * STUDY_D_C:(j + 1) * STUDY_D_C]
+        s = per_token_scale_f64(row)
+        sigma_k[j] = s
+        for i in range(STUDY_D_C):
+            k_c_q[j * STUDY_D_C + i] = e4m3_round_f64(row[i] / s)
+        for i in range(STUDY_D_R):
+            k_r_al[j * STUDY_D_R + i] = bf16_round_f64(stim["k_r"][j * STUDY_D_R + i]) / s
+    return dict(k_c_q=k_c_q, sigma_k=sigma_k, k_r_al=k_r_al, n=n)
+
+
+def quantize_query(stim):
+    s = per_token_scale_f64(stim["q_c"])
+    return dict(
+        q_c_q=[e4m3_round_f64(x / s) for x in stim["q_c"]],
+        sigma_q=s,
+        q_r_al=[bf16_round_f64(x) / s for x in stim["q_r"]],
+    )
+
+
+def logit(q, cache, row, sm):
+    s = 0.0
+    q_c_q, q_r_al = q["q_c_q"], q["q_r_al"]
+    k_c_q, k_r_al = cache["k_c_q"], cache["k_r_al"]
+    base_c, base_r = row * STUDY_D_C, row * STUDY_D_R
+    for i in range(STUDY_D_C):
+        s += q_c_q[i] * k_c_q[base_c + i]
+    for i in range(STUDY_D_R):
+        s += q_r_al[i] * k_r_al[base_r + i]
+    return s * q["sigma_q"] * cache["sigma_k"][row] * sm
+
+
+# --- reference + the three variant pipelines ----------------------------------
+
+def reference(stim):
+    n = stim["n"]
+    sm = study_sm_scale()
+    k_c, k_r, q_c, q_r = stim["k_c"], stim["k_r"], stim["q_c"], stim["q_r"]
+    logits = [0.0] * n
+    for j in range(n):
+        s = 0.0
+        for i in range(STUDY_D_C):
+            s += q_c[i] * k_c[j * STUDY_D_C + i]
+        for i in range(STUDY_D_R):
+            s += q_r[i] * k_r[j * STUDY_D_R + i]
+        logits[j] = s * sm
+    m = max(logits)
+    l = 0.0
+    for j in range(n):
+        logits[j] = math.exp(logits[j] - m)
+        l += logits[j]
+    o = [0.0] * STUDY_D_C
+    for j in range(n):
+        p = logits[j] / l
+        for i in range(STUDY_D_C):
+            o[i] += p * k_c[j * STUDY_D_C + i]
+    return o
+
+
+def snapmla_out(q, cache):
+    sm = study_sm_scale()
+    num_blocks = cache["n"] // STUDY_BLOCK_N
+    sigma_k, k_c_q = cache["sigma_k"], cache["k_c_q"]
+    m = NEG_INF_F64
+    l = 0.0
+    sp = 1.0
+    acc = [0.0] * STUDY_D_C
+    for b in range(num_blocks):
+        start = b * STUDY_BLOCK_N
+        s_blk = [logit(q, cache, start + j, sm) for j in range(STUDY_BLOCK_N)]
+        m_cur = max(s_blk)
+        m_new = max(m, m_cur)
+        l_cur = 0.0
+        et = [0.0] * STUDY_BLOCK_N
+        et_max = 0.0
+        for j in range(STUDY_BLOCK_N):
+            e = math.exp(s_blk[j] - m_new)
+            l_cur += e
+            et[j] = e * sigma_k[start + j]
+            if et[j] > et_max:
+                et_max = et[j]
+        sp_cur = max(et_max / E4M3_MAX_F64, SCALE_EPS_F64)
+        alpha = math.exp(m - m_new) if m > NEG_INF_F64 / 2.0 else 0.0
+        gamma = alpha * sp / sp_cur
+        l = l * gamma + l_cur / sp_cur
+        for i in range(STUDY_D_C):
+            acc[i] *= gamma
+        for j in range(STUDY_BLOCK_N):
+            p = e4m3_round_f64(et[j] / sp_cur)
+            if p == 0.0:
+                continue
+            base = (start + j) * STUDY_D_C
+            for i in range(STUDY_D_C):
+                acc[i] += p * k_c_q[base + i]
+        m = m_new
+        sp = sp_cur
+    safe_l = l if l > 0.0 else 1.0
+    return [a / safe_l for a in acc]
+
+
+def amla_out(q, cache):
+    sm = study_sm_scale()
+    num_blocks = cache["n"] // STUDY_BLOCK_N
+    sigma_k, k_c_q = cache["sigma_k"], cache["k_c_q"]
+    m = NEG_INF_F64
+    l = 0.0
+    sp = 1.0
+    acc = [0.0] * STUDY_D_C
+    for b in range(num_blocks):
+        start = b * STUDY_BLOCK_N
+        t_blk = [logit(q, cache, start + j, sm) * LOG2_E for j in range(STUDY_BLOCK_N)]
+        m_cur = max(t_blk)
+        m_new = max(m, math.ceil(m_cur))
+        l_cur = 0.0
+        et = [0.0] * STUDY_BLOCK_N
+        et_max = 0.0
+        for j in range(STUDY_BLOCK_N):
+            e = 2.0 ** (t_blk[j] - m_new)
+            l_cur += e
+            et[j] = e * sigma_k[start + j]
+            if et[j] > et_max:
+                et_max = et[j]
+        if et_max > 0.0:
+            sp_cur = max(2.0 ** (math.ceil(math.log2(et_max)) - 8.0), AMLA_SP_FLOOR_F64)
+        else:
+            sp_cur = AMLA_SP_FLOOR_F64
+        alpha = 2.0 ** (m - m_new) if m > NEG_INF_F64 / 2.0 else 0.0
+        gamma = alpha * sp / sp_cur
+        l = l * gamma + l_cur / sp_cur
+        for i in range(STUDY_D_C):
+            acc[i] *= gamma
+        for j in range(STUDY_BLOCK_N):
+            p = e4m3_round_f64(et[j] / sp_cur)
+            if p == 0.0:
+                continue
+            base = (start + j) * STUDY_D_C
+            for i in range(STUDY_D_C):
+                acc[i] += p * k_c_q[base + i]
+        m = m_new
+        sp = sp_cur
+    safe_l = l if l > 0.0 else 1.0
+    return [a / safe_l for a in acc]
+
+
+def pcast_out(q, cache):
+    sm = study_sm_scale()
+    num_blocks = cache["n"] // STUDY_BLOCK_N
+    sigma_k, k_c_q = cache["sigma_k"], cache["k_c_q"]
+    m = NEG_INF_F64
+    l = 0.0
+    acc = [0.0] * STUDY_D_C
+    for b in range(num_blocks):
+        start = b * STUDY_BLOCK_N
+        s_blk = [logit(q, cache, start + j, sm) for j in range(STUDY_BLOCK_N)]
+        m_cur = max(s_blk)
+        m_new = max(m, m_cur)
+        alpha = math.exp(m - m_new) if m > NEG_INF_F64 / 2.0 else 0.0
+        for i in range(STUDY_D_C):
+            acc[i] *= alpha
+        l_cur = 0.0
+        for j in range(STUDY_BLOCK_N):
+            row = start + j
+            e = math.exp(s_blk[j] - m_new)
+            l_cur += e
+            p = e4m3_round_f64(e * PCAST_P_SCALE_F64)
+            if p == 0.0:
+                continue
+            w = p * sigma_k[row]
+            base = row * STUDY_D_C
+            for i in range(STUDY_D_C):
+                acc[i] += w * k_c_q[base + i]
+        l = l * alpha + l_cur
+        m = m_new
+    safe_l = l if l > 0.0 else 1.0
+    return [a / (PCAST_P_SCALE_F64 * safe_l) for a in acc]
+
+
+def rel_l2_f64(a, b):
+    num = sum((x - y) * (x - y) for x, y in zip(a, b))
+    den = sum(y * y for y in b)
+    return math.sqrt(num / max(den, 1e-30))
+
+
+def frontier_rel_l2(ctx):
+    """study.rs frontier_rel_l2: every variant vs the f64 reference, sharing
+    one stimulus + quantized cache."""
+    stim = stimulus(ctx)
+    cache = build_cache(stim)
+    q = quantize_query(stim)
+    rf = reference(stim)
+    return [
+        ("snapmla", rel_l2_f64(snapmla_out(q, cache), rf)),
+        ("amla", rel_l2_f64(amla_out(q, cache), rf)),
+        ("pcast", rel_l2_f64(pcast_out(q, cache), rf)),
+    ]
+
+
+# --- variant timing model (perfmodel::kernel) ---------------------------------
+
+# GpuSpec::h20 vector-pipeline rate and the per-variant op counts; the rest
+# of the roofline (bf16 peak, HBM bandwidth, launch overhead, utilization)
+# comes from serve_port_common's GPU dict so SNAPMLA_PORT_PERTURB propagates.
+VEC_F32_TFLOPS = 44.0
+AMLA_RESCALE_STALL_OPS = 3.0
+PCAST_PSCALE_OPS = 4.0
+
+D_C = 512
+D_R = 64
+
+
+def shape_flops(batch, heads, t_q, seq):
+    rows = float(batch * heads * t_q)
+    n = float(seq)
+    qk = rows * n * (D_C + D_R) * 2.0
+    pv = rows * n * D_C * 2.0
+    return qk + pv
+
+
+def kernel_time_variant(kind, batch, heads, t_q, seq):
+    """perfmodel::kernel::kernel_time_s over all four KernelKinds."""
+    rows = float(batch * heads * t_q)
+    n = float(seq)
+    if kind == "flashmla_bf16":
+        per_token = 2 * (D_C + D_R)
+        peak = GPU["bf16_tflops"]
+    else:
+        per_token = D_C + 2 * D_R + 4
+        peak = snapmla_effective_peak_tflops()
+    kv = batch * seq * float(per_token)
+    qo = batch * heads * t_q * (2 * D_C + D_R) * 4.0
+    m = float(heads * t_q)
+    row_tile = min(max(m / 64.0, 1.0 / 64.0), 1.0)
+    ramp = n / (n + 400.0)
+    eff = GPU["peak_util"] * row_tile * ramp
+    compute = shape_flops(batch, heads, t_q, seq) / (peak * 1e12 * eff)
+    memory = (kv + qo) / GPU["hbm_bw"]
+    if kind == "amla":
+        # the accumulator rescale runs once per 64-token block over d_c lanes
+        blocks = float(-(-seq // 64))
+        saved = rows * blocks * D_C * AMLA_RESCALE_STALL_OPS / (VEC_F32_TFLOPS * 1e12)
+    elif kind == "pcast":
+        # the P-scale amax pass touches every probability once
+        saved = rows * n * PCAST_PSCALE_OPS / (VEC_F32_TFLOPS * 1e12)
+    else:
+        saved = 0.0
+    return max(compute - saved, memory) + GPU["launch_s"]
+
+
+# --- report (exact schema of benches/kernel_frontier.rs) ----------------------
+
+BATCH, HEADS, T_Q = 8, 128, 1
+
+
+def run(quick=False):
+    contexts = [4096] if quick else [4096, 16384, 65536, 131072]
+    results = {}
+    for ctx in contexts:
+        print(f"[kernel_frontier_port] ctx {ctx} ...", file=sys.stderr, flush=True)
+        t_snap = kernel_time_variant("snapmla", BATCH, HEADS, T_Q, ctx)
+        t_amla = kernel_time_variant("amla", BATCH, HEADS, T_Q, ctx)
+        t_pcast = kernel_time_variant("pcast", BATCH, HEADS, T_Q, ctx)
+        t_flash = kernel_time_variant("flashmla_bf16", BATCH, HEADS, T_Q, ctx)
+        flops = shape_flops(BATCH, HEADS, T_Q, ctx)
+        errs = dict(frontier_rel_l2(ctx))
+        results[f"ctx{ctx}"] = {
+            "snapmla": {"tflops": flops / t_snap / 1e12, "rel_l2": errs["snapmla"]},
+            "amla": {"tflops": flops / t_amla / 1e12, "rel_l2": errs["amla"]},
+            "pcast": {"tflops": flops / t_pcast / 1e12, "rel_l2": errs["pcast"]},
+            "flashmla_bf16": {"tflops": flops / t_flash / 1e12},
+            "amla_vs_snapmla": {"speedup": t_snap / t_amla},
+            "pcast_vs_snapmla": {"speedup": t_snap / t_pcast},
+            "snapmla_vs_flashmla": {"speedup": t_flash / t_snap},
+        }
+    return {"contexts": contexts, "results": results}
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    report = normalize(run(quick))
+    print(json.dumps(report, indent=1, sort_keys=True))
+    for ck in sorted(report["results"], key=lambda k: int(k[3:])):
+        r = report["results"][ck]
+        print(
+            f"\n{ck}: snapmla {r['snapmla']['tflops']:.1f} TF "
+            f"(rel-l2 {r['snapmla']['rel_l2']:.4f}), "
+            f"amla x{r['amla_vs_snapmla']['speedup']:.3f} "
+            f"(rel-l2 {r['amla']['rel_l2']:.4f}), "
+            f"pcast x{r['pcast_vs_snapmla']['speedup']:.3f} "
+            f"(rel-l2 {r['pcast']['rel_l2']:.4f}), "
+            f"vs flashmla x{r['snapmla_vs_flashmla']['speedup']:.3f}",
+            file=sys.stderr,
+        )

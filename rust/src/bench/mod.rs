@@ -7,7 +7,7 @@
 //! human-readable table (EXPERIMENTS.md links both).
 
 use crate::util::json::Json;
-use crate::util::stats::Summary;
+use crate::util::stats::Stats;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -47,7 +47,7 @@ impl Bench {
         for _ in 0..self.warmup {
             f();
         }
-        let mut s = Summary::new();
+        let mut s = Stats::new();
         for _ in 0..self.samples {
             let t0 = Instant::now();
             f();

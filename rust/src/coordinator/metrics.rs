@@ -1,6 +1,6 @@
 //! Serving metrics: per-request latency breakdown and server aggregates.
 
-use crate::util::stats::Summary;
+use crate::util::stats::Stats;
 use crate::util::table::{f1, f2, Table};
 use std::time::Instant;
 
@@ -69,15 +69,15 @@ impl Stopwatch {
 /// Server-level aggregates.
 #[derive(Debug, Default)]
 pub struct ServerMetrics {
-    pub ttft: Summary,
-    pub tpot: Summary,
-    pub e2e: Summary,
+    pub ttft: Stats,
+    pub tpot: Stats,
+    pub e2e: Stats,
     pub total_prompt_tokens: u64,
     pub total_generated_tokens: u64,
     pub total_preemptions: u64,
     pub wall_s: f64,
     pub decode_steps: u64,
-    pub decode_batch: Summary,
+    pub decode_batch: Stats,
     /// mixed steps executed (chunked-prefill policy)
     pub mixed_steps: u64,
     /// mixed steps whose decode batch was non-empty (non-starvation signal)
@@ -151,7 +151,7 @@ impl ServerMetrics {
         t.row(vec!["gen throughput (tok/s)".into(), f1(self.gen_tokens_per_s())]);
         t.row(vec!["mean decode batch".into(), f2(self.decode_batch.mean())]);
         let p50_p95 =
-            |s: &Summary| format!("{} / {}", f1(s.median() * 1e3), f1(s.percentile(95.0) * 1e3));
+            |s: &Stats| format!("{} / {}", f1(s.median() * 1e3), f1(s.percentile(95.0) * 1e3));
         t.row(vec!["TTFT p50/p95 (ms)".into(), p50_p95(&self.ttft)]);
         t.row(vec!["TPOT p50/p95 (ms)".into(), p50_p95(&self.tpot)]);
         t.row(vec!["preemptions (spills)".into(), format!("{}", self.total_preemptions)]);

@@ -2,19 +2,23 @@
 //!
 //! Subcommands:
 //!   info                         — artifact/model summary
-//!   serve   [--mode fp8|bf16|disagg] [--requests N] [--dp N] [--pages N]
+//!   serve   [--mode fp8|bf16|disagg] [--kernel snapmla|amla|pcast]
+//!           [--requests N] [--dp N] [--pages N]
 //!           [--prefill-ranks N] [--route affinity|shortest]
 //!           [--shared-frac F] [--shared-groups N] [--shared-tokens N] …
 //!                                — serve a synthetic trace through the
 //!                                  cluster (prefix-affinity routing by
 //!                                  default; `--mode disagg` splits the dp
 //!                                  ranks into `--prefill-ranks` prefill
-//!                                  ranks migrating KV to the rest), print
-//!                                  per-rank metrics
-//!   fidelity [--ctx N] [--layers N]
-//!                                — Table-3 config fidelity study (rust sim)
-//!   perf    [--model deepseek|longcat]
+//!                                  ranks migrating KV to the rest; the FP8
+//!                                  attention path runs the `--kernel`
+//!                                  decode variant), print per-rank metrics
+//!   fidelity [--ctx N] [--layers N] [--kernel snapmla|amla|pcast]
+//!                                — Table-3 config fidelity study plus the
+//!                                  kernel-variant comparison (rust sim)
+//!   perf    [--model deepseek|longcat] [--kernel snapmla|amla|pcast]
 //!                                — Fig.-1-style analytical throughput sweep
+//!                                  pricing the selected FP8 kernel variant
 //!
 //! `cargo run --release -- serve --requests 16`
 //!
@@ -26,9 +30,9 @@ use snapmla::anyhow;
 use snapmla::cluster::{ClusterServer, NodeTopology};
 use snapmla::coordinator::{RoutePolicy, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
-use snapmla::mla::fidelity::{build_stimuli, layerwise_errors};
+use snapmla::mla::fidelity::{build_stimuli, layerwise_errors, variant_errors};
 use snapmla::mla::quant_configs::QuantConfig;
-use snapmla::mla::Shape;
+use snapmla::mla::{Shape, VariantKind};
 use snapmla::perfmodel::{self, GpuSpec, KernelKind, ModelSpec};
 use snapmla::runtime::{Manifest, ModelEngine};
 use snapmla::util::cli::Args;
@@ -39,6 +43,12 @@ use std::path::PathBuf;
 
 fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn kernel_variant(args: &Args) -> anyhow::Result<VariantKind> {
+    let s = args.get_or("kernel", "snapmla");
+    VariantKind::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("--kernel must be 'snapmla', 'amla' or 'pcast', got '{s}'"))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -124,8 +134,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("--route must be 'affinity' or 'shortest', got '{other}'"),
     };
 
+    let kernel = kernel_variant(args)?;
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)
-        .map(|_| Ok(Server::new(ModelEngine::auto(&dir, mode)?, pages)))
+        .map(|_| Ok(Server::new(ModelEngine::auto_with_kernel(&dir, mode, kernel)?, pages)))
         .collect();
     let mut cluster = if disagg {
         let prefill_ranks = args.usize_or("prefill-ranks", 1);
@@ -205,6 +216,7 @@ fn synth_prompt(rng: &mut Rng, r: &snapmla::workload::Request) -> Vec<i32> {
 fn fidelity(args: &Args) -> anyhow::Result<()> {
     let ctx = args.usize_or("ctx", 2048);
     let layers = args.usize_or("layers", 8);
+    let kernel = kernel_variant(args)?;
     let shape = Shape { heads: 8, d_c: 128, d_r: 32 };
     let stimuli = build_stimuli(7, layers, ctx, &shape);
     let mut t = Table::new(
@@ -221,6 +233,30 @@ fn fidelity(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+
+    let mut tv = Table::new(
+        &format!("kernel-variant fidelity (ctx {ctx})"),
+        &["kernel", "mean rel-l2", "final rel-l2", "final cosine"],
+    );
+    for kind in VariantKind::ALL {
+        let r = variant_errors(kind, &stimuli, &shape, 13);
+        tv.row(vec![
+            kind.name().to_string(),
+            f4(r.mean_rel()),
+            f4(r.final_rel()),
+            f4(r.per_layer.last().unwrap().cosine),
+        ]);
+    }
+    tv.print();
+
+    let mut td = Table::new(
+        &format!("per-layer rel-l2 — {} (ctx {ctx})", kernel.name()),
+        &["layer", "rel-l2", "cosine"],
+    );
+    for le in &variant_errors(kernel, &stimuli, &shape, 13).per_layer {
+        td.row(vec![le.layer.to_string(), f4(le.rel_l2), f4(le.cosine)]);
+    }
+    td.print();
     Ok(())
 }
 
@@ -230,8 +266,10 @@ fn perf(args: &Args) -> anyhow::Result<()> {
         "longcat" => ModelSpec::longcat_flash(),
         _ => ModelSpec::deepseek_v31(),
     };
+    let kernel = kernel_variant(args)?;
+    let fp8_kind = kernel.kernel_kind();
     let mut t = Table::new(
-        &format!("modeled decode throughput — {}", model.name),
+        &format!("modeled decode throughput — {} ({} kernel)", model.name, kernel.name()),
         &["config", "ctx", "bf16 tok/s", "fp8 tok/s", "speedup", "b/rank bf16", "b/rank fp8"],
     );
     for topo in NodeTopology::enumerate(8) {
@@ -239,8 +277,7 @@ fn perf(args: &Args) -> anyhow::Result<()> {
             let cfg = topo.config;
             let bf =
                 perfmodel::e2e::serving_point(&gpu, &model, &cfg, ctx, KernelKind::FlashMlaBf16);
-            let fp =
-                perfmodel::e2e::serving_point(&gpu, &model, &cfg, ctx, KernelKind::SnapMlaFp8);
+            let fp = perfmodel::e2e::serving_point(&gpu, &model, &cfg, ctx, fp8_kind);
             t.row(vec![
                 cfg.label(),
                 format!("{}k", ctx / 1024),

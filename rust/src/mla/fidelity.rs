@@ -10,6 +10,7 @@
 
 use super::quant_configs::QuantConfig;
 use super::ref_attn;
+use super::variant::VariantKind;
 use super::{Cache, Query, Shape};
 use crate::util::rng::Rng;
 use crate::util::stats::{cosine, mse, rel_l2};
@@ -34,11 +35,33 @@ impl FidelityReport {
     }
 
     pub fn mean_rel(&self) -> f64 {
-        if self.per_layer.is_empty() {
-            return f64::NAN;
-        }
-        self.per_layer.iter().map(|l| l.rel_l2).sum::<f64>() / self.per_layer.len() as f64
+        mean_rel(&self.per_layer)
     }
+}
+
+/// Layer-compounded error of one decode-kernel *variant* (full quantized
+/// pipeline, not just the cache rewrite that [`FidelityReport`] measures).
+#[derive(Clone, Debug)]
+pub struct VariantFidelity {
+    pub kind: VariantKind,
+    pub per_layer: Vec<LayerError>,
+}
+
+impl VariantFidelity {
+    pub fn final_rel(&self) -> f64 {
+        self.per_layer.last().map(|l| l.rel_l2).unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_rel(&self) -> f64 {
+        mean_rel(&self.per_layer)
+    }
+}
+
+fn mean_rel(per_layer: &[LayerError]) -> f64 {
+    if per_layer.is_empty() {
+        return f64::NAN;
+    }
+    per_layer.iter().map(|l| l.rel_l2).sum::<f64>() / per_layer.len() as f64
 }
 
 /// A fixed per-layer stimulus: cache + queries from the synthetic generator.
@@ -107,37 +130,100 @@ pub fn layerwise_errors(
             cosine: cosine(&noisy.o, &clean.o),
         });
 
-        // propagate: the *relative* output error becomes a proportional
-        // perturbation of the next layer's query (residual-stream semantics:
-        // layernorm keeps magnitudes normalized, so what propagates is the
-        // direction error scaled by the stream's own magnitude).
-        for head in 0..h {
-            let o_norm = (0..d_c)
-                .map(|i| (clean.o[head * d_c + i] as f64).powi(2))
-                .sum::<f64>()
-                .sqrt()
-                .max(1e-12) as f32;
-            let q_norm = (0..d_c)
-                .map(|i| (stim.query.q_c[head * d_c + i] as f64).powi(2))
-                .sum::<f64>()
-                .sqrt() as f32;
-            let err: Vec<f32> = (0..d_c)
-                .map(|i| {
-                    (noisy.o[head * d_c + i] - clean.o[head * d_c + i]) / o_norm * q_norm
-                })
-                .collect();
-            let dst = &mut carry[head * d_c..(head + 1) * d_c];
-            for i in 0..d_c {
-                let mut acc = 0.0f32;
-                for k in 0..d_c {
-                    acc += err[k] * mix[k * d_c + i];
-                }
-                dst[i] = acc;
-            }
-        }
+        propagate_carry(&mut carry, &mix, &clean.o, &noisy.o, &stim.query, h, d_c);
     }
 
     FidelityReport { config, per_layer }
+}
+
+/// Run the layer-compounded fidelity study for one decode-kernel variant.
+///
+/// Same compounding harness as [`layerwise_errors`], but the quantized path
+/// runs the variant's *full* decode pipeline (fused Q/K quantization plus the
+/// variant's online-softmax numerics) rather than only a rewritten cache —
+/// so AMLA's pow2-snapped scales and P-Cast's static S = 2^8 show up in the
+/// propagated error.
+pub fn variant_errors(
+    kind: VariantKind,
+    stimuli: &[LayerStimulus],
+    shape: &Shape,
+    seed: u64,
+) -> VariantFidelity {
+    let mut rng = Rng::new(seed ^ 0xF1DE11);
+    let sm = shape.sm_scale();
+    let h = shape.heads;
+    let d_c = shape.d_c;
+    let mix: Vec<f32> = rng.normal_vec(d_c * d_c, 0.35 / (d_c as f32).sqrt());
+
+    let mut per_layer = Vec::with_capacity(stimuli.len());
+    let mut carry = vec![0.0f32; h * d_c];
+
+    for (li, stim) in stimuli.iter().enumerate() {
+        let clean = ref_attn::attention(shape, &stim.query, &stim.cache, stim.cache.n, sm);
+
+        let mut q_pert = stim.query.clone();
+        for (q, c) in q_pert.q_c.iter_mut().zip(&carry) {
+            *q += c;
+        }
+        let noisy = super::decode(
+            kind,
+            shape,
+            &q_pert,
+            &stim.cache.k_c,
+            &stim.cache.k_r,
+            stim.cache.n,
+            sm,
+        );
+
+        per_layer.push(LayerError {
+            layer: li,
+            mse: mse(&noisy.o, &clean.o),
+            rel_l2: rel_l2(&noisy.o, &clean.o),
+            cosine: cosine(&noisy.o, &clean.o),
+        });
+
+        propagate_carry(&mut carry, &mix, &clean.o, &noisy.o, &stim.query, h, d_c);
+    }
+
+    VariantFidelity { kind, per_layer }
+}
+
+/// Propagate one layer's output error into the next layer's query operands:
+/// the *relative* output error becomes a proportional perturbation of the
+/// next layer's query (residual-stream semantics: layernorm keeps magnitudes
+/// normalized, so what propagates is the direction error scaled by the
+/// stream's own magnitude), mixed through the fixed projection.
+fn propagate_carry(
+    carry: &mut [f32],
+    mix: &[f32],
+    clean_o: &[f32],
+    noisy_o: &[f32],
+    query: &Query,
+    h: usize,
+    d_c: usize,
+) {
+    for head in 0..h {
+        let o_norm = (0..d_c)
+            .map(|i| (clean_o[head * d_c + i] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+            .max(1e-12) as f32;
+        let q_norm = (0..d_c)
+            .map(|i| (query.q_c[head * d_c + i] as f64).powi(2))
+            .sum::<f64>()
+            .sqrt() as f32;
+        let err: Vec<f32> = (0..d_c)
+            .map(|i| (noisy_o[head * d_c + i] - clean_o[head * d_c + i]) / o_norm * q_norm)
+            .collect();
+        let dst = &mut carry[head * d_c..(head + 1) * d_c];
+        for i in 0..d_c {
+            let mut acc = 0.0f32;
+            for k in 0..d_c {
+                acc += err[k] * mix[k * d_c + i];
+            }
+            dst[i] = acc;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +280,31 @@ mod tests {
         // the RoPE-unaware config's error does not wash out with depth
         let a = reports.iter().find(|r| r.config == QuantConfig::ConfigA).unwrap();
         assert!(a.per_layer.last().unwrap().rel_l2 > 0.8 * a.per_layer[0].rel_l2);
+    }
+
+    #[test]
+    fn variant_fidelity_tracks_the_kernel_numerics() {
+        let shape = Shape { heads: 8, d_c: 128, d_r: 32 };
+        let stimuli = build_stimuli(7, 4, 512, &shape);
+        let reports: Vec<VariantFidelity> = VariantKind::ALL
+            .iter()
+            .map(|&k| variant_errors(k, &stimuli, &shape, 13))
+            .collect();
+        for r in &reports {
+            assert_eq!(r.per_layer.len(), 4);
+            for le in &r.per_layer {
+                assert!(le.rel_l2.is_finite() && le.rel_l2 < 0.5, "{:?}: {le:?}", r.kind);
+                assert!(le.cosine.is_finite());
+            }
+        }
+        // on benign synthetic stimuli all three variants share the cache
+        // quantization floor; their compounded errors stay in one regime
+        // (the frontier *separation* lives in mla::study's sink stimulus)
+        let snap = reports[0].mean_rel();
+        assert!(snap > 0.0);
+        for r in &reports[1..] {
+            assert!(r.mean_rel() < 5.0 * snap, "{:?}: {} vs snap {snap}", r.kind, r.mean_rel());
+        }
     }
 
     #[test]

@@ -13,7 +13,11 @@ pub mod fidelity;
 pub mod pipeline;
 pub mod quant_configs;
 pub mod ref_attn;
+pub mod study;
 pub mod synth;
+pub mod variant;
+
+pub use variant::{KernelVariant, VariantKind};
 
 /// Shape of one decode-attention call (T*H query rows over an N-token cache).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,6 +41,22 @@ impl Shape {
     pub fn small() -> Shape {
         Shape { heads: 8, d_c: 128, d_r: 32 }
     }
+}
+
+/// The single decode entry point: run one decode-attention step under the
+/// selected kernel variant (quantize the operands with the variant's hooks,
+/// then its pipeline). Replaces direct calls to the legacy free functions
+/// `pipeline::snapmla_decode` / `pipeline::snapmla_pipeline`.
+pub fn decode(
+    variant: VariantKind,
+    shape: &Shape,
+    q: &Query,
+    k_c: &[f32],
+    k_r: &[f32],
+    length: usize,
+    sm_scale: f32,
+) -> variant::PipelineOut {
+    variant.instance().decode(shape, q, k_c, k_r, length, sm_scale)
 }
 
 /// Query operands for one decode step: row-major [heads, d_c] / [heads, d_r].

@@ -3,13 +3,13 @@
 //!
 //! Each config maps a full-precision cache to its dequantized-equivalent
 //! values; attention is then evaluated in f32 so the measured error isolates
-//! the cache treatment (the Fig. 5 methodology).
+//! the cache treatment (the Fig. 5 methodology). The cache-rewriting bodies
+//! live in [`crate::mla::variant::CachePolicy`] — the variant descriptor —
+//! so quantization policy is defined in exactly one place; a `QuantConfig`
+//! is now just the Table-3 *label* for a policy.
 
+use super::variant::CachePolicy;
 use super::{Cache, Shape};
-use crate::fp8::{
-    bf16_round, dequant_per_block, e4m3_round, quant_per_block, quant_per_tensor,
-    quant_per_token,
-};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum QuantConfig {
@@ -44,65 +44,27 @@ impl QuantConfig {
         }
     }
 
+    /// The variant-descriptor cache policy this Table-3 row names.
+    pub fn cache_policy(&self) -> CachePolicy {
+        match self {
+            QuantConfig::SnapMla => CachePolicy::PerTokenRopeAware,
+            QuantConfig::ConfigA => CachePolicy::PerTokenCoupled,
+            QuantConfig::ConfigB => CachePolicy::PerTensorStatic,
+            QuantConfig::ConfigC => CachePolicy::PerTensorDynamic,
+            QuantConfig::ConfigD => CachePolicy::PerBlock,
+        }
+    }
+
     /// Apply the config to a cache, returning dequantized-equivalent values.
     pub fn apply(&self, shape: &Shape, cache: &Cache) -> Cache {
-        let (d_c, d_r, n) = (shape.d_c, shape.d_r, cache.n);
-        let mut out = Cache::new(n, shape);
-        match self {
-            QuantConfig::SnapMla => {
-                for j in 0..n {
-                    let q = quant_per_token(&cache.k_c[j * d_c..(j + 1) * d_c]);
-                    q.dequant_into(&mut out.k_c[j * d_c..(j + 1) * d_c]);
-                }
-                bf16_rope(&cache.k_r, &mut out.k_r);
-            }
-            QuantConfig::ConfigA => {
-                // one shared per-token scale over the concatenated KV vector
-                let mut row = vec![0.0f32; d_c + d_r];
-                for j in 0..n {
-                    row[..d_c].copy_from_slice(&cache.k_c[j * d_c..(j + 1) * d_c]);
-                    row[d_c..].copy_from_slice(&cache.k_r[j * d_r..(j + 1) * d_r]);
-                    let q = quant_per_token(&row);
-                    let d = q.dequant();
-                    out.k_c[j * d_c..(j + 1) * d_c].copy_from_slice(&d[..d_c]);
-                    out.k_r[j * d_r..(j + 1) * d_r].copy_from_slice(&d[d_c..]);
-                }
-            }
-            QuantConfig::ConfigB => {
-                for (o, &x) in out.k_c.iter_mut().zip(&cache.k_c) {
-                    *o = e4m3_round(x); // scale 1.0
-                }
-                bf16_rope(&cache.k_r, &mut out.k_r);
-            }
-            QuantConfig::ConfigC => {
-                let (codes, s) = quant_per_tensor(&cache.k_c, None);
-                for (o, &c) in out.k_c.iter_mut().zip(&codes) {
-                    *o = crate::fp8::e4m3_decode(c) * s;
-                }
-                bf16_rope(&cache.k_r, &mut out.k_r);
-            }
-            QuantConfig::ConfigD => {
-                // 64x64 blocks over [n, d_c]; degrade gracefully if not divisible
-                let br = if n % 64 == 0 { 64 } else { n };
-                let bc = if d_c % 64 == 0 { 64 } else { d_c };
-                let q = quant_per_block(&cache.k_c, n, d_c, br, bc);
-                out.k_c = dequant_per_block(&q);
-                bf16_rope(&cache.k_r, &mut out.k_r);
-            }
-        }
-        out
-    }
-}
-
-fn bf16_rope(src: &[f32], dst: &mut [f32]) {
-    for (o, &x) in dst.iter_mut().zip(src) {
-        *o = bf16_round(x);
+        self.cache_policy().apply(shape, cache)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fp8::bf16_round;
     use crate::mla::synth;
     use crate::util::rng::Rng;
     use crate::util::stats::mse;

@@ -1,0 +1,1053 @@
+//! Pluggable decode-kernel variants behind one `KernelVariant` trait.
+//!
+//! A variant bundles its *numerics* (query/KV quantization hooks, softmax
+//! scaling, PV rescaling rule) with its matching `perfmodel::kernel` cost
+//! model, so every future kernel paper is a ~200-line variant instead of a
+//! fork of the pipeline. Three variants ship:
+//!
+//! * [`SnapMla`] — the paper's Algorithm 1 (this module now owns the exact
+//!   implementation that used to live in `mla::pipeline`; the legacy free
+//!   functions remain as deprecated shims). Per-64-block online softmax,
+//!   scale fusion P' = P ⊙ S_V, block-wise dynamic P quantization, and the
+//!   Appendix-E [`PvOrder`] accumulation-schedule study.
+//! * [`Amla`] — AMLA-style exponent-ADD rescaling (arXiv 2509.25224): the
+//!   online softmax runs in base 2 with the running max snapped to the
+//!   integer grid and sigma_P snapped to a power of two, so every
+//!   accumulator rescale factor gamma is an exact power of two. The FMA
+//!   rescale MUL becomes an exponent ADD — lossless in f32 and cheaper on
+//!   the vector pipe (priced by `KernelKind::AmlaFp8`).
+//! * [`PCast`] — P-Cast-style fixed-scale probability cast
+//!   (arXiv 2606.06521): probabilities are cast to FP8 with the *static*
+//!   scale S = 2^8 (block-local e ≤ 1 ⇒ codes ≤ 256 < 448, never
+//!   saturating), skipping the per-block amax reduction and scale division
+//!   entirely. Value scales are applied unfused in the PV stage. Because
+//!   normalization is block-local, a sink token cannot collapse the scale
+//!   domain of the long tail — the failure mode of naive per-max global
+//!   scaling (see the sink-stimulus test in `tests/prop_variants.rs`).
+//!
+//! Quantization *cache* policy also lives here: [`CachePolicy`] absorbs the
+//! Table-3 cache rewriting that `QuantConfig::apply` used to hand-roll, so
+//! quantization policy is defined in exactly one place.
+
+use super::{Cache, Query, Shape};
+use crate::fp8::{
+    bf16_round, dequant_per_block, e4m3_round, per_token_scale, quant_per_block,
+    quant_per_tensor, quant_per_token, E4M3_MAX, SCALE_EPS,
+};
+use crate::perfmodel::kernel::KernelKind;
+
+/// KV block size — matches the Pallas kernel's BLOCK_N, the PV GEMM tile
+/// (paper §3.2.2 "BlockN=64") and the KV-cache page size.
+pub const BLOCK_N: usize = 64;
+
+pub(crate) const NEG_INF: f32 = -1e30;
+
+/// P-Cast's fixed probability scale S = 2^8: block-local e ∈ (0, 1] maps to
+/// codes ≤ 256, inside the E4M3 range without any dynamic amax pass.
+pub const PCAST_P_SCALE: f32 = 256.0;
+
+/// A SnapMLA-quantized KV cache (the algorithmic view; the serving-grade
+/// paged container with u8 storage lives in `crate::kvcache`). All three
+/// shipped variants share this layout — per-token E4M3 content plus
+/// 1/sigma-aligned bf16 RoPE — so a cache built once serves any variant.
+#[derive(Clone, Debug)]
+pub struct QuantCache {
+    /// content on the E4M3 grid, row-major [n, d_c] (f32 staging of codes)
+    pub k_c_q: Vec<f32>,
+    /// per-token content scales [n]
+    pub sigma_k: Vec<f32>,
+    /// RoPE pre-scaled by 1/sigma_k (Key Step 1), row-major [n, d_r]
+    pub k_r_al: Vec<f32>,
+    pub n: usize,
+}
+
+/// A quantized query: E4M3-grid content rows, per-head scales, and RoPE
+/// aligned into each head's scale domain.
+#[derive(Clone, Debug)]
+pub struct QuantQuery {
+    /// [heads, d_c] content codes (f32 staging)
+    pub q_c_q: Vec<f32>,
+    /// [heads] per-head content scales
+    pub sigma_q: Vec<f32>,
+    /// [heads, d_r] RoPE pre-scaled by 1/sigma_q
+    pub q_r_al: Vec<f32>,
+}
+
+/// PV accumulation schedule (Appendix E). Only meaningful for [`SnapMla`];
+/// the ablation bench instantiates `SnapMla::with_order` to compare them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PvOrder {
+    Monotonic,
+    InvertedRescaleP,
+    InvertedRollback,
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineOut {
+    pub o: Vec<f32>,   // [heads, d_c]
+    pub lse: Vec<f32>, // [heads]
+}
+
+/// Which decode-kernel variant to run; the runtime-selectable handle that
+/// the CLI (`--kernel`), `ModelEngine`, `SimBackend` and the fidelity
+/// harness thread through.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VariantKind {
+    SnapMla,
+    Amla,
+    PCast,
+}
+
+static SNAPMLA: SnapMla = SnapMla { order: PvOrder::Monotonic };
+static AMLA: Amla = Amla;
+static PCAST: PCast = PCast;
+
+impl VariantKind {
+    pub const ALL: [VariantKind; 3] = [VariantKind::SnapMla, VariantKind::Amla, VariantKind::PCast];
+
+    /// Parse a CLI spelling (`--kernel snapmla|amla|pcast`).
+    pub fn parse(s: &str) -> Option<VariantKind> {
+        match s {
+            "snapmla" => Some(VariantKind::SnapMla),
+            "amla" => Some(VariantKind::Amla),
+            "pcast" => Some(VariantKind::PCast),
+            _ => None,
+        }
+    }
+
+    /// The CLI / artifact-name spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            VariantKind::SnapMla => "snapmla",
+            VariantKind::Amla => "amla",
+            VariantKind::PCast => "pcast",
+        }
+    }
+
+    /// The matching `perfmodel` cost-model entry.
+    pub fn kernel_kind(&self) -> KernelKind {
+        match self {
+            VariantKind::SnapMla => KernelKind::SnapMlaFp8,
+            VariantKind::Amla => KernelKind::AmlaFp8,
+            VariantKind::PCast => KernelKind::PCastFp8,
+        }
+    }
+
+    /// The canonical static instance of the variant's numerics.
+    pub fn instance(&self) -> &'static dyn KernelVariant {
+        match self {
+            VariantKind::SnapMla => &SNAPMLA,
+            VariantKind::Amla => &AMLA,
+            VariantKind::PCast => &PCAST,
+        }
+    }
+}
+
+/// KV-cache quantization policy (Table 3). The variant descriptor names one;
+/// `QuantConfig::apply` delegates here so cache rewriting lives in one place.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CachePolicy {
+    /// SnapMLA: per-token FP8 content, bf16 RoPE (RoPE-aware).
+    PerTokenRopeAware,
+    /// Config A: per-token RoPE-unaware — one shared scale over [content;rope].
+    PerTokenCoupled,
+    /// Config B: per-tensor static (fixed scale 1.0), RoPE-aware.
+    PerTensorStatic,
+    /// Config C: per-tensor dynamic, RoPE-aware.
+    PerTensorDynamic,
+    /// Config D: per-block (64x64), RoPE-aware.
+    PerBlock,
+}
+
+impl CachePolicy {
+    /// Apply the policy to a cache, returning dequantized-equivalent values.
+    pub fn apply(&self, shape: &Shape, cache: &Cache) -> Cache {
+        let (d_c, d_r, n) = (shape.d_c, shape.d_r, cache.n);
+        let mut out = Cache::new(n, shape);
+        match self {
+            CachePolicy::PerTokenRopeAware => {
+                for j in 0..n {
+                    let q = quant_per_token(&cache.k_c[j * d_c..(j + 1) * d_c]);
+                    q.dequant_into(&mut out.k_c[j * d_c..(j + 1) * d_c]);
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            CachePolicy::PerTokenCoupled => {
+                // one shared per-token scale over the concatenated KV vector
+                let mut row = vec![0.0f32; d_c + d_r];
+                for j in 0..n {
+                    row[..d_c].copy_from_slice(&cache.k_c[j * d_c..(j + 1) * d_c]);
+                    row[d_c..].copy_from_slice(&cache.k_r[j * d_r..(j + 1) * d_r]);
+                    let q = quant_per_token(&row);
+                    let d = q.dequant();
+                    out.k_c[j * d_c..(j + 1) * d_c].copy_from_slice(&d[..d_c]);
+                    out.k_r[j * d_r..(j + 1) * d_r].copy_from_slice(&d[d_c..]);
+                }
+            }
+            CachePolicy::PerTensorStatic => {
+                for (o, &x) in out.k_c.iter_mut().zip(&cache.k_c) {
+                    *o = e4m3_round(x); // scale 1.0
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            CachePolicy::PerTensorDynamic => {
+                let (codes, s) = quant_per_tensor(&cache.k_c, None);
+                for (o, &c) in out.k_c.iter_mut().zip(&codes) {
+                    *o = crate::fp8::e4m3_decode(c) * s;
+                }
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+            CachePolicy::PerBlock => {
+                // 64x64 blocks over [n, d_c]; degrade gracefully if not divisible
+                let br = if n % 64 == 0 { 64 } else { n };
+                let bc = if d_c % 64 == 0 { 64 } else { d_c };
+                let q = quant_per_block(&cache.k_c, n, d_c, br, bc);
+                out.k_c = dequant_per_block(&q);
+                bf16_rope(&cache.k_r, &mut out.k_r);
+            }
+        }
+        out
+    }
+}
+
+fn bf16_rope(src: &[f32], dst: &mut [f32]) {
+    for (o, &x) in dst.iter_mut().zip(src) {
+        *o = bf16_round(x);
+    }
+}
+
+/// One decode-kernel variant: numerics + the matching cost-model entry.
+///
+/// The default `build_cache`/`quantize_query` are the SnapMLA fused
+/// append/quant steps — all shipped variants share the cache layout, so a
+/// cache built by one variant is valid input to another's `pipeline`. The
+/// `pipeline` stage is where variants differ.
+pub trait KernelVariant: Sync {
+    fn kind(&self) -> VariantKind;
+
+    /// The `perfmodel::kernel` entry pricing this variant.
+    fn kernel_kind(&self) -> KernelKind {
+        self.kind().kernel_kind()
+    }
+
+    /// The KV-cache quantization policy this variant's cache uses.
+    fn cache_policy(&self) -> CachePolicy {
+        CachePolicy::PerTokenRopeAware
+    }
+
+    /// Fused-K-Append over a full cache: per-token quantize + domain-align.
+    fn build_cache(&self, shape: &Shape, k_c: &[f32], k_r: &[f32], n: usize) -> QuantCache {
+        snapmla_build_cache(shape, k_c, k_r, n)
+    }
+
+    /// Fused-Q-Quant: per-head-row quantize + align.
+    fn quantize_query(&self, shape: &Shape, q: &Query) -> QuantQuery {
+        snapmla_quantize_query(shape, q)
+    }
+
+    /// Run the variant's decode pipeline for one step over pre-quantized
+    /// operands. `length` ≤ `cache.n`; trailing rows are masked exactly like
+    /// the kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn pipeline(
+        &self,
+        shape: &Shape,
+        q_c_q: &[f32],
+        sigma_q: &[f32],
+        q_r_al: &[f32],
+        cache: &QuantCache,
+        length: usize,
+        sm_scale: f32,
+    ) -> PipelineOut;
+
+    /// Full decode from f32 operands: pad to a whole number of KV blocks,
+    /// build the cache, quantize the query, run the pipeline.
+    fn decode(
+        &self,
+        shape: &Shape,
+        q: &Query,
+        k_c: &[f32],
+        k_r: &[f32],
+        length: usize,
+        sm_scale: f32,
+    ) -> PipelineOut {
+        let n_pad = length.div_ceil(BLOCK_N) * BLOCK_N;
+        let mut k_c_pad = k_c[..length * shape.d_c].to_vec();
+        k_c_pad.resize(n_pad * shape.d_c, 0.0);
+        let mut k_r_pad = k_r[..length * shape.d_r].to_vec();
+        k_r_pad.resize(n_pad * shape.d_r, 0.0);
+        let cache = self.build_cache(shape, &k_c_pad, &k_r_pad, n_pad);
+        let qq = self.quantize_query(shape, q);
+        self.pipeline(shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm_scale)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared SnapMLA-layout quantization steps (Key Steps 1–2 of the paper)
+// ---------------------------------------------------------------------------
+
+/// Per-token quantize + domain-align a full cache (the shared fused append).
+pub fn snapmla_build_cache(shape: &Shape, k_c: &[f32], k_r: &[f32], n: usize) -> QuantCache {
+    let (d_c, d_r) = (shape.d_c, shape.d_r);
+    let mut out = QuantCache {
+        k_c_q: vec![0.0; n * d_c],
+        sigma_k: vec![0.0; n],
+        k_r_al: vec![0.0; n * d_r],
+        n,
+    };
+    for j in 0..n {
+        let row = &k_c[j * d_c..(j + 1) * d_c];
+        let s = per_token_scale(row);
+        out.sigma_k[j] = s;
+        for i in 0..d_c {
+            out.k_c_q[j * d_c + i] = e4m3_round(row[i] / s);
+        }
+        for i in 0..d_r {
+            out.k_r_al[j * d_r + i] = bf16_round(k_r[j * d_r + i]) / s;
+        }
+    }
+    out
+}
+
+/// Per-head-row quantize + align the query (the shared fused Q-quant).
+pub fn snapmla_quantize_query(shape: &Shape, q: &Query) -> QuantQuery {
+    let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+    let mut q_c_q = vec![0.0f32; h * d_c];
+    let mut sigma_q = vec![0.0f32; h];
+    let mut q_r_al = vec![0.0f32; h * d_r];
+    for head in 0..h {
+        let row = &q.q_c[head * d_c..(head + 1) * d_c];
+        let s = per_token_scale(row);
+        sigma_q[head] = s;
+        for i in 0..d_c {
+            q_c_q[head * d_c + i] = e4m3_round(row[i] / s);
+        }
+        for i in 0..d_r {
+            q_r_al[head * d_r + i] = bf16_round(q.q_r[head * d_r + i]) / s;
+        }
+    }
+    QuantQuery { q_c_q, sigma_q, q_r_al }
+}
+
+// ---------------------------------------------------------------------------
+// SnapMLA (paper Algorithm 1, incl. the Appendix-E ordering study)
+// ---------------------------------------------------------------------------
+
+/// The paper's pipeline. `order` selects the Appendix-E PV accumulation
+/// schedule; the shipped kernel (and `VariantKind::SnapMla.instance()`) uses
+/// `Monotonic`.
+#[derive(Clone, Copy, Debug)]
+pub struct SnapMla {
+    pub order: PvOrder,
+}
+
+impl Default for SnapMla {
+    fn default() -> Self {
+        SnapMla { order: PvOrder::Monotonic }
+    }
+}
+
+impl SnapMla {
+    pub fn with_order(order: PvOrder) -> SnapMla {
+        SnapMla { order }
+    }
+}
+
+impl KernelVariant for SnapMla {
+    fn kind(&self) -> VariantKind {
+        VariantKind::SnapMla
+    }
+
+    fn pipeline(
+        &self,
+        shape: &Shape,
+        q_c_q: &[f32],
+        sigma_q: &[f32],
+        q_r_al: &[f32],
+        cache: &QuantCache,
+        length: usize,
+        sm_scale: f32,
+    ) -> PipelineOut {
+        snapmla_pipeline_impl(shape, q_c_q, sigma_q, q_r_al, cache, length, sm_scale, self.order)
+    }
+}
+
+/// One processed block: quantized fused probabilities + its scale domain.
+struct BlockP {
+    start: usize,
+    valid: usize,
+    pq: Vec<f32>, // FP8-grid codes of P' / sigma_p
+    /// rescale factor bringing the accumulator from the previous block's
+    /// (m, sigma_p) domain into this block's domain (gamma of Eq. 13)
+    gamma: f32,
+}
+
+/// The exact Algorithm-1 implementation (moved verbatim from the legacy
+/// `pipeline::snapmla_pipeline`; `mla::pipeline` shims delegate here).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn snapmla_pipeline_impl(
+    shape: &Shape,
+    q_c_q: &[f32],
+    sigma_q: &[f32],
+    q_r_al: &[f32],
+    cache: &QuantCache,
+    length: usize,
+    sm_scale: f32,
+    order: PvOrder,
+) -> PipelineOut {
+    let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+    assert!(length <= cache.n);
+    let num_blocks = cache.n.div_ceil(BLOCK_N);
+
+    let mut o = vec![0.0f32; h * d_c];
+    let mut lse = vec![0.0f32; h];
+    let mut s_blk = vec![0.0f32; BLOCK_N];
+
+    for head in 0..h {
+        let qc = &q_c_q[head * d_c..(head + 1) * d_c];
+        let qr = &q_r_al[head * d_r..(head + 1) * d_r];
+        let sq = sigma_q[head];
+
+        let mut m = NEG_INF;
+        let mut l = 0.0f32;
+        let mut sp = 1.0f32;
+        let acc = &mut o[head * d_c..(head + 1) * d_c];
+
+        // ---- stages 1-3 for every block, with monotonic (m, l, sigma_p)
+        // progression; PV accumulation order is applied afterwards per pair.
+        let mut blocks: Vec<BlockP> = Vec::with_capacity(num_blocks);
+        for b in 0..num_blocks {
+            let start = b * BLOCK_N;
+            let valid = length.saturating_sub(start).min(BLOCK_N);
+            if valid == 0 {
+                break;
+            }
+            let mut m_cur = NEG_INF;
+            for j in 0..valid {
+                let row = start + j;
+                let kc = &cache.k_c_q[row * d_c..(row + 1) * d_c];
+                let kr = &cache.k_r_al[row * d_r..(row + 1) * d_r];
+                let mut s = 0.0f32;
+                for i in 0..d_c {
+                    s += qc[i] * kc[i];
+                }
+                for i in 0..d_r {
+                    s += qr[i] * kr[i];
+                }
+                s_blk[j] = s * sq * cache.sigma_k[row] * sm_scale;
+                m_cur = m_cur.max(s_blk[j]);
+            }
+            let m_new = m.max(m_cur);
+            let mut l_cur = 0.0f32;
+            let mut et_max = 0.0f32;
+            let mut et = vec![0.0f32; valid];
+            for j in 0..valid {
+                let e = (s_blk[j] - m_new).exp();
+                l_cur += e;
+                // stage 2: scale fusion P' = P ⊙ S_V
+                et[j] = e * cache.sigma_k[start + j];
+                et_max = et_max.max(et[j]);
+            }
+            // stage 3: block-wise dynamic P quantization
+            let sp_cur = (et_max / E4M3_MAX).max(SCALE_EPS);
+            let pq: Vec<f32> = et.iter().map(|&x| e4m3_round(x / sp_cur)).collect();
+
+            let alpha = if m > NEG_INF / 2.0 { (m - m_new).exp() } else { 0.0 };
+            let gamma = alpha * sp / sp_cur;
+            l = l * gamma + l_cur / sp_cur;
+            blocks.push(BlockP { start, valid, pq, gamma });
+            m = m_new;
+            sp = sp_cur;
+        }
+
+        // ---- stage 4: PV accumulation under the selected schedule --------
+        match order {
+            PvOrder::Monotonic => {
+                for blk in &blocks {
+                    for a in acc.iter_mut() {
+                        *a *= blk.gamma;
+                    }
+                    accumulate_pv(acc, &blk.pq, cache, blk.start, blk.valid, d_c);
+                }
+            }
+            PvOrder::InvertedRescaleP | PvOrder::InvertedRollback => {
+                let mut i = 0;
+                while i < blocks.len() {
+                    if i + 1 < blocks.len() {
+                        let (b0, b1) = (&blocks[i], &blocks[i + 1]);
+                        // rescale the accumulator straight to b1's domain
+                        for a in acc.iter_mut() {
+                            *a *= b0.gamma * b1.gamma;
+                        }
+                        // WG1 lands P1·V1 first…
+                        accumulate_pv(acc, &b1.pq, cache, b1.start, b1.valid, d_c);
+                        // …then P0·V0 must be folded in. b0's codes live in
+                        // (m0, sp0); the exact factor from b0's domain to
+                        // b1's is b1.gamma.
+                        let r = b1.gamma;
+                        match order {
+                            PvOrder::InvertedRescaleP => {
+                                // Problem 1: requantize P0 into b1's domain
+                                let pq0r: Vec<f32> =
+                                    b0.pq.iter().map(|&p| e4m3_round(p * r)).collect();
+                                accumulate_pv(acc, &pq0r, cache, b0.start, b0.valid, d_c);
+                            }
+                            PvOrder::InvertedRollback => {
+                                // Problem 2: roll the accumulator back to b0's
+                                // domain, accumulate exactly, roll forward.
+                                let inv = 1.0 / r;
+                                for a in acc.iter_mut() {
+                                    *a *= inv;
+                                }
+                                accumulate_pv(acc, &b0.pq, cache, b0.start, b0.valid, d_c);
+                                for a in acc.iter_mut() {
+                                    *a *= r;
+                                }
+                            }
+                            PvOrder::Monotonic => unreachable!(),
+                        }
+                        i += 2;
+                    } else {
+                        let b0 = &blocks[i];
+                        for a in acc.iter_mut() {
+                            *a *= b0.gamma;
+                        }
+                        accumulate_pv(acc, &b0.pq, cache, b0.start, b0.valid, d_c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+
+        // epilogue: o = O/L (scale domain cancels), lse = m + ln(sp·l)
+        let safe_l = if l > 0.0 { l } else { 1.0 };
+        for a in acc.iter_mut() {
+            *a /= safe_l;
+        }
+        lse[head] = m + (sp * l).max(1e-37).ln();
+    }
+
+    PipelineOut { o, lse }
+}
+
+fn accumulate_pv(
+    acc: &mut [f32],
+    pq: &[f32],
+    cache: &QuantCache,
+    start: usize,
+    valid: usize,
+    d_c: usize,
+) {
+    for j in 0..valid {
+        let row = start + j;
+        let p = pq[j];
+        if p == 0.0 {
+            continue;
+        }
+        let kc = &cache.k_c_q[row * d_c..(row + 1) * d_c];
+        for i in 0..d_c {
+            acc[i] += p * kc[i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AMLA: exponent-ADD rescaling (arXiv 2509.25224)
+// ---------------------------------------------------------------------------
+
+/// AMLA-style base-2 online softmax with all rescale factors snapped to
+/// powers of two, turning the accumulator rescale MUL into an exponent ADD.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Amla;
+
+/// Per-head stage-1..3 state for the AMLA pipeline. `m` is the running max
+/// on the base-2 integer grid, `l` the softmax stat in the current scale
+/// domain, `sp` the (power-of-two) probability scale.
+struct AmlaHead {
+    blocks: Vec<BlockP>,
+    m: f32,
+    l: f32,
+    sp: f32,
+}
+
+/// Floor for the power-of-two probability scale (replaces `SCALE_EPS`,
+/// which is not a power of two and would break exact-pow2 gammas).
+const AMLA_SP_FLOOR: f32 = 9.094947e-13; // 2^-40
+
+fn amla_head_blocks(
+    qc: &[f32],
+    qr: &[f32],
+    sq: f32,
+    cache: &QuantCache,
+    length: usize,
+    sm_scale: f32,
+    d_c: usize,
+    d_r: usize,
+) -> AmlaHead {
+    let num_blocks = cache.n.div_ceil(BLOCK_N);
+    let mut s_blk = vec![0.0f32; BLOCK_N];
+    let mut blocks: Vec<BlockP> = Vec::with_capacity(num_blocks);
+    let mut m = NEG_INF; // integer-grid running max of t = s·log2(e)
+    let mut l = 0.0f32;
+    let mut sp = 1.0f32;
+    for b in 0..num_blocks {
+        let start = b * BLOCK_N;
+        let valid = length.saturating_sub(start).min(BLOCK_N);
+        if valid == 0 {
+            break;
+        }
+        let mut m_cur = NEG_INF;
+        for j in 0..valid {
+            let row = start + j;
+            let kc = &cache.k_c_q[row * d_c..(row + 1) * d_c];
+            let kr = &cache.k_r_al[row * d_r..(row + 1) * d_r];
+            let mut s = 0.0f32;
+            for i in 0..d_c {
+                s += qc[i] * kc[i];
+            }
+            for i in 0..d_r {
+                s += qr[i] * kr[i];
+            }
+            // base-2 logit: t = s·sq·sk·sm·log2(e)
+            s_blk[j] = s * sq * cache.sigma_k[row] * sm_scale * std::f32::consts::LOG2_E;
+            m_cur = m_cur.max(s_blk[j]);
+        }
+        // running max snapped UP to the integer grid → exp2(m - m_new) of
+        // any later rescale is an exact power of two
+        let m_new = m.max(m_cur.ceil());
+        let mut l_cur = 0.0f32;
+        let mut et_max = 0.0f32;
+        let mut et = vec![0.0f32; valid];
+        for j in 0..valid {
+            let e = (s_blk[j] - m_new).exp2(); // e ∈ (0, 1]
+            l_cur += e;
+            et[j] = e * cache.sigma_k[start + j];
+            et_max = et_max.max(et[j]);
+        }
+        // sigma_P snapped to a power of two with 8 bits of headroom:
+        // codes et/sp ∈ (2^7, 2^8] ≤ 256 < 448 — never saturates.
+        let sp_cur = if et_max > 0.0 {
+            (et_max.log2().ceil() - 8.0).exp2().max(AMLA_SP_FLOOR)
+        } else {
+            AMLA_SP_FLOOR
+        };
+        let pq: Vec<f32> = et.iter().map(|&x| e4m3_round(x / sp_cur)).collect();
+
+        // alpha = 2^(m - m_new) with both on the integer grid, and sp/sp_cur
+        // a ratio of powers of two: gamma is an EXACT power of two, so the
+        // accumulator rescale is a lossless exponent add.
+        let alpha = if m > NEG_INF / 2.0 { (m - m_new).exp2() } else { 0.0 };
+        let gamma = alpha * sp / sp_cur;
+        l = l * gamma + l_cur / sp_cur;
+        blocks.push(BlockP { start, valid, pq, gamma });
+        m = m_new;
+        sp = sp_cur;
+    }
+    AmlaHead { blocks, m, l, sp }
+}
+
+impl KernelVariant for Amla {
+    fn kind(&self) -> VariantKind {
+        VariantKind::Amla
+    }
+
+    fn pipeline(
+        &self,
+        shape: &Shape,
+        q_c_q: &[f32],
+        sigma_q: &[f32],
+        q_r_al: &[f32],
+        cache: &QuantCache,
+        length: usize,
+        sm_scale: f32,
+    ) -> PipelineOut {
+        let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+        assert!(length <= cache.n);
+        let mut o = vec![0.0f32; h * d_c];
+        let mut lse = vec![0.0f32; h];
+        for head in 0..h {
+            let qc = &q_c_q[head * d_c..(head + 1) * d_c];
+            let qr = &q_r_al[head * d_r..(head + 1) * d_r];
+            let state =
+                amla_head_blocks(qc, qr, sigma_q[head], cache, length, sm_scale, d_c, d_r);
+            let acc = &mut o[head * d_c..(head + 1) * d_c];
+            for blk in &state.blocks {
+                for a in acc.iter_mut() {
+                    *a *= blk.gamma;
+                }
+                accumulate_pv(acc, &blk.pq, cache, blk.start, blk.valid, d_c);
+            }
+            let safe_l = if state.l > 0.0 { state.l } else { 1.0 };
+            for a in acc.iter_mut() {
+                *a /= safe_l;
+            }
+            // lse in base e: m·ln2 + ln(sp·l)
+            lse[head] = state.m * std::f32::consts::LN_2
+                + (state.sp * state.l).max(1e-37).ln();
+        }
+        PipelineOut { o, lse }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P-Cast: fixed-scale probability cast (arXiv 2606.06521)
+// ---------------------------------------------------------------------------
+
+/// P-Cast-style pipeline: the probability cast uses the static scale
+/// S = 2^8 (no per-block amax pass, no scale fusion); value scales are
+/// applied unfused in the PV stage.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PCast;
+
+impl KernelVariant for PCast {
+    fn kind(&self) -> VariantKind {
+        VariantKind::PCast
+    }
+
+    fn pipeline(
+        &self,
+        shape: &Shape,
+        q_c_q: &[f32],
+        sigma_q: &[f32],
+        q_r_al: &[f32],
+        cache: &QuantCache,
+        length: usize,
+        sm_scale: f32,
+    ) -> PipelineOut {
+        let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+        assert!(length <= cache.n);
+        let num_blocks = cache.n.div_ceil(BLOCK_N);
+        let mut o = vec![0.0f32; h * d_c];
+        let mut lse = vec![0.0f32; h];
+        let mut s_blk = vec![0.0f32; BLOCK_N];
+        for head in 0..h {
+            let qc = &q_c_q[head * d_c..(head + 1) * d_c];
+            let qr = &q_r_al[head * d_r..(head + 1) * d_r];
+            let sq = sigma_q[head];
+            let mut m = NEG_INF;
+            let mut l = 0.0f32;
+            let acc = &mut o[head * d_c..(head + 1) * d_c];
+            for b in 0..num_blocks {
+                let start = b * BLOCK_N;
+                let valid = length.saturating_sub(start).min(BLOCK_N);
+                if valid == 0 {
+                    break;
+                }
+                let mut m_cur = NEG_INF;
+                for j in 0..valid {
+                    let row = start + j;
+                    let kc = &cache.k_c_q[row * d_c..(row + 1) * d_c];
+                    let kr = &cache.k_r_al[row * d_r..(row + 1) * d_r];
+                    let mut s = 0.0f32;
+                    for i in 0..d_c {
+                        s += qc[i] * kc[i];
+                    }
+                    for i in 0..d_r {
+                        s += qr[i] * kr[i];
+                    }
+                    s_blk[j] = s * sq * cache.sigma_k[row] * sm_scale;
+                    m_cur = m_cur.max(s_blk[j]);
+                }
+                let m_new = m.max(m_cur);
+                let alpha = if m > NEG_INF / 2.0 { (m - m_new).exp() } else { 0.0 };
+                // accumulator rescale is alpha alone: the probability scale
+                // domain is fixed (S = 2^8), only the max shifts.
+                for a in acc.iter_mut() {
+                    *a *= alpha;
+                }
+                let mut l_cur = 0.0f32;
+                for j in 0..valid {
+                    let row = start + j;
+                    let e = (s_blk[j] - m_new).exp(); // e ∈ (0, 1]
+                    l_cur += e;
+                    // static-scale cast: codes ≤ 256 < 448, no amax pass
+                    let p = e4m3_round(e * PCAST_P_SCALE);
+                    if p == 0.0 {
+                        continue;
+                    }
+                    // value scale applied unfused in the PV accumulation
+                    let w = p * cache.sigma_k[row];
+                    let kc = &cache.k_c_q[row * d_c..(row + 1) * d_c];
+                    for i in 0..d_c {
+                        acc[i] += w * kc[i];
+                    }
+                }
+                l = l * alpha + l_cur;
+                m = m_new;
+            }
+            let safe_l = if l > 0.0 { l } else { 1.0 };
+            for a in acc.iter_mut() {
+                *a /= PCAST_P_SCALE * safe_l;
+            }
+            lse[head] = m + l.max(1e-37).ln();
+        }
+        PipelineOut { o, lse }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mla::ref_attn;
+    use crate::mla::{decode, Cache, Shape};
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    fn case(seed: u64, n: usize, shape: &Shape) -> (Query, Cache) {
+        let mut rng = Rng::new(seed);
+        let q = Query {
+            q_c: rng.normal_vec(shape.heads * shape.d_c, 1.0),
+            q_r: rng.normal_vec(shape.heads * shape.d_r, 0.3),
+        };
+        let mut cache = Cache::new(n, shape);
+        cache.k_c = rng.normal_vec(n * shape.d_c, 2.0);
+        cache.k_r = rng.normal_vec(n * shape.d_r, 8.0);
+        (q, cache)
+    }
+
+    #[test]
+    fn kind_roundtrips_through_parse() {
+        for kind in VariantKind::ALL {
+            assert_eq!(VariantKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.instance().kind(), kind);
+        }
+        assert_eq!(VariantKind::parse("flashmla"), None);
+    }
+
+    #[test]
+    fn every_variant_matches_reference_within_quant_error() {
+        let shape = Shape { heads: 4, d_c: 64, d_r: 16 };
+        // per-variant tolerance: SnapMLA's dynamic scale is tightest; AMLA's
+        // pow2-snapped scale and P-Cast's static scale give up a little
+        // mantissa headroom but must stay in the same error regime.
+        let tol = [
+            (VariantKind::SnapMla, 0.09),
+            (VariantKind::Amla, 0.12),
+            (VariantKind::PCast, 0.15),
+        ];
+        for seed in [1, 2, 3] {
+            let (q, cache) = case(seed, 256, &shape);
+            let sm = shape.sm_scale();
+            let want = ref_attn::attention(&shape, &q, &cache, 200, sm);
+            for (kind, max_rel) in tol {
+                let got = decode(kind, &shape, &q, &cache.k_c, &cache.k_r, 200, sm);
+                let rel = rel_l2(&got.o, &want.o);
+                assert!(rel < max_rel, "{kind:?} seed {seed}: rel {rel}");
+                for h in 0..shape.heads {
+                    assert!(
+                        (got.lse[h] - want.lse[h]).abs() < 0.06,
+                        "{kind:?} lse head {h}: {} vs {}",
+                        got.lse[h],
+                        want.lse[h]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn variants_match_over_block_boundaries() {
+        let shape = Shape { heads: 2, d_c: 32, d_r: 8 };
+        let (q, cache) = case(6, 192, &shape);
+        let sm = shape.sm_scale();
+        for length in [1, 63, 64, 65, 128, 191] {
+            let want = ref_attn::attention(&shape, &q, &cache, length, sm);
+            for kind in VariantKind::ALL {
+                let got = decode(kind, &shape, &q, &cache.k_c, &cache.k_r, length, sm);
+                let rel = rel_l2(&got.o, &want.o);
+                assert!(rel < 0.15, "{kind:?} length {length}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn variants_mask_the_tail() {
+        let shape = Shape { heads: 2, d_c: 32, d_r: 8 };
+        let (q, mut cache) = case(5, 192, &shape);
+        let sm = shape.sm_scale();
+        for kind in VariantKind::ALL {
+            let a = decode(kind, &shape, &q, &cache.k_c, &cache.k_r, 100, sm);
+            for j in 100..192 {
+                for i in 0..32 {
+                    cache.k_c[j * 32 + i] = 1e5;
+                }
+            }
+            let b = decode(kind, &shape, &q, &cache.k_c, &cache.k_r, 100, sm);
+            assert_eq!(a.o, b.o, "{kind:?}");
+            for j in 100..192 {
+                for i in 0..32 {
+                    cache.k_c[j * 32 + i] = 0.0;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn amla_gammas_are_exact_powers_of_two() {
+        let shape = Shape { heads: 2, d_c: 32, d_r: 8 };
+        for seed in [1u64, 7, 42] {
+            let (q, cache) = case(seed, 256, &shape);
+            let amla = Amla;
+            let qcache = amla.build_cache(&shape, &cache.k_c, &cache.k_r, 256);
+            let qq = amla.quantize_query(&shape, &q);
+            for head in 0..shape.heads {
+                let st = amla_head_blocks(
+                    &qq.q_c_q[head * 32..(head + 1) * 32],
+                    &qq.q_r_al[head * 8..(head + 1) * 8],
+                    qq.sigma_q[head],
+                    &qcache,
+                    256,
+                    shape.sm_scale(),
+                    32,
+                    8,
+                );
+                assert!(!st.blocks.is_empty());
+                for blk in &st.blocks {
+                    let g = blk.gamma;
+                    // exact power of two ⇔ zero mantissa bits (0.0 for the
+                    // first block, whose alpha is 0)
+                    assert!(
+                        g == 0.0 || (g.to_bits() & 0x007F_FFFF) == 0,
+                        "seed {seed} head {head}: gamma {g} not a power of two"
+                    );
+                }
+                // the power-of-two sigma_P never saturates the FP8 grid
+                for blk in &st.blocks {
+                    for &p in &blk.pq {
+                        assert!(p <= 256.0, "code {p} above the 2^8 headroom");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pcast_codes_never_saturate() {
+        // block-local e ≤ 1 ⇒ codes ≤ 256 < 448 by construction: the static
+        // scale cannot saturate no matter the value distribution.
+        let shape = Shape { heads: 1, d_c: 32, d_r: 8 };
+        let mut rng = Rng::new(17);
+        let n = 256;
+        let mut k_c = rng.normal_vec(n * 32, 1.0);
+        for i in 0..32 {
+            k_c[i] *= 1e5; // violent sink token
+        }
+        let k_r = rng.normal_vec(n * 8, 2.0);
+        let q = Query { q_c: rng.normal_vec(32, 1.0), q_r: rng.normal_vec(8, 0.3) };
+        let out = decode(VariantKind::PCast, &shape, &q, &k_c, &k_r, n, shape.sm_scale());
+        assert!(out.o.iter().all(|x| x.is_finite()));
+        assert!(out.lse.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cache_policy_backs_every_quant_config() {
+        use crate::mla::quant_configs::QuantConfig;
+        use crate::mla::synth;
+        let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+        let mut rng = Rng::new(5);
+        let cache = Cache {
+            k_c: synth::content(&mut rng, 256, shape.d_c),
+            k_r: synth::rope(&mut rng, 256, shape.d_r),
+            n: 256,
+        };
+        for (cfg, policy) in [
+            (QuantConfig::SnapMla, CachePolicy::PerTokenRopeAware),
+            (QuantConfig::ConfigA, CachePolicy::PerTokenCoupled),
+            (QuantConfig::ConfigB, CachePolicy::PerTensorStatic),
+            (QuantConfig::ConfigC, CachePolicy::PerTensorDynamic),
+            (QuantConfig::ConfigD, CachePolicy::PerBlock),
+        ] {
+            assert_eq!(cfg.cache_policy(), policy);
+            let a = cfg.apply(&shape, &cache);
+            let b = policy.apply(&shape, &cache);
+            assert_eq!(a.k_c, b.k_c, "{cfg:?}");
+            assert_eq!(a.k_r, b.k_r, "{cfg:?}");
+        }
+    }
+
+    // ---- Appendix-E PV ordering study (moved from mla::pipeline) ---------
+
+    #[test]
+    fn rollback_agrees_on_benign_data() {
+        // Rollback is algebraically exact; on benign data (f32 headroom) it
+        // coincides with the monotonic order. Rescale-P does NOT in general:
+        // requantizing P0 saturates whenever the domain ratio exceeds 1 —
+        // the "irreversible precision loss" of Problem 1 is present even in
+        // ordinary operation, which is exactly why the paper rejects it.
+        let shape = Shape { heads: 2, d_c: 32, d_r: 8 };
+        let (q, cache) = case(4, 256, &shape);
+        let sm = shape.sm_scale();
+        let dec = |order| {
+            SnapMla::with_order(order).decode(&shape, &q, &cache.k_c, &cache.k_r, 256, sm)
+        };
+        let mono = dec(PvOrder::Monotonic);
+        let roll = dec(PvOrder::InvertedRollback);
+        let rel = rel_l2(&roll.o, &mono.o);
+        assert!(rel < 0.02, "rollback diverged on benign data: {rel}");
+        let resc = dec(PvOrder::InvertedRescaleP);
+        assert!(resc.o.iter().all(|x| x.is_finite()));
+    }
+
+    fn adversarial_case(seed: u64, n: usize, shape: &Shape) -> (Query, Vec<f32>, Vec<f32>) {
+        // Problem-1 trigger: within each block PAIR, the FIRST block holds a
+        // sink token (huge value magnitude → huge sigma_V → huge sigma_P)
+        // that dominates the attention output, while the second block is
+        // weak (tiny values → tiny sigma_P). The domain ratio r = sp0/sp1 is
+        // then >> 1, and requantizing the already-FP8 P0 into P1's domain
+        // SATURATES its dominant entries at 448 — the "large rescaling
+        // factor disrupts its value distribution" failure of App. E. Logits
+        // are kept moderate and value-independent (tiny q_c, rope-driven) so
+        // probability mass is spread and the effect is purely scale-driven.
+        let mut rng = Rng::new(seed);
+        let mut k_c = rng.normal_vec(n * shape.d_c, 1e-2);
+        let k_r = rng.normal_vec(n * shape.d_r, 1.0);
+        for b in (0..(n / BLOCK_N)).step_by(2) {
+            let sink = b * BLOCK_N; // first token of each even block
+            for i in 0..shape.d_c {
+                k_c[sink * shape.d_c + i] *= 1e6; // values ~1e4
+            }
+        }
+        let q = Query {
+            q_c: rng.normal_vec(shape.heads * shape.d_c, 1e-3),
+            q_r: rng.normal_vec(shape.heads * shape.d_r, 0.6),
+        };
+        (q, k_c, k_r)
+    }
+
+    #[test]
+    fn inverted_rescale_p_degrades_on_adversarial_scales() {
+        let shape = Shape { heads: 1, d_c: 32, d_r: 8 };
+        let n = 256;
+        let (q, k_c, k_r) = adversarial_case(9, n, &shape);
+        let sm = shape.sm_scale();
+        let exact = {
+            let cache = Cache { k_c: k_c.clone(), k_r: k_r.clone(), n };
+            ref_attn::attention(&shape, &q, &cache, n, sm)
+        };
+        let dec = |order| SnapMla::with_order(order).decode(&shape, &q, &k_c, &k_r, n, sm);
+        let mono = dec(PvOrder::Monotonic);
+        let resc = dec(PvOrder::InvertedRescaleP);
+        let e_mono = rel_l2(&mono.o, &exact.o);
+        let e_resc = rel_l2(&resc.o, &exact.o);
+        assert!(
+            e_resc > 2.0 * e_mono,
+            "rescale-P should degrade: mono {e_mono} vs rescale {e_resc}"
+        );
+    }
+
+    #[test]
+    fn monotonic_stable_on_adversarial_scales() {
+        let shape = Shape { heads: 1, d_c: 32, d_r: 8 };
+        let n = 256;
+        let (q, k_c, k_r) = adversarial_case(11, n, &shape);
+        let sm = shape.sm_scale();
+        let exact = {
+            let cache = Cache { k_c: k_c.clone(), k_r: k_r.clone(), n };
+            ref_attn::attention(&shape, &q, &cache, n, sm)
+        };
+        let mono = decode(VariantKind::SnapMla, &shape, &q, &k_c, &k_r, n, sm);
+        let rel = rel_l2(&mono.o, &exact.o);
+        assert!(rel < 0.1, "monotonic should stay stable: {rel}");
+        assert!(mono.o.iter().all(|x| x.is_finite()));
+    }
+}

@@ -83,7 +83,9 @@ impl ModelSpec {
     /// KV-cache bytes per token (all layers) under a pipeline.
     pub fn kv_bytes_per_token(&self, kind: KernelKind) -> f64 {
         let per_layer = match kind {
-            KernelKind::SnapMlaFp8 => (self.d_c + 2 * self.d_r + 4) as f64,
+            KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => {
+                (self.d_c + 2 * self.d_r + 4) as f64
+            }
             KernelKind::FlashMlaBf16 => (2 * (self.d_c + self.d_r)) as f64,
         };
         per_layer * self.n_layers as f64
@@ -191,7 +193,8 @@ pub fn decode_step_s(
     // --- dataflow launches (§3.3): BF16 path needs separate quant-free
     // copies; SnapMLA fuses token-prep+append+quant into the step ----------
     let launches_per_layer = match kind {
-        KernelKind::SnapMlaFp8 => 2.0,  // fused Q-quant + fused K-append
+        // fused Q-quant + fused K-append (all variants share the dataflow)
+        KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => 2.0,
         KernelKind::FlashMlaBf16 => 3.0, // proj copy + rope copy + append
     };
     let launches = launches_per_layer * model.n_layers as f64 * gpu.launch_s;
@@ -244,7 +247,7 @@ pub fn prefill_step_s(
     let t = tokens as f64;
     let weights = expert_stream_read(model, t) / cfg.gpus() as f64 / gpu.hbm_bw;
     let peak_tflops = match kind {
-        KernelKind::SnapMlaFp8 => gpu.fp8_tflops,
+        KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => gpu.fp8_tflops,
         KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
     };
     let gemm_flops = 2.0 * model.active_params * t / cfg.gpus() as f64;
@@ -277,7 +280,7 @@ pub fn mixed_step_s(
     }
     let c = chunk_tokens as f64;
     let peak_tflops = match kind {
-        KernelKind::SnapMlaFp8 => gpu.fp8_tflops,
+        KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => gpu.fp8_tflops,
         KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
     };
     let eff = peak_tflops * 1e12 * gpu.peak_util;

@@ -16,6 +16,9 @@ pub struct GpuSpec {
     pub launch_s: f64,
     /// achievable fraction of peak for a well-tuned kernel (App. I: ~85%)
     pub peak_util: f64,
+    /// f32 CUDA-core (vector unit) peak, TFLOPS — prices the softmax /
+    /// rescale vector stages that the AMLA and P-Cast variants shrink
+    pub vec_f32_tflops: f64,
 }
 
 impl GpuSpec {
@@ -29,6 +32,7 @@ impl GpuSpec {
             nvlink_bw: 450.0e9,
             launch_s: 4.0e-6,
             peak_util: 0.88,
+            vec_f32_tflops: 44.0,
         }
     }
 

@@ -1,13 +1,34 @@
 //! Kernel-level timing model for the MLA decode-attention kernels
-//! (SnapMLA FP8 vs FlashMLA BF16), backing Figs. 6 and 7.
+//! (SnapMLA FP8 and its AMLA / P-Cast variants vs FlashMLA BF16), backing
+//! Figs. 6 and 7 and the kernel-variant frontier bench.
+//!
+//! The three FP8 variants share the SnapMLA cache layout and tensor-core
+//! schedule, so they price identically on the GEMM and HBM axes; they differ
+//! only in the *vector* (CUDA-core) work interleaved with the MMA pipeline.
+//! That difference is modeled as a per-variant saving subtracted from the
+//! compute term and clamped to the memory floor — SnapMLA's own pricing is
+//! untouched (the committed fig6/fig7/serve baselines pin it).
 
 use super::gpu::GpuSpec;
+
+/// Accumulator-rescale vector ops per (row, block, d_c lane) that AMLA's
+/// exponent-ADD removes: the FMA-pipeline multiply + its dependency stall.
+const AMLA_RESCALE_STALL_OPS: f64 = 3.0;
+/// Per (row, token) vector ops that P-Cast's static P scale removes: the
+/// block amax reduction and dynamic-scale divide of the P quantizer.
+const PCAST_PSCALE_OPS: f64 = 4.0;
 
 /// Which kernel (determines compute rate and KV-cache byte width).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum KernelKind {
     /// SnapMLA FP8: E4M3 content + bf16 RoPE cache, 17/9 effective peak.
     SnapMlaFp8,
+    /// AMLA on the SnapMLA cache: integer-grid running max, exponent-ADD
+    /// accumulator rescale (arXiv 2509.25224).
+    AmlaFp8,
+    /// P-Cast on the SnapMLA cache: static P scale S = 2^8, no per-block
+    /// amax pass (arXiv 2606.06521).
+    PCastFp8,
     /// FlashMLA BF16 baseline.
     FlashMlaBf16,
 }
@@ -45,8 +66,10 @@ impl KernelShape {
     /// O out are negligible at decode shapes but included.
     pub fn bytes(&self, kind: KernelKind) -> f64 {
         let per_token = match kind {
-            // u8 content + bf16 rope + f32 scale
-            KernelKind::SnapMlaFp8 => self.d_c + 2 * self.d_r + 4,
+            // u8 content + bf16 rope + f32 scale (one layout for all variants)
+            KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => {
+                self.d_c + 2 * self.d_r + 4
+            }
             // bf16 content + bf16 rope
             KernelKind::FlashMlaBf16 => 2 * (self.d_c + self.d_r),
         } as f64;
@@ -76,16 +99,38 @@ fn ramp(seq: usize) -> f64 {
     n / (n + 400.0)
 }
 
+/// Vector-stage time the variant saves relative to SnapMLA's fully dynamic
+/// softmax pipeline (zero for SnapMLA itself and the BF16 baseline).
+fn vector_stage_saving_s(gpu: &GpuSpec, shape: &KernelShape, kind: KernelKind) -> f64 {
+    let rows = (shape.batch * shape.heads * shape.t_q) as f64;
+    match kind {
+        // the accumulator rescale runs once per 64-token block over d_c lanes
+        KernelKind::AmlaFp8 => {
+            let blocks = shape.seq.div_ceil(64) as f64;
+            rows * blocks * shape.d_c as f64 * AMLA_RESCALE_STALL_OPS
+                / (gpu.vec_f32_tflops * 1e12)
+        }
+        // the P-scale amax pass touches every probability once
+        KernelKind::PCastFp8 => {
+            rows * shape.seq as f64 * PCAST_PSCALE_OPS / (gpu.vec_f32_tflops * 1e12)
+        }
+        KernelKind::SnapMlaFp8 | KernelKind::FlashMlaBf16 => 0.0,
+    }
+}
+
 /// Predicted execution time (seconds) of one kernel invocation.
 pub fn kernel_time_s(gpu: &GpuSpec, shape: &KernelShape, kind: KernelKind) -> f64 {
     let peak_tflops = match kind {
-        KernelKind::SnapMlaFp8 => gpu.snapmla_effective_peak_tflops(),
+        KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => {
+            gpu.snapmla_effective_peak_tflops()
+        }
         KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
     };
     let eff = gpu.peak_util * row_tile_util(shape.heads, shape.t_q) * ramp(shape.seq);
     let compute = shape.flops() / (peak_tflops * 1e12 * eff);
     let memory = shape.bytes(kind) / gpu.hbm_bw;
-    compute.max(memory) + gpu.launch_s
+    let saved = vector_stage_saving_s(gpu, shape, kind);
+    (compute - saved).max(memory) + gpu.launch_s
 }
 
 /// Achieved TFLOPS under the model (what Figs. 6/7 plot).
@@ -172,6 +217,54 @@ mod tests {
             kernel_tflops(&g, &KernelShape::paper(8, 64, 1, n), KernelKind::SnapMlaFp8)
         };
         assert!(tf(1024) < tf(4096) && tf(4096) < tf(16384));
+    }
+
+    #[test]
+    fn fp8_variants_share_the_cache_layout() {
+        let s = KernelShape::paper(8, 128, 1, 65536);
+        let b = s.bytes(KernelKind::SnapMlaFp8);
+        assert_eq!(s.bytes(KernelKind::AmlaFp8), b);
+        assert_eq!(s.bytes(KernelKind::PCastFp8), b);
+    }
+
+    #[test]
+    fn variant_frontier_ordering() {
+        // AMLA saves the most vector work, P-Cast a little, SnapMLA none —
+        // and all three beat the BF16 baseline at the paper's decode shape.
+        let g = gpu();
+        let s = KernelShape::paper(8, 128, 1, 65536);
+        let t = |k: KernelKind| kernel_time_s(&g, &s, k);
+        assert!(t(KernelKind::AmlaFp8) < t(KernelKind::PCastFp8));
+        assert!(t(KernelKind::PCastFp8) < t(KernelKind::SnapMlaFp8));
+        assert!(t(KernelKind::SnapMlaFp8) < t(KernelKind::FlashMlaBf16));
+    }
+
+    #[test]
+    fn variant_savings_are_modest() {
+        // the vector stages are a single-digit percentage of kernel time;
+        // the model must not invent a >15% win out of them
+        let g = gpu();
+        for &n in &[4096usize, 16384, 65536, 131072] {
+            let s = KernelShape::paper(8, 128, 1, n);
+            let t_snap = kernel_time_s(&g, &s, KernelKind::SnapMlaFp8);
+            for k in [KernelKind::AmlaFp8, KernelKind::PCastFp8] {
+                let t = kernel_time_s(&g, &s, k);
+                assert!(t > 0.85 * t_snap, "{k:?} at n={n}: {t} vs {t_snap}");
+                assert!(t < t_snap, "{k:?} at n={n}: {t} vs {t_snap}");
+            }
+        }
+    }
+
+    #[test]
+    fn savings_never_break_the_memory_floor() {
+        let g = gpu();
+        for &(b, h, n) in &[(1usize, 1usize, 4096usize), (1, 16, 131072), (32, 128, 65536)] {
+            let s = KernelShape::paper(b, h, 1, n);
+            for k in [KernelKind::AmlaFp8, KernelKind::PCastFp8] {
+                let floor = s.bytes(k) / g.hbm_bw + g.launch_s;
+                assert!(kernel_time_s(&g, &s, k) >= floor);
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! Two implementations ship:
 //! * [`super::sim::SimBackend`] — pure-Rust reference execution through
-//!   `mla::ref_attn` / `mla::pipeline` plus the bit-exact `fp8` quantizers.
+//!   `mla::ref_attn` / `mla::variant` plus the bit-exact `fp8` quantizers.
 //!   No external dependencies; the default build is fully offline.
 //! * `super::client::PjrtBackend` (cargo feature `pjrt`) — the PJRT path
 //!   that compiles and runs the AOT HLO artifacts via the `xla` crate.

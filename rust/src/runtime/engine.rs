@@ -19,6 +19,7 @@ use super::sim_model::SimSpec;
 use super::weights::Weights;
 use crate::anyhow;
 use crate::kvcache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
+use crate::mla::VariantKind;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
@@ -101,10 +102,21 @@ impl ModelEngine {
     /// The offline engine: pure-Rust [`SimBackend`] over the deterministic
     /// hand-constructed induction model. Needs no artifacts, no deps.
     pub fn sim(mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        ModelEngine::sim_with_kernel(mode, VariantKind::SnapMla)
+    }
+
+    /// The sim engine with an explicit decode-kernel variant for the FP8
+    /// attention path (the CLI's `--kernel snapmla|amla|pcast`).
+    pub fn sim_with_kernel(mode: CacheMode, variant: VariantKind) -> anyhow::Result<ModelEngine> {
         let spec = SimSpec::small();
         let manifest = sim_manifest(&spec);
         let weights = sim_weights(&spec);
-        ModelEngine::with_backend(Box::new(SimBackend::new(spec)), manifest, &weights, mode)
+        ModelEngine::with_backend(
+            Box::new(SimBackend::with_variant(spec, variant)),
+            manifest,
+            &weights,
+            mode,
+        )
     }
 
     /// Load manifest + weights from an AOT artifacts dir and upload weights
@@ -120,13 +132,28 @@ impl ModelEngine {
     /// Backend auto-selection: the PJRT path when the `pjrt` feature is on
     /// AND `artifacts_dir` holds compiled artifacts; the sim otherwise.
     pub fn auto(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
+        ModelEngine::auto_with_kernel(artifacts_dir, mode, VariantKind::SnapMla)
+    }
+
+    /// [`ModelEngine::auto`] with an explicit decode-kernel variant. The
+    /// PJRT path compiles only the SnapMLA kernel, so a non-default variant
+    /// there is rejected rather than silently ignored.
+    pub fn auto_with_kernel(
+        artifacts_dir: &Path,
+        mode: CacheMode,
+        variant: VariantKind,
+    ) -> anyhow::Result<ModelEngine> {
         #[cfg(feature = "pjrt")]
         if artifacts_dir.join("manifest.json").exists() {
+            anyhow::ensure!(
+                variant == VariantKind::SnapMla,
+                "the PJRT artifact path supports only --kernel snapmla"
+            );
             return ModelEngine::load(artifacts_dir, mode);
         }
         #[cfg(not(feature = "pjrt"))]
         let _ = artifacts_dir;
-        ModelEngine::sim(mode)
+        ModelEngine::sim_with_kernel(mode, variant)
     }
 
     /// The execution backend (kernel benches stage their own buffers).
@@ -707,6 +734,26 @@ mod tests {
         assert_eq!(out.decode_logits[0], pure.logits[0]);
         assert_eq!(eng.stats.mixed_steps, 2);
         assert_eq!(eng.stats.chunk_tokens, 7);
+    }
+
+    #[test]
+    fn variant_engines_preserve_induction_semantics() {
+        // the hand-constructed circuit's logit margins (>2 nats) dominate
+        // every variant's quantization noise, so greedy decode agrees
+        for variant in VariantKind::ALL {
+            let mut eng = ModelEngine::sim_with_kernel(CacheMode::Fp8, variant).unwrap();
+            let mut cache = PagedKvCache::new(eng.cache_config(8));
+            cache.register(1);
+            eng.prefill(&mut cache, &[(1, vec![1, 70, 71, 70])]).unwrap();
+            let r = eng.decode(&mut cache, &[(1, 71)]).unwrap();
+            let best = r.logits[0]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(best, 70, "{variant:?}: induction should predict the successor");
+        }
     }
 
     #[test]

@@ -2,11 +2,12 @@
 //!
 //! Implements [`super::backend::ExecBackend`] entirely in safe, dependency-
 //! free Rust: decode/prefill steps run the reference MLA math
-//! (`mla::ref_attn` for BF16, the Algorithm-1 `mla::pipeline` for FP8) over
-//! the engine's gathered paged-cache views, with the bit-exact `fp8`
-//! quantizers producing the new cache entries; kernel artifacts execute the
-//! same paper-shape math the Pallas kernels implement. Everything is
-//! deterministic via `util::rng`, so serving runs reproduce exactly.
+//! (`mla::ref_attn` for BF16, the selected `mla::variant` decode pipeline
+//! for FP8) over the engine's gathered paged-cache views, with the bit-exact
+//! `fp8` quantizers producing the new cache entries; kernel artifacts
+//! execute the same paper-shape math the Pallas kernels implement.
+//! Everything is deterministic via `util::rng`, so serving runs reproduce
+//! exactly.
 //!
 //! The backend interprets the same artifact names, bucket shapes and
 //! positional calling convention as the AOT HLO artifacts, so `ModelEngine`
@@ -18,8 +19,8 @@ use super::sim_model::{self, DecodeCache, SimParams, SimSpec};
 use super::weights::Weights;
 use crate::anyhow;
 use crate::fp8::bf16_round;
-use crate::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
 use crate::mla::ref_attn::attention_with_values;
+use crate::mla::variant::{QuantCache, VariantKind};
 use crate::mla::{Query, Shape};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -115,7 +116,7 @@ pub fn sim_manifest(spec: &SimSpec) -> Manifest {
             );
         }
     }
-    for kernel in ["snapmla", "flashmla"] {
+    for kernel in ["snapmla", "amla", "pcast", "flashmla"] {
         for (heads, t_q, seq) in kernel_sweep() {
             let name = format!("kernel_{kernel}_h{heads}_t{t_q}_n{seq}");
             artifacts.insert(
@@ -155,6 +156,9 @@ struct SimExec {
 /// Pure-Rust execution backend (no device, no external deps).
 pub struct SimBackend {
     spec: SimSpec,
+    /// Decode-kernel variant used by the model's FP8 attention path
+    /// (kernel artifacts name their own variant and ignore this).
+    variant: VariantKind,
     bufs: Slots<SimBuffer>,
     execs: Vec<SimExec>,
 }
@@ -167,7 +171,12 @@ impl Default for SimBackend {
 
 impl SimBackend {
     pub fn new(spec: SimSpec) -> SimBackend {
-        SimBackend { spec, bufs: Slots::new(), execs: Vec::new() }
+        SimBackend::with_variant(spec, VariantKind::SnapMla)
+    }
+
+    /// A backend whose FP8 model path runs `variant`'s decode pipeline.
+    pub fn with_variant(spec: SimSpec, variant: VariantKind) -> SimBackend {
+        SimBackend { spec, variant, bufs: Slots::new(), execs: Vec::new() }
     }
 
     /// Live buffer count (leak checks in tests).
@@ -272,6 +281,7 @@ impl SimBackend {
                 &params,
                 self.spec.rope_base,
                 fp8,
+                self.variant,
                 tok[b],
                 p,
                 &mut cache,
@@ -425,6 +435,7 @@ impl SimBackend {
                     &params,
                     self.spec.rope_base,
                     fp8,
+                    self.variant,
                     tok[b * cc + k],
                     start + k,
                     &mut cache,
@@ -450,10 +461,11 @@ impl SimBackend {
         Ok(outs)
     }
 
-    /// SnapMLA kernel artifact: the FP8 decode-attention pipeline on
-    /// paper-shape operands (already quantized/aligned by the caller).
-    fn exec_kernel_snapmla(&self, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(args.len() == 7, "snapmla kernel wants 7 args");
+    /// FP8 kernel artifact: `kind`'s decode-attention pipeline on paper-shape
+    /// operands (already quantized/aligned by the caller). All FP8 variants
+    /// share the 7-arg calling convention — they consume the same cache.
+    fn exec_kernel_fp8(&self, kind: VariantKind, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(args.len() == 7, "fp8 kernel wants 7 args");
         let (q_c, qd) = self.f32_buf(args[0])?;
         let (q_r, qrd) = self.f32_buf(args[1])?;
         let (sq, _) = self.f32_buf(args[2])?;
@@ -461,7 +473,7 @@ impl SimBackend {
         let (k_r, _) = self.f32_buf(args[4])?;
         let (sk, _) = self.f32_buf(args[5])?;
         let (len, _) = self.i32_buf(args[6])?;
-        anyhow::ensure!(qd.len() == 3 && qrd.len() == 3, "snapmla kernel: bad query dims");
+        anyhow::ensure!(qd.len() == 3 && qrd.len() == 3, "fp8 kernel: bad query dims");
         let (t_q, heads, d_c) = (qd[0], qd[1], qd[2]);
         let d_r = qrd[2];
         let n = k_c.len() / d_c;
@@ -471,10 +483,11 @@ impl SimBackend {
         let cache =
             QuantCache { k_c_q: k_c.to_vec(), sigma_k: sk.to_vec(), k_r_al: k_r.to_vec(), n };
 
+        let v = kind.instance();
         let mut o = Vec::with_capacity(t_q * heads * d_c);
         let mut lse = Vec::with_capacity(t_q * heads);
         for ti in 0..t_q {
-            let out = snapmla_pipeline(
+            let out = v.pipeline(
                 &shape,
                 &q_c[ti * heads * d_c..(ti + 1) * heads * d_c],
                 &sq[ti * heads..(ti + 1) * heads],
@@ -482,7 +495,6 @@ impl SimBackend {
                 &cache,
                 length,
                 sm,
-                PvOrder::Monotonic,
             );
             o.extend_from_slice(&out.o);
             lse.extend_from_slice(&out.lse);
@@ -577,9 +589,11 @@ impl ExecBackend for SimBackend {
             ArtifactKind::Prefill => self.exec_prefill(se, args),
             ArtifactKind::Mixed => self.exec_mixed(se, args),
             ArtifactKind::Kernel => match se.info.mode.as_str() {
-                "snapmla" => self.exec_kernel_snapmla(args),
                 "flashmla" => self.exec_kernel_flashmla(args),
-                other => anyhow::bail!("sim: unknown kernel flavor {other}"),
+                other => match VariantKind::parse(other) {
+                    Some(kind) => self.exec_kernel_fp8(kind, args),
+                    None => anyhow::bail!("sim: unknown kernel flavor {other}"),
+                },
             },
         }
     }
@@ -603,10 +617,13 @@ mod tests {
         assert!(m.mixed_bucket("fp8", 9, 512).is_none());
         assert_eq!(m.max_context("fp8"), 2048);
         for h in [16, 32, 64, 128] {
-            assert!(m.kernel_artifact("snapmla", h, 1, 1024).is_some(), "h{h}");
-            assert!(m.kernel_artifact("flashmla", h, 1, 1024).is_some(), "h{h}");
+            for kernel in ["snapmla", "amla", "pcast", "flashmla"] {
+                assert!(m.kernel_artifact(kernel, h, 1, 1024).is_some(), "{kernel} h{h}");
+            }
         }
         assert!(m.kernel_artifact("snapmla", 64, 1, 8192).is_some());
+        assert!(m.kernel_artifact("amla", 64, 1, 8192).is_some());
+        assert!(m.kernel_artifact("pcast", 64, 1, 8192).is_some());
     }
 
     #[test]
@@ -644,21 +661,24 @@ mod tests {
 
         let sq = vec![0.01f32; heads];
         let sk = vec![0.02f32; n];
-        let exec = b.load_exec(&manifest, "kernel_snapmla_h16_t1_n1024").unwrap();
-        let args = vec![
-            b.upload_f32(&q_c, &[1, heads, d_c]).unwrap(),
-            b.upload_f32(&q_r, &[1, heads, d_r]).unwrap(),
-            b.upload_f32(&sq, &[1, heads, 1]).unwrap(),
-            b.upload_f32(&k_c, &[n, d_c]).unwrap(),
-            b.upload_f32(&k_r, &[n, d_r]).unwrap(),
-            b.upload_f32(&sk, &[n, 1]).unwrap(),
-            b.upload_i32(&[1000], &[1]).unwrap(),
-        ];
-        let outs = b.execute(exec, &args).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].len(), heads * d_c);
-        assert_eq!(outs[1].len(), heads);
-        assert!(outs[0].iter().all(|x| x.is_finite()));
+        for kernel in ["snapmla", "amla", "pcast"] {
+            let exec =
+                b.load_exec(&manifest, &format!("kernel_{kernel}_h16_t1_n1024")).unwrap();
+            let args = vec![
+                b.upload_f32(&q_c, &[1, heads, d_c]).unwrap(),
+                b.upload_f32(&q_r, &[1, heads, d_r]).unwrap(),
+                b.upload_f32(&sq, &[1, heads, 1]).unwrap(),
+                b.upload_f32(&k_c, &[n, d_c]).unwrap(),
+                b.upload_f32(&k_r, &[n, d_r]).unwrap(),
+                b.upload_f32(&sk, &[n, 1]).unwrap(),
+                b.upload_i32(&[1000], &[1]).unwrap(),
+            ];
+            let outs = b.execute(exec, &args).unwrap();
+            assert_eq!(outs.len(), 2, "{kernel}");
+            assert_eq!(outs[0].len(), heads * d_c, "{kernel}");
+            assert_eq!(outs[1].len(), heads, "{kernel}");
+            assert!(outs[0].iter().all(|x| x.is_finite()), "{kernel}");
+        }
 
         let exec = b.load_exec(&manifest, "kernel_flashmla_h16_t1_n1024").unwrap();
         let args = vec![

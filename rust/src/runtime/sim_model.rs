@@ -27,9 +27,9 @@ use super::manifest::ModelMeta;
 use super::weights::{Tensor, Weights};
 use crate::anyhow;
 use crate::fp8::{bf16_round, e4m3_round, per_token_scale};
-use crate::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
 use crate::mla::ref_attn::attention_with_values;
-use crate::mla::{pipeline, Query, Shape};
+use crate::mla::variant::{QuantCache, VariantKind};
+use crate::mla::{Query, Shape};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
@@ -364,11 +364,15 @@ pub struct DecodeItemOut {
 }
 
 /// One decode step for one sequence (one new token at absolute `pos`).
+/// In FP8 mode the attention runs `variant`'s decode pipeline; the cache
+/// append is the shared SnapMLA layout regardless of variant.
+#[allow(clippy::too_many_arguments)]
 pub fn decode_one(
     m: &ModelMeta,
     params: &SimParams,
     rope_base: f32,
     fp8: bool,
+    variant: VariantKind,
     token: i32,
     pos: usize,
     cache: &mut DecodeCache,
@@ -418,13 +422,13 @@ pub fn decode_one(
                 k_r_al: std::mem::take(rope_v),
                 n: ss,
             };
-            let (q_c_q, sigma_q, q_r_al) = pipeline::quantize_query(
+            let v = variant.instance();
+            let qq = v.quantize_query(
                 &shape,
                 &Query { q_c: std::mem::take(&mut q_c), q_r: std::mem::take(&mut q_r) },
             );
-            let out = snapmla_pipeline(
-                &shape, &q_c_q, &sigma_q, &q_r_al, &qcache, pos + 1, sm, PvOrder::Monotonic,
-            );
+            let out =
+                v.pipeline(&shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &qcache, pos + 1, sm);
             // hand the working buffers back
             *content = qcache.k_c_q;
             *sigma_v = qcache.sigma_k;

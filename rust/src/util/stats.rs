@@ -1,26 +1,25 @@
 //! Summary statistics for benchmark reporting (std-only substrate).
 
 /// Online accumulator + percentile support over a retained sample vector.
-#[derive(Clone, Debug, Default)]
-pub struct Summary {
-    xs: Vec<f64>,
-}
-
+///
 /// The canonical recorder type: every latency/throughput recorder in the
 /// serving stack (bench harness, `simulate`, `coordinator::metrics`) backs
 /// onto this — no bench or scenario keeps a private stats implementation.
-pub type Stats = Summary;
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    xs: Vec<f64>,
+}
 
-impl Summary {
+impl Stats {
     pub fn new() -> Self {
-        Summary { xs: Vec::new() }
+        Stats { xs: Vec::new() }
     }
 
-    // An inherent `from` (not the trait): callers read `Summary::from(&xs)`
+    // An inherent `from` (not the trait): callers read `Stats::from(&xs)`
     // at many bench sites; the trait form would force type annotations.
     #[allow(clippy::should_implement_trait)]
     pub fn from(xs: &[f64]) -> Self {
-        Summary { xs: xs.to_vec() }
+        Stats { xs: xs.to_vec() }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -143,8 +142,8 @@ mod tests {
     use super::*;
 
     #[test]
-    fn summary_basics() {
-        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0]);
+    fn stats_basics() {
+        let s = Stats::from(&[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(s.mean(), 2.5);
         assert_eq!(s.min(), 1.0);
         assert_eq!(s.max(), 4.0);
@@ -153,7 +152,7 @@ mod tests {
 
     #[test]
     fn percentiles() {
-        let s = Summary::from(&[10.0, 20.0, 30.0, 40.0, 50.0]);
+        let s = Stats::from(&[10.0, 20.0, 30.0, 40.0, 50.0]);
         assert_eq!(s.percentile(0.0), 10.0);
         assert_eq!(s.percentile(100.0), 50.0);
         assert_eq!(s.median(), 30.0);

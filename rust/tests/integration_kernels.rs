@@ -1,6 +1,7 @@
 //! Integration: the paper-shape kernel artifacts (d_c=512, d_r=64) execute
-//! through the backend abstraction, and the SnapMLA FP8 kernel matches the
-//! rust Algorithm-1 pipeline simulation on identical operands.
+//! through the backend abstraction, and each FP8 kernel flavor (snapmla,
+//! amla, pcast) matches its `mla::variant` pipeline simulation on identical
+//! operands.
 //!
 //! Under the offline `SimBackend` the kernel *is* the pipeline simulation,
 //! so agreement is exact; with `--features pjrt` + compiled artifacts the
@@ -8,8 +9,8 @@
 //! AOT path.
 
 use snapmla::kvcache::CacheMode;
-use snapmla::mla::pipeline::{snapmla_pipeline, PvOrder, QuantCache};
-use snapmla::mla::Shape;
+use snapmla::mla::variant::{snapmla_build_cache, snapmla_quantize_query, QuantCache};
+use snapmla::mla::{Shape, VariantKind};
 use snapmla::runtime::engine::KernelArgs;
 use snapmla::runtime::{BufId, ModelEngine};
 use snapmla::util::rng::Rng;
@@ -29,13 +30,16 @@ fn kernel_artifacts_execute_and_are_finite() {
     let mut eng = engine();
     let (d_c, d_r, n) = (512usize, 64usize, 1024usize);
     for heads in [16usize, 64] {
-        let name = format!("kernel_snapmla_h{heads}_t1_n{n}");
-        let args = KernelArgs::snapmla(eng.backend_mut(), 1, heads, d_c, d_r, n, 1000, 7).unwrap();
-        let outs = eng.execute_kernel(&name, &args.bufs).unwrap();
-        assert_eq!(outs.len(), 2);
-        assert_eq!(outs[0].len(), heads * d_c);
-        assert!(outs[0].iter().all(|x| x.is_finite()), "h{heads}");
-        args.release(eng.backend_mut());
+        for kind in VariantKind::ALL {
+            let name = format!("kernel_{}_h{heads}_t1_n{n}", kind.name());
+            let args =
+                KernelArgs::snapmla(eng.backend_mut(), 1, heads, d_c, d_r, n, 1000, 7).unwrap();
+            let outs = eng.execute_kernel(&name, &args.bufs).unwrap();
+            assert_eq!(outs.len(), 2);
+            assert_eq!(outs[0].len(), heads * d_c);
+            assert!(outs[0].iter().all(|x| x.is_finite()), "{} h{heads}", kind.name());
+            args.release(eng.backend_mut());
+        }
 
         let name = format!("kernel_flashmla_h{heads}_t1_n{n}");
         let args = KernelArgs::flashmla(eng.backend_mut(), 1, heads, d_c, d_r, n, 1000, 7).unwrap();
@@ -45,10 +49,11 @@ fn kernel_artifacts_execute_and_are_finite() {
     }
 }
 
-/// Upload the already-quantized SnapMLA operands and execute one kernel.
+/// Upload the already-quantized FP8 operands and execute one kernel flavor.
 /// `q` = (q_c_q, sigma_q, q_r_al).
-fn run_snapmla_kernel(
+fn run_fp8_kernel(
     eng: &mut ModelEngine,
+    kind: VariantKind,
     shape: &Shape,
     n: usize,
     q: (&[f32], &[f32], &[f32]),
@@ -68,7 +73,7 @@ fn run_snapmla_kernel(
         be.upload_i32(&[length as i32], &[1]).unwrap(),
     ];
     let outs = eng
-        .execute_kernel(&format!("kernel_snapmla_h{heads}_t1_n{n}"), &bufs)
+        .execute_kernel(&format!("kernel_{}_h{heads}_t1_n{n}", kind.name()), &bufs)
         .unwrap();
     for id in bufs {
         eng.backend_mut().free(id);
@@ -77,45 +82,53 @@ fn run_snapmla_kernel(
 }
 
 #[test]
-fn kernel_matches_rust_pipeline_sim() {
-    // Same quantized operands through (a) the kernel artifact via the
-    // backend and (b) the rust Algorithm-1 simulation — must agree closely.
+fn kernels_match_rust_pipeline_sim() {
+    // Same quantized operands through (a) each kernel artifact via the
+    // backend and (b) that variant's pipeline simulation — must agree
+    // closely, for every shipped flavor.
     let mut eng = engine();
     let (heads, d_c, d_r, n, length) = (16usize, 512usize, 64usize, 1024usize, 900usize);
     let shape = Shape { heads, d_c, d_r };
     let sm = shape.sm_scale();
 
-    // build operands already in SnapMLA form (E4M3-grid content, aligned rope)
+    // build operands already in SnapMLA form (E4M3-grid content, aligned
+    // rope) — the cache layout is shared by all variants
     let mut rng = Rng::new(42);
     let q_c_raw = rng.normal_vec(heads * d_c, 1.0);
     let q_r_raw = rng.normal_vec(heads * d_r, 0.3);
     let k_c_raw = rng.normal_vec(n * d_c, 1.5);
     let k_r_raw = rng.normal_vec(n * d_r, 5.0);
-    let cache: QuantCache =
-        snapmla::mla::pipeline::build_quant_cache(&shape, &k_c_raw, &k_r_raw, n);
-    let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(
-        &shape,
-        &snapmla::mla::Query { q_c: q_c_raw, q_r: q_r_raw },
-    );
+    let cache: QuantCache = snapmla_build_cache(&shape, &k_c_raw, &k_r_raw, n);
+    let qq =
+        snapmla_quantize_query(&shape, &snapmla::mla::Query { q_c: q_c_raw, q_r: q_r_raw });
 
-    // rust sim
-    let sim = snapmla_pipeline(
-        &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
-    );
+    for kind in VariantKind::ALL {
+        // rust sim of this variant's pipeline
+        let sim = kind
+            .instance()
+            .pipeline(&shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm);
 
-    // the kernel artifact with the same operands
-    let outs =
-        run_snapmla_kernel(&mut eng, &shape, n, (&q_c_q, &sigma_q, &q_r_al), &cache, length);
+        // the kernel artifact with the same operands
+        let outs = run_fp8_kernel(
+            &mut eng,
+            kind,
+            &shape,
+            n,
+            (&qq.q_c_q, &qq.sigma_q, &qq.q_r_al),
+            &cache,
+            length,
+        );
 
-    let rel = rel_l2(&outs[0], &sim.o);
-    assert!(rel < 5e-3, "kernel vs rust pipeline sim: rel {rel}");
-    // lse agreement
-    let lse_diff: f32 = outs[1]
-        .iter()
-        .zip(&sim.lse)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0, f32::max);
-    assert!(lse_diff < 2e-2, "lse diff {lse_diff}");
+        let rel = rel_l2(&outs[0], &sim.o);
+        assert!(rel < 5e-3, "{} kernel vs rust pipeline sim: rel {rel}", kind.name());
+        // lse agreement
+        let lse_diff: f32 = outs[1]
+            .iter()
+            .zip(&sim.lse)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(lse_diff < 2e-2, "{} lse diff {lse_diff}", kind.name());
+    }
 }
 
 #[test]
@@ -127,8 +140,8 @@ fn masking_parity_between_kernel_and_sim() {
     let mut rng = Rng::new(3);
     let k_c_raw = rng.normal_vec(n * d_c, 1.0);
     let k_r_raw = rng.normal_vec(n * d_r, 2.0);
-    let cache = snapmla::mla::pipeline::build_quant_cache(&shape, &k_c_raw, &k_r_raw, n);
-    let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(
+    let cache = snapmla_build_cache(&shape, &k_c_raw, &k_r_raw, n);
+    let qq = snapmla_quantize_query(
         &shape,
         &snapmla::mla::Query {
             q_c: rng.normal_vec(heads * d_c, 1.0),
@@ -136,12 +149,21 @@ fn masking_parity_between_kernel_and_sim() {
         },
     );
     for length in [1usize, 64, 65, 513] {
-        let sim = snapmla_pipeline(
-            &shape, &q_c_q, &sigma_q, &q_r_al, &cache, length, sm, PvOrder::Monotonic,
-        );
-        let outs =
-            run_snapmla_kernel(&mut eng, &shape, n, (&q_c_q, &sigma_q, &q_r_al), &cache, length);
-        let rel = rel_l2(&outs[0], &sim.o);
-        assert!(rel < 5e-3, "length {length}: rel {rel}");
+        for kind in VariantKind::ALL {
+            let sim = kind
+                .instance()
+                .pipeline(&shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm);
+            let outs = run_fp8_kernel(
+                &mut eng,
+                kind,
+                &shape,
+                n,
+                (&qq.q_c_q, &qq.sigma_q, &qq.q_r_al),
+                &cache,
+                length,
+            );
+            let rel = rel_l2(&outs[0], &sim.o);
+            assert!(rel < 5e-3, "{} length {length}: rel {rel}", kind.name());
+        }
     }
 }

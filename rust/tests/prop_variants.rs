@@ -1,0 +1,268 @@
+//! Property tests for the `mla::variant` API redesign.
+//!
+//! 1. The `SnapMla` variant reached through the new trait is BYTE-identical
+//!    to the legacy `mla::pipeline` free functions (the shims and the trait
+//!    share one implementation) — random shapes/seeds, both the one-shot
+//!    `mla::decode` path and the staged build/quantize/pipeline path, and
+//!    both engine cache modes.
+//! 2. P-Cast's online running-max rescale keeps sink-token streams bounded
+//!    where a naive per-row global-max probability scaling collapses to
+//!    zero output.
+
+use snapmla::fp8::e4m3_round;
+use snapmla::kvcache::{CacheMode, PagedKvCache};
+use snapmla::mla::variant::{snapmla_build_cache, snapmla_quantize_query, PvOrder, QuantCache};
+use snapmla::mla::{decode, ref_attn, Cache, Query, Shape, VariantKind};
+use snapmla::runtime::ModelEngine;
+use snapmla::util::rng::Rng;
+use snapmla::util::stats::rel_l2;
+
+const SHAPES: [(usize, usize, usize); 3] = [(2, 32, 8), (4, 64, 16), (8, 128, 32)];
+
+fn random_case(rng: &mut Rng, shape: &Shape, n: usize) -> (Query, Vec<f32>, Vec<f32>) {
+    let q = Query {
+        q_c: rng.normal_vec(shape.heads * shape.d_c, 1.0),
+        q_r: rng.normal_vec(shape.heads * shape.d_r, 0.3),
+    };
+    let k_c = rng.normal_vec(n * shape.d_c, 1.5);
+    let k_r = rng.normal_vec(n * shape.d_r, 4.0);
+    (q, k_c, k_r)
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+/// SnapMla-through-trait == legacy `snapmla_decode`, bit for bit, on random
+/// shapes/seeds and lengths crossing block boundaries.
+#[test]
+#[allow(deprecated)]
+fn snapmla_through_trait_is_byte_identical_to_legacy_decode() {
+    for (heads, d_c, d_r) in SHAPES {
+        let shape = Shape { heads, d_c, d_r };
+        let sm = shape.sm_scale();
+        for seed in [1u64, 7, 42] {
+            let mut rng = Rng::new(seed ^ (heads as u64) << 8);
+            let n = 256;
+            let (q, k_c, k_r) = random_case(&mut rng, &shape, n);
+            for length in [1usize, 63, 64, 65, 130, 256] {
+                let legacy = snapmla::mla::pipeline::snapmla_decode(
+                    &shape,
+                    &q,
+                    &k_c,
+                    &k_r,
+                    length,
+                    sm,
+                    PvOrder::Monotonic,
+                );
+                let via_trait = decode(VariantKind::SnapMla, &shape, &q, &k_c, &k_r, length, sm);
+                assert_bits_eq(&via_trait.o, &legacy.o, "o");
+                assert_bits_eq(&via_trait.lse, &legacy.lse, "lse");
+            }
+        }
+    }
+}
+
+/// The staged path too: legacy build_quant_cache/quantize_query/
+/// snapmla_pipeline == the trait's build_cache/quantize_query/pipeline.
+#[test]
+#[allow(deprecated)]
+fn snapmla_staged_path_is_byte_identical_to_legacy_pipeline() {
+    for (heads, d_c, d_r) in SHAPES {
+        let shape = Shape { heads, d_c, d_r };
+        let sm = shape.sm_scale();
+        let mut rng = Rng::new(heads as u64 * 1000 + 17);
+        let n = 192; // 3 blocks
+        let (q, k_c, k_r) = random_case(&mut rng, &shape, n);
+
+        let legacy_cache: QuantCache =
+            snapmla::mla::pipeline::build_quant_cache(&shape, &k_c, &k_r, n);
+        let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(&shape, &q);
+
+        let cache = snapmla_build_cache(&shape, &k_c, &k_r, n);
+        let qq = snapmla_quantize_query(&shape, &q);
+        assert_bits_eq(&cache.k_c_q, &legacy_cache.k_c_q, "k_c_q");
+        assert_bits_eq(&cache.sigma_k, &legacy_cache.sigma_k, "sigma_k");
+        assert_bits_eq(&cache.k_r_al, &legacy_cache.k_r_al, "k_r_al");
+        assert_bits_eq(&qq.q_c_q, &q_c_q, "q_c_q");
+        assert_bits_eq(&qq.sigma_q, &sigma_q, "sigma_q");
+        assert_bits_eq(&qq.q_r_al, &q_r_al, "q_r_al");
+
+        for length in [64usize, 100, 192] {
+            let legacy = snapmla::mla::pipeline::snapmla_pipeline(
+                &shape,
+                &q_c_q,
+                &sigma_q,
+                &q_r_al,
+                &legacy_cache,
+                length,
+                sm,
+                PvOrder::Monotonic,
+            );
+            let via_trait = VariantKind::SnapMla.instance().pipeline(
+                &shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm,
+            );
+            assert_bits_eq(&via_trait.o, &legacy.o, "o");
+            assert_bits_eq(&via_trait.lse, &legacy.lse, "lse");
+        }
+    }
+}
+
+/// Engine-level identity in BOTH cache modes: the default engine and an
+/// explicit `--kernel snapmla` engine produce bitwise-equal logits.
+#[test]
+fn default_engine_equals_explicit_snapmla_in_both_cache_modes() {
+    for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+        let mut legacy = ModelEngine::sim(mode).unwrap();
+        let mut explicit = ModelEngine::sim_with_kernel(mode, VariantKind::SnapMla).unwrap();
+        let run = |eng: &mut ModelEngine| {
+            let mut cache = PagedKvCache::new(eng.cache_config(8));
+            cache.register(1);
+            eng.prefill(&mut cache, &[(1, vec![1, 70, 71, 70, 9, 3])]).unwrap();
+            let r = eng.decode(&mut cache, &[(1, 71)]).unwrap();
+            r.logits[0].clone()
+        };
+        let a = run(&mut legacy);
+        let b = run(&mut explicit);
+        assert_bits_eq(&a, &b, &format!("{mode:?} logits"));
+    }
+}
+
+/// The f32 production pipelines track the f64 study twin (the twin feeds the
+/// committed frontier numbers): same stimulus, same variant, small rel-L2.
+#[test]
+fn f32_pipelines_track_the_f64_study_twin() {
+    use snapmla::mla::study;
+    let ctx = 4096usize;
+    let stim = study::stimulus(ctx);
+    let shape = Shape { heads: 1, d_c: study::STUDY_D_C, d_r: study::STUDY_D_R };
+    let q = Query {
+        q_c: stim.q_c.iter().map(|&x| x as f32).collect(),
+        q_r: stim.q_r.iter().map(|&x| x as f32).collect(),
+    };
+    let k_c: Vec<f32> = stim.k_c.iter().map(|&x| x as f32).collect();
+    let k_r: Vec<f32> = stim.k_r.iter().map(|&x| x as f32).collect();
+    let sm = shape.sm_scale();
+    for kind in VariantKind::ALL {
+        let f32_out = decode(kind, &shape, &q, &k_c, &k_r, ctx, sm);
+        let f64_out = study::variant_out(kind, &stim);
+        let num: f64 = f32_out
+            .o
+            .iter()
+            .zip(&f64_out)
+            .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+            .sum();
+        let den: f64 = f64_out.iter().map(|&b| b * b).sum();
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.01, "{kind:?}: f32 pipeline vs f64 study twin rel {rel}");
+    }
+}
+
+/// Naive baseline: per-row GLOBAL max probability scaling (amax code = FP8
+/// max), values unfused — every token in the row quantized against the one
+/// global scale domain.
+fn naive_global_max_decode(
+    shape: &Shape,
+    qq: (&[f32], &[f32], &[f32]),
+    cache: &QuantCache,
+    length: usize,
+    sm: f32,
+) -> Vec<f32> {
+    let (h, d_c, d_r) = (shape.heads, shape.d_c, shape.d_r);
+    let (q_c_q, sigma_q, q_r_al) = qq;
+    let mut o = vec![0.0f32; h * d_c];
+    for head in 0..h {
+        let qc = &q_c_q[head * d_c..(head + 1) * d_c];
+        let qr = &q_r_al[head * d_r..(head + 1) * d_r];
+        let mut s = vec![0.0f32; length];
+        let mut m = f32::NEG_INFINITY;
+        for (j, sj) in s.iter_mut().enumerate() {
+            let kc = &cache.k_c_q[j * d_c..(j + 1) * d_c];
+            let kr = &cache.k_r_al[j * d_r..(j + 1) * d_r];
+            let mut acc = 0.0f32;
+            for i in 0..d_c {
+                acc += qc[i] * kc[i];
+            }
+            for i in 0..d_r {
+                acc += qr[i] * kr[i];
+            }
+            *sj = acc * sigma_q[head] * cache.sigma_k[j] * sm;
+            m = m.max(*sj);
+        }
+        let mut l = 0.0f32;
+        let acc = &mut o[head * d_c..(head + 1) * d_c];
+        for (j, &sj) in s.iter().enumerate() {
+            let e = (sj - m).exp();
+            l += e;
+            let p = e4m3_round(e * 448.0);
+            if p == 0.0 {
+                continue;
+            }
+            let w = p * cache.sigma_k[j];
+            let kc = &cache.k_c_q[j * d_c..(j + 1) * d_c];
+            for i in 0..d_c {
+                acc[i] += w * kc[i];
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= 448.0 * l.max(1e-37);
+        }
+    }
+    o
+}
+
+/// Sink-token stimulus: one zero-value token whose logit overshoots the
+/// band by ~17 nats, placed LAST. P-Cast's already-accumulated band blocks
+/// are rescaled exactly (f32 multiply) when the running max jumps, so its
+/// error stays bounded; the naive global-max baseline quantizes the whole
+/// band against the sink's scale domain and flushes it to zero.
+#[test]
+fn pcast_bounds_sink_stream_where_global_max_scaling_collapses() {
+    let shape = Shape { heads: 1, d_c: 64, d_r: 16 };
+    let sm = shape.sm_scale();
+    let n = 512usize;
+    let mut rng = Rng::new(5);
+    let (q, mut k_c, mut k_r) = random_case(&mut rng, &shape, n);
+
+    // the last token is the sink: zero content, rope aligned with q_r so its
+    // logit lands ~17 nats above the band maximum (band logits are O(3))
+    let sink = n - 1;
+    for i in 0..shape.d_c {
+        k_c[sink * shape.d_c + i] = 0.0;
+    }
+    let qr_norm2: f32 = q.q_r.iter().map(|x| x * x).sum();
+    let amp = 20.0 / (qr_norm2 * sm);
+    for i in 0..shape.d_r {
+        k_r[sink * shape.d_r + i] = amp * q.q_r[i];
+    }
+
+    let cache = Cache { k_c: k_c.clone(), k_r: k_r.clone(), n };
+    let want = ref_attn::attention(&shape, &q, &cache, n, sm);
+
+    let pcast = decode(VariantKind::PCast, &shape, &q, &k_c, &k_r, n, sm);
+    let pcast_rel = rel_l2(&pcast.o, &want.o);
+
+    let qcache = snapmla_build_cache(&shape, &k_c, &k_r, n);
+    let qq = snapmla_quantize_query(&shape, &q);
+    let naive = naive_global_max_decode(
+        &shape,
+        (&qq.q_c_q, &qq.sigma_q, &qq.q_r_al),
+        &qcache,
+        n,
+        sm,
+    );
+    let naive_rel = rel_l2(&naive, &want.o);
+
+    assert!(
+        naive_rel > 0.9,
+        "global-max scaling should collapse the band: rel {naive_rel}"
+    );
+    assert!(pcast_rel < 0.25, "P-Cast should stay bounded: rel {pcast_rel}");
+    assert!(
+        pcast_rel < naive_rel / 3.0,
+        "P-Cast {pcast_rel} vs naive {naive_rel}"
+    );
+}
