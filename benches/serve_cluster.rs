@@ -55,6 +55,8 @@ fn main() {
         shared_prefix_groups: 6,
         shared_prefix_tokens: 512,
         max_total_tokens: 0,
+        diurnal_period_s: 0.0,
+        diurnal_amp: 1.0,
     };
     let trace = TraceGen::generate(&trace_cfg);
     let sched_cfg = SchedulerConfig {
@@ -82,9 +84,11 @@ fn main() {
     let mut base_tok_per_s = 0.0;
     for &dp in dps {
         let sq = Scenario::cluster(SimRoute::ShortestQueue, dp, sched_cfg, CAPACITY_PAGES)
-            .run(&trace);
+            .run(&trace)
+            .expect("cluster sim");
         let aff = Scenario::cluster(SimRoute::PrefixAffinity, dp, sched_cfg, CAPACITY_PAGES)
-            .run(&trace);
+            .run(&trace)
+            .expect("cluster sim");
         for (name, r) in [("shortest_queue", &sq), ("prefix_affinity", &aff)] {
             t.row(vec![
                 dp.to_string(),

@@ -68,6 +68,8 @@ fn main() {
         shared_prefix_groups: 4,
         shared_prefix_tokens: 512,
         max_total_tokens: 0,
+        diurnal_period_s: 0.0,
+        diurnal_amp: 1.0,
     };
     let trace = TraceGen::generate(&trace_cfg);
     let sched_cfg = SchedulerConfig {
@@ -107,6 +109,7 @@ fn main() {
         let arm = |prefill_ranks: usize| {
             Scenario::disagg(n, prefill_ranks, sched_cfg, prefill_sched_cfg, CAPACITY_PAGES)
                 .run(&trace)
+                .expect("disagg sim")
         };
         let coloc = arm(0);
         let dis = arm(prefill_split(n));

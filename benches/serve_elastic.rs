@@ -1,0 +1,308 @@
+//! serve_elastic — elastic fleet membership in the event-driven serving
+//! core, two arms:
+//!
+//! * **failure**   — a DP4 colocated cluster under prefix-affinity routing
+//!   with two injected rank failures mid-trace. With recovery on, every
+//!   failed rank's in-progress sequence re-migrates to a survivor over the
+//!   FP8 `KvWireBlock` path (priced through
+//!   `cluster::collective::transfer_time_s`); the no-migration baseline
+//!   drops them all. Headline: recovered vs. dropped.
+//! * **autoscale** — a single starting rank under an SLO-driven autoscaler
+//!   on a bursty diurnal trace whose arrival rate swings 10x trough-to-peak
+//!   (one compressed diurnal cycle plus the next morning's ramp). Scale-up
+//!   on queue-depth / TTFT-p95 breach, drain-then-remove on sustained
+//!   idle. Headline: steady-state rank count tracking the swing.
+//!
+//!     cargo bench --bench serve_elastic [-- --quick]
+//!
+//! Quick mode runs the identical configuration (the sim is deterministic
+//! and cheap), so quick ratios equal the committed baseline exactly. The
+//! full run also refreshes BENCH_elastic.json at the repo root.
+//! `python/tests/serve_elastic_port.py` is the exact Python port (thin
+//! wrapper over serve_port_common.py) that generated the committed
+//! baseline in a container without a Rust toolchain.
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::simulate::scenario::{elastic_autoscale_result_json, elastic_failure_result_json};
+use snapmla::simulate::{
+    AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, NODE_GPUS,
+};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, f2, Table};
+use snapmla::workload::{TraceConfig, TraceGen};
+
+const PAGE: usize = 64;
+const DP: usize = 4; // failure arm: fixed fleet size
+
+/// Failure arm: two injected failures while the fleet is loaded.
+const FAILURES: [(f64, usize); 2] = [(0.4, 1), (0.9, 2)];
+
+const AUTOSCALE: AutoscaleConfig = AutoscaleConfig {
+    min_ranks: 1,
+    max_ranks: 6,
+    eval_interval_s: 10.0,
+    queue_high: 1.5,
+    queue_low: 1.0,
+    idle_for_s: 90.0,
+    join_delay_s: 30.0,
+    ttft_slo_s: 20.0,
+};
+
+fn failure_sched_cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        max_decode_batch: 12,
+        max_prefill_batch: 4,
+        max_prefill_tokens: 4096,
+        max_context: 8192,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 128,
+        chunk_per_seq: 64,
+        max_step_items: 16,
+        max_running: 16,
+        disagg_prefill: false,
+        policy: SchedPolicy::MixedChunked,
+    }
+}
+
+/// Long-context requests (8k-14k prompts): each one is heavy enough that a
+/// handful per minute saturates a rank, so the diurnal swing moves real
+/// capacity.
+fn autoscale_sched_cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        max_decode_batch: 4,
+        max_prefill_batch: 2,
+        max_prefill_tokens: 16384,
+        max_context: 16384,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 512,
+        chunk_per_seq: 256,
+        max_step_items: 6,
+        max_running: 4,
+        disagg_prefill: false,
+        policy: SchedPolicy::MixedChunked,
+    }
+}
+
+fn sim_failure(trace: &[snapmla::workload::Request], recover: bool) -> SimResult {
+    Scenario::elastic(
+        SimRoute::PrefixAffinity,
+        DP,
+        Scenario::h20_cost(DP, NODE_GPUS / DP),
+        failure_sched_cfg(),
+        768,
+        ElasticConfig { failures: FAILURES.to_vec(), recover, autoscale: None },
+    )
+    .run(trace)
+    .expect("elastic failure sim")
+}
+
+fn sim_autoscale(trace: &[snapmla::workload::Request]) -> SimResult {
+    // the autoscale arm STARTS at one rank but prices every rank as one
+    // DP4/TP2 slice of the node — a joining rank is another identical
+    // slice, not a re-shard
+    Scenario::elastic(
+        SimRoute::ShortestQueue,
+        1,
+        Scenario::h20_cost(DP, NODE_GPUS / DP),
+        autoscale_sched_cfg(),
+        1100,
+        ElasticConfig { failures: Vec::new(), recover: true, autoscale: Some(AUTOSCALE) },
+    )
+    .run(trace)
+    .expect("elastic autoscale sim")
+}
+
+fn autoscale_json(cfg: &AutoscaleConfig) -> Json {
+    Json::obj(vec![
+        ("min_ranks", Json::num(cfg.min_ranks as f64)),
+        ("max_ranks", Json::num(cfg.max_ranks as f64)),
+        ("eval_interval_s", Json::num(cfg.eval_interval_s)),
+        ("queue_high", Json::num(cfg.queue_high)),
+        ("queue_low", Json::num(cfg.queue_low)),
+        ("idle_for_s", Json::num(cfg.idle_for_s)),
+        ("join_delay_s", Json::num(cfg.join_delay_s)),
+        ("ttft_slo_s", Json::num(cfg.ttft_slo_s)),
+    ])
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    // quick mode is the full configuration: both arms are deterministic,
+    // so the gate ratios are exact in both modes
+    let quick = args.has("quick");
+
+    let failure_trace_cfg = TraceConfig {
+        seed: 3107,
+        num_requests: 120,
+        mean_interarrival_s: 0.006,
+        prompt_min: 32,
+        prompt_max: 160,
+        out_min: 64,
+        out_max: 160,
+        temperature: 0.0,
+        shared_prefix_frac: 0.8,
+        shared_prefix_groups: 6,
+        shared_prefix_tokens: 512,
+        ..TraceConfig::default()
+    };
+    let diurnal_trace_cfg = TraceConfig {
+        seed: 808,
+        num_requests: 480,
+        mean_interarrival_s: 7.5, // trough; peak is 10x hotter
+        prompt_min: 8192,
+        prompt_max: 14336,
+        out_min: 1024,
+        out_max: 2048,
+        temperature: 0.0,
+        diurnal_period_s: 600.0,
+        diurnal_amp: 10.0,
+        ..TraceConfig::default()
+    };
+
+    let failure_trace = TraceGen::generate(&failure_trace_cfg);
+    let recov = sim_failure(&failure_trace, true);
+    let nomig = sim_failure(&failure_trace, false);
+
+    let diurnal_trace = TraceGen::generate(&diurnal_trace_cfg);
+    let auto = sim_autoscale(&diurnal_trace);
+    let trace_span_s = diurnal_trace.last().expect("non-empty trace").arrival_s;
+
+    let mut t = Table::new(
+        "serve_elastic — failure recovery + SLO autoscaling (virtual time, perfmodel)",
+        &["arm", "req", "done", "dropped", "evac", "recov", "tok/s", "TTFT p95 ms", "ranks"],
+    );
+    for (name, r) in
+        [("fail+recover", &recov), ("fail+drop", &nomig), ("autoscale", &auto)]
+    {
+        t.row(vec![
+            name.into(),
+            r.requests.to_string(),
+            r.completed.to_string(),
+            r.dropped.to_string(),
+            r.evacuated.to_string(),
+            r.recovered.to_string(),
+            f1(r.tok_per_s()),
+            f1(r.ttft.percentile(95.0) * 1e3),
+            format!("{}→{}→{}", r.ranks, r.peak_active_ranks, r.final_active_ranks),
+        ]);
+    }
+    t.print();
+    println!(
+        "failure: {} in-progress sequences on the failed ranks; recovered {} \
+         ({:.0}%) via FP8 wire re-migration, vs {} dropped without migration \
+         (completed ratio {})",
+        recov.evacuated,
+        recov.recovered,
+        recov.recovered as f64 / recov.evacuated as f64 * 100.0,
+        nomig.dropped,
+        f2(recov.completed as f64 / nomig.completed as f64),
+    );
+    println!(
+        "autoscale: 10x diurnal swing over {trace_span_s:.0}s -> rank count 1 -> {} -> {} \
+         (mean {}, {} joins / {} drains, {} dropped)",
+        auto.peak_active_ranks,
+        auto.final_active_ranks,
+        f2(auto.mean_active_ranks),
+        auto.joins,
+        auto.drains,
+        auto.dropped,
+    );
+
+    // the pre-failure evolution is identical in both arms, so the set a
+    // no-migration fleet drops is exactly the set recovery evacuates
+    let failure = Json::obj(vec![
+        ("recover", elastic_failure_result_json(&recov)),
+        ("no_migration", elastic_failure_result_json(&nomig)),
+        ("evacuated", Json::num(recov.evacuated as f64)),
+        ("recovered", Json::num(recov.recovered as f64)),
+        ("recovered_frac", Json::num(recov.recovered as f64 / recov.evacuated as f64)),
+        ("dropped_no_migration", Json::num(nomig.dropped as f64)),
+        (
+            "recover_vs_drop",
+            Json::obj(vec![
+                (
+                    "completed_ratio",
+                    Json::num(recov.completed as f64 / nomig.completed as f64),
+                ),
+                ("throughput_ratio", Json::num(recov.tok_per_s() / nomig.tok_per_s())),
+            ]),
+        ),
+    ]);
+    let mut autoscale = elastic_autoscale_result_json(&auto);
+    if let Json::Obj(map) = &mut autoscale {
+        map.insert("trace_span_s".to_string(), Json::num(trace_span_s));
+        map.insert("swing".to_string(), Json::num(diurnal_trace_cfg.diurnal_amp));
+    }
+
+    let report = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                (
+                    "failure",
+                    Json::obj(vec![
+                        ("seed", Json::num(failure_trace_cfg.seed as f64)),
+                        ("num_requests", Json::num(failure_trace_cfg.num_requests as f64)),
+                        (
+                            "mean_interarrival_s",
+                            Json::num(failure_trace_cfg.mean_interarrival_s),
+                        ),
+                        (
+                            "shared_prefix_frac",
+                            Json::num(failure_trace_cfg.shared_prefix_frac),
+                        ),
+                        (
+                            "shared_prefix_groups",
+                            Json::num(failure_trace_cfg.shared_prefix_groups as f64),
+                        ),
+                        (
+                            "shared_prefix_tokens",
+                            Json::num(failure_trace_cfg.shared_prefix_tokens as f64),
+                        ),
+                        ("tail_prompt", Json::str("32..=160")),
+                        ("out_tokens", Json::str("64..=160")),
+                        ("dp", Json::num(DP as f64)),
+                        ("capacity_pages_per_rank", Json::num(768.0)),
+                        (
+                            "failures",
+                            Json::arr(FAILURES.iter().map(|&(t, ri)| {
+                                Json::arr(vec![Json::num(t), Json::num(ri as f64)])
+                            })),
+                        ),
+                    ]),
+                ),
+                (
+                    "autoscale",
+                    Json::obj(vec![
+                        ("seed", Json::num(diurnal_trace_cfg.seed as f64)),
+                        ("num_requests", Json::num(diurnal_trace_cfg.num_requests as f64)),
+                        (
+                            "trough_interarrival_s",
+                            Json::num(diurnal_trace_cfg.mean_interarrival_s),
+                        ),
+                        ("diurnal_period_s", Json::num(diurnal_trace_cfg.diurnal_period_s)),
+                        ("diurnal_amp", Json::num(diurnal_trace_cfg.diurnal_amp)),
+                        ("prompt", Json::str("8192..=14336")),
+                        ("out_tokens", Json::str("1024..=2048")),
+                        ("capacity_pages_per_rank", Json::num(1100.0)),
+                        ("policy", autoscale_json(&AUTOSCALE)),
+                    ]),
+                ),
+                ("node_gpus", Json::num(NODE_GPUS as f64)),
+                ("model", Json::str("DeepSeek-V3.1")),
+                ("kernel", Json::str("SnapMLA FP8")),
+            ]),
+        ),
+        ("failure", failure),
+        ("autoscale", autoscale),
+    ]);
+    snapmla::bench::write_report("serve_elastic", report.clone());
+    if !quick {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_elastic.json");
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("[report] {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {path:?}: {e}"),
+        }
+    }
+}

@@ -61,7 +61,9 @@ fn main() {
     };
 
     let arm = |policy: SchedPolicy| -> SimResult {
-        Scenario::mixed(SchedulerConfig { policy, ..sched_cfg }, CAPACITY_PAGES).run(&trace)
+        Scenario::mixed(SchedulerConfig { policy, ..sched_cfg }, CAPACITY_PAGES)
+            .run(&trace)
+            .expect("mixed sim")
     };
     let alt = arm(SchedPolicy::Alternating);
     let mix = arm(SchedPolicy::MixedChunked);

@@ -56,6 +56,8 @@ fn main() {
         shared_prefix_groups: 6,
         shared_prefix_tokens: 512,
         max_total_tokens: 0,
+        diurnal_period_s: 0.0,
+        diurnal_amp: 1.0,
     };
     let trace = TraceGen::generate(&trace_cfg);
     let sched_cfg = SchedulerConfig {
@@ -76,7 +78,9 @@ fn main() {
     straggler[0] = SLOW_FACTOR;
 
     let arm = |route: SimRoute, speeds: &[f64]| -> SimResult {
-        Scenario::straggler(route, DP, speeds.to_vec(), sched_cfg, CAPACITY_PAGES).run(&trace)
+        Scenario::straggler(route, DP, speeds.to_vec(), sched_cfg, CAPACITY_PAGES)
+            .run(&trace)
+            .expect("straggler sim")
     };
 
     let mut t = Table::new(

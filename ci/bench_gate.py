@@ -74,6 +74,17 @@ GATES = [
         ],
     ),
     (
+        "BENCH_elastic.json",
+        "target/bench-reports/serve_elastic.json",
+        [
+            "failure.recovered_frac",
+            "failure.recover_vs_drop.completed_ratio",
+            "failure.recover_vs_drop.throughput_ratio",
+            "autoscale.peak_active_ranks",
+            "autoscale.mean_active_ranks",
+        ],
+    ),
+    (
         "BENCH_kernels.json",
         "target/bench-reports/kernel_frontier.json",
         [

@@ -1,0 +1,261 @@
+"""Exact Python port of benches/serve_elastic.rs — a thin scenario over
+the shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
+
+Two elastic-membership arms:
+
+* **failure**   — a DP4 colocated cluster under prefix-affinity routing
+  with two injected rank failures mid-trace. With recovery on, every
+  failed rank's in-progress sequence re-migrates to a survivor over the
+  FP8 KvWireBlock path (priced through cluster::collective::
+  transfer_time_s); the no-migration baseline drops them all. Headline:
+  recovered vs. dropped.
+* **autoscale** — a single starting rank under an SLO-driven autoscaler
+  on a bursty diurnal trace whose arrival rate swings 10x trough-to-peak
+  (one compressed diurnal cycle plus the next morning's ramp). Scale-up
+  on queue-depth / TTFT-p95 breach, drain-then-remove on sustained idle.
+  Headline: steady-state rank count tracking the swing.
+
+BENCH_elastic.json is generated from this port; `cargo bench --bench
+serve_elastic` regenerates the authoritative copy once cargo is
+available. Quick mode runs the identical configuration (the sim is
+deterministic), so quick ratios equal the baseline exactly.
+
+Run: python3 python/tests/serve_elastic_port.py [--quick]
+"""
+
+import json
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
+
+PAGE = 64
+NODE_GPUS = 8
+DP = 4  # failure arm: fixed fleet size
+
+# failure arm: two injected failures while the fleet is loaded
+FAILURES = [(0.4, 1), (0.9, 2)]
+
+AUTOSCALE = dict(
+    min_ranks=1,
+    max_ranks=6,
+    eval_interval_s=10.0,
+    queue_high=1.5,
+    queue_low=1.0,
+    idle_for_s=90.0,
+    join_delay_s=30.0,
+    ttft_slo_s=20.0,
+)
+
+
+def failure_sched_cfg():
+    return dict(
+        max_decode_batch=12,
+        max_prefill_batch=4,
+        max_prefill_tokens=4096,
+        max_context=8192,
+        page=PAGE,
+        prefill_chunk_tokens=128,
+        chunk_per_seq=64,
+        max_step_items=16,
+        max_running=16,
+    )
+
+
+def autoscale_sched_cfg():
+    # long-context requests (8k-14k prompts): each one is heavy enough
+    # that a handful per minute saturates a rank, so the diurnal swing
+    # moves real capacity
+    return dict(
+        max_decode_batch=4,
+        max_prefill_batch=2,
+        max_prefill_tokens=16384,
+        max_context=16384,
+        page=PAGE,
+        prefill_chunk_tokens=512,
+        chunk_per_seq=256,
+        max_step_items=6,
+        max_running=4,
+    )
+
+
+def sim_failure(trace, recover):
+    res = simulate(
+        trace,
+        dict(
+            ranks=DP,
+            routing="prefix_affinity",
+            timing="event",
+            sched_cfg=failure_sched_cfg(),
+            capacity_pages=768,
+            model_cfg=dict(dp=DP, tp=NODE_GPUS // DP),
+            elastic=dict(failures=FAILURES, recover=recover, autoscale=None),
+        ),
+    )
+    return dict(
+        requests=res["requests"],
+        completed=res["completed"],
+        dropped=res["dropped"],
+        evacuated=res["evacuated"],
+        recovered=res["recovered"],
+        fails=res["fails"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p50_ms=res["ttft_p50_ms"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        handoffs=res["handoffs"],
+        prefix_hit_tokens=res["prefix_hit_tokens"],
+        transferred_gb_fp8=res["transferred_gb_fp8"],
+        routed=res["routed"],
+    )
+
+
+def sim_autoscale(trace):
+    res = simulate(
+        trace,
+        dict(
+            ranks=1,
+            routing="shortest_queue",
+            timing="event",
+            sched_cfg=autoscale_sched_cfg(),
+            capacity_pages=1100,
+            model_cfg=dict(dp=DP, tp=NODE_GPUS // DP),
+            elastic=dict(failures=[], recover=True, autoscale=AUTOSCALE),
+        ),
+    )
+    return dict(
+        requests=res["requests"],
+        completed=res["completed"],
+        dropped=res["dropped"],
+        joins=res["joins"],
+        drains=res["drains"],
+        peak_active_ranks=res["peak_active_ranks"],
+        final_active_ranks=res["final_active_ranks"],
+        mean_active_ranks=res["mean_active_ranks"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        steps=res["steps"],
+        rank_timeline=res["rank_timeline"],
+    )
+
+
+def run(quick=False):
+    # quick mode is the full configuration: both arms are deterministic,
+    # so the gate ratios are exact in both modes
+    del quick
+    failure_trace_cfg = dict(
+        seed=3107,
+        num_requests=120,
+        mean_interarrival_s=0.006,
+        prompt_min=32,
+        prompt_max=160,
+        out_min=64,
+        out_max=160,
+        long_frac=0.0,
+        long_prompt_min=0,
+        long_prompt_max=0,
+        shared_prefix_frac=0.8,
+        shared_prefix_groups=6,
+        shared_prefix_tokens=512,
+    )
+    diurnal_trace_cfg = dict(
+        seed=808,
+        num_requests=480,
+        mean_interarrival_s=7.5,  # trough; peak is 10x hotter
+        prompt_min=8192,
+        prompt_max=14336,
+        out_min=1024,
+        out_max=2048,
+        long_frac=0.0,
+        long_prompt_min=0,
+        long_prompt_max=0,
+        shared_prefix_frac=0.0,
+        shared_prefix_groups=1,
+        shared_prefix_tokens=0,
+        diurnal_period_s=600.0,
+        diurnal_amp=10.0,
+    )
+
+    failure_trace = generate_trace(failure_trace_cfg)
+    recov = sim_failure(failure_trace, recover=True)
+    nomig = sim_failure(failure_trace, recover=False)
+    # the pre-failure evolution is identical in both arms, so the set a
+    # no-migration fleet drops is exactly the set recovery evacuates
+    failure = dict(
+        recover=recov,
+        no_migration=nomig,
+        evacuated=recov["evacuated"],
+        recovered=recov["recovered"],
+        recovered_frac=recov["recovered"] / recov["evacuated"],
+        dropped_no_migration=nomig["dropped"],
+        recover_vs_drop=dict(
+            completed_ratio=recov["completed"] / nomig["completed"],
+            throughput_ratio=recov["tok_per_s"] / nomig["tok_per_s"],
+        ),
+    )
+
+    diurnal_trace = generate_trace(diurnal_trace_cfg)
+    autoscale = sim_autoscale(diurnal_trace)
+    autoscale["trace_span_s"] = diurnal_trace[-1]["arrival_s"]
+    autoscale["swing"] = diurnal_trace_cfg["diurnal_amp"]
+
+    return dict(
+        workload=dict(
+            failure=dict(
+                seed=failure_trace_cfg["seed"],
+                num_requests=failure_trace_cfg["num_requests"],
+                mean_interarrival_s=failure_trace_cfg["mean_interarrival_s"],
+                shared_prefix_frac=failure_trace_cfg["shared_prefix_frac"],
+                shared_prefix_groups=failure_trace_cfg["shared_prefix_groups"],
+                shared_prefix_tokens=failure_trace_cfg["shared_prefix_tokens"],
+                tail_prompt="32..=160",
+                out_tokens="64..=160",
+                dp=DP,
+                capacity_pages_per_rank=768,
+                failures=[list(f) for f in FAILURES],
+            ),
+            autoscale=dict(
+                seed=diurnal_trace_cfg["seed"],
+                num_requests=diurnal_trace_cfg["num_requests"],
+                trough_interarrival_s=diurnal_trace_cfg["mean_interarrival_s"],
+                diurnal_period_s=diurnal_trace_cfg["diurnal_period_s"],
+                diurnal_amp=diurnal_trace_cfg["diurnal_amp"],
+                prompt="8192..=14336",
+                out_tokens="1024..=2048",
+                capacity_pages_per_rank=1100,
+                policy=dict(AUTOSCALE),
+            ),
+            node_gpus=NODE_GPUS,
+            model="DeepSeek-V3.1",
+            kernel="SnapMLA FP8",
+        ),
+        failure=failure,
+        autoscale=autoscale,
+    )
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    report = normalize(run(quick))
+    print(json.dumps(report, indent=1, sort_keys=True))
+    f = report["failure"]
+    print(
+        f"\nfailure: {f['evacuated']} in-progress sequences on the failed "
+        f"ranks; recovered {f['recovered']} ({f['recovered_frac'] * 100:.0f}%) "
+        f"via FP8 wire re-migration, vs {f['dropped_no_migration']} dropped "
+        f"without migration "
+        f"(completed ratio {f['recover_vs_drop']['completed_ratio']:.3f})",
+        file=sys.stderr,
+    )
+    a = report["autoscale"]
+    print(
+        f"autoscale: 10x diurnal swing over {a['trace_span_s']:.0f}s -> "
+        f"rank count 1 -> {a['peak_active_ranks']} -> "
+        f"{a['final_active_ranks']} (mean {a['mean_active_ranks']:.2f}, "
+        f"{a['joins']} joins / {a['drains']} drains, {a['dropped']} dropped)",
+        file=sys.stderr,
+    )

@@ -86,16 +86,30 @@ class Rng:
 
 # --- workload::tracegen -------------------------------------------------------
 
+def diurnal_rate(period_s, amp, t):
+    """Mirrors workload::tracegen::diurnal_rate: the arrival-rate multiplier
+    at virtual time t — 1.0 at the trough, `amp` at the peak, one full
+    cosine cycle per period."""
+    return 1.0 + (amp - 1.0) * 0.5 * (1.0 - math.cos(2.0 * math.pi * t / period_s))
+
+
 def generate_trace(cfg):
     """Mirrors workload::tracegen::TraceGen::generate. Mixture draws happen
     only when the mixture is on, so long_frac == 0 / shared_prefix_frac == 0
-    reproduce the legacy streams draw-for-draw."""
+    reproduce the legacy streams draw-for-draw; likewise the diurnal
+    modulation only rescales the exponential's mean when diurnal_period_s
+    is set, so period 0 reproduces the legacy stream exactly."""
     rng = Rng(cfg["seed"])
     t = 0.0
     reqs = []
     for i in range(cfg["num_requests"]):
         if cfg["mean_interarrival_s"] > 0.0:
-            t += rng.exponential(cfg["mean_interarrival_s"])
+            mean = cfg["mean_interarrival_s"]
+            if cfg.get("diurnal_period_s", 0.0) > 0.0:
+                mean /= diurnal_rate(
+                    cfg["diurnal_period_s"], cfg.get("diurnal_amp", 1.0), t
+                )
+            t += rng.exponential(mean)
         long_prompt = cfg.get("long_frac", 0.0) > 0.0 and rng.bool(cfg["long_frac"])
         shared = (
             cfg.get("shared_prefix_frac", 0.0) > 0.0
@@ -150,6 +164,8 @@ if os.environ.get("SNAPMLA_PORT_PERTURB"):
 
 COLLECTIVE_LATENCY_S = 5.0e-6
 AFFINITY_IMBALANCE_WINDOW = 4
+# autoscale: sliding window of recent TTFT samples for the SLO breach signal
+TTFT_WINDOW = 32
 
 # kvcache::transfer::KvWireBlock bytes per token (all layers)
 WIRE_FP8_PER_TOKEN = (MODEL["d_c"] + 2 * MODEL["d_r"] + 4) * MODEL["n_layers"]
@@ -544,6 +560,11 @@ def simulate(trace, scen):
       capacity_pages   KV pages per rank
       model_cfg        dict(dp, tp) for the analytical cost model
       speeds           per-rank cost multipliers (event mode; default 1.0)
+      elastic          optional membership config (event + colocated only):
+                       dict(failures=[(t, rank)...], recover=bool,
+                            autoscale=None | dict(min_ranks, max_ranks,
+                            eval_interval_s, queue_high, queue_low,
+                            idle_for_s, join_delay_s, ttft_slo_s))
     """
     n = scen["ranks"]
     prefill_ranks = scen.get("prefill_ranks", 0)
@@ -554,20 +575,28 @@ def simulate(trace, scen):
     prefill_sched_cfg = scen.get("prefill_sched_cfg")
     capacity_pages = scen["capacity_pages"]
     mcfg = scen["model_cfg"]
-    speeds = scen.get("speeds") or [1.0] * n
+    speeds = list(scen.get("speeds") or [1.0] * n)
     page = sched_cfg["page"]
+    elastic = scen.get("elastic")
+    auto = elastic.get("autoscale") if elastic else None
+    recover = elastic.get("recover", True) if elastic else False
+    if elastic:
+        assert timing == "event" and prefill_ranks == 0, (
+            "elastic membership requires the colocated event-driven mode"
+        )
 
     seqs = {
         r["id"]: dict(
             prompt=r["prompt"], out=r["out"], arrival=r["arrival_s"], long=r["long"],
             group=r["group"], prefix_tokens=r["prefix_tokens"], cached=0, prefilled=0,
             generated=0, spilled=False, adopted=0, transferred=0, first_token=None,
-            last_token=None,
+            last_token=None, dropped=False, evac=False,
         )
         for r in trace
     }
     ranks = [
-        dict(waiting=[], running=[], free=capacity_pages, shared={}, t=0.0)
+        dict(waiting=[], running=[], free=capacity_pages, shared={}, t=0.0,
+             state="active")
         for _ in range(n)
     ]
     in_flight = []  # (sid, ready_at) FIFO of serialized sequences in transit
@@ -578,7 +607,18 @@ def simulate(trace, scen):
         decode_steps=0, decode_batch_sum=0, rounds=0, steps=0, peak_pages=0,
         spills=0, restores=0, handoffs=0, wire_fp8_bytes=0, wire_bf16_bytes=0,
         routed=[0] * n,
+        dropped=0, recovered=0, evacuated=0, fails=0, joins=0, drains=0,
     )
+    # membership / autoscale state (inert unless scen carries `elastic`)
+    fail_sched = sorted(elastic["failures"]) if elastic else []
+    next_fail = 0
+    pending_joins = []  # virtual times at which a provisioning rank comes up
+    next_eval = auto["eval_interval_s"] if auto else 0.0
+    low_since = None  # start of the current sustained-low-load window
+    recent_ttft = []  # sliding window feeding the autoscale SLO signal
+    rank_timeline = []  # (t, "join"|"fail"|"drain", rank, active_after)
+    a_last, a_int = 0.0, 0.0  # time integral of the active-rank count
+    peak_active = n
     itl = []  # inter-token latencies (every gap after a sequence's first token)
     pending_emits = []  # lockstep: tokens produced this round, stamped at the barrier
 
@@ -594,6 +634,19 @@ def simulate(trace, scen):
             itl.append(t - s["last_token"])
         s["last_token"] = t
 
+    def stamp_first(s, t_emit):
+        # event-mode first-token stamp; feeds the autoscale SLO window
+        if t_emit is None:
+            return
+        s["first_token"] = t_emit
+        if elastic:
+            recent_ttft.append(t_emit - s["arrival"])
+            if len(recent_ttft) > TTFT_WINDOW:
+                recent_ttft.pop(0)
+
+    def active_count():
+        return sum(1 for r in ranks if r["state"] == "active")
+
     def private_pages(sid):
         s = seqs[sid]
         return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
@@ -605,18 +658,23 @@ def simulate(trace, scen):
         return 0
 
     def colocated_loads(sid):
+        # dead and draining ranks leave the routing set: affinity probes
+        # skip them, so a retiring rank's published prefixes attract nothing
         s = seqs[sid]
         needed = pages_for(s["prompt"] + s["out"], page)
-        loads = []
+        idxs, loads = [], []
         for ri, r in enumerate(ranks):
+            if r["state"] != "active":
+                continue
             tokens = sum(
                 seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
             ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+            idxs.append(ri)
             loads.append(
                 dict(tokens=tokens, free=r["free"], needed=needed,
                      hit=hit_pages(ri, sid) * page, evictable=0)
             )
-        return loads
+        return idxs, loads
 
     def route(sid):
         s = seqs[sid]
@@ -634,17 +692,37 @@ def simulate(trace, scen):
                 loads.append(dict(tokens=tokens, free=r["free"], needed=needed))
             rank = pick_rank(loads)
         elif routing == "prefix_affinity":
-            rank = pick_rank_affinity(colocated_loads(sid), page)
+            idxs, loads = colocated_loads(sid)
+            if not idxs:
+                raise RuntimeError(
+                    f"no active ranks to route request {sid} "
+                    f"({len(ranks)} total, {len(pending_joins)} joining)"
+                )
+            rank = idxs[pick_rank_affinity(loads, page)]
         else:
-            rank = pick_rank(colocated_loads(sid))
+            idxs, loads = colocated_loads(sid)
+            if not idxs:
+                raise RuntimeError(
+                    f"no active ranks to route request {sid} "
+                    f"({len(ranks)} total, {len(pending_joins)} joining)"
+                )
+            rank = idxs[pick_rank(loads)]
         stats["routed"][rank] += 1
         ranks[rank]["waiting"].append(sid)
 
     def deliver():
         # every ready transfer lands on the decode rank with headroom;
-        # slot-saturated ranks are marked infeasible by inflating their need
+        # slot-saturated ranks are marked infeasible by inflating their need.
+        # Only ACTIVE ranks take migrants — a draining or dead rank never
+        # adopts work. A transfer that can NEVER place (needs more pages
+        # than one rank holds, or the fleet is gone) is dropped and
+        # recorded, not parked forever and not panicked.
         delivered = False
         keep = []
+        targets = [
+            ri for ri in range(prefill_ranks, len(ranks))
+            if ranks[ri]["state"] == "active"
+        ]
         for (sid, ready) in in_flight:
             if ready > clock:
                 keep.append((sid, ready))
@@ -652,8 +730,16 @@ def simulate(trace, scen):
             s = seqs[sid]
             remaining = s["out"] - s["generated"]
             needed = pages_for(s["cached"] + remaining, page)
+            if elastic and (
+                needed > capacity_pages or (not targets and not pending_joins)
+            ):
+                s["dropped"] = True
+                stats["dropped"] += 1
+                delivered = True
+                continue
             loads = []
-            for r in ranks[prefill_ranks:]:
+            for ri in targets:
+                r = ranks[ri]
                 tokens = sum(
                     seqs[x]["out"] - seqs[x]["generated"] for x in r["running"]
                 ) + sum(seqs[w]["out"] - seqs[w]["generated"] for w in r["waiting"])
@@ -666,13 +752,117 @@ def simulate(trace, scen):
             if j is None:
                 keep.append((sid, ready))
                 continue
-            r = ranks[prefill_ranks + j]
+            r = ranks[targets[j]]
             r["free"] -= pages_for(s["cached"], page)
             r["running"].append(sid)
             stats["handoffs"] += 1
+            if s["evac"]:
+                s["evac"] = False
+                stats["recovered"] += 1
             delivered = True
         in_flight[:] = keep
         return delivered
+
+    def note_membership(kind, ri):
+        nonlocal peak_active
+        na = active_count()
+        peak_active = max(peak_active, na)
+        rank_timeline.append((clock, kind, ri, na))
+
+    def evacuate(sid):
+        # a failed rank's in-progress sequence: with recovery on, its KV
+        # re-migrates to a survivor over the FP8 wire path (priced exactly
+        # like a prefill->decode handoff: cluster::collective::
+        # transfer_time_s of the KvWireBlock bytes); otherwise the request
+        # is dropped and recorded
+        s = seqs[sid]
+        s["spilled"] = False
+        s["adopted"] = 0
+        s["transferred"] = 0
+        if recover and s["cached"] > 0:
+            s["evac"] = True
+            stats["evacuated"] += 1
+            stats["wire_fp8_bytes"] += WIRE_FP8_PER_TOKEN * s["cached"]
+            stats["wire_bf16_bytes"] += WIRE_BF16_PER_TOKEN * s["cached"]
+            in_flight.append((sid, clock + handoff_s(s["cached"])))
+        elif s["cached"] == 0:
+            # no KV built yet — this is still just a request; re-route it
+            route(sid)
+        else:
+            s["dropped"] = True
+            stats["dropped"] += 1
+
+    def fail_rank(ri):
+        # MembershipEvent::RankFail — the rank leaves the routing set
+        # immediately; queued-but-fresh requests re-route, sequences with
+        # KV either re-migrate (recover) or drop; the rank's published
+        # prefixes die with it
+        r = ranks[ri]
+        r["state"] = "dead"
+        stats["fails"] += 1
+        if active_count() == 0:
+            raise RuntimeError(
+                f"rank {ri} failed but no active ranks remain "
+                f"({len(r['waiting'])} waiting + {len(r['running'])} running "
+                f"stranded, {len(pending_joins)} joining)"
+            )
+        waiting, running = r["waiting"], r["running"]
+        r["waiting"], r["running"] = [], []
+        r["shared"] = {}
+        r["free"] = capacity_pages
+        for sid in waiting + running:
+            evacuate(sid)
+        note_membership("fail", ri)
+
+    def join_rank():
+        # MembershipEvent::RankJoin — a freshly provisioned rank: empty
+        # queues, a cold cache (no published prefixes), clock at now
+        ranks.append(
+            dict(waiting=[], running=[], free=capacity_pages, shared={},
+                 t=clock, state="active")
+        )
+        speeds.append(1.0)
+        stats["routed"].append(0)
+        stats["joins"] += 1
+        note_membership("join", len(ranks) - 1)
+
+    def autoscale_eval():
+        # scale up on queue-depth or TTFT-p95 SLO breach; drain-then-remove
+        # the highest-numbered active rank after sustained low load
+        nonlocal low_since
+        na = active_count()
+        q_up = sum(
+            len(r["waiting"]) for r in ranks if r["state"] == "active"
+        ) / na
+        busy = sum(
+            len(r["waiting"]) + len(r["running"])
+            for r in ranks if r["state"] == "active"
+        ) / na
+        slo = auto.get("ttft_slo_s", 0.0)
+        breach = q_up > auto["queue_high"] or (
+            slo > 0.0
+            and len(recent_ttft) >= 8
+            and percentile(recent_ttft, 95.0) > slo
+        )
+        if breach:
+            low_since = None
+            if na + len(pending_joins) < auto["max_ranks"]:
+                pending_joins.append(clock + auto["join_delay_s"])
+        elif busy <= auto["queue_low"] and not pending_joins:
+            if low_since is None:
+                low_since = clock
+            elif clock - low_since >= auto["idle_for_s"] and na > auto["min_ranks"]:
+                victim = max(
+                    ri for ri, r in enumerate(ranks) if r["state"] == "active"
+                )
+                # MembershipEvent::RankDrain — stops taking new work now,
+                # finishes its queue, then retires
+                ranks[victim]["state"] = "draining"
+                stats["drains"] += 1
+                low_since = clock
+                note_membership("drain", victim)
+        else:
+            low_since = None
 
     def publish(r, sid):
         s = seqs[sid]
@@ -723,8 +913,7 @@ def simulate(trace, scen):
                 s["prefilled"] = s["prompt"]
                 publish(r, sid)
                 s["generated"] = 1
-                if t_emit is not None:
-                    s["first_token"] = t_emit
+                stamp_first(s, t_emit)
                 emit(sid, t_emit)
                 if s["generated"] >= s["out"]:
                     r["free"] += private_pages(sid)
@@ -743,6 +932,11 @@ def simulate(trace, scen):
             stats["wire_bf16_bytes"] += WIRE_BF16_PER_TOKEN * s["cached"]
             in_flight.append((sid, t_start + handoff_s(s["cached"])))
         elif kind == "decode":
+            if not action[1]:
+                raise RuntimeError(
+                    f"scheduler produced an empty decode batch on rank {ri} "
+                    f"({len(r['waiting'])} waiting, {len(r['running'])} running)"
+                )
             ids = [r["running"][i] for i in action[1]]
             ctx = max(seqs[sid]["cached"] for sid in ids) + 1
             cost = decode_step_s(mcfg, len(ids), ctx) * speeds[ri]
@@ -806,8 +1000,7 @@ def simulate(trace, scen):
                 publish(r, sid)
                 if s["prefilled"] == s["prompt"]:
                     s["generated"] = 1
-                    if t_emit is not None:
-                        s["first_token"] = t_emit
+                    stamp_first(s, t_emit)
                     emit(sid, t_emit)
                     if s["generated"] >= s["out"]:
                         done.append(sid)
@@ -857,6 +1050,21 @@ def simulate(trace, scen):
         return (
             f"rank {worst} stuck with {len(r['waiting'])} waiting + "
             f"{len(r['running'])} running and {r['free']} free pages"
+        )
+
+    def wedge_report():
+        # mirrors harness.rs: the event loop has no schedulable event —
+        # name the full state instead of panicking on an empty candidate set
+        busy = [
+            (ri, len(r["waiting"]), len(r["running"]), r["t"])
+            for ri, r in enumerate(ranks)
+            if r["waiting"] or r["running"]
+        ]
+        return (
+            "event loop wedged: no schedulable event "
+            f"(busy ranks {busy if busy else '[]'}, "
+            f"{len(trace) - next_arrival} pending arrivals, "
+            f"{len(in_flight)} in-flight transfers); {stuck_report()}"
         )
 
     iters = 0
@@ -912,21 +1120,49 @@ def simulate(trace, scen):
             if iters > 2_000_000:
                 raise RuntimeError("sim runaway")
             # the next instant anything can happen: a busy rank's local
-            # clock, the next arrival, or an in-flight transfer's ready-time
+            # clock, the next arrival, an in-flight transfer's ready-time,
+            # or (elastic) a scheduled failure / provisioning rank / the
+            # autoscaler's next evaluation
             # (simulate::clock::EventLoop pops the same minimum in Rust)
             cands = [r["t"] for r in ranks if r["waiting"] or r["running"]]
             if next_arrival < len(trace):
                 cands.append(trace[next_arrival]["arrival_s"])
             cands.extend(ready for (_, ready) in in_flight)
-            clock = max(clock, min(cands))
+            if elastic:
+                if next_fail < len(fail_sched):
+                    cands.append(fail_sched[next_fail][0])
+                cands.extend(pending_joins)
+                if auto:
+                    cands.append(next_eval)
+            if not cands:
+                raise RuntimeError(wedge_report())
+            new_clock = max(clock, min(cands))
+            if elastic and new_clock > clock:
+                a_int += active_count() * (new_clock - a_last)
+                a_last = new_clock
+            clock = new_clock
 
             progressed = False
+            if elastic:
+                while next_fail < len(fail_sched) and fail_sched[next_fail][0] <= clock:
+                    fail_rank(fail_sched[next_fail][1])
+                    next_fail += 1
+                    progressed = True
+                if any(jt <= clock for jt in pending_joins):
+                    for jt in [jt for jt in pending_joins if jt <= clock]:
+                        join_rank()
+                    pending_joins[:] = [jt for jt in pending_joins if jt > clock]
+                    progressed = True
             while next_arrival < len(trace) and trace[next_arrival]["arrival_s"] <= clock:
                 route(trace[next_arrival]["id"])
                 next_arrival += 1
                 progressed = True
-            if prefill_ranks > 0 and deliver():
+            if (prefill_ranks > 0 or elastic) and deliver():
                 progressed = True
+            if auto and clock >= next_eval:
+                while next_eval <= clock:
+                    next_eval += auto["eval_interval_s"]
+                autoscale_eval()
 
             for ri, r in enumerate(ranks):
                 if r["t"] > clock:
@@ -949,11 +1185,24 @@ def simulate(trace, scen):
                 stats["steps"] += 1
                 progressed = True
 
+            if elastic:
+                # a draining rank that has emptied its queue retires: its
+                # published prefixes and page pool are released
+                for r in ranks:
+                    if r["state"] == "draining" and not r["waiting"] and not r["running"]:
+                        r["state"] = "dead"
+                        r["shared"] = {}
+                        r["free"] = capacity_pages
+
             if not progressed:
                 later = [c for c in cands if c > clock]
                 if not later:
-                    raise RuntimeError(f"event-loop deadlock: {stuck_report()}")
-                clock = min(later)
+                    raise RuntimeError(wedge_report())
+                new_clock = min(later)
+                if elastic:
+                    a_int += active_count() * (new_clock - a_last)
+                    a_last = new_clock
+                clock = new_clock
                 continue
             used = sum(capacity_pages - r["free"] for r in ranks)
             stats["peak_pages"] = max(stats["peak_pages"], used)
@@ -961,20 +1210,33 @@ def simulate(trace, scen):
     wall = clock
     for r in ranks:
         wall = max(wall, r["t"])
-    ttfts = [s["first_token"] - s["arrival"] for s in seqs.values()]
-    ttfts_short = [
-        s["first_token"] - s["arrival"] for s in seqs.values() if not s["long"]
+    # TTFT/ITL tolerate unfinished or dropped sequences: a request that
+    # never emitted a token is excluded from the latency stats and shows
+    # up in the `dropped` / `unfinished` counts instead of panicking
+    ttfts = [
+        s["first_token"] - s["arrival"]
+        for s in seqs.values()
+        if s["first_token"] is not None
     ]
+    ttfts_short = [
+        s["first_token"] - s["arrival"]
+        for s in seqs.values()
+        if not s["long"] and s["first_token"] is not None
+    ]
+    dropped = sum(1 for s in seqs.values() if s["dropped"])
+    unfinished = sum(
+        1 for s in seqs.values() if not s["dropped"] and s["generated"] < s["out"]
+    )
     res = dict(
         ranks=n,
         prefill_ranks=prefill_ranks,
         decode_ranks=n - prefill_ranks if prefill_ranks else n,
         requests=len(seqs),
+        completed=len(seqs) - dropped - unfinished,
+        dropped=dropped,
         gen_tokens=stats["gen_tokens"],
         wall_s=wall,
         tok_per_s=stats["gen_tokens"] / wall,
-        ttft_p50_ms=percentile(ttfts, 50.0) * 1e3,
-        ttft_p95_ms=percentile(ttfts, 95.0) * 1e3,
         peak_pages=stats["peak_pages"],
         prefill_tokens=stats["prefill_tokens"],
         chunk_tokens=stats["chunk_tokens"],
@@ -990,9 +1252,24 @@ def simulate(trace, scen):
         transferred_gb_bf16=stats["wire_bf16_bytes"] / 1e9,
         routed=stats["routed"],
     )
+    if ttfts:
+        res["ttft_p50_ms"] = percentile(ttfts, 50.0) * 1e3
+        res["ttft_p95_ms"] = percentile(ttfts, 95.0) * 1e3
     if ttfts_short:
         res["ttft_short_p95_ms"] = percentile(ttfts_short, 95.0) * 1e3
     if itl:
         res["itl_p50_ms"] = percentile(itl, 50.0) * 1e3
         res["itl_p95_ms"] = percentile(itl, 95.0) * 1e3
+    if elastic:
+        if wall > a_last:
+            a_int += active_count() * (wall - a_last)
+        res["recovered"] = stats["recovered"]
+        res["evacuated"] = stats["evacuated"]
+        res["fails"] = stats["fails"]
+        res["joins"] = stats["joins"]
+        res["drains"] = stats["drains"]
+        res["peak_active_ranks"] = peak_active
+        res["final_active_ranks"] = active_count()
+        res["mean_active_ranks"] = a_int / wall if wall > 0.0 else float(active_count())
+        res["rank_timeline"] = [list(e) for e in rank_timeline]
     return res

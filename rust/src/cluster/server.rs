@@ -15,6 +15,15 @@
 //!   so a sequence prefilled on rank A and decoded on rank B emits the same
 //!   tokens as a colocated run.
 //!
+//! Membership is **elastic**: between drive calls the fleet can lose a
+//! rank ([`ClusterServer::fail_rank`] — its fresh queue re-routes and its
+//! live KV re-migrates to survivors over the same wire path as a
+//! disaggregated handoff), shed one gracefully
+//! ([`ClusterServer::drain_rank`] — out of the routing set immediately,
+//! retired once empty) or gain one ([`ClusterServer::join_rank`]). A fixed
+//! fleet never touches these paths and stays byte-identical to the
+//! pre-elastic behavior.
+//!
 //! The drive ([`ClusterServer::run_until`]) pops `(time, rank, seq)`
 //! batches off the event loop: every rank whose clock reaches the batch
 //! time takes one scheduling step and re-arms at `time + step_costs[rank]`.
@@ -27,12 +36,12 @@
 
 use crate::anyhow;
 use crate::coordinator::metrics::ClusterMetrics;
-use crate::coordinator::router::{pick_handoff_rank, RankLoad, RoutePolicy, Router};
+use crate::coordinator::router::{pick_handoff_rank, RankHealth, RankLoad, RoutePolicy, Router};
 use crate::coordinator::{RequestOutcome, Sequence, ServeRequest, Server};
-use crate::kvcache::{CacheMode, KvWireBlock, PAGE_TOKENS};
+use crate::kvcache::{CacheMode, KvWireBlock};
 use crate::runtime::ModelEngine;
-use crate::simulate::EventLoop;
-use std::collections::VecDeque;
+use crate::simulate::{EventLoop, MembershipEvent};
+use std::collections::{HashSet, VecDeque};
 use std::time::Instant;
 
 /// Cluster topology: every rank full-lifecycle, or prefill/decode split.
@@ -49,12 +58,21 @@ pub struct ClusterServer {
     pub router: Router,
     pub metrics: ClusterMetrics,
     pub mode: ClusterMode,
-    /// disaggregated mode: serialized sequences in transit between a
-    /// prefill rank's outbox and a decode rank with room (FIFO)
+    /// membership history: (virtual time, event, rank, active ranks after)
+    pub membership_log: Vec<(f64, MembershipEvent, usize, usize)>,
+    /// serialized sequences in transit toward a rank with room (FIFO):
+    /// disaggregated prefill→decode handoffs, and failure-recovery
+    /// re-migrations off a dead rank
     in_flight: VecDeque<(Sequence, KvWireBlock)>,
     /// per-rank virtual clocks: when each rank is next ready to step
     /// (advanced by `run_until`; `step_all` rounds do not touch them)
     vclock: Vec<f64>,
+    /// set by the first membership operation: enables the drop-not-park
+    /// rule for transfers no surviving rank could ever place (a fixed
+    /// fleet keeps the legacy park-forever semantics byte-for-byte)
+    elastic: bool,
+    /// ids evacuated off a failed rank and still awaiting re-placement
+    evac_ids: HashSet<u64>,
 }
 
 impl ClusterServer {
@@ -65,8 +83,11 @@ impl ClusterServer {
             router: Router::with_policy(ranks, policy),
             metrics,
             mode: ClusterMode::Colocated,
+            membership_log: Vec::new(),
             in_flight: VecDeque::new(),
             vclock: vec![0.0; dp],
+            elastic: false,
+            evac_ids: HashSet::new(),
         }
     }
 
@@ -84,8 +105,11 @@ impl ClusterServer {
             router: Router::disaggregated(ranks, prefill_ranks),
             metrics,
             mode: ClusterMode::Disaggregated { prefill_ranks, decode_ranks: dp - prefill_ranks },
+            membership_log: Vec::new(),
             in_flight: VecDeque::new(),
             vclock: vec![0.0; dp],
+            elastic: false,
+            evac_ids: HashSet::new(),
         }
     }
 
@@ -150,6 +174,89 @@ impl ClusterServer {
         rank
     }
 
+    /// First rank index eligible to receive in-flight transfers: decode
+    /// ranks in disaggregated mode, every rank in colocated mode (the
+    /// failure-recovery path re-migrates onto any survivor).
+    fn handoff_base(&self) -> usize {
+        match self.mode {
+            ClusterMode::Disaggregated { prefill_ranks, .. } => prefill_ranks,
+            ClusterMode::Colocated => 0,
+        }
+    }
+
+    fn log_membership(&mut self, kind: MembershipEvent, ri: usize) {
+        let active = self.router.active_ranks().len();
+        self.membership_log.push((self.virtual_time(), kind, ri, active));
+    }
+
+    /// Kill rank `ri` at the current virtual time. Its fresh queue
+    /// re-routes through the cluster; with `recover` its live KV exports
+    /// to the wire format and re-migrates to survivors (delivered by the
+    /// same path as disaggregated handoffs); spilled or unrecoverable
+    /// sequences are dropped and counted, never panicked on. Errors if
+    /// the failure leaves no active rank.
+    pub fn fail_rank(&mut self, ri: usize, recover: bool) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.router.health(ri) != RankHealth::Dead,
+            "rank {ri} is already dead"
+        );
+        self.router.set_health(ri, RankHealth::Dead);
+        self.elastic = true;
+        self.metrics.fails += 1;
+        anyhow::ensure!(
+            !self.router.active_ranks().is_empty(),
+            "rank {ri} failed but no active ranks remain ({} requests stranded)",
+            self.pending()
+        );
+        let ev = self.router.ranks[ri].evacuate(recover)?;
+        self.metrics.dropped += ev.dropped as u64;
+        for (seq, wire) in ev.migrate {
+            self.metrics.evacuated += 1;
+            self.evac_ids.insert(seq.id());
+            self.in_flight.push_back((seq, wire));
+        }
+        for req in ev.resubmit {
+            self.submit(req);
+        }
+        self.log_membership(MembershipEvent::RankFail, ri);
+        // place what fits right now; the rest rides the delivery path
+        // every subsequent step retries
+        self.deliver_handoffs(self.handoff_base())?;
+        Ok(())
+    }
+
+    /// Begin draining rank `ri`: it leaves the routing set immediately,
+    /// finishes its queued work, and retires (→ `Dead`) once empty.
+    pub fn drain_rank(&mut self, ri: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.router.health(ri) == RankHealth::Active,
+            "can only drain an active rank (rank {ri} is {:?})",
+            self.router.health(ri)
+        );
+        anyhow::ensure!(
+            self.router.active_ranks().len() > 1,
+            "cannot drain the last active rank {ri}"
+        );
+        self.router.set_health(ri, RankHealth::Draining);
+        self.elastic = true;
+        self.metrics.drains += 1;
+        self.log_membership(MembershipEvent::RankDrain, ri);
+        Ok(())
+    }
+
+    /// Add a fresh rank to the fleet at the current virtual time; it
+    /// enters the routing set immediately and returns its index. Callers
+    /// of `run_until` must grow their step-cost slice to the new `dp()`.
+    pub fn join_rank(&mut self, rank: Server) -> usize {
+        let ri = self.router.push_rank(rank);
+        self.metrics.routed.push(0);
+        self.vclock.push(self.virtual_time());
+        self.elastic = true;
+        self.metrics.joins += 1;
+        self.log_membership(MembershipEvent::RankJoin, ri);
+        ri
+    }
+
     /// One lock-step round: every rank takes one scheduling step; in
     /// disaggregated mode, completed prefills then migrate — outboxes drain
     /// into the transfer queue and every transfer whose target decode rank
@@ -164,30 +271,66 @@ impl ClusterServer {
     }
 
     /// Post-step bookkeeping shared by the lock-step and virtual drives:
-    /// drain prefill outboxes, deliver ready transfers, sample peak pages.
+    /// drain prefill outboxes, deliver ready transfers, retire drained
+    /// ranks that emptied, sample peak pages (dead ranks excluded).
     fn migrate_and_sample(&mut self) -> anyhow::Result<bool> {
         let mut any = false;
         if let ClusterMode::Disaggregated { prefill_ranks, .. } = self.mode {
             for r in self.router.ranks.iter_mut().take(prefill_ranks) {
                 self.in_flight.extend(std::mem::take(&mut r.handoff_outbox));
             }
-            any |= self.deliver_handoffs(prefill_ranks)?;
         }
-        let used: usize = self.router.ranks.iter().map(|r| r.cache.used_pages()).sum();
+        if !self.in_flight.is_empty() {
+            any |= self.deliver_handoffs(self.handoff_base())?;
+        }
+        if self.elastic {
+            for i in 0..self.dp() {
+                if self.router.health(i) == RankHealth::Draining
+                    && self.router.ranks[i].pending() == 0
+                {
+                    self.router.set_health(i, RankHealth::Dead);
+                }
+            }
+        }
+        let used: usize = (0..self.dp())
+            .filter(|&i| self.router.health(i) != RankHealth::Dead)
+            .map(|i| self.router.ranks[i].cache.used_pages())
+            .sum();
         self.metrics.observe_pages(used);
         Ok(any)
     }
 
-    /// Deliver every in-flight transfer that fits a decode rank right now.
-    fn deliver_handoffs(&mut self, prefill_ranks: usize) -> anyhow::Result<bool> {
-        let mut delivered_any = false;
+    /// Deliver every in-flight transfer that fits a live target right now.
+    /// Targets are the *active* ranks at or above `base` (decode ranks in
+    /// disaggregated mode, everyone in colocated recovery). On an elastic
+    /// fleet a transfer that no surviving rank could place even when empty
+    /// is dropped and counted — parking it forever would wedge the drive.
+    fn deliver_handoffs(&mut self, base: usize) -> anyhow::Result<bool> {
+        let mut progressed = false;
         let mut parked = VecDeque::new();
         while let Some((seq, wire)) = self.in_flight.pop_front() {
-            let remaining = seq.request.max_new_tokens - seq.generated.len();
-            let needed = (wire.tokens() + remaining).div_ceil(PAGE_TOKENS);
-            let loads: Vec<RankLoad> = self.router.ranks[prefill_ranks..]
+            // mid-prefill evacuees still owe prompt tokens on top of the
+            // remaining generation (zero for disaggregated handoffs)
+            let remaining =
+                seq.pending_prefill() + (seq.request.max_new_tokens - seq.generated.len());
+            let needed = wire.pages_needed(remaining);
+            let targets: Vec<usize> = (base..self.dp())
+                .filter(|&i| self.router.health(i) == RankHealth::Active)
+                .collect();
+            if self.elastic
+                && targets
+                    .iter()
+                    .all(|&i| needed > self.router.ranks[i].cache.cfg.capacity_pages)
+            {
+                self.evac_ids.remove(&seq.id());
+                self.metrics.dropped += 1;
+                progressed = true;
+                continue;
+            }
+            let loads: Vec<RankLoad> = targets
                 .iter()
-                .map(|r| {
+                .map(|&i| {
+                    let r = &self.router.ranks[i];
                     let open = r.can_accept_handoff(wire.tokens(), remaining);
                     RankLoad {
                         tokens: r.load_tokens(),
@@ -202,14 +345,18 @@ impl ClusterServer {
                 .collect();
             match pick_handoff_rank(&loads) {
                 Some(j) => {
-                    self.router.ranks[prefill_ranks + j].accept_handoff(seq, wire)?;
-                    delivered_any = true;
+                    let id = seq.id();
+                    self.router.ranks[targets[j]].accept_handoff(seq, wire)?;
+                    if self.evac_ids.remove(&id) {
+                        self.metrics.recovered += 1;
+                    }
+                    progressed = true;
                 }
                 None => parked.push_back((seq, wire)),
             }
         }
         self.in_flight = parked;
-        Ok(delivered_any)
+        Ok(progressed)
     }
 
     /// Event-driven virtual drive: pop `(time, rank)` wake-ups off the
@@ -347,6 +494,16 @@ impl ClusterServer {
     /// two runs over the same submissions must agree on all of these.
     pub fn counters(&self) -> Vec<(String, u64)> {
         let mut out = vec![("peak_pages_used".to_string(), self.metrics.peak_pages_used as u64)];
+        for (k, v) in [
+            ("fails", self.metrics.fails),
+            ("joins", self.metrics.joins),
+            ("drains", self.metrics.drains),
+            ("evacuated", self.metrics.evacuated),
+            ("recovered", self.metrics.recovered),
+            ("dropped", self.metrics.dropped),
+        ] {
+            out.push((k.to_string(), v));
+        }
         for (i, r) in self.router.ranks.iter().enumerate() {
             out.push((format!("rank{i}_routed"), self.metrics.routed[i]));
             for (k, v) in r.metrics.counters() {

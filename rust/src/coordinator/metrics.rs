@@ -190,11 +190,32 @@ pub struct ClusterMetrics {
     pub routed: Vec<u64>,
     /// max over lock-step rounds of Σ per-rank allocated pages
     pub peak_pages_used: usize,
+    /// elastic membership (all zero on a fixed fleet): rank failures
+    /// injected, ranks joined, drains initiated
+    pub fails: u64,
+    pub joins: u64,
+    pub drains: u64,
+    /// live sequences exported off a failed rank for re-migration
+    pub evacuated: u64,
+    /// evacuated sequences re-imported on a survivor (≤ evacuated)
+    pub recovered: u64,
+    /// requests dropped: KV unrecoverable (spilled to the dead host or
+    /// recovery disabled) or no surviving rank could ever place them
+    pub dropped: u64,
 }
 
 impl ClusterMetrics {
     pub fn new(dp: usize) -> ClusterMetrics {
-        ClusterMetrics { routed: vec![0; dp], peak_pages_used: 0 }
+        ClusterMetrics {
+            routed: vec![0; dp],
+            peak_pages_used: 0,
+            fails: 0,
+            joins: 0,
+            drains: 0,
+            evacuated: 0,
+            recovered: 0,
+            dropped: 0,
+        }
     }
 
     /// Fold one round's total allocated-page count into the peak.

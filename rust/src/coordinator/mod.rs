@@ -17,7 +17,7 @@ pub mod server;
 
 pub use metrics::{ClusterMetrics, RequestMetrics, ServerMetrics};
 pub use request::{FinishReason, RequestOutcome, ServeRequest};
-pub use router::{RankLoad, RoutePolicy, Router};
+pub use router::{RankHealth, RankLoad, RoutePolicy, Router};
 pub use scheduler::{Action, PrefillChunk, SchedPolicy, Scheduler, SchedulerConfig};
 pub use sequence::{SeqPhase, Sequence};
-pub use server::Server;
+pub use server::{Evacuation, Server};

@@ -37,6 +37,20 @@ pub enum RoutePolicy {
     Disagg,
 }
 
+/// Liveness of one DP rank (elastic fleet membership). Every rank starts
+/// `Active`; only `cluster::ClusterServer`'s membership operations move a
+/// rank out of it, so a fixed fleet never observes the other states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankHealth {
+    /// in the routing set, serving
+    Active,
+    /// finishing its queued work; receives no new admissions, retires
+    /// (→ `Dead`) once empty
+    Draining,
+    /// failed or retired: invisible to routing, affinity probes and stepping
+    Dead,
+}
+
 /// Snapshot of one rank's load.
 #[derive(Clone, Copy, Debug)]
 pub struct RankLoad {
@@ -139,6 +153,8 @@ pub struct Router {
     /// disaggregated mode: ranks `0..prefill_ranks` prefill, the rest
     /// decode (0 = every rank serves the full lifecycle)
     pub prefill_ranks: usize,
+    /// per-rank liveness; all `Active` on a fixed fleet
+    health: Vec<RankHealth>,
 }
 
 impl Router {
@@ -150,7 +166,8 @@ impl Router {
     pub fn with_policy(ranks: Vec<Server>, policy: RoutePolicy) -> Router {
         assert!(!ranks.is_empty());
         assert_ne!(policy, RoutePolicy::Disagg, "use Router::disaggregated");
-        Router { ranks, policy, prefill_ranks: 0 }
+        let health = vec![RankHealth::Active; ranks.len()];
+        Router { ranks, policy, prefill_ranks: 0, health }
     }
 
     /// Disaggregated router: admissions go to the least-loaded of the
@@ -158,11 +175,32 @@ impl Router {
     pub fn disaggregated(ranks: Vec<Server>, prefill_ranks: usize) -> Router {
         assert!(prefill_ranks >= 1, "disaggregation needs a prefill rank");
         assert!(prefill_ranks < ranks.len(), "disaggregation needs a decode rank");
-        Router { ranks, policy: RoutePolicy::Disagg, prefill_ranks }
+        let health = vec![RankHealth::Active; ranks.len()];
+        Router { ranks, policy: RoutePolicy::Disagg, prefill_ranks, health }
     }
 
     pub fn dp(&self) -> usize {
         self.ranks.len()
+    }
+
+    pub fn health(&self, i: usize) -> RankHealth {
+        self.health[i]
+    }
+
+    pub fn set_health(&mut self, i: usize, h: RankHealth) {
+        self.health[i] = h;
+    }
+
+    /// Indices of ranks currently in the routing set.
+    pub fn active_ranks(&self) -> Vec<usize> {
+        (0..self.ranks.len()).filter(|&i| self.health[i] == RankHealth::Active).collect()
+    }
+
+    /// Grow the fleet by one active rank; returns its index.
+    pub fn push_rank(&mut self, rank: Server) -> usize {
+        self.ranks.push(rank);
+        self.health.push(RankHealth::Active);
+        self.ranks.len() - 1
     }
 
     /// Load snapshot of every rank for `req` (the policy input). The trie
@@ -171,14 +209,22 @@ impl Router {
     /// disaggregated prefill rank holds only the prompt's pages (the KV
     /// migrates at handoff), so its feasibility need excludes generation.
     pub fn loads(&self, req: &ServeRequest) -> Vec<RankLoad> {
+        let all: Vec<usize> = (0..self.ranks.len()).collect();
+        self.loads_for(&all, req)
+    }
+
+    /// Load snapshots for a subset of ranks (in `idxs` order) — the
+    /// admission path only probes ranks still in the routing set, so a
+    /// drained or dead rank never sees an affinity probe.
+    fn loads_for(&self, idxs: &[usize], req: &ServeRequest) -> Vec<RankLoad> {
         let pages_needed = match self.policy {
             RoutePolicy::Disagg => req.prompt.len().div_ceil(PAGE_TOKENS),
             _ => (req.prompt.len() + req.max_new_tokens).div_ceil(PAGE_TOKENS),
         };
         let probe = self.policy == RoutePolicy::PrefixAffinity;
-        self.ranks
-            .iter()
-            .map(|r| {
+        idxs.iter()
+            .map(|&i| {
+                let r = &self.ranks[i];
                 let prefix_hit_tokens =
                     if probe { r.cache.prefix_match_tokens(&req.prompt) } else { 0 };
                 RankLoad {
@@ -193,21 +239,31 @@ impl Router {
     }
 
     pub fn submit(&mut self, req: ServeRequest) -> usize {
-        let loads = self.loads(&req);
-        let rank = match self.policy {
-            RoutePolicy::ShortestQueue => pick_rank(&loads),
-            RoutePolicy::PrefixAffinity => pick_rank_affinity(&loads, PAGE_TOKENS),
-            // admissions see only the prefill ranks
-            RoutePolicy::Disagg => pick_rank(&loads[..self.prefill_ranks]),
+        // admissions see only active ranks (Disagg: active prefill ranks)
+        let targets: Vec<usize> = match self.policy {
+            RoutePolicy::Disagg => (0..self.prefill_ranks)
+                .filter(|&i| self.health[i] == RankHealth::Active)
+                .collect(),
+            _ => self.active_ranks(),
         };
+        assert!(!targets.is_empty(), "no active rank to route request {} to", req.id);
+        let loads = self.loads_for(&targets, &req);
+        let rank = targets[match self.policy {
+            RoutePolicy::ShortestQueue | RoutePolicy::Disagg => pick_rank(&loads),
+            RoutePolicy::PrefixAffinity => pick_rank_affinity(&loads, PAGE_TOKENS),
+        }];
         self.ranks[rank].submit(req);
         rank
     }
 
-    /// Step every rank once (round-robin fairness); true if any progressed.
+    /// Step every live rank once (round-robin fairness); true if any
+    /// progressed. Dead ranks hold no work and are skipped.
     pub fn step_all(&mut self) -> anyhow::Result<bool> {
         let mut any = false;
-        for r in &mut self.ranks {
+        for (i, r) in self.ranks.iter_mut().enumerate() {
+            if self.health[i] == RankHealth::Dead {
+                continue;
+            }
             any |= r.step()?;
         }
         Ok(any)
@@ -371,6 +427,36 @@ mod tests {
         // ties break on index
         let loads = [load(10, 20, 10), load(10, 20, 10)];
         assert_eq!(pick_handoff_rank(&loads), Some(0));
+    }
+
+    // --- elastic membership -------------------------------------------------
+
+    #[test]
+    fn submit_skips_drained_and_dead_ranks() {
+        let mk = || {
+            Server::new(
+                crate::runtime::ModelEngine::sim(crate::kvcache::CacheMode::Fp8).unwrap(),
+                64,
+            )
+        };
+        let mut router = Router::new(vec![mk(), mk(), mk()]);
+        assert_eq!(router.active_ranks(), vec![0, 1, 2]);
+        router.set_health(0, RankHealth::Draining);
+        router.set_health(2, RankHealth::Dead);
+        assert_eq!(router.active_ranks(), vec![1]);
+        let req = ServeRequest {
+            id: 7,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            temperature: 0.0,
+            seed: 7,
+            ignore_eos: true,
+        };
+        // the only active rank wins despite higher indices existing
+        assert_eq!(router.submit(req), 1);
+        let ri = router.push_rank(mk());
+        assert_eq!(ri, 3);
+        assert_eq!(router.active_ranks(), vec![1, 3]);
     }
 
     #[test]

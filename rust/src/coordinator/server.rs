@@ -26,6 +26,16 @@ use std::time::Instant;
 /// (preempt/resume churn without any engine progress = livelock).
 const STALL_LIMIT: usize = 10_000;
 
+/// What `Server::evacuate` salvaged off a failed rank.
+pub struct Evacuation {
+    /// fresh waiting requests (no KV yet) — resubmit through the router
+    pub resubmit: Vec<ServeRequest>,
+    /// live sequences exported to the wire for re-migration elsewhere
+    pub migrate: Vec<(Sequence, KvWireBlock)>,
+    /// sequences whose state was unrecoverable
+    pub dropped: usize,
+}
+
 pub struct Server {
     pub engine: ModelEngine,
     pub cache: PagedKvCache,
@@ -456,6 +466,48 @@ impl Server {
         self.metrics.handoffs_in += 1;
         self.running.push(seq);
         Ok(())
+    }
+
+    /// Tear this rank down after a failure, leaving it empty. Where each
+    /// queued sequence goes depends on where its state lives:
+    ///
+    /// * fresh waiting (no KV yet) → `resubmit`: re-route through the
+    ///   cluster as if just arrived (same request, deterministic replay);
+    /// * running (live device KV) → `migrate` when `recover`: exported to
+    ///   the wire format for re-import on a survivor, else dropped;
+    /// * already-serialized outbox transfers ride `migrate` the same way;
+    /// * spilled waiting → dropped: their KV lived in this rank's host
+    ///   memory, which died with it.
+    pub fn evacuate(&mut self, recover: bool) -> anyhow::Result<Evacuation> {
+        let mut ev = Evacuation { resubmit: Vec::new(), migrate: Vec::new(), dropped: 0 };
+        for seq in std::mem::take(&mut self.waiting) {
+            if seq.spilled.is_some() {
+                ev.dropped += 1;
+            } else {
+                ev.resubmit.push(seq.request);
+            }
+        }
+        for seq in std::mem::take(&mut self.running) {
+            if recover {
+                let wire = self
+                    .cache
+                    .export_wire(seq.id())
+                    .map_err(|e| anyhow::anyhow!("evacuate seq {}: {e:?}", seq.id()))?;
+                self.cache.release(seq.id());
+                ev.migrate.push((seq, wire));
+            } else {
+                self.cache.release(seq.id());
+                ev.dropped += 1;
+            }
+        }
+        for (seq, wire) in std::mem::take(&mut self.handoff_outbox) {
+            if recover {
+                ev.migrate.push((seq, wire));
+            } else {
+                ev.dropped += 1;
+            }
+        }
+        Ok(ev)
     }
 
     fn finish(&mut self, seq: Sequence) {

@@ -74,6 +74,13 @@ impl KvWireBlock {
             CacheMode::Bf16 => 2 * (d_c + d_r),
         }
     }
+
+    /// KV pages a receiving rank must reserve to import this block and then
+    /// generate `remaining_tokens` more — the admission check shared by the
+    /// disaggregated handoff and failure-recovery re-migration paths.
+    pub fn pages_needed(&self, remaining_tokens: usize) -> usize {
+        (self.tokens + remaining_tokens).div_ceil(crate::kvcache::PAGE_TOKENS)
+    }
 }
 
 #[cfg(test)]
@@ -106,5 +113,21 @@ mod tests {
         assert_eq!(block.bf16_equiv_bytes(), 3 * 2 * 2 * (16 + 8));
         assert_eq!(block.mode(), CacheMode::Fp8);
         assert_eq!(block.tokens(), 3);
+    }
+
+    #[test]
+    fn pages_needed_reserves_block_plus_remaining_generation() {
+        let block = KvWireBlock {
+            tokens: 3,
+            n_layers: 2,
+            d_c: 16,
+            d_r: 8,
+            payload: WirePayload::Fp8 { codes: vec![0; 3 * 2 * 16], scales: vec![1.0; 3 * 2] },
+            rope: vec![0; 3 * 2 * 8],
+        };
+        let page = crate::kvcache::PAGE_TOKENS;
+        assert_eq!(block.pages_needed(0), 1);
+        assert_eq!(block.pages_needed(page - 3), 1);
+        assert_eq!(block.pages_needed(page - 2), 2);
     }
 }

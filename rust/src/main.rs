@@ -5,14 +5,18 @@
 //!   serve   [--mode fp8|bf16|disagg] [--kernel snapmla|amla|pcast]
 //!           [--requests N] [--dp N] [--pages N]
 //!           [--prefill-ranks N] [--route affinity|shortest]
-//!           [--shared-frac F] [--shared-groups N] [--shared-tokens N] …
+//!           [--shared-frac F] [--shared-groups N] [--shared-tokens N]
+//!           [--elastic [--fail-at S] [--fail-rank N] [--no-recover]] …
 //!                                — serve a synthetic trace through the
 //!                                  cluster (prefix-affinity routing by
 //!                                  default; `--mode disagg` splits the dp
 //!                                  ranks into `--prefill-ranks` prefill
 //!                                  ranks migrating KV to the rest; the FP8
 //!                                  attention path runs the `--kernel`
-//!                                  decode variant), print per-rank metrics
+//!                                  decode variant; `--elastic` kills a
+//!                                  rank mid-trace and re-migrates its live
+//!                                  KV to the survivors over the FP8 wire),
+//!                                  print per-rank metrics
 //!   fidelity [--ctx N] [--layers N] [--kernel snapmla|amla|pcast]
 //!                                — Table-3 config fidelity study plus the
 //!                                  kernel-variant comparison (rust sim)
@@ -52,7 +56,7 @@ fn kernel_variant(args: &Args) -> anyhow::Result<VariantKind> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse_with_flags(&["quick", "verbose"]);
+    let args = Args::parse_with_flags(&["quick", "verbose", "elastic", "no-recover"]);
     match args.positional.first().map(String::as_str) {
         Some("info") => info(&args),
         Some("serve") => serve(&args),
@@ -108,7 +112,10 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "disagg" => (CacheMode::Fp8, true),
         other => anyhow::bail!("--mode must be 'fp8', 'bf16' or 'disagg', got '{other}'"),
     };
-    let dp = args.usize_or("dp", if disagg { 2 } else { 1 });
+    let elastic = args.has("elastic");
+    anyhow::ensure!(!(elastic && disagg), "--elastic demos the colocated topology");
+    let dp = args.usize_or("dp", if disagg { 2 } else if elastic { 3 } else { 1 });
+    anyhow::ensure!(!elastic || dp >= 2, "--elastic needs --dp >= 2 (a survivor must remain)");
     let pages = args.usize_or("pages", 256);
     let dir = artifacts_dir(args);
     let trace = TraceGen::generate(&TraceConfig {
@@ -127,6 +134,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         shared_prefix_groups: args.usize_or("shared-groups", 4),
         shared_prefix_tokens: args.usize_or("shared-tokens", 256),
         max_total_tokens: args.usize_or("token-budget", 0),
+        diurnal_period_s: args.f64_or("diurnal-period", 0.0),
+        diurnal_amp: args.f64_or("diurnal-amp", 1.0),
     });
     let policy = match args.get_or("route", "affinity") {
         "shortest" => RoutePolicy::ShortestQueue,
@@ -163,6 +172,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         // shortest-queue
         cluster.step_all()?;
     }
+    if elastic {
+        // drive to the failure instant, kill the rank, and let the
+        // survivors pick up its re-migrated KV
+        let fail_at = args.f64_or("fail-at", 10.0);
+        let fi = args.usize_or("fail-rank", dp - 1);
+        anyhow::ensure!(fi < dp, "--fail-rank must be < dp (dp {dp}, got {fi})");
+        let costs = vec![1.0; cluster.dp()];
+        cluster.run_until(&costs, fail_at)?;
+        cluster.fail_rank(fi, !args.has("no-recover"))?;
+    }
     let outcomes = cluster.run_to_completion()?;
     println!(
         "completed {} requests over {} rank(s) ({:?}): routed {:?}, \
@@ -180,6 +199,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             cluster.handoffs(),
             cluster.handoff_wire_bytes() as f64 / 1e6
         );
+    }
+    if elastic {
+        let m = &cluster.metrics;
+        println!(
+            "elastic: {} evacuated, {} recovered over the FP8 wire, {} dropped",
+            m.evacuated, m.recovered, m.dropped
+        );
+        for (t, kind, ri, after) in &cluster.membership_log {
+            println!("  t={t:.1}s {} rank {ri} -> {after} active", kind.as_str());
+        }
     }
     for (i, rank) in cluster.router.ranks.iter().enumerate() {
         println!("{}", rank.metrics.render(&format!("rank {i} ({mode:?})")));

@@ -82,6 +82,12 @@ impl<T> EventLoop<T> {
         self.heap.pop().map(|e| e.0)
     }
 
+    /// The earliest event (by the documented total order) without removing
+    /// it, if any is pending.
+    pub fn peek(&self) -> Option<&Event<T>> {
+        self.heap.peek().map(|e| &e.0)
+    }
+
     /// The earliest scheduled time, if any event is pending.
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.0.time)
@@ -164,6 +170,54 @@ mod tests {
     #[should_panic(expected = "finite")]
     fn rejects_non_finite_times() {
         EventLoop::new().push(f64::INFINITY, 0, ());
+    }
+
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut ev = EventLoop::new();
+        ev.push(2.0, 1, "late");
+        ev.push(1.0, 3, "early");
+        let (t, rank) = {
+            let e = ev.peek().unwrap();
+            (e.time, e.rank)
+        };
+        assert_eq!((t, rank), (1.0, 3));
+        let popped = ev.pop().unwrap();
+        assert_eq!((popped.time, popped.rank, popped.payload), (1.0, 3, "early"));
+        assert_eq!(ev.peek().unwrap().payload, "late");
+    }
+
+    #[test]
+    fn ordering_stable_under_membership_churn() {
+        // ranks join (new higher ids pushed mid-drain) and fail (their
+        // pending wake-ups popped and discarded) while the loop drains;
+        // popped times must stay globally non-decreasing and two identical
+        // churn schedules must produce the identical pop sequence
+        let drive = || {
+            let mut ev = EventLoop::new();
+            for ri in 0..3usize {
+                ev.push(0.5 + ri as f64 * 0.25, ri, ri);
+            }
+            let mut order = Vec::new();
+            let mut spawned = 3usize;
+            while let Some(e) = ev.pop() {
+                if e.payload == 1 && e.time < 2.0 {
+                    continue; // rank 1 failed: drop its wake-up on the floor
+                }
+                order.push((e.time.to_bits(), e.rank, e.seq));
+                if spawned < 8 {
+                    // a join schedules the new rank's first wake-up later
+                    // than everything already popped
+                    ev.push(e.time + 0.75, spawned, spawned);
+                    spawned += 1;
+                }
+            }
+            for w in order.windows(2) {
+                assert!(f64::from_bits(w[1].0) >= f64::from_bits(w[0].0));
+            }
+            order
+        };
+        assert_eq!(drive(), drive());
     }
 
     #[test]

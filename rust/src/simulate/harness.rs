@@ -1,6 +1,6 @@
 //! The virtual-time serving harness: ONE simulation engine behind every
 //! serve bench (`serve_mixed`, `serve_cluster`, `serve_disagg`,
-//! `serve_straggler`) and their Python ports
+//! `serve_straggler`, `serve_elastic`) and their Python ports
 //! (`python/tests/serve_port_common.py` mirrors this file function for
 //! function — the committed BENCH_*.json baselines are generated there, so
 //! any edit here must be mirrored and the baselines regenerated).
@@ -24,10 +24,19 @@
 //!   its next action is charged from its own clock (the committed
 //!   asynchronous semantics; see DESIGN.md "Simulation core").
 //!
+//! The event-driven mode optionally carries **elastic membership**
+//! ([`crate::simulate::ElasticConfig`]): injected rank failures whose
+//! in-progress sequences re-migrate to survivors over the FP8 wire path,
+//! SLO-driven autoscaling (join on queue-depth / TTFT-p95 breach,
+//! drain-then-retire on sustained idle), and drop-not-panic semantics for
+//! sequences that can never place. Each membership transition is recorded
+//! on the rank timeline as a [`MembershipEvent`].
+//!
 //! No wall clock anywhere: two runs produce byte-identical numbers.
 
 use super::clock::EventLoop;
 use super::scenario::{Scenario, SimRoute, SimTiming};
+use crate::anyhow;
 use crate::coordinator::router::{pick_handoff_rank, pick_rank, pick_rank_affinity, RankLoad};
 use crate::coordinator::scheduler::{Action, RunningSeq, Scheduler, WaitingSeq};
 use crate::kvcache::PAGE_TOKENS;
@@ -37,6 +46,42 @@ use crate::perfmodel::e2e::{
 use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
 use crate::util::stats::Stats;
 use crate::workload::Request;
+
+/// Sliding window of recent TTFT samples feeding the autoscaler's SLO
+/// breach signal.
+const TTFT_WINDOW: usize = 32;
+
+/// A fleet-membership transition, recorded on [`SimResult::rank_timeline`]
+/// (and mirrored by `cluster::ClusterServer`'s elastic operations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MembershipEvent {
+    /// a freshly provisioned rank came up: empty queues, cold cache
+    RankJoin,
+    /// a rank died: its queues evacuate or drop, its published prefixes die
+    RankFail,
+    /// a rank stopped taking new work and will retire once drained
+    RankDrain,
+}
+
+impl MembershipEvent {
+    /// The timeline label carried by the committed baselines.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MembershipEvent::RankJoin => "join",
+            MembershipEvent::RankFail => "fail",
+            MembershipEvent::RankDrain => "drain",
+        }
+    }
+}
+
+/// Rank lifecycle under elastic membership (every rank is `Active` for the
+/// whole run when the scenario carries no elastic config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RankState {
+    Active,
+    Draining,
+    Dead,
+}
 
 /// Step-cost model for one scenario's ranks.
 #[derive(Clone, Copy, Debug)]
@@ -119,8 +164,14 @@ pub struct SimResult {
     pub prefill_ranks: usize,
     pub decode_ranks: usize,
     pub requests: usize,
+    /// requests that finished their full output (not dropped, not stranded)
+    pub completed: usize,
+    /// requests dropped by the elastic drop rule (0 without elastic config)
+    pub dropped: usize,
     pub gen_tokens: u64,
     pub wall_s: f64,
+    /// TTFT over requests that emitted at least one token (a dropped
+    /// request never contributes a sample)
     pub ttft: Stats,
     /// TTFT over requests NOT drawn from the long-prompt mixture
     pub ttft_short: Stats,
@@ -142,6 +193,22 @@ pub struct SimResult {
     pub wire_fp8_bytes: u64,
     pub wire_bf16_bytes: u64,
     pub routed: Vec<u64>,
+    /// failed-rank sequences whose KV re-migrated over the wire
+    pub evacuated: u64,
+    /// evacuated sequences that later placed on a survivor
+    pub recovered: u64,
+    pub fails: u64,
+    pub joins: u64,
+    pub drains: u64,
+    /// high-water mark of the active-rank count
+    pub peak_active_ranks: usize,
+    /// active ranks when the run ended
+    pub final_active_ranks: usize,
+    /// time-weighted mean active-rank count (the fixed fleet size without
+    /// elastic config)
+    pub mean_active_ranks: f64,
+    /// (time, event, rank, active ranks after) membership transitions
+    pub rank_timeline: Vec<(f64, MembershipEvent, usize, usize)>,
 }
 
 impl SimResult {
@@ -171,6 +238,10 @@ struct SimSeq {
     transferred: usize,
     first_token: Option<f64>,
     last_token: Option<f64>,
+    /// dropped by the elastic drop rule — excluded from the latency stats
+    dropped: bool,
+    /// evacuated off a failed rank, currently riding the wire
+    evac: bool,
 }
 
 struct SimRank {
@@ -181,6 +252,7 @@ struct SimRank {
     shared: Vec<usize>,
     /// rank-local clock (event timing; stays 0 under lock-step)
     t: f64,
+    state: RankState,
 }
 
 #[derive(Default)]
@@ -200,6 +272,12 @@ struct SimStats {
     wire_fp8_bytes: u64,
     wire_bf16_bytes: u64,
     routed: Vec<u64>,
+    dropped: u64,
+    recovered: u64,
+    evacuated: u64,
+    fails: u64,
+    joins: u64,
+    drains: u64,
 }
 
 /// The simulation state machine. Construct via [`Scenario::run`].
@@ -209,6 +287,9 @@ pub(super) struct Harness<'a> {
     prefill_sched: Scheduler,
     speeds: Vec<f64>,
     page: usize,
+    /// prefix-group count (sizes every rank's published-page table,
+    /// including ranks joining mid-run)
+    groups: usize,
     seqs: Vec<SimSeq>,
     ranks: Vec<SimRank>,
     /// (sid, ready_at) FIFO of serialized sequences in transit
@@ -217,6 +298,23 @@ pub(super) struct Harness<'a> {
     itl: Vec<f64>,
     /// lock-step: tokens produced this round, stamped at the barrier
     pending_emits: Vec<usize>,
+    // --- elastic membership state (inert without scen.elastic) ---
+    /// failure injections sorted by (time, rank)
+    fail_sched: Vec<(f64, usize)>,
+    next_fail: usize,
+    /// virtual times at which provisioning ranks come up
+    pending_joins: Vec<f64>,
+    /// the autoscaler's next evaluation instant
+    next_eval: f64,
+    /// start of the current sustained-low-load window
+    low_since: Option<f64>,
+    /// sliding TTFT window feeding the autoscale SLO signal
+    recent_ttft: Vec<f64>,
+    rank_timeline: Vec<(f64, MembershipEvent, usize, usize)>,
+    /// time integral of the active-rank count (last stamp + accumulator)
+    a_last: f64,
+    a_int: f64,
+    peak_active: usize,
 }
 
 fn pages_for(tokens: usize, page: usize) -> usize {
@@ -242,6 +340,12 @@ impl<'a> Harness<'a> {
                  exactly why the straggler scenario is event-driven"
             );
         }
+        if scen.elastic.is_some() {
+            assert!(
+                scen.timing == SimTiming::EventDriven && scen.prefill_ranks == 0,
+                "elastic membership requires the colocated event-driven mode"
+            );
+        }
         let groups = trace
             .iter()
             .filter_map(|r| r.prefix_group)
@@ -265,6 +369,8 @@ impl<'a> Harness<'a> {
                 transferred: 0,
                 first_token: None,
                 last_token: None,
+                dropped: false,
+                evac: false,
             })
             .collect();
         let ranks = (0..n)
@@ -274,20 +380,47 @@ impl<'a> Harness<'a> {
                 free: scen.capacity_pages,
                 shared: vec![0; groups],
                 t: 0.0,
+                state: RankState::Active,
             })
             .collect();
+        let fail_sched = scen
+            .elastic
+            .as_ref()
+            .map(|e| {
+                let mut f = e.failures.clone();
+                f.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                f
+            })
+            .unwrap_or_default();
+        let next_eval = scen
+            .elastic
+            .as_ref()
+            .and_then(|e| e.autoscale.as_ref())
+            .map(|a| a.eval_interval_s)
+            .unwrap_or(0.0);
         Harness {
             scen,
             sched: Scheduler::new(scen.sched),
             prefill_sched: Scheduler::new(scen.prefill_sched.unwrap_or(scen.sched)),
             speeds,
             page: scen.sched.page_tokens,
+            groups,
             seqs,
             ranks,
             in_flight: Vec::new(),
             stats: SimStats { routed: vec![0; n], ..SimStats::default() },
             itl: Vec::new(),
             pending_emits: Vec::new(),
+            fail_sched,
+            next_fail: 0,
+            pending_joins: Vec::new(),
+            next_eval,
+            low_since: None,
+            recent_ttft: Vec::new(),
+            rank_timeline: Vec::new(),
+            a_last: 0.0,
+            a_int: 0.0,
+            peak_active: n,
         }
     }
 
@@ -306,6 +439,23 @@ impl<'a> Harness<'a> {
         s.last_token = Some(t);
     }
 
+    /// Event-mode first-token stamp; feeds the autoscale SLO window.
+    fn stamp_first(&mut self, sid: usize, t_emit: Option<f64>) {
+        let Some(t) = t_emit else { return };
+        let s = &mut self.seqs[sid];
+        s.first_token = Some(t);
+        if self.scen.elastic.is_some() {
+            self.recent_ttft.push(t - s.arrival);
+            if self.recent_ttft.len() > TTFT_WINDOW {
+                self.recent_ttft.remove(0);
+            }
+        }
+    }
+
+    fn active_count(&self) -> usize {
+        self.ranks.iter().filter(|r| r.state == RankState::Active).count()
+    }
+
     fn private_pages(&self, sid: usize) -> usize {
         let s = &self.seqs[sid];
         pages_for(s.cached, self.page) - s.adopted - s.transferred
@@ -321,34 +471,41 @@ impl<'a> Harness<'a> {
         }
     }
 
-    fn colocated_loads(&self, sid: usize) -> Vec<RankLoad> {
+    /// Routing view of the colocated fleet. Dead and draining ranks leave
+    /// the routing set — affinity probes skip them, so a retiring rank's
+    /// published prefixes attract nothing. Returns (rank indices, loads).
+    fn colocated_loads(&self, sid: usize) -> (Vec<usize>, Vec<RankLoad>) {
         let s = &self.seqs[sid];
         let needed = pages_for(s.prompt + s.out, self.page);
-        (0..self.ranks.len())
-            .map(|ri| {
-                let r = &self.ranks[ri];
-                let queued: usize = r
-                    .waiting
-                    .iter()
-                    .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
-                    .sum();
-                let remaining: usize = r
-                    .running
-                    .iter()
-                    .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                    .sum();
-                RankLoad {
-                    tokens: queued + remaining,
-                    free_pages: r.free,
-                    pages_needed: needed,
-                    prefix_hit_tokens: self.hit_pages(ri, sid) * self.page,
-                    evictable_pages: 0,
-                }
-            })
-            .collect()
+        let mut idxs = Vec::new();
+        let mut loads = Vec::new();
+        for (ri, r) in self.ranks.iter().enumerate() {
+            if r.state != RankState::Active {
+                continue;
+            }
+            let queued: usize = r
+                .waiting
+                .iter()
+                .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
+                .sum();
+            let remaining: usize = r
+                .running
+                .iter()
+                .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                .sum();
+            idxs.push(ri);
+            loads.push(RankLoad {
+                tokens: queued + remaining,
+                free_pages: r.free,
+                pages_needed: needed,
+                prefix_hit_tokens: self.hit_pages(ri, sid) * self.page,
+                evictable_pages: 0,
+            });
+        }
+        (idxs, loads)
     }
 
-    fn route(&mut self, sid: usize) {
+    fn route(&mut self, sid: usize) -> anyhow::Result<()> {
         let rank = match self.scen.routing {
             SimRoute::Single => 0,
             SimRoute::Disagg => {
@@ -380,21 +537,48 @@ impl<'a> Harness<'a> {
                 pick_rank(&loads)
             }
             SimRoute::PrefixAffinity => {
-                pick_rank_affinity(&self.colocated_loads(sid), self.page)
+                let (idxs, loads) = self.colocated_loads(sid);
+                if idxs.is_empty() {
+                    anyhow::bail!(
+                        "no active ranks to route request {sid} ({} total, {} joining)",
+                        self.ranks.len(),
+                        self.pending_joins.len()
+                    );
+                }
+                idxs[pick_rank_affinity(&loads, self.page)]
             }
-            SimRoute::ShortestQueue => pick_rank(&self.colocated_loads(sid)),
+            SimRoute::ShortestQueue => {
+                let (idxs, loads) = self.colocated_loads(sid);
+                if idxs.is_empty() {
+                    anyhow::bail!(
+                        "no active ranks to route request {sid} ({} total, {} joining)",
+                        self.ranks.len(),
+                        self.pending_joins.len()
+                    );
+                }
+                idxs[pick_rank(&loads)]
+            }
         };
         self.stats.routed[rank] += 1;
         self.ranks[rank].waiting.push(sid);
+        Ok(())
     }
 
     /// Every ready transfer lands on the decode rank with headroom;
     /// slot-saturated ranks are marked infeasible by inflating their need.
+    /// Only ACTIVE ranks take migrants — a draining or dead rank never
+    /// adopts work. Under elastic membership a transfer that can NEVER
+    /// place (needs more pages than one rank holds, or the fleet is gone)
+    /// is dropped and recorded, not parked forever and not panicked.
     fn deliver(&mut self, clock: f64) -> bool {
         let mut delivered = false;
         let mut keep = Vec::new();
         let pending = std::mem::take(&mut self.in_flight);
         let prefill_ranks = self.scen.prefill_ranks;
+        let elastic = self.scen.elastic.is_some();
+        let targets: Vec<usize> = (prefill_ranks..self.ranks.len())
+            .filter(|&ri| self.ranks[ri].state == RankState::Active)
+            .collect();
         for (sid, ready) in pending {
             if ready > clock {
                 keep.push((sid, ready));
@@ -403,8 +587,18 @@ impl<'a> Harness<'a> {
             let s = &self.seqs[sid];
             let remaining = s.out - s.generated;
             let needed = pages_for(s.cached + remaining, self.page);
-            let loads: Vec<RankLoad> = (prefill_ranks..self.ranks.len())
-                .map(|ri| {
+            if elastic
+                && (needed > self.scen.capacity_pages
+                    || (targets.is_empty() && self.pending_joins.is_empty()))
+            {
+                self.seqs[sid].dropped = true;
+                self.stats.dropped += 1;
+                delivered = true;
+                continue;
+            }
+            let loads: Vec<RankLoad> = targets
+                .iter()
+                .map(|&ri| {
                     let r = &self.ranks[ri];
                     let tokens: usize = r
                         .running
@@ -429,10 +623,15 @@ impl<'a> Harness<'a> {
             match pick_handoff_rank(&loads) {
                 Some(j) => {
                     let cached = self.seqs[sid].cached;
-                    let r = &mut self.ranks[prefill_ranks + j];
+                    let r = &mut self.ranks[targets[j]];
                     r.free -= pages_for(cached, self.page);
                     r.running.push(sid);
                     self.stats.handoffs += 1;
+                    let s = &mut self.seqs[sid];
+                    if s.evac {
+                        s.evac = false;
+                        self.stats.recovered += 1;
+                    }
                     delivered = true;
                 }
                 None => keep.push((sid, ready)),
@@ -440,6 +639,137 @@ impl<'a> Harness<'a> {
         }
         self.in_flight = keep;
         delivered
+    }
+
+    fn note_membership(&mut self, kind: MembershipEvent, ri: usize, clock: f64) {
+        let na = self.active_count();
+        self.peak_active = self.peak_active.max(na);
+        self.rank_timeline.push((clock, kind, ri, na));
+    }
+
+    /// A failed rank's in-progress sequence: with recovery on, its KV
+    /// re-migrates to a survivor over the FP8 wire path (priced exactly
+    /// like a prefill→decode handoff); a still-fresh request (no KV yet)
+    /// simply re-routes; otherwise the request is dropped and recorded.
+    fn evacuate(&mut self, sid: usize, clock: f64) -> anyhow::Result<()> {
+        let recover = self.scen.elastic.as_ref().is_some_and(|e| e.recover);
+        let s = &mut self.seqs[sid];
+        s.spilled = false;
+        s.adopted = 0;
+        s.transferred = 0;
+        if recover && s.cached > 0 {
+            s.evac = true;
+            let cached = s.cached;
+            self.stats.evacuated += 1;
+            let (fp8, bf16) = self.scen.cost.wire_bytes(cached);
+            self.stats.wire_fp8_bytes += fp8;
+            self.stats.wire_bf16_bytes += bf16;
+            let transfer = self.scen.cost.handoff(cached);
+            self.in_flight.push((sid, clock + transfer));
+        } else if s.cached == 0 {
+            // no KV built yet — this is still just a request; re-route it
+            self.route(sid)?;
+        } else {
+            s.dropped = true;
+            self.stats.dropped += 1;
+        }
+        Ok(())
+    }
+
+    /// [`MembershipEvent::RankFail`] — the rank leaves the routing set
+    /// immediately; queued-but-fresh requests re-route, sequences with KV
+    /// either re-migrate (recover) or drop; the rank's published prefixes
+    /// die with it.
+    fn fail_rank(&mut self, ri: usize, clock: f64) -> anyhow::Result<()> {
+        self.ranks[ri].state = RankState::Dead;
+        self.stats.fails += 1;
+        if self.active_count() == 0 {
+            anyhow::bail!(
+                "rank {ri} failed but no active ranks remain ({} waiting + {} running \
+                 stranded, {} joining)",
+                self.ranks[ri].waiting.len(),
+                self.ranks[ri].running.len(),
+                self.pending_joins.len()
+            );
+        }
+        let waiting = std::mem::take(&mut self.ranks[ri].waiting);
+        let running = std::mem::take(&mut self.ranks[ri].running);
+        self.ranks[ri].shared.iter_mut().for_each(|g| *g = 0);
+        self.ranks[ri].free = self.scen.capacity_pages;
+        for sid in waiting.into_iter().chain(running) {
+            self.evacuate(sid, clock)?;
+        }
+        self.note_membership(MembershipEvent::RankFail, ri, clock);
+        Ok(())
+    }
+
+    /// [`MembershipEvent::RankJoin`] — a freshly provisioned rank: empty
+    /// queues, a cold cache (no published prefixes), clock at now.
+    fn join_rank(&mut self, clock: f64) {
+        self.ranks.push(SimRank {
+            waiting: Vec::new(),
+            running: Vec::new(),
+            free: self.scen.capacity_pages,
+            shared: vec![0; self.groups],
+            t: clock,
+            state: RankState::Active,
+        });
+        self.speeds.push(1.0);
+        self.stats.routed.push(0);
+        self.stats.joins += 1;
+        self.note_membership(MembershipEvent::RankJoin, self.ranks.len() - 1, clock);
+    }
+
+    /// Scale up on queue-depth or TTFT-p95 SLO breach; drain-then-remove
+    /// the highest-numbered active rank after sustained low load.
+    fn autoscale_eval(&mut self, clock: f64) {
+        let Some(auto) = self.scen.elastic.as_ref().and_then(|e| e.autoscale) else {
+            return;
+        };
+        let na = self.active_count();
+        let q_up = self
+            .ranks
+            .iter()
+            .filter(|r| r.state == RankState::Active)
+            .map(|r| r.waiting.len())
+            .sum::<usize>() as f64
+            / na as f64;
+        let busy = self
+            .ranks
+            .iter()
+            .filter(|r| r.state == RankState::Active)
+            .map(|r| r.waiting.len() + r.running.len())
+            .sum::<usize>() as f64
+            / na as f64;
+        let breach = q_up > auto.queue_high
+            || (auto.ttft_slo_s > 0.0
+                && self.recent_ttft.len() >= 8
+                && Stats::from(&self.recent_ttft).percentile(95.0) > auto.ttft_slo_s);
+        if breach {
+            self.low_since = None;
+            if na + self.pending_joins.len() < auto.max_ranks {
+                self.pending_joins.push(clock + auto.join_delay_s);
+            }
+        } else if busy <= auto.queue_low && self.pending_joins.is_empty() {
+            match self.low_since {
+                None => self.low_since = Some(clock),
+                Some(since) if clock - since >= auto.idle_for_s && na > auto.min_ranks => {
+                    let victim = (0..self.ranks.len())
+                        .filter(|&ri| self.ranks[ri].state == RankState::Active)
+                        .max()
+                        .expect("na > min_ranks >= 1 active ranks");
+                    // MembershipEvent::RankDrain — stops taking new work
+                    // now, finishes its queue, then retires
+                    self.ranks[victim].state = RankState::Draining;
+                    self.stats.drains += 1;
+                    self.low_since = Some(clock);
+                    self.note_membership(MembershipEvent::RankDrain, victim, clock);
+                }
+                Some(_) => {}
+            }
+        } else {
+            self.low_since = None;
+        }
     }
 
     fn publish(&mut self, rank: usize, sid: usize) {
@@ -485,8 +815,9 @@ impl<'a> Harness<'a> {
     /// Apply one scheduler action on rank `ri`; returns its (speed-scaled)
     /// cost. Event timing passes `t_start = Some(rank clock)` and stamps
     /// tokens at `t_start + cost`; lock-step passes None and the run loop
-    /// stamps at the round barrier.
-    fn apply(&mut self, ri: usize, action: Action, t_start: Option<f64>) -> f64 {
+    /// stamps at the round barrier. Errors instead of panicking on a
+    /// malformed action (e.g. an empty decode batch).
+    fn apply(&mut self, ri: usize, action: Action, t_start: Option<f64>) -> anyhow::Result<f64> {
         let cost;
         match action {
             Action::Idle => cost = 0.0,
@@ -504,11 +835,8 @@ impl<'a> Harness<'a> {
                     s.cached = prompt;
                     s.prefilled = prompt;
                     self.publish(ri, sid);
-                    let s = &mut self.seqs[sid];
-                    s.generated = 1;
-                    if t_emit.is_some() {
-                        s.first_token = t_emit;
-                    }
+                    self.seqs[sid].generated = 1;
+                    self.stamp_first(sid, t_emit);
                     self.emit(sid, t_emit);
                     if self.seqs[sid].generated >= self.seqs[sid].out {
                         let freed = self.private_pages(sid);
@@ -538,6 +866,14 @@ impl<'a> Harness<'a> {
                 cost = 0.0;
             }
             Action::Decode(idxs) => {
+                if idxs.is_empty() {
+                    anyhow::bail!(
+                        "scheduler produced an empty decode batch on rank {ri} \
+                         ({} waiting, {} running)",
+                        self.ranks[ri].waiting.len(),
+                        self.ranks[ri].running.len()
+                    );
+                }
                 let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
                 let ctx = ids.iter().map(|&sid| self.seqs[sid].cached).max().unwrap() + 1;
                 cost = self.scen.cost.decode(ids.len(), ctx) * self.speeds[ri];
@@ -630,9 +966,7 @@ impl<'a> Harness<'a> {
                     let s = &mut self.seqs[sid];
                     if s.prefilled == s.prompt {
                         s.generated = 1;
-                        if t_emit.is_some() {
-                            s.first_token = t_emit;
-                        }
+                        self.stamp_first(sid, t_emit);
                         self.emit(sid, t_emit);
                         if self.seqs[sid].generated >= self.seqs[sid].out {
                             done.push(sid);
@@ -686,7 +1020,7 @@ impl<'a> Harness<'a> {
                 self.ranks[ri].waiting.insert(0, sid);
             }
         }
-        cost
+        Ok(cost)
     }
 
     /// Name the most-loaded stuck rank for a deadlock diagnostic.
@@ -704,12 +1038,40 @@ impl<'a> Harness<'a> {
         )
     }
 
-    pub(super) fn run(mut self, trace: &[Request]) -> SimResult {
+    /// The event loop found no schedulable event — name the full state
+    /// (per-rank busy queues, pending arrivals, in-flight transfers)
+    /// instead of panicking on an empty candidate set.
+    fn wedge_report(&self, pending_arrivals: usize) -> String {
+        let busy: Vec<String> = self
+            .ranks
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.waiting.is_empty() || !r.running.is_empty())
+            .map(|(ri, r)| {
+                format!(
+                    "(rank {ri}: {} waiting, {} running, t={})",
+                    r.waiting.len(),
+                    r.running.len(),
+                    r.t
+                )
+            })
+            .collect();
+        format!(
+            "event loop wedged: no schedulable event (busy ranks [{}], {} pending \
+             arrivals, {} in-flight transfers); {}",
+            busy.join(", "),
+            pending_arrivals,
+            self.in_flight.len(),
+            self.stuck_report()
+        )
+    }
+
+    pub(super) fn run(mut self, trace: &[Request]) -> anyhow::Result<SimResult> {
         match self.scen.timing {
-            SimTiming::LockStep => self.run_lockstep(trace),
-            SimTiming::EventDriven => self.run_event(trace),
+            SimTiming::LockStep => self.run_lockstep(trace)?,
+            SimTiming::EventDriven => self.run_event(trace)?,
         }
-        self.summarize(trace)
+        Ok(self.summarize(trace))
     }
 
     fn rank_busy(&self, ri: usize) -> bool {
@@ -725,15 +1087,21 @@ impl<'a> Harness<'a> {
         self.stats.peak_pages = self.stats.peak_pages.max(used);
     }
 
-    fn run_lockstep(&mut self, trace: &[Request]) {
+    /// Advance the active-rank time integral to `to` (elastic only).
+    fn advance_active_integral(&mut self, to: f64) {
+        self.a_int += self.active_count() as f64 * (to - self.a_last);
+        self.a_last = to;
+    }
+
+    fn run_lockstep(&mut self, trace: &[Request]) -> anyhow::Result<()> {
         let mut clock = 0.0f64;
         let mut next_arrival = 0usize;
         let mut rounds = 0usize;
         while next_arrival < trace.len() || self.any_busy() {
             rounds += 1;
-            assert!(rounds <= 500_000, "sim runaway");
+            anyhow::ensure!(rounds <= 500_000, "sim runaway");
             while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-                self.route(next_arrival);
+                self.route(next_arrival)?;
                 next_arrival += 1;
             }
 
@@ -749,13 +1117,13 @@ impl<'a> Harness<'a> {
                     clock = clock.max(trace[next_arrival].arrival_s);
                     continue;
                 }
-                panic!("lockstep deadlock: {}", self.stuck_report());
+                anyhow::bail!("lockstep deadlock: {}", self.stuck_report());
             }
             // costs depend only on each rank's own pre-apply state, so
             // apply per rank, then charge the round's max (lock-step barrier)
             let mut round_cost = 0.0f64;
             for (ri, action) in decisions {
-                round_cost = round_cost.max(self.apply(ri, action, None));
+                round_cost = round_cost.max(self.apply(ri, action, None)?);
             }
             clock += round_cost;
             // tokens produced this round are stamped at the round boundary
@@ -778,19 +1146,28 @@ impl<'a> Harness<'a> {
         // lock-step wall time is the global clock; park it on rank 0 so
         // summarize()'s max-over-clocks sees it
         self.ranks[0].t = clock;
+        Ok(())
     }
 
-    fn run_event(&mut self, trace: &[Request]) {
+    fn run_event(&mut self, trace: &[Request]) -> anyhow::Result<()> {
         let mut clock = 0.0f64;
         let mut next_arrival = 0usize;
         let mut iters = 0usize;
+        let elastic = self.scen.elastic.is_some();
+        let eval_interval = self
+            .scen
+            .elastic
+            .as_ref()
+            .and_then(|e| e.autoscale.as_ref())
+            .map(|a| a.eval_interval_s);
         while next_arrival < trace.len() || !self.in_flight.is_empty() || self.any_busy() {
             iters += 1;
-            assert!(iters <= 2_000_000, "sim runaway");
+            anyhow::ensure!(iters <= 2_000_000, "sim runaway");
             // the next instant anything can happen, popped off the event
             // loop in its documented (time, rank, seq) order: a busy rank's
-            // local clock, the next arrival, or an in-flight transfer's
-            // ready-time
+            // local clock, the next arrival, an in-flight transfer's
+            // ready-time, or (elastic) a scheduled failure / a provisioning
+            // rank coming up / the autoscaler's next evaluation
             let mut cands: EventLoop<()> = EventLoop::new();
             let n = self.ranks.len();
             for ri in 0..n {
@@ -804,10 +1181,27 @@ impl<'a> Harness<'a> {
             for &(_, ready) in &self.in_flight {
                 cands.push(ready, n + 1, ());
             }
+            if elastic {
+                if self.next_fail < self.fail_sched.len() {
+                    cands.push(self.fail_sched[self.next_fail].0, n + 2, ());
+                }
+                for &jt in &self.pending_joins {
+                    cands.push(jt, n + 3, ());
+                }
+                if eval_interval.is_some() {
+                    cands.push(self.next_eval, n + 4, ());
+                }
+            }
             let mut later = f64::INFINITY;
             {
-                let min_cand = cands.peek_time().expect("busy sim has a next event");
-                clock = clock.max(min_cand);
+                let Some(min_cand) = cands.peek_time() else {
+                    anyhow::bail!("{}", self.wedge_report(trace.len() - next_arrival));
+                };
+                let new_clock = clock.max(min_cand);
+                if elastic && new_clock > clock {
+                    self.advance_active_integral(new_clock);
+                }
+                clock = new_clock;
                 while let Some(e) = cands.pop() {
                     if e.time > clock {
                         later = later.min(e.time);
@@ -816,16 +1210,42 @@ impl<'a> Harness<'a> {
             }
 
             let mut progressed = false;
+            if elastic {
+                while self.next_fail < self.fail_sched.len()
+                    && self.fail_sched[self.next_fail].0 <= clock
+                {
+                    let ri = self.fail_sched[self.next_fail].1;
+                    self.fail_rank(ri, clock)?;
+                    self.next_fail += 1;
+                    progressed = true;
+                }
+                let due = self.pending_joins.iter().filter(|&&jt| jt <= clock).count();
+                if due > 0 {
+                    for _ in 0..due {
+                        self.join_rank(clock);
+                    }
+                    self.pending_joins.retain(|&jt| jt > clock);
+                    progressed = true;
+                }
+            }
             while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
-                self.route(next_arrival);
+                self.route(next_arrival)?;
                 next_arrival += 1;
                 progressed = true;
             }
-            if self.scen.prefill_ranks > 0 && self.deliver(clock) {
+            if (self.scen.prefill_ranks > 0 || elastic) && self.deliver(clock) {
                 progressed = true;
             }
+            if let Some(interval) = eval_interval {
+                if clock >= self.next_eval {
+                    while self.next_eval <= clock {
+                        self.next_eval += interval;
+                    }
+                    self.autoscale_eval(clock);
+                }
+            }
 
-            for ri in 0..n {
+            for ri in 0..self.ranks.len() {
                 if self.ranks[ri].t > clock {
                     continue;
                 }
@@ -841,21 +1261,42 @@ impl<'a> Harness<'a> {
                         break action;
                     }
                     let t = self.ranks[ri].t;
-                    self.apply(ri, action, Some(t));
+                    self.apply(ri, action, Some(t))?;
                     progressed = true;
                 };
                 if action == Action::Idle {
                     continue;
                 }
                 let t = self.ranks[ri].t;
-                let cost = self.apply(ri, action, Some(t));
+                let cost = self.apply(ri, action, Some(t))?;
                 self.ranks[ri].t += cost;
                 self.stats.steps += 1;
                 progressed = true;
             }
 
+            if elastic {
+                // a draining rank that has emptied its queue retires: its
+                // published prefixes and page pool are released
+                let capacity = self.scen.capacity_pages;
+                for r in self.ranks.iter_mut() {
+                    if r.state == RankState::Draining
+                        && r.waiting.is_empty()
+                        && r.running.is_empty()
+                    {
+                        r.state = RankState::Dead;
+                        r.shared.iter_mut().for_each(|g| *g = 0);
+                        r.free = capacity;
+                    }
+                }
+            }
+
             if !progressed {
-                assert!(later.is_finite(), "event-loop deadlock: {}", self.stuck_report());
+                if !later.is_finite() {
+                    anyhow::bail!("{}", self.wedge_report(trace.len() - next_arrival));
+                }
+                if elastic {
+                    self.advance_active_integral(later);
+                }
                 clock = later;
                 continue;
             }
@@ -865,6 +1306,7 @@ impl<'a> Harness<'a> {
         // clocks: the last progressing action always ran at a rank clock
         // that `clock` had caught up to
         self.ranks[0].t = self.ranks[0].t.max(clock);
+        Ok(())
     }
 
     fn summarize(self, trace: &[Request]) -> SimResult {
@@ -872,10 +1314,15 @@ impl<'a> Harness<'a> {
         for r in &self.ranks {
             wall = wall.max(r.t);
         }
+        // TTFT/ITL tolerate unfinished or dropped sequences: a request that
+        // never emitted a token is excluded from the latency stats and
+        // shows up in the `dropped` / unfinished counts instead of
+        // panicking
         let mut ttft = Stats::new();
         let mut ttft_short = Stats::new();
         for s in &self.seqs {
-            let t = s.first_token.expect("all sequences finished") - s.arrival;
+            let Some(first) = s.first_token else { continue };
+            let t = first - s.arrival;
             ttft.push(t);
             if !s.long {
                 ttft_short.push(t);
@@ -885,6 +1332,20 @@ impl<'a> Harness<'a> {
         for &x in &self.itl {
             itl.push(x);
         }
+        let dropped = self.seqs.iter().filter(|s| s.dropped).count();
+        let unfinished =
+            self.seqs.iter().filter(|s| !s.dropped && s.generated < s.out).count();
+        let elastic = self.scen.elastic.is_some();
+        let final_active = self.active_count();
+        let mut a_int = self.a_int;
+        if elastic && wall > self.a_last {
+            a_int += final_active as f64 * (wall - self.a_last);
+        }
+        let mean_active = if elastic {
+            if wall > 0.0 { a_int / wall } else { final_active as f64 }
+        } else {
+            self.scen.ranks as f64
+        };
         let st = self.stats;
         SimResult {
             ranks: self.scen.ranks,
@@ -895,6 +1356,8 @@ impl<'a> Harness<'a> {
                 self.scen.ranks - self.scen.prefill_ranks
             },
             requests: trace.len(),
+            completed: trace.len() - dropped - unfinished,
+            dropped,
             gen_tokens: st.gen_tokens,
             wall_s: wall,
             ttft,
@@ -914,6 +1377,193 @@ impl<'a> Harness<'a> {
             wire_fp8_bytes: st.wire_fp8_bytes,
             wire_bf16_bytes: st.wire_bf16_bytes,
             routed: st.routed,
+            evacuated: st.evacuated,
+            recovered: st.recovered,
+            fails: st.fails,
+            joins: st.joins,
+            drains: st.drains,
+            peak_active_ranks: self.peak_active,
+            final_active_ranks: final_active,
+            mean_active_ranks: mean_active,
+            rank_timeline: self.rank_timeline,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+    use crate::simulate::ElasticConfig;
+    use crate::workload::{TraceConfig, TraceGen};
+
+    fn sched_cfg() -> SchedulerConfig {
+        SchedulerConfig {
+            max_decode_batch: 8,
+            max_prefill_batch: 4,
+            max_prefill_tokens: 4096,
+            max_context: 8192,
+            page_tokens: PAGE_TOKENS,
+            prefill_chunk_tokens: 128,
+            chunk_per_seq: 64,
+            max_step_items: 12,
+            max_running: 12,
+            disagg_prefill: false,
+            policy: SchedPolicy::MixedChunked,
+        }
+    }
+
+    fn scen(elastic: Option<ElasticConfig>) -> Scenario {
+        Scenario {
+            ranks: 2,
+            prefill_ranks: 0,
+            routing: SimRoute::ShortestQueue,
+            timing: SimTiming::EventDriven,
+            sched: sched_cfg(),
+            prefill_sched: None,
+            capacity_pages: 256,
+            cost: CostModel::Uniform { step_s: 1.0 },
+            speeds: Vec::new(),
+            elastic,
+        }
+    }
+
+    fn trace() -> Vec<Request> {
+        TraceGen::generate(&TraceConfig {
+            seed: 17,
+            num_requests: 12,
+            mean_interarrival_s: 0.5,
+            prompt_min: 16,
+            prompt_max: 64,
+            out_min: 8,
+            out_max: 24,
+            ..Default::default()
+        })
+    }
+
+    /// Regression for the old `max().unwrap()` panic: an empty decode
+    /// batch must surface as a named error, not a panic.
+    #[test]
+    fn empty_decode_batch_is_a_named_error() {
+        let scenario = scen(None);
+        let trace = trace();
+        let mut h = Harness::new(&scenario, &trace);
+        let err = h.apply(0, Action::Decode(Vec::new()), Some(0.0)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("empty decode batch"), "{msg}");
+        assert!(msg.contains("rank 0"), "{msg}");
+    }
+
+    /// Regression for the old `peek_time().expect(...)` / `later`-assert
+    /// panics: a transfer that can never deliver (no deliver path in the
+    /// non-elastic colocated mode) must wedge with a named diagnostic
+    /// listing the in-flight transfer, not panic.
+    #[test]
+    fn undeliverable_transfer_is_a_named_wedge_error() {
+        let scenario = Scenario { routing: SimRoute::Single, ..scen(None) };
+        let trace = trace();
+        let mut h = Harness::new(&scenario, &trace);
+        h.in_flight.push((0, 0.25));
+        let err = h.run_event(&trace).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("event loop wedged"), "{msg}");
+        assert!(msg.contains("1 in-flight transfers"), "{msg}");
+        assert!(msg.contains("0 pending arrivals"), "{msg}");
+    }
+
+    /// Regression for the old `first_token.expect("all sequences
+    /// finished")` panic: summarize must report sequences that never
+    /// emitted instead of crashing on them.
+    #[test]
+    fn summarize_tolerates_tokenless_sequences() {
+        let scenario = scen(None);
+        let trace = trace();
+        let mut h = Harness::new(&scenario, &trace);
+        h.seqs[3].dropped = true;
+        let r = h.summarize(&trace);
+        assert_eq!(r.dropped, 1);
+        assert_eq!(r.completed, 0); // nothing ran: the rest are unfinished
+        assert!(r.ttft.is_empty());
+    }
+
+    /// Same trace + same failure/autoscale schedule → bit-identical
+    /// outcomes, membership churn included.
+    #[test]
+    fn elastic_membership_is_deterministic() {
+        let run = || {
+            let scenario = scen(Some(ElasticConfig {
+                failures: vec![(2.5, 1)],
+                recover: true,
+                autoscale: None,
+            }));
+            let trace = trace();
+            scenario.run(&trace).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+        assert_eq!(a.gen_tokens, b.gen_tokens);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.evacuated, b.evacuated);
+        assert_eq!(a.recovered, b.recovered);
+        assert_eq!(a.rank_timeline.len(), b.rank_timeline.len());
+        for (x, y) in a.rank_timeline.iter().zip(&b.rank_timeline) {
+            assert_eq!(x.0.to_bits(), y.0.to_bits());
+            assert_eq!((x.1, x.2, x.3), (y.1, y.2, y.3));
+        }
+    }
+
+    /// An elastic config with no failures and no autoscaler must be
+    /// byte-identical to the plain event-driven run: every elastic branch
+    /// is fully gated.
+    #[test]
+    fn empty_elastic_config_is_byte_identical_to_plain_event_mode() {
+        let trace = trace();
+        let plain = scen(None).run(&trace).unwrap();
+        let idle = scen(Some(ElasticConfig {
+            failures: Vec::new(),
+            recover: true,
+            autoscale: None,
+        }))
+        .run(&trace)
+        .unwrap();
+        assert_eq!(plain.wall_s.to_bits(), idle.wall_s.to_bits());
+        assert_eq!(plain.gen_tokens, idle.gen_tokens);
+        assert_eq!(plain.steps, idle.steps);
+        assert_eq!(plain.peak_pages, idle.peak_pages);
+        assert_eq!(plain.routed, idle.routed);
+        assert_eq!(
+            plain.ttft.percentile(95.0).to_bits(),
+            idle.ttft.percentile(95.0).to_bits()
+        );
+        assert_eq!(idle.dropped, 0);
+        assert_eq!(idle.fails + idle.joins + idle.drains, 0);
+    }
+
+    /// A failure with recovery on re-migrates the failed rank's KV; the
+    /// same failure without recovery drops it. Fresh waiting requests
+    /// re-route either way.
+    #[test]
+    fn failed_rank_sequences_recover_or_drop() {
+        let trace = trace();
+        let with = scen(Some(ElasticConfig {
+            failures: vec![(2.5, 1)],
+            recover: true,
+            autoscale: None,
+        }))
+        .run(&trace)
+        .unwrap();
+        let without = scen(Some(ElasticConfig {
+            failures: vec![(2.5, 1)],
+            recover: false,
+            autoscale: None,
+        }))
+        .run(&trace)
+        .unwrap();
+        assert_eq!(with.fails, 1);
+        assert_eq!(with.recovered, with.evacuated);
+        assert_eq!(with.dropped, 0);
+        assert_eq!(without.evacuated, 0);
+        assert_eq!(without.dropped as u64 + without.completed as u64, trace.len() as u64);
+        assert!(with.completed > without.completed);
     }
 }

@@ -22,5 +22,7 @@ pub mod harness;
 pub mod scenario;
 
 pub use clock::{Event, EventLoop};
-pub use harness::{CostModel, SimResult};
-pub use scenario::{Scenario, SimRoute, SimTiming, NODE_GPUS};
+pub use harness::{CostModel, MembershipEvent, SimResult};
+pub use scenario::{
+    AutoscaleConfig, ElasticConfig, Scenario, SimRoute, SimTiming, NODE_GPUS,
+};

@@ -9,12 +9,14 @@
 //! | serve_cluster    | DP ∈ {1,2,4}       | shortest/affinity | lock-step |
 //! | serve_disagg     | n/2 prefill + n/2  | disagg / affinity | event  |
 //! | serve_straggler  | 4 (rank 0 @ 1.5x)  | shortest/affinity | event  |
+//! | serve_elastic    | 4 fail / 1→6 auto  | affinity/shortest | event  |
 //!
 //! Adding a new serving study should be a new `Scenario` constructor here
 //! (plus a Python mirror in `serve_port_common.py` wrappers), not another
 //! hand-rolled simulator.
 
 use super::harness::{CostModel, Harness, SimResult};
+use crate::anyhow;
 use crate::coordinator::scheduler::SchedulerConfig;
 use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
 use crate::util::json::Json;
@@ -46,6 +48,45 @@ pub enum SimTiming {
     EventDriven,
 }
 
+/// SLO-driven autoscaler policy (`serve_elastic` autoscale arm): scale up
+/// on queue-depth or TTFT-p95 breach, drain-then-remove the
+/// highest-numbered active rank after sustained low load.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscaleConfig {
+    /// never drain below this many active ranks
+    pub min_ranks: usize,
+    /// never provision above this many (active + joining)
+    pub max_ranks: usize,
+    /// evaluation cadence (virtual seconds)
+    pub eval_interval_s: f64,
+    /// scale up when mean waiting per active rank exceeds this
+    pub queue_high: f64,
+    /// eligible to drain when mean (waiting + running) per active rank is
+    /// at or below this
+    pub queue_low: f64,
+    /// sustained-low-load window before a drain fires
+    pub idle_for_s: f64,
+    /// provisioning latency: a join lands this long after the breach
+    pub join_delay_s: f64,
+    /// scale up when TTFT p95 over the recent window exceeds this
+    /// (0 disables the SLO signal)
+    pub ttft_slo_s: f64,
+}
+
+/// Elastic-membership configuration (event-driven colocated mode only).
+/// No `Default`: a caller must state `recover` explicitly — silently
+/// defaulting to drop-everything would be a trap.
+#[derive(Clone, Debug)]
+pub struct ElasticConfig {
+    /// injected failures as (virtual time, rank index)
+    pub failures: Vec<(f64, usize)>,
+    /// re-migrate a failed rank's in-progress KV over the FP8 wire path
+    /// (false = the no-migration baseline: those sequences drop)
+    pub recover: bool,
+    /// SLO-driven autoscaler; None = fixed fleet (failures only)
+    pub autoscale: Option<AutoscaleConfig>,
+}
+
 /// One simulated serving arm (see module docs for the bench mapping).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -65,12 +106,16 @@ pub struct Scenario {
     /// can express a straggler — a lock-step round would charge every rank
     /// the slow rank's step.
     pub speeds: Vec<f64>,
+    /// elastic membership (failure injection + autoscaling); None = the
+    /// fixed fleet every non-elastic scenario runs
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Scenario {
     /// Run this scenario over a trace (deterministic: two runs produce
-    /// byte-identical results).
-    pub fn run(&self, trace: &[Request]) -> SimResult {
+    /// byte-identical results). Errors — never panics — on a wedged or
+    /// malformed simulation (the diagnostics name the stuck state).
+    pub fn run(&self, trace: &[Request]) -> anyhow::Result<SimResult> {
         Harness::new(self, trace).run(trace)
     }
 
@@ -97,6 +142,7 @@ impl Scenario {
             capacity_pages,
             cost: Self::h20_cost(8, 1),
             speeds: Vec::new(),
+            elastic: None,
         }
     }
 
@@ -117,6 +163,7 @@ impl Scenario {
             capacity_pages,
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds: Vec::new(),
+            elastic: None,
         }
     }
 
@@ -139,6 +186,7 @@ impl Scenario {
             capacity_pages,
             cost: Self::h20_cost(n, NODE_GPUS / n),
             speeds: Vec::new(),
+            elastic: None,
         }
     }
 
@@ -161,6 +209,34 @@ impl Scenario {
             capacity_pages,
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds,
+            elastic: None,
+        }
+    }
+
+    /// serve_elastic arm: colocated event-driven ranks with elastic
+    /// membership. Takes the cost model explicitly because the fleet size
+    /// is no longer the cost shape: the autoscale arm STARTS at one rank
+    /// but prices every rank as one DP4/TP2 slice of the node (a joining
+    /// rank is another identical slice, not a re-shard).
+    pub fn elastic(
+        routing: SimRoute,
+        ranks: usize,
+        cost: CostModel,
+        sched: SchedulerConfig,
+        capacity_pages: usize,
+        elastic: ElasticConfig,
+    ) -> Scenario {
+        Scenario {
+            ranks,
+            prefill_ranks: 0,
+            routing,
+            timing: SimTiming::EventDriven,
+            sched,
+            prefill_sched: None,
+            capacity_pages,
+            cost,
+            speeds: Vec::new(),
+            elastic: Some(elastic),
         }
     }
 }
@@ -235,6 +311,56 @@ pub fn disagg_result_json(r: &SimResult) -> Json {
         ("transferred_gb_fp8", Json::num(r.wire_fp8_bytes as f64 / 1e9)),
         ("transferred_gb_bf16", Json::num(r.wire_bf16_bytes as f64 / 1e9)),
         ("routed", routed_json(r)),
+    ])
+}
+
+/// The exact result-row field set of BENCH_elastic.json's failure arms
+/// (recover / no_migration).
+pub fn elastic_failure_result_json(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("requests", Json::num(r.requests as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("dropped", Json::num(r.dropped as f64)),
+        ("evacuated", Json::num(r.evacuated as f64)),
+        ("recovered", Json::num(r.recovered as f64)),
+        ("fails", Json::num(r.fails as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p50_ms", Json::num(r.ttft.median() * 1e3)),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("handoffs", Json::num(r.handoffs as f64)),
+        ("prefix_hit_tokens", Json::num(r.prefix_hit_tokens as f64)),
+        ("transferred_gb_fp8", Json::num(r.wire_fp8_bytes as f64 / 1e9)),
+        ("routed", routed_json(r)),
+    ])
+}
+
+/// The exact result-row field set of BENCH_elastic.json's autoscale arm.
+pub fn elastic_autoscale_result_json(r: &SimResult) -> Json {
+    let timeline = Json::arr(r.rank_timeline.iter().map(|&(t, kind, ri, after)| {
+        Json::arr(vec![
+            Json::num(t),
+            Json::str(kind.as_str()),
+            Json::num(ri as f64),
+            Json::num(after as f64),
+        ])
+    }));
+    Json::obj(vec![
+        ("requests", Json::num(r.requests as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("dropped", Json::num(r.dropped as f64)),
+        ("joins", Json::num(r.joins as f64)),
+        ("drains", Json::num(r.drains as f64)),
+        ("peak_active_ranks", Json::num(r.peak_active_ranks as f64)),
+        ("final_active_ranks", Json::num(r.final_active_ranks as f64)),
+        ("mean_active_ranks", Json::num(r.mean_active_ranks)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("steps", Json::num(r.steps as f64)),
+        ("rank_timeline", timeline),
     ])
 }
 

@@ -18,8 +18,9 @@
 
 use snapmla::cluster::ClusterServer;
 use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
-use snapmla::coordinator::{RequestOutcome, RoutePolicy, ServeRequest};
+use snapmla::coordinator::{RankHealth, RequestOutcome, RoutePolicy, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
+use snapmla::runtime::ModelEngine;
 use snapmla::simulate::{CostModel, Scenario, SimResult, SimRoute, SimTiming};
 use snapmla::workload::{TraceConfig, TraceGen};
 
@@ -164,6 +165,77 @@ fn stuck_cluster_names_the_wedged_rank_and_queue_depth() {
     assert!(msg.contains("1 waiting"), "error names the queue depth: {msg}");
 }
 
+// --- ClusterServer: elastic membership ---------------------------------------
+
+#[test]
+fn failed_rank_migrates_live_kv_to_survivors() {
+    // token streams are placement-invariant, so sequences recovered off a
+    // failed rank must emit exactly the tokens a failure-free run emits
+    let make = || ClusterServer::sim(3, 256, CacheMode::Fp8, RoutePolicy::ShortestQueue).unwrap();
+    let reqs = || -> Vec<ServeRequest> {
+        (0..6).map(|id| req(id, prefix_prompt(id, 0, 48 + 8 * id as usize), 12)).collect()
+    };
+    let mut base = make();
+    for r in reqs() {
+        base.submit(r);
+    }
+    let base_out = signature(base.run_to_completion().expect("baseline"));
+
+    let costs = [1.0, 1.0, 1.0];
+    let mut el = make();
+    for r in reqs() {
+        el.submit(r);
+    }
+    el.run_until(&costs, 4.0).expect("pre-failure drive");
+    el.fail_rank(2, true).expect("failure with recovery");
+    let out = signature(el.run_virtual(&costs).expect("post-failure drive"));
+    assert_eq!(el.metrics.fails, 1);
+    assert_eq!(el.metrics.dropped, 0, "recovery must not drop anything here");
+    assert!(el.metrics.evacuated > 0, "rank 2 held live sequences at t=4");
+    assert_eq!(el.metrics.recovered, el.metrics.evacuated);
+    assert_eq!(out, base_out, "recovered sequences changed their tokens");
+    assert_eq!(el.membership_log.len(), 1);
+
+    // the no-migration fleet drops what recovery saves
+    let mut nomig = make();
+    for r in reqs() {
+        nomig.submit(r);
+    }
+    nomig.run_until(&costs, 4.0).expect("pre-failure drive");
+    nomig.fail_rank(2, false).expect("failure without recovery");
+    let lost = signature(nomig.run_virtual(&costs).expect("post-failure drive"));
+    assert_eq!(nomig.metrics.dropped as usize, el.metrics.evacuated as usize);
+    assert_eq!(lost.len() + nomig.metrics.dropped as usize, base_out.len());
+}
+
+#[test]
+fn drain_and_join_reshape_the_fleet() {
+    let mut c = ClusterServer::sim(2, 256, CacheMode::Fp8, RoutePolicy::ShortestQueue).unwrap();
+    for id in 0..4 {
+        c.submit(req(id, prefix_prompt(id, 0, 40), 8));
+    }
+    c.drain_rank(1).expect("drain");
+    // a draining rank receives no new admissions
+    for id in 4..8 {
+        assert_eq!(c.submit(req(id, prefix_prompt(id, 0, 40), 8)), 0);
+    }
+    assert!(c.run_until(&[1.0, 1.0], f64::INFINITY).expect("drive through the drain"));
+    // the drained rank finished its queue and retired
+    assert_eq!(c.router.health(1), RankHealth::Dead);
+
+    let ri = c.join_rank(Server::new(ModelEngine::sim(CacheMode::Fp8).unwrap(), 256));
+    assert_eq!(ri, 2);
+    for id in 8..12 {
+        c.submit(req(id, prefix_prompt(id, 0, 40), 8));
+    }
+    let out = c.run_virtual(&[1.0, 1.0, 1.0]).expect("post-join drive");
+    assert_eq!(out.len(), 12, "every request across the reshapes completes");
+    assert_eq!((c.metrics.drains, c.metrics.joins), (1, 1));
+    assert!(c.metrics.routed[2] > 0, "the joined rank serves new work");
+    let kinds: Vec<&str> = c.membership_log.iter().map(|(_, k, _, _)| k.as_str()).collect();
+    assert_eq!(kinds, ["drain", "join"]);
+}
+
 // --- simulate harness: lock-step == event-driven under uniform costs --------
 
 fn bench_sched(policy: SchedPolicy) -> SchedulerConfig {
@@ -211,8 +283,10 @@ fn harness_arm(timing: SimTiming, routing: SimRoute) -> SimResult {
         capacity_pages: 256,
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds: Vec::new(),
+        elastic: None,
     }
     .run(&burst_trace())
+    .expect("harness sim")
 }
 
 fn assert_recorders_identical(a: &SimResult, b: &SimResult) {
@@ -257,10 +331,11 @@ fn harness_speed_factors_slow_the_straggler_arm() {
         capacity_pages: 256,
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds,
+        elastic: None,
     };
     let trace = burst_trace();
-    let uniform = scen(Vec::new()).run(&trace);
-    let strag = scen(vec![2.0, 1.0, 1.0]).run(&trace);
+    let uniform = scen(Vec::new()).run(&trace).expect("uniform sim");
+    let strag = scen(vec![2.0, 1.0, 1.0]).run(&trace).expect("straggler sim");
     assert_eq!(uniform.requests, strag.requests);
     assert!(
         strag.wall_s > uniform.wall_s,
