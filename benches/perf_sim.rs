@@ -1,0 +1,301 @@
+//! perf_sim — simulator-throughput bench over the shared virtual-time
+//! serving core. Unlike the serve benches, this measures the SIMULATOR
+//! itself: events per wall-clock second while replaying a 100k-request
+//! synthetic trace at DP ∈ {8, 32, 128}, in two arms over identical
+//! semantics:
+//!
+//! * **naive**   — the pre-optimization harness paths (`Scenario::naive`):
+//!   per-event linear scans over every rank, O(ranks × queue) token-load
+//!   sums per routing decision, full waiting-queue views per scheduler
+//!   call, per-round Σ-sweep page sampling (kept in-tree as the reference
+//!   arm; `rust/tests/prop_simperf.rs` pins it byte-identical),
+//! * **indexed** — the optimized paths: a lazy min-heap ready-queue over
+//!   busy ranks, incrementally maintained per-rank token-load and page
+//!   counters, and waiting views capped at the scheduler's provable
+//!   inspection bound.
+//!
+//! An *event* is one unit of simulator work: a routed arrival or an
+//! applied scheduler action (`steps`). Both arms replay the same trace and
+//! produce byte-identical results, so the events count cancels and the
+//! speedup is a pure wall-clock ratio.
+//!
+//!     cargo bench --bench perf_sim [-- --quick]
+//!
+//! The report has two sections with different reproducibility contracts:
+//!
+//! * `determinism` — regenerated on every run from a smaller trace (so
+//!   ci/port_drift.py keeps it honest without minutes of wall-clock);
+//!   includes a naive-vs-indexed agreement check at DP8.
+//! * `measured`   — a RECORDED wall-clock measurement (events/sec per arm
+//!   on the 100k trace). Wall-clock is not bit-reproducible, so the quick
+//!   run carries the committed record forward verbatim; the full run
+//!   re-measures both arms and refreshes BENCH_sim.json at the repo root.
+//!
+//! `python/tests/perf_sim_port.py` is the exact Python port that generated
+//! the committed baseline in a container without a Rust toolchain.
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::simulate::{Scenario, SimResult, SimRoute, SimTiming};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f2, Table};
+use snapmla::workload::{Request, TraceConfig, TraceGen};
+use std::time::Instant;
+
+const PAGE: usize = 64;
+const CAPACITY_PAGES: usize = 512; // per rank
+const DPS: [usize; 3] = [8, 32, 128];
+const MEASURED_REQUESTS: usize = 100_000; // the recorded events/sec arms
+const DRIFT_REQUESTS: usize = 4_000; // the regenerated-every-run determinism section
+const AGREE_REQUESTS: usize = 1_000; // naive-vs-indexed agreement check (DP8)
+/// Per-rank trough interarrival (seconds × ranks): the fleet-wide arrival
+/// rate scales with DP, so every fleet sees the same per-rank load and the
+/// events/sec curve isolates simulator overhead, not queueing collapse.
+const INTERARRIVAL_S_PER_RANK: f64 = 0.041;
+const DIURNAL_PERIOD_S: f64 = 6.0; // peak/trough cycle: backlog builds and drains
+const DIURNAL_AMP: f64 = 4.0; // bounded per cycle, independent of trace length
+
+fn trace_cfg(dp: usize, num_requests: usize) -> TraceConfig {
+    TraceConfig {
+        seed: 4096,
+        num_requests,
+        mean_interarrival_s: INTERARRIVAL_S_PER_RANK / dp as f64,
+        prompt_min: 16,
+        prompt_max: 64,
+        out_min: 4,
+        out_max: 8,
+        long_frac: 0.0,
+        long_prompt_min: 0,
+        long_prompt_max: 0,
+        shared_prefix_frac: 0.0,
+        shared_prefix_groups: 1,
+        shared_prefix_tokens: 0,
+        diurnal_period_s: DIURNAL_PERIOD_S,
+        diurnal_amp: DIURNAL_AMP,
+        ..TraceConfig::default()
+    }
+}
+
+fn sched_cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        max_decode_batch: 48,
+        max_prefill_batch: 8,
+        max_prefill_tokens: 4096,
+        max_context: 8192,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 256,
+        chunk_per_seq: 128,
+        max_step_items: 64,
+        max_running: 64,
+        disagg_prefill: false,
+        policy: SchedPolicy::MixedChunked,
+    }
+}
+
+/// Every rank prices as one full model replica (dp=1, tp=1): the per-rank
+/// service rate is constant across fleet sizes.
+fn scen(dp: usize, naive: bool) -> Scenario {
+    Scenario {
+        ranks: dp,
+        prefill_ranks: 0,
+        routing: SimRoute::ShortestQueue,
+        timing: SimTiming::EventDriven,
+        sched: sched_cfg(),
+        prefill_sched: None,
+        capacity_pages: CAPACITY_PAGES,
+        cost: Scenario::h20_cost(1, 1),
+        speeds: Vec::new(),
+        elastic: None,
+        naive,
+    }
+}
+
+fn events_of(r: &SimResult) -> u64 {
+    r.steps + r.requests as u64
+}
+
+fn run_arm(trace: &[Request], dp: usize, naive: bool) -> (SimResult, f64) {
+    let t0 = Instant::now();
+    let res = scen(dp, naive).run(trace).expect("perf_sim arm");
+    (res, t0.elapsed().as_secs_f64())
+}
+
+/// Full-result fingerprint (bit-exact floats): the two arms must agree on
+/// EVERY recorder, not just the reported determinism fields.
+fn fingerprint(r: &SimResult) -> String {
+    let mut parts: Vec<String> = vec![
+        format!("ranks={}/{}/{}", r.ranks, r.prefill_ranks, r.decode_ranks),
+        format!("req={}:{}:{}", r.requests, r.completed, r.dropped),
+        format!("gen={}", r.gen_tokens),
+        format!("wall={:016x}", r.wall_s.to_bits()),
+        format!("pages={}", r.peak_pages),
+        format!(
+            "tok={}:{}:{}:{}:{}",
+            r.prefill_tokens, r.chunk_tokens, r.prefix_hit_tokens, r.decode_steps,
+            r.decode_batch_sum
+        ),
+        format!("loops={}:{}", r.rounds, r.steps),
+        format!("spill={}:{}:{}", r.spills, r.restores, r.handoffs),
+        format!("wire={}:{}", r.wire_fp8_bytes, r.wire_bf16_bytes),
+        format!("routed={:?}", r.routed),
+        format!(
+            "elastic={}:{}:{}:{}:{}:{}:{}",
+            r.evacuated, r.recovered, r.fails, r.joins, r.drains, r.peak_active_ranks,
+            r.final_active_ranks
+        ),
+        format!("mar={:016x}", r.mean_active_ranks.to_bits()),
+    ];
+    for (name, st) in [("ttft", &r.ttft), ("ttfts", &r.ttft_short), ("itl", &r.itl)] {
+        let ps: Vec<String> = [0.0, 25.0, 50.0, 95.0, 100.0]
+            .iter()
+            .map(|&p| format!("{:016x}", st.percentile(p).to_bits()))
+            .collect();
+        parts.push(format!("{}={}:{}", name, st.len(), ps.join(",")));
+    }
+    for &(t, kind, ri, after) in &r.rank_timeline {
+        parts.push(format!("tl={:016x}:{}:{}:{}", t.to_bits(), kind.as_str(), ri, after));
+    }
+    parts.join("|")
+}
+
+/// The exact per-DP row of BENCH_sim.json's `determinism` section
+/// (mirrors perf_sim_port.determinism_row field for field).
+fn determinism_row(r: &SimResult) -> Json {
+    Json::obj(vec![
+        ("requests", Json::num(r.requests as f64)),
+        ("completed", Json::num(r.completed as f64)),
+        ("events", Json::num(events_of(r) as f64)),
+        ("steps", Json::num(r.steps as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("prefill_tokens", Json::num(r.prefill_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
+        ("peak_pages", Json::num(r.peak_pages as f64)),
+        ("mean_decode_batch", Json::num(r.mean_decode_batch())),
+        ("spills", Json::num(r.spills as f64)),
+    ])
+}
+
+fn determinism_section() -> (Json, bool) {
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    for dp in DPS {
+        let trace = TraceGen::generate(&trace_cfg(dp, DRIFT_REQUESTS));
+        let (res, _) = run_arm(&trace, dp, false);
+        rows.push((format!("dp{dp}"), determinism_row(&res)));
+    }
+    // the indexed structures must agree with a naive reference sweep on
+    // the SAME trace (the full property sweep lives in prop_simperf; this
+    // keeps one always-on agreement check inside the drift gate)
+    let trace = TraceGen::generate(&trace_cfg(8, AGREE_REQUESTS));
+    let (fast, _) = run_arm(&trace, 8, false);
+    let (slow, _) = run_arm(&trace, 8, true);
+    let agree = fingerprint(&fast) == fingerprint(&slow);
+    rows.push(("modes_agree_dp8".to_string(), Json::Bool(agree)));
+    (Json::Obj(rows.into_iter().collect()), agree)
+}
+
+fn measured_section(table: &mut Table) -> Json {
+    let mut rows: Vec<(String, Json)> = vec![
+        (
+            "note".to_string(),
+            Json::str(
+                "recorded wall-clock measurement (not regenerated by \
+                 ci/port_drift.py): refresh with --measure",
+            ),
+        ),
+        ("requests".to_string(), Json::num(MEASURED_REQUESTS as f64)),
+    ];
+    for dp in DPS {
+        let trace = TraceGen::generate(&trace_cfg(dp, MEASURED_REQUESTS));
+        let (naive_res, naive_s) = run_arm(&trace, dp, true);
+        let (fast_res, fast_s) = run_arm(&trace, dp, false);
+        assert_eq!(
+            fingerprint(&naive_res),
+            fingerprint(&fast_res),
+            "perf_sim arms disagree at dp{dp}"
+        );
+        let ev = events_of(&fast_res) as f64;
+        rows.push((
+            format!("dp{dp}"),
+            Json::obj(vec![
+                ("events", Json::num(ev)),
+                ("naive_events_per_s", Json::num(ev / naive_s)),
+                ("indexed_events_per_s", Json::num(ev / fast_s)),
+                ("speedup", Json::num(naive_s / fast_s)),
+            ]),
+        ));
+        table.row(vec![
+            format!("dp{dp}"),
+            format!("{}", ev as u64),
+            format!("{:.0}", ev / naive_s),
+            format!("{:.0}", ev / fast_s),
+            f2(naive_s / fast_s),
+        ]);
+    }
+    Json::Obj(rows.into_iter().collect())
+}
+
+/// Quick mode carries the committed `measured` section forward verbatim —
+/// wall-clock is not bit-reproducible, and the drift gate must not churn
+/// on it.
+fn recorded_measured(path: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+        panic!(
+            "perf_sim: no committed {} to carry the recorded wall-clock section \
+             forward from ({e}) — run the full bench to produce one",
+            path.display()
+        )
+    });
+    let report = Json::parse(&text).expect("committed BENCH_sim.json parses");
+    let Json::Obj(map) = report else { panic!("BENCH_sim.json is not an object") };
+    map.get("measured").cloned().expect("BENCH_sim.json has a measured section")
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let quick = args.has("quick");
+    let baseline = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim.json");
+
+    let (determinism, agree) = determinism_section();
+
+    let mut t = Table::new(
+        "perf_sim — simulator events/sec, naive vs indexed (wall-clock)",
+        &["fleet", "events", "naive ev/s", "indexed ev/s", "speedup"],
+    );
+    let measured = if quick { recorded_measured(&baseline) } else { measured_section(&mut t) };
+    if !quick {
+        t.print();
+    }
+
+    let workload = Json::obj(vec![
+        ("seed", Json::num(4096.0)),
+        ("dps", Json::arr(DPS.iter().map(|&dp| Json::num(dp as f64)))),
+        ("measured_requests", Json::num(MEASURED_REQUESTS as f64)),
+        ("drift_requests", Json::num(DRIFT_REQUESTS as f64)),
+        ("trough_interarrival_s_per_rank", Json::num(INTERARRIVAL_S_PER_RANK)),
+        ("diurnal_period_s", Json::num(DIURNAL_PERIOD_S)),
+        ("diurnal_amp", Json::num(DIURNAL_AMP)),
+        ("prompt", Json::str("16..=64")),
+        ("out_tokens", Json::str("4..=8")),
+        ("routing", Json::str("shortest_queue")),
+        ("timing", Json::str("event")),
+        ("capacity_pages_per_rank", Json::num(CAPACITY_PAGES as f64)),
+        ("model", Json::str("DeepSeek-V3.1")),
+        ("kernel", Json::str("SnapMLA FP8")),
+    ]);
+    let report = Json::obj(vec![
+        ("workload", workload),
+        ("determinism", determinism),
+        ("measured", measured),
+    ]);
+    snapmla::bench::write_report("perf_sim", report.clone());
+    if !quick {
+        match std::fs::write(&baseline, report.to_string_pretty()) {
+            Ok(()) => println!("[report] {}", baseline.display()),
+            Err(e) => eprintln!("warn: could not write {baseline:?}: {e}"),
+        }
+    }
+    assert!(agree, "naive and indexed arms disagree at dp8");
+}

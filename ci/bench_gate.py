@@ -94,6 +94,23 @@ GATES = [
             "results.ctx4096.snapmla.rel_l2",
         ],
     ),
+    (
+        # Simulator-throughput bench: the quick report carries the recorded
+        # events/sec section forward verbatim (wall-clock is not
+        # bit-reproducible), so gating it here pins the COMMITTED record —
+        # a refreshed BENCH_sim.json whose indexed arm lost its speedup
+        # fails the gate instead of landing silently. The determinism rows
+        # are regenerated every quick run and must hold exactly (drift 0%).
+        "BENCH_sim.json",
+        "target/bench-reports/perf_sim.json",
+        ["measured.dp32.indexed_events_per_s"]
+        + [f"measured.dp{dp}.speedup" for dp in (8, 32, 128)]
+        + [
+            f"determinism.dp{dp}.{metric}"
+            for dp in (8, 32, 128)
+            for metric in ("events", "tok_per_s", "peak_pages")
+        ],
+    ),
 ]
 
 
@@ -170,31 +187,38 @@ def run_gate():
 def selftest():
     """The gate must demonstrably fail when a headline ratio is perturbed
     beyond tolerance — run EVERY gate family against a perturbed copy of
-    its own baseline and require a reported regression."""
+    its own baseline, in BOTH directions (a throughput can regress by
+    falling: −2x-tolerance on BENCH_sim's events/sec must trip exactly like
+    +2x-tolerance on a ratio), and require a reported regression."""
     for baseline_path, _, paths in GATES:
         if not os.path.exists(baseline_path):
             print(f"selftest FAILED: committed baseline {baseline_path} is missing")
             return 1
         baseline = load(baseline_path)
-        perturbed = copy.deepcopy(baseline)
         path = paths[0]
         keys = path.split(".")
-        node = perturbed
-        for k in keys[:-1]:
-            node = node[k]
-        node[keys[-1]] *= 1.0 + 2 * TOLERANCE
         label = f"selftest:{os.path.basename(baseline_path)}"
-        print(f"selftest: perturbing {baseline_path}:{path} by +{2 * TOLERANCE * 100:.0f}%…")
-        failures = check(baseline, perturbed, paths, label)
-        if not any("drifted" in f for f in failures):
-            print(f"selftest FAILED: the gate did not flag a 2x-tolerance drift "
-                  f"in {baseline_path}")
-            return 1
+        for scale, sign in ((1.0 + 2 * TOLERANCE, "+"), (1.0 - 2 * TOLERANCE, "-")):
+            perturbed = copy.deepcopy(baseline)
+            node = perturbed
+            for k in keys[:-1]:
+                node = node[k]
+            node[keys[-1]] *= scale
+            print(
+                f"selftest: perturbing {baseline_path}:{path} by "
+                f"{sign}{2 * TOLERANCE * 100:.0f}%…"
+            )
+            failures = check(baseline, perturbed, paths, label)
+            if not any("drifted" in f for f in failures):
+                print(f"selftest FAILED: the gate did not flag a {sign}2x-tolerance "
+                      f"drift in {baseline_path}")
+                return 1
         # and an untouched copy must pass clean
         if any("drifted" in f for f in check(baseline, baseline, paths, label)):
             print(f"selftest FAILED: the gate flagged an identical {baseline_path}")
             return 1
-    print("selftest ok: every gate fails on perturbation, passes on identity")
+    print("selftest ok: every gate fails on perturbation (both directions), "
+          "passes on identity")
     return 0
 
 

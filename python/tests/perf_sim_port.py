@@ -1,0 +1,234 @@
+"""Exact Python port of benches/perf_sim.rs — simulator-throughput bench
+over the shared virtual-time core in serve_port_common.py.
+
+Unlike the serve ports, this bench measures the SIMULATOR itself: events
+per wall-clock second while replaying a 100k-request synthetic trace at
+DP in {8, 32, 128}, in two arms over identical semantics:
+
+* ``naive``   — the pre-optimization harness paths: per-event linear scans
+  over every rank, O(ranks x queue) token-load sums per routing decision,
+  full waiting-queue views per scheduler call, per-round sigma-sweep page
+  sampling (kept in-tree as the reference arm; the property port pins it
+  byte-identical to the indexed arm),
+* ``indexed`` — the optimized paths: a lazy min-heap ready-queue over busy
+  ranks, incrementally maintained per-rank token-load and page counters,
+  and waiting views capped at the scheduler's provable inspection bound.
+
+An *event* is one unit of simulator work: a routed arrival or an applied
+scheduler action (``steps``). Both arms replay the same trace and produce
+byte-identical results, so the events count cancels and the speedup is a
+pure wall-clock ratio.
+
+The report has two sections with different reproducibility contracts:
+
+* ``determinism`` — regenerated on every run from a smaller trace (so
+  ci/port_drift.py keeps it honest without minutes of wall-clock);
+  includes a naive-vs-indexed agreement check at DP8. Drifts under
+  SNAPMLA_PORT_PERTURB like every other baseline.
+* ``measured``   — a RECORDED wall-clock measurement (events/sec per arm
+  on the 100k trace). Wall-clock is not reproducible bit-for-bit, so the
+  default run carries the committed record forward verbatim; refresh it
+  with ``--measure`` (or the full `cargo bench --bench perf_sim` run once
+  a Rust toolchain is available).
+
+Run: python3 python/tests/perf_sim_port.py [--quick | --measure]
+"""
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+BASELINE = os.path.join(REPO_ROOT, "BENCH_sim.json")
+
+PAGE = 64
+CAPACITY_PAGES = 512  # per rank
+DPS = [8, 32, 128]
+MEASURED_REQUESTS = 100_000  # the recorded events/sec arms
+DRIFT_REQUESTS = 4_000  # the regenerated-every-run determinism section
+AGREE_REQUESTS = 1_000  # naive-vs-indexed agreement check (DP8)
+# per-rank trough interarrival (seconds x ranks): the fleet-wide arrival
+# rate scales with DP, so every fleet sees the same per-rank load and the
+# events/sec curve isolates simulator overhead, not queueing collapse
+INTERARRIVAL_S_PER_RANK = 0.041
+DIURNAL_PERIOD_S = 6.0  # peak/trough cycle: backlog builds and drains
+DIURNAL_AMP = 4.0  # bounded per cycle, independent of trace length
+
+
+def trace_cfg(dp, num_requests):
+    return dict(
+        seed=4096,
+        num_requests=num_requests,
+        mean_interarrival_s=INTERARRIVAL_S_PER_RANK / dp,
+        prompt_min=16,
+        prompt_max=64,
+        out_min=4,
+        out_max=8,
+        long_frac=0.0,
+        long_prompt_min=0,
+        long_prompt_max=0,
+        shared_prefix_frac=0.0,
+        shared_prefix_groups=1,
+        shared_prefix_tokens=0,
+        diurnal_period_s=DIURNAL_PERIOD_S,
+        diurnal_amp=DIURNAL_AMP,
+    )
+
+
+def sched_cfg():
+    return dict(
+        max_decode_batch=48,
+        max_prefill_batch=8,
+        max_prefill_tokens=4096,
+        max_context=8192,
+        page=PAGE,
+        prefill_chunk_tokens=256,
+        chunk_per_seq=128,
+        max_step_items=64,
+        max_running=64,
+    )
+
+
+def scen(dp, naive):
+    # every rank prices as one full model replica (dp=1, tp=1): the
+    # per-rank service rate is constant across fleet sizes
+    return dict(
+        ranks=dp,
+        routing="shortest_queue",
+        timing="event",
+        sched_cfg=sched_cfg(),
+        capacity_pages=CAPACITY_PAGES,
+        model_cfg=dict(dp=1, tp=1),
+        naive=naive,
+    )
+
+
+def events_of(res):
+    return res["steps"] + res["requests"]
+
+
+def run_arm(dp, num_requests, naive):
+    trace = generate_trace(trace_cfg(dp, num_requests))
+    t0 = time.perf_counter()
+    res = simulate(trace, scen(dp, naive))
+    elapsed = time.perf_counter() - t0
+    return res, elapsed
+
+
+def determinism_row(res):
+    return dict(
+        requests=res["requests"],
+        completed=res["completed"],
+        events=events_of(res),
+        steps=res["steps"],
+        gen_tokens=res["gen_tokens"],
+        prefill_tokens=res["prefill_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        itl_p95_ms=res["itl_p95_ms"],
+        peak_pages=res["peak_pages"],
+        mean_decode_batch=res["mean_decode_batch"],
+        spills=res["spills"],
+    )
+
+
+def determinism_section():
+    rows = {}
+    for dp in DPS:
+        res, _ = run_arm(dp, DRIFT_REQUESTS, naive=False)
+        rows[f"dp{dp}"] = determinism_row(res)
+    # the indexed structures must agree with a naive reference sweep on the
+    # SAME trace (the full property sweep lives in prop_simperf_port.py;
+    # this keeps one always-on agreement check inside the drift gate)
+    fast, _ = run_arm(8, AGREE_REQUESTS, naive=False)
+    slow, _ = run_arm(8, AGREE_REQUESTS, naive=True)
+    rows["modes_agree_dp8"] = fast == slow
+    return rows
+
+
+def measured_section():
+    rows = dict(
+        note=(
+            "recorded wall-clock measurement (not regenerated by "
+            "ci/port_drift.py): refresh with --measure"
+        ),
+        requests=MEASURED_REQUESTS,
+    )
+    for dp in DPS:
+        naive_res, naive_s = run_arm(dp, MEASURED_REQUESTS, naive=True)
+        fast_res, fast_s = run_arm(dp, MEASURED_REQUESTS, naive=False)
+        if naive_res != fast_res:
+            raise RuntimeError(f"perf_sim arms disagree at dp{dp}")
+        ev = events_of(fast_res)
+        rows[f"dp{dp}"] = dict(
+            events=ev,
+            naive_events_per_s=ev / naive_s,
+            indexed_events_per_s=ev / fast_s,
+            speedup=naive_s / fast_s,
+        )
+        print(
+            f"measured dp{dp}: {ev} events; naive {ev / naive_s:,.0f} ev/s "
+            f"({naive_s:.2f}s), indexed {ev / fast_s:,.0f} ev/s "
+            f"({fast_s:.2f}s), speedup {naive_s / fast_s:.2f}x",
+            file=sys.stderr,
+        )
+    return rows
+
+
+def recorded_measured():
+    if not os.path.exists(BASELINE):
+        raise SystemExit(
+            f"perf_sim_port: no committed {os.path.basename(BASELINE)} to carry "
+            "the recorded wall-clock section forward from — run with --measure "
+            "to produce one"
+        )
+    with open(BASELINE) as f:
+        return json.load(f)["measured"]
+
+
+def run(measure=False):
+    workload = dict(
+        seed=4096,
+        dps=DPS,
+        measured_requests=MEASURED_REQUESTS,
+        drift_requests=DRIFT_REQUESTS,
+        trough_interarrival_s_per_rank=INTERARRIVAL_S_PER_RANK,
+        diurnal_period_s=DIURNAL_PERIOD_S,
+        diurnal_amp=DIURNAL_AMP,
+        prompt="16..=64",
+        out_tokens="4..=8",
+        routing="shortest_queue",
+        timing="event",
+        capacity_pages_per_rank=CAPACITY_PAGES,
+        model="DeepSeek-V3.1",
+        kernel="SnapMLA FP8",
+    )
+    return dict(
+        workload=workload,
+        determinism=determinism_section(),
+        measured=measured_section() if measure else recorded_measured(),
+    )
+
+
+if __name__ == "__main__":
+    # --quick matches the other ports' CLI; the determinism section is
+    # already the quick configuration, so it changes nothing here
+    measure = "--measure" in sys.argv
+    report = normalize(run(measure))
+    print(json.dumps(report, indent=1, sort_keys=True))
+    if not report["determinism"]["modes_agree_dp8"]:
+        print("WARNING: naive and indexed arms disagree", file=sys.stderr)
+        sys.exit(1)
+    for dp in DPS:
+        m = report["measured"][f"dp{dp}"]
+        print(
+            f"dp{dp}: {m['events']} events, naive {m['naive_events_per_s']:,.0f} ev/s, "
+            f"indexed {m['indexed_events_per_s']:,.0f} ev/s, "
+            f"speedup {m['speedup']:.2f}x",
+            file=sys.stderr,
+        )

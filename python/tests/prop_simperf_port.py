@@ -1,0 +1,206 @@
+"""Mirrored port of rust/tests/prop_simperf.rs — the indexed simulator
+paths must be byte-identical to the naive reference sweeps.
+
+simulate() keeps two copies of its hot paths: the pre-optimization
+``naive`` arm (full linear scans per routing decision, full waiting views
+per scheduler call, per-round sigma-sweep page sampling, rebuilt candidate
+lists) and the indexed arm (lazy ready-heap over busy ranks, incremental
+per-rank token-load and page counters, capped waiting views, batched
+same-instant pops). Every committed baseline rides the indexed arm, so
+this sweep is the safety net: random traces x random scenarios, lock-step
+and event modes, with and without elastic membership churn, disaggregated
+and colocated — the FULL result dicts (every counter, percentile, routed
+vector and membership timeline) must compare equal.
+
+Run: python3 python/tests/prop_simperf_port.py  (exit 0 = all cases agree)
+"""
+
+import json
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import Rng, generate_trace, simulate  # noqa: E402
+
+PAGE = 16
+
+
+def gen_range(rng, lo, hi):
+    # inclusive uniform pick, mirroring util::rng usage in tracegen
+    return lo + rng.next_u64() % (hi - lo + 1)
+
+
+def random_trace_cfg(rng, case):
+    prompt_min = 8 + int(gen_range(rng, 0, 40))
+    out_min = 1 + int(gen_range(rng, 0, 6))
+    cfg = dict(
+        seed=9000 + case,
+        num_requests=30 + int(gen_range(rng, 0, 50)),
+        mean_interarrival_s=0.002 + (rng.next_u64() % 1000) / 1000.0 * 0.03,
+        prompt_min=prompt_min,
+        prompt_max=prompt_min + int(gen_range(rng, 8, 200)),
+        out_min=out_min,
+        out_max=out_min + int(gen_range(rng, 1, 24)),
+        long_frac=0.0,
+        long_prompt_min=0,
+        long_prompt_max=0,
+        shared_prefix_frac=0.0,
+        shared_prefix_groups=1,
+        shared_prefix_tokens=0,
+        diurnal_period_s=0.0,
+        diurnal_amp=1.0,
+    )
+    if rng.next_u64() % 3 == 0:
+        cfg["shared_prefix_frac"] = 0.5
+        cfg["shared_prefix_groups"] = 3
+        cfg["shared_prefix_tokens"] = PAGE * int(gen_range(rng, 1, 4))
+    if rng.next_u64() % 3 == 0:
+        cfg["diurnal_period_s"] = 2.0
+        cfg["diurnal_amp"] = 3.0
+    return cfg
+
+
+def random_sched_cfg(rng):
+    return dict(
+        max_decode_batch=4 + int(gen_range(rng, 0, 8)),
+        max_prefill_batch=1 + int(gen_range(rng, 0, 3)),
+        max_prefill_tokens=2048,
+        max_context=2048,
+        page=PAGE,
+        prefill_chunk_tokens=32 + PAGE * int(gen_range(rng, 0, 4)),
+        chunk_per_seq=32,
+        max_step_items=8 + int(gen_range(rng, 0, 8)),
+        max_running=6 + int(gen_range(rng, 0, 6)),
+    )
+
+
+def random_case(rng, case):
+    """One random scenario; returns (trace_cfg, scen_without_naive)."""
+    trace_cfg = random_trace_cfg(rng, case)
+    sched = random_sched_cfg(rng)
+    mode = rng.next_u64() % 4
+    # capacity always fits one max-size sequence PLUS the worst-case set of
+    # published shared prefixes (which hold pages even on an idle rank), so
+    # a lone request cannot deadlock — but it stays tight enough under load
+    # to exercise spill/resume
+    per_seq_pages = -(-(trace_cfg["prompt_max"] + trace_cfg["out_max"]) // PAGE)
+    shared_pages = trace_cfg["shared_prefix_groups"] * (
+        -(-trace_cfg["shared_prefix_tokens"] // PAGE)
+    )
+    capacity = per_seq_pages + shared_pages + int(gen_range(rng, 2, 30))
+    if mode == 0:
+        # lock-step colocated fleet (serve_cluster shape)
+        dp = 1 + int(gen_range(rng, 0, 3))
+        scen = dict(
+            ranks=dp,
+            routing="single" if dp == 1 else "shortest_queue",
+            timing="lockstep",
+            sched_cfg=sched,
+            capacity_pages=capacity,
+            model_cfg=dict(dp=dp, tp=2),
+        )
+    elif mode == 1:
+        # event-driven colocated fleet, sometimes straggling ranks
+        dp = 1 + int(gen_range(rng, 0, 3))
+        routing = "prefix_affinity" if rng.next_u64() % 2 == 0 else (
+            "single" if dp == 1 else "shortest_queue"
+        )
+        scen = dict(
+            ranks=dp,
+            routing=routing,
+            timing="event",
+            sched_cfg=sched,
+            capacity_pages=capacity,
+            model_cfg=dict(dp=dp, tp=2),
+        )
+        if rng.next_u64() % 2 == 0:
+            scen["speeds"] = [
+                1.0 + (rng.next_u64() % 100) / 100.0 for _ in range(dp)
+            ]
+    elif mode == 2:
+        # disaggregated prefill/decode split (serve_disagg shape)
+        prefill = 1 + int(gen_range(rng, 0, 1))
+        decode = 1 + int(gen_range(rng, 0, 2))
+        scen = dict(
+            ranks=prefill + decode,
+            prefill_ranks=prefill,
+            routing="disagg",
+            timing="event",
+            sched_cfg=sched,
+            prefill_sched_cfg=dict(sched, disagg_prefill=True),
+            capacity_pages=capacity,
+            model_cfg=dict(dp=prefill + decode, tp=2),
+        )
+    else:
+        # elastic membership churn: injected failures and/or an autoscaler
+        dp = 3 + int(gen_range(rng, 0, 1))
+        span = trace_cfg["num_requests"] * trace_cfg["mean_interarrival_s"]
+        failures = []
+        if rng.next_u64() % 2 == 0:
+            failures.append((span * 0.3, int(gen_range(rng, 0, dp - 1))))
+        autoscale = None
+        if rng.next_u64() % 2 == 0:
+            autoscale = dict(
+                min_ranks=1,
+                max_ranks=dp + 2,
+                eval_interval_s=max(span / 8.0, 0.05),
+                queue_high=1.5,
+                queue_low=1.0,
+                idle_for_s=max(span / 4.0, 0.1),
+                join_delay_s=max(span / 10.0, 0.05),
+                ttft_slo_s=0.5,
+            )
+        scen = dict(
+            ranks=dp,
+            routing="prefix_affinity" if rng.next_u64() % 2 == 0 else "shortest_queue",
+            timing="event",
+            sched_cfg=sched,
+            capacity_pages=capacity,
+            model_cfg=dict(dp=dp, tp=2),
+            elastic=dict(failures=failures, recover=rng.next_u64() % 3 != 0,
+                         autoscale=autoscale),
+        )
+    return trace_cfg, scen
+
+
+def diff_keys(a, b):
+    keys = sorted(set(a) | set(b))
+    return [k for k in keys if a.get(k) != b.get(k)]
+
+
+def main():
+    cases = 60
+    rng = Rng(0x51A9)
+    failures = 0
+    mode_counts = {}
+    for case in range(cases):
+        trace_cfg, scen = random_case(rng, case)
+        label = "{}/{}{}".format(
+            scen["timing"],
+            scen["routing"],
+            "+elastic" if scen.get("elastic") else
+            ("+disagg" if scen.get("prefill_ranks") else ""),
+        )
+        mode_counts[label] = mode_counts.get(label, 0) + 1
+        trace = generate_trace(trace_cfg)
+        slow = simulate(trace, dict(scen, naive=True))
+        fast = simulate(trace, dict(scen, naive=False))
+        if slow != fast:
+            failures += 1
+            print(f"FAIL case {case} [{label}]: keys {diff_keys(slow, fast)}")
+            print("  trace_cfg:", json.dumps(trace_cfg, sort_keys=True))
+            print("  scen:", json.dumps(
+                {k: v for k, v in scen.items() if k != "sched_cfg"},
+                sort_keys=True, default=str))
+            for k in diff_keys(slow, fast):
+                print(f"    {k}: naive={slow.get(k)!r} indexed={fast.get(k)!r}")
+    for label in sorted(mode_counts):
+        print(f"  {mode_counts[label]:3d} x {label}")
+    if failures:
+        print(f"prop_simperf: {failures}/{cases} cases DIVERGED")
+        return 1
+    print(f"prop_simperf: {cases} random scenarios, naive == indexed on all")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

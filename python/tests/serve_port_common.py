@@ -29,6 +29,7 @@ every baseline regeneration to fail — a wrapper that silently forked off
 this core would keep reproducing its baseline and flunk the selftest.
 """
 
+import heapq
 import math
 import os
 
@@ -599,6 +600,24 @@ def simulate(trace, scen):
              state="active")
         for _ in range(n)
     ]
+    # `naive=True` keeps the pre-optimization reference paths: full linear
+    # scans per routing decision, full waiting views per scheduler call,
+    # per-round sigma-sweeps for page sampling, and a rebuilt candidate
+    # list per event iteration. The indexed paths below must stay
+    # byte-identical to it (prop_simperf_port.py / rust/tests/
+    # prop_simperf.rs sweep the agreement; perf_sim measures the gap).
+    naive = scen.get("naive", False)
+    # indexed bookkeeping (mirrors harness.rs RankIndex): per-rank token
+    # loads and the fleet page count are maintained incrementally at every
+    # queue/page mutation instead of re-summed per event, and `ready` is a
+    # lazy min-heap over busy ranks keyed by next-actionable time (an entry
+    # is stale unless the rank is busy and its clock still matches)
+    wait_po = [0] * n  # per rank: sum over waiting of prompt + out
+    wait_rem = [0] * n  # per rank: sum over waiting of out - generated
+    run_rem = [0] * n  # per rank: sum over running of out - generated
+    used_pages_total = 0  # fleet-wide sum of (capacity - free)
+    busy = set()  # ranks with any queued or running work
+    ready = []  # lazy min-heap of (t, rank) over busy ranks
     in_flight = []  # (sid, ready_at) FIFO of serialized sequences in transit
     clock = 0.0
     next_arrival = 0
@@ -647,6 +666,28 @@ def simulate(trace, scen):
     def active_count():
         return sum(1 for r in ranks if r["state"] == "active")
 
+    def touch(ri):
+        # a rank that just gained its first work item becomes schedulable:
+        # enter the busy set and the ready-heap at its current local time.
+        # An already-busy rank already owns a live heap entry (pushed here
+        # or re-pushed by the event sweep after its last action).
+        r = ranks[ri]
+        if ri not in busy and (r["waiting"] or r["running"]):
+            busy.add(ri)
+            heapq.heappush(ready, (r["t"], ri))
+
+    def untouch(ri):
+        # dropping the last work item retires the rank from the busy set;
+        # its heap entries go stale and are discarded lazily
+        r = ranks[ri]
+        if ri in busy and not r["waiting"] and not r["running"]:
+            busy.discard(ri)
+
+    def heap_entry_live(entry):
+        t, ri = entry
+        r = ranks[ri]
+        return (r["waiting"] or r["running"]) and t == r["t"]
+
     def private_pages(sid):
         s = seqs[sid]
         return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
@@ -666,9 +707,12 @@ def simulate(trace, scen):
         for ri, r in enumerate(ranks):
             if r["state"] != "active":
                 continue
-            tokens = sum(
-                seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
-            ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+            if naive:
+                tokens = sum(
+                    seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
+                ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+            else:
+                tokens = wait_po[ri] + run_rem[ri]
             idxs.append(ri)
             loads.append(
                 dict(tokens=tokens, free=r["free"], needed=needed,
@@ -685,10 +729,13 @@ def simulate(trace, scen):
             # the prompt's pages (the KV migrates at handoff)
             needed = pages_for(s["prompt"], page)
             loads = []
-            for r in ranks[:prefill_ranks]:
-                tokens = sum(
-                    seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
-                ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+            for ri, r in enumerate(ranks[:prefill_ranks]):
+                if naive:
+                    tokens = sum(
+                        seqs[w]["prompt"] + seqs[w]["out"] for w in r["waiting"]
+                    ) + sum(seqs[x]["out"] - seqs[x]["generated"] for x in r["running"])
+                else:
+                    tokens = wait_po[ri] + run_rem[ri]
                 loads.append(dict(tokens=tokens, free=r["free"], needed=needed))
             rank = pick_rank(loads)
         elif routing == "prefix_affinity":
@@ -699,7 +746,7 @@ def simulate(trace, scen):
                     f"({len(ranks)} total, {len(pending_joins)} joining)"
                 )
             rank = idxs[pick_rank_affinity(loads, page)]
-        else:
+        elif naive:
             idxs, loads = colocated_loads(sid)
             if not idxs:
                 raise RuntimeError(
@@ -707,8 +754,36 @@ def simulate(trace, scen):
                     f"({len(ranks)} total, {len(pending_joins)} joining)"
                 )
             rank = idxs[pick_rank(loads)]
+        else:
+            # inline pick_rank over the incremental load counters: capacity-
+            # aware shortest queue needs only (tokens, free) per rank, so
+            # the per-arrival load-dict construction is pure overhead here.
+            # Ascending scan + strict < keeps pick_rank's (tokens, idx)
+            # tie-break exactly.
+            needed = pages_for(s["prompt"] + s["out"], page)
+            best_fit = best_any = None
+            rank = -1
+            for ri, r in enumerate(ranks):
+                if r["state"] != "active":
+                    continue
+                tokens = wait_po[ri] + run_rem[ri]
+                if r["free"] >= needed:
+                    if best_fit is None or tokens < best_fit:
+                        best_fit = tokens
+                        rank = ri
+                elif best_fit is None and (best_any is None or tokens < best_any):
+                    best_any = tokens
+                    rank = ri
+            if rank < 0:
+                raise RuntimeError(
+                    f"no active ranks to route request {sid} "
+                    f"({len(ranks)} total, {len(pending_joins)} joining)"
+                )
         stats["routed"][rank] += 1
         ranks[rank]["waiting"].append(sid)
+        wait_po[rank] += s["prompt"] + s["out"]
+        wait_rem[rank] += s["out"] - s["generated"]
+        touch(rank)
 
     def deliver():
         # every ready transfer lands on the decode rank with headroom;
@@ -717,6 +792,7 @@ def simulate(trace, scen):
         # adopts work. A transfer that can NEVER place (needs more pages
         # than one rank holds, or the fleet is gone) is dropped and
         # recorded, not parked forever and not panicked.
+        nonlocal used_pages_total
         delivered = False
         keep = []
         targets = [
@@ -740,9 +816,12 @@ def simulate(trace, scen):
             loads = []
             for ri in targets:
                 r = ranks[ri]
-                tokens = sum(
-                    seqs[x]["out"] - seqs[x]["generated"] for x in r["running"]
-                ) + sum(seqs[w]["out"] - seqs[w]["generated"] for w in r["waiting"])
+                if naive:
+                    tokens = sum(
+                        seqs[x]["out"] - seqs[x]["generated"] for x in r["running"]
+                    ) + sum(seqs[w]["out"] - seqs[w]["generated"] for w in r["waiting"])
+                else:
+                    tokens = run_rem[ri] + wait_rem[ri]
                 open_slot = len(r["running"]) < sched_cfg["max_running"]
                 loads.append(
                     dict(tokens=tokens, free=r["free"], evictable=0, hit=0,
@@ -752,9 +831,13 @@ def simulate(trace, scen):
             if j is None:
                 keep.append((sid, ready))
                 continue
-            r = ranks[targets[j]]
+            tj = targets[j]
+            r = ranks[tj]
             r["free"] -= pages_for(s["cached"], page)
+            used_pages_total += pages_for(s["cached"], page)
             r["running"].append(sid)
+            run_rem[tj] += s["out"] - s["generated"]
+            touch(tj)
             stats["handoffs"] += 1
             if s["evac"]:
                 s["evac"] = False
@@ -797,6 +880,7 @@ def simulate(trace, scen):
         # immediately; queued-but-fresh requests re-route, sequences with
         # KV either re-migrate (recover) or drop; the rank's published
         # prefixes die with it
+        nonlocal used_pages_total
         r = ranks[ri]
         r["state"] = "dead"
         stats["fails"] += 1
@@ -809,7 +893,10 @@ def simulate(trace, scen):
         waiting, running = r["waiting"], r["running"]
         r["waiting"], r["running"] = [], []
         r["shared"] = {}
+        used_pages_total -= capacity_pages - r["free"]
         r["free"] = capacity_pages
+        wait_po[ri] = wait_rem[ri] = run_rem[ri] = 0
+        busy.discard(ri)
         for sid in waiting + running:
             evacuate(sid)
         note_membership("fail", ri)
@@ -822,6 +909,9 @@ def simulate(trace, scen):
                  t=clock, state="active")
         )
         speeds.append(1.0)
+        wait_po.append(0)
+        wait_rem.append(0)
+        run_rem.append(0)
         stats["routed"].append(0)
         stats["joins"] += 1
         note_membership("join", len(ranks) - 1)
@@ -876,10 +966,20 @@ def simulate(trace, scen):
 
     def decide(ri):
         r = ranks[ri]
+        if naive:
+            wsrc = r["waiting"]
+        else:
+            # both policies inspect at most a max_prefill_batch-sized FCFS
+            # prefix of the queue plus one break-check entry (admission is
+            # prefix-only and every non-breaking iteration fills one of at
+            # most max_prefill_batch candidate slots), so a capped view is
+            # decision-identical while the queue itself can hold thousands
+            cfg = prefill_sched_cfg if ri < prefill_ranks else sched_cfg
+            wsrc = r["waiting"][: max(cfg["max_prefill_batch"], 1) + 1]
         wview = [
             (i, seqs[sid]["cached"] if seqs[sid]["spilled"] else seqs[sid]["prompt"],
              seqs[sid]["spilled"])
-            for i, sid in enumerate(r["waiting"])
+            for i, sid in enumerate(wsrc)
         ]
         rview = [
             (i, seqs[sid]["cached"], seqs[sid]["prompt"] - seqs[sid]["prefilled"])
@@ -896,12 +996,17 @@ def simulate(trace, scen):
         Event mode stamps tokens at the rank-local completion time
         t_start + cost; lockstep passes t_start=None and the harness stamps
         at the round barrier."""
+        nonlocal used_pages_total
         r = ranks[ri]
         cost = 0.0
         kind = action[0]
         if kind == "prefill":
             ids = [r["waiting"][i] for i in action[1]]
             r["waiting"] = r["waiting"][len(ids):]
+            for sid in ids:
+                s = seqs[sid]
+                wait_po[ri] -= s["prompt"] + s["out"]
+                wait_rem[ri] -= s["out"] - s["generated"]
             total = sum(seqs[sid]["prompt"] for sid in ids)
             cost = prefill_step_s(mcfg, total) * speeds[ri]
             stats["prefill_tokens"] += total
@@ -909,6 +1014,7 @@ def simulate(trace, scen):
             for sid in ids:
                 s = seqs[sid]
                 r["free"] -= pages_for(s["prompt"], page)
+                used_pages_total += pages_for(s["prompt"], page)
                 s["cached"] = s["prompt"]
                 s["prefilled"] = s["prompt"]
                 publish(r, sid)
@@ -916,16 +1022,22 @@ def simulate(trace, scen):
                 stamp_first(s, t_emit)
                 emit(sid, t_emit)
                 if s["generated"] >= s["out"]:
-                    r["free"] += private_pages(sid)
+                    pp = private_pages(sid)
+                    r["free"] += pp
+                    used_pages_total -= pp
                 else:
                     r["running"].append(sid)
+                    run_rem[ri] += s["out"] - s["generated"]
         elif kind == "handoff":
             # serialize + free this rank's pages; the wire block rides the
             # link (unscaled: it is the link's time, not the rank's)
             # overlapped with the rank's next step
             sid = r["running"].pop(action[1])
             s = seqs[sid]
-            r["free"] += private_pages(sid)
+            run_rem[ri] -= s["out"] - s["generated"]
+            pp = private_pages(sid)
+            r["free"] += pp
+            used_pages_total -= pp
             s["adopted"] = 0
             s["transferred"] = 0
             stats["wire_fp8_bytes"] += WIRE_FP8_PER_TOKEN * s["cached"]
@@ -948,13 +1060,19 @@ def simulate(trace, scen):
                 s = seqs[sid]
                 if s["cached"] % page == 0:
                     r["free"] -= 1
+                    used_pages_total += 1
                 s["cached"] += 1
                 s["generated"] += 1
+                run_rem[ri] -= 1
                 emit(sid, t_emit)
                 if s["generated"] >= s["out"]:
                     done.append(sid)
             for sid in done:
-                r["free"] += private_pages(sid)
+                s = seqs[sid]
+                run_rem[ri] -= s["out"] - s["generated"]
+                pp = private_pages(sid)
+                r["free"] += pp
+                used_pages_total -= pp
                 r["running"].remove(sid)
         elif kind == "mixed":
             chunks, decode_idxs = action[1], action[2]
@@ -963,6 +1081,12 @@ def simulate(trace, scen):
             n_admit = sum(1 for c in chunks if c[0])
             admitted = r["waiting"][:n_admit]
             r["waiting"] = r["waiting"][n_admit:]
+            # admitted sequences move waiting -> running in this action
+            for sid in admitted:
+                s = seqs[sid]
+                wait_po[ri] -= s["prompt"] + s["out"]
+                wait_rem[ri] -= s["out"] - s["generated"]
+                run_rem[ri] += s["out"] - s["generated"]
             # admission adopts the rank's published prefix pages (shared,
             # no allocation), exactly like PagedKvCache::adopt_prefix
             for sid in admitted:
@@ -992,7 +1116,9 @@ def simulate(trace, scen):
             done = []
             for (sid, take) in chunk_plan:
                 s = seqs[sid]
-                r["free"] -= pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
+                grow = pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
+                r["free"] -= grow
+                used_pages_total += grow
                 s["cached"] += take
                 s["prefilled"] += take
                 stats["chunk_tokens"] += take
@@ -1000,6 +1126,7 @@ def simulate(trace, scen):
                 publish(r, sid)
                 if s["prefilled"] == s["prompt"]:
                     s["generated"] = 1
+                    run_rem[ri] -= 1
                     stamp_first(s, t_emit)
                     emit(sid, t_emit)
                     if s["generated"] >= s["out"]:
@@ -1008,29 +1135,42 @@ def simulate(trace, scen):
                 s = seqs[sid]
                 if s["cached"] % page == 0:
                     r["free"] -= 1
+                    used_pages_total += 1
                 s["cached"] += 1
                 s["generated"] += 1
+                run_rem[ri] -= 1
                 emit(sid, t_emit)
                 if s["generated"] >= s["out"]:
                     done.append(sid)
             for sid in done:
-                r["free"] += private_pages(sid)
+                s = seqs[sid]
+                run_rem[ri] -= s["out"] - s["generated"]
+                pp = private_pages(sid)
+                r["free"] += pp
+                used_pages_total -= pp
                 r["running"].remove(sid)
         elif kind == "resume":
             sid = r["waiting"].pop(0)
             s = seqs[sid]
+            wait_po[ri] -= s["prompt"] + s["out"]
+            wait_rem[ri] -= s["out"] - s["generated"]
             cost = spill_s(s["cached"]) * speeds[ri]
             r["free"] -= pages_for(s["cached"], page)
+            used_pages_total += pages_for(s["cached"], page)
             s["spilled"] = False
             s["adopted"] = 0
             s["transferred"] = 0
             stats["restores"] += 1
             r["running"].append(sid)
+            run_rem[ri] += s["out"] - s["generated"]
         elif kind == "preempt":
             sid = r["running"].pop(action[1])
             s = seqs[sid]
+            run_rem[ri] -= s["out"] - s["generated"]
             cost = spill_s(s["cached"]) * speeds[ri]
-            r["free"] += private_pages(sid)
+            pp = private_pages(sid)
+            r["free"] += pp
+            used_pages_total -= pp
             # the spill snapshot privatizes adopted pages (exactness over
             # dedup): the restore reallocates every page
             s["adopted"] = 0
@@ -1038,6 +1178,9 @@ def simulate(trace, scen):
             s["spilled"] = True
             stats["spills"] += 1
             r["waiting"].insert(0, sid)
+            wait_po[ri] += s["prompt"] + s["out"]
+            wait_rem[ri] += s["out"] - s["generated"]
+        untouch(ri)
         return cost
 
     def stuck_report():
@@ -1069,8 +1212,8 @@ def simulate(trace, scen):
 
     iters = 0
     if timing == "lockstep":
-        while next_arrival < len(trace) or any(
-            r["waiting"] or r["running"] for r in ranks
+        while next_arrival < len(trace) or (
+            any(r["waiting"] or r["running"] for r in ranks) if naive else bool(busy)
         ):
             iters += 1
             if iters > 500_000:
@@ -1081,8 +1224,11 @@ def simulate(trace, scen):
 
             # one lock-step round: every rank takes one scheduler action off
             # the pre-round state; the round costs the slowest rank's step
+            # (the indexed path sweeps only the busy set, in rank order,
+            # which is exactly the set the naive sweep acts on)
             decisions = []
-            for ri, r in enumerate(ranks):
+            for ri in (range(len(ranks)) if naive else sorted(busy)):
+                r = ranks[ri]
                 if not r["waiting"] and not r["running"]:
                     continue
                 action = decide(ri)
@@ -1103,18 +1249,32 @@ def simulate(trace, scen):
                 if s["last_token"] is not None:
                     itl.append(clock - s["last_token"])
                 s["last_token"] = clock
+            if naive:
+                for s in seqs.values():
+                    if s["first_token"] is None and s["generated"] > 0:
+                        s["first_token"] = clock
+            else:
+                # a sequence's first token is born the round `generated`
+                # goes 0 -> 1, and that transition always emits — so every
+                # unstamped first token is in this round's pending_emits
+                # (no O(seqs) sweep per round)
+                for sid in pending_emits:
+                    s = seqs[sid]
+                    if s["first_token"] is None:
+                        s["first_token"] = clock
             pending_emits.clear()
-            for s in seqs.values():
-                if s["first_token"] is None and s["generated"] > 0:
-                    s["first_token"] = clock
             stats["rounds"] += 1
-            used = sum(capacity_pages - r["free"] for r in ranks)
+            used = (
+                sum(capacity_pages - r["free"] for r in ranks)
+                if naive
+                else used_pages_total
+            )
             stats["peak_pages"] = max(stats["peak_pages"], used)
     else:
         while (
             next_arrival < len(trace)
             or in_flight
-            or any(r["waiting"] or r["running"] for r in ranks)
+            or (any(r["waiting"] or r["running"] for r in ranks) if naive else bool(busy))
         ):
             iters += 1
             if iters > 2_000_000:
@@ -1124,19 +1284,53 @@ def simulate(trace, scen):
             # or (elastic) a scheduled failure / provisioning rank / the
             # autoscaler's next evaluation
             # (simulate::clock::EventLoop pops the same minimum in Rust)
-            cands = [r["t"] for r in ranks if r["waiting"] or r["running"]]
-            if next_arrival < len(trace):
-                cands.append(trace[next_arrival]["arrival_s"])
-            cands.extend(ready for (_, ready) in in_flight)
-            if elastic:
-                if next_fail < len(fail_sched):
-                    cands.append(fail_sched[next_fail][0])
-                cands.extend(pending_joins)
-                if auto:
-                    cands.append(next_eval)
-            if not cands:
-                raise RuntimeError(wedge_report())
-            new_clock = max(clock, min(cands))
+            #
+            # the no-progress jump below must use THIS iteration's candidate
+            # set: an autoscale decision made mid-iteration publishes its
+            # join (and advances next_eval) for the NEXT iteration
+            eval_at_start = next_eval
+            joins_at_start = len(pending_joins)
+            if naive:
+                cands = [r["t"] for r in ranks if r["waiting"] or r["running"]]
+                if next_arrival < len(trace):
+                    cands.append(trace[next_arrival]["arrival_s"])
+                cands.extend(ready_at for (_, ready_at) in in_flight)
+                if elastic:
+                    if next_fail < len(fail_sched):
+                        cands.append(fail_sched[next_fail][0])
+                    cands.extend(pending_joins)
+                    if auto:
+                        cands.append(next_eval)
+                if not cands:
+                    raise RuntimeError(wedge_report())
+                new_clock = max(clock, min(cands))
+            else:
+                # indexed candidate minimum: the ready-heap head is the
+                # earliest busy rank (stale entries discarded lazily); the
+                # other sources are O(pending) scalars
+                while ready and not heap_entry_live(ready[0]):
+                    heapq.heappop(ready)
+                min_c = ready[0][0] if ready else None
+                if next_arrival < len(trace):
+                    at = trace[next_arrival]["arrival_s"]
+                    if min_c is None or at < min_c:
+                        min_c = at
+                for (_, ready_at) in in_flight:
+                    if min_c is None or ready_at < min_c:
+                        min_c = ready_at
+                if elastic:
+                    if next_fail < len(fail_sched):
+                        ft = fail_sched[next_fail][0]
+                        if min_c is None or ft < min_c:
+                            min_c = ft
+                    for jt in pending_joins:
+                        if min_c is None or jt < min_c:
+                            min_c = jt
+                    if auto and (min_c is None or next_eval < min_c):
+                        min_c = next_eval
+                if min_c is None:
+                    raise RuntimeError(wedge_report())
+                new_clock = max(clock, min_c)
             if elastic and new_clock > clock:
                 a_int += active_count() * (new_clock - a_last)
                 a_last = new_clock
@@ -1164,26 +1358,52 @@ def simulate(trace, scen):
                     next_eval += auto["eval_interval_s"]
                 autoscale_eval()
 
-            for ri, r in enumerate(ranks):
-                if r["t"] > clock:
-                    continue
-                # handoffs cost the rank nothing (serialize + async send): a
-                # prefill rank drains every completed prefill and still
-                # takes its real action at the same instant
-                while True:
-                    if not r["waiting"] and not r["running"]:
-                        action = ("idle",)
+            if naive:
+                due = range(len(ranks))
+            else:
+                # batched pop: drain every live heap entry at or before the
+                # new clock in one sweep (clock::EventLoop::pop_batch), then
+                # act in rank order — the same order the naive rank scan
+                # visits, and cross-rank effects within an instant only ride
+                # `in_flight`, so the order beyond rank id cannot matter
+                due = []
+                seen = set()
+                while ready:
+                    entry = ready[0]
+                    if not heap_entry_live(entry):
+                        heapq.heappop(ready)
+                        continue
+                    if entry[0] > clock:
                         break
-                    action = decide(ri)
-                    if action[0] != "handoff":
-                        break
-                    apply(ri, action, r["t"])
-                    progressed = True
-                if action[0] == "idle":
-                    continue
-                r["t"] += apply(ri, action, r["t"])
-                stats["steps"] += 1
-                progressed = True
+                    heapq.heappop(ready)
+                    if entry[1] not in seen:
+                        seen.add(entry[1])
+                        due.append(entry[1])
+                due.sort()
+            for ri in due:
+                r = ranks[ri]
+                if r["t"] <= clock:
+                    # handoffs cost the rank nothing (serialize + async
+                    # send): a prefill rank drains every completed prefill
+                    # and still takes its real action at the same instant
+                    while True:
+                        if not r["waiting"] and not r["running"]:
+                            action = ("idle",)
+                            break
+                        action = decide(ri)
+                        if action[0] != "handoff":
+                            break
+                        apply(ri, action, r["t"])
+                        progressed = True
+                    if action[0] != "idle":
+                        r["t"] += apply(ri, action, r["t"])
+                        stats["steps"] += 1
+                        progressed = True
+                if not naive and (r["waiting"] or r["running"]):
+                    # restore the heap invariant: every busy rank owns one
+                    # live entry (at its advanced time, or unchanged if the
+                    # scheduler had nothing feasible this instant)
+                    heapq.heappush(ready, (r["t"], ri))
 
             if elastic:
                 # a draining rank that has emptied its queue retires: its
@@ -1192,19 +1412,62 @@ def simulate(trace, scen):
                     if r["state"] == "draining" and not r["waiting"] and not r["running"]:
                         r["state"] = "dead"
                         r["shared"] = {}
+                        used_pages_total -= capacity_pages - r["free"]
                         r["free"] = capacity_pages
 
             if not progressed:
-                later = [c for c in cands if c > clock]
-                if not later:
-                    raise RuntimeError(wedge_report())
-                new_clock = min(later)
+                if naive:
+                    later = [c for c in cands if c > clock]
+                    if not later:
+                        raise RuntimeError(wedge_report())
+                    new_clock = min(later)
+                else:
+                    lat = None
+                    stash = []
+                    while ready:
+                        entry = heapq.heappop(ready)
+                        if not heap_entry_live(entry):
+                            continue
+                        if entry[0] <= clock:
+                            stash.append(entry)
+                            continue
+                        heapq.heappush(ready, entry)
+                        lat = entry[0]
+                        break
+                    for entry in stash:
+                        heapq.heappush(ready, entry)
+                    if next_arrival < len(trace):
+                        at = trace[next_arrival]["arrival_s"]
+                        if at > clock and (lat is None or at < lat):
+                            lat = at
+                    for (_, ready_at) in in_flight:
+                        if ready_at > clock and (lat is None or ready_at < lat):
+                            lat = ready_at
+                    if elastic:
+                        if next_fail < len(fail_sched):
+                            ft = fail_sched[next_fail][0]
+                            if ft > clock and (lat is None or ft < lat):
+                                lat = ft
+                        for jt in pending_joins[:joins_at_start]:
+                            if jt > clock and (lat is None or jt < lat):
+                                lat = jt
+                        if auto and eval_at_start > clock and (
+                            lat is None or eval_at_start < lat
+                        ):
+                            lat = eval_at_start
+                    if lat is None:
+                        raise RuntimeError(wedge_report())
+                    new_clock = lat
                 if elastic:
                     a_int += active_count() * (new_clock - a_last)
                     a_last = new_clock
                 clock = new_clock
                 continue
-            used = sum(capacity_pages - r["free"] for r in ranks)
+            used = (
+                sum(capacity_pages - r["free"] for r in ranks)
+                if naive
+                else used_pages_total
+            )
             stats["peak_pages"] = max(stats["peak_pages"], used)
 
     wall = clock

@@ -73,12 +73,22 @@ pub struct ClusterServer {
     elastic: bool,
     /// ids evacuated off a failed rank and still awaiting re-placement
     evac_ids: HashSet<u64>,
+    /// last observed `used_pages()` per rank (0 once a rank is dead) —
+    /// re-read only at the points a rank's cache can change (its own
+    /// step, an accepted handoff, failure/retirement) so the page peak
+    /// is O(ranks touched) per round instead of a fleet-wide sweep; a
+    /// debug assert re-derives the sweep and pins the two equal
+    used_cache: Vec<usize>,
+    /// Σ of `used_cache` — the fleet-wide page allocation
+    used_total: usize,
 }
 
 impl ClusterServer {
     pub fn new(ranks: Vec<Server>, policy: RoutePolicy) -> ClusterServer {
         let dp = ranks.len();
         let metrics = ClusterMetrics::new(dp);
+        let used_cache: Vec<usize> = ranks.iter().map(|r| r.cache.used_pages()).collect();
+        let used_total = used_cache.iter().sum();
         ClusterServer {
             router: Router::with_policy(ranks, policy),
             metrics,
@@ -88,6 +98,8 @@ impl ClusterServer {
             vclock: vec![0.0; dp],
             elastic: false,
             evac_ids: HashSet::new(),
+            used_cache,
+            used_total,
         }
     }
 
@@ -101,6 +113,8 @@ impl ClusterServer {
             r.set_disagg_prefill();
         }
         let metrics = ClusterMetrics::new(dp);
+        let used_cache: Vec<usize> = ranks.iter().map(|r| r.cache.used_pages()).collect();
+        let used_total = used_cache.iter().sum();
         ClusterServer {
             router: Router::disaggregated(ranks, prefill_ranks),
             metrics,
@@ -110,6 +124,8 @@ impl ClusterServer {
             vclock: vec![0.0; dp],
             elastic: false,
             evac_ids: HashSet::new(),
+            used_cache,
+            used_total,
         }
     }
 
@@ -189,6 +205,29 @@ impl ClusterServer {
         self.membership_log.push((self.virtual_time(), kind, ri, active));
     }
 
+    /// A wake-up heap entry is live iff its rank still holds work and the
+    /// entry time is the rank's current clock (bitwise — pushes use the
+    /// exact `vclock` value, so equality is the identity test).
+    fn entry_live(&self, t: f64, i: usize) -> bool {
+        #[allow(clippy::float_cmp)]
+        {
+            self.router.ranks[i].pending() > 0 && t == self.vclock[i]
+        }
+    }
+
+    /// Re-read rank `i`'s page allocation into the incremental total. A
+    /// dead rank contributes 0 — the same exclusion the fleet-wide sweep
+    /// applied — regardless of what its cache still holds.
+    fn resample_pages(&mut self, i: usize) {
+        let now = if self.router.health(i) == RankHealth::Dead {
+            0
+        } else {
+            self.router.ranks[i].cache.used_pages()
+        };
+        self.used_total = self.used_total + now - self.used_cache[i];
+        self.used_cache[i] = now;
+    }
+
     /// Kill rank `ri` at the current virtual time. Its fresh queue
     /// re-routes through the cluster; with `recover` its live KV exports
     /// to the wire format and re-migrates to survivors (delivered by the
@@ -209,6 +248,7 @@ impl ClusterServer {
             self.pending()
         );
         let ev = self.router.ranks[ri].evacuate(recover)?;
+        self.resample_pages(ri);
         self.metrics.dropped += ev.dropped as u64;
         for (seq, wire) in ev.migrate {
             self.metrics.evacuated += 1;
@@ -248,8 +288,11 @@ impl ClusterServer {
     /// enters the routing set immediately and returns its index. Callers
     /// of `run_until` must grow their step-cost slice to the new `dp()`.
     pub fn join_rank(&mut self, rank: Server) -> usize {
+        let used = rank.cache.used_pages();
         let ri = self.router.push_rank(rank);
         self.metrics.routed.push(0);
+        self.used_cache.push(used);
+        self.used_total += used;
         self.vclock.push(self.virtual_time());
         self.elastic = true;
         self.metrics.joins += 1;
@@ -266,6 +309,10 @@ impl ClusterServer {
     /// reproduces this exactly under uniform step costs.)
     pub fn step_all(&mut self) -> anyhow::Result<bool> {
         let mut any = self.router.step_all()?;
+        // a lock-step round steps every rank, so every allocation moved
+        for i in 0..self.dp() {
+            self.resample_pages(i);
+        }
         any |= self.migrate_and_sample()?;
         Ok(any)
     }
@@ -289,14 +336,22 @@ impl ClusterServer {
                     && self.router.ranks[i].pending() == 0
                 {
                     self.router.set_health(i, RankHealth::Dead);
+                    self.resample_pages(i);
                 }
             }
         }
-        let used: usize = (0..self.dp())
-            .filter(|&i| self.router.health(i) != RankHealth::Dead)
-            .map(|i| self.router.ranks[i].cache.used_pages())
-            .sum();
-        self.metrics.observe_pages(used);
+        #[cfg(debug_assertions)]
+        {
+            let sweep: usize = (0..self.dp())
+                .filter(|&i| self.router.health(i) != RankHealth::Dead)
+                .map(|i| self.router.ranks[i].cache.used_pages())
+                .sum();
+            debug_assert_eq!(
+                self.used_total, sweep,
+                "incremental page accounting drifted from the fleet sweep"
+            );
+        }
+        self.metrics.observe_pages(self.used_total);
         Ok(any)
     }
 
@@ -347,6 +402,7 @@ impl ClusterServer {
                 Some(j) => {
                     let id = seq.id();
                     self.router.ranks[targets[j]].accept_handoff(seq, wire)?;
+                    self.resample_pages(targets[j]);
                     if self.evac_ids.remove(&id) {
                         self.metrics.recovered += 1;
                     }
@@ -387,16 +443,36 @@ impl ClusterServer {
         );
         // ranks polled without progress since the cluster last progressed
         let mut stalled = vec![false; dp];
-        while self.pending() > 0 {
-            let mut ev: EventLoop<()> = EventLoop::new();
-            for i in 0..dp {
-                if self.router.ranks[i].pending() > 0 {
-                    ev.push(self.vclock[i], i, ());
-                }
+        // persistent wake-up heap: every rank holding work owns one live
+        // entry at its current clock; entries orphaned by a clock bump or
+        // a drained queue are discarded lazily at the head (previously
+        // this heap was rebuilt from scratch every batch — O(dp) pushes
+        // per pop even when one rank was due)
+        let mut ready: EventLoop<()> = EventLoop::new();
+        for i in 0..dp {
+            if self.router.ranks[i].pending() > 0 {
+                ready.push(self.vclock[i], i, ());
             }
-            if ev.is_empty() {
+        }
+        while self.pending() > 0 {
+            loop {
+                let (t, i) = match ready.peek() {
+                    Some(e) => (e.time, e.rank),
+                    None => break,
+                };
+                if self.entry_live(t, i) {
+                    break;
+                }
+                ready.pop();
+            }
+            if ready.is_empty() {
                 // work exists only as in-flight transfers; deliver or stop
                 if self.migrate_and_sample()? {
+                    for i in 0..dp {
+                        if self.router.ranks[i].pending() > 0 {
+                            ready.push(self.vclock[i], i, ());
+                        }
+                    }
                     continue;
                 }
                 anyhow::bail!(
@@ -405,7 +481,7 @@ impl ClusterServer {
                     self.in_flight.len()
                 );
             }
-            let batch = ev.pop_batch();
+            let batch = ready.pop_batch();
             let t = batch[0].time;
             if t > until {
                 return Ok(false);
@@ -413,14 +489,22 @@ impl ClusterServer {
             let was_idle: Vec<bool> =
                 (0..dp).map(|i| self.router.ranks[i].pending() == 0).collect();
             let mut progressed = false;
+            // the batch can carry entries orphaned at the same instant (or
+            // duplicates of one rank); act once per rank, live entries only
+            let mut seen = vec![false; dp];
             for e in &batch {
                 let i = e.rank;
+                if seen[i] || !self.entry_live(e.time, i) {
+                    continue;
+                }
+                seen[i] = true;
                 if self.router.ranks[i].step()? {
                     progressed = true;
                 } else {
                     stalled[i] = true;
                 }
                 self.vclock[i] = t + step_costs[i];
+                self.resample_pages(i);
             }
             progressed |= self.migrate_and_sample()?;
             // a rank woken by this batch's deliveries steps NEXT batch —
@@ -428,6 +512,15 @@ impl ClusterServer {
             for i in 0..dp {
                 if was_idle[i] && self.router.ranks[i].pending() > 0 {
                     self.vclock[i] = self.vclock[i].max(t + step_costs[i]);
+                }
+            }
+            // restore the heap invariant for every rank this batch touched:
+            // stepped ranks re-arm at their advanced clock, freshly woken
+            // ranks arm at their (possibly bumped) clock; untouched busy
+            // ranks still own their live entry
+            for i in 0..dp {
+                if self.router.ranks[i].pending() > 0 && (seen[i] || was_idle[i]) {
+                    ready.push(self.vclock[i], i, ());
                 }
             }
             if progressed {

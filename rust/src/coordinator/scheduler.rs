@@ -112,6 +112,17 @@ impl Scheduler {
         tokens.div_ceil(self.cfg.page_tokens)
     }
 
+    /// How deep into a FCFS waiting queue `decide` can possibly look: a
+    /// `max_prefill_batch`-sized admission prefix plus one break-check
+    /// entry (admission is prefix-only under both policies, and every
+    /// non-breaking iteration fills one of at most `max_prefill_batch`
+    /// candidate slots). Callers holding very long queues — the simulate
+    /// harness — pass `waiting[..len.min(bound)]` and get a
+    /// decision-identical view without materializing thousands of entries.
+    pub fn waiting_view_bound(&self) -> usize {
+        self.cfg.max_prefill_batch.max(1) + 1
+    }
+
     /// Decide the next action.
     pub fn decide(
         &self,

@@ -298,6 +298,28 @@ pub(super) struct Harness<'a> {
     itl: Vec<f64>,
     /// lock-step: tokens produced this round, stamped at the barrier
     pending_emits: Vec<usize>,
+    // --- indexed bookkeeping (mirrored by serve_port_common.py): per-rank
+    // token loads and the fleet page count are maintained incrementally at
+    // every queue/page mutation instead of re-summed per event, and `ready`
+    // is a lazy min-heap over busy ranks keyed by next-actionable time.
+    // `scen.naive` keeps the pre-optimization read paths; the counters are
+    // maintained in BOTH arms (only the reads differ), and `prop_simperf`
+    // pins the arms byte-identical. ---
+    naive: bool,
+    /// per rank: Σ over waiting of (prompt + out)
+    wait_po: Vec<usize>,
+    /// per rank: Σ over waiting of (out - generated)
+    wait_rem: Vec<usize>,
+    /// per rank: Σ over running of (out - generated)
+    run_rem: Vec<usize>,
+    /// fleet-wide Σ of (capacity - free) across all ranks
+    used_pages_total: usize,
+    /// ranks with any queued or running work, plus an O(1) population count
+    busy: Vec<bool>,
+    busy_count: usize,
+    /// lazy min-heap of (t, rank) over busy ranks — an entry is stale
+    /// unless the rank is busy and its clock still matches the entry time
+    ready: EventLoop<()>,
     // --- elastic membership state (inert without scen.elastic) ---
     /// failure injections sorted by (time, rank)
     fail_sched: Vec<(f64, usize)>,
@@ -411,6 +433,14 @@ impl<'a> Harness<'a> {
             stats: SimStats { routed: vec![0; n], ..SimStats::default() },
             itl: Vec::new(),
             pending_emits: Vec::new(),
+            naive: scen.naive,
+            wait_po: vec![0; n],
+            wait_rem: vec![0; n],
+            run_rem: vec![0; n],
+            used_pages_total: 0,
+            busy: vec![false; n],
+            busy_count: 0,
+            ready: EventLoop::new(),
             fail_sched,
             next_fail: 0,
             pending_joins: Vec::new(),
@@ -483,19 +513,24 @@ impl<'a> Harness<'a> {
             if r.state != RankState::Active {
                 continue;
             }
-            let queued: usize = r
-                .waiting
-                .iter()
-                .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
-                .sum();
-            let remaining: usize = r
-                .running
-                .iter()
-                .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                .sum();
+            let tokens = if self.naive {
+                let queued: usize = r
+                    .waiting
+                    .iter()
+                    .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
+                    .sum();
+                let remaining: usize = r
+                    .running
+                    .iter()
+                    .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                    .sum();
+                queued + remaining
+            } else {
+                self.wait_po[ri] + self.run_rem[ri]
+            };
             idxs.push(ri);
             loads.push(RankLoad {
-                tokens: queued + remaining,
+                tokens,
                 free_pages: r.free,
                 pages_needed: needed,
                 prefix_hit_tokens: self.hit_pages(ri, sid) * self.page,
@@ -515,18 +550,23 @@ impl<'a> Harness<'a> {
                 let loads: Vec<RankLoad> = (0..self.scen.prefill_ranks)
                     .map(|ri| {
                         let r = &self.ranks[ri];
-                        let queued: usize = r
-                            .waiting
-                            .iter()
-                            .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
-                            .sum();
-                        let remaining: usize = r
-                            .running
-                            .iter()
-                            .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                            .sum();
+                        let tokens = if self.naive {
+                            let queued: usize = r
+                                .waiting
+                                .iter()
+                                .map(|&w| self.seqs[w].prompt + self.seqs[w].out)
+                                .sum();
+                            let remaining: usize = r
+                                .running
+                                .iter()
+                                .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                                .sum();
+                            queued + remaining
+                        } else {
+                            self.wait_po[ri] + self.run_rem[ri]
+                        };
                         RankLoad {
-                            tokens: queued + remaining,
+                            tokens,
                             free_pages: r.free,
                             pages_needed: needed,
                             prefix_hit_tokens: 0,
@@ -547,7 +587,7 @@ impl<'a> Harness<'a> {
                 }
                 idxs[pick_rank_affinity(&loads, self.page)]
             }
-            SimRoute::ShortestQueue => {
+            SimRoute::ShortestQueue if self.naive => {
                 let (idxs, loads) = self.colocated_loads(sid);
                 if idxs.is_empty() {
                     anyhow::bail!(
@@ -558,9 +598,47 @@ impl<'a> Harness<'a> {
                 }
                 idxs[pick_rank(&loads)]
             }
+            SimRoute::ShortestQueue => {
+                // inline pick_rank over the incremental load counters:
+                // capacity-aware shortest queue needs only (tokens, free)
+                // per rank, so the per-arrival load-list construction is
+                // pure overhead here. Ascending scan + strict < keeps
+                // pick_rank's (tokens, idx) tie-break exactly.
+                let s = &self.seqs[sid];
+                let needed = pages_for(s.prompt + s.out, self.page);
+                let mut best_fit: Option<usize> = None;
+                let mut best_any: Option<usize> = None;
+                let mut rank = usize::MAX;
+                for (ri, r) in self.ranks.iter().enumerate() {
+                    if r.state != RankState::Active {
+                        continue;
+                    }
+                    let tokens = self.wait_po[ri] + self.run_rem[ri];
+                    if r.free >= needed {
+                        if best_fit.map_or(true, |b| tokens < b) {
+                            best_fit = Some(tokens);
+                            rank = ri;
+                        }
+                    } else if best_fit.is_none() && best_any.map_or(true, |b| tokens < b) {
+                        best_any = Some(tokens);
+                        rank = ri;
+                    }
+                }
+                if rank == usize::MAX {
+                    anyhow::bail!(
+                        "no active ranks to route request {sid} ({} total, {} joining)",
+                        self.ranks.len(),
+                        self.pending_joins.len()
+                    );
+                }
+                rank
+            }
         };
         self.stats.routed[rank] += 1;
         self.ranks[rank].waiting.push(sid);
+        self.wait_po[rank] += self.seqs[sid].prompt + self.seqs[sid].out;
+        self.wait_rem[rank] += self.seqs[sid].out - self.seqs[sid].generated;
+        self.touch(rank);
         Ok(())
     }
 
@@ -600,12 +678,15 @@ impl<'a> Harness<'a> {
                 .iter()
                 .map(|&ri| {
                     let r = &self.ranks[ri];
-                    let tokens: usize = r
-                        .running
-                        .iter()
-                        .chain(r.waiting.iter())
-                        .map(|&x| self.seqs[x].out - self.seqs[x].generated)
-                        .sum();
+                    let tokens: usize = if self.naive {
+                        r.running
+                            .iter()
+                            .chain(r.waiting.iter())
+                            .map(|&x| self.seqs[x].out - self.seqs[x].generated)
+                            .sum()
+                    } else {
+                        self.run_rem[ri] + self.wait_rem[ri]
+                    };
                     let open_slot = r.running.len() < self.scen.sched.max_running;
                     RankLoad {
                         tokens,
@@ -622,10 +703,15 @@ impl<'a> Harness<'a> {
                 .collect();
             match pick_handoff_rank(&loads) {
                 Some(j) => {
+                    let tj = targets[j];
                     let cached = self.seqs[sid].cached;
-                    let r = &mut self.ranks[targets[j]];
-                    r.free -= pages_for(cached, self.page);
+                    let pg = pages_for(cached, self.page);
+                    let r = &mut self.ranks[tj];
+                    r.free -= pg;
                     r.running.push(sid);
+                    self.used_pages_total += pg;
+                    self.run_rem[tj] += self.seqs[sid].out - self.seqs[sid].generated;
+                    self.touch(tj);
                     self.stats.handoffs += 1;
                     let s = &mut self.seqs[sid];
                     if s.evac {
@@ -695,7 +781,15 @@ impl<'a> Harness<'a> {
         let waiting = std::mem::take(&mut self.ranks[ri].waiting);
         let running = std::mem::take(&mut self.ranks[ri].running);
         self.ranks[ri].shared.iter_mut().for_each(|g| *g = 0);
+        self.used_pages_total -= self.scen.capacity_pages - self.ranks[ri].free;
         self.ranks[ri].free = self.scen.capacity_pages;
+        self.wait_po[ri] = 0;
+        self.wait_rem[ri] = 0;
+        self.run_rem[ri] = 0;
+        if self.busy[ri] {
+            self.busy[ri] = false;
+            self.busy_count -= 1;
+        }
         for sid in waiting.into_iter().chain(running) {
             self.evacuate(sid, clock)?;
         }
@@ -715,6 +809,10 @@ impl<'a> Harness<'a> {
             state: RankState::Active,
         });
         self.speeds.push(1.0);
+        self.wait_po.push(0);
+        self.wait_rem.push(0);
+        self.run_rem.push(0);
+        self.busy.push(false);
         self.stats.routed.push(0);
         self.stats.joins += 1;
         self.note_membership(MembershipEvent::RankJoin, self.ranks.len() - 1, clock);
@@ -784,8 +882,18 @@ impl<'a> Harness<'a> {
 
     fn decide(&self, ri: usize) -> Action {
         let r = &self.ranks[ri];
-        let wview: Vec<WaitingSeq> = r
-            .waiting
+        let sched = if ri < self.scen.prefill_ranks { &self.prefill_sched } else { &self.sched };
+        let wsrc: &[usize] = if self.naive {
+            &r.waiting
+        } else {
+            // both policies inspect at most a max_prefill_batch-sized FCFS
+            // prefix of the queue plus one break-check entry (admission is
+            // prefix-only and every non-breaking iteration fills one of at
+            // most max_prefill_batch candidate slots), so a capped view is
+            // decision-identical while the queue itself can hold thousands
+            &r.waiting[..r.waiting.len().min(sched.waiting_view_bound())]
+        };
+        let wview: Vec<WaitingSeq> = wsrc
             .iter()
             .enumerate()
             .map(|(i, &sid)| WaitingSeq {
@@ -808,7 +916,6 @@ impl<'a> Harness<'a> {
                 pending_prefill: self.seqs[sid].prompt - self.seqs[sid].prefilled,
             })
             .collect();
-        let sched = if ri < self.scen.prefill_ranks { &self.prefill_sched } else { &self.sched };
         sched.decide(&wview, &rview, r.free)
     }
 
@@ -824,13 +931,19 @@ impl<'a> Harness<'a> {
             Action::Prefill(idxs) => {
                 let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].waiting[i]).collect();
                 self.ranks[ri].waiting.drain(..ids.len());
+                for &sid in &ids {
+                    self.wait_po[ri] -= self.seqs[sid].prompt + self.seqs[sid].out;
+                    self.wait_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
+                }
                 let total: usize = ids.iter().map(|&sid| self.seqs[sid].prompt).sum();
                 cost = self.scen.cost.prefill(total) * self.speeds[ri];
                 self.stats.prefill_tokens += total as u64;
                 let t_emit = t_start.map(|t| t + cost);
                 for sid in ids {
                     let prompt = self.seqs[sid].prompt;
-                    self.ranks[ri].free -= pages_for(prompt, self.page);
+                    let pg = pages_for(prompt, self.page);
+                    self.ranks[ri].free -= pg;
+                    self.used_pages_total += pg;
                     let s = &mut self.seqs[sid];
                     s.cached = prompt;
                     s.prefilled = prompt;
@@ -841,8 +954,10 @@ impl<'a> Harness<'a> {
                     if self.seqs[sid].generated >= self.seqs[sid].out {
                         let freed = self.private_pages(sid);
                         self.ranks[ri].free += freed;
+                        self.used_pages_total -= freed;
                     } else {
                         self.ranks[ri].running.push(sid);
+                        self.run_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
                     }
                 }
             }
@@ -852,8 +967,10 @@ impl<'a> Harness<'a> {
                 // overlapped with the rank's next step
                 let t_start = t_start.expect("handoffs only exist under event timing");
                 let sid = self.ranks[ri].running.remove(idx);
+                self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                 let freed = self.private_pages(sid);
                 self.ranks[ri].free += freed;
+                self.used_pages_total -= freed;
                 let s = &mut self.seqs[sid];
                 s.adopted = 0;
                 s.transferred = 0;
@@ -885,18 +1002,22 @@ impl<'a> Harness<'a> {
                     let s = &mut self.seqs[sid];
                     if s.cached % self.page == 0 {
                         self.ranks[ri].free -= 1;
+                        self.used_pages_total += 1;
                     }
                     let s = &mut self.seqs[sid];
                     s.cached += 1;
                     s.generated += 1;
+                    self.run_rem[ri] -= 1;
                     self.emit(sid, t_emit);
                     if self.seqs[sid].generated >= self.seqs[sid].out {
                         done.push(sid);
                     }
                 }
                 for sid in done {
+                    self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                     let freed = self.private_pages(sid);
                     self.ranks[ri].free += freed;
+                    self.used_pages_total -= freed;
                     self.ranks[ri].running.retain(|&x| x != sid);
                 }
             }
@@ -905,6 +1026,12 @@ impl<'a> Harness<'a> {
                 // order is service order (SRPT), idx is the waiting position
                 let n_admit = prefill_chunks.iter().filter(|c| c.from_waiting).count();
                 let admitted: Vec<usize> = self.ranks[ri].waiting.drain(..n_admit).collect();
+                // admitted sequences move waiting -> running in this action
+                for &sid in &admitted {
+                    self.wait_po[ri] -= self.seqs[sid].prompt + self.seqs[sid].out;
+                    self.wait_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
+                    self.run_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
+                }
                 // admission adopts the rank's published prefix pages
                 // (shared, no allocation) — mirrors PagedKvCache::adopt_prefix
                 for &sid in &admitted {
@@ -957,6 +1084,7 @@ impl<'a> Harness<'a> {
                     let need =
                         pages_for(s.cached + take, self.page) - pages_for(s.cached, self.page);
                     self.ranks[ri].free -= need;
+                    self.used_pages_total += need;
                     let s = &mut self.seqs[sid];
                     s.cached += take;
                     s.prefilled += take;
@@ -966,6 +1094,7 @@ impl<'a> Harness<'a> {
                     let s = &mut self.seqs[sid];
                     if s.prefilled == s.prompt {
                         s.generated = 1;
+                        self.run_rem[ri] -= 1;
                         self.stamp_first(sid, t_emit);
                         self.emit(sid, t_emit);
                         if self.seqs[sid].generated >= self.seqs[sid].out {
@@ -977,39 +1106,50 @@ impl<'a> Harness<'a> {
                     let s = &mut self.seqs[sid];
                     if s.cached % self.page == 0 {
                         self.ranks[ri].free -= 1;
+                        self.used_pages_total += 1;
                     }
                     let s = &mut self.seqs[sid];
                     s.cached += 1;
                     s.generated += 1;
+                    self.run_rem[ri] -= 1;
                     self.emit(sid, t_emit);
                     if self.seqs[sid].generated >= self.seqs[sid].out {
                         done.push(sid);
                     }
                 }
                 for sid in done {
+                    self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                     let freed = self.private_pages(sid);
                     self.ranks[ri].free += freed;
+                    self.used_pages_total -= freed;
                     self.ranks[ri].running.retain(|&x| x != sid);
                 }
             }
             Action::Resume(_) => {
                 let sid = self.ranks[ri].waiting.remove(0);
+                self.wait_po[ri] -= self.seqs[sid].prompt + self.seqs[sid].out;
+                self.wait_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                 let cached = self.seqs[sid].cached;
                 cost = self.scen.cost.spill(cached) * self.speeds[ri];
-                self.ranks[ri].free -= pages_for(cached, self.page);
+                let pg = pages_for(cached, self.page);
+                self.ranks[ri].free -= pg;
+                self.used_pages_total += pg;
                 let s = &mut self.seqs[sid];
                 s.spilled = false;
                 s.adopted = 0;
                 s.transferred = 0;
                 self.stats.restores += 1;
                 self.ranks[ri].running.push(sid);
+                self.run_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
             }
             Action::Preempt(idx) => {
                 let sid = self.ranks[ri].running.remove(idx);
+                self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                 let cached = self.seqs[sid].cached;
                 cost = self.scen.cost.spill(cached) * self.speeds[ri];
                 let freed = self.private_pages(sid);
                 self.ranks[ri].free += freed;
+                self.used_pages_total -= freed;
                 // the spill snapshot privatizes adopted pages (exactness
                 // over dedup): the restore reallocates every page
                 let s = &mut self.seqs[sid];
@@ -1018,8 +1158,11 @@ impl<'a> Harness<'a> {
                 s.spilled = true;
                 self.stats.spills += 1;
                 self.ranks[ri].waiting.insert(0, sid);
+                self.wait_po[ri] += self.seqs[sid].prompt + self.seqs[sid].out;
+                self.wait_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
             }
         }
+        self.untouch(ri);
         Ok(cost)
     }
 
@@ -1082,8 +1225,43 @@ impl<'a> Harness<'a> {
         (0..self.ranks.len()).any(|ri| self.rank_busy(ri))
     }
 
+    /// A rank that just gained its first work item becomes schedulable:
+    /// enter the busy set and the ready-heap at its current local time.
+    /// An already-busy rank already owns a live heap entry (pushed here or
+    /// re-pushed by the event sweep after its last action).
+    fn touch(&mut self, ri: usize) {
+        if !self.busy[ri] && self.rank_busy(ri) {
+            self.busy[ri] = true;
+            self.busy_count += 1;
+            self.ready.push(self.ranks[ri].t, ri, ());
+        }
+    }
+
+    /// Dropping the last work item retires the rank from the busy set; its
+    /// heap entries go stale and are discarded lazily.
+    fn untouch(&mut self, ri: usize) {
+        if self.busy[ri] && !self.rank_busy(ri) {
+            self.busy[ri] = false;
+            self.busy_count -= 1;
+        }
+    }
+
+    /// A ready-heap entry is live iff its rank still has work and the
+    /// entry's time is the rank's current clock (bitwise, like the heap's
+    /// own `total_cmp` ordering over the finite times `push` asserts).
+    fn heap_entry_live(&self, t: f64, ri: usize) -> bool {
+        #[allow(clippy::float_cmp)]
+        {
+            self.rank_busy(ri) && t == self.ranks[ri].t
+        }
+    }
+
     fn sample_pages(&mut self) {
-        let used: usize = self.ranks.iter().map(|r| self.scen.capacity_pages - r.free).sum();
+        let used: usize = if self.naive {
+            self.ranks.iter().map(|r| self.scen.capacity_pages - r.free).sum()
+        } else {
+            self.used_pages_total
+        };
         self.stats.peak_pages = self.stats.peak_pages.max(used);
     }
 
@@ -1097,7 +1275,9 @@ impl<'a> Harness<'a> {
         let mut clock = 0.0f64;
         let mut next_arrival = 0usize;
         let mut rounds = 0usize;
-        while next_arrival < trace.len() || self.any_busy() {
+        while next_arrival < trace.len()
+            || (if self.naive { self.any_busy() } else { self.busy_count > 0 })
+        {
             rounds += 1;
             anyhow::ensure!(rounds <= 500_000, "sim runaway");
             while next_arrival < trace.len() && trace[next_arrival].arrival_s <= clock {
@@ -1107,11 +1287,23 @@ impl<'a> Harness<'a> {
 
             // one lock-step round: every rank takes one scheduler action off
             // the pre-round state; the round costs the slowest rank's step
-            let decisions: Vec<(usize, Action)> = (0..self.ranks.len())
-                .filter(|&ri| self.rank_busy(ri))
-                .map(|ri| (ri, self.decide(ri)))
-                .filter(|(_, a)| *a != Action::Idle)
-                .collect();
+            // (the indexed path sweeps only the busy set, in rank order —
+            // exactly the set the naive full scan acts on)
+            let order: Vec<usize> = if self.naive {
+                (0..self.ranks.len()).collect()
+            } else {
+                (0..self.ranks.len()).filter(|&ri| self.busy[ri]).collect()
+            };
+            let mut decisions: Vec<(usize, Action)> = Vec::new();
+            for ri in order {
+                if !self.rank_busy(ri) {
+                    continue;
+                }
+                let action = self.decide(ri);
+                if action != Action::Idle {
+                    decisions.push((ri, action));
+                }
+            }
             if decisions.is_empty() {
                 if next_arrival < trace.len() {
                     clock = clock.max(trace[next_arrival].arrival_s);
@@ -1128,16 +1320,29 @@ impl<'a> Harness<'a> {
             clock += round_cost;
             // tokens produced this round are stamped at the round boundary
             let emitted = std::mem::take(&mut self.pending_emits);
-            for sid in emitted {
+            for &sid in &emitted {
                 let s = &mut self.seqs[sid];
                 if let Some(last) = s.last_token {
                     self.itl.push(clock - last);
                 }
                 s.last_token = Some(clock);
             }
-            for s in self.seqs.iter_mut() {
-                if s.first_token.is_none() && s.generated > 0 {
-                    s.first_token = Some(clock);
+            if self.naive {
+                for s in self.seqs.iter_mut() {
+                    if s.first_token.is_none() && s.generated > 0 {
+                        s.first_token = Some(clock);
+                    }
+                }
+            } else {
+                // a sequence's first token is born the round `generated`
+                // goes 0 -> 1, and that transition always emits — so every
+                // unstamped first token is in this round's pending_emits
+                // (no O(seqs) sweep per round)
+                for &sid in &emitted {
+                    let s = &mut self.seqs[sid];
+                    if s.first_token.is_none() {
+                        s.first_token = Some(clock);
+                    }
                 }
             }
             self.stats.rounds += 1;
@@ -1160,54 +1365,111 @@ impl<'a> Harness<'a> {
             .as_ref()
             .and_then(|e| e.autoscale.as_ref())
             .map(|a| a.eval_interval_s);
-        while next_arrival < trace.len() || !self.in_flight.is_empty() || self.any_busy() {
+        while next_arrival < trace.len()
+            || !self.in_flight.is_empty()
+            || (if self.naive { self.any_busy() } else { self.busy_count > 0 })
+        {
             iters += 1;
             anyhow::ensure!(iters <= 2_000_000, "sim runaway");
-            // the next instant anything can happen, popped off the event
-            // loop in its documented (time, rank, seq) order: a busy rank's
-            // local clock, the next arrival, an in-flight transfer's
-            // ready-time, or (elastic) a scheduled failure / a provisioning
-            // rank coming up / the autoscaler's next evaluation
-            let mut cands: EventLoop<()> = EventLoop::new();
-            let n = self.ranks.len();
-            for ri in 0..n {
-                if self.rank_busy(ri) {
-                    cands.push(self.ranks[ri].t, ri, ());
+            // the next instant anything can happen: a busy rank's local
+            // clock, the next arrival, an in-flight transfer's ready-time,
+            // or (elastic) a scheduled failure / a provisioning rank coming
+            // up / the autoscaler's next evaluation
+            //
+            // the no-progress jump below must use THIS iteration's candidate
+            // set: an autoscale decision made mid-iteration publishes its
+            // join (and advances next_eval) for the NEXT iteration
+            let eval_at_start = self.next_eval;
+            let joins_at_start = self.pending_joins.len();
+            let mut naive_later = f64::INFINITY;
+            let new_clock = if self.naive {
+                // reference arm: rebuild the full candidate event loop every
+                // iteration and drain it (computing the eager `later` jump)
+                let mut cands: EventLoop<()> = EventLoop::new();
+                let n = self.ranks.len();
+                for ri in 0..n {
+                    if self.rank_busy(ri) {
+                        cands.push(self.ranks[ri].t, ri, ());
+                    }
                 }
-            }
-            if next_arrival < trace.len() {
-                cands.push(trace[next_arrival].arrival_s, n, ());
-            }
-            for &(_, ready) in &self.in_flight {
-                cands.push(ready, n + 1, ());
-            }
-            if elastic {
-                if self.next_fail < self.fail_sched.len() {
-                    cands.push(self.fail_sched[self.next_fail].0, n + 2, ());
+                if next_arrival < trace.len() {
+                    cands.push(trace[next_arrival].arrival_s, n, ());
                 }
-                for &jt in &self.pending_joins {
-                    cands.push(jt, n + 3, ());
+                for &(_, ready) in &self.in_flight {
+                    cands.push(ready, n + 1, ());
                 }
-                if eval_interval.is_some() {
-                    cands.push(self.next_eval, n + 4, ());
+                if elastic {
+                    if self.next_fail < self.fail_sched.len() {
+                        cands.push(self.fail_sched[self.next_fail].0, n + 2, ());
+                    }
+                    for &jt in &self.pending_joins {
+                        cands.push(jt, n + 3, ());
+                    }
+                    if eval_interval.is_some() {
+                        cands.push(self.next_eval, n + 4, ());
+                    }
                 }
-            }
-            let mut later = f64::INFINITY;
-            {
                 let Some(min_cand) = cands.peek_time() else {
                     anyhow::bail!("{}", self.wedge_report(trace.len() - next_arrival));
                 };
-                let new_clock = clock.max(min_cand);
-                if elastic && new_clock > clock {
-                    self.advance_active_integral(new_clock);
-                }
-                clock = new_clock;
+                let nc = clock.max(min_cand);
                 while let Some(e) = cands.pop() {
-                    if e.time > clock {
-                        later = later.min(e.time);
+                    if e.time > nc {
+                        naive_later = naive_later.min(e.time);
                     }
                 }
+                nc
+            } else {
+                // indexed candidate minimum: the ready-heap head is the
+                // earliest busy rank (stale entries discarded lazily); the
+                // other sources are O(pending) scalar folds
+                loop {
+                    let (t, ri) = match self.ready.peek() {
+                        Some(e) => (e.time, e.rank),
+                        None => break,
+                    };
+                    if self.heap_entry_live(t, ri) {
+                        break;
+                    }
+                    self.ready.pop();
+                }
+                let mut min_c: Option<f64> = self.ready.peek_time();
+                if next_arrival < trace.len() {
+                    let at = trace[next_arrival].arrival_s;
+                    if min_c.map_or(true, |m| at < m) {
+                        min_c = Some(at);
+                    }
+                }
+                for &(_, ready_at) in &self.in_flight {
+                    if min_c.map_or(true, |m| ready_at < m) {
+                        min_c = Some(ready_at);
+                    }
+                }
+                if elastic {
+                    if self.next_fail < self.fail_sched.len() {
+                        let ft = self.fail_sched[self.next_fail].0;
+                        if min_c.map_or(true, |m| ft < m) {
+                            min_c = Some(ft);
+                        }
+                    }
+                    for &jt in &self.pending_joins {
+                        if min_c.map_or(true, |m| jt < m) {
+                            min_c = Some(jt);
+                        }
+                    }
+                    if eval_interval.is_some() && min_c.map_or(true, |m| self.next_eval < m) {
+                        min_c = Some(self.next_eval);
+                    }
+                }
+                let Some(min_c) = min_c else {
+                    anyhow::bail!("{}", self.wedge_report(trace.len() - next_arrival));
+                };
+                clock.max(min_c)
+            };
+            if elastic && new_clock > clock {
+                self.advance_active_integral(new_clock);
             }
+            clock = new_clock;
 
             let mut progressed = false;
             if elastic {
@@ -1245,52 +1507,148 @@ impl<'a> Harness<'a> {
                 }
             }
 
-            for ri in 0..self.ranks.len() {
-                if self.ranks[ri].t > clock {
-                    continue;
-                }
-                // handoffs cost the rank nothing (serialize + async send):
-                // a prefill rank drains every completed prefill and still
-                // takes its real action at the same instant
-                let action = loop {
-                    if !self.rank_busy(ri) {
-                        break Action::Idle;
+            let due: Vec<usize> = if self.naive {
+                (0..self.ranks.len()).collect()
+            } else {
+                // batched pop: drain every live heap entry at or before the
+                // new clock in one sweep (clock::EventLoop::pop_batch's
+                // shape), then act in rank order — the same order the naive
+                // rank scan visits, and cross-rank effects within an instant
+                // only ride `in_flight`, so order beyond rank id can't matter
+                let mut due = Vec::new();
+                let mut seen = vec![false; self.ranks.len()];
+                loop {
+                    let (t, ri) = match self.ready.peek() {
+                        Some(e) => (e.time, e.rank),
+                        None => break,
+                    };
+                    if !self.heap_entry_live(t, ri) {
+                        self.ready.pop();
+                        continue;
                     }
-                    let action = self.decide(ri);
-                    if !matches!(action, Action::Handoff(_)) {
-                        break action;
+                    if t > clock {
+                        break;
                     }
-                    let t = self.ranks[ri].t;
-                    self.apply(ri, action, Some(t))?;
-                    progressed = true;
-                };
-                if action == Action::Idle {
-                    continue;
+                    self.ready.pop();
+                    if !seen[ri] {
+                        seen[ri] = true;
+                        due.push(ri);
+                    }
                 }
-                let t = self.ranks[ri].t;
-                let cost = self.apply(ri, action, Some(t))?;
-                self.ranks[ri].t += cost;
-                self.stats.steps += 1;
-                progressed = true;
+                due.sort_unstable();
+                due
+            };
+            for ri in due {
+                if self.ranks[ri].t <= clock {
+                    // handoffs cost the rank nothing (serialize + async
+                    // send): a prefill rank drains every completed prefill
+                    // and still takes its real action at the same instant
+                    let action = loop {
+                        if !self.rank_busy(ri) {
+                            break Action::Idle;
+                        }
+                        let action = self.decide(ri);
+                        if !matches!(action, Action::Handoff(_)) {
+                            break action;
+                        }
+                        let t = self.ranks[ri].t;
+                        self.apply(ri, action, Some(t))?;
+                        progressed = true;
+                    };
+                    if action != Action::Idle {
+                        let t = self.ranks[ri].t;
+                        let cost = self.apply(ri, action, Some(t))?;
+                        self.ranks[ri].t += cost;
+                        self.stats.steps += 1;
+                        progressed = true;
+                    }
+                }
+                if !self.naive && self.rank_busy(ri) {
+                    // restore the heap invariant: every busy rank owns one
+                    // live entry (at its advanced time, or unchanged if the
+                    // scheduler had nothing feasible this instant)
+                    self.ready.push(self.ranks[ri].t, ri, ());
+                }
             }
 
             if elastic {
                 // a draining rank that has emptied its queue retires: its
                 // published prefixes and page pool are released
                 let capacity = self.scen.capacity_pages;
-                for r in self.ranks.iter_mut() {
-                    if r.state == RankState::Draining
-                        && r.waiting.is_empty()
-                        && r.running.is_empty()
+                for ri in 0..self.ranks.len() {
+                    if self.ranks[ri].state == RankState::Draining
+                        && self.ranks[ri].waiting.is_empty()
+                        && self.ranks[ri].running.is_empty()
                     {
+                        let r = &mut self.ranks[ri];
                         r.state = RankState::Dead;
                         r.shared.iter_mut().for_each(|g| *g = 0);
+                        self.used_pages_total -= capacity - r.free;
                         r.free = capacity;
                     }
                 }
             }
 
             if !progressed {
+                let later = if self.naive {
+                    naive_later
+                } else {
+                    // lazy `later`: pop live at-or-before-clock entries into
+                    // a stash until the first strictly-later live entry
+                    // surfaces, re-push everything, then fold the scalar
+                    // sources. `pending_joins[..joins_at_start]` is safe: a
+                    // join firing implies progressed, so the list can only
+                    // have grown since the snapshot on this branch
+                    let mut lat: Option<f64> = None;
+                    let mut stash: Vec<(f64, usize)> = Vec::new();
+                    while let Some(e) = self.ready.pop() {
+                        let (t, ri) = (e.time, e.rank);
+                        if !self.heap_entry_live(t, ri) {
+                            continue;
+                        }
+                        if t <= clock {
+                            stash.push((t, ri));
+                            continue;
+                        }
+                        self.ready.push(t, ri, ());
+                        lat = Some(t);
+                        break;
+                    }
+                    for (t, ri) in stash {
+                        self.ready.push(t, ri, ());
+                    }
+                    if next_arrival < trace.len() {
+                        let at = trace[next_arrival].arrival_s;
+                        if at > clock && lat.map_or(true, |l| at < l) {
+                            lat = Some(at);
+                        }
+                    }
+                    for &(_, ready_at) in &self.in_flight {
+                        if ready_at > clock && lat.map_or(true, |l| ready_at < l) {
+                            lat = Some(ready_at);
+                        }
+                    }
+                    if elastic {
+                        if self.next_fail < self.fail_sched.len() {
+                            let ft = self.fail_sched[self.next_fail].0;
+                            if ft > clock && lat.map_or(true, |l| ft < l) {
+                                lat = Some(ft);
+                            }
+                        }
+                        for &jt in &self.pending_joins[..joins_at_start] {
+                            if jt > clock && lat.map_or(true, |l| jt < l) {
+                                lat = Some(jt);
+                            }
+                        }
+                        if eval_interval.is_some()
+                            && eval_at_start > clock
+                            && lat.map_or(true, |l| eval_at_start < l)
+                        {
+                            lat = Some(eval_at_start);
+                        }
+                    }
+                    lat.unwrap_or(f64::INFINITY)
+                };
                 if !later.is_finite() {
                     anyhow::bail!("{}", self.wedge_report(trace.len() - next_arrival));
                 }
@@ -1425,6 +1783,7 @@ mod tests {
             cost: CostModel::Uniform { step_s: 1.0 },
             speeds: Vec::new(),
             elastic,
+            naive: false,
         }
     }
 

@@ -109,6 +109,13 @@ pub struct Scenario {
     /// elastic membership (failure injection + autoscaling); None = the
     /// fixed fleet every non-elastic scenario runs
     pub elastic: Option<ElasticConfig>,
+    /// Run the pre-optimization reference paths (full linear scans per
+    /// routing decision, full waiting views per scheduler call, per-round
+    /// Σ-sweep page sampling, rebuilt per-iteration candidate lists)
+    /// instead of the indexed ones. Both arms are byte-identical —
+    /// `prop_simperf` pins it — so this exists for the perf_sim bench's
+    /// before/after arms and the property test, not for callers.
+    pub naive: bool,
 }
 
 impl Scenario {
@@ -143,6 +150,7 @@ impl Scenario {
             cost: Self::h20_cost(8, 1),
             speeds: Vec::new(),
             elastic: None,
+            naive: false,
         }
     }
 
@@ -164,6 +172,7 @@ impl Scenario {
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds: Vec::new(),
             elastic: None,
+            naive: false,
         }
     }
 
@@ -187,6 +196,7 @@ impl Scenario {
             cost: Self::h20_cost(n, NODE_GPUS / n),
             speeds: Vec::new(),
             elastic: None,
+            naive: false,
         }
     }
 
@@ -210,6 +220,7 @@ impl Scenario {
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds,
             elastic: None,
+            naive: false,
         }
     }
 
@@ -237,6 +248,7 @@ impl Scenario {
             cost,
             speeds: Vec::new(),
             elastic: Some(elastic),
+            naive: false,
         }
     }
 }

@@ -1,5 +1,7 @@
 //! Summary statistics for benchmark reporting (std-only substrate).
 
+use std::cell::RefCell;
+
 /// Online accumulator + percentile support over a retained sample vector.
 ///
 /// The canonical recorder type: every latency/throughput recorder in the
@@ -8,22 +10,29 @@
 #[derive(Clone, Debug, Default)]
 pub struct Stats {
     xs: Vec<f64>,
+    /// Lazily built sorted view of `xs`, valid iff the lengths match
+    /// (`push` clears it; `xs` only grows, so a stale same-length cache
+    /// cannot exist). Repeated percentile queries between pushes — the
+    /// autoscaler's rolling TTFT p95 every `eval_interval_s`, the
+    /// multi-percentile report rows — sort once instead of per call.
+    sorted: RefCell<Vec<f64>>,
 }
 
 impl Stats {
     pub fn new() -> Self {
-        Stats { xs: Vec::new() }
+        Stats::default()
     }
 
     // An inherent `from` (not the trait): callers read `Stats::from(&xs)`
     // at many bench sites; the trait form would force type annotations.
     #[allow(clippy::should_implement_trait)]
     pub fn from(xs: &[f64]) -> Self {
-        Stats { xs: xs.to_vec() }
+        Stats { xs: xs.to_vec(), sorted: RefCell::new(Vec::new()) }
     }
 
     pub fn push(&mut self, x: f64) {
         self.xs.push(x);
+        self.sorted.get_mut().clear();
     }
 
     pub fn len(&self) -> usize {
@@ -70,8 +79,12 @@ impl Stats {
         if self.xs.is_empty() {
             return f64::NAN;
         }
-        let mut sorted = self.xs.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut sorted = self.sorted.borrow_mut();
+        if sorted.len() != self.xs.len() {
+            sorted.clear();
+            sorted.extend_from_slice(&self.xs);
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
         let rank = (p / 100.0) * (sorted.len() - 1) as f64;
         let lo = rank.floor() as usize;
         let hi = rank.ceil() as usize;
@@ -157,6 +170,29 @@ mod tests {
         assert_eq!(s.percentile(100.0), 50.0);
         assert_eq!(s.median(), 30.0);
         assert_eq!(s.percentile(25.0), 20.0);
+    }
+
+    #[test]
+    fn percentile_cache_survives_interleaved_pushes() {
+        // Same values as `percentiles`, but pushed out of order with
+        // percentile queries interleaved: every query after a push must
+        // see the refreshed sort, and repeated queries must not change.
+        let mut s = Stats::new();
+        s.push(30.0);
+        s.push(10.0);
+        s.push(50.0);
+        assert_eq!(s.median(), 30.0); // builds the cached sorted view
+        s.push(20.0); // must invalidate it
+        s.push(40.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(25.0), 20.0);
+        assert_eq!(s.median(), 30.0);
+        assert_eq!(s.percentile(100.0), 50.0);
+        assert_eq!(s.percentile(95.0), s.percentile(95.0));
+        // the retained-sample accessors still see insertion order
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.min(), 10.0);
+        assert_eq!(s.max(), 50.0);
     }
 
     #[test]

@@ -284,6 +284,7 @@ fn harness_arm(timing: SimTiming, routing: SimRoute) -> SimResult {
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds: Vec::new(),
         elastic: None,
+        naive: false,
     }
     .run(&burst_trace())
     .expect("harness sim")
@@ -332,6 +333,7 @@ fn harness_speed_factors_slow_the_straggler_arm() {
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds,
         elastic: None,
+        naive: false,
     };
     let trace = burst_trace();
     let uniform = scen(Vec::new()).run(&trace).expect("uniform sim");

@@ -1,0 +1,262 @@
+//! Property sweep: the indexed simulator paths must be byte-identical to
+//! the naive reference sweeps.
+//!
+//! The simulate harness keeps two copies of its hot paths: the
+//! pre-optimization `naive` arm (full linear scans per routing decision,
+//! full waiting views per scheduler call, per-round Σ-sweep page sampling,
+//! rebuilt candidate lists) and the indexed arm (lazy ready-heap over busy
+//! ranks, incremental per-rank token-load and page counters, capped
+//! waiting views, batched same-instant pops). Every committed baseline
+//! rides the indexed arm, so this sweep is the safety net: random traces ×
+//! random scenarios, lock-step and event modes, with and without elastic
+//! membership churn, disaggregated and colocated — the FULL results (every
+//! counter, bit-exact percentile, routed vector and membership timeline)
+//! must compare equal.
+//!
+//! `python/tests/prop_simperf_port.py` mirrors this sweep over the Python
+//! ports (with its own page size — the ported scheduler is page-agnostic,
+//! while this harness pins `kvcache::PAGE_TOKENS`).
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::kvcache::PAGE_TOKENS;
+use snapmla::simulate::{
+    AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, SimTiming,
+};
+use snapmla::util::rng::Rng;
+use snapmla::workload::{TraceConfig, TraceGen};
+
+const PAGE: usize = PAGE_TOKENS;
+
+/// Inclusive uniform pick, mirroring `util::rng` usage in tracegen.
+fn gen_range(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    lo + rng.next_u64() % (hi - lo + 1)
+}
+
+fn random_trace_cfg(rng: &mut Rng, case: usize) -> TraceConfig {
+    let prompt_min = 8 + gen_range(rng, 0, 40) as usize;
+    let out_min = 1 + gen_range(rng, 0, 6) as usize;
+    let num_requests = 30 + gen_range(rng, 0, 50) as usize;
+    let mean_interarrival_s = 0.002 + (rng.next_u64() % 1000) as f64 / 1000.0 * 0.03;
+    let prompt_max = prompt_min + gen_range(rng, 8, 200) as usize;
+    let out_max = out_min + gen_range(rng, 1, 24) as usize;
+    let mut cfg = TraceConfig {
+        seed: 9000 + case as u64,
+        num_requests,
+        mean_interarrival_s,
+        prompt_min,
+        prompt_max,
+        out_min,
+        out_max,
+        long_frac: 0.0,
+        long_prompt_min: 0,
+        long_prompt_max: 0,
+        shared_prefix_frac: 0.0,
+        shared_prefix_groups: 1,
+        shared_prefix_tokens: 0,
+        diurnal_period_s: 0.0,
+        diurnal_amp: 1.0,
+        ..TraceConfig::default()
+    };
+    if rng.next_u64() % 3 == 0 {
+        cfg.shared_prefix_frac = 0.5;
+        cfg.shared_prefix_groups = 3;
+        cfg.shared_prefix_tokens = PAGE * gen_range(rng, 1, 4) as usize;
+    }
+    if rng.next_u64() % 3 == 0 {
+        cfg.diurnal_period_s = 2.0;
+        cfg.diurnal_amp = 3.0;
+    }
+    cfg
+}
+
+fn random_sched_cfg(rng: &mut Rng) -> SchedulerConfig {
+    SchedulerConfig {
+        max_decode_batch: 4 + gen_range(rng, 0, 8) as usize,
+        max_prefill_batch: 1 + gen_range(rng, 0, 3) as usize,
+        max_prefill_tokens: 2048,
+        max_context: 2048,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 32 + PAGE * gen_range(rng, 0, 4) as usize,
+        chunk_per_seq: 32,
+        max_step_items: 8 + gen_range(rng, 0, 8) as usize,
+        max_running: 6 + gen_range(rng, 0, 6) as usize,
+        disagg_prefill: false,
+        policy: SchedPolicy::MixedChunked,
+    }
+}
+
+/// One random scenario; returns `(trace_cfg, scenario)` with the indexed
+/// arm selected (the test flips `naive` for the reference run).
+fn random_case(rng: &mut Rng, case: usize) -> (TraceConfig, Scenario) {
+    let trace_cfg = random_trace_cfg(rng, case);
+    let sched = random_sched_cfg(rng);
+    let mode = rng.next_u64() % 4;
+    // capacity always fits one max-size sequence PLUS the worst-case set of
+    // published shared prefixes (which hold pages even on an idle rank), so
+    // a lone request cannot deadlock — but it stays tight enough under load
+    // to exercise spill/resume
+    let per_seq_pages = (trace_cfg.prompt_max + trace_cfg.out_max).div_ceil(PAGE);
+    let shared_pages =
+        trace_cfg.shared_prefix_groups * trace_cfg.shared_prefix_tokens.div_ceil(PAGE);
+    let capacity = per_seq_pages + shared_pages + gen_range(rng, 2, 30) as usize;
+    let base = |ranks: usize, routing: SimRoute, timing: SimTiming| Scenario {
+        ranks,
+        prefill_ranks: 0,
+        routing,
+        timing,
+        sched,
+        prefill_sched: None,
+        capacity_pages: capacity,
+        cost: Scenario::h20_cost(ranks, 2),
+        speeds: Vec::new(),
+        elastic: None,
+        naive: false,
+    };
+    let scen = match mode {
+        0 => {
+            // lock-step colocated fleet (serve_cluster shape)
+            let dp = 1 + gen_range(rng, 0, 3) as usize;
+            let routing = if dp == 1 { SimRoute::Single } else { SimRoute::ShortestQueue };
+            base(dp, routing, SimTiming::LockStep)
+        }
+        1 => {
+            // event-driven colocated fleet, sometimes straggling ranks
+            let dp = 1 + gen_range(rng, 0, 3) as usize;
+            let routing = if rng.next_u64() % 2 == 0 {
+                SimRoute::PrefixAffinity
+            } else if dp == 1 {
+                SimRoute::Single
+            } else {
+                SimRoute::ShortestQueue
+            };
+            let mut s = base(dp, routing, SimTiming::EventDriven);
+            if rng.next_u64() % 2 == 0 {
+                s.speeds = (0..dp).map(|_| 1.0 + (rng.next_u64() % 100) as f64 / 100.0).collect();
+            }
+            s
+        }
+        2 => {
+            // disaggregated prefill/decode split (serve_disagg shape)
+            let prefill = 1 + gen_range(rng, 0, 1) as usize;
+            let decode = 1 + gen_range(rng, 0, 2) as usize;
+            let mut s = base(prefill + decode, SimRoute::Disagg, SimTiming::EventDriven);
+            s.prefill_ranks = prefill;
+            s.prefill_sched = Some(SchedulerConfig { disagg_prefill: true, ..sched });
+            s
+        }
+        _ => {
+            // elastic membership churn: injected failures and/or autoscaler
+            let dp = 3 + gen_range(rng, 0, 1) as usize;
+            let span = trace_cfg.num_requests as f64 * trace_cfg.mean_interarrival_s;
+            let mut failures = Vec::new();
+            if rng.next_u64() % 2 == 0 {
+                failures.push((span * 0.3, gen_range(rng, 0, dp as u64 - 1) as usize));
+            }
+            let autoscale = (rng.next_u64() % 2 == 0).then(|| AutoscaleConfig {
+                min_ranks: 1,
+                max_ranks: dp + 2,
+                eval_interval_s: (span / 8.0).max(0.05),
+                queue_high: 1.5,
+                queue_low: 1.0,
+                idle_for_s: (span / 4.0).max(0.1),
+                join_delay_s: (span / 10.0).max(0.05),
+                ttft_slo_s: 0.5,
+            });
+            let routing = if rng.next_u64() % 2 == 0 {
+                SimRoute::PrefixAffinity
+            } else {
+                SimRoute::ShortestQueue
+            };
+            let mut s = base(dp, routing, SimTiming::EventDriven);
+            s.elastic = Some(ElasticConfig {
+                failures,
+                recover: rng.next_u64() % 3 != 0,
+                autoscale,
+            });
+            s
+        }
+    };
+    (trace_cfg, scen)
+}
+
+/// Labeled full-result fingerprint: every recorder bit-exact, floats
+/// compared by bit pattern.
+fn fingerprint(r: &SimResult) -> Vec<String> {
+    let mut parts: Vec<String> = vec![
+        format!("ranks={}/{}/{}", r.ranks, r.prefill_ranks, r.decode_ranks),
+        format!("req={}:{}:{}", r.requests, r.completed, r.dropped),
+        format!("gen={}", r.gen_tokens),
+        format!("wall={:016x}", r.wall_s.to_bits()),
+        format!("pages={}", r.peak_pages),
+        format!(
+            "tok={}:{}:{}:{}:{}",
+            r.prefill_tokens, r.chunk_tokens, r.prefix_hit_tokens, r.decode_steps,
+            r.decode_batch_sum
+        ),
+        format!("loops={}:{}", r.rounds, r.steps),
+        format!("spill={}:{}:{}", r.spills, r.restores, r.handoffs),
+        format!("wire={}:{}", r.wire_fp8_bytes, r.wire_bf16_bytes),
+        format!("routed={:?}", r.routed),
+        format!(
+            "elastic={}:{}:{}:{}:{}:{}:{}",
+            r.evacuated, r.recovered, r.fails, r.joins, r.drains, r.peak_active_ranks,
+            r.final_active_ranks
+        ),
+        format!("mar={:016x}", r.mean_active_ranks.to_bits()),
+    ];
+    for (name, st) in [("ttft", &r.ttft), ("ttfts", &r.ttft_short), ("itl", &r.itl)] {
+        let ps: Vec<String> = [0.0, 25.0, 50.0, 95.0, 100.0]
+            .iter()
+            .map(|&p| format!("{:016x}", st.percentile(p).to_bits()))
+            .collect();
+        parts.push(format!("{}={}:{}", name, st.len(), ps.join(",")));
+    }
+    for &(t, kind, ri, after) in &r.rank_timeline {
+        parts.push(format!("tl={:016x}:{}:{}:{}", t.to_bits(), kind.as_str(), ri, after));
+    }
+    parts
+}
+
+fn label(s: &Scenario) -> String {
+    format!(
+        "{:?}/{:?}{}",
+        s.timing,
+        s.routing,
+        if s.elastic.is_some() {
+            "+elastic"
+        } else if s.prefill_ranks > 0 {
+            "+disagg"
+        } else {
+            ""
+        }
+    )
+}
+
+#[test]
+fn indexed_paths_match_naive_reference_across_random_scenarios() {
+    const CASES: usize = 60;
+    let mut rng = Rng::new(0x51A9);
+    let mut failures = 0;
+    for case in 0..CASES {
+        let (trace_cfg, scen) = random_case(&mut rng, case);
+        let trace = TraceGen::generate(&trace_cfg);
+        let mut naive_scen = scen.clone();
+        naive_scen.naive = true;
+        let slow = naive_scen.run(&trace).expect("naive arm");
+        let fast = scen.run(&trace).expect("indexed arm");
+        let (a, b) = (fingerprint(&slow), fingerprint(&fast));
+        if a != b {
+            failures += 1;
+            eprintln!("FAIL case {case} [{}]:", label(&scen));
+            eprintln!("  trace_cfg: {trace_cfg:?}");
+            let max = a.len().max(b.len());
+            for i in 0..max {
+                let (x, y) = (a.get(i), b.get(i));
+                if x != y {
+                    eprintln!("    naive={x:?} indexed={y:?}");
+                }
+            }
+        }
+    }
+    assert_eq!(failures, 0, "{failures}/{CASES} random scenarios diverged");
+}
