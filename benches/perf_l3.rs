@@ -6,7 +6,7 @@
 
 use snapmla::bench::{bench_from_args, write_report};
 use snapmla::coordinator::scheduler::{
-    RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
+    RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig, WaitingSeq,
 };
 use snapmla::fp8::{e4m3_decode, e4m3_encode, quant_per_token};
 use snapmla::kvcache::{CacheConfig, CacheMode, PagedKvCache};
@@ -113,6 +113,7 @@ fn main() {
         max_step_items: 64,
         max_running: 72,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     });
     let waiting: Vec<WaitingSeq> =

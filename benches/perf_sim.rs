@@ -34,7 +34,7 @@
 //! `python/tests/perf_sim_port.py` is the exact Python port that generated
 //! the committed baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::simulate::{Scenario, SimResult, SimRoute, SimTiming};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
@@ -88,6 +88,7 @@ fn sched_cfg() -> SchedulerConfig {
         max_step_items: 64,
         max_running: 64,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }
@@ -106,6 +107,7 @@ fn scen(dp: usize, naive: bool) -> Scenario {
         cost: Scenario::h20_cost(1, 1),
         speeds: Vec::new(),
         elastic: None,
+        spec: None,
         naive,
     }
 }

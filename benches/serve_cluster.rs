@@ -21,7 +21,7 @@
 //! is the exact Python port (thin wrapper over serve_port_common.py) that
 //! generated the committed baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::simulate::scenario::cluster_result_json;
 use snapmla::simulate::{Scenario, SimRoute, NODE_GPUS};
 use snapmla::util::cli::Args;
@@ -70,6 +70,7 @@ fn main() {
         max_step_items: 16,
         max_running: 16,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     let dps: &[usize] = if quick { &DP_QUICK } else { &DP_FULL };

@@ -23,7 +23,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::perfmodel::{KernelKind, ModelSpec};
 use snapmla::simulate::scenario::disagg_result_json;
 use snapmla::simulate::{Scenario, NODE_GPUS};
@@ -83,6 +83,7 @@ fn main() {
         max_step_items: 16,
         max_running: 16,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     // prefill ranks run a prefill-tuned profile: no decode batch to ride,
@@ -94,6 +95,7 @@ fn main() {
         prefill_chunk_tokens: 512,
         chunk_per_seq: 512,
         disagg_prefill: true,
+        spec: SpecConfig::disabled(),
         ..sched_cfg
     };
     let model = ModelSpec::deepseek_v31();

@@ -22,7 +22,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::simulate::scenario::{elastic_autoscale_result_json, elastic_failure_result_json};
 use snapmla::simulate::{
     AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, NODE_GPUS,
@@ -61,6 +61,7 @@ fn failure_sched_cfg() -> SchedulerConfig {
         max_step_items: 16,
         max_running: 16,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }
@@ -80,6 +81,7 @@ fn autoscale_sched_cfg() -> SchedulerConfig {
         max_step_items: 6,
         max_running: 4,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }

@@ -1,0 +1,210 @@
+//! serve_spec — speculative multi-token decoding (MTP draft/verify) vs the
+//! plain mixed-chunked scheduler on one rank, in deterministic virtual time.
+//!
+//! A thin scenario config over `snapmla::simulate`: the serve_mixed workload
+//! shifted decode-heavy (chat-style long outputs, mostly short prompts — the
+//! regime speculation targets) runs a non-spec baseline arm plus draft/verify
+//! arms across acceptance rates {0.5, 0.7, 0.9} at the shipped MTP depth
+//! (draft_len = 1), and a draft-depth sweep {2, 4} at acceptance 0.7 showing
+//! the accepted-tokens/step vs ITL frontier. Verify steps are priced by the
+//! calibrated H20 model as small-batch prefill over `1 + draft_len` tokens;
+//! accepted tokens are a deterministic per-request Bernoulli stream.
+//!
+//!     cargo bench --bench serve_spec [-- --quick]
+//!
+//! The full run also refreshes BENCH_spec.json at the repo root.
+//! `python/tests/serve_spec_port.py` is the exact Python port (thin wrapper
+//! over serve_port_common.py) that generated the committed baseline in a
+//! container without a Rust toolchain.
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::simulate::scenario::spec_result_json;
+use snapmla::simulate::{Scenario, SimResult, SpecSim};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, f2, Table};
+use snapmla::workload::{TraceConfig, TraceGen};
+
+const PAGE: usize = 64;
+const CAPACITY_PAGES: usize = 2048;
+const DRAFT_LEN: usize = 1;
+const ACCEPT_RATES: [f64; 3] = [0.5, 0.7, 0.9];
+const DRAFT_SWEEP: [usize; 2] = [2, 4];
+const SWEEP_ACCEPT: f64 = 0.7;
+
+fn vs_baseline(arm: &SimResult, base: &SimResult) -> Json {
+    Json::obj(vec![
+        ("throughput_ratio", Json::num(arm.tok_per_s() / base.tok_per_s())),
+        ("itl_p50_ratio", Json::num(arm.itl.median() / base.itl.median())),
+        ("itl_p95_ratio", Json::num(arm.itl.percentile(95.0) / base.itl.percentile(95.0))),
+    ])
+}
+
+fn arm_json(spec: SpecSim, arm: &SimResult, base: &SimResult) -> Json {
+    let mut row = spec_result_json(Some(spec), arm);
+    if let Json::Obj(m) = &mut row {
+        m.insert("vs_baseline".into(), vs_baseline(arm, base));
+    }
+    row
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let quick = args.has("quick");
+    let num_requests = args.usize_or("requests", if quick { 16 } else { 64 });
+
+    // canonical serve_spec workload — decode-heavy (chat-style long outputs,
+    // mostly short prompts), the regime speculative decoding targets; the
+    // non-spec baseline arm runs the identical trace
+    let trace_cfg = TraceConfig {
+        seed: args.u64_or("seed", 2026),
+        num_requests,
+        mean_interarrival_s: 0.0, // burst: fully deterministic virtual time
+        prompt_min: 32,
+        prompt_max: 128,
+        out_min: 256,
+        out_max: 512,
+        temperature: 0.0,
+        long_frac: 0.125,
+        long_prompt_min: 512,
+        long_prompt_max: 1024,
+        ..TraceConfig::default()
+    };
+    let trace = TraceGen::generate(&trace_cfg);
+    let sched_cfg = SchedulerConfig {
+        max_decode_batch: 12,
+        max_prefill_batch: 4,
+        max_prefill_tokens: 4096,
+        max_context: 8192,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 40,
+        chunk_per_seq: 40,
+        max_step_items: 16,
+        max_running: 16,
+        disagg_prefill: false,
+        spec: SpecConfig::disabled(), // the harness arms the gate per scenario
+        policy: SchedPolicy::MixedChunked,
+    };
+
+    let run = |spec: Option<SpecSim>| -> SimResult {
+        let sc = match spec {
+            Some(sp) => {
+                Scenario::spec_serve(sched_cfg, CAPACITY_PAGES, sp.draft_len, sp.accept_rate)
+            }
+            None => Scenario::mixed(sched_cfg, CAPACITY_PAGES),
+        };
+        sc.run(&trace).expect("spec sim")
+    };
+
+    let base = run(None);
+    let frontier: Vec<(f64, SimResult)> = ACCEPT_RATES
+        .iter()
+        .map(|&a| (a, run(Some(SpecSim { draft_len: DRAFT_LEN, accept_rate: a }))))
+        .collect();
+    let sweep: Vec<(usize, SimResult)> = DRAFT_SWEEP
+        .iter()
+        .map(|&d| (d, run(Some(SpecSim { draft_len: d, accept_rate: SWEEP_ACCEPT }))))
+        .collect();
+
+    let mut t = Table::new(
+        "serve_spec — MTP draft/verify vs plain decode (virtual time, perfmodel)",
+        &["arm", "req", "gen tok", "wall s", "tok/s", "ITL p50 ms", "ITL p95 ms",
+          "acc tok/step", "x tput"],
+    );
+    let mut row = |name: String, r: &SimResult, acc: Option<f64>| {
+        t.row(vec![
+            name,
+            r.requests.to_string(),
+            r.gen_tokens.to_string(),
+            f2(r.wall_s),
+            f1(r.tok_per_s()),
+            f2(r.itl.median() * 1e3),
+            f2(r.itl.percentile(95.0) * 1e3),
+            acc.map_or("-".into(), f2),
+            f2(r.tok_per_s() / base.tok_per_s()),
+        ]);
+    };
+    row("baseline".into(), &base, None);
+    for (a, r) in &frontier {
+        row(format!("d{DRAFT_LEN} accept{:.0}", a * 100.0), r, Some(r.accepted_per_spec_step()));
+    }
+    for (d, r) in &sweep {
+        row(format!("d{d} accept{:.0}", SWEEP_ACCEPT * 100.0), r, Some(r.accepted_per_spec_step()));
+    }
+    t.print();
+    let a70 = &frontier[1].1;
+    println!(
+        "accepted tokens/step @0.7: {:.2} (target > 1.3); ITL p95 ratio: {:.3} \
+         (target <= 1.05); throughput: {:.2}x",
+        a70.accepted_per_spec_step(),
+        a70.itl.percentile(95.0) / base.itl.percentile(95.0),
+        a70.tok_per_s() / base.tok_per_s(),
+    );
+
+    let frontier_json = Json::Obj(
+        frontier
+            .iter()
+            .map(|(a, r)| {
+                (
+                    format!("accept{:.0}", a * 100.0),
+                    arm_json(SpecSim { draft_len: DRAFT_LEN, accept_rate: *a }, r, &base),
+                )
+            })
+            .collect(),
+    );
+    let sweep_json = Json::Obj(
+        sweep
+            .iter()
+            .map(|(d, r)| {
+                (
+                    format!("draft{d}"),
+                    arm_json(SpecSim { draft_len: *d, accept_rate: SWEEP_ACCEPT }, r, &base),
+                )
+            })
+            .collect(),
+    );
+    let report = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("seed", Json::num(trace_cfg.seed as f64)),
+                ("num_requests", Json::num(num_requests as f64)),
+                ("long_frac", Json::num(trace_cfg.long_frac)),
+                (
+                    "long_prompt",
+                    Json::str(&format!(
+                        "{}..={}",
+                        trace_cfg.long_prompt_min, trace_cfg.long_prompt_max
+                    )),
+                ),
+                (
+                    "short_prompt",
+                    Json::str(&format!("{}..={}", trace_cfg.prompt_min, trace_cfg.prompt_max)),
+                ),
+                (
+                    "out_tokens",
+                    Json::str(&format!("{}..={}", trace_cfg.out_min, trace_cfg.out_max)),
+                ),
+                ("capacity_pages", Json::num(CAPACITY_PAGES as f64)),
+                ("max_decode_batch", Json::num(sched_cfg.max_decode_batch as f64)),
+                ("max_running", Json::num(sched_cfg.max_running as f64)),
+                ("draft_len", Json::num(DRAFT_LEN as f64)),
+                ("accept_rates", Json::arr(ACCEPT_RATES.iter().map(|&a| Json::num(a)))),
+                ("model", Json::str("DeepSeek-V3.1")),
+                ("config", Json::str("DP8/TP1")),
+                ("kernel", Json::str("SnapMLA FP8")),
+            ]),
+        ),
+        ("baseline", spec_result_json(None, &base)),
+        ("frontier", frontier_json),
+        ("draft_sweep", sweep_json),
+    ]);
+    snapmla::bench::write_report("serve_spec", report.clone());
+    if !quick {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_spec.json");
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("[report] {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {path:?}: {e}"),
+        }
+    }
+}

@@ -22,7 +22,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::simulate::scenario::straggler_result_json;
 use snapmla::simulate::{Scenario, SimResult, SimRoute, NODE_GPUS};
 use snapmla::util::cli::Args;
@@ -71,6 +71,7 @@ fn main() {
         max_step_items: 16,
         max_running: 16,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     let uniform = vec![1.0; DP];

@@ -85,6 +85,17 @@ GATES = [
         ],
     ),
     (
+        "BENCH_spec.json",
+        "target/bench-reports/serve_spec.json",
+        [
+            f"frontier.accept{a}.accepted_tokens_per_step" for a in (50, 70, 90)
+        ]
+        + [
+            f"frontier.accept70.vs_baseline.{metric}"
+            for metric in ("throughput_ratio", "itl_p50_ratio", "itl_p95_ratio")
+        ],
+    ),
+    (
         "BENCH_kernels.json",
         "target/bench-reports/kernel_frontier.json",
         [

@@ -291,6 +291,61 @@ def mixed_step_s(cfg, decode_batch, context, chunk_tokens, chunk_context):
     return base + max(chunk_compute - hidden, 0.0) + tp_comm_s(cfg, c) + GPU["launch_s"]
 
 
+# --- speculative decoding (perfmodel::e2e::spec_step_s) -----------------------
+#
+# One draft-then-verify step (Action::SpecDecode). The verify pass runs the
+# full decode batch with `draft_len` extra query tokens per sequence in ONE
+# forward pass — a small-batch prefill shape with very different arithmetic
+# intensity than decode (arXiv 2506.02523): the extra tokens' GEMM and
+# absorbed-form attention ride the decode step's weight-streaming phase
+# exactly like a mixed step's prefill chunk, and only the exposed remainder
+# is charged. The draft model is the MTP head — SPEC_DRAFT_LAYERS of the
+# model's layers sharing the trunk's KV — run `draft_len` times sequentially.
+SPEC_DRAFT_LAYERS = 1
+# acceptance-pattern stream for the simulated verify (mirrors
+# simulate::harness SPEC_RNG_SEED)
+SPEC_RNG_SEED = 0x05BEC0DE5EED
+
+
+def spec_step_s(cfg, batch, context, draft_len):
+    if batch == 0:
+        return math.inf
+    gpus = cfg["dp"] * cfg["tp"]
+    eff = GPU["fp8_tflops"] * 1e12 * GPU["peak_util"]
+    base = decode_step_s(cfg, batch, context)
+    # verify: draft_len extra query rows per sequence hide in the decode
+    # weight stream (same overlap accounting as mixed_step_s chunks)
+    extra = batch * draft_len
+    gemm_x = 2.0 * MODEL["active_params"] * extra / gpus / eff
+    attn_x = (
+        kernel_time_s(
+            batch, MODEL["heads"] // cfg["tp"], draft_len, context,
+            MODEL["d_c"], MODEL["d_r"],
+        )
+        * MODEL["n_layers"]
+    )
+    weights_mem = expert_stream_read(float(batch)) / gpus / GPU["hbm_bw"]
+    gemm_d = 2.0 * MODEL["active_params"] * batch / gpus / eff
+    hidden = max(weights_mem - gemm_d, 0.0)
+    verify = max(gemm_x + attn_x - hidden, 0.0)
+    # draft: draft_len sequential MTP-head passes (SPEC_DRAFT_LAYERS of
+    # n_layers, streaming that fraction of the active experts)
+    frac = SPEC_DRAFT_LAYERS / MODEL["n_layers"]
+    d_attn = (
+        kernel_time_s(
+            batch, MODEL["heads"] // cfg["tp"], 1, context, MODEL["d_c"], MODEL["d_r"]
+        )
+        * SPEC_DRAFT_LAYERS
+    )
+    d_weights = expert_stream_read(float(batch)) * frac / gpus / GPU["hbm_bw"]
+    d_gemm = 2.0 * MODEL["active_params"] * frac * batch / gpus / eff
+    d_launch = 2.0 * SPEC_DRAFT_LAYERS * GPU["launch_s"]
+    draft = draft_len * (
+        d_attn + max(d_weights, d_gemm) + tp_comm_s(cfg, float(batch)) * frac + d_launch
+    )
+    return base + verify + draft + tp_comm_s(cfg, float(extra)) + GPU["launch_s"]
+
+
 def spill_s(tokens):
     return WIRE_FP8_PER_TOKEN * tokens / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
 
@@ -460,6 +515,21 @@ def decide_mixed(cfg, waiting, running, free_pages):
 
     if not chunks and not decode_idxs:
         return ("idle",)
+    # speculative draft-then-verify (SchedulerConfig.spec): a pure-decode
+    # step upgrades to Action::SpecDecode when the cache can absorb every
+    # sequence's worst case of draft_len+1 new tokens — otherwise the step
+    # falls back to plain one-token decode, which the existing growth
+    # reservation already covers. Steps carrying prefill chunks never
+    # speculate. Disabled configs take the return below byte-identically.
+    spec = cfg.get("spec")
+    if spec and spec.get("enabled", False) and decode_idxs and not chunks:
+        d = spec["draft_len"]
+        spec_growth = sum(
+            pages_for(r[1] + d + 1, cfg["page"]) - pages_for(r[1], cfg["page"])
+            for r in decodable
+        )
+        if spec_growth <= free_pages:
+            return ("spec", decode_idxs, d)
     return ("mixed", chunks, decode_idxs)
 
 
@@ -561,6 +631,9 @@ def simulate(trace, scen):
       capacity_pages   KV pages per rank
       model_cfg        dict(dp, tp) for the analytical cost model
       speeds           per-rank cost multipliers (event mode; default 1.0)
+      spec             optional speculative decoding (mirrors Scenario::spec):
+                       dict(draft_len, accept_rate) — enables the scheduler's
+                       SpecDecode gate and the harness's draft/verify arm
       elastic          optional membership config (event + colocated only):
                        dict(failures=[(t, rank)...], recover=bool,
                             autoscale=None | dict(min_ranks, max_ranks,
@@ -578,6 +651,16 @@ def simulate(trace, scen):
     mcfg = scen["model_cfg"]
     speeds = list(scen.get("speeds") or [1.0] * n)
     page = sched_cfg["page"]
+    spec = scen.get("spec")
+    if spec:
+        # the scheduler's policy gate (SchedulerConfig.spec) rides the
+        # decode-rank config; prefill ranks never speculate
+        sched_cfg = dict(
+            sched_cfg, spec=dict(enabled=True, draft_len=spec["draft_len"])
+        )
+    # deterministic acceptance stream: one draw per drafted token, in
+    # apply() order — identical across the naive/indexed and timing arms
+    spec_rng = Rng(SPEC_RNG_SEED) if spec else None
     elastic = scen.get("elastic")
     auto = elastic.get("autoscale") if elastic else None
     recover = elastic.get("recover", True) if elastic else False
@@ -624,6 +707,7 @@ def simulate(trace, scen):
     stats = dict(
         gen_tokens=0, prefill_tokens=0, chunk_tokens=0, prefix_hit_tokens=0,
         decode_steps=0, decode_batch_sum=0, rounds=0, steps=0, peak_pages=0,
+        spec_steps=0, spec_seq_steps=0, spec_drafted=0, spec_tokens=0,
         spills=0, restores=0, handoffs=0, wire_fp8_bytes=0, wire_bf16_bytes=0,
         routed=[0] * n,
         dropped=0, recovered=0, evacuated=0, fails=0, joins=0, drains=0,
@@ -1065,6 +1149,55 @@ def simulate(trace, scen):
                 s["generated"] += 1
                 run_rem[ri] -= 1
                 emit(sid, t_emit)
+                if s["generated"] >= s["out"]:
+                    done.append(sid)
+            for sid in done:
+                s = seqs[sid]
+                run_rem[ri] -= s["out"] - s["generated"]
+                pp = private_pages(sid)
+                r["free"] += pp
+                used_pages_total -= pp
+                r["running"].remove(sid)
+        elif kind == "spec":
+            # Action::SpecDecode — one draft-then-verify step. Each sequence
+            # drafts `d` tokens; the verify pass accepts the leading run of
+            # matching drafts plus one corrected/bonus target token, and the
+            # rejected suffix's KV is rolled back (checkpoint/rollback_to),
+            # so pages grow for EMITTED tokens only — exactly the state a
+            # run that never wrote the rejects would hold.
+            idxs, d = action[1], action[2]
+            ids = [r["running"][i] for i in idxs]
+            ctx = max(seqs[sid]["cached"] for sid in ids) + 1
+            cost = spec_step_s(mcfg, len(ids), ctx, d) * speeds[ri]
+            stats["spec_steps"] += 1
+            stats["spec_seq_steps"] += len(ids)
+            t_emit = None if t_start is None else t_start + cost
+            done = []
+            for sid in ids:
+                s = seqs[sid]
+                # fixed d draws per sequence keeps the acceptance stream
+                # aligned across arms regardless of where the run breaks
+                draws = [spec_rng.bool(spec["accept_rate"]) for _ in range(d)]
+                accepted = 0
+                for ok in draws:
+                    if not ok:
+                        break
+                    accepted += 1
+                stats["spec_drafted"] += d
+                take = min(
+                    accepted + 1,
+                    s["out"] - s["generated"],
+                    sched_cfg["max_context"] - s["cached"],
+                )
+                for _ in range(take):
+                    if s["cached"] % page == 0:
+                        r["free"] -= 1
+                        used_pages_total += 1
+                    s["cached"] += 1
+                    s["generated"] += 1
+                    run_rem[ri] -= 1
+                    emit(sid, t_emit)
+                stats["spec_tokens"] += take
                 if s["generated"] >= s["out"]:
                     done.append(sid)
             for sid in done:
@@ -1523,6 +1656,15 @@ def simulate(trace, scen):
     if itl:
         res["itl_p50_ms"] = percentile(itl, 50.0) * 1e3
         res["itl_p95_ms"] = percentile(itl, 95.0) * 1e3
+    if spec:
+        res["spec_steps"] = stats["spec_steps"]
+        res["spec_drafted_tokens"] = stats["spec_drafted"]
+        res["spec_tokens"] = stats["spec_tokens"]
+        # the headline frontier metric: tokens emitted per sequence per
+        # draft/verify step (the bonus token makes the floor 1.0)
+        res["accepted_per_spec_step"] = stats["spec_tokens"] / max(
+            stats["spec_seq_steps"], 1
+        )
     if elastic:
         if wall > a_last:
             a_int += active_count() * (wall - a_last)

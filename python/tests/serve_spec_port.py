@@ -1,0 +1,146 @@
+"""Exact Python port of benches/serve_spec.rs — a thin scenario over the
+shared virtual-time core in serve_port_common.py (mirrors
+rust/src/simulate/scenario.rs).
+
+Speculative multi-token decoding (MTP draft/verify) vs the plain
+mixed-chunked scheduler on one rank: the same serve_mixed workload runs a
+non-spec baseline arm plus draft/verify arms across acceptance rates
+{0.5, 0.7, 0.9} at the shipped MTP depth (draft_len = 1), and a draft-depth
+sweep {2, 4} at acceptance 0.7 showing the accepted-tokens/step vs ITL
+frontier. BENCH_spec.json is generated from this port; `cargo bench
+--bench serve_spec` regenerates the authoritative copy once cargo is
+available.
+
+Run: python3 python/tests/serve_spec_port.py [--quick]
+"""
+
+import json
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from serve_port_common import generate_trace, normalize, simulate  # noqa: E402
+
+CAPACITY_PAGES = 2048
+DRAFT_LEN = 1
+ACCEPT_RATES = [0.5, 0.7, 0.9]
+DRAFT_SWEEP = [2, 4]
+SWEEP_ACCEPT = 0.7
+
+
+def sim(trace, sched_cfg, spec):
+    res = simulate(
+        trace,
+        dict(
+            ranks=1,
+            routing="single",
+            timing="event",
+            policy="mixed_chunked",
+            sched_cfg=sched_cfg,
+            capacity_pages=CAPACITY_PAGES,
+            model_cfg=dict(dp=8, tp=1),
+            spec=spec,
+        ),
+    )
+    row = dict(
+        requests=res["requests"],
+        gen_tokens=res["gen_tokens"],
+        wall_s=res["wall_s"],
+        tok_per_s=res["tok_per_s"],
+        ttft_p95_ms=res["ttft_p95_ms"],
+        itl_p50_ms=res["itl_p50_ms"],
+        itl_p95_ms=res["itl_p95_ms"],
+        decode_steps=res["decode_steps"],
+        steps=res["steps"],
+    )
+    if spec:
+        row["draft_len"] = spec["draft_len"]
+        row["accept_rate"] = spec["accept_rate"]
+        row["spec_steps"] = res["spec_steps"]
+        row["spec_drafted_tokens"] = res["spec_drafted_tokens"]
+        row["spec_tokens"] = res["spec_tokens"]
+        row["accepted_tokens_per_step"] = res["accepted_per_spec_step"]
+    return row
+
+
+def vs_baseline(arm, base):
+    return dict(
+        throughput_ratio=arm["tok_per_s"] / base["tok_per_s"],
+        itl_p50_ratio=arm["itl_p50_ms"] / base["itl_p50_ms"],
+        itl_p95_ratio=arm["itl_p95_ms"] / base["itl_p95_ms"],
+    )
+
+
+def run(quick=False):
+    # canonical serve_spec workload — decode-heavy (chat-style long outputs,
+    # mostly short prompts), the regime speculative decoding targets; the
+    # non-spec baseline arm runs the identical trace
+    trace_cfg = dict(
+        seed=2026,
+        num_requests=16 if quick else 64,
+        mean_interarrival_s=0.0,  # burst: fully deterministic virtual time
+        prompt_min=32,
+        prompt_max=128,
+        out_min=256,
+        out_max=512,
+        long_frac=0.125,
+        long_prompt_min=512,
+        long_prompt_max=1024,
+    )
+    sched_cfg = dict(
+        max_decode_batch=12,
+        max_prefill_batch=4,
+        max_prefill_tokens=4096,
+        max_context=8192,
+        page=64,
+        prefill_chunk_tokens=40,
+        chunk_per_seq=40,
+        max_step_items=16,
+        max_running=16,
+    )
+    trace = generate_trace(trace_cfg)
+    base = sim(trace, sched_cfg, None)
+    frontier = {}
+    for a in ACCEPT_RATES:
+        arm = sim(trace, sched_cfg, dict(draft_len=DRAFT_LEN, accept_rate=a))
+        arm["vs_baseline"] = vs_baseline(arm, base)
+        frontier[f"accept{int(a * 100)}"] = arm
+    draft_sweep = {}
+    for d in DRAFT_SWEEP:
+        arm = sim(trace, sched_cfg, dict(draft_len=d, accept_rate=SWEEP_ACCEPT))
+        arm["vs_baseline"] = vs_baseline(arm, base)
+        draft_sweep[f"draft{d}"] = arm
+    return dict(
+        workload=dict(
+            seed=trace_cfg["seed"],
+            num_requests=trace_cfg["num_requests"],
+            long_frac=0.125,
+            long_prompt="512..=1024",
+            short_prompt="32..=128",
+            out_tokens="256..=512",
+            capacity_pages=CAPACITY_PAGES,
+            max_decode_batch=12,
+            max_running=16,
+            draft_len=DRAFT_LEN,
+            accept_rates=ACCEPT_RATES,
+            model="DeepSeek-V3.1",
+            config="DP8/TP1",
+            kernel="SnapMLA FP8",
+        ),
+        baseline=base,
+        frontier=frontier,
+        draft_sweep=draft_sweep,
+    )
+
+
+if __name__ == "__main__":
+    quick = "--quick" in sys.argv
+    report = normalize(run(quick))
+    # util::json::to_string_pretty format: sorted keys, 1-space indent
+    print(json.dumps(report, indent=1, sort_keys=True))
+    a70 = report["frontier"]["accept70"]
+    print(
+        f"\naccepted tokens/step @0.7: {a70['accepted_tokens_per_step']:.2f} "
+        f"(target > 1.3); ITL p95 ratio: {a70['vs_baseline']['itl_p95_ratio']:.3f} "
+        f"(target <= 1.05); throughput: {a70['vs_baseline']['throughput_ratio']:.2f}x",
+        file=sys.stderr,
+    )

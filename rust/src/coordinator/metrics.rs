@@ -92,6 +92,13 @@ pub struct ServerMetrics {
     pub restores: u64,
     /// pages moved to host memory by spills
     pub spilled_pages: u64,
+    /// per-sequence speculative steps executed (one per sequence per
+    /// draft-then-verify batch)
+    pub spec_steps: u64,
+    /// draft tokens proposed across all spec steps
+    pub spec_drafted: u64,
+    /// draft tokens accepted by verification (≤ spec_drafted)
+    pub spec_accepted: u64,
     /// sequences handed off to a decode rank (disaggregated prefill rank)
     pub handoffs_out: u64,
     /// migrated sequences accepted from a prefill rank (decode rank)
@@ -125,6 +132,9 @@ impl ServerMetrics {
             ("mixed_steps_with_decode", self.mixed_steps_with_decode),
             ("chunk_tokens", self.chunk_tokens),
             ("prefix_hit_tokens", self.prefix_hit_tokens),
+            ("spec_steps", self.spec_steps),
+            ("spec_drafted", self.spec_drafted),
+            ("spec_accepted", self.spec_accepted),
             ("spills", self.spills),
             ("restores", self.restores),
             ("spilled_pages", self.spilled_pages),
@@ -163,6 +173,16 @@ impl ServerMetrics {
             t.row(vec![
                 "handoff wire MB".into(),
                 f2(self.handoff_wire_bytes as f64 / 1e6),
+            ]);
+        }
+        if self.spec_steps > 0 {
+            t.row(vec![
+                "spec steps (drafted / accepted)".into(),
+                format!("{} ({} / {})", self.spec_steps, self.spec_drafted, self.spec_accepted),
+            ]);
+            t.row(vec![
+                "accepted per spec step".into(),
+                f2(1.0 + self.spec_accepted as f64 / self.spec_steps as f64),
             ]);
         }
         if self.mixed_steps > 0 {

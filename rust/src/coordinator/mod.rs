@@ -18,6 +18,6 @@ pub mod server;
 pub use metrics::{ClusterMetrics, RequestMetrics, ServerMetrics};
 pub use request::{FinishReason, RequestOutcome, ServeRequest};
 pub use router::{RankHealth, RankLoad, RoutePolicy, Router};
-pub use scheduler::{Action, PrefillChunk, SchedPolicy, Scheduler, SchedulerConfig};
+pub use scheduler::{Action, PrefillChunk, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig};
 pub use sequence::{SeqPhase, Sequence};
 pub use server::{Evacuation, Server};

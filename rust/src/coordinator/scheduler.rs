@@ -41,6 +41,34 @@ pub struct RunningSeq {
     pub pending_prefill: usize,
 }
 
+/// Speculative multi-token decoding policy knobs. Disabled configs take
+/// exactly the non-spec decision path — `decide` returns byte-identical
+/// actions, so turning spec off IS the legacy scheduler.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpecConfig {
+    /// gate: when false, `draft_len` is ignored and no `SpecDecode` is
+    /// ever emitted
+    pub enabled: bool,
+    /// draft tokens proposed per sequence per speculative step
+    pub draft_len: usize,
+}
+
+impl SpecConfig {
+    pub fn disabled() -> SpecConfig {
+        SpecConfig { enabled: false, draft_len: 0 }
+    }
+
+    pub fn mtp(draft_len: usize) -> SpecConfig {
+        SpecConfig { enabled: true, draft_len }
+    }
+}
+
+impl Default for SpecConfig {
+    fn default() -> SpecConfig {
+        SpecConfig::disabled()
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
     /// max sequences per decode step (largest decode bucket batch)
@@ -66,6 +94,8 @@ pub struct SchedulerConfig {
     /// running sequence whose prefill completed is handed off to a decode
     /// rank (`Action::Handoff`) instead of entering the decode batch
     pub disagg_prefill: bool,
+    /// speculative multi-token decoding (MTP draft/verify) gate
+    pub spec: SpecConfig,
     pub policy: SchedPolicy,
 }
 
@@ -81,6 +111,7 @@ pub struct PrefillChunk {
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum Action {
     /// admit + fully prefill these waiting indices (alternating policy)
     Prefill(Vec<usize>),
@@ -88,6 +119,11 @@ pub enum Action {
     Decode(Vec<usize>),
     /// one engine step interleaving prefill chunks with the decode batch
     Mixed { prefill_chunks: Vec<PrefillChunk>, decode_idxs: Vec<usize> },
+    /// one draft-then-verify speculative step over these running indices:
+    /// each sequence drafts `draft_len` tokens through the MTP head, one
+    /// verify pass scores them, rejected tails roll back via the cache
+    /// checkpoint — the step emits 1..=draft_len+1 tokens per sequence
+    SpecDecode { idxs: Vec<usize>, draft_len: usize },
     /// restore this spilled waiting sequence's pages (no engine call)
     Resume(usize),
     /// spill this running sequence's pages and move it back to waiting
@@ -421,6 +457,24 @@ impl Scheduler {
         if chunks.is_empty() && decode_idxs.is_empty() {
             return Action::Idle;
         }
+        // 5) speculative upgrade: a pure-decode step (no chunks riding
+        //    along) drafts `draft_len` tokens per sequence and verifies
+        //    them in one step, provided the worst case (every draft
+        //    accepted, +1 bonus token per sequence) fits the free pool —
+        //    otherwise fall back to the plain mixed step. Disabled configs
+        //    never reach this arm, keeping their decisions byte-identical.
+        if self.cfg.spec.enabled && !decode_idxs.is_empty() && chunks.is_empty() {
+            let d = self.cfg.spec.draft_len;
+            let spec_growth: usize = running
+                .iter()
+                .filter(decodable)
+                .take(decode_cap)
+                .map(|r| self.pages_for(r.context + d + 1) - self.pages_for(r.context))
+                .sum();
+            if spec_growth <= free_pages {
+                return Action::SpecDecode { idxs: decode_idxs, draft_len: d };
+            }
+        }
         Action::Mixed { prefill_chunks: chunks, decode_idxs }
     }
 }
@@ -441,6 +495,7 @@ mod tests {
             max_step_items: 4,
             max_running: 4,
             disagg_prefill: false,
+            spec: SpecConfig::disabled(),
             policy,
         }
     }
@@ -729,6 +784,65 @@ mod tests {
         let s = mixed();
         assert_eq!(s.decide(&[], &[r(0, 512)], 100), Action::Idle);
         assert_eq!(s.decide(&[], &[], 100), Action::Idle);
+    }
+
+    // --- speculative decoding gate ------------------------------------------
+
+    fn spec_sched(draft_len: usize) -> Scheduler {
+        let mut c = cfg(SchedPolicy::MixedChunked);
+        c.spec = SpecConfig::mtp(draft_len);
+        Scheduler::new(c)
+    }
+
+    #[test]
+    fn spec_upgrades_pure_decode_steps() {
+        let s = spec_sched(2);
+        let a = s.decide(&[], &[r(0, 70), r(1, 130)], 100);
+        assert_eq!(a, Action::SpecDecode { idxs: vec![0, 1], draft_len: 2 });
+    }
+
+    #[test]
+    fn spec_never_fires_with_chunks_riding() {
+        let s = spec_sched(2);
+        // a waiting prompt produces chunks → the step stays a plain mixed
+        // step (verify cost modeling only covers pure-decode batches)
+        let a = s.decide(&[w(0, 200)], &[r(0, 70)], 100);
+        assert!(matches!(a, Action::Mixed { .. }));
+        // and a mid-prefill prompt keeps chunking too
+        let a = s.decide(&[], &[rp(0, 64, 100), r(1, 70)], 100);
+        assert!(matches!(a, Action::Mixed { .. }));
+    }
+
+    #[test]
+    fn spec_falls_back_when_worst_case_growth_does_not_fit() {
+        let s = spec_sched(4);
+        // mid-page decoders: the plain decode grows 0 pages, but the
+        // worst-case spec step (4 drafts + bonus each) needs 2 new pages —
+        // with 1 free page the step downgrades to a plain decode
+        let a = s.decide(&[], &[r(0, 60), r(1, 126)], 1);
+        assert_eq!(a, Action::Mixed { prefill_chunks: vec![], decode_idxs: vec![0, 1] });
+        // with room it upgrades
+        let a = s.decide(&[], &[r(0, 60), r(1, 126)], 2);
+        assert_eq!(a, Action::SpecDecode { idxs: vec![0, 1], draft_len: 4 });
+    }
+
+    #[test]
+    fn spec_disabled_config_is_decision_identical() {
+        // enabled: false must take the original return paths even with a
+        // draft_len set — the gate is the ONLY thing consulted
+        let mut c = cfg(SchedPolicy::MixedChunked);
+        c.spec = SpecConfig { enabled: false, draft_len: 4 };
+        let off = Scheduler::new(c);
+        let base = mixed();
+        let states: Vec<(Vec<WaitingSeq>, Vec<RunningSeq>, usize)> = vec![
+            (vec![], vec![r(0, 70), r(1, 130)], 100),
+            (vec![w(0, 200)], vec![r(0, 70)], 100),
+            (vec![], vec![r(0, 64), r(1, 128)], 1),
+            (vec![ws(0, 100), w(1, 10)], vec![], 4),
+        ];
+        for (wv, rv, free) in states {
+            assert_eq!(off.decide(&wv, &rv, free), base.decide(&wv, &rv, free));
+        }
     }
 
     // --- disaggregated prefill rank -----------------------------------------

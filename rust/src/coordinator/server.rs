@@ -13,7 +13,8 @@
 use super::metrics::ServerMetrics;
 use super::request::{FinishReason, RequestOutcome, ServeRequest};
 use super::scheduler::{
-    Action, PrefillChunk, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, WaitingSeq,
+    Action, PrefillChunk, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig,
+    WaitingSeq,
 };
 use super::sequence::{SeqPhase, Sequence};
 use crate::anyhow;
@@ -97,6 +98,7 @@ impl Server {
             // prompts must not evict decoders from the running set
             max_running: max_decode_batch + max_prefill_batch,
             disagg_prefill: false,
+            spec: SpecConfig::disabled(),
             policy,
         };
         let eos = engine.manifest.model.eos;
@@ -118,6 +120,30 @@ impl Server {
     /// decoding them.
     pub fn set_disagg_prefill(&mut self) {
         self.scheduler.cfg.disagg_prefill = true;
+    }
+
+    /// Enable speculative multi-token decoding: pure-decode steps upgrade to
+    /// draft-then-verify (`Action::SpecDecode`), emitting up to
+    /// `draft_len + 1` tokens per sequence per step. Requires verify buckets
+    /// wide enough for the carried token plus the drafts.
+    pub fn enable_spec(&mut self, draft_len: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(draft_len >= 1, "speculative decoding needs draft_len >= 1");
+        let cap = self
+            .engine
+            .manifest
+            .artifacts
+            .values()
+            .filter(|a| a.kind == ArtifactKind::Verify && a.mode == self.engine.mode_str())
+            .map(|a| a.t_q)
+            .max()
+            .unwrap_or(0);
+        anyhow::ensure!(
+            draft_len + 1 <= cap,
+            "draft_len {draft_len} needs a verify bucket with t_q >= {} (largest: {cap})",
+            draft_len + 1
+        );
+        self.scheduler.cfg.spec = SpecConfig::mtp(draft_len);
+        Ok(())
     }
 
     pub fn submit(&mut self, req: ServeRequest) {
@@ -312,6 +338,9 @@ impl Server {
             Action::Mixed { prefill_chunks, decode_idxs } => {
                 self.run_mixed(prefill_chunks, decode_idxs)?;
             }
+            Action::SpecDecode { idxs, draft_len } => {
+                self.run_spec(idxs, draft_len)?;
+            }
             Action::Resume(idx) => {
                 debug_assert_eq!(idx, 0, "only the queue head resumes");
                 let mut seq = self.waiting.pop_front().unwrap();
@@ -444,6 +473,83 @@ impl Server {
         Ok(())
     }
 
+    /// Execute one speculative step over a pure-decode batch: checkpoint
+    /// each sequence's cache, draft `draft_len` tokens through the engine's
+    /// drafter, score the carried token plus the drafts in ONE verify call,
+    /// then accept the longest draft prefix the target model reproduces and
+    /// roll the rejected tail's KV back to the checkpoint.
+    fn run_spec(&mut self, idxs: Vec<usize>, draft_len: usize) -> anyhow::Result<()> {
+        let mut ckpts = Vec::with_capacity(idxs.len());
+        let mut drafts = Vec::with_capacity(idxs.len());
+        let mut items: Vec<(u64, Vec<i32>)> = Vec::with_capacity(idxs.len());
+        let max_ctx = self.scheduler.cfg.max_context;
+        for &i in &idxs {
+            let s = &self.running[i];
+            let id = s.id();
+            let ckpt = self
+                .cache
+                .checkpoint(id)
+                .map_err(|e| anyhow::anyhow!("checkpoint seq {id}: {e:?}"))?;
+            let mut history = s.request.prompt.clone();
+            history.extend_from_slice(&s.generated);
+            // near the context limit the draft shrinks so the verify inputs
+            // never push the cache past the largest bucket
+            let ctx = self.cache.tokens_of(id);
+            let cap = max_ctx.saturating_sub(ctx + 1).min(draft_len);
+            let draft = self.engine.draft.draft(&history, cap);
+            let mut inputs = Vec::with_capacity(draft.len() + 1);
+            inputs.push(s.next_input);
+            inputs.extend_from_slice(&draft);
+            ckpts.push(ckpt);
+            drafts.push(draft);
+            items.push((id, inputs));
+        }
+        self.metrics.spec_steps += idxs.len() as u64;
+        self.metrics.decode_batch.push(idxs.len() as f64);
+        let out = self.engine.verify(&mut self.cache, &items)?;
+
+        let mut done: Vec<usize> = Vec::new();
+        for (k, &ridx) in idxs.iter().enumerate() {
+            let draft = &drafts[k];
+            self.metrics.spec_drafted += draft.len() as u64;
+            let mut accepted = 0usize;
+            let mut finished = false;
+            for (pos, logits) in out.logits[k].iter().enumerate() {
+                let s = &mut self.running[ridx];
+                finished = s.accept_logits(logits);
+                if finished {
+                    break;
+                }
+                // the token the target sampled must equal the draft fed at
+                // the next position, or every later verify logit is
+                // off-policy and the walk stops here
+                if pos < draft.len() && s.next_input == draft[pos] {
+                    accepted += 1;
+                } else {
+                    break;
+                }
+            }
+            self.metrics.spec_accepted += accepted as u64;
+            if finished {
+                done.push(ridx);
+            } else {
+                // keep the carried token plus the accepted drafts
+                self.cache
+                    .rollback_to(&ckpts[k], accepted + 1)
+                    .map_err(|e| {
+                        anyhow::anyhow!("rollback seq {}: {e:?}", self.running[ridx].id())
+                    })?;
+            }
+        }
+        done.sort_unstable_by(|a, b| b.cmp(a));
+        for i in done {
+            let seq = self.running.remove(i);
+            self.cache.release(seq.id());
+            self.finish(seq);
+        }
+        Ok(())
+    }
+
     /// Can this rank take a migrated sequence right now? Needs a running
     /// slot and pages for the wire block plus the remaining generation
     /// (full reservation, so an accepted migrant never wedges on pages
@@ -525,7 +631,7 @@ impl Server {
     /// ingested (preempt/resume churn does not move it).
     fn engine_work(&self) -> u64 {
         let s = &self.engine.stats;
-        s.decode_tokens + s.prefill_tokens + s.chunk_tokens
+        s.decode_tokens + s.prefill_tokens + s.chunk_tokens + s.verify_tokens
     }
 
     /// Run until all submitted requests complete; returns wall seconds.

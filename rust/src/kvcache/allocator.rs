@@ -134,6 +134,26 @@ impl PageAllocator {
         Ok(if self.release_page(old)? { Some(old) } else { None })
     }
 
+    /// Truncate `seq`'s table to its first `keep` slots (speculative
+    /// rollback), dropping one reference on each removed page. Removal runs
+    /// tail-first so pages return to the free list in exact reverse
+    /// allocation order — a rolled-back run leaves the free list identical
+    /// to one that never grew. Returns the pages actually freed (rc hit 0).
+    pub fn truncate(&mut self, seq: u64, keep: usize) -> Result<Vec<usize>, AllocError> {
+        let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        if keep >= map.len() {
+            return Ok(Vec::new());
+        }
+        let tail = map.split_off(keep);
+        let mut freed = Vec::new();
+        for p in tail.into_iter().rev() {
+            if self.release_page(p).expect("mapped page must be live") {
+                freed.push(p);
+            }
+        }
+        Ok(freed)
+    }
+
     /// Pages needed to hold `tokens` tokens.
     pub fn pages_for(tokens: usize) -> usize {
         tokens.div_ceil(super::PAGE_TOKENS)

@@ -79,6 +79,28 @@ struct SeqState {
     tokens: usize,
 }
 
+/// A sequence-length snapshot taken before speculative draft tokens are
+/// appended; [`PagedKvCache::rollback_to`] rewinds to it plus the accepted
+/// prefix.
+#[derive(Clone, Copy, Debug)]
+pub struct KvCheckpoint {
+    seq: SeqHandle,
+    tokens: usize,
+    pages: usize,
+}
+
+impl KvCheckpoint {
+    /// The sequence this checkpoint belongs to.
+    pub fn seq(&self) -> SeqHandle {
+        self.seq
+    }
+
+    /// Cache tokens at checkpoint time.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+}
+
 /// A preempted sequence's KV pages, spilled to host memory. Opaque: only
 /// the cache that produced it can map it back.
 pub struct SpilledKv {
@@ -222,6 +244,43 @@ impl PagedKvCache {
         Ok(())
     }
 
+    /// Raw storage bytes of `seq`'s pages in table order — content codes,
+    /// rope, scales, and used counts across every layer, including slots
+    /// past the live token count. The property suite compares this after a
+    /// speculative rollback against a run that never drafted: they must be
+    /// identical down to the erased bytes.
+    pub fn raw_seq_bytes(&self, seq: SeqHandle) -> Vec<u8> {
+        let mut out = Vec::new();
+        let Some(table) = self.alloc.pages_of(seq) else { return out };
+        for &phys in table {
+            match self.pages[phys].as_ref().expect("mapped page") {
+                PageData::Fp8(layers_pages) => {
+                    for page in layers_pages {
+                        out.extend_from_slice(&page.content);
+                        for &r in &page.rope {
+                            out.extend_from_slice(&r.to_le_bytes());
+                        }
+                        for &s in &page.scales {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                        out.extend_from_slice(&(page.used as u64).to_le_bytes());
+                    }
+                }
+                PageData::Bf16(layers_pages) => {
+                    for page in layers_pages {
+                        for &x in &page.content {
+                            out.extend_from_slice(&x.to_le_bytes());
+                        }
+                        for &r in &page.rope {
+                            out.extend_from_slice(&r.to_le_bytes());
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
     // --- prefix sharing ----------------------------------------------------
 
     /// Map the longest published full-page prefix of `prompt` into `seq`'s
@@ -263,6 +322,69 @@ impl PagedKvCache {
         for p in self.trie.insert(prompt_prefix, &pages) {
             self.alloc.retain(p).expect("sequence page is live");
         }
+    }
+
+    // --- checkpoint / rollback (speculative decoding) ----------------------
+
+    /// Snapshot `seq`'s length before speculative draft tokens are
+    /// appended. O(1): only the token count and page-table length are
+    /// recorded — the bytes beyond them are garbage after `rollback_to`
+    /// erases them, so nothing needs copying.
+    pub fn checkpoint(&self, seq: SeqHandle) -> Result<KvCheckpoint, AllocError> {
+        let tokens = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let pages = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.len();
+        Ok(KvCheckpoint { seq, tokens, pages })
+    }
+
+    /// Rewind `seq` to `ckpt.tokens() + keep` tokens, erasing every draft
+    /// token appended past the kept prefix: whole pages beyond the target
+    /// return to the free list in exact reverse allocation order, and the
+    /// reclaimed slots of the surviving partial page are zeroed — the cache
+    /// (bytes, refcounts, free list) is indistinguishable from a run that
+    /// only ever appended the kept tokens.
+    ///
+    /// Pages touched past the checkpoint are always private (`rc == 1`):
+    /// prefix sharing is full-page-only and the append path copies-on-write
+    /// before writing into a shared page, so erasure cannot reach another
+    /// sequence's bytes.
+    pub fn rollback_to(&mut self, ckpt: &KvCheckpoint, keep: usize) -> Result<(), AllocError> {
+        let seq = ckpt.seq;
+        let cur = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let target = ckpt.tokens + keep;
+        assert!(target <= cur, "rollback target {target} beyond live length {cur}");
+        let keep_pages = PageAllocator::pages_for(target).max(ckpt.pages);
+        for p in self.alloc.truncate(seq, keep_pages)? {
+            self.pages[p] = None;
+        }
+        // erase rejected drafts inside the surviving last page
+        let erase_until = cur.min(keep_pages * PAGE_TOKENS);
+        if target < erase_until {
+            let lp = keep_pages - 1;
+            let phys = self.alloc.pages_of(seq).expect("live sequence")[lp];
+            debug_assert_eq!(self.alloc.ref_count(phys), 1, "draft pages are private");
+            let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
+            match self.pages[phys].as_mut().expect("allocated page") {
+                PageData::Fp8(layers_pages) => {
+                    for page in layers_pages {
+                        for t in target..erase_until {
+                            page.clear_token(t % PAGE_TOKENS, d_c, d_r);
+                        }
+                        page.used = target - lp * PAGE_TOKENS;
+                    }
+                }
+                PageData::Bf16(layers_pages) => {
+                    for page in layers_pages {
+                        for t in target..erase_until {
+                            let slot = t % PAGE_TOKENS;
+                            page.content[slot * d_c..(slot + 1) * d_c].fill(0);
+                            page.rope[slot * d_r..(slot + 1) * d_r].fill(0);
+                        }
+                    }
+                }
+            }
+        }
+        self.seqs.get_mut(&seq).unwrap().tokens = target;
+        Ok(())
     }
 
     // --- spill / restore (page-spill preemption) ---------------------------
@@ -1048,6 +1170,60 @@ mod tests {
             all.2.extend_from_slice(&sigma);
         }
         all
+    }
+
+    #[test]
+    fn checkpoint_rollback_matches_never_drafted_run() {
+        for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+            let c = cfg(mode);
+            let mut never = PagedKvCache::new(c);
+            let mut spec = PagedKvCache::new(c);
+            never.register(1);
+            spec.register(1);
+            let mut rng = Rng::new(77);
+            for _ in 0..62 {
+                let (ck, kr) = rand_token(&mut rng, &c);
+                never.append_token(1, &ck, &kr).unwrap();
+                spec.append_token(1, &ck, &kr).unwrap();
+            }
+            // the reference run appends only the 2 accepted tokens; the
+            // spec run drafts 4 (crossing into a second page) and rolls the
+            // rejected 2 back
+            let drafts: Vec<_> = (0..4).map(|_| rand_token(&mut rng, &c)).collect();
+            let ckpt = spec.checkpoint(1).unwrap();
+            assert_eq!((ckpt.seq(), ckpt.tokens()), (1, 62));
+            for (ck, kr) in &drafts[..2] {
+                never.append_token(1, ck, kr).unwrap();
+            }
+            for (ck, kr) in &drafts {
+                spec.append_token(1, ck, kr).unwrap();
+            }
+            assert_eq!(spec.used_pages(), 2);
+            spec.rollback_to(&ckpt, 2).unwrap();
+            assert_eq!(spec.tokens_of(1), 64);
+            assert_eq!(spec.used_pages(), never.used_pages());
+            assert_eq!(spec.free_pages(), never.free_pages());
+            assert_eq!(spec.raw_seq_bytes(1), never.raw_seq_bytes(1));
+            spec.validate().unwrap();
+
+            // growth after rollback lands on the same physical pages with
+            // the same bytes — the draft left no trace
+            let (ck, kr) = rand_token(&mut rng, &c);
+            never.append_token(1, &ck, &kr).unwrap();
+            spec.append_token(1, &ck, &kr).unwrap();
+            assert_eq!(spec.alloc.pages_of(1), never.alloc.pages_of(1));
+            assert_eq!(spec.raw_seq_bytes(1), never.raw_seq_bytes(1));
+
+            // full rejection erases mid-page drafts too
+            let ckpt2 = spec.checkpoint(1).unwrap();
+            for (ck, kr) in &drafts {
+                spec.append_token(1, ck, kr).unwrap();
+            }
+            spec.rollback_to(&ckpt2, 0).unwrap();
+            assert_eq!(spec.tokens_of(1), 65);
+            assert_eq!(spec.raw_seq_bytes(1), never.raw_seq_bytes(1));
+            spec.validate().unwrap();
+        }
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod prefix;
 pub mod transfer;
 
 pub use allocator::PageAllocator;
-pub use cache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle, SpilledKv};
+pub use cache::{CacheConfig, CacheMode, KvCheckpoint, PagedKvCache, SeqHandle, SpilledKv};
 pub use page::{Page, PAGE_TOKENS};
 pub use prefix::PrefixTrie;
 pub use transfer::KvWireBlock;

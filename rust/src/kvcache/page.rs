@@ -66,6 +66,14 @@ impl Page {
         self.write_token(slot, d_c, d_r, &codes, &aligned, scale);
     }
 
+    /// Erase token `slot` back to the fresh-page state (speculative
+    /// rollback); the caller re-derives `used`.
+    pub fn clear_token(&mut self, slot: usize, d_c: usize, d_r: usize) {
+        self.content[slot * d_c..(slot + 1) * d_c].fill(0);
+        self.rope[slot * d_r..(slot + 1) * d_r].fill(0);
+        self.scales[slot] = 0.0;
+    }
+
     /// Dequantize token `slot` into caller buffers (Fused-Fetch-Dequant).
     pub fn fetch_dequant(
         &self,

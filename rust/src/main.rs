@@ -4,6 +4,7 @@
 //!   info                         — artifact/model summary
 //!   serve   [--mode fp8|bf16|disagg] [--kernel snapmla|amla|pcast]
 //!           [--requests N] [--dp N] [--pages N]
+//!           [--spec N [--accept-rate F]]
 //!           [--prefill-ranks N] [--route affinity|shortest]
 //!           [--shared-frac F] [--shared-groups N] [--shared-tokens N]
 //!           [--elastic [--fail-at S] [--fail-rank N] [--no-recover]] …
@@ -13,7 +14,13 @@
 //!                                  ranks into `--prefill-ranks` prefill
 //!                                  ranks migrating KV to the rest; the FP8
 //!                                  attention path runs the `--kernel`
-//!                                  decode variant; `--elastic` kills a
+//!                                  decode variant; `--spec N` drafts N
+//!                                  tokens per sequence per step through the
+//!                                  MTP-style drafter and verifies them in
+//!                                  one engine call, `--accept-rate F`
+//!                                  degrades the drafter's history window to
+//!                                  approximate that acceptance rate;
+//!                                  `--elastic` kills a
 //!                                  rank mid-trace and re-migrates its live
 //!                                  KV to the survivors over the FP8 wire),
 //!                                  print per-rank metrics
@@ -144,8 +151,26 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     };
 
     let kernel = kernel_variant(args)?;
+    let spec = args.usize_or("spec", 0);
+    let accept = args.f64_or("accept-rate", 1.0);
+    anyhow::ensure!(
+        spec == 0 || (accept > 0.0 && accept <= 1.0),
+        "--accept-rate must be in (0, 1], got {accept}"
+    );
     let ranks: anyhow::Result<Vec<Server>> = (0..dp)
-        .map(|_| Ok(Server::new(ModelEngine::auto_with_kernel(&dir, mode, kernel)?, pages)))
+        .map(|_| {
+            let mut b = ModelEngine::builder(mode).kernel(kernel).artifacts(&dir);
+            if spec > 0 && accept < 0.999 {
+                // drafter-fidelity knob: a tighter history window misses
+                // induction pairs, approximating a lower acceptance rate
+                b = b.draft_window(((2.0 / (1.0 - accept)).round() as usize).max(1));
+            }
+            let mut srv = Server::new(b.build()?, pages);
+            if spec > 0 {
+                srv.enable_spec(spec)?;
+            }
+            Ok(srv)
+        })
         .collect();
     let mut cluster = if disagg {
         let prefill_ranks = args.usize_or("prefill-ranks", 1);
@@ -214,8 +239,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         println!("{}", rank.metrics.render(&format!("rank {i} ({mode:?})")));
         let s = &rank.engine.stats;
         println!(
-            "engine: {} decode steps, {} compiles, gather {:.2}s exec {:.2}s append {:.2}s",
-            s.decode_steps, s.compiles, s.gather_s, s.execute_s, s.append_s
+            "engine: {} decode steps, {} verify calls, {} compiles, \
+             gather {:.2}s exec {:.2}s append {:.2}s",
+            s.decode_steps, s.verify_calls, s.compiles, s.gather_s, s.execute_s, s.append_s
         );
     }
     Ok(())

@@ -45,7 +45,7 @@ impl Shape {
 
 /// The single decode entry point: run one decode-attention step under the
 /// selected kernel variant (quantize the operands with the variant's hooks,
-/// then its pipeline). Replaces direct calls to the legacy free functions
+/// then its pipeline). The sole successor of the retired free functions
 /// `pipeline::snapmla_decode` / `pipeline::snapmla_pipeline`.
 pub fn decode(
     variant: VariantKind,

@@ -1,60 +1,17 @@
-//! Legacy SnapMLA pipeline entry points — deprecated shims over the
-//! [`crate::mla::variant`] API (kept for one release).
+//! Retired module — the legacy SnapMLA pipeline entry points are gone.
 //!
-//! The exact Algorithm-1 implementation (including the Appendix-E
-//! dual-warp-group ordering study) moved verbatim into `mla::variant`,
-//! where it is the [`crate::mla::variant::SnapMla`] kernel variant. New code
-//! should call [`crate::mla::decode`] with a [`crate::mla::VariantKind`], or
-//! go through [`crate::mla::variant::KernelVariant`] for the staged
-//! (build-cache / quantize-query / pipeline) form. The shims here delegate
-//! to the exact same implementation, so they remain byte-identical to the
-//! pre-refactor pipeline (pinned by `tests/prop_variants.rs`).
-
-use super::variant::{self, SnapMla};
-use super::{Query, Shape};
-
-pub use super::variant::{PipelineOut, PvOrder, QuantCache, BLOCK_N};
-
-/// Fused-K-Append over a full cache: per-token quantize + domain-align.
-#[deprecated(since = "0.6.0", note = "use KernelVariant::build_cache (mla::variant)")]
-pub fn build_quant_cache(shape: &Shape, k_c: &[f32], k_r: &[f32], n: usize) -> QuantCache {
-    variant::snapmla_build_cache(shape, k_c, k_r, n)
-}
-
-/// Fused-Q-Quant: per-head-row quantize + align. Returns (q_c_q, sigma_q, q_r_al).
-#[deprecated(since = "0.6.0", note = "use KernelVariant::quantize_query (mla::variant)")]
-pub fn quantize_query(shape: &Shape, q: &Query) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let qq = variant::snapmla_quantize_query(shape, q);
-    (qq.q_c_q, qq.sigma_q, qq.q_r_al)
-}
-
-/// Run the SnapMLA pipeline for one decode step.
-#[deprecated(since = "0.6.0", note = "use KernelVariant::pipeline (mla::variant)")]
-#[allow(clippy::too_many_arguments)]
-pub fn snapmla_pipeline(
-    shape: &Shape,
-    q_c_q: &[f32],
-    sigma_q: &[f32],
-    q_r_al: &[f32],
-    cache: &QuantCache,
-    length: usize,
-    sm_scale: f32,
-    order: PvOrder,
-) -> PipelineOut {
-    variant::snapmla_pipeline_impl(shape, q_c_q, sigma_q, q_r_al, cache, length, sm_scale, order)
-}
-
-/// Convenience: full SnapMLA decode from f32 operands (quantize + pipeline).
-#[deprecated(since = "0.6.0", note = "use mla::decode(VariantKind::SnapMla, ...)")]
-pub fn snapmla_decode(
-    shape: &Shape,
-    q: &Query,
-    k_c: &[f32],
-    k_r: &[f32],
-    length: usize,
-    sm_scale: f32,
-    order: PvOrder,
-) -> PipelineOut {
-    use super::variant::KernelVariant;
-    SnapMla::with_order(order).decode(shape, q, k_c, k_r, length, sm_scale)
-}
+//! The deprecated 0.6.0 shims (`build_quant_cache`, `quantize_query`,
+//! `snapmla_pipeline`, `snapmla_decode`) lived here for one release and have
+//! been removed. The exact Algorithm-1 implementation (including the
+//! Appendix-E dual-warp-group ordering study) lives in [`crate::mla::variant`]
+//! as the [`crate::mla::variant::SnapMla`] kernel variant:
+//!
+//! * one-shot decode — [`crate::mla::decode`] with a
+//!   [`crate::mla::VariantKind`];
+//! * staged form — [`crate::mla::variant::KernelVariant`]'s
+//!   `build_cache` / `quantize_query` / `pipeline` methods, or the free
+//!   functions [`crate::mla::variant::snapmla_build_cache`] /
+//!   [`crate::mla::variant::snapmla_quantize_query`].
+//!
+//! The staged-vs-one-shot byte identity the shims used to pin is still
+//! enforced by `tests/prop_variants.rs`.

@@ -5,9 +5,9 @@
 //! model, so every future kernel paper is a ~200-line variant instead of a
 //! fork of the pipeline. Three variants ship:
 //!
-//! * [`SnapMla`] — the paper's Algorithm 1 (this module now owns the exact
-//!   implementation that used to live in `mla::pipeline`; the legacy free
-//!   functions remain as deprecated shims). Per-64-block online softmax,
+//! * [`SnapMla`] — the paper's Algorithm 1 (this module owns the exact
+//!   implementation; the retired `mla::pipeline` shims used to delegate
+//!   here). Per-64-block online softmax,
 //!   scale fusion P' = P ⊙ S_V, block-wise dynamic P quantization, and the
 //!   Appendix-E [`PvOrder`] accumulation-schedule study.
 //! * [`Amla`] — AMLA-style exponent-ADD rescaling (arXiv 2509.25224): the
@@ -383,7 +383,7 @@ struct BlockP {
 }
 
 /// The exact Algorithm-1 implementation (moved verbatim from the legacy
-/// `pipeline::snapmla_pipeline`; `mla::pipeline` shims delegate here).
+/// `pipeline::snapmla_pipeline`, whose deprecated shim is now removed).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn snapmla_pipeline_impl(
     shape: &Shape,

@@ -306,6 +306,76 @@ pub fn mixed_step_s(
     base + (chunk_compute - hidden).max(0.0) + tp_comm_s(gpu, model, cfg, c) + gpu.launch_s
 }
 
+/// Layers the deterministic MTP draft head runs (DeepSeek ships one
+/// next-token-prediction head; the draft pass streams this fraction of the
+/// expert weights per drafted token).
+pub const SPEC_DRAFT_LAYERS: usize = 1;
+
+/// One **speculative** step: the decode batch drafts `draft_len` tokens per
+/// sequence through the MTP head, then one verify pass scores all drafted
+/// positions. Verify behaves like a small-batch prefill riding the decode
+/// step (cf. the hardware-centric MLA analysis): its `batch * draft_len`
+/// extra query rows add GEMM + attention compute that hides inside the
+/// decode weight-streaming phase exactly like a mixed-step chunk — only the
+/// excess extends the step. The draft head pays `draft_len` sequential
+/// single-layer passes (attention + its weight fraction + its share of the
+/// TP all-reduce).
+pub fn spec_step_s(
+    gpu: &GpuSpec,
+    model: &ModelSpec,
+    cfg: &DeploymentConfig,
+    batch: usize,
+    context: usize,
+    draft_len: usize,
+    kind: KernelKind,
+) -> f64 {
+    if batch == 0 {
+        return f64::INFINITY;
+    }
+    let peak_tflops = match kind {
+        KernelKind::SnapMlaFp8 | KernelKind::AmlaFp8 | KernelKind::PCastFp8 => gpu.fp8_tflops,
+        KernelKind::FlashMlaBf16 => gpu.bf16_tflops,
+    };
+    let eff = peak_tflops * 1e12 * gpu.peak_util;
+    let base = decode_step_s(gpu, model, cfg, batch, context, kind);
+    // --- verify: batch*draft_len extra rows against the full context -------
+    let extra = (batch * draft_len) as f64;
+    let gemm_x = 2.0 * model.active_params * extra / cfg.gpus() as f64 / eff;
+    let shape_x = KernelShape {
+        batch,
+        heads: model.heads / cfg.tp,
+        t_q: draft_len,
+        seq: context,
+        d_c: model.d_c,
+        d_r: model.d_r,
+    };
+    let attn_x = kernel_time_s(gpu, &shape_x, kind) * model.n_layers as f64;
+    let weights_mem =
+        expert_stream_read(model, batch as f64) / cfg.gpus() as f64 / gpu.hbm_bw;
+    let gemm_d = 2.0 * model.active_params * batch as f64 / cfg.gpus() as f64 / eff;
+    let hidden = (weights_mem - gemm_d).max(0.0);
+    let verify = (gemm_x + attn_x - hidden).max(0.0);
+    // --- draft: draft_len sequential MTP-head passes -----------------------
+    let frac = SPEC_DRAFT_LAYERS as f64 / model.n_layers as f64;
+    let shape_d = KernelShape {
+        batch,
+        heads: model.heads / cfg.tp,
+        t_q: 1,
+        seq: context,
+        d_c: model.d_c,
+        d_r: model.d_r,
+    };
+    let d_attn = kernel_time_s(gpu, &shape_d, kind) * SPEC_DRAFT_LAYERS as f64;
+    let d_weights =
+        expert_stream_read(model, batch as f64) * frac / cfg.gpus() as f64 / gpu.hbm_bw;
+    let d_gemm = 2.0 * model.active_params * frac * batch as f64 / cfg.gpus() as f64 / eff;
+    let d_launch = 2.0 * SPEC_DRAFT_LAYERS as f64 * gpu.launch_s;
+    let draft = draft_len as f64
+        * (d_attn + d_weights.max(d_gemm) + tp_comm_s(gpu, model, cfg, batch as f64) * frac
+            + d_launch);
+    base + verify + draft + tp_comm_s(gpu, model, cfg, extra) + gpu.launch_s
+}
+
 /// Host-side page-spill (or restore) time for a preempted sequence:
 /// moving `tokens` of KV at HBM bandwidth plus a fixed launch pair.
 pub fn spill_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {

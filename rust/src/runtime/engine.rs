@@ -16,12 +16,13 @@ use super::backend::{BufId, ExecBackend, ExecId};
 use super::manifest::Manifest;
 use super::sim::{sim_manifest, sim_weights, SimBackend};
 use super::sim_model::SimSpec;
+use super::spec::DraftModel;
 use super::weights::Weights;
 use crate::anyhow;
 use crate::kvcache::{CacheConfig, CacheMode, PagedKvCache, SeqHandle};
 use crate::mla::VariantKind;
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 #[derive(Clone, Debug, Default)]
@@ -32,6 +33,8 @@ pub struct EngineStats {
     pub prefill_tokens: u64,
     pub mixed_steps: u64,
     pub chunk_tokens: u64,
+    pub verify_calls: u64,
+    pub verify_tokens: u64,
     pub compiles: u64,
     pub gather_s: f64,
     pub execute_s: f64,
@@ -46,6 +49,89 @@ pub struct ModelEngine {
     weight_bufs: Vec<BufId>,
     execs: BTreeMap<String, ExecId>,
     pub stats: EngineStats,
+    /// Speculative drafter this engine proposes tokens with (configured via
+    /// [`EngineBuilder::draft_window`]; full-fidelity MTP by default).
+    pub draft: DraftModel,
+}
+
+/// Builder unifying engine construction: execution backend (sim vs PJRT
+/// artifacts), decode-kernel variant, and speculative-draft options in one
+/// place. [`ModelEngine::sim`] and [`ModelEngine::auto`] are thin delegates.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    mode: CacheMode,
+    variant: VariantKind,
+    artifacts: Option<PathBuf>,
+    draft_window: Option<usize>,
+}
+
+impl EngineBuilder {
+    pub fn new(mode: CacheMode) -> EngineBuilder {
+        EngineBuilder {
+            mode,
+            variant: VariantKind::SnapMla,
+            artifacts: None,
+            draft_window: None,
+        }
+    }
+
+    /// Decode-kernel variant for the FP8 attention path (the CLI's
+    /// `--kernel snapmla|amla|pcast`). Sim backend only; the PJRT artifact
+    /// path compiles just the SnapMLA kernel and rejects other variants.
+    pub fn kernel(mut self, variant: VariantKind) -> EngineBuilder {
+        self.variant = variant;
+        self
+    }
+
+    /// Prefer AOT artifacts from this dir: the PJRT backend is used when the
+    /// `pjrt` feature is on AND the dir holds a compiled manifest; otherwise
+    /// the builder falls back to the sim backend.
+    pub fn artifacts(mut self, dir: &Path) -> EngineBuilder {
+        self.artifacts = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Bound the speculative drafter's history window (fidelity knob for
+    /// `serve --spec`). Unset = full-context MTP-grade drafting.
+    pub fn draft_window(mut self, window: usize) -> EngineBuilder {
+        self.draft_window = Some(window);
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<ModelEngine> {
+        #[allow(unused_mut)]
+        let mut use_pjrt = false;
+        #[cfg(feature = "pjrt")]
+        if let Some(dir) = &self.artifacts {
+            use_pjrt = dir.join("manifest.json").exists();
+        }
+        let mut engine = if use_pjrt {
+            anyhow::ensure!(
+                self.variant == VariantKind::SnapMla,
+                "the PJRT artifact path supports only --kernel snapmla"
+            );
+            #[cfg(feature = "pjrt")]
+            {
+                ModelEngine::load(self.artifacts.as_deref().unwrap(), self.mode)?
+            }
+            #[cfg(not(feature = "pjrt"))]
+            unreachable!()
+        } else {
+            let spec = SimSpec::small();
+            let manifest = sim_manifest(&spec);
+            let weights = sim_weights(&spec);
+            ModelEngine::with_backend(
+                Box::new(SimBackend::with_variant(spec, self.variant)),
+                manifest,
+                &weights,
+                self.mode,
+            )?
+        };
+        if let Some(w) = self.draft_window {
+            engine.draft = DraftModel::with_window(w);
+        }
+        Ok(engine)
+    }
 }
 
 #[derive(Debug)]
@@ -66,6 +152,14 @@ pub struct MixedResult {
     pub chunk_logits: Vec<Vec<f32>>,
     /// per decode item: next-token logits [vocab]
     pub decode_logits: Vec<Vec<f32>>,
+}
+
+#[derive(Debug)]
+pub struct VerifyResult {
+    /// per item: logits at EVERY advanced position [inputs][vocab] — position
+    /// k scores the token following input k, so one call judges a whole
+    /// draft run
+    pub logits: Vec<Vec<Vec<f32>>>,
 }
 
 impl ModelEngine {
@@ -96,27 +190,19 @@ impl ModelEngine {
             weight_bufs,
             execs: BTreeMap::new(),
             stats: EngineStats::default(),
+            draft: DraftModel::default(),
         })
+    }
+
+    /// Configure an engine: backend, kernel variant, draft options.
+    pub fn builder(mode: CacheMode) -> EngineBuilder {
+        EngineBuilder::new(mode)
     }
 
     /// The offline engine: pure-Rust [`SimBackend`] over the deterministic
     /// hand-constructed induction model. Needs no artifacts, no deps.
     pub fn sim(mode: CacheMode) -> anyhow::Result<ModelEngine> {
-        ModelEngine::sim_with_kernel(mode, VariantKind::SnapMla)
-    }
-
-    /// The sim engine with an explicit decode-kernel variant for the FP8
-    /// attention path (the CLI's `--kernel snapmla|amla|pcast`).
-    pub fn sim_with_kernel(mode: CacheMode, variant: VariantKind) -> anyhow::Result<ModelEngine> {
-        let spec = SimSpec::small();
-        let manifest = sim_manifest(&spec);
-        let weights = sim_weights(&spec);
-        ModelEngine::with_backend(
-            Box::new(SimBackend::with_variant(spec, variant)),
-            manifest,
-            &weights,
-            mode,
-        )
+        EngineBuilder::new(mode).build()
     }
 
     /// Load manifest + weights from an AOT artifacts dir and upload weights
@@ -132,28 +218,7 @@ impl ModelEngine {
     /// Backend auto-selection: the PJRT path when the `pjrt` feature is on
     /// AND `artifacts_dir` holds compiled artifacts; the sim otherwise.
     pub fn auto(artifacts_dir: &Path, mode: CacheMode) -> anyhow::Result<ModelEngine> {
-        ModelEngine::auto_with_kernel(artifacts_dir, mode, VariantKind::SnapMla)
-    }
-
-    /// [`ModelEngine::auto`] with an explicit decode-kernel variant. The
-    /// PJRT path compiles only the SnapMLA kernel, so a non-default variant
-    /// there is rejected rather than silently ignored.
-    pub fn auto_with_kernel(
-        artifacts_dir: &Path,
-        mode: CacheMode,
-        variant: VariantKind,
-    ) -> anyhow::Result<ModelEngine> {
-        #[cfg(feature = "pjrt")]
-        if artifacts_dir.join("manifest.json").exists() {
-            anyhow::ensure!(
-                variant == VariantKind::SnapMla,
-                "the PJRT artifact path supports only --kernel snapmla"
-            );
-            return ModelEngine::load(artifacts_dir, mode);
-        }
-        #[cfg(not(feature = "pjrt"))]
-        let _ = artifacts_dir;
-        ModelEngine::sim_with_kernel(mode, variant)
+        EngineBuilder::new(mode).artifacts(artifacts_dir).build()
     }
 
     /// The execution backend (kernel benches stage their own buffers).
@@ -492,6 +557,146 @@ impl ModelEngine {
         Ok(MixedResult { chunk_logits: all_logits, decode_logits })
     }
 
+    /// One speculative verification step: `items` = (sequence, verify
+    /// inputs) where the inputs are the carried next token followed by the
+    /// draft proposals. All inputs advance the cache (the caller rolls back
+    /// rejected tokens via [`PagedKvCache::rollback_to`]); logits come back
+    /// at EVERY advanced position, so one call scores the whole draft run.
+    pub fn verify(
+        &mut self,
+        cache: &mut PagedKvCache,
+        items: &[(SeqHandle, Vec<i32>)],
+    ) -> anyhow::Result<VerifyResult> {
+        anyhow::ensure!(!items.is_empty(), "empty verify batch");
+        anyhow::ensure!(items.iter().all(|(_, t)| !t.is_empty()), "verify item with no inputs");
+        let m = &self.manifest.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let n_items = items.len();
+        let max_ctx = items
+            .iter()
+            .map(|(s, t)| cache.tokens_of(*s) + t.len())
+            .max()
+            .unwrap();
+        let max_run = items.iter().map(|(_, t)| t.len()).max().unwrap();
+        let bucket = self
+            .manifest
+            .verify_bucket(self.mode_str, n_items, max_ctx)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no verify bucket for {n_items} items ctx {max_ctx} ({})",
+                    self.mode_str
+                )
+            })?;
+        let (bb, ss, cc, name) = (bucket.batch, bucket.seq, bucket.t_q, bucket.name.clone());
+        anyhow::ensure!(max_run <= cc, "verify run {max_run} exceeds the verify bucket cap {cc}");
+        let exec = self.ensure_compiled(&name)?;
+
+        // ---- stage inputs ---------------------------------------------------
+        let t0 = Instant::now();
+        let mut token_ids = vec![0i32; bb * cc];
+        let mut lens = vec![0i32; bb]; // padding rows advance 0 tokens
+        let mut positions = vec![0i32; bb];
+        for (i, (seq, toks)) in items.iter().enumerate() {
+            token_ids[i * cc..i * cc + toks.len()].copy_from_slice(toks);
+            lens[i] = toks.len() as i32;
+            positions[i] = cache.tokens_of(*seq) as i32;
+        }
+        let fp8 = self.mode == CacheMode::Fp8;
+        let mut k_c = vec![0.0f32; l * bb * ss * d_c];
+        let mut k_r = vec![0.0f32; l * bb * ss * d_r];
+        let mut sigma = vec![1.0f32; l * bb * ss];
+        for (i, (seq, _)) in items.iter().enumerate() {
+            for layer in 0..l {
+                let off = (layer * bb + i) * ss;
+                cache.gather_kernel_view(
+                    *seq,
+                    layer,
+                    ss,
+                    &mut k_c[off * d_c..(off + ss) * d_c],
+                    &mut k_r[off * d_r..(off + ss) * d_r],
+                    &mut sigma[off..off + ss],
+                );
+            }
+        }
+        let mut step_bufs: Vec<BufId> = Vec::new();
+        let staged = {
+            let backend = self.backend.as_mut();
+            let bufs = &mut step_bufs;
+            let mut stage = || -> anyhow::Result<()> {
+                bufs.push(backend.upload_i32(&token_ids, &[bb, cc])?);
+                bufs.push(backend.upload_i32(&lens, &[bb])?);
+                bufs.push(backend.upload_i32(&positions, &[bb])?);
+                bufs.push(backend.upload_f32(&k_c, &[l, bb, ss, d_c])?);
+                bufs.push(backend.upload_f32(&k_r, &[l, bb, ss, d_r])?);
+                if fp8 {
+                    bufs.push(backend.upload_f32(&sigma, &[l, bb, ss, 1])?);
+                }
+                Ok(())
+            };
+            stage()
+        };
+        if let Err(e) = staged {
+            for id in step_bufs {
+                self.backend.free(id);
+            }
+            return Err(e);
+        }
+        self.stats.gather_s += t0.elapsed().as_secs_f64();
+
+        // ---- execute --------------------------------------------------------
+        let t1 = Instant::now();
+        let mut args: Vec<BufId> = self.weight_bufs.clone();
+        args.extend(&step_bufs);
+        let result = self.backend.execute(exec, &args);
+        for id in step_bufs {
+            self.backend.free(id);
+        }
+        let outs = result?;
+        self.stats.execute_s += t1.elapsed().as_secs_f64();
+        anyhow::ensure!(outs.len() == if fp8 { 4 } else { 3 }, "bad output arity");
+
+        // ---- append new KV entries + collect per-position logits ------------
+        let t2 = Instant::now();
+        let logits_flat = &outs[0]; // [bb, cc, vocab]
+        let e_kc = &outs[1]; // [l, bb, cc, d_c]
+        let e_kr = &outs[2]; // [l, bb, cc, d_r]
+        let mut all_logits = Vec::with_capacity(n_items);
+        let mut kc_tok = vec![0.0f32; l * d_c];
+        let mut kr_tok = vec![0.0f32; l * d_r];
+        for (i, (seq, toks)) in items.iter().enumerate() {
+            let mut item_logits = Vec::with_capacity(toks.len());
+            for k in 0..toks.len() {
+                for layer in 0..l {
+                    let src = ((layer * bb + i) * cc + k) * d_c;
+                    kc_tok[layer * d_c..(layer + 1) * d_c]
+                        .copy_from_slice(&e_kc[src..src + d_c]);
+                    let src = ((layer * bb + i) * cc + k) * d_r;
+                    kr_tok[layer * d_r..(layer + 1) * d_r]
+                        .copy_from_slice(&e_kr[src..src + d_r]);
+                }
+                if fp8 {
+                    let e_sg = &outs[3]; // [l, bb, cc]
+                    let sg_tok: Vec<f32> =
+                        (0..l).map(|layer| e_sg[(layer * bb + i) * cc + k]).collect();
+                    cache
+                        .append_prequantized(*seq, &kc_tok, &kr_tok, &sg_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                } else {
+                    cache
+                        .append_token(*seq, &kc_tok, &kr_tok)
+                        .map_err(|e| anyhow::anyhow!("cache append: {e:?}"))?;
+                }
+                let off = (i * cc + k) * vocab;
+                item_logits.push(logits_flat[off..off + vocab].to_vec());
+            }
+            self.stats.verify_tokens += toks.len() as u64;
+            all_logits.push(item_logits);
+        }
+        self.stats.append_s += t2.elapsed().as_secs_f64();
+        self.stats.verify_calls += 1;
+        Ok(VerifyResult { logits: all_logits })
+    }
+
     /// Prefill `items` = (sequence, prompt tokens). Appends all prompt KV
     /// entries to `cache`; returns last-token logits per item.
     pub fn prefill(
@@ -741,7 +946,7 @@ mod tests {
         // the hand-constructed circuit's logit margins (>2 nats) dominate
         // every variant's quantization noise, so greedy decode agrees
         for variant in VariantKind::ALL {
-            let mut eng = ModelEngine::sim_with_kernel(CacheMode::Fp8, variant).unwrap();
+            let mut eng = EngineBuilder::new(CacheMode::Fp8).kernel(variant).build().unwrap();
             let mut cache = PagedKvCache::new(eng.cache_config(8));
             cache.register(1);
             eng.prefill(&mut cache, &[(1, vec![1, 70, 71, 70])]).unwrap();
@@ -754,6 +959,40 @@ mod tests {
                 .0;
             assert_eq!(best, 70, "{variant:?}: induction should predict the successor");
         }
+    }
+
+    #[test]
+    fn builder_configures_draft_window() {
+        let history = [70, 71, 9, 70];
+        let eng = ModelEngine::builder(CacheMode::Fp8).draft_window(2).build().unwrap();
+        assert_eq!(eng.draft.draft(&history, 1), vec![70]); // window misses the pair
+        let eng = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        assert_eq!(eng.draft.draft(&history, 1), vec![71]); // full MTP recalls it
+    }
+
+    #[test]
+    fn verify_matches_stepwise_decode() {
+        // one verify call over [next, d0, d1] must equal three decode steps:
+        // same per-position logits, same final cache state
+        let inputs = vec![70i32, 71, 70];
+        let mut eng_v = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache_v = PagedKvCache::new(eng_v.cache_config(8));
+        cache_v.register(1);
+        eng_v.prefill(&mut cache_v, &[(1, vec![1, 70, 71, 70])]).unwrap();
+        let v = eng_v.verify(&mut cache_v, &[(1, inputs.clone())]).unwrap();
+        assert_eq!(v.logits[0].len(), 3);
+
+        let mut eng_d = ModelEngine::sim(CacheMode::Fp8).unwrap();
+        let mut cache_d = PagedKvCache::new(eng_d.cache_config(8));
+        cache_d.register(1);
+        eng_d.prefill(&mut cache_d, &[(1, vec![1, 70, 71, 70])]).unwrap();
+        for (k, &tok) in inputs.iter().enumerate() {
+            let d = eng_d.decode(&mut cache_d, &[(1, tok)]).unwrap();
+            assert_eq!(v.logits[0][k], d.logits[0], "position {k}");
+        }
+        assert_eq!(cache_v.tokens_of(1), cache_d.tokens_of(1));
+        assert_eq!(eng_v.stats.verify_calls, 1);
+        assert_eq!(eng_v.stats.verify_tokens, 3);
     }
 
     #[test]

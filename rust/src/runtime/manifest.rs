@@ -28,6 +28,10 @@ pub enum ArtifactKind {
     /// one step over interleaved prefill-chunk and decode items: `batch`
     /// items, each advancing 1..=`t_q` tokens against a `seq`-long cache
     Mixed,
+    /// speculative verification: like `Mixed`, but emits logits at EVERY
+    /// advanced position (`t_q` = max draft inputs per item), so one call
+    /// scores a whole draft run
+    Verify,
     Kernel,
 }
 
@@ -91,6 +95,7 @@ impl Manifest {
                 Some("decode") => ArtifactKind::Decode,
                 Some("prefill") => ArtifactKind::Prefill,
                 Some("mixed") => ArtifactKind::Mixed,
+                Some("verify") => ArtifactKind::Verify,
                 Some("kernel") => ArtifactKind::Kernel,
                 other => anyhow::bail!("artifact {name}: bad kind {other:?}"),
             };
@@ -158,6 +163,21 @@ impl Manifest {
             .values()
             .filter(|a| {
                 a.kind == ArtifactKind::Mixed
+                    && a.mode == mode
+                    && a.batch >= items
+                    && a.seq >= context
+            })
+            .min_by_key(|a| (a.seq, a.batch))
+    }
+
+    /// Smallest verify bucket covering (items, context) in `mode`.
+    /// `context` must cover every item's cache length *after* its draft
+    /// inputs; each item may advance at most `t_q` tokens.
+    pub fn verify_bucket(&self, mode: &str, items: usize, context: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .filter(|a| {
+                a.kind == ArtifactKind::Verify
                     && a.mode == mode
                     && a.batch >= items
                     && a.seq >= context

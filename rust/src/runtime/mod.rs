@@ -8,6 +8,8 @@
 //! * [`sim`]      — offline pure-Rust backend (reference MLA math + bit-exact
 //!   FP8 quantizers over a deterministic induction model)
 //! * [`sim_model`] — the sim model's constructed weights + forward pass
+//! * [`spec`]     — deterministic induction-rule draft model for
+//!   speculative decoding (drafts verified via [`engine::ModelEngine::verify`])
 //! * `client` (feature `pjrt`) — PJRT backend executing AOT HLO artifacts
 //! * [`engine`]   — bucketized decode/prefill execution over the paged cache
 
@@ -18,13 +20,17 @@ pub mod engine;
 pub mod manifest;
 pub mod sim;
 pub mod sim_model;
+pub mod spec;
 pub mod weights;
 
 pub use backend::{BufId, ExecBackend, ExecId};
 #[cfg(feature = "pjrt")]
 pub use client::{PjrtBackend, Runtime};
-pub use engine::{DecodeResult, KernelArgs, MixedResult, ModelEngine, PrefillResult};
+pub use engine::{
+    DecodeResult, EngineBuilder, KernelArgs, MixedResult, ModelEngine, PrefillResult, VerifyResult,
+};
 pub use manifest::{ArtifactInfo, ArtifactKind, Manifest, ModelMeta};
-pub use sim::{SimBackend, MIXED_CHUNK};
+pub use sim::{SimBackend, MIXED_CHUNK, VERIFY_CHUNK};
 pub use sim_model::SimSpec;
+pub use spec::DraftModel;
 pub use weights::Weights;

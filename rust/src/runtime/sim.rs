@@ -35,6 +35,11 @@ const PREFILL_BUCKETS: [(usize, usize); 6] =
 /// item advances at most `MIXED_CHUNK` tokens (one KV page) per step.
 const MIXED_BUCKETS: [(usize, usize); 8] = DECODE_BUCKETS;
 pub const MIXED_CHUNK: usize = 64;
+/// Speculative-verify buckets mirror the decode shapes; each item feeds at
+/// most `VERIFY_CHUNK` inputs (the carried token + up to 7 draft tokens)
+/// and gets logits back at every position.
+const VERIFY_BUCKETS: [(usize, usize); 8] = DECODE_BUCKETS;
+pub const VERIFY_CHUNK: usize = 8;
 
 /// Paper-shape kernel sweep (heads, t_q, seq) — mirrors `KERNEL_SWEEP`.
 fn kernel_sweep() -> Vec<(usize, usize, usize)> {
@@ -112,6 +117,21 @@ pub fn sim_manifest(spec: &SimSpec) -> Manifest {
                     seq,
                     heads: spec.n_heads,
                     t_q: MIXED_CHUNK,
+                },
+            );
+        }
+        for (batch, seq) in VERIFY_BUCKETS {
+            let name = format!("model_{mode}_verify_b{batch}_s{seq}");
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name,
+                    kind: ArtifactKind::Verify,
+                    mode: mode.to_string(),
+                    batch,
+                    seq,
+                    heads: spec.n_heads,
+                    t_q: VERIFY_CHUNK,
                 },
             );
         }
@@ -461,6 +481,109 @@ impl SimBackend {
         Ok(outs)
     }
 
+    /// Speculative verify: the mixed-step math with one difference — logits
+    /// come back at EVERY advanced position (`[bb, cc, vocab]`, padded rows
+    /// zeroed), so one call scores a carried token plus a whole draft run.
+    fn exec_verify(&self, exec: &SimExec, args: &[BufId]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let m = &exec.model;
+        let (l, d_c, d_r, vocab) = (m.n_layers, m.d_c, m.d_r, m.vocab);
+        let (bb, ss, cc) = (exec.info.batch, exec.info.seq, exec.info.t_q);
+        let fp8 = exec.info.mode == "fp8";
+        let nw = exec.param_order.len();
+        anyhow::ensure!(
+            args.len() == nw + 5 + usize::from(fp8),
+            "sim verify {}: got {} args, want {}",
+            exec.info.name,
+            args.len(),
+            nw + 5 + usize::from(fp8)
+        );
+        let named = self.named_weights(exec, args)?;
+        let params = SimParams::resolve(m, &named)?;
+
+        let (tok, _) = self.i32_buf(args[nw])?;
+        let (lens, _) = self.i32_buf(args[nw + 1])?;
+        let (pos, _) = self.i32_buf(args[nw + 2])?;
+        let (k_c, _) = self.f32_buf(args[nw + 3])?;
+        let (k_r, _) = self.f32_buf(args[nw + 4])?;
+        let sigma = if fp8 { Some(self.f32_buf(args[nw + 5])?.0) } else { None };
+        anyhow::ensure!(
+            tok.len() == bb * cc && lens.len() == bb && pos.len() == bb,
+            "sim verify: bad tok/len/pos arity"
+        );
+        anyhow::ensure!(
+            k_c.len() == l * bb * ss * d_c && k_r.len() == l * bb * ss * d_r,
+            "sim verify: bad cache view size"
+        );
+
+        let mut logits = vec![0.0f32; bb * cc * vocab];
+        let mut new_kc = vec![0.0f32; l * bb * cc * d_c];
+        let mut new_kr = vec![0.0f32; l * bb * cc * d_r];
+        let mut new_sg = vec![1.0f32; l * bb * cc];
+        for b in 0..bb {
+            let len = (lens[b].max(0) as usize).min(cc);
+            if len == 0 {
+                continue; // padding row
+            }
+            let start = pos[b].max(0) as usize;
+            anyhow::ensure!(
+                start + len <= ss,
+                "sim verify: item {b} reaches {} past bucket {ss}",
+                start + len
+            );
+            let mut cache = DecodeCache {
+                content: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_c[off * d_c..(off + ss) * d_c].to_vec()
+                    })
+                    .collect(),
+                rope: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        k_r[off * d_r..(off + ss) * d_r].to_vec()
+                    })
+                    .collect(),
+                sigma: (0..l)
+                    .map(|li| {
+                        let off = (li * bb + b) * ss;
+                        match sigma {
+                            Some(sg) => sg[off..off + ss].to_vec(),
+                            None => vec![1.0; ss],
+                        }
+                    })
+                    .collect(),
+            };
+            for k in 0..len {
+                let out = sim_model::decode_one(
+                    m,
+                    &params,
+                    self.spec.rope_base,
+                    fp8,
+                    self.variant,
+                    tok[b * cc + k],
+                    start + k,
+                    &mut cache,
+                );
+                for li in 0..l {
+                    let dst = ((li * bb + b) * cc + k) * d_c;
+                    new_kc[dst..dst + d_c]
+                        .copy_from_slice(&out.new_kc[li * d_c..(li + 1) * d_c]);
+                    let dst = ((li * bb + b) * cc + k) * d_r;
+                    new_kr[dst..dst + d_r]
+                        .copy_from_slice(&out.new_kr[li * d_r..(li + 1) * d_r]);
+                    new_sg[(li * bb + b) * cc + k] = out.new_sg[li];
+                }
+                let dst = (b * cc + k) * vocab;
+                logits[dst..dst + vocab].copy_from_slice(&out.logits);
+            }
+        }
+        let mut outs = vec![logits, new_kc, new_kr];
+        if fp8 {
+            outs.push(new_sg);
+        }
+        Ok(outs)
+    }
+
     /// FP8 kernel artifact: `kind`'s decode-attention pipeline on paper-shape
     /// operands (already quantized/aligned by the caller). All FP8 variants
     /// share the 7-arg calling convention — they consume the same cache.
@@ -588,6 +711,7 @@ impl ExecBackend for SimBackend {
             ArtifactKind::Decode => self.exec_decode(se, args),
             ArtifactKind::Prefill => self.exec_prefill(se, args),
             ArtifactKind::Mixed => self.exec_mixed(se, args),
+            ArtifactKind::Verify => self.exec_verify(se, args),
             ArtifactKind::Kernel => match se.info.mode.as_str() {
                 "flashmla" => self.exec_kernel_flashmla(args),
                 other => match VariantKind::parse(other) {
@@ -615,6 +739,9 @@ mod tests {
         let mx = m.mixed_bucket("fp8", 3, 400).expect("mixed bucket");
         assert_eq!((mx.batch, mx.seq, mx.t_q), (4, 512, MIXED_CHUNK));
         assert!(m.mixed_bucket("fp8", 9, 512).is_none());
+        let vf = m.verify_bucket("fp8", 3, 400).expect("verify bucket");
+        assert_eq!((vf.batch, vf.seq, vf.t_q), (4, 512, VERIFY_CHUNK));
+        assert!(m.verify_bucket("fp8", 9, 512).is_none());
         assert_eq!(m.max_context("fp8"), 2048);
         for h in [16, 32, 64, 128] {
             for kernel in ["snapmla", "amla", "pcast", "flashmla"] {

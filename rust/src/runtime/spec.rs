@@ -1,0 +1,99 @@
+//! The speculative draft model.
+//!
+//! A deterministic, weight-free drafter playing the MTP-head role: it
+//! proposes `draft_len` continuation tokens from the token history alone,
+//! using the same induction rule the sim model's constructed circuit
+//! implements — predict the token that followed the most recent previous
+//! occurrence of the current token, falling back to repeating it. On
+//! induction-friendly streams the target model's greedy argmax agrees with
+//! the drafter almost always, so verification accepts long runs; the
+//! `window` knob truncates the history the drafter sees, degrading its
+//! fidelity (and the acceptance rate) in a controlled, deterministic way.
+
+/// Proposes draft tokens for speculative decoding.
+#[derive(Clone, Copy, Debug)]
+pub struct DraftModel {
+    /// History tokens the drafter may look back over. `usize::MAX` = the
+    /// full context (MTP-grade fidelity); small windows miss induction
+    /// pairs and drive the acceptance rate down.
+    window: usize,
+}
+
+impl Default for DraftModel {
+    fn default() -> DraftModel {
+        DraftModel::mtp()
+    }
+}
+
+impl DraftModel {
+    /// Full-context drafter (the DeepSeek-style MTP-head stand-in).
+    pub fn mtp() -> DraftModel {
+        DraftModel { window: usize::MAX }
+    }
+
+    /// A drafter that only sees the trailing `window` history tokens.
+    pub fn with_window(window: usize) -> DraftModel {
+        assert!(window >= 1, "drafter needs at least the current token");
+        DraftModel { window }
+    }
+
+    /// Propose `draft_len` tokens continuing `history` (prompt + generated
+    /// so far, ending with the token about to be fed to the target model).
+    /// Pure and deterministic; an empty history drafts nothing.
+    pub fn draft(&self, history: &[i32], draft_len: usize) -> Vec<i32> {
+        if history.is_empty() {
+            return Vec::new();
+        }
+        let start = history.len().saturating_sub(self.window);
+        let mut h: Vec<i32> = history[start..].to_vec();
+        let mut out = Vec::with_capacity(draft_len);
+        for _ in 0..draft_len {
+            let cur = *h.last().unwrap();
+            // induction rule: the successor of the last previous occurrence
+            let next = h[..h.len() - 1]
+                .iter()
+                .rposition(|&t| t == cur)
+                .map(|i| h[i + 1])
+                .unwrap_or(cur);
+            out.push(next);
+            h.push(next);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn induction_rule_continues_a_period_two_stream() {
+        let d = DraftModel::mtp();
+        // …70 71 70 71 70 → the rule alternates onward
+        assert_eq!(d.draft(&[1, 70, 71, 70, 71, 70], 4), vec![71, 70, 71, 70]);
+    }
+
+    #[test]
+    fn fallback_repeats_an_unseen_token() {
+        let d = DraftModel::mtp();
+        assert_eq!(d.draft(&[5], 3), vec![5, 5, 5]);
+        assert_eq!(d.draft(&[], 3), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn window_truncation_loses_induction_pairs() {
+        // the pair (70 → 71) sits outside a 2-token window, so the
+        // truncated drafter falls back to repetition while the full one
+        // recalls the successor
+        let history = [70, 71, 9, 70];
+        assert_eq!(DraftModel::mtp().draft(&history, 1), vec![71]);
+        assert_eq!(DraftModel::with_window(2).draft(&history, 1), vec![70]);
+    }
+
+    #[test]
+    fn drafting_is_deterministic() {
+        let d = DraftModel::mtp();
+        let history = [1, 70, 71, 70];
+        assert_eq!(d.draft(&history, 3), d.draft(&history, 3));
+    }
+}

@@ -38,18 +38,23 @@ use super::clock::EventLoop;
 use super::scenario::{Scenario, SimRoute, SimTiming};
 use crate::anyhow;
 use crate::coordinator::router::{pick_handoff_rank, pick_rank, pick_rank_affinity, RankLoad};
-use crate::coordinator::scheduler::{Action, RunningSeq, Scheduler, WaitingSeq};
+use crate::coordinator::scheduler::{Action, RunningSeq, Scheduler, SpecConfig, WaitingSeq};
 use crate::kvcache::PAGE_TOKENS;
 use crate::perfmodel::e2e::{
-    decode_step_s, handoff_s, mixed_step_s, prefill_step_s, spill_s,
+    decode_step_s, handoff_s, mixed_step_s, prefill_step_s, spec_step_s, spill_s,
 };
 use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
+use crate::util::rng::Rng;
 use crate::util::stats::Stats;
 use crate::workload::Request;
 
 /// Sliding window of recent TTFT samples feeding the autoscaler's SLO
 /// breach signal.
 const TTFT_WINDOW: usize = 32;
+
+/// Seed of the deterministic acceptance-pattern stream the simulated
+/// verify draws from (mirrored by serve_port_common.py SPEC_RNG_SEED).
+const SPEC_RNG_SEED: u64 = 0x05BE_C0DE_5EED;
 
 /// A fleet-membership transition, recorded on [`SimResult::rank_timeline`]
 /// (and mirrored by `cluster::ClusterServer`'s elastic operations).
@@ -122,6 +127,15 @@ impl CostModel {
         match self {
             CostModel::Analytic { gpu, model, dcfg, kind } => {
                 mixed_step_s(gpu, model, dcfg, batch, dctx, chunk, cctx, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    fn spec(&self, batch: usize, context: usize, draft_len: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, dcfg, kind } => {
+                spec_step_s(gpu, model, dcfg, batch, context, draft_len, *kind)
             }
             CostModel::Uniform { step_s } => *step_s,
         }
@@ -209,6 +223,15 @@ pub struct SimResult {
     pub mean_active_ranks: f64,
     /// (time, event, rank, active ranks after) membership transitions
     pub rank_timeline: Vec<(f64, MembershipEvent, usize, usize)>,
+    /// draft/verify steps executed (0 without a spec scenario)
+    pub spec_steps: u64,
+    /// Σ over spec steps of the batch size (denominator of the frontier
+    /// accepted-tokens/step metric)
+    pub spec_seq_steps: u64,
+    /// draft tokens proposed across all spec steps
+    pub spec_drafted_tokens: u64,
+    /// tokens emitted by spec steps (accepted run + bonus, post-cap)
+    pub spec_tokens: u64,
 }
 
 impl SimResult {
@@ -218,6 +241,12 @@ impl SimResult {
 
     pub fn mean_decode_batch(&self) -> f64 {
         self.decode_batch_sum as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// The headline frontier metric: tokens emitted per sequence per
+    /// draft/verify step (the bonus token makes the floor 1.0).
+    pub fn accepted_per_spec_step(&self) -> f64 {
+        self.spec_tokens as f64 / self.spec_seq_steps.max(1) as f64
     }
 }
 
@@ -278,6 +307,10 @@ struct SimStats {
     fails: u64,
     joins: u64,
     drains: u64,
+    spec_steps: u64,
+    spec_seq_steps: u64,
+    spec_drafted: u64,
+    spec_tokens: u64,
 }
 
 /// The simulation state machine. Construct via [`Scenario::run`].
@@ -298,6 +331,9 @@ pub(super) struct Harness<'a> {
     itl: Vec<f64>,
     /// lock-step: tokens produced this round, stamped at the barrier
     pending_emits: Vec<usize>,
+    /// deterministic acceptance stream: one draw per drafted token, in
+    /// apply() order — identical across the naive/indexed and timing arms
+    spec_rng: Option<Rng>,
     // --- indexed bookkeeping (mirrored by serve_port_common.py): per-rank
     // token loads and the fleet page count are maintained incrementally at
     // every queue/page mutation instead of re-summed per event, and `ready`
@@ -420,9 +456,15 @@ impl<'a> Harness<'a> {
             .and_then(|e| e.autoscale.as_ref())
             .map(|a| a.eval_interval_s)
             .unwrap_or(0.0);
+        // a spec scenario enables the scheduler's draft/verify gate; every
+        // other scenario runs the config untouched (byte-identity when off)
+        let mut sched_cfg = scen.sched;
+        if let Some(sp) = &scen.spec {
+            sched_cfg.spec = SpecConfig::mtp(sp.draft_len);
+        }
         Harness {
             scen,
-            sched: Scheduler::new(scen.sched),
+            sched: Scheduler::new(sched_cfg),
             prefill_sched: Scheduler::new(scen.prefill_sched.unwrap_or(scen.sched)),
             speeds,
             page: scen.sched.page_tokens,
@@ -433,6 +475,7 @@ impl<'a> Harness<'a> {
             stats: SimStats { routed: vec![0; n], ..SimStats::default() },
             itl: Vec::new(),
             pending_emits: Vec::new(),
+            spec_rng: scen.spec.as_ref().map(|_| Rng::new(SPEC_RNG_SEED)),
             naive: scen.naive,
             wait_po: vec![0; n],
             wait_rem: vec![0; n],
@@ -1009,6 +1052,70 @@ impl<'a> Harness<'a> {
                     s.generated += 1;
                     self.run_rem[ri] -= 1;
                     self.emit(sid, t_emit);
+                    if self.seqs[sid].generated >= self.seqs[sid].out {
+                        done.push(sid);
+                    }
+                }
+                for sid in done {
+                    self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
+                    let freed = self.private_pages(sid);
+                    self.ranks[ri].free += freed;
+                    self.used_pages_total -= freed;
+                    self.ranks[ri].running.retain(|&x| x != sid);
+                }
+            }
+            Action::SpecDecode { idxs, draft_len } => {
+                // one draft-then-verify step. Each sequence drafts
+                // `draft_len` tokens; the verify pass accepts the leading
+                // run of matching drafts plus one corrected/bonus target
+                // token, and the rejected suffix's KV is rolled back
+                // (checkpoint/rollback_to), so pages grow for EMITTED
+                // tokens only — exactly the state a run that never wrote
+                // the rejects would hold.
+                if idxs.is_empty() {
+                    anyhow::bail!(
+                        "scheduler produced an empty spec batch on rank {ri} \
+                         ({} waiting, {} running)",
+                        self.ranks[ri].waiting.len(),
+                        self.ranks[ri].running.len()
+                    );
+                }
+                let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
+                let ctx = ids.iter().map(|&sid| self.seqs[sid].cached).max().unwrap() + 1;
+                cost = self.scen.cost.spec(ids.len(), ctx, draft_len) * self.speeds[ri];
+                self.stats.spec_steps += 1;
+                self.stats.spec_seq_steps += ids.len() as u64;
+                let accept_rate =
+                    self.scen.spec.as_ref().expect("SpecDecode without spec config").accept_rate;
+                let max_context = self.scen.sched.max_context;
+                let t_emit = t_start.map(|t| t + cost);
+                let mut done = Vec::new();
+                for &sid in &ids {
+                    // fixed draft_len draws per sequence keeps the
+                    // acceptance stream aligned across arms regardless of
+                    // where the run breaks
+                    let rng = self.spec_rng.as_mut().expect("SpecDecode without spec rng");
+                    let draws: Vec<bool> =
+                        (0..draft_len).map(|_| rng.bool(accept_rate)).collect();
+                    let accepted = draws.iter().take_while(|&&ok| ok).count();
+                    self.stats.spec_drafted += draft_len as u64;
+                    let s = &self.seqs[sid];
+                    let take = (accepted + 1)
+                        .min(s.out - s.generated)
+                        .min(max_context - s.cached);
+                    for _ in 0..take {
+                        let s = &mut self.seqs[sid];
+                        if s.cached % self.page == 0 {
+                            self.ranks[ri].free -= 1;
+                            self.used_pages_total += 1;
+                        }
+                        let s = &mut self.seqs[sid];
+                        s.cached += 1;
+                        s.generated += 1;
+                        self.run_rem[ri] -= 1;
+                        self.emit(sid, t_emit);
+                    }
+                    self.stats.spec_tokens += take as u64;
                     if self.seqs[sid].generated >= self.seqs[sid].out {
                         done.push(sid);
                     }
@@ -1744,6 +1851,10 @@ impl<'a> Harness<'a> {
             final_active_ranks: final_active,
             mean_active_ranks: mean_active,
             rank_timeline: self.rank_timeline,
+            spec_steps: st.spec_steps,
+            spec_seq_steps: st.spec_seq_steps,
+            spec_drafted_tokens: st.spec_drafted,
+            spec_tokens: st.spec_tokens,
         }
     }
 }
@@ -1767,6 +1878,7 @@ mod tests {
             max_step_items: 12,
             max_running: 12,
             disagg_prefill: false,
+            spec: SpecConfig::disabled(),
             policy: SchedPolicy::MixedChunked,
         }
     }
@@ -1783,6 +1895,7 @@ mod tests {
             cost: CostModel::Uniform { step_s: 1.0 },
             speeds: Vec::new(),
             elastic,
+            spec: None,
             naive: false,
         }
     }
@@ -1896,6 +2009,47 @@ mod tests {
         );
         assert_eq!(idle.dropped, 0);
         assert_eq!(idle.fails + idle.joins + idle.drains, 0);
+    }
+
+    /// A spec scenario is deterministic and its frontier metric respects
+    /// the bonus-token floor; the non-spec arm of the same trace carries
+    /// zeroed spec counters.
+    #[test]
+    fn spec_arm_is_deterministic_with_floor_one_accepted() {
+        use crate::simulate::scenario::SpecSim;
+        let run = || {
+            let scenario = Scenario {
+                routing: SimRoute::Single,
+                ranks: 1,
+                spec: Some(SpecSim { draft_len: 2, accept_rate: 0.7 }),
+                ..scen(None)
+            };
+            let trace = trace();
+            scenario.run(&trace).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+        assert_eq!(a.spec_steps, b.spec_steps);
+        assert_eq!(a.spec_tokens, b.spec_tokens);
+        assert!(a.spec_steps > 0, "decode-bearing trace must draft");
+        assert!(a.spec_drafted_tokens >= a.spec_steps * 2);
+        // every spec sequence-step emits at least the bonus token and at
+        // most draft_len + 1
+        assert!(a.accepted_per_spec_step() >= 1.0);
+        assert!(a.accepted_per_spec_step() <= 3.0);
+    }
+
+    /// `spec: None` leaves the scheduler gate off: the run is byte-identical
+    /// to the pre-spec harness and every spec counter stays zero.
+    #[test]
+    fn no_spec_config_keeps_counters_zero() {
+        let trace = trace();
+        let r = scen(None).run(&trace).unwrap();
+        assert_eq!(r.spec_steps, 0);
+        assert_eq!(r.spec_seq_steps, 0);
+        assert_eq!(r.spec_drafted_tokens, 0);
+        assert_eq!(r.spec_tokens, 0);
+        assert_eq!(r.accepted_per_spec_step(), 0.0);
     }
 
     /// A failure with recovery on re-migrates the failed rank's KV; the

@@ -10,6 +10,7 @@
 //! | serve_disagg     | n/2 prefill + n/2  | disagg / affinity | event  |
 //! | serve_straggler  | 4 (rank 0 @ 1.5x)  | shortest/affinity | event  |
 //! | serve_elastic    | 4 fail / 1→6 auto  | affinity/shortest | event  |
+//! | serve_spec       | 1 (MTP draft/verify) | single          | event  |
 //!
 //! Adding a new serving study should be a new `Scenario` constructor here
 //! (plus a Python mirror in `serve_port_common.py` wrappers), not another
@@ -87,6 +88,18 @@ pub struct ElasticConfig {
     pub autoscale: Option<AutoscaleConfig>,
 }
 
+/// Speculative-decoding arm configuration (`serve_spec`): the scheduler
+/// upgrades pure-decode steps to [`crate::coordinator::Action::SpecDecode`]
+/// draft/verify steps, and the harness draws each draft token's acceptance
+/// from a dedicated deterministic stream at this rate.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecSim {
+    /// draft tokens proposed per sequence per speculative step
+    pub draft_len: usize,
+    /// probability each drafted token matches the verify pass's target
+    pub accept_rate: f64,
+}
+
 /// One simulated serving arm (see module docs for the bench mapping).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -109,6 +122,9 @@ pub struct Scenario {
     /// elastic membership (failure injection + autoscaling); None = the
     /// fixed fleet every non-elastic scenario runs
     pub elastic: Option<ElasticConfig>,
+    /// speculative decoding (MTP draft/verify); None = every step is a
+    /// plain prefill/decode/mixed step and the scheduler gate stays off
+    pub spec: Option<SpecSim>,
     /// Run the pre-optimization reference paths (full linear scans per
     /// routing decision, full waiting views per scheduler call, per-round
     /// Σ-sweep page sampling, rebuilt per-iteration candidate lists)
@@ -150,6 +166,7 @@ impl Scenario {
             cost: Self::h20_cost(8, 1),
             speeds: Vec::new(),
             elastic: None,
+            spec: None,
             naive: false,
         }
     }
@@ -172,6 +189,7 @@ impl Scenario {
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds: Vec::new(),
             elastic: None,
+            spec: None,
             naive: false,
         }
     }
@@ -196,6 +214,7 @@ impl Scenario {
             cost: Self::h20_cost(n, NODE_GPUS / n),
             speeds: Vec::new(),
             elastic: None,
+            spec: None,
             naive: false,
         }
     }
@@ -220,7 +239,23 @@ impl Scenario {
             cost: Self::h20_cost(dp, NODE_GPUS / dp),
             speeds,
             elastic: None,
+            spec: None,
             naive: false,
+        }
+    }
+
+    /// serve_spec arm: the serve_mixed single-rank scenario with the MTP
+    /// draft/verify gate on — the scheduler upgrades pure-decode steps to
+    /// `SpecDecode` and the harness plays the acceptance stream.
+    pub fn spec_serve(
+        sched: SchedulerConfig,
+        capacity_pages: usize,
+        draft_len: usize,
+        accept_rate: f64,
+    ) -> Scenario {
+        Scenario {
+            spec: Some(SpecSim { draft_len, accept_rate }),
+            ..Self::mixed(sched, capacity_pages)
         }
     }
 
@@ -248,6 +283,7 @@ impl Scenario {
             cost,
             speeds: Vec::new(),
             elastic: Some(elastic),
+            spec: None,
             naive: false,
         }
     }
@@ -374,6 +410,31 @@ pub fn elastic_autoscale_result_json(r: &SimResult) -> Json {
         ("steps", Json::num(r.steps as f64)),
         ("rank_timeline", timeline),
     ])
+}
+
+/// The exact result-row field set of BENCH_spec.json (baseline and spec
+/// arms; the spec extras appear only when the arm carried a [`SpecSim`]).
+pub fn spec_result_json(spec: Option<SpecSim>, r: &SimResult) -> Json {
+    let mut fields = vec![
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("itl_p50_ms", Json::num(r.itl.median() * 1e3)),
+        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
+        ("decode_steps", Json::num(r.decode_steps as f64)),
+        ("steps", Json::num(r.steps as f64)),
+    ];
+    if let Some(sp) = spec {
+        fields.push(("draft_len", Json::num(sp.draft_len as f64)));
+        fields.push(("accept_rate", Json::num(sp.accept_rate)));
+        fields.push(("spec_steps", Json::num(r.spec_steps as f64)));
+        fields.push(("spec_drafted_tokens", Json::num(r.spec_drafted_tokens as f64)));
+        fields.push(("spec_tokens", Json::num(r.spec_tokens as f64)));
+        fields.push(("accepted_tokens_per_step", Json::num(r.accepted_per_spec_step())));
+    }
+    Json::obj(fields)
 }
 
 /// The exact result-row field set of BENCH_straggler.json.

@@ -208,6 +208,48 @@ fn determinism_same_trace_seed_same_outcomes_and_counters() {
 }
 
 #[test]
+fn speculative_decoding_matches_baseline_outputs() {
+    // verify logits are bit-exact with stepwise decode logits and each
+    // emitted token consumes exactly one rng draw either way, so a
+    // spec-enabled run must emit token-identical outputs to the baseline —
+    // speculation changes the step count, never the text
+    let reqs: Vec<ServeRequest> = (0..4u64)
+        .map(|i| ServeRequest {
+            id: i,
+            prompt: repeat_prompt(i as i32, 20 + 6 * i as usize),
+            max_new_tokens: 24,
+            temperature: 0.7,
+            seed: 40 + i,
+            ignore_eos: false,
+        })
+        .collect();
+    let mut base = server(CacheMode::Fp8, 128);
+    let mut spec = server(CacheMode::Fp8, 128);
+    spec.enable_spec(3).unwrap();
+    for r in &reqs {
+        base.submit(r.clone());
+        spec.submit(r.clone());
+    }
+    base.run_to_completion().unwrap();
+    spec.run_to_completion().unwrap();
+    let by_id = |srv: &Server| {
+        let mut v: Vec<(u64, Vec<i32>)> =
+            srv.finished.iter().map(|o| (o.id, o.generated.clone())).collect();
+        v.sort_by_key(|(id, _)| *id);
+        v
+    };
+    assert_eq!(by_id(&base), by_id(&spec), "speculation changed the generated tokens");
+    assert_eq!(base.metrics.spec_steps, 0);
+    assert!(spec.metrics.spec_steps > 0, "pure-decode steps must upgrade");
+    assert!(spec.metrics.spec_accepted > 0, "repeat-motif prompts must accept drafts");
+    assert!(spec.metrics.spec_accepted <= spec.metrics.spec_drafted);
+    // speculation saves engine rounds: fewer verify+decode calls than the
+    // baseline's decode steps
+    assert!(spec.engine.stats.verify_calls > 0);
+    assert_eq!(spec.cache.used_pages(), 0, "rollback/release must free all pages");
+}
+
+#[test]
 fn dp_router_spreads_and_completes() {
     let ranks: Vec<Server> = (0..2).map(|_| server(CacheMode::Fp8, 64)).collect();
     let mut router = Router::new(ranks);

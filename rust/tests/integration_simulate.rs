@@ -17,7 +17,7 @@
 //! caller to notice a false `step_all`.
 
 use snapmla::cluster::ClusterServer;
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::coordinator::{RankHealth, RequestOutcome, RoutePolicy, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
@@ -250,6 +250,7 @@ fn bench_sched(policy: SchedPolicy) -> SchedulerConfig {
         max_step_items: 12,
         max_running: 12,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy,
     }
 }
@@ -284,6 +285,7 @@ fn harness_arm(timing: SimTiming, routing: SimRoute) -> SimResult {
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds: Vec::new(),
         elastic: None,
+        spec: None,
         naive: false,
     }
     .run(&burst_trace())
@@ -333,6 +335,7 @@ fn harness_speed_factors_slow_the_straggler_arm() {
         cost: CostModel::Uniform { step_s: 1.0 },
         speeds,
         elastic: None,
+        spec: None,
         naive: false,
     };
     let trace = burst_trace();

@@ -17,7 +17,7 @@
 //! ports (with its own page size — the ported scheduler is page-agnostic,
 //! while this harness pins `kvcache::PAGE_TOKENS`).
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
 use snapmla::kvcache::PAGE_TOKENS;
 use snapmla::simulate::{
     AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, SimTiming,
@@ -81,6 +81,7 @@ fn random_sched_cfg(rng: &mut Rng) -> SchedulerConfig {
         max_step_items: 8 + gen_range(rng, 0, 8) as usize,
         max_running: 6 + gen_range(rng, 0, 6) as usize,
         disagg_prefill: false,
+        spec: SpecConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }
@@ -110,6 +111,7 @@ fn random_case(rng: &mut Rng, case: usize) -> (TraceConfig, Scenario) {
         cost: Scenario::h20_cost(ranks, 2),
         speeds: Vec::new(),
         elastic: None,
+        spec: None,
         naive: false,
     };
     let scen = match mode {

@@ -1,0 +1,213 @@
+//! Property tests for speculative checkpoint/rollback.
+//!
+//! The contract: rejected draft tokens must be invisible. After
+//! `checkpoint` → append drafts → `rollback_to(ckpt, keep)`, the allocator
+//! (page tables, refcounts, free-list order) and the cache bytes (FP8 codes,
+//! per-token scales, rope, `used` counters) are identical to a run that only
+//! ever wrote the kept tokens — in BOTH cache modes, for random draft
+//! lengths and acceptance splits. And a spec-DISABLED scheduler config is
+//! inert: its serve run is byte-identical to the default server's.
+
+use snapmla::coordinator::{ServeRequest, Server, SpecConfig};
+use snapmla::kvcache::{CacheConfig, CacheMode, PageAllocator, PagedKvCache};
+use snapmla::runtime::ModelEngine;
+use snapmla::util::rng::Rng;
+
+const LAYERS: usize = 2;
+const D_C: usize = 16;
+const D_R: usize = 8;
+
+fn cache(mode: CacheMode) -> PagedKvCache {
+    PagedKvCache::new(CacheConfig {
+        n_layers: LAYERS,
+        d_c: D_C,
+        d_r: D_R,
+        mode,
+        capacity_pages: 64,
+    })
+}
+
+/// One random token's worth of append operands (shared by both caches).
+fn tok(rng: &mut Rng) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let kc = rng.normal_vec(LAYERS * D_C, 1.0);
+    let kr = rng.normal_vec(LAYERS * D_R, 0.3);
+    let sg = (0..LAYERS).map(|_| 0.01 + rng.below(100) as f32 * 1e-4).collect();
+    (kc, kr, sg)
+}
+
+fn append(c: &mut PagedKvCache, mode: CacheMode, t: &(Vec<f32>, Vec<f32>, Vec<f32>)) {
+    match mode {
+        CacheMode::Fp8 => c.append_prequantized(1, &t.0, &t.1, &t.2).unwrap(),
+        CacheMode::Bf16 => c.append_token(1, &t.0, &t.1).unwrap(),
+    }
+}
+
+/// Allocator level: truncate returns the free list to the exact state of an
+/// allocator that never grew the draft pages — subsequent growth (for any
+/// sequence) lands on identical physical pages.
+#[test]
+fn truncate_restores_free_list_order_exactly() {
+    let mut rng = Rng::new(0x5BEC_01);
+    for _ in 0..50 {
+        let base_pages = rng.range_usize(1, 6);
+        let draft_pages = rng.range_usize(1, 5);
+        let mut spec = PageAllocator::new(32);
+        let mut never = PageAllocator::new(32);
+        for a in [&mut spec, &mut never] {
+            a.register(1);
+            for _ in 0..base_pages {
+                a.grow(1).unwrap();
+            }
+        }
+        for _ in 0..draft_pages {
+            spec.grow(1).unwrap();
+        }
+        let freed = spec.truncate(1, base_pages).unwrap();
+        assert_eq!(freed.len(), draft_pages);
+        assert_eq!(spec.pages_of(1), never.pages_of(1));
+        assert_eq!(spec.free_pages(), never.free_pages());
+        for &p in spec.pages_of(1).unwrap() {
+            assert_eq!(spec.ref_count(p), never.ref_count(p));
+        }
+        // free-list ORDER: a second sequence must receive the same physical
+        // pages from both allocators
+        for a in [&mut spec, &mut never] {
+            a.register(2);
+            for _ in 0..3 {
+                a.grow(2).unwrap();
+            }
+        }
+        assert_eq!(spec.pages_of(2), never.pages_of(2), "free-list order diverged");
+        spec.validate(&[]).unwrap();
+        never.validate(&[]).unwrap();
+    }
+}
+
+/// Cache level, both modes: random base lengths, draft lengths and
+/// acceptance splits. The rolled-back cache is byte-identical to one that
+/// only ever appended the kept tokens — including after BOTH keep appending
+/// (stale draft bytes in a partial page would resurface here).
+#[test]
+fn rollback_is_byte_identical_to_never_drafting() {
+    for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+        let mut rng = Rng::new(0x5BEC_02);
+        for _ in 0..25 {
+            let base = rng.range_usize(1, 200);
+            let d = rng.range_usize(1, 8);
+            let keep = rng.below(d + 1); // 0..=d accepted
+            let toks: Vec<_> = (0..base + d + 4).map(|_| tok(&mut rng)).collect();
+
+            let mut spec = cache(mode);
+            let mut never = cache(mode);
+            for c in [&mut spec, &mut never] {
+                c.register(1);
+                for t in &toks[..base] {
+                    append(c, mode, t);
+                }
+            }
+            let ckpt = spec.checkpoint(1).unwrap();
+            for t in &toks[base..base + d] {
+                append(&mut spec, mode, t);
+            }
+            for t in &toks[base..base + keep] {
+                append(&mut never, mode, t);
+            }
+            spec.rollback_to(&ckpt, keep).unwrap();
+
+            assert_eq!(spec.tokens_of(1), never.tokens_of(1), "{mode:?}");
+            assert_eq!(spec.free_pages(), never.free_pages(), "{mode:?}");
+            assert_eq!(spec.raw_seq_bytes(1), never.raw_seq_bytes(1), "{mode:?} bytes");
+            spec.validate().unwrap();
+            never.validate().unwrap();
+
+            // continue appending on both — stale bytes or a skewed free
+            // list would diverge here
+            for t in &toks[base + d..] {
+                append(&mut spec, mode, t);
+                append(&mut never, mode, t);
+            }
+            assert_eq!(
+                spec.raw_seq_bytes(1),
+                never.raw_seq_bytes(1),
+                "{mode:?} bytes after re-append"
+            );
+        }
+    }
+}
+
+/// Engine level: the full spec cycle (verify the carried token + drafts,
+/// roll the rejected tail back, decode on) leaves cache bytes and logits
+/// identical to a run that never saw the rejected drafts.
+#[test]
+fn verify_rollback_decode_matches_pure_decode_bytes() {
+    for mode in [CacheMode::Fp8, CacheMode::Bf16] {
+        let mut spec_eng = ModelEngine::sim(mode).unwrap();
+        let mut spec_cache = PagedKvCache::new(spec_eng.cache_config(8));
+        let mut pure_eng = ModelEngine::sim(mode).unwrap();
+        let mut pure_cache = PagedKvCache::new(pure_eng.cache_config(8));
+        let prompt = vec![1, 70, 71, 70];
+        spec_cache.register(1);
+        pure_cache.register(1);
+        spec_eng.prefill(&mut spec_cache, &[(1, prompt.clone())]).unwrap();
+        pure_eng.prefill(&mut pure_cache, &[(1, prompt.clone())]).unwrap();
+
+        // spec run: carried 71 + drafts [70, 99, 99]; suppose verification
+        // accepts only the first draft → keep 2, reject 2
+        let ckpt = spec_cache.checkpoint(1).unwrap();
+        spec_eng.verify(&mut spec_cache, &[(1, vec![71, 70, 99, 99])]).unwrap();
+        spec_cache.rollback_to(&ckpt, 2).unwrap();
+        // pure run only ever decodes the kept tokens
+        pure_eng.decode(&mut pure_cache, &[(1, 71)]).unwrap();
+        pure_eng.decode(&mut pure_cache, &[(1, 70)]).unwrap();
+        assert_eq!(
+            spec_cache.raw_seq_bytes(1),
+            pure_cache.raw_seq_bytes(1),
+            "{mode:?} post-rollback bytes"
+        );
+
+        // the next decode sees identical state on both
+        let a = spec_eng.decode(&mut spec_cache, &[(1, 71)]).unwrap();
+        let b = pure_eng.decode(&mut pure_cache, &[(1, 71)]).unwrap();
+        assert_eq!(a.logits[0], b.logits[0], "{mode:?} post-rollback logits");
+    }
+}
+
+/// A spec-DISABLED config is inert regardless of its draft_len: the serve
+/// run (mixed chunked-prefill trace with chunking and batched decode) is
+/// byte-identical to the default server — outcomes, finish order, and every
+/// wall-clock-free counter.
+#[test]
+fn spec_disabled_serve_trace_is_byte_identical_to_baseline() {
+    let run = |spec: Option<SpecConfig>| {
+        let mut srv = Server::new(ModelEngine::sim(CacheMode::Fp8).unwrap(), 64);
+        if let Some(s) = spec {
+            srv.scheduler.cfg.spec = s;
+        }
+        let mut rng = Rng::new(9);
+        for i in 0..6u64 {
+            let mlen = rng.range_usize(2, 6);
+            let motif: Vec<i32> = (0..mlen).map(|_| 64 + rng.below(256) as i32).collect();
+            let len = 12 + 30 * (i as usize % 3);
+            let mut prompt = vec![1];
+            for k in 0..len {
+                prompt.push(motif[k % mlen]);
+            }
+            srv.submit(ServeRequest {
+                id: i,
+                prompt,
+                max_new_tokens: 10 + i as usize,
+                temperature: 0.7,
+                seed: i,
+                ignore_eos: false,
+            });
+        }
+        srv.run_to_completion().unwrap();
+        let outcomes: Vec<(u64, Vec<i32>)> =
+            srv.finished.iter().map(|o| (o.id, o.generated.clone())).collect();
+        (outcomes, srv.metrics.counters())
+    };
+    let baseline = run(None);
+    let disabled = run(Some(SpecConfig { enabled: false, draft_len: 7 }));
+    assert_eq!(baseline.0, disabled.0, "outcomes diverged");
+    assert_eq!(baseline.1, disabled.1, "counters diverged");
+}

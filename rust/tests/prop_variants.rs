@@ -1,19 +1,20 @@
 //! Property tests for the `mla::variant` API redesign.
 //!
-//! 1. The `SnapMla` variant reached through the new trait is BYTE-identical
-//!    to the legacy `mla::pipeline` free functions (the shims and the trait
-//!    share one implementation) — random shapes/seeds, both the one-shot
-//!    `mla::decode` path and the staged build/quantize/pipeline path, and
-//!    both engine cache modes.
+//! 1. The `SnapMla` variant's one-shot `mla::decode` path is BYTE-identical
+//!    to the manually staged build/quantize/pipeline composition (what the
+//!    retired `mla::pipeline` shims used to chain) — random shapes/seeds,
+//!    lengths crossing block boundaries, and both engine cache modes.
 //! 2. P-Cast's online running-max rescale keeps sink-token streams bounded
 //!    where a naive per-row global-max probability scaling collapses to
 //!    zero output.
 
 use snapmla::fp8::e4m3_round;
 use snapmla::kvcache::{CacheMode, PagedKvCache};
-use snapmla::mla::variant::{snapmla_build_cache, snapmla_quantize_query, PvOrder, QuantCache};
+use snapmla::mla::variant::{
+    snapmla_build_cache, snapmla_quantize_query, KernelVariant, QuantCache, BLOCK_N,
+};
 use snapmla::mla::{decode, ref_attn, Cache, Query, Shape, VariantKind};
-use snapmla::runtime::ModelEngine;
+use snapmla::runtime::{EngineBuilder, ModelEngine};
 use snapmla::util::rng::Rng;
 use snapmla::util::stats::rel_l2;
 
@@ -36,11 +37,12 @@ fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
     }
 }
 
-/// SnapMla-through-trait == legacy `snapmla_decode`, bit for bit, on random
-/// shapes/seeds and lengths crossing block boundaries.
+/// One-shot `mla::decode` == the manually staged pad/build/quantize/pipeline
+/// composition (what the retired `mla::pipeline::snapmla_decode` shim used
+/// to chain), bit for bit, on random shapes/seeds and lengths crossing
+/// block boundaries.
 #[test]
-#[allow(deprecated)]
-fn snapmla_through_trait_is_byte_identical_to_legacy_decode() {
+fn snapmla_one_shot_is_byte_identical_to_staged_composition() {
     for (heads, d_c, d_r) in SHAPES {
         let shape = Shape { heads, d_c, d_r };
         let sm = shape.sm_scale();
@@ -49,65 +51,48 @@ fn snapmla_through_trait_is_byte_identical_to_legacy_decode() {
             let n = 256;
             let (q, k_c, k_r) = random_case(&mut rng, &shape, n);
             for length in [1usize, 63, 64, 65, 130, 256] {
-                let legacy = snapmla::mla::pipeline::snapmla_decode(
-                    &shape,
-                    &q,
-                    &k_c,
-                    &k_r,
-                    length,
-                    sm,
-                    PvOrder::Monotonic,
+                // stage by hand exactly as KernelVariant::decode documents:
+                // pad to whole KV blocks, build, quantize, pipeline
+                let n_pad = length.div_ceil(BLOCK_N) * BLOCK_N;
+                let mut k_c_pad = k_c[..length * d_c].to_vec();
+                k_c_pad.resize(n_pad * d_c, 0.0);
+                let mut k_r_pad = k_r[..length * d_r].to_vec();
+                k_r_pad.resize(n_pad * d_r, 0.0);
+                let cache = snapmla_build_cache(&shape, &k_c_pad, &k_r_pad, n_pad);
+                let qq = snapmla_quantize_query(&shape, &q);
+                let staged = VariantKind::SnapMla.instance().pipeline(
+                    &shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm,
                 );
-                let via_trait = decode(VariantKind::SnapMla, &shape, &q, &k_c, &k_r, length, sm);
-                assert_bits_eq(&via_trait.o, &legacy.o, "o");
-                assert_bits_eq(&via_trait.lse, &legacy.lse, "lse");
+                let one_shot = decode(VariantKind::SnapMla, &shape, &q, &k_c, &k_r, length, sm);
+                assert_bits_eq(&one_shot.o, &staged.o, "o");
+                assert_bits_eq(&one_shot.lse, &staged.lse, "lse");
             }
         }
     }
 }
 
-/// The staged path too: legacy build_quant_cache/quantize_query/
-/// snapmla_pipeline == the trait's build_cache/quantize_query/pipeline.
+/// The trait's default `build_cache`/`quantize_query` ARE the shared free
+/// functions — every variant builds the same cache layout, so a cache built
+/// through one path is byte-valid input to the other.
 #[test]
-#[allow(deprecated)]
-fn snapmla_staged_path_is_byte_identical_to_legacy_pipeline() {
+fn trait_staging_defaults_match_the_free_functions() {
     for (heads, d_c, d_r) in SHAPES {
         let shape = Shape { heads, d_c, d_r };
-        let sm = shape.sm_scale();
         let mut rng = Rng::new(heads as u64 * 1000 + 17);
         let n = 192; // 3 blocks
         let (q, k_c, k_r) = random_case(&mut rng, &shape, n);
 
-        let legacy_cache: QuantCache =
-            snapmla::mla::pipeline::build_quant_cache(&shape, &k_c, &k_r, n);
-        let (q_c_q, sigma_q, q_r_al) = snapmla::mla::pipeline::quantize_query(&shape, &q);
-
-        let cache = snapmla_build_cache(&shape, &k_c, &k_r, n);
-        let qq = snapmla_quantize_query(&shape, &q);
-        assert_bits_eq(&cache.k_c_q, &legacy_cache.k_c_q, "k_c_q");
-        assert_bits_eq(&cache.sigma_k, &legacy_cache.sigma_k, "sigma_k");
-        assert_bits_eq(&cache.k_r_al, &legacy_cache.k_r_al, "k_r_al");
-        assert_bits_eq(&qq.q_c_q, &q_c_q, "q_c_q");
-        assert_bits_eq(&qq.sigma_q, &sigma_q, "sigma_q");
-        assert_bits_eq(&qq.q_r_al, &q_r_al, "q_r_al");
-
-        for length in [64usize, 100, 192] {
-            let legacy = snapmla::mla::pipeline::snapmla_pipeline(
-                &shape,
-                &q_c_q,
-                &sigma_q,
-                &q_r_al,
-                &legacy_cache,
-                length,
-                sm,
-                PvOrder::Monotonic,
-            );
-            let via_trait = VariantKind::SnapMla.instance().pipeline(
-                &shape, &qq.q_c_q, &qq.sigma_q, &qq.q_r_al, &cache, length, sm,
-            );
-            assert_bits_eq(&via_trait.o, &legacy.o, "o");
-            assert_bits_eq(&via_trait.lse, &legacy.lse, "lse");
-        }
+        let free_cache: QuantCache = snapmla_build_cache(&shape, &k_c, &k_r, n);
+        let free_q = snapmla_quantize_query(&shape, &q);
+        let v = VariantKind::SnapMla.instance();
+        let trait_cache = v.build_cache(&shape, &k_c, &k_r, n);
+        let trait_q = v.quantize_query(&shape, &q);
+        assert_bits_eq(&trait_cache.k_c_q, &free_cache.k_c_q, "k_c_q");
+        assert_bits_eq(&trait_cache.sigma_k, &free_cache.sigma_k, "sigma_k");
+        assert_bits_eq(&trait_cache.k_r_al, &free_cache.k_r_al, "k_r_al");
+        assert_bits_eq(&trait_q.q_c_q, &free_q.q_c_q, "q_c_q");
+        assert_bits_eq(&trait_q.sigma_q, &free_q.sigma_q, "sigma_q");
+        assert_bits_eq(&trait_q.q_r_al, &free_q.q_r_al, "q_r_al");
     }
 }
 
@@ -117,7 +102,8 @@ fn snapmla_staged_path_is_byte_identical_to_legacy_pipeline() {
 fn default_engine_equals_explicit_snapmla_in_both_cache_modes() {
     for mode in [CacheMode::Fp8, CacheMode::Bf16] {
         let mut legacy = ModelEngine::sim(mode).unwrap();
-        let mut explicit = ModelEngine::sim_with_kernel(mode, VariantKind::SnapMla).unwrap();
+        let mut explicit =
+            EngineBuilder::new(mode).kernel(VariantKind::SnapMla).build().unwrap();
         let run = |eng: &mut ModelEngine| {
             let mut cache = PagedKvCache::new(eng.cache_config(8));
             cache.register(1);
