@@ -6,7 +6,8 @@
 
 use snapmla::bench::{bench_from_args, write_report};
 use snapmla::coordinator::scheduler::{
-    RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig, WaitingSeq,
+    RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig, TieredConfig,
+    WaitingSeq,
 };
 use snapmla::fp8::{e4m3_decode, e4m3_encode, quant_per_token};
 use snapmla::kvcache::{CacheConfig, CacheMode, PagedKvCache};
@@ -114,6 +115,7 @@ fn main() {
         max_running: 72,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     });
     let waiting: Vec<WaitingSeq> =

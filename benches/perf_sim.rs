@@ -34,7 +34,7 @@
 //! `python/tests/perf_sim_port.py` is the exact Python port that generated
 //! the committed baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::{Scenario, SimResult, SimRoute, SimTiming};
 use snapmla::util::cli::Args;
 use snapmla::util::json::Json;
@@ -89,6 +89,7 @@ fn sched_cfg() -> SchedulerConfig {
         max_running: 64,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }

@@ -21,7 +21,7 @@
 //! is the exact Python port (thin wrapper over serve_port_common.py) that
 //! generated the committed baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::scenario::cluster_result_json;
 use snapmla::simulate::{Scenario, SimRoute, NODE_GPUS};
 use snapmla::util::cli::Args;
@@ -71,6 +71,7 @@ fn main() {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     let dps: &[usize] = if quick { &DP_QUICK } else { &DP_FULL };

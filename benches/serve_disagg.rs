@@ -23,7 +23,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::perfmodel::{KernelKind, ModelSpec};
 use snapmla::simulate::scenario::disagg_result_json;
 use snapmla::simulate::{Scenario, NODE_GPUS};
@@ -84,6 +84,7 @@ fn main() {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     // prefill ranks run a prefill-tuned profile: no decode batch to ride,
@@ -96,6 +97,7 @@ fn main() {
         chunk_per_seq: 512,
         disagg_prefill: true,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         ..sched_cfg
     };
     let model = ModelSpec::deepseek_v31();

@@ -22,7 +22,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::scenario::{elastic_autoscale_result_json, elastic_failure_result_json};
 use snapmla::simulate::{
     AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, NODE_GPUS,
@@ -62,6 +62,7 @@ fn failure_sched_cfg() -> SchedulerConfig {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }
@@ -82,6 +83,7 @@ fn autoscale_sched_cfg() -> SchedulerConfig {
         max_running: 4,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }

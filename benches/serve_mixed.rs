@@ -15,7 +15,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::scenario::mixed_result_json;
 use snapmla::simulate::{Scenario, SimResult};
 use snapmla::util::cli::Args;
@@ -58,6 +58,7 @@ fn main() {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked, // overridden per arm
     };
 

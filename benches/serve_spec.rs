@@ -17,7 +17,7 @@
 //! over serve_port_common.py) that generated the committed baseline in a
 //! container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::scenario::spec_result_json;
 use snapmla::simulate::{Scenario, SimResult, SpecSim};
 use snapmla::util::cli::Args;
@@ -83,6 +83,7 @@ fn main() {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(), // the harness arms the gate per scenario
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
 

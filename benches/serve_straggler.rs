@@ -22,7 +22,7 @@
 //! wrapper over serve_port_common.py) that generated the committed
 //! baseline in a container without a Rust toolchain.
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::simulate::scenario::straggler_result_json;
 use snapmla::simulate::{Scenario, SimResult, SimRoute, NODE_GPUS};
 use snapmla::util::cli::Args;
@@ -72,6 +72,7 @@ fn main() {
         max_running: 16,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     };
     let uniform = vec![1.0; DP];

@@ -1,0 +1,192 @@
+//! serve_tiered — tiered KV cache on one rank under long-context HBM
+//! pressure, in deterministic virtual time.
+//!
+//! A burst of long prompts against a page pool that holds only a fraction
+//! of them. Three arms on the identical trace:
+//!
+//! * sync        — the binary synchronous baseline: every preemption charges
+//!                 a blocking PCIe spill, every resume a blocking restore,
+//! * async       — the `kvcache::tiered` engine: spills and prefetches
+//!                 complete as event-loop flights overlapped with decode
+//!                 (SpillInFlight pages are not yet free; prefetch is issued
+//!                 ahead of the sequence joining the batch),
+//! * async_comp  — async plus the rank-reduced cold-page compression tier:
+//!                 pages older than the hot window resident at the codec's
+//!                 page ratio, decompression-on-access priced per step.
+//!
+//! Headline: max concurrent sequences at fixed HBM (peak_running) vs the
+//! sync arm, with async throughput >= sync.
+//!
+//!     cargo bench --bench serve_tiered [-- --quick]
+//!
+//! The full run also refreshes BENCH_tiered.json at the repo root.
+//! `python/tests/serve_tiered_port.py` is the exact Python port (thin
+//! wrapper over serve_port_common.py) that generated the committed baseline
+//! in a container without a Rust toolchain.
+
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
+use snapmla::kvcache::cold_ratio;
+use snapmla::simulate::scenario::tiered_result_json;
+use snapmla::simulate::{Scenario, SimResult, TieredSim};
+use snapmla::util::cli::Args;
+use snapmla::util::json::Json;
+use snapmla::util::table::{f1, f2, Table};
+use snapmla::workload::{TraceConfig, TraceGen};
+
+const PAGE: usize = 64;
+const CAPACITY_PAGES: usize = 512;
+// cold-page codec: rank-192 latent codes (of d_c = 512) + untouched RoPE +
+// per-token scales -> resident bytes ratio vs the FP8 hot page format
+const COMP_RANK: usize = 192;
+const COLD_AFTER: usize = 512; // hot window (tokens); a page multiple
+const D_C: usize = 512;
+const D_R: usize = 64;
+
+fn vs_sync(arm: &SimResult, base: &SimResult) -> Json {
+    Json::obj(vec![
+        (
+            "concurrency_ratio",
+            Json::num(arm.peak_running as f64 / base.peak_running as f64),
+        ),
+        ("throughput_ratio", Json::num(arm.tok_per_s() / base.tok_per_s())),
+        ("itl_p95_ratio", Json::num(arm.itl.percentile(95.0) / base.itl.percentile(95.0))),
+    ])
+}
+
+fn arm_json(arm: &SimResult, base: &SimResult) -> Json {
+    let mut row = tiered_result_json(true, arm);
+    if let Json::Obj(m) = &mut row {
+        m.insert("vs_sync".into(), vs_sync(arm, base));
+    }
+    row
+}
+
+fn main() {
+    let args = Args::parse_with_flags(&["quick"]);
+    let quick = args.has("quick");
+    let num_requests = args.usize_or("requests", if quick { 12 } else { 40 });
+    let comp_ratio = cold_ratio(COMP_RANK, D_C, D_R);
+
+    // long-context burst: every prompt is pages-heavy, so the page pool —
+    // not the batch limits — caps concurrency, and preemption churn is
+    // constant; exactly the regime the tiered cache targets
+    let trace_cfg = TraceConfig {
+        seed: args.u64_or("seed", 2026),
+        num_requests,
+        mean_interarrival_s: 0.0, // burst: fully deterministic virtual time
+        prompt_min: 2048,
+        prompt_max: 4096,
+        out_min: 128,
+        out_max: 256,
+        temperature: 0.0,
+        long_frac: 0.0,
+        ..TraceConfig::default()
+    };
+    let trace = TraceGen::generate(&trace_cfg);
+    let sched_cfg = SchedulerConfig {
+        max_decode_batch: 64,
+        max_prefill_batch: 4,
+        max_prefill_tokens: 8192,
+        max_context: 8192,
+        page_tokens: PAGE,
+        prefill_chunk_tokens: 512,
+        chunk_per_seq: 512,
+        max_step_items: 64,
+        max_running: 64,
+        disagg_prefill: false,
+        spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(), // the harness arms the gate per scenario
+        policy: SchedPolicy::MixedChunked,
+    };
+
+    let run = |tiered: Option<TieredSim>| -> SimResult {
+        Scenario::tiered_serve(sched_cfg, CAPACITY_PAGES, tiered)
+            .run(&trace)
+            .expect("tiered sim")
+    };
+
+    let sync = run(None);
+    let async_arm = run(Some(TieredSim {
+        async_io: true,
+        cold_after: 0,
+        comp_ratio: 1.0,
+        comp_rank: 0,
+    }));
+    let comp = run(Some(TieredSim {
+        async_io: true,
+        cold_after: COLD_AFTER,
+        comp_ratio,
+        comp_rank: COMP_RANK,
+    }));
+
+    let mut t = Table::new(
+        "serve_tiered — async host spill/prefetch + cold compression vs sync spill \
+         (virtual time, perfmodel)",
+        &["arm", "req", "gen tok", "wall s", "tok/s", "ITL p95 ms", "peak seqs",
+          "spills", "prefetches", "x conc"],
+    );
+    let mut row = |name: &str, r: &SimResult| {
+        t.row(vec![
+            name.into(),
+            r.requests.to_string(),
+            r.gen_tokens.to_string(),
+            f2(r.wall_s),
+            f1(r.tok_per_s()),
+            f2(r.itl.percentile(95.0) * 1e3),
+            r.peak_running.to_string(),
+            r.spills.to_string(),
+            r.prefetches.to_string(),
+            f2(r.peak_running as f64 / sync.peak_running as f64),
+        ]);
+    };
+    row("sync", &sync);
+    row("async", &async_arm);
+    row("async_comp", &comp);
+    t.print();
+    println!(
+        "peak concurrent seqs: sync {} -> compressed {} ({:.2}x, target >= 1.5); \
+         async throughput {:.2}x sync (target >= 1.0)",
+        sync.peak_running,
+        comp.peak_running,
+        comp.peak_running as f64 / sync.peak_running as f64,
+        async_arm.tok_per_s() / sync.tok_per_s(),
+    );
+
+    let report = Json::obj(vec![
+        (
+            "workload",
+            Json::obj(vec![
+                ("seed", Json::num(trace_cfg.seed as f64)),
+                ("num_requests", Json::num(num_requests as f64)),
+                (
+                    "prompt",
+                    Json::str(&format!("{}..={}", trace_cfg.prompt_min, trace_cfg.prompt_max)),
+                ),
+                (
+                    "out_tokens",
+                    Json::str(&format!("{}..={}", trace_cfg.out_min, trace_cfg.out_max)),
+                ),
+                ("capacity_pages", Json::num(CAPACITY_PAGES as f64)),
+                ("page_tokens", Json::num(PAGE as f64)),
+                ("cold_after_tokens", Json::num(COLD_AFTER as f64)),
+                ("comp_rank", Json::num(COMP_RANK as f64)),
+                ("comp_ratio", Json::num(comp_ratio)),
+                ("max_running", Json::num(sched_cfg.max_running as f64)),
+                ("model", Json::str("DeepSeek-V3.1")),
+                ("config", Json::str("DP8/TP1")),
+                ("kernel", Json::str("SnapMLA FP8")),
+            ]),
+        ),
+        ("sync", tiered_result_json(false, &sync)),
+        ("tiered_async", arm_json(&async_arm, &sync)),
+        ("tiered_async_comp", arm_json(&comp, &sync)),
+    ]);
+    snapmla::bench::write_report("serve_tiered", report.clone());
+    if !quick {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_tiered.json");
+        match std::fs::write(&path, report.to_string_pretty()) {
+            Ok(()) => println!("[report] {}", path.display()),
+            Err(e) => eprintln!("warn: could not write {path:?}: {e}"),
+        }
+    }
+}

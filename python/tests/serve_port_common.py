@@ -145,6 +145,7 @@ GPU = dict(
     hbm_bw=4.0e12,
     hbm_bytes=141.0e9,
     nvlink_bw=450.0e9,
+    pcie_bw=64.0e9,
     launch_s=4.0e-6,
     peak_util=0.88,
 )
@@ -347,7 +348,12 @@ def spec_step_s(cfg, batch, context, draft_len):
 
 
 def spill_s(tokens):
-    return WIRE_FP8_PER_TOKEN * tokens / GPU["hbm_bw"] + 2.0 * GPU["launch_s"]
+    """perfmodel::e2e::host_spill_s — KV to host DRAM over the PCIe link."""
+    return WIRE_FP8_PER_TOKEN * tokens / GPU["pcie_bw"] + 2.0 * GPU["launch_s"]
+
+
+host_spill_s = spill_s
+prefetch_s = spill_s  # symmetric full-duplex link
 
 
 def handoff_s(tokens):
@@ -355,10 +361,34 @@ def handoff_s(tokens):
     return WIRE_FP8_PER_TOKEN * tokens / GPU["nvlink_bw"] + COLLECTIVE_LATENCY_S
 
 
+def decompress_s(rank_r, tokens):
+    """perfmodel cost of attending over rank-reduced cold pages: a d_c x r
+    up-projection per cold token per layer on the tensor cores."""
+    return (
+        2.0 * rank_r * MODEL["d_c"] * MODEL["n_layers"] * tokens
+        / (GPU["bf16_tflops"] * 1e12 * GPU["peak_util"])
+    )
+
+
 # --- coordinator::scheduler ---------------------------------------------------
 
 def pages_for(tokens, page):
     return -(-tokens // page)
+
+
+def sched_pages(cfg, tokens):
+    """Resident pages for `tokens` under the scheduler's tiered view
+    (coordinator::scheduler::TieredConfig::resident_pages): pages fully
+    older than the hot window count at the cold codec's page ratio.
+    Identical to pages_for when the tiered gate is off. cold_after is a
+    page multiple, so the per-token delta is always 0 or 1."""
+    page = cfg["page"]
+    total = pages_for(tokens, page)
+    tc = cfg.get("tiered")
+    if not tc or not tc.get("cold_after"):
+        return total
+    cold = max(tokens - tc["cold_after"], 0) // page
+    return total - cold + math.ceil(cold * tc["ratio"])
 
 
 def decide_alternating(cfg, waiting, running, free_pages):
@@ -415,18 +445,34 @@ def decide_mixed(cfg, waiting, running, free_pages):
     decodable = [r for r in running if r[2] == 0 and r[1] < cfg["max_context"]]
     decodable = decodable[:decode_cap]
     decode_idxs = [r[0] for r in decodable]
-    growth = sum(1 for r in decodable if r[1] % cfg["page"] == 0)
+    # residency-aware growth: with the cold-compression tier on, a page
+    # crossing the hot window shrinks to the codec ratio, so a boundary
+    # crossing can cost 0 pages; sched_pages == pages_for when tiered off
+    # (the delta is 1 exactly at page boundaries), keeping this branch
+    # byte-identical for plain configs
+    growth = sum(
+        sched_pages(cfg, r[1] + 1) - sched_pages(cfg, r[1]) for r in decodable
+    )
+    tc = cfg.get("tiered")
+    tiered_async = bool(tc and tc.get("async"))
     # a resume may only use pages beyond the decode set's growth, or a
     # boundary-parked decode batch ping-pongs preempt/resume forever
     if waiting and waiting[0][2]:
         w = waiting[0]
         if (
             len(running) < cfg["max_running"]
-            and pages_for(w[1] + 1, cfg["page"]) <= max(free_pages - growth, 0)
+            and sched_pages(cfg, w[1] + 1) <= max(free_pages - growth, 0)
         ):
-            return ("resume", w[0])
+            # the tiered gate turns the synchronous restore stall into a
+            # prefetch issued ahead of the sequence joining the batch
+            return ("prefetch", w[0]) if tiered_async else ("resume", w[0])
     if growth > free_pages:
-        return ("preempt", running[-1][0])
+        # ... and the synchronous spill stall into an async host eviction
+        # (the victim's pages stay SpillInFlight — not yet free)
+        return (
+            ("spill", running[-1][0]) if tiered_async
+            else ("preempt", running[-1][0])
+        )
     page_budget = free_pages - growth
 
     # hybrid fallback: with nothing decoding and no chunked prefill in
@@ -448,7 +494,7 @@ def decide_mixed(cfg, waiting, running, free_pages):
         for w in waiting[: min(cfg["max_prefill_batch"], slots)]:
             if w[2] or w[1] > cfg["max_prefill_tokens"]:
                 break
-            need = pages_for(w[1] + 1, cfg["page"])
+            need = sched_pages(cfg, w[1] + 1)
             if pages_needed + need > free_pages:
                 break
             pages_needed += need
@@ -466,7 +512,7 @@ def decide_mixed(cfg, waiting, running, free_pages):
             cands.append((False, r[0], r[1], r[2]))
             item_slots -= 1
     reserved = sum(
-        pages_for(r[1] + r[2] + 1, cfg["page"]) - pages_for(r[1], cfg["page"])
+        sched_pages(cfg, r[1] + r[2] + 1) - sched_pages(cfg, r[1])
         for r in running
         if r[2] > 0
     )
@@ -481,7 +527,10 @@ def decide_mixed(cfg, waiting, running, free_pages):
                 break
             if w[1] + 1 > cfg["max_context"]:
                 break
-            need = pages_for(w[1] + 1, cfg["page"])
+            # residency-aware admission is where the compressed cold tier
+            # buys concurrency: a long prompt's cold pages reserve only
+            # ratio * pages, so more sequences fit the same HBM
+            need = sched_pages(cfg, w[1] + 1)
             if reserved + need > max(free_pages - growth, 0):
                 break
             reserved += need
@@ -668,6 +717,38 @@ def simulate(trace, scen):
         assert timing == "event" and prefill_ranks == 0, (
             "elastic membership requires the colocated event-driven mode"
         )
+    # tiered KV cache (mirrors Scenario::tiered / TieredSim): an async host
+    # spill/prefetch engine whose PCIe transfers complete as events overlapped
+    # with decode, plus an optional rank-reduced cold-page compression tier
+    # that discounts residency for pages older than the hot window
+    tiered = scen.get("tiered")
+    tiered_async = bool(tiered and tiered.get("async"))
+    if tiered:
+        assert (
+            timing == "event"
+            and prefill_ranks == 0
+            and not elastic
+            and not spec
+            and policy == "mixed_chunked"
+        ), "tiered cache requires the colocated event-driven mixed mode"
+        assert (tiered.get("cold_after") or 0) % page == 0, (
+            "cold_after must be a page multiple (every page wholly hot or "
+            "wholly cold; residency deltas stay in {-1, 0, 1})"
+        )
+        assert all(r["group"] is None for r in trace), (
+            "the compression tier does not compose with shared prefixes yet"
+        )
+        # the scheduler's TieredConfig gate: residency-aware page math plus
+        # async spill/prefetch action kinds
+        sched_cfg = dict(sched_cfg, tiered=dict(tiered))
+    # per-rank tier-transfer engine state (kvcache::tiered in the real
+    # server): in-flight spills hold their pages until the PCIe copy lands;
+    # in-flight prefetches hold their pages from issue. Each direction of
+    # the full-duplex host link serializes independently.
+    spill_fl = [[] for _ in range(n)]  # (sid, ready_at, pages) per rank
+    prefetch_fl = [[] for _ in range(n)]  # (sid, ready_at) per rank
+    dn_free = [0.0] * n  # device->host link busy-until
+    up_free = [0.0] * n  # host->device link busy-until
 
     seqs = {
         r["id"]: dict(
@@ -711,6 +792,7 @@ def simulate(trace, scen):
         spills=0, restores=0, handoffs=0, wire_fp8_bytes=0, wire_bf16_bytes=0,
         routed=[0] * n,
         dropped=0, recovered=0, evacuated=0, fails=0, joins=0, drains=0,
+        prefetches=0, peak_running=0,
     )
     # membership / autoscale state (inert unless scen carries `elastic`)
     fail_sched = sorted(elastic["failures"]) if elastic else []
@@ -772,9 +854,27 @@ def simulate(trace, scen):
         r = ranks[ri]
         return (r["waiting"] or r["running"]) and t == r["t"]
 
+    def respages(tokens):
+        # resident pages for `tokens` of cache: pages fully older than the
+        # hot window live in the compressed cold tier at the codec's page
+        # ratio. Equals pages_for exactly when compression is off, so every
+        # accounting site below stays byte-identical for plain runs.
+        total = pages_for(tokens, page)
+        if not tiered or not tiered.get("cold_after"):
+            return total
+        cold = max(tokens - tiered["cold_after"], 0) // page
+        return total - cold + math.ceil(cold * tiered["ratio"])
+
+    def grow_pages(tokens):
+        # pages a one-token append claims: 0 or 1 in plain mode (the
+        # equivalent of the old `cached % page == 0` boundary check), and
+        # possibly -1 under compression — a page crossing into the cold
+        # window FREES capacity, so callers treat this as signed
+        return respages(tokens + 1) - respages(tokens)
+
     def private_pages(sid):
         s = seqs[sid]
-        return pages_for(s["cached"], page) - s["adopted"] - s["transferred"]
+        return respages(s["cached"]) - s["adopted"] - s["transferred"]
 
     def hit_pages(rank, sid):
         s = seqs[sid]
@@ -1073,7 +1173,19 @@ def simulate(trace, scen):
             return decide_prefill_rank(prefill_sched_cfg, wview, rview, r["free"])
         if policy == "alternating":
             return decide_alternating(sched_cfg, wview, rview, r["free"])
-        return decide_mixed(sched_cfg, wview, rview, r["free"])
+        act = decide_mixed(sched_cfg, wview, rview, r["free"])
+        if tiered_async:
+            # the tier engine serializes host evictions: one spill in
+            # flight per rank, and a sequence cannot prefetch back until
+            # its own spill has landed. Blocked ops wait on the flight's
+            # ready-time (an event-loop candidate), not on a poll.
+            if act[0] == "spill" and spill_fl[ri]:
+                return ("idle",)
+            if act[0] == "prefetch":
+                head = r["waiting"][0]
+                if any(f[0] == head for f in spill_fl[ri]):
+                    return ("idle",)
+        return act
 
     def apply(ri, action, t_start):
         """Apply one scheduler action; returns its (speed-scaled) cost.
@@ -1097,8 +1209,8 @@ def simulate(trace, scen):
             t_emit = None if t_start is None else t_start + cost
             for sid in ids:
                 s = seqs[sid]
-                r["free"] -= pages_for(s["prompt"], page)
-                used_pages_total += pages_for(s["prompt"], page)
+                r["free"] -= respages(s["prompt"])
+                used_pages_total += respages(s["prompt"])
                 s["cached"] = s["prompt"]
                 s["prefilled"] = s["prompt"]
                 publish(r, sid)
@@ -1136,15 +1248,24 @@ def simulate(trace, scen):
             ids = [r["running"][i] for i in action[1]]
             ctx = max(seqs[sid]["cached"] for sid in ids) + 1
             cost = decode_step_s(mcfg, len(ids), ctx) * speeds[ri]
+            if tiered and tiered.get("cold_after"):
+                # decompression-on-access: cold pages hold rank-r latents
+                # that the attention step first up-projects back to d_c
+                cold = sum(
+                    (max(seqs[sid]["cached"] - tiered["cold_after"], 0) // page)
+                    * page
+                    for sid in ids
+                )
+                cost += decompress_s(tiered["rank"], cold) * speeds[ri]
             stats["decode_steps"] += 1
             stats["decode_batch_sum"] += len(ids)
             t_emit = None if t_start is None else t_start + cost
             done = []
             for sid in ids:
                 s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                    used_pages_total += 1
+                grow = grow_pages(s["cached"])
+                r["free"] -= grow
+                used_pages_total += grow
                 s["cached"] += 1
                 s["generated"] += 1
                 run_rem[ri] -= 1
@@ -1190,9 +1311,9 @@ def simulate(trace, scen):
                     sched_cfg["max_context"] - s["cached"],
                 )
                 for _ in range(take):
-                    if s["cached"] % page == 0:
-                        r["free"] -= 1
-                        used_pages_total += 1
+                    grow = grow_pages(s["cached"])
+                    r["free"] -= grow
+                    used_pages_total += grow
                     s["cached"] += 1
                     s["generated"] += 1
                     run_rem[ri] -= 1
@@ -1242,6 +1363,13 @@ def simulate(trace, scen):
             dctx = max((seqs[sid]["cached"] for sid in decode_ids), default=-1) + 1
             cctx = max((seqs[sid]["cached"] + t for (sid, t) in chunk_plan), default=0)
             cost = mixed_step_s(mcfg, len(decode_ids), dctx, total_chunk, cctx) * speeds[ri]
+            if tiered and tiered.get("cold_after") and decode_ids:
+                cold = sum(
+                    (max(seqs[sid]["cached"] - tiered["cold_after"], 0) // page)
+                    * page
+                    for sid in decode_ids
+                )
+                cost += decompress_s(tiered["rank"], cold) * speeds[ri]
             if decode_ids:
                 stats["decode_steps"] += 1
                 stats["decode_batch_sum"] += len(decode_ids)
@@ -1249,7 +1377,7 @@ def simulate(trace, scen):
             done = []
             for (sid, take) in chunk_plan:
                 s = seqs[sid]
-                grow = pages_for(s["cached"] + take, page) - pages_for(s["cached"], page)
+                grow = respages(s["cached"] + take) - respages(s["cached"])
                 r["free"] -= grow
                 used_pages_total += grow
                 s["cached"] += take
@@ -1266,9 +1394,9 @@ def simulate(trace, scen):
                         done.append(sid)
             for sid in decode_ids:
                 s = seqs[sid]
-                if s["cached"] % page == 0:
-                    r["free"] -= 1
-                    used_pages_total += 1
+                grow = grow_pages(s["cached"])
+                r["free"] -= grow
+                used_pages_total += grow
                 s["cached"] += 1
                 s["generated"] += 1
                 run_rem[ri] -= 1
@@ -1288,14 +1416,34 @@ def simulate(trace, scen):
             wait_po[ri] -= s["prompt"] + s["out"]
             wait_rem[ri] -= s["out"] - s["generated"]
             cost = spill_s(s["cached"]) * speeds[ri]
-            r["free"] -= pages_for(s["cached"], page)
-            used_pages_total += pages_for(s["cached"], page)
+            r["free"] -= respages(s["cached"])
+            used_pages_total += respages(s["cached"])
             s["spilled"] = False
             s["adopted"] = 0
             s["transferred"] = 0
             stats["restores"] += 1
             r["running"].append(sid)
             run_rem[ri] += s["out"] - s["generated"]
+        elif kind == "prefetch":
+            # async resume: the pages are claimed now (PrefetchInFlight),
+            # the PCIe copy rides the host->device link, and the sequence
+            # joins the batch when the flight lands — the rank pays nothing
+            # and keeps decoding in the meantime
+            sid = r["waiting"].pop(0)
+            s = seqs[sid]
+            wait_po[ri] -= s["prompt"] + s["out"]
+            wait_rem[ri] -= s["out"] - s["generated"]
+            pg = respages(s["cached"])
+            r["free"] -= pg
+            used_pages_total += pg
+            s["spilled"] = False
+            s["adopted"] = 0
+            s["transferred"] = 0
+            stats["restores"] += 1
+            stats["prefetches"] += 1
+            start = max(t_start, up_free[ri])
+            up_free[ri] = start + prefetch_s(s["cached"]) * speeds[ri]
+            prefetch_fl[ri].append((sid, up_free[ri]))
         elif kind == "preempt":
             sid = r["running"].pop(action[1])
             s = seqs[sid]
@@ -1306,6 +1454,24 @@ def simulate(trace, scen):
             used_pages_total -= pp
             # the spill snapshot privatizes adopted pages (exactness over
             # dedup): the restore reallocates every page
+            s["adopted"] = 0
+            s["transferred"] = 0
+            s["spilled"] = True
+            stats["spills"] += 1
+            r["waiting"].insert(0, sid)
+            wait_po[ri] += s["prompt"] + s["out"]
+            wait_rem[ri] += s["out"] - s["generated"]
+        elif kind == "spill":
+            # async preempt: the victim leaves the batch now, but its pages
+            # stay SpillInFlight (not yet free) until the device->host copy
+            # lands; the rank pays nothing for the eviction itself
+            sid = r["running"].pop(action[1])
+            s = seqs[sid]
+            run_rem[ri] -= s["out"] - s["generated"]
+            pp = private_pages(sid)
+            start = max(t_start, dn_free[ri])
+            dn_free[ri] = start + host_spill_s(s["cached"]) * speeds[ri]
+            spill_fl[ri].append((sid, dn_free[ri], pp))
             s["adopted"] = 0
             s["transferred"] = 0
             s["spilled"] = True
@@ -1403,10 +1569,14 @@ def simulate(trace, scen):
                 else used_pages_total
             )
             stats["peak_pages"] = max(stats["peak_pages"], used)
+            stats["peak_running"] = max(
+                stats["peak_running"], sum(len(r["running"]) for r in ranks)
+            )
     else:
         while (
             next_arrival < len(trace)
             or in_flight
+            or (tiered_async and any(spill_fl[ri] or prefetch_fl[ri] for ri in range(n)))
             or (any(r["waiting"] or r["running"] for r in ranks) if naive else bool(busy))
         ):
             iters += 1
@@ -1428,6 +1598,9 @@ def simulate(trace, scen):
                 if next_arrival < len(trace):
                     cands.append(trace[next_arrival]["arrival_s"])
                 cands.extend(ready_at for (_, ready_at) in in_flight)
+                if tiered_async:
+                    cands.extend(f[1] for fl in spill_fl for f in fl)
+                    cands.extend(f[1] for fl in prefetch_fl for f in fl)
                 if elastic:
                     if next_fail < len(fail_sched):
                         cands.append(fail_sched[next_fail][0])
@@ -1451,6 +1624,15 @@ def simulate(trace, scen):
                 for (_, ready_at) in in_flight:
                     if min_c is None or ready_at < min_c:
                         min_c = ready_at
+                if tiered_async:
+                    for fl in spill_fl:
+                        for f in fl:
+                            if min_c is None or f[1] < min_c:
+                                min_c = f[1]
+                    for fl in prefetch_fl:
+                        for f in fl:
+                            if min_c is None or f[1] < min_c:
+                                min_c = f[1]
                 if elastic:
                     if next_fail < len(fail_sched):
                         ft = fail_sched[next_fail][0]
@@ -1486,6 +1668,33 @@ def simulate(trace, scen):
                 progressed = True
             if (prefill_ranks > 0 or elastic) and deliver():
                 progressed = True
+            if tiered_async:
+                # pump the tier engine: landed spills release their pages
+                # (SpillInFlight -> Host), landed prefetches join the batch
+                # (PrefetchInFlight -> Hbm) and wake their rank
+                for ri in range(n):
+                    if spill_fl[ri] and spill_fl[ri][0][1] <= clock:
+                        keep = []
+                        for (sid, ready_at, pp) in spill_fl[ri]:
+                            if ready_at <= clock:
+                                ranks[ri]["free"] += pp
+                                used_pages_total -= pp
+                                progressed = True
+                            else:
+                                keep.append((sid, ready_at, pp))
+                        spill_fl[ri][:] = keep
+                    if prefetch_fl[ri] and prefetch_fl[ri][0][1] <= clock:
+                        keep = []
+                        for (sid, ready_at) in prefetch_fl[ri]:
+                            if ready_at <= clock:
+                                s = seqs[sid]
+                                ranks[ri]["running"].append(sid)
+                                run_rem[ri] += s["out"] - s["generated"]
+                                touch(ri)
+                                progressed = True
+                            else:
+                                keep.append((sid, ready_at))
+                        prefetch_fl[ri][:] = keep
             if auto and clock >= next_eval:
                 while next_eval <= clock:
                     next_eval += auto["eval_interval_s"]
@@ -1576,6 +1785,15 @@ def simulate(trace, scen):
                     for (_, ready_at) in in_flight:
                         if ready_at > clock and (lat is None or ready_at < lat):
                             lat = ready_at
+                    if tiered_async:
+                        for fl in spill_fl:
+                            for f in fl:
+                                if f[1] > clock and (lat is None or f[1] < lat):
+                                    lat = f[1]
+                        for fl in prefetch_fl:
+                            for f in fl:
+                                if f[1] > clock and (lat is None or f[1] < lat):
+                                    lat = f[1]
                     if elastic:
                         if next_fail < len(fail_sched):
                             ft = fail_sched[next_fail][0]
@@ -1602,6 +1820,9 @@ def simulate(trace, scen):
                 else used_pages_total
             )
             stats["peak_pages"] = max(stats["peak_pages"], used)
+            stats["peak_running"] = max(
+                stats["peak_running"], sum(len(r["running"]) for r in ranks)
+            )
 
     wall = clock
     for r in ranks:
@@ -1644,6 +1865,7 @@ def simulate(trace, scen):
         spills=stats["spills"],
         restores=stats["restores"],
         handoffs=stats["handoffs"],
+        peak_running=stats["peak_running"],
         transferred_gb_fp8=stats["wire_fp8_bytes"] / 1e9,
         transferred_gb_bf16=stats["wire_bf16_bytes"] / 1e9,
         routed=stats["routed"],
@@ -1656,6 +1878,8 @@ def simulate(trace, scen):
     if itl:
         res["itl_p50_ms"] = percentile(itl, 50.0) * 1e3
         res["itl_p95_ms"] = percentile(itl, 95.0) * 1e3
+    if tiered:
+        res["prefetches"] = stats["prefetches"]
     if spec:
         res["spec_steps"] = stats["spec_steps"]
         res["spec_drafted_tokens"] = stats["spec_drafted"]

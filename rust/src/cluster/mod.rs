@@ -18,5 +18,5 @@ pub mod server;
 pub mod topology;
 
 pub use collective::{allreduce_time_s, transfer_time_s, CollectiveSpec};
-pub use server::{ClusterMode, ClusterServer};
+pub use server::{ClusterMode, ClusterServer, TierLinkModel};
 pub use topology::{NodeTopology, RankMemory};

@@ -69,6 +69,60 @@ impl Default for SpecConfig {
     }
 }
 
+/// Tiered KV-cache policy knobs (`kvcache::tiered`). Disabled configs take
+/// exactly the non-tiered decision path — `decide` returns byte-identical
+/// actions, so turning the tier off IS the synchronous binary scheduler.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TieredConfig {
+    /// gate: when false every other knob is ignored
+    pub enabled: bool,
+    /// spills/prefetches overlap with decode as EventLoop flights: the
+    /// scheduler emits `SpillAsync`/`Prefetch` instead of the synchronous
+    /// `Preempt`/`Resume` stalls
+    pub async_io: bool,
+    /// hot window in tokens: pages fully older than this re-encode into
+    /// the rank-reduced cold format (0 = compression off). MUST be a page
+    /// multiple so every page is wholly hot or wholly cold; per-token
+    /// `resident_pages` deltas then stay in {-1, 0, 1} (a page crossing
+    /// into the cold window can FREE capacity, so growth sums are signed).
+    pub cold_after: usize,
+    /// resident bytes of a cold page relative to the FP8 hot format
+    /// (`kvcache::compress::ColdPageCodec::page_ratio`)
+    pub comp_ratio: f64,
+    /// latent rank r < d_c of the cold codec (prices decompress-on-access)
+    pub comp_rank: usize,
+}
+
+impl TieredConfig {
+    pub fn disabled() -> TieredConfig {
+        TieredConfig {
+            enabled: false,
+            async_io: false,
+            cold_after: 0,
+            comp_ratio: 1.0,
+            comp_rank: 0,
+        }
+    }
+
+    /// Pages actually resident for a `tokens`-deep cache under this tier
+    /// policy: pages fully below the hot window count at the cold codec's
+    /// ratio. Identical to the plain page count when the gate is off.
+    pub fn resident_pages(&self, tokens: usize, page_tokens: usize) -> usize {
+        let total = tokens.div_ceil(page_tokens);
+        if !self.enabled || self.cold_after == 0 {
+            return total;
+        }
+        let cold = tokens.saturating_sub(self.cold_after) / page_tokens;
+        total - cold + (cold as f64 * self.comp_ratio).ceil() as usize
+    }
+}
+
+impl Default for TieredConfig {
+    fn default() -> TieredConfig {
+        TieredConfig::disabled()
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct SchedulerConfig {
     /// max sequences per decode step (largest decode bucket batch)
@@ -96,6 +150,8 @@ pub struct SchedulerConfig {
     pub disagg_prefill: bool,
     /// speculative multi-token decoding (MTP draft/verify) gate
     pub spec: SpecConfig,
+    /// tiered KV cache (async host spill/prefetch + cold compression) gate
+    pub tiered: TieredConfig,
     pub policy: SchedPolicy,
 }
 
@@ -128,6 +184,14 @@ pub enum Action {
     Resume(usize),
     /// spill this running sequence's pages and move it back to waiting
     Preempt(usize),
+    /// tiered async: issue a host-to-HBM prefetch of this spilled waiting
+    /// sequence's pages ahead of its resume — the sequence joins the
+    /// running set when the flight lands, overlapped with decode
+    Prefetch(usize),
+    /// tiered async: spill this running sequence's pages to host as an
+    /// overlapped flight; its pages stay `TierState::SpillInFlight`
+    /// (not yet free) until the transfer lands
+    SpillAsync(usize),
     /// disaggregated prefill rank: this running sequence finished its
     /// prefill — serialize its KV (`kvcache::transfer::KvWireBlock`) and
     /// migrate it to a decode rank (no engine call)
@@ -141,11 +205,30 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        if cfg.tiered.enabled && cfg.tiered.cold_after > 0 {
+            // a page-aligned hot window keeps every page wholly hot or
+            // wholly cold, bounding per-token resident deltas to
+            // {-1, 0, 1} (the growth sums below are signed for the -1)
+            assert_eq!(
+                cfg.tiered.cold_after % cfg.page_tokens,
+                0,
+                "tiered cold_after must be a page multiple"
+            );
+            assert!(
+                cfg.tiered.comp_ratio > 0.0 && cfg.tiered.comp_ratio <= 1.0,
+                "tiered comp_ratio must be in (0, 1]"
+            );
+        }
         Scheduler { cfg }
     }
 
     fn pages_for(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.cfg.page_tokens)
+    }
+
+    /// Residency-aware page count (== `pages_for` with the tier off).
+    fn resident_pages(&self, tokens: usize) -> usize {
+        self.cfg.tiered.resident_pages(tokens, self.cfg.page_tokens)
     }
 
     /// How deep into a FCFS waiting queue `decide` can possibly look: a
@@ -194,7 +277,9 @@ impl Scheduler {
         if !w.spilled {
             return None;
         }
-        if running.len() < slot_cap && self.pages_for(w.tokens + 1) <= free_pages {
+        // residency-aware (== pages_for with the tier off; the tiered gate
+        // only supports the mixed policy)
+        if running.len() < slot_cap && self.resident_pages(w.tokens + 1) <= free_pages {
             return Some(w.idx);
         }
         None
@@ -221,7 +306,10 @@ impl Scheduler {
             if w.spilled || w.tokens > self.cfg.max_prefill_tokens {
                 break; // FCFS: an oversized/parked head blocks
             }
-            let need = self.pages_for(w.tokens + 1); // +1 headroom token
+            // residency-aware (== pages_for with the tier off): with the
+            // cold-compression tier on, a long prompt's cold pages reserve
+            // only ratio * pages — this is where the tier buys concurrency
+            let need = self.resident_pages(w.tokens + 1); // +1 headroom token
             if pages_needed + need > free_pages {
                 break;
             }
@@ -342,27 +430,42 @@ impl Scheduler {
             .take(decode_cap)
             .map(|r| r.idx)
             .collect();
-        let growth = running
+        // residency-aware growth: with the cold-compression tier on, a
+        // boundary crossing whose oldest page simultaneously falls out of
+        // the hot window can cost 0 new pages; identical to the plain
+        // `context % page == 0` count when the tier is off (the resident
+        // delta is 1 exactly at page boundaries)
+        let growth: isize = running
             .iter()
             .filter(decodable)
             .take(decode_cap)
-            .filter(|r| r.context % self.cfg.page_tokens == 0)
-            .count();
+            .map(|r| {
+                self.resident_pages(r.context + 1) as isize
+                    - self.resident_pages(r.context) as isize
+            })
+            .sum();
+        // pages left after the decode set grows; a negative growth (a page
+        // crossing into the cold window frees capacity) ADDS headroom
+        let after_growth = (free_pages as isize - growth).max(0) as usize;
+        let tiered_async = self.cfg.tiered.enabled && self.cfg.tiered.async_io;
         // a resume may only use pages beyond the decode set's growth, or a
         // boundary-parked decode batch ping-pongs preempt/resume forever
-        if let Some(idx) = self.resume_head(
-            waiting,
-            running,
-            free_pages.saturating_sub(growth),
-            self.cfg.max_running,
-        ) {
-            return Action::Resume(idx);
+        if let Some(idx) = self.resume_head(waiting, running, after_growth, self.cfg.max_running) {
+            // the tiered gate turns the synchronous restore stall into a
+            // prefetch issued ahead of the sequence joining the batch
+            return if tiered_async { Action::Prefetch(idx) } else { Action::Resume(idx) };
         }
-        if growth > free_pages {
+        if growth > free_pages as isize {
+            // ... and the synchronous spill stall into an async host
+            // eviction whose pages stay SpillInFlight — not yet free
             let victim = running.last().unwrap().idx;
-            return Action::Preempt(victim);
+            return if tiered_async {
+                Action::SpillAsync(victim)
+            } else {
+                Action::Preempt(victim)
+            };
         }
-        let mut page_budget = free_pages - growth;
+        let mut page_budget = (free_pages as isize - growth) as usize;
 
         // 2) monolithic fallback when chunking has nothing to ride on.
         //    Disabled on disaggregated prefill ranks: there is never a
@@ -394,11 +497,12 @@ impl Scheduler {
         }
         // full-reservation admission: every in-flight prefill (and each
         // admission) keeps pages for its entire remaining prompt + headroom
-        let mut reserved: usize = running
+        let mut reserved: isize = running
             .iter()
             .filter(|r| r.pending_prefill > 0)
             .map(|r| {
-                self.pages_for(r.context + r.pending_prefill + 1) - self.pages_for(r.context)
+                self.resident_pages(r.context + r.pending_prefill + 1) as isize
+                    - self.resident_pages(r.context) as isize
             })
             .sum();
         if !head_parked {
@@ -412,8 +516,11 @@ impl Scheduler {
                 if w.tokens + 1 > self.cfg.max_context {
                     break; // oversized head blocks (rejected upstream)
                 }
-                let need = self.pages_for(w.tokens + 1);
-                if reserved + need > free_pages.saturating_sub(growth) {
+                // residency-aware admission is where the compressed cold
+                // tier buys concurrency: a long prompt's cold pages reserve
+                // only ratio * pages, so more sequences fit the same HBM
+                let need = self.resident_pages(w.tokens + 1) as isize;
+                if reserved + need > after_growth as isize {
                     break; // FCFS: the head admission must fit first
                 }
                 reserved += need;
@@ -496,6 +603,7 @@ mod tests {
             max_running: 4,
             disagg_prefill: false,
             spec: SpecConfig::disabled(),
+            tiered: TieredConfig::disabled(),
             policy,
         }
     }
@@ -843,6 +951,111 @@ mod tests {
         for (wv, rv, free) in states {
             assert_eq!(off.decide(&wv, &rv, free), base.decide(&wv, &rv, free));
         }
+    }
+
+    // --- tiered KV-cache gate -----------------------------------------------
+
+    fn tiered_sched(async_io: bool, cold_after: usize, ratio: f64) -> Scheduler {
+        let mut c = cfg(SchedPolicy::MixedChunked);
+        c.tiered = TieredConfig {
+            enabled: true,
+            async_io,
+            cold_after,
+            comp_ratio: ratio,
+            comp_rank: 192,
+        };
+        Scheduler::new(c)
+    }
+
+    #[test]
+    fn tiered_async_swaps_stalls_for_flights() {
+        let s = tiered_sched(true, 0, 1.0);
+        // growth overrun: the victim spills asynchronously instead of
+        // taking a synchronous preempt stall
+        let a = s.decide(&[], &[r(0, 64), r(1, 128)], 1);
+        assert_eq!(a, Action::SpillAsync(1));
+        // a spilled head that fits prefetches ahead of its resume
+        let a = s.decide(&[ws(0, 100), w(1, 10)], &[], 4);
+        assert_eq!(a, Action::Prefetch(0));
+    }
+
+    #[test]
+    fn tiered_compression_admits_more_at_fixed_pages() {
+        // hot window = 1 page, cold pages at half price: a 129-token prompt
+        // resides in ceil(130/64)=3 total pages but only 1 of them is cold
+        // at admission time... use a longer prompt so the effect is visible:
+        // 257 tokens -> 5 total pages, hot window 64 -> cold = (258-64)/64
+        // = 3 pages -> resident = 5 - 3 + ceil(1.5) = 4 pages
+        let s = tiered_sched(true, 64, 0.5);
+        assert_eq!(s.cfg.tiered.resident_pages(258, 64), 4);
+        // plain scheduler needs 5 free pages to admit; tiered admits at 4
+        // (257 tokens exceed the 128-token prefill bucket, so admission
+        // goes through the chunk path in both cases)
+        let plain = mixed();
+        assert_eq!(plain.decide(&[w(0, 257)], &[], 4), Action::Idle);
+        match s.decide(&[w(0, 257)], &[], 4) {
+            Action::Mixed { prefill_chunks, .. } => {
+                assert_eq!(prefill_chunks.len(), 1);
+                assert!(prefill_chunks[0].from_waiting);
+                assert!(prefill_chunks[0].tokens > 0);
+            }
+            other => panic!("expected chunked admission, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tiered_resident_deltas_stay_bounded_and_go_negative() {
+        // 128 tokens -> 2 pages, cold = 64/64 = 1 -> resident 2 - 1 +
+        // ceil(0.5) = 2
+        let s = tiered_sched(true, 64, 0.5);
+        assert_eq!(s.cfg.tiered.resident_pages(128, 64), 2);
+        // page-aligned cold_after bounds per-token deltas to {-1, 0, 1};
+        // the -1 (a page crossing into the cold window frees capacity) is
+        // WHY the scheduler growth sums are signed
+        let mut saw_negative = false;
+        for t in 0..512 {
+            let d = s.cfg.tiered.resident_pages(t + 1, 64) as isize
+                - s.cfg.tiered.resident_pages(t, 64) as isize;
+            assert!((-1..=1).contains(&d), "delta {d} at {t}");
+            saw_negative |= d < 0;
+        }
+        assert!(saw_negative, "half-ratio compression must free a page somewhere");
+    }
+
+    #[test]
+    fn tiered_disabled_config_is_decision_identical() {
+        // enabled: false must take the original return paths even with the
+        // other knobs set — the gate is the ONLY thing consulted
+        let mut c = cfg(SchedPolicy::MixedChunked);
+        c.tiered = TieredConfig {
+            enabled: false,
+            async_io: true,
+            cold_after: 64,
+            comp_ratio: 0.5,
+            comp_rank: 192,
+        };
+        let off = Scheduler::new(c);
+        let base = mixed();
+        let states: Vec<(Vec<WaitingSeq>, Vec<RunningSeq>, usize)> = vec![
+            (vec![], vec![r(0, 70), r(1, 130)], 100),
+            (vec![w(0, 200)], vec![r(0, 70)], 100),
+            (vec![], vec![r(0, 64), r(1, 128)], 1),
+            (vec![ws(0, 100), w(1, 10)], vec![], 4),
+            (vec![w(0, 129), w(1, 10)], vec![], 10),
+            (vec![w(0, 30), w(1, 50)], vec![], 100),
+        ];
+        for (wv, rv, free) in states {
+            assert_eq!(off.decide(&wv, &rv, free), base.decide(&wv, &rv, free));
+        }
+    }
+
+    #[test]
+    fn tiered_sync_arm_keeps_blocking_actions() {
+        // async_io off: the compression residency math applies but the
+        // actions stay the synchronous Resume/Preempt pair
+        let s = tiered_sched(false, 0, 1.0);
+        assert_eq!(s.decide(&[], &[r(0, 64), r(1, 128)], 1), Action::Preempt(1));
+        assert_eq!(s.decide(&[ws(0, 100)], &[], 4), Action::Resume(0));
     }
 
     // --- disaggregated prefill rank -----------------------------------------

@@ -14,7 +14,7 @@ use super::metrics::ServerMetrics;
 use super::request::{FinishReason, RequestOutcome, ServeRequest};
 use super::scheduler::{
     Action, PrefillChunk, RunningSeq, SchedPolicy, Scheduler, SchedulerConfig, SpecConfig,
-    WaitingSeq,
+    TieredConfig, WaitingSeq,
 };
 use super::sequence::{SeqPhase, Sequence};
 use crate::anyhow;
@@ -99,6 +99,7 @@ impl Server {
             max_running: max_decode_batch + max_prefill_batch,
             disagg_prefill: false,
             spec: SpecConfig::disabled(),
+            tiered: TieredConfig::disabled(),
             policy,
         };
         let eos = engine.manifest.model.eos;
@@ -341,7 +342,12 @@ impl Server {
             Action::SpecDecode { idxs, draft_len } => {
                 self.run_spec(idxs, draft_len)?;
             }
-            Action::Resume(idx) => {
+            // The in-process server has no virtual clock to overlap host
+            // transfers against, so the async tier actions degrade to their
+            // blocking equivalents: a prefetch is a synchronous restore, an
+            // async spill a synchronous preempt. Only the simulate harness
+            // (and the cluster layer's virtual drive) model the overlap.
+            Action::Resume(idx) | Action::Prefetch(idx) => {
                 debug_assert_eq!(idx, 0, "only the queue head resumes");
                 let mut seq = self.waiting.pop_front().unwrap();
                 let sp = seq.take_spilled().expect("resume target carries spilled KV");
@@ -352,7 +358,7 @@ impl Server {
                 self.metrics.restores += 1;
                 self.running.push(seq);
             }
-            Action::Preempt(idx) => {
+            Action::Preempt(idx) | Action::SpillAsync(idx) => {
                 let mut seq = self.running.remove(idx);
                 let sp = self
                     .cache

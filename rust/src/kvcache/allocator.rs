@@ -18,6 +18,13 @@ pub struct PageAllocator {
     rc: Vec<u32>,
     /// seq id → allocated page indices, in sequence order
     maps: BTreeMap<u64, Vec<usize>>,
+    /// pages under trie retention (the cache marks them via `track`) —
+    /// membership plus the rc==1 tally below give O(1) evictable accounting
+    tracked: Vec<bool>,
+    /// tracked pages whose only remaining reference is the tracker's
+    /// (rc == 1): exactly the evictable-page count, maintained at every
+    /// rc transition instead of swept from the trie
+    tracked_rc1: usize,
 }
 
 #[derive(Debug, PartialEq, Eq)]
@@ -35,6 +42,50 @@ impl PageAllocator {
             free: (0..capacity).rev().collect(),
             rc: vec![0; capacity],
             maps: BTreeMap::new(),
+            tracked: vec![false; capacity],
+            tracked_rc1: 0,
+        }
+    }
+
+    /// Mark `page` as retention-tracked (idempotent). The caller must hold
+    /// a reference on it already (trie retention ⇒ rc ≥ 1).
+    pub fn track(&mut self, page: usize) {
+        if !self.tracked[page] {
+            debug_assert!(self.rc[page] > 0, "tracking a free page");
+            self.tracked[page] = true;
+            if self.rc[page] == 1 {
+                self.tracked_rc1 += 1;
+            }
+        }
+    }
+
+    /// Stop tracking `page` (idempotent) — call BEFORE dropping the
+    /// tracker's own reference.
+    pub fn untrack(&mut self, page: usize) {
+        if self.tracked[page] {
+            self.tracked[page] = false;
+            if self.rc[page] == 1 {
+                self.tracked_rc1 -= 1;
+            }
+        }
+    }
+
+    /// Tracked pages whose only reference is the tracker's — maintained
+    /// incrementally at every rc transition, O(1) to read.
+    pub fn tracked_evictable(&self) -> usize {
+        self.tracked_rc1
+    }
+
+    /// rc is about to move from `old` on `page`; fold the transition into
+    /// the tracked-rc1 tally. Every rc mutation funnels through here.
+    fn note_rc_change(&mut self, page: usize, old: u32, new: u32) {
+        if self.tracked[page] {
+            if old == 1 && new != 1 {
+                self.tracked_rc1 -= 1;
+            } else if old != 1 && new == 1 {
+                self.tracked_rc1 += 1;
+            }
+            debug_assert!(new > 0, "a tracked page must be untracked before its last release");
         }
     }
 
@@ -70,6 +121,7 @@ impl PageAllocator {
     pub fn grow(&mut self, seq: u64) -> Result<usize, AllocError> {
         let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
         let page = self.free.pop().ok_or(AllocError::OutOfPages)?;
+        debug_assert!(!self.tracked[page], "free pages are never tracked");
         self.rc[page] = 1;
         map.push(page);
         Ok(page)
@@ -79,6 +131,7 @@ impl PageAllocator {
     /// the copy-on-write staging slot.
     pub fn alloc_unmapped(&mut self) -> Result<usize, AllocError> {
         let page = self.free.pop().ok_or(AllocError::OutOfPages)?;
+        debug_assert!(!self.tracked[page], "free pages are never tracked");
         self.rc[page] = 1;
         Ok(page)
     }
@@ -90,7 +143,9 @@ impl PageAllocator {
             return Err(AllocError::PageNotLive);
         }
         let map = self.maps.get_mut(&seq).ok_or(AllocError::UnknownSequence)?;
+        let old = self.rc[page];
         self.rc[page] += 1;
+        self.note_rc_change(page, old, old + 1);
         map.push(page);
         Ok(())
     }
@@ -101,7 +156,9 @@ impl PageAllocator {
         if self.rc[page] == 0 {
             return Err(AllocError::PageNotLive);
         }
+        let old = self.rc[page];
         self.rc[page] += 1;
+        self.note_rc_change(page, old, old + 1);
         Ok(())
     }
 
@@ -111,7 +168,9 @@ impl PageAllocator {
         if self.rc[page] == 0 {
             return Err(AllocError::PageNotLive);
         }
+        let old = self.rc[page];
         self.rc[page] -= 1;
+        self.note_rc_change(page, old, old - 1);
         if self.rc[page] == 0 {
             self.free.push(page);
             return Ok(true);
@@ -211,6 +270,10 @@ impl PageAllocator {
             if on_free[p] != (self.rc[p] == 0) {
                 return Err(format!("page {p}: free-list {} but rc {}", on_free[p], self.rc[p]));
             }
+        }
+        let swept = (0..self.capacity).filter(|&p| self.tracked[p] && self.rc[p] == 1).count();
+        if swept != self.tracked_rc1 {
+            return Err(format!("tracked rc==1 sweep {swept} != incremental {}", self.tracked_rc1));
         }
         Ok(())
     }
@@ -321,6 +384,27 @@ mod tests {
         assert_eq!(a.share(1, 0), Err(AllocError::PageNotLive));
         assert_eq!(a.retain(0), Err(AllocError::PageNotLive));
         assert_eq!(a.release_page(0), Err(AllocError::PageNotLive));
+    }
+
+    #[test]
+    fn tracked_evictable_follows_rc_transitions() {
+        let mut a = PageAllocator::new(4);
+        a.register(1);
+        a.register(2);
+        let p = a.grow(1).unwrap();
+        a.retain(p).unwrap(); // trie retention, rc 2
+        a.track(p);
+        assert_eq!(a.tracked_evictable(), 0, "live owner blocks eviction");
+        a.release(1); // rc 2 → 1: only the trie reference remains
+        assert_eq!(a.tracked_evictable(), 1);
+        a.share(2, p).unwrap(); // rc 1 → 2: adopted again
+        assert_eq!(a.tracked_evictable(), 0);
+        a.release(2); // rc → 1
+        assert_eq!(a.tracked_evictable(), 1);
+        a.untrack(p); // trie eviction untracks, then drops its reference
+        assert_eq!(a.tracked_evictable(), 0);
+        assert!(a.release_page(p).unwrap());
+        a.validate(&[]).unwrap();
     }
 
     #[test]

@@ -19,10 +19,12 @@
 //!   decode path).
 
 use super::allocator::{AllocError, PageAllocator};
+use super::compress::ColdPage;
 use super::page::{Page, PAGE_TOKENS};
 use super::prefix::PrefixTrie;
+use super::tiered::TierState;
 use super::transfer::{KvWireBlock, WirePayload};
-use crate::fp8::{bf16_decode, bf16_encode};
+use crate::fp8::{bf16_decode, bf16_encode, e4m3_encode};
 use std::collections::BTreeMap;
 
 /// Cache precision mode (SnapMLA FP8 vs FlashMLA BF16 baseline).
@@ -70,6 +72,10 @@ struct Bf16Page {
 enum PageData {
     Fp8(Vec<Page>),      // [n_layers]
     Bf16(Vec<Bf16Page>), // [n_layers]
+    /// rank-reduced cold format (tiered compression, FP8 mode only) —
+    /// the page table is a heterogeneous heap: any physical slot can hold
+    /// either format and readers dispatch per access
+    Cold(Vec<ColdPage>), // [n_layers]
 }
 
 /// Sequence handle.
@@ -125,10 +131,13 @@ pub struct PagedKvCache {
     pub cfg: CacheConfig,
     alloc: PageAllocator,
     pages: Vec<Option<PageData>>, // indexed by physical page id
+    /// residency state per physical page (tiered spill/prefetch lifecycle)
+    tier: Vec<TierState>,
     seqs: BTreeMap<SeqHandle, SeqState>,
     trie: PrefixTrie,
     appends: u64, // stats: token-append operations
     cow_copies: u64,
+    cold_promotions: u64,
 }
 
 impl PagedKvCache {
@@ -139,10 +148,12 @@ impl PagedKvCache {
             cfg,
             alloc: PageAllocator::new(cfg.capacity_pages),
             pages,
+            tier: vec![TierState::Hbm; cfg.capacity_pages],
             seqs: BTreeMap::new(),
             trie: PrefixTrie::new(),
             appends: 0,
             cow_copies: 0,
+            cold_promotions: 0,
         }
     }
 
@@ -172,15 +183,25 @@ impl PagedKvCache {
 
     /// Trie-retained pages no live sequence references — reclaimable on
     /// demand by LRU eviction. The DP router reads this as a rank's
-    /// spill-free headroom beyond the free list.
+    /// spill-free headroom beyond the free list. O(1): the allocator
+    /// maintains the count at every rc transition of a tracked page; debug
+    /// builds re-derive the trie sweep and pin the two equal.
     pub fn evictable_pages(&self) -> usize {
-        let mut evictable = 0usize;
-        self.trie.for_each_page(|p| {
-            if self.alloc.ref_count(p) == 1 {
-                evictable += 1;
-            }
-        });
-        evictable
+        let fast = self.alloc.tracked_evictable();
+        #[cfg(debug_assertions)]
+        {
+            let mut sweep = 0usize;
+            self.trie.for_each_page(|p| {
+                if self.alloc.ref_count(p) == 1 {
+                    sweep += 1;
+                }
+            });
+            debug_assert_eq!(
+                fast, sweep,
+                "incremental evictable counter drifted from the trie sweep"
+            );
+        }
+        fast
     }
 
     /// Pages obtainable without touching live sequences: the free list plus
@@ -240,6 +261,17 @@ impl PagedKvCache {
                 let stored = self.pages[p].is_some();
                 return Err(format!("page {p}: live {live} but storage {stored}"));
             }
+            // tier invariants: a live page is never marked host-resident, and
+            // a free slot never claims an in-flight transfer
+            match self.tier[p] {
+                TierState::Host if live => {
+                    return Err(format!("page {p}: live but tiered Host"));
+                }
+                TierState::SpillInFlight | TierState::PrefetchInFlight if !live => {
+                    return Err(format!("page {p}: free but in a tier flight"));
+                }
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -274,6 +306,25 @@ impl PagedKvCache {
                         for &r in &page.rope {
                             out.extend_from_slice(&r.to_le_bytes());
                         }
+                    }
+                }
+                PageData::Cold(layers_pages) => {
+                    for cp in layers_pages {
+                        out.extend_from_slice(&(cp.rank as u64).to_le_bytes());
+                        for &b in &cp.basis {
+                            out.extend_from_slice(&b.to_le_bytes());
+                        }
+                        out.extend_from_slice(&cp.codes);
+                        for &s in &cp.scales {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                        for &r in &cp.rope {
+                            out.extend_from_slice(&r.to_le_bytes());
+                        }
+                        for &s in &cp.src_scales {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                        out.extend_from_slice(&(cp.used as u64).to_le_bytes());
                     }
                 }
             }
@@ -321,6 +372,7 @@ impl PagedKvCache {
         let pages: Vec<usize> = table[..full].to_vec();
         for p in self.trie.insert(prompt_prefix, &pages) {
             self.alloc.retain(p).expect("sequence page is live");
+            self.alloc.track(p);
         }
     }
 
@@ -362,6 +414,9 @@ impl PagedKvCache {
             let lp = keep_pages - 1;
             let phys = self.alloc.pages_of(seq).expect("live sequence")[lp];
             debug_assert_eq!(self.alloc.ref_count(phys), 1, "draft pages are private");
+            // a deep rollback can rewind the tail into a page the cold sweep
+            // compressed since the checkpoint; erasure is a write access
+            self.promote_if_cold(phys);
             let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
             match self.pages[phys].as_mut().expect("allocated page") {
                 PageData::Fp8(layers_pages) => {
@@ -381,6 +436,7 @@ impl PagedKvCache {
                         }
                     }
                 }
+                PageData::Cold(_) => unreachable!("promoted to the hot format above"),
             }
         }
         self.seqs.get_mut(&seq).unwrap().tokens = target;
@@ -423,9 +479,178 @@ impl PagedKvCache {
         for data in sp.pages {
             let p = self.alloc.grow(seq).expect("reserved above");
             self.pages[p] = Some(data);
+            self.tier[p] = TierState::Hbm;
         }
         self.seqs.get_mut(&seq).unwrap().tokens = sp.tokens;
         Ok(())
+    }
+
+    // --- tiered residency (async spill/prefetch + cold compression) --------
+
+    /// Residency state of physical page `p`.
+    pub fn tier_of(&self, p: usize) -> TierState {
+        self.tier[p]
+    }
+
+    /// Mark every page of `seq` as `SpillInFlight`: the bytes stay in HBM
+    /// (reads remain valid) but the pages must NOT be treated as
+    /// reclaimable until [`Self::finish_spill`] lands the transfer. Returns
+    /// the page count riding the flight.
+    pub fn begin_spill(&mut self, seq: SeqHandle) -> Result<usize, AllocError> {
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.to_vec();
+        for &p in &table {
+            debug_assert_eq!(
+                self.tier[p],
+                TierState::Hbm,
+                "page {p} is already in a tier transition"
+            );
+            self.tier[p] = TierState::SpillInFlight;
+        }
+        Ok(table.len())
+    }
+
+    /// Land an async spill: clone the page bytes into a host snapshot
+    /// (bit-exact, like [`Self::spill`]) and free the HBM pages. Freed
+    /// slots keep a `Host` tombstone; pages still shared with other
+    /// sequences (adopted prefixes) return to `Hbm`.
+    pub fn finish_spill(&mut self, seq: SeqHandle) -> Result<SpilledKv, AllocError> {
+        let tokens = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.to_vec();
+        let pages: Vec<PageData> = table
+            .iter()
+            .map(|&p| {
+                debug_assert_eq!(
+                    self.tier[p],
+                    TierState::SpillInFlight,
+                    "finish_spill without begin_spill on page {p}"
+                );
+                self.pages[p].clone().expect("allocated page")
+            })
+            .collect();
+        for p in self.alloc.release(seq) {
+            self.pages[p] = None;
+            self.tier[p] = TierState::Host;
+        }
+        for &p in &table {
+            if self.alloc.ref_count(p) > 0 {
+                self.tier[p] = TierState::Hbm;
+            }
+        }
+        self.seqs.remove(&seq);
+        Ok(SpilledKv { tokens, pages })
+    }
+
+    /// Start an async prefetch: claim HBM pages for the snapshot NOW (the
+    /// capacity is committed at issue, evicting prefix retention like
+    /// [`Self::restore`]) and write the bytes in as `PrefetchInFlight` —
+    /// unreadable until [`Self::finish_prefetch`] lands the transfer.
+    pub fn begin_prefetch(&mut self, seq: SeqHandle, sp: SpilledKv) -> Result<(), AllocError> {
+        assert!(!self.seqs.contains_key(&seq), "prefetch over a live sequence");
+        if self.available_pages() < sp.pages.len() {
+            return Err(AllocError::OutOfPages);
+        }
+        while self.alloc.free_pages() < sp.pages.len() {
+            if !self.evict_one() {
+                return Err(AllocError::OutOfPages);
+            }
+        }
+        self.register(seq);
+        for data in sp.pages {
+            let p = self.alloc.grow(seq).expect("reserved above");
+            self.pages[p] = Some(data);
+            self.tier[p] = TierState::PrefetchInFlight;
+        }
+        self.seqs.get_mut(&seq).unwrap().tokens = sp.tokens;
+        Ok(())
+    }
+
+    /// Land an async prefetch: the sequence's pages become readable HBM
+    /// residents. Returns the page count that landed.
+    pub fn finish_prefetch(&mut self, seq: SeqHandle) -> Result<usize, AllocError> {
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.to_vec();
+        for &p in &table {
+            debug_assert_eq!(
+                self.tier[p],
+                TierState::PrefetchInFlight,
+                "finish_prefetch without begin_prefetch on page {p}"
+            );
+            self.tier[p] = TierState::Hbm;
+        }
+        Ok(table.len())
+    }
+
+    /// Re-encode `seq`'s pages behind the hot window into the rank-`rank`
+    /// cold format: every full private page whose last token is more than
+    /// `cold_after_tokens` behind the tail, excluding the tail page itself
+    /// (append and rollback always meet hot bytes). Shared pages, pages in
+    /// a tier transition, and BF16-mode caches are left alone. Returns the
+    /// pages compressed by this sweep.
+    pub fn compress_cold(
+        &mut self,
+        seq: SeqHandle,
+        cold_after_tokens: usize,
+        rank: usize,
+    ) -> Result<usize, AllocError> {
+        if self.cfg.mode != CacheMode::Fp8 {
+            return Ok(0);
+        }
+        let tokens = self.seqs.get(&seq).ok_or(AllocError::UnknownSequence)?.tokens;
+        let table = self.alloc.pages_of(seq).ok_or(AllocError::UnknownSequence)?.to_vec();
+        let cold_pages = tokens.saturating_sub(cold_after_tokens) / PAGE_TOKENS;
+        let limit = cold_pages.min(table.len().saturating_sub(1));
+        let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
+        let mut done = 0usize;
+        for &phys in table.iter().take(limit) {
+            if self.alloc.ref_count(phys) != 1 || self.tier[phys] != TierState::Hbm {
+                continue;
+            }
+            if let Some(PageData::Fp8(layers)) = self.pages[phys].as_ref() {
+                let cold: Vec<ColdPage> = layers
+                    .iter()
+                    .map(|p| ColdPage::encode(p, d_c, d_r, rank, phys as u64))
+                    .collect();
+                self.pages[phys] = Some(PageData::Cold(cold));
+                done += 1;
+            }
+        }
+        Ok(done)
+    }
+
+    /// Cold (rank-reduced) pages currently resident.
+    pub fn cold_pages(&self) -> usize {
+        self.pages.iter().flatten().filter(|d| matches!(d, PageData::Cold(_))).count()
+    }
+
+    /// Cold pages promoted back to the hot format by a write access.
+    pub fn cold_promotions(&self) -> u64 {
+        self.cold_promotions
+    }
+
+    /// Decompress a cold page back to the hot FP8 format in place (write
+    /// access promotes). Reconstruction re-quantizes under the page's
+    /// ORIGINAL per-token sigmas so the kernel view stays in the same
+    /// scale domain; RoPE returns verbatim.
+    fn promote_if_cold(&mut self, phys: usize) {
+        let (d_c, d_r) = (self.cfg.d_c, self.cfg.d_r);
+        let Some(PageData::Cold(layers)) = self.pages[phys].as_ref() else { return };
+        let mut hot: Vec<Page> = Vec::with_capacity(layers.len());
+        let mut rec = vec![0.0f32; d_c];
+        for cp in layers {
+            let mut page = Page::new(d_c, d_r);
+            for t in 0..cp.used {
+                cp.decode_token(t, d_c, &mut rec);
+                let s = if cp.src_scales[t] != 0.0 { cp.src_scales[t] } else { 1.0 };
+                for (o, &x) in page.content[t * d_c..(t + 1) * d_c].iter_mut().zip(&rec) {
+                    *o = e4m3_encode(x / s);
+                }
+                page.scales[t] = s;
+            }
+            page.rope.copy_from_slice(&cp.rope);
+            page.used = cp.used;
+            hot.push(page);
+        }
+        self.pages[phys] = Some(PageData::Fp8(hot));
+        self.cold_promotions += 1;
     }
 
     // --- wire transfer (prefill→decode KV migration) -----------------------
@@ -449,6 +674,7 @@ impl PagedKvCache {
                 WirePayload::Bf16 { content: Vec::with_capacity(tokens * layers * d_c) }
             }
         };
+        let mut rec = vec![0.0f32; d_c];
         for t in 0..tokens {
             let phys = table[t / PAGE_TOKENS];
             let slot = t % PAGE_TOKENS;
@@ -464,6 +690,18 @@ impl PagedKvCache {
                     for page in pages {
                         content.extend_from_slice(&page.content[slot * d_c..(slot + 1) * d_c]);
                         rope.extend_from_slice(&page.rope[slot * d_r..(slot + 1) * d_r]);
+                    }
+                }
+                // cold pages decompress on access: reconstruct the full-domain
+                // latent and re-quantize under the ORIGINAL per-token sigma so
+                // the importer stays in the same scale domain
+                (PageData::Cold(pages), WirePayload::Fp8 { codes, scales }) => {
+                    for cp in pages {
+                        cp.decode_token(slot, d_c, &mut rec);
+                        let s = if cp.src_scales[slot] > 0.0 { cp.src_scales[slot] } else { 1.0 };
+                        codes.extend(rec.iter().map(|&x| e4m3_encode(x / s)));
+                        scales.push(s);
+                        rope.extend_from_slice(&cp.rope[slot * d_r..(slot + 1) * d_r]);
                     }
                 }
                 _ => unreachable!("page data always matches the cache mode"),
@@ -541,6 +779,7 @@ impl PagedKvCache {
         let alloc = &self.alloc;
         match self.trie.evict_lru_preferring(|p| alloc.ref_count(p) == 1) {
             Some(page) => {
+                self.alloc.untrack(page);
                 if self.alloc.release_page(page).expect("trie page is live") {
                     self.pages[page] = None;
                 }
@@ -558,7 +797,14 @@ impl PagedKvCache {
                         return Err(AllocError::OutOfPages);
                     }
                 }
-                r => return r,
+                r => {
+                    // a reused slot may carry a Host tombstone from the
+                    // tiered lifecycle; allocation re-arms residency
+                    if let Ok(p) = r {
+                        self.tier[p] = TierState::Hbm;
+                    }
+                    return r;
+                }
             }
         }
     }
@@ -571,7 +817,12 @@ impl PagedKvCache {
                         return Err(AllocError::OutOfPages);
                     }
                 }
-                r => return r,
+                r => {
+                    if let Ok(p) = r {
+                        self.tier[p] = TierState::Hbm;
+                    }
+                    return r;
+                }
             }
         }
     }
@@ -589,6 +840,8 @@ impl PagedKvCache {
         }
         let phys = self.alloc.pages_of(seq).unwrap()[page_idx];
         if self.alloc.ref_count(phys) <= 1 {
+            // write access decompresses a cold page back to the hot format
+            self.promote_if_cold(phys);
             return Ok(phys);
         }
         let fresh = self.alloc_slot()?;
@@ -598,6 +851,7 @@ impl PagedKvCache {
             self.pages[old_freed] = None;
         }
         self.cow_copies += 1;
+        self.promote_if_cold(fresh);
         Ok(fresh)
     }
 
@@ -725,6 +979,11 @@ impl PagedKvCache {
         for t in 0..tokens {
             let phys = table[t / PAGE_TOKENS];
             let slot = t % PAGE_TOKENS;
+            debug_assert_ne!(
+                self.tier[phys],
+                TierState::PrefetchInFlight,
+                "read through a page whose prefetch has not landed"
+            );
             match self.pages[phys].as_ref().unwrap() {
                 PageData::Fp8(layers_pages) => {
                     let page = &layers_pages[layer];
@@ -745,6 +1004,21 @@ impl PagedKvCache {
                         rope_out[t * d_r + i] = bf16_decode(page.rope[slot * d_r + i]);
                     }
                     sigma_out[t] = 1.0;
+                }
+                PageData::Cold(layers_pages) => {
+                    // decompress-on-access: reconstruct full-domain, then map
+                    // back onto the kernel's (grid, sigma) scale domain
+                    let cp = &layers_pages[layer];
+                    let s = if cp.src_scales[slot] > 0.0 { cp.src_scales[slot] } else { 1.0 };
+                    let row = &mut content_out[t * d_c..(t + 1) * d_c];
+                    cp.decode_token(slot, d_c, row);
+                    for x in row.iter_mut() {
+                        *x /= s;
+                    }
+                    for i in 0..d_r {
+                        rope_out[t * d_r + i] = bf16_decode(cp.rope[slot * d_r + i]);
+                    }
+                    sigma_out[t] = s;
                 }
             }
         }
@@ -767,6 +1041,11 @@ impl PagedKvCache {
             let t = start + k;
             let phys = table[t / PAGE_TOKENS];
             let slot = t % PAGE_TOKENS;
+            debug_assert_ne!(
+                self.tier[phys],
+                TierState::PrefetchInFlight,
+                "read through a page whose prefetch has not landed"
+            );
             match self.pages[phys].as_ref().unwrap() {
                 PageData::Fp8(layers_pages) => {
                     layers_pages[layer].fetch_dequant(
@@ -784,6 +1063,16 @@ impl PagedKvCache {
                     }
                     for i in 0..d_r {
                         rope_out[k * d_r + i] = bf16_decode(page.rope[slot * d_r + i]);
+                    }
+                }
+                PageData::Cold(layers_pages) => {
+                    // full-domain reconstruction; rope rides along verbatim
+                    // and rescales by the original sigma, like the hot path
+                    let cp = &layers_pages[layer];
+                    cp.decode_token(slot, d_c, &mut content_out[k * d_c..(k + 1) * d_c]);
+                    let s = if cp.src_scales[slot] > 0.0 { cp.src_scales[slot] } else { 1.0 };
+                    for i in 0..d_r {
+                        rope_out[k * d_r + i] = bf16_decode(cp.rope[slot * d_r + i]) * s;
                     }
                 }
             }
@@ -1296,6 +1585,143 @@ mod tests {
         fill_tokens(&mut cache, 2, 65, 18); // needs 2 pages → evicts trie page
         assert_eq!(cache.retained_pages(), 0);
         assert_eq!(cache.tokens_of(2), 65);
+        cache.validate().unwrap();
+    }
+
+    // --- cold-page compression tier -----------------------------------------
+
+    /// Full-domain reconstruction (content * sigma) of the first layer.
+    fn full_domain(cache: &PagedKvCache, seq: u64, n: usize) -> Vec<f32> {
+        let c = cache.cfg;
+        let (content, _, sigma) = views(cache, seq, n);
+        (0..n * c.d_c).map(|i| content[i] * sigma[i / c.d_c]).collect()
+    }
+
+    #[test]
+    fn compress_cold_spares_the_tail_and_reads_stay_within_the_rank_bound() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 200, 21); // 4 pages: 64+64+64+8
+        let hot = full_domain(&cache, 1, 200);
+        let (_, hot_rope, _) = views(&cache, 1, 200);
+
+        let rank = 12;
+        // hot window 64 tokens → (200-64)/64 = 2 pages eligible
+        let done = cache.compress_cold(1, 64, rank).unwrap();
+        assert_eq!(done, 2);
+        assert_eq!(cache.cold_pages(), 2);
+        cache.validate().unwrap();
+
+        // decompression-on-access: gather reads through the cold pages; the
+        // reconstruction stays inside the rank's fidelity budget while the
+        // hot pages (incl. the tail) are untouched bit for bit
+        let cold = full_domain(&cache, 1, 200);
+        assert_eq!(cold[128 * c.d_c..200 * c.d_c], hot[128 * c.d_c..200 * c.d_c]);
+        let (num, den) = hot[..128 * c.d_c]
+            .iter()
+            .zip(&cold[..128 * c.d_c])
+            .fold((0.0f64, 0.0f64), |(n, d), (&h, &r)| {
+                (n + ((h - r) as f64).powi(2), d + (h as f64).powi(2))
+            });
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < super::super::compress::rel_l2_bound(rank, c.d_c), "rel l2 {rel}");
+        // rope rides along verbatim
+        let (_, cold_rope, _) = views(&cache, 1, 200);
+        assert_eq!(hot_rope, cold_rope);
+
+        // appends keep landing in the hot tail
+        let mut rng = Rng::new(22);
+        let (ck, kr) = rand_token(&mut rng, &c);
+        cache.append_token(1, &ck, &kr).unwrap();
+        assert_eq!(cache.cold_pages(), 2);
+        cache.validate().unwrap();
+    }
+
+    #[test]
+    fn deep_rollback_promotes_a_cold_page_before_erasing_drafts() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 70, 23);
+        let ckpt = cache.checkpoint(1).unwrap();
+        fill_tokens(&mut cache, 1, 60, 24); // 130 tokens, 3 pages
+        // cold sweep since the checkpoint: pages 0 and 1 go cold
+        assert_eq!(cache.compress_cold(1, 0, 12).unwrap(), 2);
+
+        // rolling back to 70 erases drafts inside (now-cold) page 1: the
+        // erase is a write access, so the page promotes back to hot first
+        cache.rollback_to(&ckpt, 0).unwrap();
+        assert_eq!(cache.tokens_of(1), 70);
+        assert_eq!(cache.cold_promotions(), 1);
+        assert_eq!(cache.cold_pages(), 1, "page 0 stays cold");
+        cache.validate().unwrap();
+        // and the cache still reads/extends normally
+        fill_tokens(&mut cache, 1, 10, 25);
+        assert_eq!(cache.tokens_of(1), 80);
+    }
+
+    #[test]
+    fn export_wire_reads_through_cold_pages() {
+        let c = cfg(CacheMode::Fp8);
+        let mut src = PagedKvCache::new(c);
+        src.register(1);
+        fill_tokens(&mut src, 1, 130, 26);
+        src.compress_cold(1, 64, 12).unwrap();
+        assert_eq!(src.cold_pages(), 1);
+
+        // the wire block re-quantizes the cold reconstruction under the
+        // original sigmas, so hot pages, rope, and sigmas cross exactly;
+        // the cold range picks up one extra E4M3 rounding (3-bit mantissa:
+        // <= 2^-4 relative) between the exporter's direct reconstruction
+        // and the importer's grid codes
+        let wire = src.export_wire(1).unwrap();
+        let mut dst = PagedKvCache::new(c);
+        assert!(dst.import_wire(9, &wire).is_ok());
+        let (sc, s_rope, s_sig) = views(&src, 1, 130);
+        let (dc, d_rope, d_sig) = views(&dst, 9, 130);
+        assert_eq!(s_sig, d_sig);
+        assert_eq!(s_rope, d_rope);
+        // the first page (tokens 0..64) went cold in every layer; the rest
+        // stayed hot (`views` concatenates the layers)
+        let n = 130 * c.d_c;
+        for l in 0..c.n_layers {
+            let (s_l, d_l) = (&sc[l * n..(l + 1) * n], &dc[l * n..(l + 1) * n]);
+            assert_eq!(s_l[64 * c.d_c..], d_l[64 * c.d_c..], "hot pages verbatim, layer {l}");
+            for (i, (&a, &b)) in s_l[..64 * c.d_c].iter().zip(&d_l[..64 * c.d_c]).enumerate() {
+                let tol = a.abs().max(b.abs()) * 0.0625 + 1e-2;
+                assert!((a - b).abs() <= tol, "cold elt {i} layer {l}: {a} vs {b}");
+            }
+        }
+        dst.validate().unwrap();
+    }
+
+    #[test]
+    fn tiered_spill_roundtrip_preserves_cold_pages() {
+        let c = cfg(CacheMode::Fp8);
+        let mut cache = PagedKvCache::new(c);
+        cache.register(1);
+        fill_tokens(&mut cache, 1, 130, 27);
+        cache.compress_cold(1, 64, 12).unwrap();
+        let before = views(&cache, 1, 130);
+        let before_raw = cache.raw_seq_bytes(1);
+
+        let p0 = cache.alloc.pages_of(1).unwrap()[0];
+        cache.begin_spill(1).unwrap();
+        assert_eq!(cache.tier_of(p0), TierState::SpillInFlight);
+        let sp = cache.finish_spill(1).unwrap();
+        assert_eq!(cache.used_pages(), 0);
+        assert_eq!(cache.tier_of(p0), TierState::Host);
+
+        cache.begin_prefetch(1, sp).unwrap();
+        let p0 = cache.alloc.pages_of(1).unwrap()[0];
+        assert_eq!(cache.tier_of(p0), TierState::PrefetchInFlight);
+        cache.finish_prefetch(1).unwrap();
+        assert_eq!(cache.tier_of(p0), TierState::Hbm);
+        // bit-exact, cold format and all
+        assert_eq!(cache.raw_seq_bytes(1), before_raw);
+        assert_eq!(views(&cache, 1, 130), before);
+        assert_eq!(cache.cold_pages(), 1);
         cache.validate().unwrap();
     }
 }

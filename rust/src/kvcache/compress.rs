@@ -1,0 +1,323 @@
+//! Rank-reduced cold-page codec (tiered KV cache, compression tier).
+//!
+//! Pages untouched for long enough re-encode into a latent format of rank
+//! `r < d_c`: an orthonormal basis is fit to the page's own token rows
+//! (modified Gram-Schmidt over the rows, deterministic seeded completion
+//! when the rows are degenerate), each token keeps only its `r` projection
+//! coefficients as E4M3 codes behind a fresh per-token scale, and the
+//! decoupled RoPE half stays untouched at bf16 — position information is
+//! exact, only the content latent is approximated.
+//!
+//! Per-layer cold bytes: `r·PAGE_TOKENS` coefficient codes +
+//! `r·d_c·4` basis + `PAGE_TOKENS·4` scales + `2·d_r·PAGE_TOKENS` RoPE,
+//! vs the hot page's `d_c·PAGE_TOKENS + 2·d_r·PAGE_TOKENS +
+//! 4·PAGE_TOKENS`. At (d_c=512, r=192) the content payload shrinks ~2.6x;
+//! [`cold_ratio`] is the bytes-per-token ratio the scheduler and the
+//! simulate layer price capacity with.
+//!
+//! The codec is lossy by design. [`rel_l2_bound`] is the fidelity budget
+//! the `mla::fidelity` gate enforces on decode-realistic stimuli: the
+//! worst-case relative l2 of projecting onto an r-dimensional subspace
+//! fit from the data, plus quantization headroom.
+
+use super::page::{Page, PAGE_TOKENS};
+use crate::fp8::{e4m3_decode, e4m3_encode, per_token_scale};
+
+/// A cold (compressed) page of one layer: rank-`r` coefficients + basis
+/// instead of full-width content codes. RoPE rides along untouched.
+#[derive(Clone)]
+pub struct ColdPage {
+    /// reduction rank r < d_c
+    pub rank: usize,
+    /// orthonormal basis, row-major [rank, d_c] f32
+    pub basis: Vec<f32>,
+    /// E4M3 codes of the per-token coefficients, row-major [PAGE_TOKENS, rank]
+    pub codes: Vec<u8>,
+    /// f32 per-token coefficient scales [PAGE_TOKENS]
+    pub scales: Vec<f32>,
+    /// u16 bf16 aligned RoPE, copied verbatim from the hot page
+    pub rope: Vec<u16>,
+    /// per-token sigma of the SOURCE hot page — reconstruction returns to
+    /// the same scale domain the kernels expect [PAGE_TOKENS]
+    pub src_scales: Vec<f32>,
+    /// valid tokens (≤ PAGE_TOKENS)
+    pub used: usize,
+}
+
+/// Bytes-per-token ratio of a cold page vs a hot FP8 page (content codes +
+/// rope + scale), ignoring the amortized per-page basis. This is the
+/// `comp_ratio` the scheduler's `TieredConfig` prices resident capacity
+/// with — keep the two derivations in sync.
+pub fn cold_ratio(rank: usize, d_c: usize, d_r: usize) -> f64 {
+    (rank as f64 + 2.0 * d_r as f64 + 4.0) / (d_c as f64 + 2.0 * d_r as f64 + 4.0)
+}
+
+/// Fidelity budget for the cold tier: the guaranteed-achievable relative
+/// l2 of a rank-`r` projection on decode-realistic (decaying-spectrum)
+/// stimuli, plus E4M3 re-quantization headroom. `mla::fidelity` gates the
+/// codec against this; the property suite holds every random page under it.
+pub fn rel_l2_bound(rank: usize, d_c: usize) -> f64 {
+    (1.0 - rank as f64 / d_c as f64).sqrt() + 0.15
+}
+
+impl ColdPage {
+    /// Bytes of real storage this cold page holds (codes + scales + rope +
+    /// basis + source sigmas).
+    pub fn nbytes(&self, d_r: usize) -> usize {
+        self.codes.len()
+            + self.scales.len() * 4
+            + PAGE_TOKENS * d_r * 2
+            + self.basis.len() * 4
+            + self.src_scales.len() * 4
+    }
+
+    /// Compress one hot FP8 page. The basis is fit from the page's own
+    /// dequantized token rows; `seed` keeps degenerate-row completion
+    /// deterministic across runs (pass the physical page id).
+    pub fn encode(page: &Page, d_c: usize, d_r: usize, rank: usize, seed: u64) -> ColdPage {
+        assert!(rank >= 1 && rank < d_c, "cold rank must satisfy 1 <= r < d_c (got {rank})");
+        let used = page.used;
+        // dequantize the live rows back to f32 (scale domain removed; the
+        // source sigmas are kept so reconstruction can restore it)
+        let mut rows = vec![0.0f32; used * d_c];
+        for t in 0..used {
+            let s = page.scales[t];
+            for i in 0..d_c {
+                rows[t * d_c + i] = e4m3_decode(page.content[t * d_c + i]) * s;
+            }
+        }
+        let basis = fit_basis(&rows, used, d_c, rank, seed);
+        let mut codes = vec![0u8; PAGE_TOKENS * rank];
+        let mut scales = vec![0.0f32; PAGE_TOKENS];
+        let mut coeff = vec![0.0f32; rank];
+        for t in 0..used {
+            let row = &rows[t * d_c..(t + 1) * d_c];
+            for (k, c) in coeff.iter_mut().enumerate() {
+                *c = dot(row, &basis[k * d_c..(k + 1) * d_c]);
+            }
+            let s = per_token_scale(&coeff);
+            scales[t] = s;
+            for (k, &c) in coeff.iter().enumerate() {
+                codes[t * rank + k] = e4m3_encode(c / s);
+            }
+        }
+        ColdPage {
+            rank,
+            basis,
+            codes,
+            scales,
+            rope: page.rope.clone(),
+            src_scales: page.scales.clone(),
+            used,
+        }
+    }
+
+    /// Reconstruct token `slot`'s content row into `out` ([d_c] f32, full
+    /// scale domain — directly comparable to `Page::fetch_dequant` output).
+    pub fn decode_token(&self, slot: usize, d_c: usize, out: &mut [f32]) {
+        debug_assert!(slot < self.used, "decoding a slot past the cold page's live rows");
+        out[..d_c].fill(0.0);
+        let s = self.scales[slot];
+        for k in 0..self.rank {
+            let c = e4m3_decode(self.codes[slot * self.rank + k]) * s;
+            if c == 0.0 {
+                continue;
+            }
+            for (o, &b) in out[..d_c].iter_mut().zip(&self.basis[k * d_c..(k + 1) * d_c]) {
+                *o += c * b;
+            }
+        }
+    }
+
+    /// Relative l2 reconstruction error against the hot page this was
+    /// encoded from (live rows only; 0.0 for an empty page).
+    pub fn rel_l2_vs(&self, page: &Page, d_c: usize) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        let mut rec = vec![0.0f32; d_c];
+        for t in 0..self.used {
+            self.decode_token(t, d_c, &mut rec);
+            let s = page.scales[t];
+            for i in 0..d_c {
+                let want = (e4m3_decode(page.content[t * d_c + i]) * s) as f64;
+                let got = rec[i] as f64;
+                num += (want - got) * (want - got);
+                den += want * want;
+            }
+        }
+        if den == 0.0 {
+            0.0
+        } else {
+            (num / den).sqrt()
+        }
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Fit an orthonormal rank-`r` basis to `used` rows of width `d_c` by
+/// modified Gram-Schmidt over the rows in order, skipping rows that are
+/// (numerically) inside the span already collected. When fewer than `r`
+/// independent rows exist, the basis completes with orthonormalized
+/// deterministic pseudo-random directions from `seed` — the codec never
+/// returns a rank-deficient basis.
+fn fit_basis(rows: &[f32], used: usize, d_c: usize, rank: usize, seed: u64) -> Vec<f32> {
+    let mut basis: Vec<f32> = Vec::with_capacity(rank * d_c);
+    let mut have = 0usize;
+    let mut push_direction = |basis: &mut Vec<f32>, have: &mut usize, cand: &[f32]| -> bool {
+        let mut v = cand.to_vec();
+        // two orthogonalization passes keep the basis orthonormal to f32
+        // working precision even for nearly-dependent rows
+        for _ in 0..2 {
+            for k in 0..*have {
+                let b = &basis[k * d_c..(k + 1) * d_c];
+                let proj = dot(&v, b);
+                for (x, &bi) in v.iter_mut().zip(b) {
+                    *x -= proj * bi;
+                }
+            }
+        }
+        let norm = dot(&v, &v).sqrt();
+        let cand_norm = dot(cand, cand).sqrt();
+        // reject candidates that collapsed into the existing span
+        if norm <= f32::EPSILON.sqrt() * cand_norm.max(1.0) {
+            return false;
+        }
+        basis.extend(v.iter().map(|x| x / norm));
+        *have += 1;
+        true
+    };
+    for t in 0..used {
+        if have == rank {
+            break;
+        }
+        push_direction(&mut basis, &mut have, &rows[t * d_c..(t + 1) * d_c]);
+    }
+    // degenerate completion: seeded xorshift directions, orthonormalized
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).max(1);
+    let mut cand = vec![0.0f32; d_c];
+    while have < rank {
+        for c in cand.iter_mut() {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // uniform in [-1, 1)
+            *c = (state >> 40) as f32 / (1u64 << 23) as f32 - 1.0;
+        }
+        push_direction(&mut basis, &mut have, &cand);
+    }
+    basis
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn filled_page(d_c: usize, d_r: usize, tokens: usize, seed: u64) -> Page {
+        let mut page = Page::new(d_c, d_r);
+        let mut rng = Rng::new(seed);
+        for t in 0..tokens {
+            let c = rng.normal_vec(d_c, 1.5);
+            let r = rng.normal_vec(d_r, 20.0);
+            page.append_raw(t, d_c, d_r, &c, &r);
+        }
+        page
+    }
+
+    /// Rows drawn from a `k`-dimensional latent with decaying amplitudes
+    /// plus small isotropic noise — the decode-realistic stimulus family
+    /// the fidelity gate uses.
+    fn low_rank_page(d_c: usize, d_r: usize, tokens: usize, k: usize, seed: u64) -> Page {
+        let mut page = Page::new(d_c, d_r);
+        let mut rng = Rng::new(seed);
+        let dirs: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(d_c, 1.0)).collect();
+        for t in 0..tokens {
+            let amps = rng.normal_vec(k, 1.0);
+            let noise = rng.normal_vec(d_c, 0.01);
+            let mut c = noise;
+            for (j, dir) in dirs.iter().enumerate() {
+                let a = amps[j] / (1.0 + j as f32);
+                for (x, &d) in c.iter_mut().zip(dir) {
+                    *x += a * d;
+                }
+            }
+            let r = rng.normal_vec(d_r, 20.0);
+            page.append_raw(t, d_c, d_r, &c, &r);
+        }
+        page
+    }
+
+    #[test]
+    fn low_rank_pages_reconstruct_within_bound() {
+        let (d_c, d_r, rank) = (64, 8, 24);
+        for seed in [3, 4, 5] {
+            let page = low_rank_page(d_c, d_r, PAGE_TOKENS, 12, seed);
+            let cold = ColdPage::encode(&page, d_c, d_r, rank, seed);
+            let err = cold.rel_l2_vs(&page, d_c);
+            let bound = rel_l2_bound(rank, d_c);
+            assert!(err < bound, "seed {seed}: rel l2 {err} >= bound {bound}");
+            // genuinely low-rank content reconstructs far better than the
+            // worst-case budget
+            assert!(err < 0.25, "seed {seed}: rel l2 {err} too large for rank-12 data");
+        }
+    }
+
+    #[test]
+    fn full_rank_noise_stays_under_worst_case_budget() {
+        let (d_c, d_r, rank) = (32, 4, 24);
+        let page = filled_page(d_c, d_r, PAGE_TOKENS, 7);
+        let cold = ColdPage::encode(&page, d_c, d_r, rank, 7);
+        let err = cold.rel_l2_vs(&page, d_c);
+        // Gram-Schmidt over the first r rows reproduces those rows near-
+        // exactly, so even isotropic noise lands under sqrt(1 - r/d) + slack
+        assert!(err < rel_l2_bound(rank, d_c), "rel l2 {err}");
+    }
+
+    #[test]
+    fn rope_and_source_scales_ride_along_untouched() {
+        let (d_c, d_r) = (32, 8);
+        let page = filled_page(d_c, d_r, 50, 9);
+        let cold = ColdPage::encode(&page, d_c, d_r, 8, 9);
+        assert_eq!(cold.rope, page.rope);
+        assert_eq!(cold.src_scales, page.scales);
+        assert_eq!(cold.used, 50);
+    }
+
+    #[test]
+    fn degenerate_rows_complete_the_basis_deterministically() {
+        let (d_c, d_r, rank) = (16, 4, 8);
+        let mut page = Page::new(d_c, d_r);
+        // every row is the same direction: 1 independent row, 7 completions
+        for t in 0..10 {
+            page.append_raw(t, d_c, d_r, &[2.0; 16], &[1.0; 4]);
+        }
+        let a = ColdPage::encode(&page, d_c, d_r, rank, 42);
+        let b = ColdPage::encode(&page, d_c, d_r, rank, 42);
+        assert_eq!(a.basis.len(), rank * d_c);
+        assert_eq!(a.basis, b.basis, "same seed must produce the same completion");
+        // the basis is orthonormal
+        for i in 0..rank {
+            for j in 0..rank {
+                let d = dot(&a.basis[i * d_c..(i + 1) * d_c], &a.basis[j * d_c..(j + 1) * d_c]);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "basis[{i}]·basis[{j}] = {d}");
+            }
+        }
+        // identical rows reconstruct near-exactly
+        assert!(a.rel_l2_vs(&page, d_c) < 0.07);
+    }
+
+    #[test]
+    fn cold_ratio_matches_the_scheduler_pricing() {
+        // deepseek_v31 shape at rank 192: the ratio the benches configure
+        let r = cold_ratio(192, 512, 64);
+        assert!((r - 324.0 / 644.0).abs() < 1e-12);
+        assert!(r < 0.51 && r > 0.50);
+        // monotone in rank, 1.0 at full width
+        assert!(cold_ratio(64, 512, 64) < r);
+        assert!((cold_ratio(512, 512, 64) - 1.0).abs() < 1e-12);
+    }
+}

@@ -22,16 +22,28 @@
 //! serializes into the page-table-free [`transfer::KvWireBlock`] wire
 //! format for prefill→decode rank migration (bit-exact with
 //! spill/restore, ~half the bytes of a bf16-everything transfer).
+//!
+//! The **tiered** extension (`tiered`, `compress`) makes the host tier a
+//! first-class citizen: spills and prefetches become asynchronous flights
+//! priced on a per-direction PCIe link and overlapped with decode
+//! (`TierState` tracks per-page residency), and pages that have gone cold
+//! re-encode into the rank-reduced [`compress::ColdPage`] latent format —
+//! the page table is a heterogeneous heap (`cache::PageData`) mixing hot
+//! FP8, bf16, and cold low-rank pages, with decompression on access.
 
 pub mod allocator;
 pub mod blockwise;
 pub mod cache;
+pub mod compress;
 pub mod page;
 pub mod prefix;
+pub mod tiered;
 pub mod transfer;
 
 pub use allocator::PageAllocator;
 pub use cache::{CacheConfig, CacheMode, KvCheckpoint, PagedKvCache, SeqHandle, SpilledKv};
+pub use compress::{cold_ratio, rel_l2_bound, ColdPage};
 pub use page::{Page, PAGE_TOKENS};
 pub use prefix::PrefixTrie;
+pub use tiered::{TierEngine, TierState};
 pub use transfer::KvWireBlock;

@@ -1,0 +1,314 @@
+//! Tiered KV cache: async host spill/prefetch overlapped with decode.
+//!
+//! [`TierState`] tags every physical page of a [`PagedKvCache`]:
+//!
+//! * `Hbm` — resident, readable, the default.
+//! * `SpillInFlight` — a spill transfer is copying the page down to host
+//!   memory. The bytes are still in HBM (reads stay valid) but the page is
+//!   **not yet free**: the scheduler must not count it as reclaimable
+//!   until the flight lands.
+//! * `Host` — the page's last HBM slot was freed after its bytes landed on
+//!   the host (a tombstone on the free slot; reallocation re-arms `Hbm`).
+//! * `PrefetchInFlight` — an HBM slot is claimed and being filled from
+//!   host memory; the page is **not yet readable** until the flight lands.
+//!
+//! [`TierEngine`] drives the lifecycle in virtual time: `begin_spill` /
+//! `begin_prefetch` start a transfer on the rank's PCIe link (one clock
+//! per direction — same-direction transfers serialize, opposite
+//! directions are full-duplex, exactly the pricing `simulate::harness`
+//! and its Python port apply), and `poll(now)` completes every flight
+//! whose landing time has passed. Between begin and poll the decode loop
+//! keeps stepping — that overlap is the tentpole win the `serve_tiered`
+//! bench measures against the synchronous spill baseline.
+//!
+//! The engine also owns the cold sweep: [`TierEngine::compress_cold`]
+//! re-encodes pages that fell behind the hot window into the rank-reduced
+//! format of [`super::compress`].
+
+use super::allocator::AllocError;
+use super::cache::{PagedKvCache, SeqHandle, SpilledKv};
+use std::collections::BTreeMap;
+
+/// Residency state of one physical page (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierState {
+    /// resident and readable
+    Hbm,
+    /// spill transfer in flight: readable, but NOT reclaimable yet
+    SpillInFlight,
+    /// bytes live on the host; the HBM slot is free (tombstone)
+    Host,
+    /// prefetch transfer in flight: slot claimed, NOT readable yet
+    PrefetchInFlight,
+}
+
+/// Async spill/prefetch driver for one rank's cache (virtual time).
+pub struct TierEngine {
+    /// spill-direction (device→host) link busy-until clock
+    dn_free: f64,
+    /// prefetch-direction (host→device) link busy-until clock
+    up_free: f64,
+    /// spills in flight: seq → landing time
+    spilling: BTreeMap<SeqHandle, f64>,
+    /// prefetches in flight: seq → landing time
+    prefetching: BTreeMap<SeqHandle, f64>,
+    /// landed spills parked on the host, awaiting prefetch
+    host: BTreeMap<SeqHandle, SpilledKv>,
+    pub spills: u64,
+    pub prefetches: u64,
+    pub cold_pages_encoded: u64,
+}
+
+impl Default for TierEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TierEngine {
+    pub fn new() -> TierEngine {
+        TierEngine {
+            dn_free: 0.0,
+            up_free: 0.0,
+            spilling: BTreeMap::new(),
+            prefetching: BTreeMap::new(),
+            host: BTreeMap::new(),
+            spills: 0,
+            prefetches: 0,
+            cold_pages_encoded: 0,
+        }
+    }
+
+    /// Sequences parked on the host (landed spills).
+    pub fn host_seqs(&self) -> usize {
+        self.host.len()
+    }
+
+    /// Transfers currently in flight (either direction).
+    pub fn in_flight(&self) -> usize {
+        self.spilling.len() + self.prefetching.len()
+    }
+
+    /// Is `seq` parked on the host, ready to prefetch?
+    pub fn is_on_host(&self, seq: SeqHandle) -> bool {
+        self.host.contains_key(&seq)
+    }
+
+    /// Start spilling `seq` down to the host at virtual time `now`; the
+    /// transfer occupies the down link for `transfer_s` seconds after any
+    /// earlier down transfer drains. Returns the landing time. Until then
+    /// the pages stay `SpillInFlight`: readable, allocated, not free.
+    pub fn begin_spill(
+        &mut self,
+        cache: &mut PagedKvCache,
+        seq: SeqHandle,
+        now: f64,
+        transfer_s: f64,
+    ) -> Result<f64, AllocError> {
+        assert!(
+            !self.spilling.contains_key(&seq) && !self.prefetching.contains_key(&seq),
+            "seq {seq} already has a tier transfer in flight"
+        );
+        cache.begin_spill(seq)?;
+        let start = self.dn_free.max(now);
+        self.dn_free = start + transfer_s;
+        self.spilling.insert(seq, self.dn_free);
+        self.spills += 1;
+        Ok(self.dn_free)
+    }
+
+    /// Start prefetching a host-parked `seq` back into HBM at `now`: the
+    /// pages are claimed (and written) immediately as `PrefetchInFlight`,
+    /// the up link is occupied for `transfer_s`, and the sequence becomes
+    /// readable when `poll` passes the returned landing time.
+    pub fn begin_prefetch(
+        &mut self,
+        cache: &mut PagedKvCache,
+        seq: SeqHandle,
+        now: f64,
+        transfer_s: f64,
+    ) -> Result<f64, AllocError> {
+        let sp = self.host.get(&seq).ok_or(AllocError::UnknownSequence)?;
+        if cache.available_pages() < sp.pages() {
+            return Err(AllocError::OutOfPages);
+        }
+        let sp = self.host.remove(&seq).expect("checked above");
+        cache.begin_prefetch(seq, sp)?;
+        let start = self.up_free.max(now);
+        self.up_free = start + transfer_s;
+        self.prefetching.insert(seq, self.up_free);
+        self.prefetches += 1;
+        Ok(self.up_free)
+    }
+
+    /// Complete every flight that has landed by `now`. Landed spills free
+    /// their HBM pages and park on the host; landed prefetches become
+    /// readable. Returns (spilled, prefetched) sequence ids, id-ordered.
+    pub fn poll(
+        &mut self,
+        cache: &mut PagedKvCache,
+        now: f64,
+    ) -> (Vec<SeqHandle>, Vec<SeqHandle>) {
+        let landed_spills: Vec<SeqHandle> =
+            self.spilling.iter().filter(|&(_, &t)| t <= now).map(|(&s, _)| s).collect();
+        for &seq in &landed_spills {
+            self.spilling.remove(&seq);
+            let sp = cache.finish_spill(seq).expect("spill flight tracks a live sequence");
+            self.host.insert(seq, sp);
+        }
+        let landed_pf: Vec<SeqHandle> =
+            self.prefetching.iter().filter(|&(_, &t)| t <= now).map(|(&s, _)| s).collect();
+        for &seq in &landed_pf {
+            self.prefetching.remove(&seq);
+            cache.finish_prefetch(seq).expect("prefetch flight tracks a live sequence");
+        }
+        (landed_spills, landed_pf)
+    }
+
+    /// Earliest pending landing time, if any flight is outstanding — the
+    /// event-loop wake-up candidate.
+    pub fn next_landing(&self) -> Option<f64> {
+        self.spilling
+            .values()
+            .chain(self.prefetching.values())
+            .cloned()
+            .fold(None, |m: Option<f64>, t| Some(m.map_or(t, |m| m.min(t))))
+    }
+
+    /// Re-encode `seq`'s pages outside the hot window (everything more
+    /// than `cold_after_tokens` behind the tail, excluding the tail page)
+    /// into the rank-`rank` cold format. Returns pages compressed.
+    pub fn compress_cold(
+        &mut self,
+        cache: &mut PagedKvCache,
+        seq: SeqHandle,
+        cold_after_tokens: usize,
+        rank: usize,
+    ) -> Result<usize, AllocError> {
+        let n = cache.compress_cold(seq, cold_after_tokens, rank)?;
+        self.cold_pages_encoded += n as u64;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::cache::{CacheConfig, CacheMode};
+    use crate::util::rng::Rng;
+
+    fn cache(capacity_pages: usize) -> PagedKvCache {
+        PagedKvCache::new(CacheConfig {
+            n_layers: 2,
+            d_c: 16,
+            d_r: 8,
+            mode: CacheMode::Fp8,
+            capacity_pages,
+        })
+    }
+
+    fn fill(cache: &mut PagedKvCache, seq: u64, tokens: usize, seed: u64) {
+        let c = cache.cfg;
+        let mut rng = Rng::new(seed);
+        cache.register(seq);
+        for _ in 0..tokens {
+            let ck = rng.normal_vec(c.n_layers * c.d_c, 2.0);
+            let kr = rng.normal_vec(c.n_layers * c.d_r, 30.0);
+            cache.append_token(seq, &ck, &kr).unwrap();
+        }
+    }
+
+    fn view(cache: &PagedKvCache, seq: u64, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c = cache.cfg;
+        let mut content = vec![0.0f32; n * c.d_c];
+        let mut rope = vec![0.0f32; n * c.d_r];
+        let mut sigma = vec![0.0f32; n];
+        cache.gather_kernel_view(seq, 0, n, &mut content, &mut rope, &mut sigma);
+        (content, rope, sigma)
+    }
+
+    #[test]
+    fn spill_flight_keeps_pages_allocated_until_it_lands() {
+        let mut kv = cache(8);
+        let mut eng = TierEngine::new();
+        fill(&mut kv, 1, 70, 5); // 2 pages
+        let used = kv.used_pages();
+        let before = view(&kv, 1, 70);
+
+        let lands = eng.begin_spill(&mut kv, 1, 0.0, 1.0).unwrap();
+        assert_eq!(lands, 1.0);
+        // in flight: still allocated (NOT free), still readable
+        assert_eq!(kv.used_pages(), used);
+        assert_eq!(view(&kv, 1, 70), before);
+        assert_eq!(eng.poll(&mut kv, 0.5), (vec![], vec![]));
+        assert_eq!(kv.used_pages(), used, "flight must not free pages early");
+
+        // landing frees the pages and parks the sequence on the host
+        assert_eq!(eng.poll(&mut kv, 1.0), (vec![1], vec![]));
+        assert_eq!(kv.used_pages(), 0);
+        assert!(eng.is_on_host(1));
+        kv.validate().unwrap();
+
+        // prefetch claims pages immediately; readable after it lands
+        let lands = eng.begin_prefetch(&mut kv, 1, 2.0, 1.0).unwrap();
+        assert_eq!(lands, 3.0);
+        assert_eq!(kv.used_pages(), used, "prefetch claims its pages at issue");
+        assert_eq!(eng.poll(&mut kv, 3.0), (vec![], vec![1]));
+        assert_eq!(view(&kv, 1, 70), before, "tiered roundtrip is bit-exact");
+        kv.validate().unwrap();
+    }
+
+    #[test]
+    fn same_direction_transfers_serialize_opposite_directions_overlap() {
+        let mut kv = cache(16);
+        let mut eng = TierEngine::new();
+        fill(&mut kv, 1, 64, 6);
+        fill(&mut kv, 2, 64, 7);
+        // two down transfers serialize on the down link
+        assert_eq!(eng.begin_spill(&mut kv, 1, 0.0, 1.0).unwrap(), 1.0);
+        assert_eq!(eng.begin_spill(&mut kv, 2, 0.0, 1.0).unwrap(), 2.0);
+        let (sp, _) = eng.poll(&mut kv, 1.0);
+        assert_eq!(sp, vec![1], "only the first down transfer has landed");
+        // an up transfer starts while seq 2 still occupies the down link
+        let up = eng.begin_prefetch(&mut kv, 1, 1.0, 1.0).unwrap();
+        assert_eq!(up, 2.0, "opposite directions are full-duplex");
+        assert_eq!(eng.poll(&mut kv, 2.0), (vec![2], vec![1]));
+        assert_eq!(eng.in_flight(), 0);
+        assert_eq!((eng.spills, eng.prefetches), (2, 1));
+        kv.validate().unwrap();
+    }
+
+    #[test]
+    fn next_landing_tracks_the_earliest_flight() {
+        let mut kv = cache(16);
+        let mut eng = TierEngine::new();
+        fill(&mut kv, 1, 64, 8);
+        fill(&mut kv, 2, 64, 9);
+        assert_eq!(eng.next_landing(), None);
+        eng.begin_spill(&mut kv, 1, 0.0, 2.0).unwrap();
+        eng.begin_spill(&mut kv, 2, 0.0, 2.0).unwrap();
+        assert_eq!(eng.next_landing(), Some(2.0));
+        eng.poll(&mut kv, 2.0);
+        assert_eq!(eng.next_landing(), Some(4.0));
+        eng.poll(&mut kv, 4.0);
+        assert_eq!(eng.next_landing(), None);
+    }
+
+    #[test]
+    fn prefetch_without_room_reports_out_of_pages_and_keeps_host_copy() {
+        let mut kv = cache(2);
+        let mut eng = TierEngine::new();
+        fill(&mut kv, 1, 128, 10); // both pages
+        eng.begin_spill(&mut kv, 1, 0.0, 1.0).unwrap();
+        eng.poll(&mut kv, 1.0);
+        // another sequence takes the room
+        fill(&mut kv, 2, 128, 11);
+        assert_eq!(eng.begin_prefetch(&mut kv, 1, 2.0, 1.0), Err(AllocError::OutOfPages));
+        assert!(eng.is_on_host(1), "a failed prefetch must not lose the host copy");
+        kv.release(2);
+        eng.begin_prefetch(&mut kv, 1, 3.0, 1.0).unwrap();
+        eng.poll(&mut kv, 4.0);
+        assert_eq!(kv.tokens_of(1), 128);
+        kv.validate().unwrap();
+    }
+}

@@ -7,6 +7,7 @@
 //!           [--spec N [--accept-rate F]]
 //!           [--prefill-ranks N] [--route affinity|shortest]
 //!           [--shared-frac F] [--shared-groups N] [--shared-tokens N]
+//!           [--tiered]
 //!           [--elastic [--fail-at S] [--fail-rank N] [--no-recover]] …
 //!                                — serve a synthetic trace through the
 //!                                  cluster (prefix-affinity routing by
@@ -20,6 +21,10 @@
 //!                                  one engine call, `--accept-rate F`
 //!                                  degrades the drafter's history window to
 //!                                  approximate that acceptance rate;
+//!                                  `--tiered` arms the async host-tier
+//!                                  link: spill/restore transfers overlap
+//!                                  decode in virtual time instead of
+//!                                  stalling the rank;
 //!                                  `--elastic` kills a
 //!                                  rank mid-trace and re-migrates its live
 //!                                  KV to the survivors over the FP8 wire),
@@ -63,7 +68,7 @@ fn kernel_variant(args: &Args) -> anyhow::Result<VariantKind> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse_with_flags(&["quick", "verbose", "elastic", "no-recover"]);
+    let args = Args::parse_with_flags(&["quick", "verbose", "elastic", "no-recover", "tiered"]);
     match args.positional.first().map(String::as_str) {
         Some("info") => info(&args),
         Some("serve") => serve(&args),
@@ -182,6 +187,16 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     } else {
         ClusterServer::new(ranks?, policy)
     };
+    if args.has("tiered") {
+        // tiered KV cache demo: price each host spill/restore as a PCIe
+        // transfer of a typical preempted context and overlap the flights
+        // with decode in virtual time (the sync baseline would stall the
+        // rank for every transfer)
+        let (gpu, model) = (GpuSpec::h20(), ModelSpec::deepseek_v31());
+        let tokens = (args.usize_or("prompt-max", 96) + args.usize_or("out-max", 96)) / 2;
+        let transfer_s = perfmodel::e2e::host_spill_s(&gpu, &model, tokens, KernelKind::SnapMlaFp8);
+        cluster.set_tier_link(transfer_s, true);
+    }
     let mut rng = Rng::new(1234);
     for r in &trace {
         let prompt = synth_prompt(&mut rng, r);
@@ -223,6 +238,15 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             "disagg: {} handoffs, {:.2} MB on the FP8 wire",
             cluster.handoffs(),
             cluster.handoff_wire_bytes() as f64 / 1e6
+        );
+    }
+    if let Some(link) = cluster.tier_link() {
+        println!(
+            "tiered: {} host transfers overlapped with decode, {} stalled \
+             ({:.3} ms each on the PCIe link)",
+            link.overlapped,
+            link.stalls,
+            link.transfer_s * 1e3
         );
     }
     if elastic {

@@ -377,9 +377,31 @@ pub fn spec_step_s(
 }
 
 /// Host-side page-spill (or restore) time for a preempted sequence:
-/// moving `tokens` of KV at HBM bandwidth plus a fixed launch pair.
+/// moving `tokens` of KV to host DRAM over the PCIe link plus a fixed
+/// launch pair. Spills cross the host link, not HBM: the old HBM-bandwidth
+/// pricing understated a preemption stall by ~60x on an H20, which is what
+/// made synchronous spill look free and the tiered overlap look pointless.
 pub fn spill_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {
-    model.kv_bytes_per_token(kind) * tokens as f64 / gpu.hbm_bw + 2.0 * gpu.launch_s
+    host_spill_s(gpu, model, tokens, kind)
+}
+
+/// Device→host KV eviction time for `tokens` of cache over PCIe.
+pub fn host_spill_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {
+    model.kv_bytes_per_token(kind) * tokens as f64 / gpu.pcie_bw + 2.0 * gpu.launch_s
+}
+
+/// Host→device KV prefetch time (symmetric PCIe link, full duplex — an
+/// in-flight spill does not slow a concurrent prefetch).
+pub fn prefetch_s(gpu: &GpuSpec, model: &ModelSpec, tokens: usize, kind: KernelKind) -> f64 {
+    model.kv_bytes_per_token(kind) * tokens as f64 / gpu.pcie_bw + 2.0 * gpu.launch_s
+}
+
+/// Cost of attending over rank-reduced cold pages: a d_c x r up-projection
+/// per cold token per layer on the tensor cores (the decompression-on-access
+/// half of the tiered cache's compression codec — see `kvcache::compress`).
+pub fn decompress_s(gpu: &GpuSpec, model: &ModelSpec, rank_r: usize, tokens: usize) -> f64 {
+    2.0 * rank_r as f64 * model.d_c as f64 * model.n_layers as f64 * tokens as f64
+        / (gpu.bf16_tflops * 1e12 * gpu.peak_util)
 }
 
 /// Prefill→decode KV migration time for a handed-off sequence: the wire
@@ -621,6 +643,28 @@ mod tests {
         let spill = spill_s(&g, &m, 8192, KernelKind::SnapMlaFp8);
         let recompute = prefill_step_s(&g, &m, &cfg, 8192, KernelKind::SnapMlaFp8);
         assert!(spill * 20.0 < recompute, "{spill} vs {recompute}");
+    }
+
+    #[test]
+    fn host_spill_crosses_pcie_not_nvlink() {
+        let (g, m) = setup();
+        let tokens = 8192;
+        // same bytes, three links: HBM copy < NVLink handoff < PCIe spill —
+        // the regression this pins is spill_s pricing through the HBM/NVLink
+        // path, which understated preemption stalls by the bw ratio
+        let spill = host_spill_s(&g, &m, tokens, KernelKind::SnapMlaFp8);
+        let hand = handoff_s(&g, &m, tokens, KernelKind::SnapMlaFp8);
+        assert!(spill > hand, "{spill} vs {hand}");
+        let bytes = m.kv_bytes_per_token(KernelKind::SnapMlaFp8) * tokens as f64;
+        assert!((spill - (bytes / g.pcie_bw + 2.0 * g.launch_s)).abs() < 1e-12);
+        // spill and prefetch price the same symmetric link
+        assert_eq!(
+            host_spill_s(&g, &m, tokens, KernelKind::SnapMlaFp8),
+            prefetch_s(&g, &m, tokens, KernelKind::SnapMlaFp8)
+        );
+        // and a spilled token is ~7x slower to move than a handed-off one
+        let ratio = (spill - 2.0 * g.launch_s) / (hand - COLLECTIVE_LATENCY_S);
+        assert!((ratio - g.nvlink_bw / g.pcie_bw).abs() < 1e-9, "{ratio}");
     }
 
     #[test]

@@ -12,6 +12,10 @@ pub struct GpuSpec {
     pub hbm_bytes: f64,
     /// NVLink per-GPU bandwidth, bytes/s (for TP collectives)
     pub nvlink_bw: f64,
+    /// PCIe host-link bandwidth, bytes/s (for KV spill/prefetch to host
+    /// DRAM — an order of magnitude below NVLink, which is why host
+    /// spills must overlap with decode rather than stall it)
+    pub pcie_bw: f64,
     /// kernel launch + scheduling overhead per launch, seconds
     pub launch_s: f64,
     /// achievable fraction of peak for a well-tuned kernel (App. I: ~85%)
@@ -30,6 +34,7 @@ impl GpuSpec {
             hbm_bw: 4.0e12,
             hbm_bytes: 141.0e9,
             nvlink_bw: 450.0e9,
+            pcie_bw: 64.0e9,
             launch_s: 4.0e-6,
             peak_util: 0.88,
             vec_f32_tflops: 44.0,
@@ -59,5 +64,12 @@ mod tests {
     fn fp8_is_double_bf16() {
         let g = GpuSpec::h20();
         assert_eq!(g.fp8_tflops, 2.0 * g.bf16_tflops);
+    }
+
+    #[test]
+    fn pcie_is_much_slower_than_nvlink_and_hbm() {
+        let g = GpuSpec::h20();
+        assert!(g.pcie_bw < g.nvlink_bw / 5.0);
+        assert!(g.nvlink_bw < g.hbm_bw);
     }
 }

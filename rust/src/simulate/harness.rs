@@ -38,10 +38,13 @@ use super::clock::EventLoop;
 use super::scenario::{Scenario, SimRoute, SimTiming};
 use crate::anyhow;
 use crate::coordinator::router::{pick_handoff_rank, pick_rank, pick_rank_affinity, RankLoad};
-use crate::coordinator::scheduler::{Action, RunningSeq, Scheduler, SpecConfig, WaitingSeq};
+use crate::coordinator::scheduler::{
+    Action, RunningSeq, SchedPolicy, Scheduler, SpecConfig, TieredConfig, WaitingSeq,
+};
 use crate::kvcache::PAGE_TOKENS;
 use crate::perfmodel::e2e::{
-    decode_step_s, handoff_s, mixed_step_s, prefill_step_s, spec_step_s, spill_s,
+    decode_step_s, decompress_s, handoff_s, host_spill_s, mixed_step_s, prefetch_s,
+    prefill_step_s, spec_step_s, spill_s,
 };
 use crate::perfmodel::{DeploymentConfig, GpuSpec, KernelKind, ModelSpec};
 use crate::util::rng::Rng;
@@ -148,6 +151,38 @@ impl CostModel {
         }
     }
 
+    /// Device→host PCIe copy time of an async tier eviction (rides the
+    /// down-link overlapped with decode, never charged to the rank).
+    fn host_spill(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, kind, .. } => {
+                host_spill_s(gpu, model, tokens, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    /// Host→device PCIe copy time of an async tier prefetch.
+    fn prefetch(&self, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, kind, .. } => {
+                prefetch_s(gpu, model, tokens, *kind)
+            }
+            CostModel::Uniform { step_s } => *step_s,
+        }
+    }
+
+    /// Decompression-on-access surcharge for `tokens` of rank-`rank_r` cold
+    /// cache attended this step (zero under the Uniform model: the tiered
+    /// scenarios all run Analytic, and Uniform must keep its lock-step
+    /// equivalence untouched).
+    fn decompress(&self, rank_r: usize, tokens: usize) -> f64 {
+        match self {
+            CostModel::Analytic { gpu, model, .. } => decompress_s(gpu, model, rank_r, tokens),
+            CostModel::Uniform { .. } => 0.0,
+        }
+    }
+
     fn handoff(&self, tokens: usize) -> f64 {
         match self {
             CostModel::Analytic { gpu, model, kind, .. } => {
@@ -232,6 +267,11 @@ pub struct SimResult {
     pub spec_drafted_tokens: u64,
     /// tokens emitted by spec steps (accepted run + bonus, post-cap)
     pub spec_tokens: u64,
+    /// high-water mark of Σ running across ranks — the tiered headline
+    /// (max concurrent sequences at fixed HBM)
+    pub peak_running: usize,
+    /// async tier prefetches issued (0 without a tiered scenario)
+    pub prefetches: u64,
 }
 
 impl SimResult {
@@ -311,6 +351,8 @@ struct SimStats {
     spec_seq_steps: u64,
     spec_drafted: u64,
     spec_tokens: u64,
+    prefetches: u64,
+    peak_running: usize,
 }
 
 /// The simulation state machine. Construct via [`Scenario::run`].
@@ -373,6 +415,23 @@ pub(super) struct Harness<'a> {
     a_last: f64,
     a_int: f64,
     peak_active: usize,
+    // --- tiered KV cache state (inert without scen.tiered; mirrors the
+    // kvcache::tiered TierEngine): in-flight spills hold their pages until
+    // the device→host PCIe copy lands, in-flight prefetches hold their
+    // pages from issue, and each direction of the full-duplex host link
+    // serializes independently. ---
+    /// the scheduler-side residency/action gate (disabled without tiered)
+    tiered: TieredConfig,
+    /// tiered AND async: spill/preempt become non-blocking flights
+    tiered_async: bool,
+    /// per rank: (sid, ready_at, private pages) of in-flight spills
+    spill_fl: Vec<Vec<(usize, f64, usize)>>,
+    /// per rank: (sid, ready_at) of in-flight prefetches
+    prefetch_fl: Vec<Vec<(usize, f64)>>,
+    /// per rank: device→host link busy-until
+    dn_free: Vec<f64>,
+    /// per rank: host→device link busy-until
+    up_free: Vec<f64>,
 }
 
 fn pages_for(tokens: usize, page: usize) -> usize {
@@ -462,6 +521,39 @@ impl<'a> Harness<'a> {
         if let Some(sp) = &scen.spec {
             sched_cfg.spec = SpecConfig::mtp(sp.draft_len);
         }
+        // a tiered scenario arms the scheduler's TieredConfig gate:
+        // residency-aware page math plus the async spill/prefetch actions
+        let tiered = scen
+            .tiered
+            .map(|ts| TieredConfig {
+                enabled: true,
+                async_io: ts.async_io,
+                cold_after: ts.cold_after,
+                comp_ratio: ts.comp_ratio,
+                comp_rank: ts.comp_rank,
+            })
+            .unwrap_or_else(TieredConfig::disabled);
+        if tiered.enabled {
+            assert!(
+                scen.timing == SimTiming::EventDriven
+                    && scen.prefill_ranks == 0
+                    && scen.elastic.is_none()
+                    && scen.spec.is_none()
+                    && scen.sched.policy == SchedPolicy::MixedChunked,
+                "tiered cache requires the colocated event-driven mixed mode"
+            );
+            assert_eq!(
+                tiered.cold_after % scen.sched.page_tokens,
+                0,
+                "cold_after must be a page multiple (every page wholly hot or \
+                 wholly cold; residency deltas stay in {{-1, 0, 1}})"
+            );
+            assert!(
+                trace.iter().all(|r| r.prefix_group.is_none()),
+                "the compression tier does not compose with shared prefixes yet"
+            );
+            sched_cfg.tiered = tiered;
+        }
         Harness {
             scen,
             sched: Scheduler::new(sched_cfg),
@@ -494,6 +586,12 @@ impl<'a> Harness<'a> {
             a_last: 0.0,
             a_int: 0.0,
             peak_active: n,
+            tiered,
+            tiered_async: tiered.enabled && tiered.async_io,
+            spill_fl: vec![Vec::new(); n],
+            prefetch_fl: vec![Vec::new(); n],
+            dn_free: vec![0.0; n],
+            up_free: vec![0.0; n],
         }
     }
 
@@ -529,9 +627,37 @@ impl<'a> Harness<'a> {
         self.ranks.iter().filter(|r| r.state == RankState::Active).count()
     }
 
+    /// Resident pages for `tokens` of cache: pages fully older than the hot
+    /// window live in the compressed cold tier at the codec's page ratio.
+    /// Equals `pages_for` exactly when compression is off, so every
+    /// accounting site below stays byte-identical for plain runs.
+    fn respages(&self, tokens: usize) -> usize {
+        self.tiered.resident_pages(tokens, self.page)
+    }
+
+    /// Pages a one-token append claims: 0 or 1 in plain mode (the
+    /// equivalent of the old `cached % page == 0` boundary check), and
+    /// possibly -1 under compression — a page crossing into the cold window
+    /// FREES capacity, so callers treat this as signed.
+    fn grow_pages(&self, tokens: usize) -> isize {
+        self.respages(tokens + 1) as isize - self.respages(tokens) as isize
+    }
+
     fn private_pages(&self, sid: usize) -> usize {
         let s = &self.seqs[sid];
-        pages_for(s.cached, self.page) - s.adopted - s.transferred
+        self.respages(s.cached) - s.adopted - s.transferred
+    }
+
+    /// Tokens resident in the compressed cold tier across a decode batch
+    /// (whole pages fully older than the hot window) — the decompression-
+    /// on-access surcharge prices exactly these.
+    fn cold_tokens(&self, ids: &[usize]) -> usize {
+        ids.iter()
+            .map(|&sid| {
+                self.seqs[sid].cached.saturating_sub(self.tiered.cold_after) / self.page
+                    * self.page
+            })
+            .sum()
     }
 
     /// Published pages of `sid`'s group usable by a fresh admission (the
@@ -959,7 +1085,24 @@ impl<'a> Harness<'a> {
                 pending_prefill: self.seqs[sid].prompt - self.seqs[sid].prefilled,
             })
             .collect();
-        sched.decide(&wview, &rview, r.free)
+        let act = sched.decide(&wview, &rview, r.free);
+        if self.tiered_async {
+            // the tier engine serializes host evictions: one spill in
+            // flight per rank, and a sequence cannot prefetch back until
+            // its own spill has landed. Blocked ops wait on the flight's
+            // ready-time (an event-loop candidate), not on a poll.
+            match act {
+                Action::SpillAsync(_) if !self.spill_fl[ri].is_empty() => return Action::Idle,
+                Action::Prefetch(_) => {
+                    let head = r.waiting[0];
+                    if self.spill_fl[ri].iter().any(|f| f.0 == head) {
+                        return Action::Idle;
+                    }
+                }
+                _ => {}
+            }
+        }
+        act
     }
 
     /// Apply one scheduler action on rank `ri`; returns its (speed-scaled)
@@ -984,7 +1127,7 @@ impl<'a> Harness<'a> {
                 let t_emit = t_start.map(|t| t + cost);
                 for sid in ids {
                     let prompt = self.seqs[sid].prompt;
-                    let pg = pages_for(prompt, self.page);
+                    let pg = self.respages(prompt);
                     self.ranks[ri].free -= pg;
                     self.used_pages_total += pg;
                     let s = &mut self.seqs[sid];
@@ -1036,17 +1179,24 @@ impl<'a> Harness<'a> {
                 }
                 let ids: Vec<usize> = idxs.iter().map(|&i| self.ranks[ri].running[i]).collect();
                 let ctx = ids.iter().map(|&sid| self.seqs[sid].cached).max().unwrap() + 1;
-                cost = self.scen.cost.decode(ids.len(), ctx) * self.speeds[ri];
+                let mut c = self.scen.cost.decode(ids.len(), ctx) * self.speeds[ri];
+                if self.tiered.enabled && self.tiered.cold_after > 0 {
+                    // decompression-on-access: cold pages hold rank-r
+                    // latents that the attention step first up-projects
+                    // back to d_c
+                    let cold = self.cold_tokens(&ids);
+                    c += self.scen.cost.decompress(self.tiered.comp_rank, cold)
+                        * self.speeds[ri];
+                }
+                cost = c;
                 self.stats.decode_steps += 1;
                 self.stats.decode_batch_sum += ids.len() as u64;
                 let t_emit = t_start.map(|t| t + cost);
                 let mut done = Vec::new();
                 for &sid in &ids {
-                    let s = &mut self.seqs[sid];
-                    if s.cached % self.page == 0 {
-                        self.ranks[ri].free -= 1;
-                        self.used_pages_total += 1;
-                    }
+                    let grow = self.grow_pages(self.seqs[sid].cached);
+                    self.ranks[ri].free = (self.ranks[ri].free as isize - grow) as usize;
+                    self.used_pages_total = (self.used_pages_total as isize + grow) as usize;
                     let s = &mut self.seqs[sid];
                     s.cached += 1;
                     s.generated += 1;
@@ -1104,11 +1254,9 @@ impl<'a> Harness<'a> {
                         .min(s.out - s.generated)
                         .min(max_context - s.cached);
                     for _ in 0..take {
-                        let s = &mut self.seqs[sid];
-                        if s.cached % self.page == 0 {
-                            self.ranks[ri].free -= 1;
-                            self.used_pages_total += 1;
-                        }
+                        let grow = self.grow_pages(self.seqs[sid].cached);
+                        self.ranks[ri].free = (self.ranks[ri].free as isize - grow) as usize;
+                        self.used_pages_total = (self.used_pages_total as isize + grow) as usize;
                         let s = &mut self.seqs[sid];
                         s.cached += 1;
                         s.generated += 1;
@@ -1178,8 +1326,15 @@ impl<'a> Harness<'a> {
                     .map(|&(sid, t)| self.seqs[sid].cached + t)
                     .max()
                     .unwrap_or(0);
-                cost = self.scen.cost.mixed(decode_ids.len(), dctx, total_chunk, cctx)
+                let mut c = self.scen.cost.mixed(decode_ids.len(), dctx, total_chunk, cctx)
                     * self.speeds[ri];
+                if self.tiered.enabled && self.tiered.cold_after > 0 && !decode_ids.is_empty()
+                {
+                    let cold = self.cold_tokens(&decode_ids);
+                    c += self.scen.cost.decompress(self.tiered.comp_rank, cold)
+                        * self.speeds[ri];
+                }
+                cost = c;
                 if !decode_ids.is_empty() {
                     self.stats.decode_steps += 1;
                     self.stats.decode_batch_sum += decode_ids.len() as u64;
@@ -1187,11 +1342,11 @@ impl<'a> Harness<'a> {
                 let t_emit = t_start.map(|t| t + cost);
                 let mut done = Vec::new();
                 for &(sid, take) in &chunk_plan {
-                    let s = &self.seqs[sid];
+                    let cached = self.seqs[sid].cached;
                     let need =
-                        pages_for(s.cached + take, self.page) - pages_for(s.cached, self.page);
-                    self.ranks[ri].free -= need;
-                    self.used_pages_total += need;
+                        self.respages(cached + take) as isize - self.respages(cached) as isize;
+                    self.ranks[ri].free = (self.ranks[ri].free as isize - need) as usize;
+                    self.used_pages_total = (self.used_pages_total as isize + need) as usize;
                     let s = &mut self.seqs[sid];
                     s.cached += take;
                     s.prefilled += take;
@@ -1210,11 +1365,9 @@ impl<'a> Harness<'a> {
                     }
                 }
                 for &sid in &decode_ids {
-                    let s = &mut self.seqs[sid];
-                    if s.cached % self.page == 0 {
-                        self.ranks[ri].free -= 1;
-                        self.used_pages_total += 1;
-                    }
+                    let grow = self.grow_pages(self.seqs[sid].cached);
+                    self.ranks[ri].free = (self.ranks[ri].free as isize - grow) as usize;
+                    self.used_pages_total = (self.used_pages_total as isize + grow) as usize;
                     let s = &mut self.seqs[sid];
                     s.cached += 1;
                     s.generated += 1;
@@ -1238,7 +1391,7 @@ impl<'a> Harness<'a> {
                 self.wait_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
                 let cached = self.seqs[sid].cached;
                 cost = self.scen.cost.spill(cached) * self.speeds[ri];
-                let pg = pages_for(cached, self.page);
+                let pg = self.respages(cached);
                 self.ranks[ri].free -= pg;
                 self.used_pages_total += pg;
                 let s = &mut self.seqs[sid];
@@ -1248,6 +1401,30 @@ impl<'a> Harness<'a> {
                 self.stats.restores += 1;
                 self.ranks[ri].running.push(sid);
                 self.run_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
+            }
+            Action::Prefetch(_) => {
+                // async resume: the pages are claimed now (PrefetchInFlight),
+                // the PCIe copy rides the host→device link, and the sequence
+                // joins the batch when the flight lands — the rank pays
+                // nothing and keeps decoding in the meantime
+                let t_start = t_start.expect("tiered prefetch only exists under event timing");
+                let sid = self.ranks[ri].waiting.remove(0);
+                self.wait_po[ri] -= self.seqs[sid].prompt + self.seqs[sid].out;
+                self.wait_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
+                let cached = self.seqs[sid].cached;
+                let pg = self.respages(cached);
+                self.ranks[ri].free -= pg;
+                self.used_pages_total += pg;
+                let s = &mut self.seqs[sid];
+                s.spilled = false;
+                s.adopted = 0;
+                s.transferred = 0;
+                self.stats.restores += 1;
+                self.stats.prefetches += 1;
+                let start = t_start.max(self.up_free[ri]);
+                self.up_free[ri] = start + self.scen.cost.prefetch(cached) * self.speeds[ri];
+                self.prefetch_fl[ri].push((sid, self.up_free[ri]));
+                cost = 0.0;
             }
             Action::Preempt(idx) => {
                 let sid = self.ranks[ri].running.remove(idx);
@@ -1267,6 +1444,29 @@ impl<'a> Harness<'a> {
                 self.ranks[ri].waiting.insert(0, sid);
                 self.wait_po[ri] += self.seqs[sid].prompt + self.seqs[sid].out;
                 self.wait_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
+            }
+            Action::SpillAsync(idx) => {
+                // async preempt: the victim leaves the batch now, but its
+                // pages stay SpillInFlight (not yet free) until the
+                // device→host copy lands; the rank pays nothing for the
+                // eviction itself
+                let t_start = t_start.expect("tiered spill only exists under event timing");
+                let sid = self.ranks[ri].running.remove(idx);
+                self.run_rem[ri] -= self.seqs[sid].out - self.seqs[sid].generated;
+                let cached = self.seqs[sid].cached;
+                let pp = self.private_pages(sid);
+                let start = t_start.max(self.dn_free[ri]);
+                self.dn_free[ri] = start + self.scen.cost.host_spill(cached) * self.speeds[ri];
+                self.spill_fl[ri].push((sid, self.dn_free[ri], pp));
+                let s = &mut self.seqs[sid];
+                s.adopted = 0;
+                s.transferred = 0;
+                s.spilled = true;
+                self.stats.spills += 1;
+                self.ranks[ri].waiting.insert(0, sid);
+                self.wait_po[ri] += self.seqs[sid].prompt + self.seqs[sid].out;
+                self.wait_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
+                cost = 0.0;
             }
         }
         self.untouch(ri);
@@ -1370,6 +1570,15 @@ impl<'a> Harness<'a> {
             self.used_pages_total
         };
         self.stats.peak_pages = self.stats.peak_pages.max(used);
+        let running: usize = self.ranks.iter().map(|r| r.running.len()).sum();
+        self.stats.peak_running = self.stats.peak_running.max(running);
+    }
+
+    /// Any tier transfer still riding the host link (keeps the event loop
+    /// alive until every flight lands).
+    fn tier_flights_pending(&self) -> bool {
+        self.spill_fl.iter().any(|fl| !fl.is_empty())
+            || self.prefetch_fl.iter().any(|fl| !fl.is_empty())
     }
 
     /// Advance the active-rank time integral to `to` (elastic only).
@@ -1474,6 +1683,7 @@ impl<'a> Harness<'a> {
             .map(|a| a.eval_interval_s);
         while next_arrival < trace.len()
             || !self.in_flight.is_empty()
+            || (self.tiered_async && self.tier_flights_pending())
             || (if self.naive { self.any_busy() } else { self.busy_count > 0 })
         {
             iters += 1;
@@ -1504,6 +1714,18 @@ impl<'a> Harness<'a> {
                 }
                 for &(_, ready) in &self.in_flight {
                     cands.push(ready, n + 1, ());
+                }
+                if self.tiered_async {
+                    for fl in &self.spill_fl {
+                        for f in fl {
+                            cands.push(f.1, n + 5, ());
+                        }
+                    }
+                    for fl in &self.prefetch_fl {
+                        for f in fl {
+                            cands.push(f.1, n + 6, ());
+                        }
+                    }
                 }
                 if elastic {
                     if self.next_fail < self.fail_sched.len() {
@@ -1550,6 +1772,22 @@ impl<'a> Harness<'a> {
                 for &(_, ready_at) in &self.in_flight {
                     if min_c.map_or(true, |m| ready_at < m) {
                         min_c = Some(ready_at);
+                    }
+                }
+                if self.tiered_async {
+                    for fl in &self.spill_fl {
+                        for f in fl {
+                            if min_c.map_or(true, |m| f.1 < m) {
+                                min_c = Some(f.1);
+                            }
+                        }
+                    }
+                    for fl in &self.prefetch_fl {
+                        for f in fl {
+                            if min_c.map_or(true, |m| f.1 < m) {
+                                min_c = Some(f.1);
+                            }
+                        }
                     }
                 }
                 if elastic {
@@ -1604,6 +1842,44 @@ impl<'a> Harness<'a> {
             }
             if (self.scen.prefill_ranks > 0 || elastic) && self.deliver(clock) {
                 progressed = true;
+            }
+            if self.tiered_async {
+                // pump the tier engine: landed spills release their pages
+                // (SpillInFlight → Host), landed prefetches join the batch
+                // (PrefetchInFlight → Hbm) and wake their rank. Per-direction
+                // link serialization makes each list's ready-times monotone,
+                // so the head check is a sound fast path.
+                for ri in 0..self.ranks.len() {
+                    if self.spill_fl[ri].first().is_some_and(|f| f.1 <= clock) {
+                        let fl = std::mem::take(&mut self.spill_fl[ri]);
+                        let mut keep = Vec::new();
+                        for (sid, ready_at, pp) in fl {
+                            if ready_at <= clock {
+                                self.ranks[ri].free += pp;
+                                self.used_pages_total -= pp;
+                                progressed = true;
+                            } else {
+                                keep.push((sid, ready_at, pp));
+                            }
+                        }
+                        self.spill_fl[ri] = keep;
+                    }
+                    if self.prefetch_fl[ri].first().is_some_and(|f| f.1 <= clock) {
+                        let fl = std::mem::take(&mut self.prefetch_fl[ri]);
+                        let mut keep = Vec::new();
+                        for (sid, ready_at) in fl {
+                            if ready_at <= clock {
+                                self.ranks[ri].running.push(sid);
+                                self.run_rem[ri] += self.seqs[sid].out - self.seqs[sid].generated;
+                                self.touch(ri);
+                                progressed = true;
+                            } else {
+                                keep.push((sid, ready_at));
+                            }
+                        }
+                        self.prefetch_fl[ri] = keep;
+                    }
+                }
             }
             if let Some(interval) = eval_interval {
                 if clock >= self.next_eval {
@@ -1735,6 +2011,22 @@ impl<'a> Harness<'a> {
                             lat = Some(ready_at);
                         }
                     }
+                    if self.tiered_async {
+                        for fl in &self.spill_fl {
+                            for f in fl {
+                                if f.1 > clock && lat.map_or(true, |l| f.1 < l) {
+                                    lat = Some(f.1);
+                                }
+                            }
+                        }
+                        for fl in &self.prefetch_fl {
+                            for f in fl {
+                                if f.1 > clock && lat.map_or(true, |l| f.1 < l) {
+                                    lat = Some(f.1);
+                                }
+                            }
+                        }
+                    }
                     if elastic {
                         if self.next_fail < self.fail_sched.len() {
                             let ft = self.fail_sched[self.next_fail].0;
@@ -1855,6 +2147,8 @@ impl<'a> Harness<'a> {
             spec_seq_steps: st.spec_seq_steps,
             spec_drafted_tokens: st.spec_drafted,
             spec_tokens: st.spec_tokens,
+            peak_running: st.peak_running,
+            prefetches: st.prefetches,
         }
     }
 }
@@ -1879,6 +2173,7 @@ mod tests {
             max_running: 12,
             disagg_prefill: false,
             spec: SpecConfig::disabled(),
+            tiered: TieredConfig::disabled(),
             policy: SchedPolicy::MixedChunked,
         }
     }
@@ -1896,6 +2191,7 @@ mod tests {
             speeds: Vec::new(),
             elastic,
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -2078,5 +2374,105 @@ mod tests {
         assert_eq!(without.evacuated, 0);
         assert_eq!(without.dropped as u64 + without.completed as u64, trace.len() as u64);
         assert!(with.completed > without.completed);
+    }
+
+    /// A page-pressure trace that forces preemption churn on one rank:
+    /// every prompt is several pages and the pool holds only a fraction of
+    /// the fleet (mirrors the serve_tiered regime at miniature scale).
+    fn pressure_trace() -> Vec<Request> {
+        TraceGen::generate(&TraceConfig {
+            seed: 23,
+            num_requests: 8,
+            mean_interarrival_s: 0.0,
+            prompt_min: 256,
+            prompt_max: 512,
+            out_min: 32,
+            out_max: 64,
+            ..Default::default()
+        })
+    }
+
+    fn tiered_scen(tiered: Option<crate::simulate::TieredSim>) -> Scenario {
+        Scenario {
+            ranks: 1,
+            routing: SimRoute::Single,
+            capacity_pages: 24,
+            cost: Scenario::h20_cost(8, 1),
+            tiered,
+            ..scen(None)
+        }
+    }
+
+    /// `tiered: None` leaves every tier branch gated: no prefetches, and
+    /// the peak_running recorder works for plain runs too.
+    #[test]
+    fn no_tiered_config_keeps_flight_counters_zero() {
+        let trace = pressure_trace();
+        let r = tiered_scen(None).run(&trace).unwrap();
+        assert_eq!(r.prefetches, 0);
+        assert!(r.spills > 0, "pressure trace must preempt");
+        assert_eq!(r.spills, r.restores);
+        assert!(r.peak_running > 0);
+        assert_eq!(r.completed, trace.len());
+    }
+
+    /// The async tier arm is deterministic, every spill gets a matching
+    /// prefetch flight (restores == prefetches), and the run still
+    /// completes the full trace — no flight ever strands a sequence.
+    #[test]
+    fn tiered_async_arm_is_deterministic_and_flights_land() {
+        use crate::simulate::TieredSim;
+        let run = || {
+            let trace = pressure_trace();
+            tiered_scen(Some(TieredSim {
+                async_io: true,
+                cold_after: 0,
+                comp_ratio: 1.0,
+                comp_rank: 0,
+            }))
+            .run(&trace)
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits());
+        assert_eq!(a.gen_tokens, b.gen_tokens);
+        assert_eq!(a.peak_running, b.peak_running);
+        assert!(a.spills > 0, "pressure trace must spill");
+        assert_eq!(a.restores, a.prefetches, "every async resume is a prefetch flight");
+        assert_eq!(a.completed, 8);
+    }
+
+    /// The compressed cold tier fits more concurrent sequences into the
+    /// same page pool than the uncompressed async arm, and both emit the
+    /// same tokens (compression changes residency, never the output).
+    #[test]
+    fn tiered_compression_raises_concurrency_at_fixed_pages() {
+        use crate::simulate::TieredSim;
+        let trace = pressure_trace();
+        let plain = tiered_scen(Some(TieredSim {
+            async_io: true,
+            cold_after: 0,
+            comp_ratio: 1.0,
+            comp_rank: 0,
+        }))
+        .run(&trace)
+        .unwrap();
+        let comp = tiered_scen(Some(TieredSim {
+            async_io: true,
+            cold_after: 4 * PAGE_TOKENS,
+            comp_ratio: 324.0 / 644.0,
+            comp_rank: 192,
+        }))
+        .run(&trace)
+        .unwrap();
+        assert_eq!(plain.gen_tokens, comp.gen_tokens);
+        assert_eq!(comp.completed, trace.len());
+        assert!(
+            comp.peak_running >= plain.peak_running,
+            "compressed {} < plain {}",
+            comp.peak_running,
+            plain.peak_running
+        );
+        assert!(comp.peak_pages <= 24);
     }
 }

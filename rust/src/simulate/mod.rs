@@ -24,5 +24,5 @@ pub mod scenario;
 pub use clock::{Event, EventLoop};
 pub use harness::{CostModel, MembershipEvent, SimResult};
 pub use scenario::{
-    AutoscaleConfig, ElasticConfig, Scenario, SimRoute, SimTiming, SpecSim, NODE_GPUS,
+    AutoscaleConfig, ElasticConfig, Scenario, SimRoute, SimTiming, SpecSim, TieredSim, NODE_GPUS,
 };

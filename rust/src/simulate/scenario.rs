@@ -100,6 +100,27 @@ pub struct SpecSim {
     pub accept_rate: f64,
 }
 
+/// Tiered-KV-cache arm configuration (`serve_tiered`): the async host
+/// spill/prefetch engine (`kvcache::tiered`) whose PCIe transfers complete
+/// as event-loop flights overlapped with decode, plus an optional
+/// rank-reduced cold-page compression tier (`kvcache::compress`) that
+/// discounts residency for pages older than the hot window.
+#[derive(Clone, Copy, Debug)]
+pub struct TieredSim {
+    /// spill/preempt and resume become non-blocking SpillAsync/Prefetch
+    /// flights (false = the tier engine exists but every transfer still
+    /// blocks the rank, like the synchronous baseline)
+    pub async_io: bool,
+    /// hot window in tokens (must be a page multiple); 0 = compression off
+    pub cold_after: usize,
+    /// resident-bytes ratio of a compressed cold page vs the hot FP8 page
+    /// format (in (0, 1]; 1.0 = no discount)
+    pub comp_ratio: f64,
+    /// latent rank r of the cold-page codec — prices the
+    /// decompression-on-access surcharge (`perfmodel::e2e::decompress_s`)
+    pub comp_rank: usize,
+}
+
 /// One simulated serving arm (see module docs for the bench mapping).
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -125,6 +146,10 @@ pub struct Scenario {
     /// speculative decoding (MTP draft/verify); None = every step is a
     /// plain prefill/decode/mixed step and the scheduler gate stays off
     pub spec: Option<SpecSim>,
+    /// tiered KV cache (async host spill/prefetch + cold-page compression);
+    /// None = the plain binary synchronous-spill cache every other
+    /// scenario runs
+    pub tiered: Option<TieredSim>,
     /// Run the pre-optimization reference paths (full linear scans per
     /// routing decision, full waiting views per scheduler call, per-round
     /// Σ-sweep page sampling, rebuilt per-iteration candidate lists)
@@ -167,6 +192,7 @@ impl Scenario {
             speeds: Vec::new(),
             elastic: None,
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -190,6 +216,7 @@ impl Scenario {
             speeds: Vec::new(),
             elastic: None,
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -215,6 +242,7 @@ impl Scenario {
             speeds: Vec::new(),
             elastic: None,
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -240,6 +268,7 @@ impl Scenario {
             speeds,
             elastic: None,
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -257,6 +286,18 @@ impl Scenario {
             spec: Some(SpecSim { draft_len, accept_rate }),
             ..Self::mixed(sched, capacity_pages)
         }
+    }
+
+    /// serve_tiered arm: the serve_mixed single-rank scenario with the
+    /// tiered KV cache armed — `None` is the synchronous binary-spill
+    /// baseline, `Some` turns preempt/resume into overlapped SpillAsync/
+    /// Prefetch flights and (with `cold_after > 0`) compresses cold pages.
+    pub fn tiered_serve(
+        sched: SchedulerConfig,
+        capacity_pages: usize,
+        tiered: Option<TieredSim>,
+    ) -> Scenario {
+        Scenario { tiered, ..Self::mixed(sched, capacity_pages) }
     }
 
     /// serve_elastic arm: colocated event-driven ranks with elastic
@@ -284,6 +325,7 @@ impl Scenario {
             speeds: Vec::new(),
             elastic: Some(elastic),
             spec: None,
+            tiered: None,
             naive: false,
         }
     }
@@ -433,6 +475,29 @@ pub fn spec_result_json(spec: Option<SpecSim>, r: &SimResult) -> Json {
         fields.push(("spec_drafted_tokens", Json::num(r.spec_drafted_tokens as f64)));
         fields.push(("spec_tokens", Json::num(r.spec_tokens as f64)));
         fields.push(("accepted_tokens_per_step", Json::num(r.accepted_per_spec_step())));
+    }
+    Json::obj(fields)
+}
+
+/// The exact result-row field set of BENCH_tiered.json (sync and tiered
+/// arms; `prefetches` appears only when the arm carried a [`TieredSim`]).
+pub fn tiered_result_json(tiered: bool, r: &SimResult) -> Json {
+    let mut fields = vec![
+        ("requests", Json::num(r.requests as f64)),
+        ("gen_tokens", Json::num(r.gen_tokens as f64)),
+        ("wall_s", Json::num(r.wall_s)),
+        ("tok_per_s", Json::num(r.tok_per_s())),
+        ("ttft_p95_ms", Json::num(r.ttft.percentile(95.0) * 1e3)),
+        ("itl_p50_ms", Json::num(r.itl.median() * 1e3)),
+        ("itl_p95_ms", Json::num(r.itl.percentile(95.0) * 1e3)),
+        ("peak_running", Json::num(r.peak_running as f64)),
+        ("peak_pages", Json::num(r.peak_pages as f64)),
+        ("spills", Json::num(r.spills as f64)),
+        ("restores", Json::num(r.restores as f64)),
+        ("steps", Json::num(r.steps as f64)),
+    ];
+    if tiered {
+        fields.push(("prefetches", Json::num(r.prefetches as f64)));
     }
     Json::obj(fields)
 }

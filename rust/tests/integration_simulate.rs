@@ -17,7 +17,7 @@
 //! caller to notice a false `step_all`.
 
 use snapmla::cluster::ClusterServer;
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::coordinator::{RankHealth, RequestOutcome, RoutePolicy, ServeRequest, Server};
 use snapmla::kvcache::CacheMode;
 use snapmla::runtime::ModelEngine;
@@ -251,6 +251,7 @@ fn bench_sched(policy: SchedPolicy) -> SchedulerConfig {
         max_running: 12,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy,
     }
 }

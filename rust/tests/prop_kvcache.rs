@@ -344,3 +344,252 @@ fn spill_restore_cycles_preserve_token_counts() {
         cache.validate().unwrap();
     }
 }
+
+// --- tiered lifecycle (async spill/prefetch + cold compression) -------------
+
+#[derive(Clone, Debug)]
+struct TieredOps(Vec<(u8, u8, u8)>);
+
+struct TieredOpsGen {
+    max_ops: usize,
+}
+
+impl Gen for TieredOpsGen {
+    type Value = TieredOps;
+    fn generate(&self, rng: &mut Rng) -> TieredOps {
+        let n = rng.range_usize(1, self.max_ops + 1);
+        TieredOps(
+            (0..n)
+                .map(|_| (rng.below(8) as u8, rng.below(NSEQ) as u8, rng.below(251) as u8))
+                .collect(),
+        )
+    }
+    fn shrink(&self, v: &TieredOps) -> Vec<TieredOps> {
+        let mut out = Vec::new();
+        if v.0.len() > 1 {
+            out.push(TieredOps(v.0[..v.0.len() / 2].to_vec()));
+            out.push(TieredOps(v.0[..v.0.len() - 1].to_vec()));
+        }
+        out
+    }
+}
+
+/// Full-domain content (grid value * sigma) of the single layer — equal
+/// floats iff the kernel-visible values agree exactly.
+fn full_domain(cache: &PagedKvCache, seq: u64, n: usize) -> Vec<f32> {
+    let c = cache.cfg;
+    let (content, _, sigma) = kernel_views(cache, seq, n);
+    (0..n * c.d_c).map(|i| content[i] * sigma[i / c.d_c]).collect()
+}
+
+/// Interpret one tiered op sequence: random interleavings of append /
+/// publish / release / async spill / poll / async prefetch / cold compress
+/// / access against the TierEngine in advancing virtual time, mirroring the
+/// scheduler's discipline (one spill in flight; in-flight pages frozen).
+/// `validate()` runs after every op; the four suite properties ride along:
+/// no leaks (checked by the caller), hot-tier bit-exact roundtrip,
+/// compressed rel-l2 under the rank bound, and compression never touching a
+/// page another sequence still references.
+fn run_tiered_ops(ops: &TieredOps) -> Result<PagedKvCache, String> {
+    use snapmla::kvcache::{rel_l2_bound, TierEngine};
+    const TRANSFER_S: f64 = 1.5;
+    let mut cache = PagedKvCache::new(cfg());
+    let mut eng = TierEngine::new();
+    let mut rng = Rng::new(0x71E2ED);
+    let mut now = 0.0f64;
+    let mut live = [false; NSEQ]; // live AND not in any tier transition
+    let mut tokens = [0usize; NSEQ];
+    let mut spilling: Option<u64> = None;
+    let mut prefetching: Vec<u64> = Vec::new();
+    // raw storage bytes at begin_spill, compared when the prefetch lands
+    let mut snapshots: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+
+    for &(kind, s, arg) in &ops.0 {
+        now += 1.0;
+        let si = s as usize;
+        let seq = s as u64;
+        let frozen = spilling == Some(seq);
+        match kind {
+            // append varied tokens (cold compression needs non-degenerate rows)
+            0 | 1 => {
+                if frozen || eng.is_on_host(seq) || prefetching.contains(&seq) {
+                    // a parked or in-flight sequence cannot append
+                } else {
+                    if !live[si] {
+                        cache.register(seq);
+                        live[si] = true;
+                        tokens[si] = cache.adopt_prefix(seq, &group_prompt(seq, 3 * PAGE_TOKENS));
+                    }
+                    for _ in 0..(arg as usize % 70 + 1) {
+                        let ck: Vec<f32> = rng.normal_vec(8, 2.0);
+                        let kr: Vec<f32> = rng.normal_vec(4, 30.0);
+                        if cache.append_token(seq, &ck, &kr).is_err() {
+                            break; // pool exhausted: fine, not a leak
+                        }
+                        tokens[si] += 1;
+                    }
+                }
+            }
+            2 => {
+                if live[si] && !frozen {
+                    let full = (tokens[si].min(3 * PAGE_TOKENS) / PAGE_TOKENS) * PAGE_TOKENS;
+                    if full > 0 {
+                        cache.publish_prefix(seq, &group_prompt(seq, full));
+                    }
+                }
+            }
+            3 => {
+                if live[si] && !frozen {
+                    cache.release(seq);
+                    live[si] = false;
+                    tokens[si] = 0;
+                }
+            }
+            // async spill: one in flight at a time (the scheduler's gate),
+            // so a shared page is never marked for two flights at once
+            4 => {
+                if live[si] && !frozen && spilling.is_none() {
+                    snapshots.insert(seq, cache.raw_seq_bytes(seq));
+                    eng.begin_spill(&mut cache, seq, now, TRANSFER_S)
+                        .map_err(|e| format!("begin_spill: {e:?}"))?;
+                    spilling = Some(seq);
+                }
+            }
+            // poll: land every flight whose time has passed
+            5 => {
+                let (landed_sp, landed_pf) = eng.poll(&mut cache, now);
+                if let Some(sq) = spilling {
+                    if landed_sp.contains(&sq) {
+                        live[sq as usize] = false;
+                        spilling = None;
+                    }
+                }
+                for sq in landed_pf {
+                    prefetching.retain(|&x| x != sq);
+                    live[sq as usize] = true;
+                    // hot-tier roundtrip is bit-exact, cold pages included
+                    let snap = snapshots.remove(&sq).expect("snapshot at begin_spill");
+                    if cache.raw_seq_bytes(sq) != snap {
+                        return Err(format!("seq {sq}: tiered roundtrip changed bytes"));
+                    }
+                    if cache.tokens_of(sq) != tokens[sq as usize] {
+                        return Err(format!("seq {sq}: tokens lost in the tier roundtrip"));
+                    }
+                }
+            }
+            // async prefetch (engine keeps the host copy if there's no room)
+            6 => {
+                if eng.is_on_host(seq) {
+                    match eng.begin_prefetch(&mut cache, seq, now, TRANSFER_S) {
+                        Ok(_) => prefetching.push(seq),
+                        // no room: the host copy (and its snapshot) must
+                        // survive for a later retry
+                        Err(_) => {
+                            if !eng.is_on_host(seq) {
+                                return Err(format!("seq {seq}: failed prefetch lost host copy"));
+                            }
+                        }
+                    }
+                }
+            }
+            // cold compression: rel-l2 inside the rank bound for this
+            // sequence, and NO other sequence's bytes move (a shared page is
+            // never re-encoded under a live alias)
+            7 => {
+                if live[si] && !frozen && tokens[si] > 0 {
+                    let rank = arg as usize % 7 + 1; // 1..=7 < d_c = 8
+                    let cold_after = (arg as usize % 3) * PAGE_TOKENS;
+                    let before = full_domain(&cache, seq, tokens[si]);
+                    let others: Vec<(u64, Vec<u8>)> = (0..NSEQ as u64)
+                        .filter(|&o| o != seq && live[o as usize] && spilling != Some(o))
+                        .map(|o| (o, cache.raw_seq_bytes(o)))
+                        .collect();
+                    let done = cache
+                        .compress_cold(seq, cold_after, rank)
+                        .map_err(|e| format!("compress: {e:?}"))?;
+                    if done > 0 {
+                        let after = full_domain(&cache, seq, tokens[si]);
+                        let (mut num, mut den) = (0.0f64, 0.0f64);
+                        for (h, r) in before.iter().zip(&after) {
+                            num += ((h - r) as f64).powi(2);
+                            den += (*h as f64).powi(2);
+                        }
+                        let rel = (num / den.max(1e-30)).sqrt();
+                        if rel >= rel_l2_bound(rank, 8) {
+                            return Err(format!(
+                                "rank {rank}: rel l2 {rel} >= {}",
+                                rel_l2_bound(rank, 8)
+                            ));
+                        }
+                    }
+                    for (o, bytes) in others {
+                        if cache.raw_seq_bytes(o) != bytes {
+                            return Err(format!("compressing {seq} moved seq {o}'s bytes"));
+                        }
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        cache.validate().map_err(|e| format!("after op ({kind},{s},{arg}): {e}"))?;
+        if cache.free_pages() + cache.used_pages() != CAPACITY {
+            return Err("free/used do not partition the pool".into());
+        }
+        let _ = cache.evictable_pages(); // debug builds cross-check the sweep
+    }
+
+    // drain: chase every outstanding landing (queued same-direction
+    // transfers serialize, so landings can sit past any fixed horizon);
+    // host-parked snapshots are simply dropped (abandoned requests)
+    while let Some(t) = eng.next_landing() {
+        now = now.max(t);
+        let (landed_sp, landed_pf) = eng.poll(&mut cache, now);
+        for sq in landed_sp {
+            live[sq as usize] = false;
+        }
+        for sq in landed_pf {
+            live[sq as usize] = true;
+        }
+    }
+    for s in 0..NSEQ {
+        if live[s] {
+            cache.release(s as u64);
+        }
+    }
+    cache.drop_prefix_cache();
+    cache.validate().map_err(|e| format!("final: {e}"))?;
+    Ok(cache)
+}
+
+#[test]
+fn prop_tiered_lifecycle_never_leaks_and_roundtrips_exactly() {
+    check(0xA11C_0004, 100, &TieredOpsGen { max_ops: 32 }, |ops| {
+        let cache = run_tiered_ops(ops)?;
+        if cache.used_pages() != 0 {
+            return Err(format!("leak: {} pages live after full cleanup", cache.used_pages()));
+        }
+        if cache.free_pages() != CAPACITY {
+            return Err("free list incomplete after cleanup".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tiered_lifecycle_with_heavy_sharing() {
+    // seed each group with a writer + publisher so later registrations
+    // adopt shared pages — compression and spills must respect the aliases
+    check(0xA11C_0005, 60, &TieredOpsGen { max_ops: 24 }, |ops| {
+        let mut seeded = vec![(0u8, 0u8, 69u8), (2, 0, 0), (0, 1, 69), (2, 1, 0)];
+        seeded.extend(ops.0.iter().copied());
+        let cache = run_tiered_ops(&TieredOps(seeded))?;
+        if cache.used_pages() != 0 || cache.retained_pages() != 0 {
+            return Err(format!(
+                "references survived cleanup: {} pages, {} retained",
+                cache.used_pages(),
+                cache.retained_pages()
+            ));
+        }
+        Ok(())
+    });
+}

@@ -17,7 +17,7 @@
 //! ports (with its own page size — the ported scheduler is page-agnostic,
 //! while this harness pins `kvcache::PAGE_TOKENS`).
 
-use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig};
+use snapmla::coordinator::scheduler::{SchedPolicy, SchedulerConfig, SpecConfig, TieredConfig};
 use snapmla::kvcache::PAGE_TOKENS;
 use snapmla::simulate::{
     AutoscaleConfig, ElasticConfig, Scenario, SimResult, SimRoute, SimTiming,
@@ -82,6 +82,7 @@ fn random_sched_cfg(rng: &mut Rng) -> SchedulerConfig {
         max_running: 6 + gen_range(rng, 0, 6) as usize,
         disagg_prefill: false,
         spec: SpecConfig::disabled(),
+        tiered: TieredConfig::disabled(),
         policy: SchedPolicy::MixedChunked,
     }
 }
